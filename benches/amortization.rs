@@ -1,0 +1,140 @@
+//! §2.2 amortisation — the paper's cost argument quantified.
+//!
+//! "Our target is 2x–100x speedups to SpMV with CRS… Hence, the iteration
+//! time based on the AT algorithm is approximately 2–100 times. This range
+//! is achievable for many iterative solvers."
+//!
+//! Part A (models): for every Table-1 matrix × machine, compute the
+//! break-even iteration count `TT / (1 − 1/SP)` from the modelled ratios
+//! and check it lands in a solver-achievable range on the machine where
+//! the AT says "transform".
+//!
+//! Part B (measured): on the host, run an actual `Durmv` handle and find
+//! the empirical crossover — the iteration count where the AUTO path's
+//! cumulative time (transformation included) drops below the plain-CRS
+//! path.
+
+#[path = "common.rs"]
+mod common;
+
+use spmv_at::autotune::atlib::{switches, Durmv};
+use spmv_at::autotune::online::TuningData;
+use spmv_at::autotune::{MemoryPolicy, Ratios};
+use spmv_at::machine::scalar::ScalarMachine;
+use spmv_at::machine::vector::VectorMachine;
+use spmv_at::machine::{Backend, SimulatedBackend};
+use spmv_at::metrics::{Json, Table};
+use spmv_at::spmv::Implementation;
+
+fn main() {
+    common::banner("amortization", "break-even iteration counts (§2.2)");
+    let suite = common::suite();
+    let mut json = Vec::new();
+
+    // ---- Part A: modelled break-even per machine ----
+    for (mname, backend) in [
+        ("ES2", Box::new(SimulatedBackend::new(VectorMachine::default())) as Box<dyn Backend>),
+        ("SR16000", Box::new(SimulatedBackend::new(ScalarMachine::default()))),
+    ] {
+        println!("\n--- {mname}: modelled break-even (ELL-Row outer, 1 thread) ---");
+        let mut t = Table::new(vec!["matrix", "D_mat", "SP", "TT", "R", "break-even iters"]);
+        let mut in_range = 0usize;
+        let mut transformable = 0usize;
+        for (spec, a) in &suite {
+            if spec.no == 3 {
+                continue; // torso1: ELL excluded
+            }
+            let t_crs = backend.spmv_seconds(a, Implementation::CsrSeq, 1).unwrap();
+            let t_imp = backend
+                .spmv_seconds(a, Implementation::EllRowOuter, 1)
+                .unwrap();
+            let t_tr = backend
+                .transform_seconds(a, Implementation::EllRowOuter)
+                .unwrap();
+            let r = Ratios::from_times(t_crs, t_imp, t_tr);
+            let be = r.break_even_iterations();
+            if r.r >= 1.0 {
+                transformable += 1;
+                // The paper's "2-100 iterations" achievability claim.
+                if be <= 150.0 {
+                    in_range += 1;
+                }
+            }
+            if spec.no % 3 == 0 || spec.no == 2 || spec.no == 6 {
+                t.row(vec![
+                    spec.name.to_string(),
+                    format!("{:.2}", spec.d_mat),
+                    format!("{:.1}", r.sp),
+                    format!("{:.2}", r.tt),
+                    format!("{:.2}", r.r),
+                    if be.is_finite() { format!("{be:.1}") } else { "never".into() },
+                ]);
+            }
+            json.push(Json::Obj(vec![
+                ("machine".into(), Json::Str(mname.into())),
+                ("matrix".into(), Json::Str(spec.name.into())),
+                ("sp".into(), Json::Num(r.sp)),
+                ("tt".into(), Json::Num(r.tt)),
+                ("break_even".into(), Json::Num(be)),
+            ]));
+        }
+        print!("{}", t.render());
+        println!(
+            "matrices with R >= 1 whose break-even <= 150 iterations: {in_range}/{transformable} \
+             (paper: 'approximately 2-100 times … achievable for many iterative solvers')"
+        );
+    }
+
+    // ---- Part B: measured crossover on the host ----
+    println!("\n--- host: measured crossover (AUTO vs CRS cumulative time) ---");
+    let tuning = TuningData {
+        backend: "sim:ES2".into(),
+        imp: Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let mut t = Table::new(vec!["matrix", "D_mat", "crossover iters", "t_trans (ms)"]);
+    for (spec, a) in suite.iter().filter(|(s, _)| [2u32, 12, 14].contains(&s.no)) {
+        use spmv_at::formats::SparseMatrix as _;
+        let n = a.n_rows();
+        let x = vec![1.0; a.n_cols()];
+        let mut y = vec![0.0; n];
+        // CRS-only handle.
+        let mut crs = Durmv::new(a.clone(), tuning.clone(), MemoryPolicy::unlimited(), 1);
+        // AUTO handle (will transform on first call).
+        let mut auto = Durmv::new(a.clone(), tuning.clone(), MemoryPolicy::unlimited(), 1);
+        let mut t_crs_total = 0.0f64;
+        let mut t_auto_total = 0.0f64;
+        let mut crossover: Option<usize> = None;
+        for iter in 1..=400usize {
+            let t0 = std::time::Instant::now();
+            crs.durmv(switches::CRS, &x, &mut y).unwrap();
+            t_crs_total += t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            auto.durmv(switches::AUTO, &x, &mut y).unwrap();
+            t_auto_total += t0.elapsed().as_secs_f64();
+            if crossover.is_none() && t_auto_total < t_crs_total {
+                crossover = Some(iter);
+            }
+        }
+        t.row(vec![
+            spec.name.to_string(),
+            format!("{:.2}", spec.d_mat),
+            crossover.map_or(">400".to_string(), |c| c.to_string()),
+            format!("{:.3}", auto.transform_seconds * 1e3),
+        ]);
+        json.push(Json::Obj(vec![
+            ("machine".into(), Json::Str("host".into())),
+            ("matrix".into(), Json::Str(spec.name.into())),
+            (
+                "crossover".into(),
+                crossover.map_or(Json::Null, |c| Json::Num(c as f64)),
+            ),
+            ("t_trans".into(), Json::Num(auto.transform_seconds)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!("(AUTO includes the one-off transformation; crossover = amortisation point)");
+    common::write_json("amortization", Json::Arr(json));
+}

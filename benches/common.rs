@@ -1,0 +1,59 @@
+//! Shared helpers for the bench binaries (the environment has no
+//! criterion; each bench is a `harness = false` main that prints the
+//! paper's table/figure and dumps machine-readable JSON under
+//! `target/bench-results/`).
+
+use spmv_at::formats::Csr;
+use spmv_at::matrixgen::{generate, table1_specs, MatrixSpec};
+use spmv_at::metrics::Json;
+
+/// Suite scale factor: `SPMV_AT_SCALE` env var, default 0.2 (preserves
+/// μ/σ/D_mat; see matrixgen::suite docs).
+#[allow(dead_code)]
+pub fn scale() -> f64 {
+    std::env::var("SPMV_AT_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2)
+}
+
+/// Deterministic suite seed (`SPMV_AT_SEED`, default 42).
+#[allow(dead_code)]
+pub fn seed() -> u64 {
+    std::env::var("SPMV_AT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42)
+}
+
+/// Generate the full Table-1 suite at the configured scale.
+#[allow(dead_code)]
+pub fn suite() -> Vec<(MatrixSpec, Csr)> {
+    let (sc, sd) = (scale(), seed());
+    table1_specs()
+        .into_iter()
+        .map(|spec| {
+            let a = generate(&spec, sd, sc);
+            (spec, a)
+        })
+        .collect()
+}
+
+/// Write a bench's JSON payload to `target/bench-results/<name>.json`.
+#[allow(dead_code)]
+pub fn write_json(name: &str, payload: Json) {
+    let dir = std::path::Path::new("target/bench-results");
+    std::fs::create_dir_all(dir).expect("create bench-results dir");
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, payload.render()).expect("write bench json");
+    println!("\n[json -> {}]", path.display());
+}
+
+/// Standard bench banner.
+#[allow(dead_code)]
+pub fn banner(id: &str, what: &str) {
+    println!("================================================================");
+    println!("{id}: {what}");
+    println!("scale={} seed={}", scale(), seed());
+    println!("================================================================");
+}

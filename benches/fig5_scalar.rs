@@ -1,0 +1,90 @@
+//! Fig. 5 — `SP_crs/ell` on the HITACHI SR16000/VL1 stand-in, 1–128
+//! threads, all four candidate implementations over the 22-matrix suite.
+//!
+//! Expected shapes (paper §4.3): speedup mainly at 1 thread; ELL beats COO
+//! at low thread counts (memplus excepted); no ELL advantage left at
+//! 64–128 threads. Headline: ≤ 2.45× (chem_master1, ELL-Row inner, 1t).
+
+#[path = "common.rs"]
+mod common;
+
+use spmv_at::machine::scalar::ScalarMachine;
+use spmv_at::machine::{Backend, SimulatedBackend};
+use spmv_at::metrics::{Json, Table};
+use spmv_at::spmv::Implementation;
+
+const THREADS: [usize; 5] = [1, 4, 16, 64, 128];
+
+fn main() {
+    common::banner("Fig. 5", "SP_crs/imp on the SR16000/VL1 scalar model");
+    let backend = SimulatedBackend::new(ScalarMachine::default());
+    let suite = common::suite();
+    let mut json_rows = Vec::new();
+    let mut best_overall: (f64, String, Implementation, usize) =
+        (0.0, String::new(), Implementation::CsrSeq, 1);
+
+    for &threads in &THREADS {
+        println!("\n--- {threads} thread(s) ---");
+        let mut t = Table::new(vec![
+            "no", "matrix", "D_mat", "COO-Col", "COO-Row", "ELL-Inner", "ELL-Outer", "best",
+        ]);
+        for (spec, a) in &suite {
+            let t_crs = backend
+                .spmv_seconds(a, Implementation::CsrRowPar, threads)
+                .unwrap();
+            let mut cells = vec![
+                spec.no.to_string(),
+                spec.name.to_string(),
+                format!("{:.2}", spec.d_mat),
+            ];
+            let mut best = (0.0f64, "CRS");
+            for imp in Implementation::AT_CANDIDATES {
+                let sp = t_crs / backend.spmv_seconds(a, imp, threads).unwrap();
+                cells.push(format!("{sp:.2}"));
+                if sp > best.0 {
+                    best = (sp, imp.name());
+                }
+                if sp > best_overall.0 {
+                    best_overall = (sp, spec.name.to_string(), imp, threads);
+                }
+                json_rows.push(Json::Obj(vec![
+                    ("matrix".into(), Json::Str(spec.name.into())),
+                    ("threads".into(), Json::Num(threads as f64)),
+                    ("imp".into(), Json::Str(imp.name().into())),
+                    ("sp".into(), Json::Num(sp)),
+                ]));
+            }
+            cells.push(if best.0 >= 1.0 { best.1.to_string() } else { "CRS".into() });
+            t.row(cells);
+        }
+        print!("{}", t.render());
+    }
+
+    println!(
+        "\nheadline: max SP = {:.2}x ({}, {}, {} thread(s)) — paper: 2.45x \
+         (chem_master1, ELL-Row inner, 1 thread)",
+        best_overall.0,
+        best_overall.1,
+        best_overall.2,
+        best_overall.3
+    );
+    // Paper conclusion 3: no ELL advantage at 64/128 threads.
+    let mut hi_thread_wins = 0;
+    for (spec, a) in &suite {
+        for &threads in &[64usize, 128] {
+            let t_crs = backend
+                .spmv_seconds(a, Implementation::CsrRowPar, threads)
+                .unwrap();
+            for imp in [Implementation::EllRowInner, Implementation::EllRowOuter] {
+                if t_crs / backend.spmv_seconds(a, imp, threads).unwrap() > 1.4 {
+                    hi_thread_wins += 1;
+                    println!("  note: {} still wins with {imp} at {threads}t", spec.name);
+                }
+            }
+        }
+    }
+    println!(
+        "ELL wins >1.4x at 64/128 threads: {hi_thread_wins} cases — paper: none"
+    );
+    common::write_json("fig5_scalar", Json::Arr(json_rows));
+}

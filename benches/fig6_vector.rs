@@ -1,0 +1,115 @@
+//! Fig. 6 — `SP_crs/ell` on the Earth Simulator 2 stand-in, 1–8 threads.
+//!
+//! Expected shapes (paper §4.3): >100× speedups with ELL everywhere except
+//! memplus (no. 6), where COO-Row wins at ~2.75×; ELL-Row outer becomes
+//! the best as threads grow; headline 151× (chem_master1, ELL-Row inner).
+//! torso1 (no. 3) is excluded from ELL — memory overflow — exactly as the
+//! paper removed it.
+
+#[path = "common.rs"]
+mod common;
+
+use spmv_at::autotune::MemoryPolicy;
+use spmv_at::formats::FormatKind;
+use spmv_at::machine::vector::VectorMachine;
+use spmv_at::machine::{Backend, MatrixShape, SimulatedBackend};
+use spmv_at::metrics::{Json, Table};
+use spmv_at::spmv::Implementation;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+/// ELL memory budget: 2 GiB at full scale, shrunk with the suite scale so
+/// torso1's padded ELL is excluded at every scale — the paper's §4.2
+/// "overflow memory space" case.
+fn ell_budget() -> usize {
+    ((2u64 << 30) as f64 * common::scale()) as usize
+}
+
+fn main() {
+    common::banner("Fig. 6", "SP_crs/imp on the Earth Simulator 2 vector model");
+    let backend = SimulatedBackend::new(VectorMachine::default());
+    let suite = common::suite();
+    let mut json_rows = Vec::new();
+    let mut best_overall: (f64, String, Implementation, usize) =
+        (0.0, String::new(), Implementation::CsrSeq, 1);
+    let policy = MemoryPolicy::with_budget(ell_budget());
+
+    for &threads in &THREADS {
+        println!("\n--- {threads} thread(s) ---");
+        let mut t = Table::new(vec![
+            "no", "matrix", "D_mat", "COO-Col", "COO-Row", "ELL-Inner", "ELL-Outer", "best",
+        ]);
+        for (spec, a) in &suite {
+            let shape = MatrixShape::of(a);
+            let ell_ok = policy.admits(&shape, FormatKind::Ell);
+            let t_crs = backend
+                .spmv_seconds(a, Implementation::CsrRowPar, threads)
+                .unwrap();
+            let mut cells = vec![
+                spec.no.to_string(),
+                spec.name.to_string(),
+                format!("{:.2}", spec.d_mat),
+            ];
+            let mut best = (0.0f64, "CRS");
+            for imp in Implementation::AT_CANDIDATES {
+                let is_ell = imp.required_format() == FormatKind::Ell;
+                if is_ell && !ell_ok {
+                    cells.push("excl".to_string());
+                    continue;
+                }
+                let sp = t_crs / backend.spmv_seconds(a, imp, threads).unwrap();
+                cells.push(format!("{sp:.1}"));
+                if sp > best.0 {
+                    best = (sp, imp.name());
+                }
+                if sp > best_overall.0 {
+                    best_overall = (sp, spec.name.to_string(), imp, threads);
+                }
+                json_rows.push(Json::Obj(vec![
+                    ("matrix".into(), Json::Str(spec.name.into())),
+                    ("threads".into(), Json::Num(threads as f64)),
+                    ("imp".into(), Json::Str(imp.name().into())),
+                    ("sp".into(), Json::Num(sp)),
+                ]));
+            }
+            cells.push(best.1.to_string());
+            t.row(cells);
+        }
+        print!("{}", t.render());
+    }
+
+    println!(
+        "\nheadline: max SP = {:.1}x ({}, {}, {} thread(s)) — paper: 151x \
+         (chem_master1, ELL-Row inner)",
+        best_overall.0, best_overall.1, best_overall.2, best_overall.3
+    );
+    // Paper conclusion 1: >100x for ELL except memplus, where COO-Row wins.
+    let mut over_100 = 0;
+    let mut memplus_best = String::new();
+    for (spec, a) in &suite {
+        let shape = MatrixShape::of(a);
+        if !policy.admits(&shape, FormatKind::Ell) {
+            continue;
+        }
+        let t_crs = backend.spmv_seconds(a, Implementation::CsrSeq, 1).unwrap();
+        let sp_ell = t_crs
+            / backend
+                .spmv_seconds(a, Implementation::EllRowInner, 1)
+                .unwrap();
+        if sp_ell > 100.0 {
+            over_100 += 1;
+        }
+        if spec.no == 6 {
+            let sp_coo = t_crs
+                / backend
+                    .spmv_seconds(a, Implementation::CooRowOuter, 1)
+                    .unwrap();
+            memplus_best = format!(
+                "memplus: ELL {sp_ell:.2}x vs COO-Row {sp_coo:.2}x -> best = {}",
+                if sp_coo > sp_ell { "COO-Row (paper: COO-Row, 2.75x)" } else { "ELL (paper disagrees!)" }
+            );
+        }
+    }
+    println!(">100x ELL wins at 1 thread: {over_100} matrices (paper: all but memplus/torso1)");
+    println!("{memplus_best}");
+    common::write_json("fig6_vector", Json::Arr(json_rows));
+}

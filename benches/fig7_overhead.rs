@@ -1,0 +1,72 @@
+//! Fig. 7 — `TT_ell`: the CRS→ELL transformation overhead in units of one
+//! CRS SpMV, one thread, on both machine stand-ins (plus the host, where
+//! the transformation is actually executed rather than modelled).
+//!
+//! Expected shapes (paper §4.4): on the SR16000, some matrices cost
+//! 20×–50× (memplus, sme3Da–c); on the ES2, everything is 0.01×–0.51×.
+
+#[path = "common.rs"]
+mod common;
+
+use spmv_at::machine::scalar::ScalarMachine;
+use spmv_at::machine::vector::VectorMachine;
+use spmv_at::machine::{Backend, MeasuredBackend, SimulatedBackend};
+use spmv_at::metrics::{Json, Table};
+use spmv_at::spmv::Implementation;
+
+fn main() {
+    common::banner("Fig. 7", "TT_ell = t_trans/t_crs at 1 thread");
+    let sr = SimulatedBackend::new(ScalarMachine::default());
+    let es2 = SimulatedBackend::new(VectorMachine::default());
+    let host = MeasuredBackend::new(0, 3);
+    let suite = common::suite();
+    let imp = Implementation::EllRowOuter;
+
+    let mut t = Table::new(vec!["no", "matrix", "D_mat", "TT(SR16000)", "TT(ES2)", "TT(host)"]);
+    let mut json_rows = Vec::new();
+    let mut sr_max: (f64, String) = (0.0, String::new());
+    let mut es2_max: f64 = 0.0;
+    for (spec, a) in &suite {
+        if spec.no == 3 {
+            // torso1: ELL excluded for memory overflow, as in the paper.
+            continue;
+        }
+        let tt = |b: &dyn Backend| -> f64 {
+            let t_crs = b.spmv_seconds(a, Implementation::CsrSeq, 1).unwrap();
+            let t_tr = b.transform_seconds(a, imp).unwrap();
+            t_tr / t_crs
+        };
+        let tt_sr = tt(&sr);
+        let tt_es2 = tt(&es2);
+        // Host: skip the transform measurement for the very large matrices
+        // to keep the bench fast; the simulated columns carry the figure.
+        let tt_host = if a.nnz() < 3_000_000 { tt(&host) } else { f64::NAN };
+        if tt_sr > sr_max.0 {
+            sr_max = (tt_sr, spec.name.to_string());
+        }
+        es2_max = es2_max.max(tt_es2);
+        t.row(vec![
+            spec.no.to_string(),
+            spec.name.to_string(),
+            format!("{:.2}", spec.d_mat),
+            format!("{tt_sr:.2}"),
+            format!("{tt_es2:.3}"),
+            if tt_host.is_nan() { "-".into() } else { format!("{tt_host:.2}") },
+        ]);
+        json_rows.push(Json::Obj(vec![
+            ("matrix".into(), Json::Str(spec.name.into())),
+            ("tt_sr16000".into(), Json::Num(tt_sr)),
+            ("tt_es2".into(), Json::Num(tt_es2)),
+            ("tt_host".into(), Json::Num(tt_host)),
+        ]));
+    }
+    print!("{}", t.render());
+    println!(
+        "\nSR16000 max TT = {:.1}x on {} (paper: 20x-50x for memplus & sme3D*)",
+        sr_max.0, sr_max.1
+    );
+    println!("ES2 max TT = {es2_max:.3}x (paper: 0.01x-0.51x)");
+    common::write_json("fig7_overhead", Json::Arr(json_rows));
+}
+
+use spmv_at::formats::SparseMatrix as _;

@@ -1,0 +1,70 @@
+//! Fig. 8 — the `D_mat`–`R_ell` graph (ELL-Row outer, 1 thread) on both
+//! machine stand-ins, with `D*` extraction and the §4.5 power-law model.
+//!
+//! Expected shapes (paper §4.4): on the ES2 every matrix from D=0.02 to
+//! D=3.10 clears `R ≥ 1` (D* ≈ 3.10); on the SR16000 only matrices with
+//! `D ≲ 0.1` do (D* ≈ 0.1).
+
+#[path = "common.rs"]
+mod common;
+
+use spmv_at::autotune::{run_offline, OfflineConfig};
+use spmv_at::formats::Csr;
+use spmv_at::machine::scalar::ScalarMachine;
+use spmv_at::machine::vector::VectorMachine;
+use spmv_at::machine::{Backend, SimulatedBackend};
+use spmv_at::metrics::Json;
+
+fn run(name: &str, backend: &dyn Backend, suite: &[(String, Csr)]) -> Json {
+    let cfg = OfflineConfig::default(); // ELL-Row outer, 1 thread, c = 1.0
+    let result = run_offline(backend, suite, &cfg).expect("offline phase");
+    println!("\n=== {name} ===");
+    print!("{}", result.graph.render(cfg.c));
+    println!(
+        "conservative D* = {:?}",
+        result.graph.d_star_conservative(cfg.c)
+    );
+    if let Some(fit) = result.graph.fit_power_law() {
+        println!(
+            "model: R ~= {:.3} * D^{:.3} (R2 = {:.3}); model threshold at c={} -> D = {:.3}",
+            fit.a,
+            fit.b,
+            fit.r2,
+            cfg.c,
+            fit.threshold(cfg.c)
+        );
+    }
+    let excluded: Vec<&str> = result
+        .samples
+        .iter()
+        .filter(|s| s.ratios.is_none())
+        .map(|s| s.name.as_str())
+        .collect();
+    if !excluded.is_empty() {
+        println!("excluded (transformation failed): {excluded:?}");
+    }
+    result.to_json()
+}
+
+fn main() {
+    common::banner("Fig. 8", "the D_mat–R_ell graph, ELL-Row outer, 1 thread");
+    // torso1 (no. 3) is excluded: its ELL data was removed by the paper
+    // for memory overflow (§4.2) and the memory policy rejects it here.
+    let suite: Vec<(String, Csr)> = common::suite()
+        .into_iter()
+        .filter(|(s, _)| s.no != 3)
+        .map(|(s, a)| (s.name.to_string(), a))
+        .collect();
+    println!("(torso1 excluded from the ELL characterisation — §4.2 memory overflow)");
+    let es2 = SimulatedBackend::new(VectorMachine::default());
+    let sr = SimulatedBackend::new(ScalarMachine::default());
+    let j_es2 = run("ES2 (vector model)", &es2, &suite);
+    let j_sr = run("SR16000 (scalar model)", &sr, &suite);
+    println!(
+        "\npaper shapes: ES2 accepts D in [0.02, 3.10]; SR16000 accepts only D < ~0.1."
+    );
+    common::write_json(
+        "fig8_dr_graph",
+        Json::Obj(vec![("es2".into(), j_es2), ("sr16000".into(), j_sr)]),
+    );
+}

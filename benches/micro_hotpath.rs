@@ -1,0 +1,126 @@
+//! Hot-path microbenchmarks on the host CPU: real wall-clock for the
+//! transformations (§2.1) and every SpMV kernel (§3), per matrix class.
+//! This is the measurement substrate for the performance pass
+//! (EXPERIMENTS.md §Perf): run before/after every optimisation.
+//!
+//! Env knobs: SPMV_AT_SCALE (default 0.05 here — host wallclock, keep it
+//! quick), SPMV_AT_REPS (default 7).
+
+#[path = "common.rs"]
+mod common;
+
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::matrixgen::{generate, spec_by_name};
+use spmv_at::metrics::{time_median, Json, Table};
+use spmv_at::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use spmv_at::transform;
+
+fn reps() -> usize {
+    std::env::var("SPMV_AT_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}
+
+fn scale() -> f64 {
+    std::env::var("SPMV_AT_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05)
+}
+
+/// Representative matrices: near-band (best ELL case), moderate, heavy
+/// tail (worst ELL case), big-μ structural.
+const PICKS: [&str; 4] = ["chem_master1", "xenon1", "memplus", "sme3Da"];
+
+fn bench_transforms(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
+    let r = reps();
+    let t_coo_row = time_median(1, r, || {
+        std::hint::black_box(transform::crs_to_coo_row(a));
+    });
+    let t_ccs = time_median(1, r, || {
+        std::hint::black_box(transform::crs_to_ccs(a));
+    });
+    let t_coo_col = time_median(1, r, || {
+        std::hint::black_box(transform::crs_to_coo_col(a));
+    });
+    let t_ell = time_median(1, r, || {
+        std::hint::black_box(transform::crs_to_ell(a).ok());
+    });
+    let t_bcsr = time_median(1, r, || {
+        std::hint::black_box(transform::crs_to_bcsr(a, 2, 2).ok());
+    });
+    json.push(Json::Obj(vec![
+        ("matrix".into(), Json::Str(name.into())),
+        ("kind".into(), Json::Str("transform".into())),
+        ("coo_row".into(), Json::Num(t_coo_row)),
+        ("ccs".into(), Json::Num(t_ccs)),
+        ("coo_col".into(), Json::Num(t_coo_col)),
+        ("ell".into(), Json::Num(t_ell)),
+        ("bcsr".into(), Json::Num(t_bcsr)),
+    ]));
+    vec![
+        format!("{:.3}", t_coo_row * 1e3),
+        format!("{:.3}", t_ccs * 1e3),
+        format!("{:.3}", t_coo_col * 1e3),
+        format!("{:.3}", t_ell * 1e3),
+        format!("{:.3}", t_bcsr * 1e3),
+    ]
+}
+
+fn bench_kernels(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
+    let r = reps();
+    let x: Vec<f64> = (0..a.n_cols()).map(|i| 1.0 + (i % 9) as f64 * 0.1).collect();
+    let mut y = vec![0.0; a.n_rows()];
+    let mut ws = Workspace::new();
+    let mut cells = Vec::new();
+    let gflops = |t: f64| 2.0 * a.nnz() as f64 / t / 1e9;
+    for imp in Implementation::ALL {
+        let m = match AnyMatrix::prepare(a, imp, None) {
+            Ok(m) => m,
+            Err(_) => {
+                cells.push("-".to_string());
+                continue;
+            }
+        };
+        kernels::run(imp, &m, &x, &mut y, 1, &mut ws).unwrap();
+        let t = time_median(1, r, || {
+            kernels::run(imp, &m, &x, &mut y, 1, &mut ws).unwrap();
+        });
+        std::hint::black_box(&y);
+        cells.push(format!("{:.3}/{:.2}", t * 1e3, gflops(t)));
+        json.push(Json::Obj(vec![
+            ("matrix".into(), Json::Str(name.into())),
+            ("kind".into(), Json::Str("spmv".into())),
+            ("imp".into(), Json::Str(imp.name().into())),
+            ("seconds".into(), Json::Num(t)),
+            ("gflops".into(), Json::Num(gflops(t))),
+        ]));
+    }
+    cells
+}
+
+fn main() {
+    common::banner("micro_hotpath", "host wallclock: transforms + SpMV kernels (1 thread)");
+    let mut json = Vec::new();
+
+    println!("\ntransformations (ms):");
+    let mut tt = Table::new(vec!["matrix", "n", "nnz", "COO-Row", "CCS", "COO-Col", "ELL", "BCSR"]);
+    for name in PICKS {
+        let spec = spec_by_name(name).unwrap();
+        let a = generate(&spec, common::seed(), scale());
+        let mut row = vec![name.to_string(), a.n_rows().to_string(), a.nnz().to_string()];
+        row.extend(bench_transforms(&a, name, &mut json));
+        tt.row(row);
+    }
+    print!("{}", tt.render());
+
+    println!("\nSpMV kernels (ms / GFLOP-s), 1 thread:");
+    let mut kt = Table::new(vec![
+        "matrix", "CRS", "CRS-Par", "COO-Col", "COO-Row", "ELL-In", "ELL-Out", "BCSR", "JDS",
+        "HYB",
+    ]);
+    for name in PICKS {
+        let spec = spec_by_name(name).unwrap();
+        let a = generate(&spec, common::seed(), scale());
+        let mut row = vec![name.to_string()];
+        row.extend(bench_kernels(&a, name, &mut json));
+        kt.row(row);
+    }
+    print!("{}", kt.render());
+    common::write_json("micro_hotpath", Json::Arr(json));
+}

@@ -1,0 +1,7 @@
+"""Pytest bootstrap: make the build-time `compile` package importable when
+pytest is invoked from the repository root (`pytest python/tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

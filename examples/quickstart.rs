@@ -1,0 +1,62 @@
+//! Quickstart: the smallest end-to-end use of the library.
+//!
+//! 1. Build a sparse matrix (CRS).
+//! 2. Install a tuning table (here: the simulated ES2 offline phase).
+//! 3. Ask the online AT which representation to serve from.
+//! 4. Run SpMV through the `OpenATI_DURMV`-style handle.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use spmv_at::autotune::atlib::{switches, Durmv};
+use spmv_at::autotune::{run_offline, MemoryPolicy, OfflineConfig};
+use spmv_at::formats::SparseMatrix;
+use spmv_at::machine::vector::VectorMachine;
+use spmv_at::machine::SimulatedBackend;
+use spmv_at::matrixgen::{banded_circulant, generate, table1_specs};
+use spmv_at::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- offline phase (once per machine install) ---
+    let backend = SimulatedBackend::new(VectorMachine::default());
+    let suite: Vec<_> = table1_specs()
+        .iter()
+        .map(|s| (s.name.to_string(), generate(s, 42, 0.02)))
+        .collect();
+    let offline = run_offline(&backend, &suite, &OfflineConfig::default())?;
+    println!(
+        "offline phase on {}: D* = {:?}",
+        offline.backend, offline.d_star
+    );
+    let tuning = offline.tuning_data();
+
+    // --- online phase (every library call) ---
+    let mut rng = Rng::new(7);
+    let a = banded_circulant(&mut rng, 4096, &[-2, -1, 0, 1, 2]);
+    println!(
+        "input matrix: {}x{}, nnz {}, D_mat {:.3}",
+        a.n_rows(),
+        a.n_cols(),
+        a.nnz(),
+        spmv_at::autotune::RowStats::of_csr(&a).d_mat()
+    );
+    let mut handle = Durmv::new(a, tuning, MemoryPolicy::unlimited(), 2);
+    println!("AUTO picks: {}", handle.auto_choice());
+
+    let x = vec![1.0; 4096];
+    let mut y = vec![0.0; 4096];
+    for i in 0..10 {
+        handle.durmv(switches::AUTO, &x, &mut y)?;
+        if i == 0 {
+            println!(
+                "first call transformed in {:.6}s; checksum {:.3}",
+                handle.transform_seconds,
+                y.iter().sum::<f64>()
+            );
+        }
+    }
+    println!(
+        "served {} SpMV calls (transformation paid once, amortised across calls)",
+        handle.calls
+    );
+    Ok(())
+}

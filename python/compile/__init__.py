@@ -1,0 +1,1 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT."""

@@ -1,0 +1,167 @@
+"""L1 — the Pallas ELL SpMV kernel (the paper's compute hot-spot).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's win on
+the SX-9 comes from turning SpMV into ``nz`` unit-stride vector sweeps of
+length ``n`` over the band-major ``VAL(1:n,1:nz)`` array. On TPU the same
+regularity maps onto the VPU/MXU through BlockSpec tiling instead of
+vector strip-mining:
+
+* the band-major slab ``values[nz, n]`` is tiled into ``(nz, BLOCK_ROWS)``
+  VMEM blocks — the HBM->VMEM schedule that threadblock/vector-pipeline
+  scheduling did on the paper's machines;
+* ``x`` stays fully VMEM-resident per block so the column gather is a
+  VMEM-local operation;
+* each grid step computes ``BLOCK_ROWS`` outputs with an 8x128-lane
+  FMA-reduce over the ``nz`` axis — no per-row control flow, exactly why
+  ELL beats CRS on wide-vector hardware;
+* ``D_mat`` keeps its meaning: zero-fill inflates the slab by
+  ``fill_ratio``, wasting VMEM bandwidth and lanes.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; the interpret path lowers to plain HLO, which is what
+``aot.py`` ships to the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows computed per grid step. 128 matches the TPU lane width and divides
+# every AOT bucket size.
+BLOCK_ROWS = 128
+
+
+def _ell_kernel(val_ref, col_ref, x_ref, y_ref):
+    """One grid step: y[block] = sum_k val[k, block] * x[col[k, block]]."""
+    vals = val_ref[...]  # (nz, BLOCK_ROWS) VMEM slab
+    cols = col_ref[...]  # (nz, BLOCK_ROWS)
+    x = x_ref[...]  # (n_cols,) VMEM-resident
+    # Gather + FMA-reduce across the band axis; no per-row loop.
+    y_ref[...] = jnp.sum(vals * x[cols], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def ell_spmv(values, col_idx, x, block_rows=BLOCK_ROWS):
+    """Band-major ELL SpMV as a Pallas kernel.
+
+    Args:
+      values: ``(nz, n)`` float64 band-major ELL values (padding = 0.0).
+      col_idx: ``(nz, n)`` int32 column indices (padding = 0).
+      x: ``(n_cols,)`` float64 input vector.
+      block_rows: rows per grid step; must divide ``n``.
+
+    Returns:
+      ``(n,)`` float64 ``y = A @ x``.
+    """
+    nz, n = values.shape
+    if n % block_rows != 0:
+        raise ValueError(f"n={n} not divisible by block_rows={block_rows}")
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nz, block_rows), lambda i: (0, i)),
+            pl.BlockSpec((nz, block_rows), lambda i: (0, i)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), values.dtype),
+        interpret=True,
+    )(values, col_idx, x)
+
+
+def vmem_bytes(nz, block_rows, n_cols, value_bytes=8, index_bytes=4):
+    """Estimated VMEM footprint of one grid step (DESIGN.md §Perf L1).
+
+    values block + col block + whole x + y block. The TPU budget is
+    ~16 MiB/core; callers use this to pick ``block_rows`` and to reason
+    about whether ``x`` residency fits (for huge n, x would need its own
+    tiling, turning the gather into a multi-pass exchange).
+    """
+    return (
+        nz * block_rows * value_bytes
+        + nz * block_rows * index_bytes
+        + n_cols * value_bytes
+        + block_rows * value_bytes
+    )
+
+
+def utilization_estimate(n, nz, nnz, block_rows=BLOCK_ROWS):
+    """Fraction of FMA lanes doing useful (non-padding) work.
+
+    Equal to ``1 / fill_ratio`` — D_mat's compute-waste interpretation on
+    TPU. Returned alongside the VMEM estimate in DESIGN.md §Perf because
+    interpret=True wallclock is *not* a TPU proxy; structure is what we
+    can optimise.
+    """
+    slots = n * nz
+    return (nnz / slots) if slots else 1.0
+
+
+# ---------------------------------------------------------------------------
+# X-tiled variant: the multi-pass HBM<->VMEM schedule for matrices whose x
+# vector does NOT fit in VMEM (n_cols * 8B > ~16 MiB, i.e. n >~ 2M rows).
+# The grid gains a leading x-tile axis; each (tile, row-block) step loads
+# one x tile, masks the gather to columns inside the tile, and accumulates
+# into the revisited y block. This trades `n_tiles` passes over the ELL
+# slab for bounded VMEM residency — the TPU analogue of strip-mining the
+# paper's vector loop when the gather footprint exceeds the register file.
+# ---------------------------------------------------------------------------
+
+
+def _ell_tiled_kernel(tile_cols, val_ref, col_ref, x_ref, y_ref):
+    """One (x-tile, row-block) step with masked gather and accumulation."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vals = val_ref[...]  # (nz, BLOCK_ROWS)
+    cols = col_ref[...]
+    x_tile = x_ref[...]  # (tile_cols,)
+    lo = t * tile_cols
+    in_tile = (cols >= lo) & (cols < lo + tile_cols)
+    local = jnp.where(in_tile, cols - lo, 0)
+    contrib = jnp.where(in_tile, vals * x_tile[local], 0.0)
+    y_ref[...] += jnp.sum(contrib, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "tile_cols"))
+def ell_spmv_tiled_x(values, col_idx, x, block_rows=BLOCK_ROWS, tile_cols=BLOCK_ROWS):
+    """Band-major ELL SpMV with `x` tiled through VMEM.
+
+    Args:
+      values: ``(nz, n)`` float64 band-major ELL values.
+      col_idx: ``(nz, n)`` int32 column indices.
+      x: ``(n_cols,)`` float64; ``n_cols`` must divide by ``tile_cols``.
+      block_rows: rows per grid step (must divide ``n``).
+      tile_cols: x-tile width per pass.
+
+    Returns:
+      ``(n,)`` float64 ``y = A @ x``.
+    """
+    nz, n = values.shape
+    (n_cols,) = x.shape
+    if n % block_rows != 0:
+        raise ValueError(f"n={n} not divisible by block_rows={block_rows}")
+    if n_cols % tile_cols != 0:
+        raise ValueError(f"n_cols={n_cols} not divisible by tile_cols={tile_cols}")
+    n_tiles = n_cols // tile_cols
+    grid = (n_tiles, n // block_rows)
+    return pl.pallas_call(
+        functools.partial(_ell_tiled_kernel, tile_cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nz, block_rows), lambda t, i: (0, i)),
+            pl.BlockSpec((nz, block_rows), lambda t, i: (0, i)),
+            pl.BlockSpec((tile_cols,), lambda t, i: (t,)),
+        ],
+        # y block revisited across the x-tile axis (accumulation).
+        out_specs=pl.BlockSpec((block_rows,), lambda t, i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), values.dtype),
+        interpret=True,
+    )(values, col_idx, x)

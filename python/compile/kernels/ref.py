@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the SpMV kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the HLO
+artifacts the rust runtime executes) are validated against in pytest.
+Layouts mirror the rust library exactly:
+
+* ELL is **band-major**: ``values[k, i]`` is band ``k`` of row ``i``
+  (the paper's ``VAL(1:n, 1:nz)`` Fortran column-major array, i.e.
+  ``J_PTR = N*(K-1) + I`` addressing). Padding slots carry value 0.0 and
+  column 0.
+* COO arrives as parallel ``(rows, cols, vals)`` arrays.
+"""
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(values, col_idx, x):
+    """Reference band-major ELL SpMV.
+
+    Args:
+      values: ``(nz, n)`` float array, band-major ELL values.
+      col_idx: ``(nz, n)`` int array, column index per slot.
+      x: ``(n_cols,)`` float input vector.
+
+    Returns:
+      ``(n,)`` output ``y = A @ x``.
+    """
+    gathered = x[col_idx]  # (nz, n)
+    return jnp.sum(values * gathered, axis=0)
+
+
+def coo_spmv_ref(rows, cols, vals, x, n_rows):
+    """Reference COO SpMV via segment-sum scatter-add.
+
+    Args:
+      rows: ``(nnz,)`` int row indices.
+      cols: ``(nnz,)`` int column indices.
+      vals: ``(nnz,)`` float values.
+      x: ``(n_cols,)`` float input vector.
+      n_rows: static output length.
+
+    Returns:
+      ``(n_rows,)`` output ``y = A @ x``.
+    """
+    contrib = vals * x[cols]
+    return jnp.zeros((n_rows,), dtype=vals.dtype).at[rows].add(contrib)
+
+
+def dense_from_ell(values, col_idx, n_cols):
+    """Materialise the dense matrix an ELL pair represents (test helper).
+
+    Padding slots carry value 0.0, so scatter-adding contributes nothing.
+    """
+    nz, n = values.shape
+    dense = jnp.zeros((n, n_cols), dtype=values.dtype)
+    for k in range(nz):
+        dense = dense.at[jnp.arange(n), col_idx[k]].add(values[k])
+    return dense

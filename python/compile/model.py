@@ -1,0 +1,76 @@
+"""L2 — the JAX compute graphs the AOT pipeline lowers.
+
+The paper's "model" is the SpMV operator itself plus the iterative-solver
+step built on it. Each function here is a pure jax function over one AOT
+shape bucket; ``aot.py`` lowers them to HLO text once at build time and
+the rust runtime executes them forever after.
+
+Everything returns a 1-tuple — the rust side unwraps with ``to_tuple1()``
+(see /opt/xla-example/load_hlo).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ell_spmv as ell_kernel
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def ell_spmv_model(values, col_idx, x):
+    """The bucketed ELL SpMV model: calls the L1 Pallas kernel so the
+    kernel lowers into the same HLO module."""
+    return (ell_kernel.ell_spmv(values, col_idx, x),)
+
+
+def ell_spmv_ref_model(values, col_idx, x):
+    """Pure-jnp variant of the same bucket (ablation artifact: lets the
+    rust side A/B the Pallas lowering against XLA's native gather fusion)."""
+    return (ref.ell_spmv_ref(values, col_idx, x),)
+
+
+def ell_power_iteration_model(values, col_idx, x, iters=8):
+    """A small end-to-end compute graph: ``iters`` normalised SpMV steps
+    (power iteration), demonstrating that a whole solver inner loop — not
+    just one SpMV — can ship as a single artifact. Uses ``lax.fori_loop``
+    so the unrolled size stays constant."""
+
+    def body(_, v):
+        w = ell_kernel.ell_spmv(values, col_idx, v)
+        norm = jnp.sqrt(jnp.sum(w * w)) + 1e-300
+        return w / norm
+
+    return (jax.lax.fori_loop(0, iters, body, x),)
+
+
+def bucket_args(rows, bandwidth, n_cols=None):
+    """ShapeDtypeStructs for one ``(rows, bandwidth)`` bucket."""
+    n_cols = n_cols or rows
+    return (
+        jax.ShapeDtypeStruct((bandwidth, rows), jnp.float64),
+        jax.ShapeDtypeStruct((bandwidth, rows), jnp.int32),
+        jax.ShapeDtypeStruct((n_cols,), jnp.float64),
+    )
+
+
+#: The shape buckets shipped as artifacts. Rows are powers of two so the
+#: Pallas BLOCK_ROWS=128 tiling divides evenly; bandwidths cover the
+#: Table-1 suite at bench scale (larger matrices fall back to the native
+#: rust kernels — the coordinator handles that routing).
+BUCKETS = [
+    (256, 4),
+    (256, 8),
+    (256, 16),
+    (1024, 4),
+    (1024, 8),
+    (1024, 16),
+    (1024, 32),
+    (4096, 8),
+    (4096, 16),
+    (4096, 32),
+    (4096, 64),
+    (16384, 8),
+    (16384, 16),
+    (16384, 32),
+]

@@ -1,0 +1,208 @@
+"""L1 kernel correctness: Pallas ELL SpMV vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and data (including degenerate bands, zero
+matrices, and duplicate column indices), asserting allclose at f64
+precision — the core correctness signal before anything is AOT-shipped
+to the rust runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ell_spmv as ek
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def random_ell(rng, n, nz, n_cols, density=0.7, dtype=np.float64):
+    """Random band-major ELL arrays with realistic padding."""
+    values = np.zeros((nz, n), dtype=dtype)
+    col_idx = np.zeros((nz, n), dtype=np.int32)
+    for i in range(n):
+        # Row population: 0..nz entries, padding after.
+        pop = rng.binomial(nz, density)
+        cols = rng.choice(n_cols, size=pop, replace=False) if pop else []
+        for k, c in enumerate(sorted(cols)):
+            values[k, i] = rng.standard_normal()
+            col_idx[k, i] = c
+    return values, col_idx
+
+
+def dense_spmv(values, col_idx, x):
+    """Dense-matrix oracle, fully independent of jnp gather semantics."""
+    nz, n = values.shape
+    y = np.zeros(n, dtype=values.dtype)
+    for i in range(n):
+        for k in range(nz):
+            y[i] += values[k, i] * x[col_idx[k, i]]
+    return y
+
+
+@pytest.mark.parametrize("n,nz", [(128, 1), (128, 4), (256, 7), (384, 16)])
+def test_pallas_matches_ref_fixed_shapes(n, nz):
+    rng = np.random.default_rng(n * 31 + nz)
+    values, col_idx = random_ell(rng, n, nz, n)
+    x = rng.standard_normal(n)
+    got = np.asarray(ek.ell_spmv(jnp.asarray(values), jnp.asarray(col_idx), jnp.asarray(x)))
+    want = np.asarray(ref.ell_spmv_ref(jnp.asarray(values), jnp.asarray(col_idx), jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(got, dense_spmv(values, col_idx, x), rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    nz=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    density=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_pallas_matches_dense_hypothesis(blocks, nz, seed, density):
+    n = blocks * ek.BLOCK_ROWS
+    rng = np.random.default_rng(seed)
+    values, col_idx = random_ell(rng, n, nz, n, density=density)
+    x = rng.standard_normal(n)
+    got = np.asarray(ek.ell_spmv(jnp.asarray(values), jnp.asarray(col_idx), jnp.asarray(x)))
+    np.testing.assert_allclose(got, dense_spmv(values, col_idx, x), rtol=1e-10, atol=1e-10)
+
+
+def test_zero_matrix_gives_zero():
+    n, nz = 128, 3
+    values = jnp.zeros((nz, n))
+    col_idx = jnp.zeros((nz, n), dtype=jnp.int32)
+    x = jnp.ones((n,))
+    y = ek.ell_spmv(values, col_idx, x)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(n))
+
+
+def test_identity_band():
+    n = 256
+    values = jnp.ones((1, n))
+    col_idx = jnp.arange(n, dtype=jnp.int32)[None, :]
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    y = ek.ell_spmv(values, col_idx, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-15)
+
+
+def test_duplicate_columns_sum():
+    # Two bands pointing at the same column must add (CSR duplicate-sum
+    # convention carried through the transform).
+    n = 128
+    values = jnp.full((2, n), 1.5)
+    col_idx = jnp.zeros((2, n), dtype=jnp.int32)
+    x = jnp.asarray(np.arange(n, dtype=np.float64) + 1.0)
+    y = ek.ell_spmv(values, col_idx, x)
+    np.testing.assert_allclose(np.asarray(y), np.full(n, 3.0 * 1.0), rtol=1e-15)
+
+
+def test_rejects_non_divisible_block():
+    values = jnp.zeros((2, 100))
+    col_idx = jnp.zeros((2, 100), dtype=jnp.int32)
+    x = jnp.zeros((100,))
+    with pytest.raises(ValueError, match="not divisible"):
+        ek.ell_spmv(values, col_idx, x)
+
+
+def test_float32_dtype_supported():
+    n, nz = 128, 4
+    rng = np.random.default_rng(7)
+    values, col_idx = random_ell(rng, n, nz, n, dtype=np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(
+        ek.ell_spmv(jnp.asarray(values), jnp.asarray(col_idx), jnp.asarray(x))
+    )
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(
+        got, dense_spmv(values.astype(np.float64), col_idx, x.astype(np.float64)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_coo_ref_matches_dense():
+    rng = np.random.default_rng(11)
+    n, nnz = 60, 300
+    rows = rng.integers(0, n, nnz)
+    cols = rng.integers(0, n, nnz)
+    vals = rng.standard_normal(nnz)
+    x = rng.standard_normal(n)
+    got = np.asarray(
+        ref.coo_spmv_ref(
+            jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals), jnp.asarray(x), n
+        )
+    )
+    want = np.zeros(n)
+    for r, c, v in zip(rows, cols, vals):
+        want[r] += v * x[c]
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_vmem_estimate_monotone():
+    base = ek.vmem_bytes(8, 128, 1024)
+    assert ek.vmem_bytes(16, 128, 1024) > base
+    assert ek.vmem_bytes(8, 256, 1024) > base
+    # Utilization = 1/fill.
+    assert ek.utilization_estimate(100, 10, 500) == pytest.approx(0.5)
+    assert ek.utilization_estimate(100, 10, 1000) == pytest.approx(1.0)
+
+
+# ---- x-tiled variant ----
+
+
+@pytest.mark.parametrize("n,nz,tile", [(256, 4, 128), (384, 7, 128), (128, 3, 64)])
+def test_tiled_x_matches_flat_kernel(n, nz, tile):
+    rng = np.random.default_rng(n + nz)
+    values, col_idx = random_ell(rng, n, nz, n)
+    x = rng.standard_normal(n)
+    flat = np.asarray(ek.ell_spmv(jnp.asarray(values), jnp.asarray(col_idx), jnp.asarray(x)))
+    tiled = np.asarray(
+        ek.ell_spmv_tiled_x(
+            jnp.asarray(values), jnp.asarray(col_idx), jnp.asarray(x), tile_cols=tile
+        )
+    )
+    np.testing.assert_allclose(tiled, flat, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    nz=st.integers(min_value=1, max_value=6),
+)
+def test_tiled_x_hypothesis(seed, nz):
+    n = 256
+    rng = np.random.default_rng(seed)
+    values, col_idx = random_ell(rng, n, nz, n, density=0.8)
+    x = rng.standard_normal(n)
+    got = np.asarray(
+        ek.ell_spmv_tiled_x(
+            jnp.asarray(values), jnp.asarray(col_idx), jnp.asarray(x), tile_cols=64
+        )
+    )
+    np.testing.assert_allclose(got, dense_spmv(values, col_idx, x), rtol=1e-10, atol=1e-10)
+
+
+def test_tiled_x_rejects_bad_tile():
+    values = jnp.zeros((2, 128))
+    col_idx = jnp.zeros((2, 128), dtype=jnp.int32)
+    x = jnp.zeros((100,))
+    with pytest.raises(ValueError, match="not divisible"):
+        ek.ell_spmv_tiled_x(values, col_idx, x, tile_cols=64)
+
+
+def test_tiled_x_duplicate_columns_accumulate_across_tiles():
+    # Entries pointing at columns in different tiles must all contribute.
+    n = 128
+    values = np.ones((2, n))
+    col_idx = np.zeros((2, n), dtype=np.int32)
+    col_idx[1, :] = n - 1  # second band points at the last column (tile 2)
+    x = np.zeros(n)
+    x[0] = 3.0
+    x[n - 1] = 5.0
+    got = np.asarray(
+        ek.ell_spmv_tiled_x(
+            jnp.asarray(values), jnp.asarray(col_idx), jnp.asarray(x), tile_cols=64
+        )
+    )
+    np.testing.assert_allclose(got, np.full(n, 8.0))

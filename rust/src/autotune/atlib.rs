@@ -1,0 +1,233 @@
+//! OpenATLib-style numbered-switch interface (the paper's substrate).
+//!
+//! The paper runs its baseline through OpenATLib's `OpenATI_DURMV` with
+//! "switch no. 11, which is the normal CRS implementation". This module
+//! reproduces that calling convention: a matrix handle plus an integer
+//! switch selecting the SpMV implementation, with switch 0 meaning
+//! **AUTO** — the run-time AT decision of §2.2.
+
+use super::online::{decide, TuningData};
+use super::policy::MemoryPolicy;
+use crate::formats::Csr;
+use crate::machine::MatrixShape;
+use crate::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use crate::{Result, Value};
+
+/// Switch numbers (OpenATLib style).
+pub mod switches {
+    /// Run-time auto-tuning (§2.2 online phase).
+    pub const AUTO: u32 = 0;
+    /// Normal CRS (the paper's baseline switch).
+    pub const CRS: u32 = 11;
+    /// Row-parallel CRS.
+    pub const CRS_PAR: u32 = 12;
+    /// COO-Column outer (Fig. 1).
+    pub const COO_COL_OUTER: u32 = 21;
+    /// COO-Row outer (Fig. 2).
+    pub const COO_ROW_OUTER: u32 = 22;
+    /// ELL-Row inner (Fig. 3).
+    pub const ELL_ROW_INNER: u32 = 31;
+    /// ELL-Row outer (Fig. 4).
+    pub const ELL_ROW_OUTER: u32 = 32;
+    /// BCSR 2×2 (extension).
+    pub const BCSR: u32 = 41;
+    /// JDS (extension).
+    pub const JDS: u32 = 51;
+    /// HYB ELL+COO (extension).
+    pub const HYB: u32 = 61;
+}
+
+/// Map a switch number to an implementation (`None` for AUTO).
+pub fn switch_to_impl(switch: u32) -> Result<Option<Implementation>> {
+    use switches::*;
+    Ok(match switch {
+        AUTO => None,
+        CRS => Some(Implementation::CsrSeq),
+        CRS_PAR => Some(Implementation::CsrRowPar),
+        COO_COL_OUTER => Some(Implementation::CooColOuter),
+        COO_ROW_OUTER => Some(Implementation::CooRowOuter),
+        ELL_ROW_INNER => Some(Implementation::EllRowInner),
+        ELL_ROW_OUTER => Some(Implementation::EllRowOuter),
+        BCSR => Some(Implementation::BcsrSeq),
+        JDS => Some(Implementation::JdsSeq),
+        HYB => Some(Implementation::HybSeq),
+        other => anyhow::bail!("unknown OpenATI_DURMV switch {other}"),
+    })
+}
+
+/// A matrix handle with lazily-materialised transformed copies — the
+/// `OpenATI_DURMV` equivalent. Holds the CRS original, the tuning table,
+/// the memory policy, and (after first use) the transformed copy the AT
+/// decision selected.
+pub struct Durmv {
+    crs: Csr,
+    tuning: TuningData,
+    policy: MemoryPolicy,
+    threads: usize,
+    /// The transformed copy, if any (kept across calls — the run-time
+    /// transformation happens once and amortises over iterations).
+    cached: Option<(Implementation, AnyMatrix)>,
+    ws: Workspace,
+    /// Cumulative SpMV calls served (amortisation accounting).
+    pub calls: u64,
+    /// Seconds spent transforming (accounted once).
+    pub transform_seconds: f64,
+}
+
+impl Durmv {
+    /// New handle with the given tuning table and policy.
+    pub fn new(crs: Csr, tuning: TuningData, policy: MemoryPolicy, threads: usize) -> Self {
+        Self {
+            crs,
+            tuning,
+            policy,
+            threads: threads.max(1),
+            cached: None,
+            ws: Workspace::new(),
+            calls: 0,
+            transform_seconds: 0.0,
+        }
+    }
+
+    /// The CRS original.
+    pub fn csr(&self) -> &Csr {
+        &self.crs
+    }
+
+    /// The implementation AUTO would choose for this matrix right now.
+    pub fn auto_choice(&self) -> Implementation {
+        let d = decide(&self.crs, &self.tuning);
+        if !d.transform {
+            return Implementation::CsrSeq;
+        }
+        // Respect the memory policy: if the chosen format doesn't fit,
+        // fall back to CRS (the paper's OpenATLib policy hook).
+        let shape = MatrixShape::of(&self.crs);
+        if self.policy.admits(&shape, d.chosen.required_format()) {
+            d.chosen
+        } else {
+            Implementation::CsrSeq
+        }
+    }
+
+    /// `y = A·x` through the numbered switch. Switch 0 (AUTO) runs the
+    /// online AT phase; the transformation (if chosen) happens on first
+    /// use and is cached for subsequent calls.
+    pub fn durmv(&mut self, switch: u32, x: &[Value], y: &mut [Value]) -> Result<()> {
+        let imp = match switch_to_impl(switch)? {
+            Some(imp) => imp,
+            None => self.auto_choice(),
+        };
+        self.run_impl(imp, x, y)
+    }
+
+    fn run_impl(&mut self, imp: Implementation, x: &[Value], y: &mut [Value]) -> Result<()> {
+        self.calls += 1;
+        if imp == Implementation::CsrSeq {
+            crate::spmv::csr_seq(&self.crs, x, y);
+            return Ok(());
+        }
+        if imp == Implementation::CsrRowPar {
+            crate::spmv::csr_row_par(&self.crs, x, y, self.threads);
+            return Ok(());
+        }
+        // Transformed path: materialise once, reuse afterwards.
+        let need_new = !matches!(&self.cached, Some((c, _)) if *c == imp);
+        if need_new {
+            let t0 = std::time::Instant::now();
+            let m = AnyMatrix::prepare(&self.crs, imp, self.policy.ell_budget())?;
+            self.transform_seconds += t0.elapsed().as_secs_f64();
+            self.cached = Some((imp, m));
+        }
+        let (_, m) = self.cached.as_ref().expect("cached above");
+        kernels::run(imp, m, x, y, self.threads, &mut self.ws)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::SparseMatrix;
+    use crate::matrixgen::{banded_circulant, generate, spec_by_name};
+    use crate::rng::Rng;
+
+    fn tuning(d_star: Option<f64>) -> TuningData {
+        TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star,
+        }
+    }
+
+    #[test]
+    fn switch_11_is_crs() {
+        assert_eq!(
+            switch_to_impl(switches::CRS).unwrap(),
+            Some(Implementation::CsrSeq)
+        );
+        assert_eq!(switch_to_impl(switches::AUTO).unwrap(), None);
+        assert!(switch_to_impl(99).is_err());
+    }
+
+    #[test]
+    fn all_switches_compute_correctly() {
+        let mut rng = Rng::new(9);
+        let a = crate::matrixgen::random_csr(&mut rng, 30, 30, 0.15);
+        let x: Vec<Value> = (0..30).map(|i| (i as f64).sin()).collect();
+        let mut want = vec![0.0; 30];
+        a.spmv(&x, &mut want);
+        for sw in [11u32, 12, 21, 22, 31, 32, 41, 51, 61, 0] {
+            let mut h = Durmv::new(a.clone(), tuning(Some(3.0)), MemoryPolicy::unlimited(), 2);
+            let mut y = vec![0.0; 30];
+            h.durmv(sw, &x, &mut y).unwrap();
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "switch {sw}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_transforms_banded_and_caches() {
+        let mut rng = Rng::new(10);
+        let a = banded_circulant(&mut rng, 200, &[-1, 0, 1, 2]);
+        let mut h = Durmv::new(a, tuning(Some(3.1)), MemoryPolicy::unlimited(), 1);
+        assert_eq!(h.auto_choice(), Implementation::EllRowOuter);
+        let x = vec![1.0; 200];
+        let mut y = vec![0.0; 200];
+        h.durmv(switches::AUTO, &x, &mut y).unwrap();
+        let t1 = h.transform_seconds;
+        assert!(t1 > 0.0, "transformation must be accounted");
+        h.durmv(switches::AUTO, &x, &mut y).unwrap();
+        assert_eq!(h.transform_seconds, t1, "second call must reuse the cache");
+        assert_eq!(h.calls, 2);
+    }
+
+    #[test]
+    fn auto_respects_memory_policy() {
+        // Tail-heavy matrix: ELL would explode; a tight budget forces CRS.
+        let spec = spec_by_name("memplus").unwrap();
+        let a = generate(&spec, 3, 0.03);
+        let mut h = Durmv::new(
+            a,
+            tuning(Some(10.0)), // threshold that would otherwise transform
+            MemoryPolicy::with_budget(64 * 1024),
+            1,
+        );
+        assert_eq!(h.auto_choice(), Implementation::CsrSeq);
+        let n = h.csr().n_rows();
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        h.durmv(switches::AUTO, &x, &mut y).unwrap();
+        assert!(h.transform_seconds == 0.0);
+    }
+
+    #[test]
+    fn auto_keeps_crs_for_high_dmat() {
+        let spec = spec_by_name("memplus").unwrap();
+        let a = generate(&spec, 3, 0.03);
+        let h = Durmv::new(a, tuning(Some(0.1)), MemoryPolicy::unlimited(), 1);
+        assert_eq!(h.auto_choice(), Implementation::CsrSeq);
+    }
+}

@@ -1,0 +1,121 @@
+//! The `D_mat` statistic (paper Eq. 4): `D_mat = σ / μ` over the
+//! non-zeros-per-row distribution — the architecture-independent half of
+//! the auto-tuning decision. "Computing `D_mat` requires a very low cost"
+//! (§4.4): one pass over the row pointer array, no touching of values.
+
+use crate::formats::Csr;
+
+/// Row-length distribution statistics of a sparse matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowStats {
+    /// Arithmetic mean μ of non-zeros per row.
+    pub mean: f64,
+    /// Population standard deviation σ of non-zeros per row.
+    pub sigma: f64,
+    /// Maximum row length (the ELL bandwidth `nz`).
+    pub max_row: usize,
+    /// Minimum row length.
+    pub min_row: usize,
+    /// Number of rows.
+    pub n_rows: usize,
+}
+
+impl RowStats {
+    /// Compute from a CSR matrix — O(n) over `row_ptr` only.
+    pub fn of_csr(a: &Csr) -> Self {
+        Self::of_row_ptr(&a.row_ptr)
+    }
+
+    /// Compute from a raw CSR row-pointer array.
+    pub fn of_row_ptr(row_ptr: &[usize]) -> Self {
+        let n = row_ptr.len().saturating_sub(1);
+        if n == 0 {
+            return Self { mean: 0.0, sigma: 0.0, max_row: 0, min_row: 0, n_rows: 0 };
+        }
+        let mut sum = 0usize;
+        let mut sum2 = 0.0f64;
+        let mut max_row = 0usize;
+        let mut min_row = usize::MAX;
+        for w in row_ptr.windows(2) {
+            let l = w[1] - w[0];
+            sum += l;
+            sum2 += (l as f64) * (l as f64);
+            max_row = max_row.max(l);
+            min_row = min_row.min(l);
+        }
+        let mean = sum as f64 / n as f64;
+        let var = (sum2 / n as f64 - mean * mean).max(0.0);
+        Self { mean, sigma: var.sqrt(), max_row, min_row, n_rows: n }
+    }
+
+    /// `D_mat = σ / μ` (0 when the matrix is empty).
+    pub fn d_mat(&self) -> f64 {
+        if self.mean > 0.0 {
+            self.sigma / self.mean
+        } else {
+            0.0
+        }
+    }
+
+    /// ELL fill ratio `n·max_row / nnz` this distribution implies.
+    pub fn fill_ratio(&self) -> f64 {
+        let nnz = self.mean * self.n_rows as f64;
+        if nnz > 0.0 {
+            (self.n_rows * self.max_row) as f64 / nnz
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::{banded_circulant, generate, table1_specs};
+    use crate::rng::Rng;
+
+    #[test]
+    fn perfect_band_has_zero_dmat() {
+        let mut rng = Rng::new(1);
+        let a = banded_circulant(&mut rng, 64, &[-1, 0, 1]);
+        let s = RowStats::of_csr(&a);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.sigma, 0.0);
+        assert_eq!(s.d_mat(), 0.0);
+        assert_eq!(s.max_row, 3);
+        assert_eq!(s.min_row, 3);
+        assert!((s.fill_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dmat_matches_table1_for_generated_suite() {
+        for spec in table1_specs() {
+            let a = generate(&spec, 123, 0.04);
+            let d = RowStats::of_csr(&a).d_mat();
+            let err = (d - spec.d_mat).abs() / spec.d_mat.max(0.02);
+            assert!(err < 0.8, "{}: D_mat {d} vs published {}", spec.name, spec.d_mat);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_row() {
+        let e = Csr::from_triplets(0, 0, &[]).unwrap();
+        let s = RowStats::of_csr(&e);
+        assert_eq!(s.d_mat(), 0.0);
+        let one = Csr::from_triplets(1, 3, &[(0, 0, 1.0), (0, 2, 1.0)]).unwrap();
+        let s = RowStats::of_csr(&one);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.sigma, 0.0);
+    }
+
+    #[test]
+    fn hand_computed_sigma() {
+        // Row lengths 1, 3: mean 2, var 1, sigma 1, D = 0.5.
+        let a = Csr::from_triplets(2, 3, &[(0, 1, 1.0), (1, 0, 1.0), (1, 1, 1.0), (1, 2, 1.0)])
+            .unwrap();
+        let s = RowStats::of_csr(&a);
+        assert_eq!(s.mean, 2.0);
+        assert!((s.sigma - 1.0).abs() < 1e-12);
+        assert!((s.d_mat() - 0.5).abs() < 1e-12);
+    }
+}

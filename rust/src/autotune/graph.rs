@@ -1,0 +1,269 @@
+//! The `D_mat`–`R_ell` graph (paper §2.2 step 3–4 and Fig. 8) and the
+//! `D*` threshold extraction.
+//!
+//! Offline phase step (4): *"Find the largest point of the X-axis such
+//! that `R_ell^i ≥ c` for i = 1,…,m. This point of the X-axis is denoted
+//! `D*`."* Two readings are implemented:
+//!
+//! * [`DrGraph::d_star`] — the paper-literal rule: the largest `D_mat`
+//!   among points with `R ≥ c`.
+//! * [`DrGraph::d_star_conservative`] — the largest `D` such that *every*
+//!   point with `D_mat ≤ D` has `R ≥ c` (no failing point inside the
+//!   accepted region). The `ablation` bench compares the two.
+//!
+//! §4.5's "the graph can be well modeled" is realised by
+//! [`DrGraph::fit_power_law`]: an `R ≈ a·D^b` least-squares fit in
+//! log-log space, from which a model-based threshold `(c/a)^(1/b)` falls
+//! out.
+
+use crate::metrics::Json;
+
+/// One matrix's point on the graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DrPoint {
+    /// Matrix label (Table-1 name).
+    pub name: String,
+    /// X: `D_mat = σ/μ`.
+    pub d_mat: f64,
+    /// Y: `R_ell = SP / TT`.
+    pub r_ell: f64,
+}
+
+/// The `D_mat`–`R_ell` scatter for one machine × implementation.
+#[derive(Clone, Debug, Default)]
+pub struct DrGraph {
+    /// Points, in insertion order.
+    pub points: Vec<DrPoint>,
+}
+
+/// Power-law fit `R ≈ a·D^b` (log-log least squares).
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLawFit {
+    /// Coefficient `a`.
+    pub a: f64,
+    /// Exponent `b` (negative when transformation value decays with `D`).
+    pub b: f64,
+    /// Coefficient of determination in log space.
+    pub r2: f64,
+}
+
+impl PowerLawFit {
+    /// The `D` at which the fitted model crosses `R = c`.
+    pub fn threshold(&self, c: f64) -> f64 {
+        if self.b.abs() < 1e-12 {
+            return if self.a >= c { f64::INFINITY } else { 0.0 };
+        }
+        (c / self.a).powf(1.0 / self.b)
+    }
+
+    /// Model prediction at `d`.
+    pub fn predict(&self, d: f64) -> f64 {
+        self.a * d.powf(self.b)
+    }
+}
+
+impl DrGraph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a point.
+    pub fn push(&mut self, name: impl Into<String>, d_mat: f64, r_ell: f64) {
+        self.points.push(DrPoint { name: name.into(), d_mat, r_ell });
+    }
+
+    /// Points with finite coordinates (ELL may be excluded for a matrix —
+    /// the paper dropped torso1 — yielding NaN/∞ entries to skip).
+    fn finite(&self) -> impl Iterator<Item = &DrPoint> {
+        self.points.iter().filter(|p| p.d_mat.is_finite() && p.r_ell.is_finite())
+    }
+
+    /// Paper-literal `D*`: the largest `D_mat` whose point has `R ≥ c`.
+    /// `None` when no point qualifies (never transform).
+    pub fn d_star(&self, c: f64) -> Option<f64> {
+        self.finite()
+            .filter(|p| p.r_ell >= c)
+            .map(|p| p.d_mat)
+            .fold(None, |acc, d| Some(acc.map_or(d, |a: f64| a.max(d))))
+    }
+
+    /// Conservative `D*`: the largest `D` such that every point with
+    /// `d_mat ≤ D` satisfies `R ≥ c`.
+    pub fn d_star_conservative(&self, c: f64) -> Option<f64> {
+        let mut pts: Vec<&DrPoint> = self.finite().collect();
+        pts.sort_by(|a, b| a.d_mat.partial_cmp(&b.d_mat).unwrap());
+        let mut best: Option<f64> = None;
+        for p in pts {
+            if p.r_ell >= c {
+                best = Some(p.d_mat);
+            } else {
+                break;
+            }
+        }
+        best
+    }
+
+    /// Least-squares power-law fit in log-log space over points with
+    /// strictly positive coordinates. `None` with fewer than 2 usable
+    /// points.
+    pub fn fit_power_law(&self) -> Option<PowerLawFit> {
+        let pts: Vec<(f64, f64)> = self
+            .finite()
+            .filter(|p| p.d_mat > 0.0 && p.r_ell > 0.0)
+            .map(|p| (p.d_mat.ln(), p.r_ell.ln()))
+            .collect();
+        if pts.len() < 2 {
+            return None;
+        }
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        if denom.abs() < 1e-12 {
+            return None;
+        }
+        let b = (n * sxy - sx * sy) / denom;
+        let ln_a = (sy - b * sx) / n;
+        // R² in log space.
+        let mean_y = sy / n;
+        let ss_tot: f64 = pts.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+        let ss_res: f64 = pts
+            .iter()
+            .map(|p| (p.1 - (ln_a + b * p.0)).powi(2))
+            .sum();
+        let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+        Some(PowerLawFit { a: ln_a.exp(), b, r2 })
+    }
+
+    /// Render as an aligned text table sorted by `D_mat` (the repo's
+    /// stand-in for the paper's Fig. 8 scatter plot).
+    pub fn render(&self, c: f64) -> String {
+        let mut pts = self.points.clone();
+        pts.sort_by(|a, b| a.d_mat.partial_cmp(&b.d_mat).unwrap());
+        let mut t = crate::metrics::Table::new(vec![
+            "matrix".to_string(),
+            "D_mat".to_string(),
+            "R_ell".to_string(),
+            format!("R>={c}"),
+        ]);
+        for p in &pts {
+            t.row(vec![
+                p.name.clone(),
+                format!("{:.3}", p.d_mat),
+                format!("{:.3}", p.r_ell),
+                if p.r_ell >= c { "yes".into() } else { "no".to_string() },
+            ]);
+        }
+        let mut out = t.render();
+        match self.d_star(c) {
+            Some(d) => out.push_str(&format!("D* = {d:.3} (c = {c})\n")),
+            None => out.push_str(&format!("D* = none (no point with R >= {c})\n")),
+        }
+        out
+    }
+
+    /// JSON dump for machine-readable bench output.
+    pub fn to_json(&self, c: f64) -> Json {
+        Json::Obj(vec![
+            ("c".into(), Json::Num(c)),
+            (
+                "d_star".into(),
+                self.d_star(c).map_or(Json::Null, Json::Num),
+            ),
+            (
+                "points".into(),
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::Str(p.name.clone())),
+                                ("d_mat".into(), Json::Num(p.d_mat)),
+                                ("r_ell".into(), Json::Num(p.r_ell)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(points: &[(f64, f64)]) -> DrGraph {
+        let mut g = DrGraph::new();
+        for (i, &(d, r)) in points.iter().enumerate() {
+            g.push(format!("m{i}"), d, r);
+        }
+        g
+    }
+
+    #[test]
+    fn d_star_literal_takes_max_qualifying() {
+        let g = graph(&[(0.02, 50.0), (0.5, 2.0), (1.2, 0.5), (3.1, 1.5)]);
+        // Literal: the 3.1 point qualifies even though 1.2 fails.
+        assert_eq!(g.d_star(1.0), Some(3.1));
+        // Conservative stops at the first failure.
+        assert_eq!(g.d_star_conservative(1.0), Some(0.5));
+    }
+
+    #[test]
+    fn d_star_none_when_all_fail() {
+        let g = graph(&[(0.1, 0.2), (0.5, 0.9)]);
+        assert_eq!(g.d_star(1.0), None);
+        assert_eq!(g.d_star_conservative(1.0), None);
+    }
+
+    #[test]
+    fn non_finite_points_ignored() {
+        let mut g = graph(&[(0.1, 5.0)]);
+        g.push("torso1-excluded", 5.72, f64::NAN);
+        g.push("free", 0.2, f64::INFINITY);
+        assert_eq!(g.d_star(1.0), Some(0.1));
+    }
+
+    #[test]
+    fn power_law_fit_recovers_exact_relation() {
+        // R = 2 * D^-1.5 exactly.
+        let pts: Vec<(f64, f64)> =
+            [0.02f64, 0.1, 0.5, 1.0, 3.0].iter().map(|&d| (d, 2.0 * d.powf(-1.5))).collect();
+        let g = graph(&pts);
+        let f = g.fit_power_law().unwrap();
+        assert!((f.a - 2.0).abs() < 1e-9, "a = {}", f.a);
+        assert!((f.b + 1.5).abs() < 1e-9, "b = {}", f.b);
+        assert!(f.r2 > 0.999);
+        // Threshold where 2 D^-1.5 = 1 -> D = 2^(2/3).
+        let th = f.threshold(1.0);
+        assert!((th - 2f64.powf(2.0 / 3.0)).abs() < 1e-9, "threshold {th}");
+        assert!((f.predict(1.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_requires_two_points() {
+        assert!(graph(&[(0.5, 2.0)]).fit_power_law().is_none());
+        assert!(graph(&[]).fit_power_law().is_none());
+    }
+
+    #[test]
+    fn render_contains_threshold_line() {
+        let g = graph(&[(0.1, 5.0), (2.0, 0.1)]);
+        let s = g.render(1.0);
+        assert!(s.contains("D* = 0.100"), "{s}");
+        assert!(s.contains("yes"));
+        assert!(s.contains("no"));
+    }
+
+    #[test]
+    fn json_dump_shape() {
+        let g = graph(&[(0.1, 5.0)]);
+        let s = g.to_json(1.0).render();
+        assert!(s.contains("\"d_star\":0.1"));
+        assert!(s.contains("\"points\""));
+    }
+}

@@ -1,0 +1,33 @@
+//! The paper's auto-tuning method (§2.2).
+//!
+//! Two phases:
+//!
+//! * **Offline** ([`offline`]) — run once per machine install: benchmark a
+//!   suite of matrices, computing for each the statistic
+//!   `D_mat = σ/μ` ([`dmat`]) and the cost ratio `R_ell` ([`ratios`]),
+//!   plot the `D_mat`–`R_ell` graph ([`graph`]) and extract the threshold
+//!   `D*` (the largest `D_mat` still worth transforming at cost threshold
+//!   `c`, default 1.0).
+//! * **Online** ([`online`]) — run at every library call: compute `D_mat`
+//!   of the input matrix (one cheap O(n) pass) and transform to ELL iff
+//!   `D_mat < D*`.
+//!
+//! [`atlib`] wraps the decision in an OpenATLib-style numbered-switch
+//! interface (the paper's `OpenATI_DURMV`), and [`policy`] implements the
+//! memory-budget auto-tuning policy the paper cites for the 2×-memory
+//! drawback.
+
+pub mod atlib;
+pub mod dmat;
+pub mod graph;
+pub mod offline;
+pub mod online;
+pub mod policy;
+pub mod ratios;
+
+pub use dmat::RowStats;
+pub use graph::{DrGraph, DrPoint};
+pub use offline::{run_offline, OfflineConfig, OfflineResult, OfflineSample};
+pub use online::{decide, OnlineDecision, TuningData};
+pub use policy::MemoryPolicy;
+pub use ratios::Ratios;

@@ -1,0 +1,262 @@
+//! The offline AT phase (paper §2.2): run at library-install time on each
+//! new machine.
+//!
+//! For every benchmark matrix, measure `t_crs`, `t_imp`, `t_trans` on the
+//! given [`Backend`], form [`Ratios`], compute `D_mat`, build the
+//! [`DrGraph`], and extract `D*`. The result is persisted as the
+//! machine's *tuning table* and consumed by the online phase at every
+//! subsequent library call.
+
+use super::dmat::RowStats;
+use super::graph::DrGraph;
+use super::online::TuningData;
+use super::ratios::Ratios;
+use crate::formats::Csr;
+use crate::machine::Backend;
+use crate::metrics::Json;
+use crate::spmv::Implementation;
+use crate::Result;
+
+/// Offline-phase configuration.
+#[derive(Clone, Debug)]
+pub struct OfflineConfig {
+    /// The candidate implementation being characterised (the paper's
+    /// Fig. 8 uses ELL-Row outer at 1 thread).
+    pub imp: Implementation,
+    /// Thread count for both baseline and candidate timings.
+    pub threads: usize,
+    /// The cost threshold `c` (paper default 1.0).
+    pub c: f64,
+}
+
+impl Default for OfflineConfig {
+    fn default() -> Self {
+        Self { imp: Implementation::EllRowOuter, threads: 1, c: 1.0 }
+    }
+}
+
+/// One offline measurement row.
+#[derive(Clone, Debug)]
+pub struct OfflineSample {
+    /// Matrix label.
+    pub name: String,
+    /// `D_mat` of the matrix.
+    pub d_mat: f64,
+    /// Baseline CRS SpMV seconds.
+    pub t_crs: f64,
+    /// Candidate SpMV seconds (None when the transformation failed, e.g.
+    /// ELL memory overflow — the paper's torso1 case).
+    pub t_imp: Option<f64>,
+    /// Transformation seconds.
+    pub t_trans: Option<f64>,
+    /// Derived ratios (None when excluded).
+    pub ratios: Option<Ratios>,
+}
+
+/// The offline phase output: samples + graph + threshold.
+#[derive(Clone, Debug)]
+pub struct OfflineResult {
+    /// Backend the table was tuned on.
+    pub backend: String,
+    /// Configuration used.
+    pub imp: Implementation,
+    /// Threads used.
+    pub threads: usize,
+    /// Cost threshold `c`.
+    pub c: f64,
+    /// Per-matrix rows.
+    pub samples: Vec<OfflineSample>,
+    /// The `D_mat`–`R_ell` graph.
+    pub graph: DrGraph,
+    /// Extracted `D*` (None = never transform on this machine).
+    pub d_star: Option<f64>,
+}
+
+impl OfflineResult {
+    /// Convert to the compact [`TuningData`] the online phase loads.
+    pub fn tuning_data(&self) -> TuningData {
+        TuningData {
+            backend: self.backend.clone(),
+            imp: self.imp,
+            threads: self.threads,
+            c: self.c,
+            d_star: self.d_star,
+        }
+    }
+
+    /// JSON dump (samples + graph + threshold).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("backend".into(), Json::Str(self.backend.clone())),
+            ("imp".into(), Json::Str(self.imp.name().into())),
+            ("threads".into(), Json::Num(self.threads as f64)),
+            ("c".into(), Json::Num(self.c)),
+            ("d_star".into(), self.d_star.map_or(Json::Null, Json::Num)),
+            (
+                "samples".into(),
+                Json::Arr(
+                    self.samples
+                        .iter()
+                        .map(|s| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::Str(s.name.clone())),
+                                ("d_mat".into(), Json::Num(s.d_mat)),
+                                ("t_crs".into(), Json::Num(s.t_crs)),
+                                ("t_imp".into(), s.t_imp.map_or(Json::Null, Json::Num)),
+                                ("t_trans".into(), s.t_trans.map_or(Json::Null, Json::Num)),
+                                (
+                                    "sp".into(),
+                                    s.ratios.map_or(Json::Null, |r| Json::Num(r.sp)),
+                                ),
+                                (
+                                    "tt".into(),
+                                    s.ratios.map_or(Json::Null, |r| Json::Num(r.tt)),
+                                ),
+                                (
+                                    "r_ell".into(),
+                                    s.ratios.map_or(Json::Null, |r| Json::Num(r.r)),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run the offline phase over `(name, matrix)` pairs on `backend`.
+///
+/// Matrices whose transformation fails (e.g. the ELL memory budget — the
+/// paper removed torso1 for exactly this) stay in the sample list with
+/// `t_imp = None` and are excluded from the graph, mirroring §4.2.
+pub fn run_offline<B: Backend + ?Sized>(
+    backend: &B,
+    matrices: &[(String, Csr)],
+    cfg: &OfflineConfig,
+) -> Result<OfflineResult> {
+    anyhow::ensure!(!matrices.is_empty(), "offline phase needs at least one matrix");
+    let mut samples = Vec::with_capacity(matrices.len());
+    let mut graph = DrGraph::new();
+    for (name, a) in matrices {
+        let d_mat = RowStats::of_csr(a).d_mat();
+        let t_crs = backend.spmv_seconds(a, Implementation::CsrSeq, cfg.threads)?;
+        // Candidate timing can fail (memory overflow) — record exclusion.
+        let timing = backend
+            .spmv_seconds(a, cfg.imp, cfg.threads)
+            .and_then(|t_imp| Ok((t_imp, backend.transform_seconds(a, cfg.imp)?)));
+        match timing {
+            Ok((t_imp, t_trans)) => {
+                let ratios = Ratios::from_times(t_crs, t_imp, t_trans);
+                graph.push(name.clone(), d_mat, ratios.r);
+                samples.push(OfflineSample {
+                    name: name.clone(),
+                    d_mat,
+                    t_crs,
+                    t_imp: Some(t_imp),
+                    t_trans: Some(t_trans),
+                    ratios: Some(ratios),
+                });
+            }
+            Err(_) => samples.push(OfflineSample {
+                name: name.clone(),
+                d_mat,
+                t_crs,
+                t_imp: None,
+                t_trans: None,
+                ratios: None,
+            }),
+        }
+    }
+    let d_star = graph.d_star(cfg.c);
+    Ok(OfflineResult {
+        backend: backend.name(),
+        imp: cfg.imp,
+        threads: cfg.threads,
+        c: cfg.c,
+        samples,
+        graph,
+        d_star,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine::scalar::ScalarMachine;
+    use crate::machine::vector::VectorMachine;
+    use crate::machine::SimulatedBackend;
+    use crate::matrixgen::{generate, table1_specs};
+
+    fn small_suite() -> Vec<(String, Csr)> {
+        table1_specs()
+            .into_iter()
+            .filter(|s| s.no != 3) // keep runtime small; torso1 handled elsewhere
+            .map(|s| (s.name.to_string(), generate(&s, 9, 0.02)))
+            .collect()
+    }
+
+    #[test]
+    fn vector_machine_accepts_everything_scalar_is_picky() {
+        let suite = small_suite();
+        let cfg = OfflineConfig::default();
+        let es2 = SimulatedBackend::new(VectorMachine::default());
+        let sr = SimulatedBackend::new(ScalarMachine::default());
+        let r_es2 = run_offline(&es2, &suite, &cfg).unwrap();
+        let r_sr = run_offline(&sr, &suite, &cfg).unwrap();
+        // Paper Fig. 8: ES2 D* covers the full 0.02–3.10 range; SR16000
+        // only D_mat < ~0.1.
+        let d_es2 = r_es2.d_star.expect("ES2 must accept some matrices");
+        let d_sr = r_sr.d_star.expect("SR16000 accepts the near-band matrices");
+        assert!(d_es2 > 1.0, "ES2 D* = {d_es2}");
+        assert!(d_sr < d_es2, "SR D* {d_sr} should be below ES2 D* {d_es2}");
+    }
+
+    #[test]
+    fn excluded_matrices_stay_in_samples() {
+        struct FailingEll;
+        impl Backend for FailingEll {
+            fn name(&self) -> String {
+                "failing".into()
+            }
+            fn max_threads(&self) -> usize {
+                1
+            }
+            fn spmv_seconds(&self, _a: &Csr, imp: Implementation, _t: usize) -> Result<f64> {
+                if imp == Implementation::CsrSeq {
+                    Ok(1.0)
+                } else {
+                    anyhow::bail!("ELL overflow")
+                }
+            }
+            fn transform_seconds(&self, _a: &Csr, _imp: Implementation) -> Result<f64> {
+                Ok(0.1)
+            }
+        }
+        let suite = vec![("m".to_string(), Csr::identity(4))];
+        let r = run_offline(&FailingEll, &suite, &OfflineConfig::default()).unwrap();
+        assert_eq!(r.samples.len(), 1);
+        assert!(r.samples[0].t_imp.is_none());
+        assert!(r.graph.points.is_empty());
+        assert!(r.d_star.is_none());
+    }
+
+    #[test]
+    fn empty_suite_rejected() {
+        let es2 = SimulatedBackend::new(VectorMachine::default());
+        assert!(run_offline(&es2, &[], &OfflineConfig::default()).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_contains_rows() {
+        let suite = vec![
+            ("a".to_string(), Csr::identity(64)),
+            ("b".to_string(), Csr::identity(32)),
+        ];
+        let es2 = SimulatedBackend::new(VectorMachine::default());
+        let r = run_offline(&es2, &suite, &OfflineConfig::default()).unwrap();
+        let s = r.to_json().render();
+        assert!(s.contains("\"samples\""));
+        assert!(s.contains("\"d_star\""));
+    }
+}

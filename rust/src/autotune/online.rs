@@ -1,0 +1,201 @@
+//! The online AT phase (paper §2.2): executed inside every library call.
+//!
+//! 1. Compute `D_mat` for the input matrix (one O(n) pass over `IRP`).
+//! 2. If `D_mat < D*`, transform to ELL and use the ELL SpMV; otherwise
+//!    stay on CRS.
+//!
+//! [`TuningData`] is the machine's installed tuning table (the offline
+//! phase's output), with text-file persistence so the rust coordinator
+//! can load what an earlier install run produced.
+
+use super::dmat::RowStats;
+use crate::formats::Csr;
+use crate::spmv::Implementation;
+use crate::Result;
+use std::path::Path;
+
+/// The persisted offline-phase output the online phase consumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuningData {
+    /// Backend name the table was tuned on (informational).
+    pub backend: String,
+    /// Candidate implementation the offline phase characterised.
+    pub imp: Implementation,
+    /// Thread count the table was tuned at.
+    pub threads: usize,
+    /// Cost threshold `c`.
+    pub c: f64,
+    /// The threshold `D*`; `None` = the candidate never won offline.
+    pub d_star: Option<f64>,
+}
+
+impl TuningData {
+    /// Serialize as a small key-value text file (the environment carries
+    /// no serde; the format is stable and human-inspectable).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut s = String::new();
+        s.push_str("spmv-at-tuning v1\n");
+        s.push_str(&format!("backend\t{}\n", self.backend));
+        s.push_str(&format!("imp\t{}\n", self.imp.name()));
+        s.push_str(&format!("threads\t{}\n", self.threads));
+        s.push_str(&format!("c\t{}\n", self.c));
+        match self.d_star {
+            Some(d) => s.push_str(&format!("d_star\t{d}\n")),
+            None => s.push_str("d_star\tnone\n"),
+        }
+        std::fs::write(path, s).map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+    }
+
+    /// Load a tuning table saved by [`TuningData::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or_default();
+        anyhow::ensure!(
+            header == "spmv-at-tuning v1",
+            "unrecognised tuning file header: {header}"
+        );
+        let mut backend = None;
+        let mut imp = None;
+        let mut threads = None;
+        let mut c = None;
+        let mut d_star: Option<Option<f64>> = None;
+        for line in lines {
+            let (k, v) = line
+                .split_once('\t')
+                .ok_or_else(|| anyhow::anyhow!("bad tuning line: {line}"))?;
+            match k {
+                "backend" => backend = Some(v.to_string()),
+                "imp" => {
+                    imp = Some(
+                        Implementation::parse(v)
+                            .ok_or_else(|| anyhow::anyhow!("unknown implementation {v}"))?,
+                    )
+                }
+                "threads" => threads = Some(v.parse()?),
+                "c" => c = Some(v.parse()?),
+                "d_star" => {
+                    d_star = Some(if v == "none" { None } else { Some(v.parse()?) })
+                }
+                other => anyhow::bail!("unknown tuning key {other}"),
+            }
+        }
+        Ok(Self {
+            backend: backend.ok_or_else(|| anyhow::anyhow!("missing backend"))?,
+            imp: imp.ok_or_else(|| anyhow::anyhow!("missing imp"))?,
+            threads: threads.ok_or_else(|| anyhow::anyhow!("missing threads"))?,
+            c: c.ok_or_else(|| anyhow::anyhow!("missing c"))?,
+            d_star: d_star.ok_or_else(|| anyhow::anyhow!("missing d_star"))?,
+        })
+    }
+}
+
+/// The online decision for one input matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OnlineDecision {
+    /// The input's `D_mat`.
+    pub d_mat: f64,
+    /// The threshold compared against (NaN if the table had none).
+    pub d_star: f64,
+    /// Whether to transform.
+    pub transform: bool,
+    /// The implementation to run.
+    pub chosen: Implementation,
+}
+
+/// §2.2 online phase: compute `D_mat`, compare against `D*`.
+pub fn decide(a: &Csr, tuning: &TuningData) -> OnlineDecision {
+    let d_mat = RowStats::of_csr(a).d_mat();
+    match tuning.d_star {
+        Some(d_star) if d_mat < d_star => OnlineDecision {
+            d_mat,
+            d_star,
+            transform: true,
+            chosen: tuning.imp,
+        },
+        Some(d_star) => OnlineDecision {
+            d_mat,
+            d_star,
+            transform: false,
+            chosen: Implementation::CsrSeq,
+        },
+        None => OnlineDecision {
+            d_mat,
+            d_star: f64::NAN,
+            transform: false,
+            chosen: Implementation::CsrSeq,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::{banded_circulant, generate, spec_by_name};
+    use crate::rng::Rng;
+
+    fn tuning(d_star: Option<f64>) -> TuningData {
+        TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star,
+        }
+    }
+
+    #[test]
+    fn banded_matrix_transforms_under_es2_table() {
+        let mut rng = Rng::new(1);
+        let a = banded_circulant(&mut rng, 100, &[-1, 0, 1]);
+        let d = decide(&a, &tuning(Some(3.1)));
+        assert!(d.transform);
+        assert_eq!(d.chosen, Implementation::EllRowOuter);
+        assert_eq!(d.d_mat, 0.0);
+    }
+
+    #[test]
+    fn memplus_stays_on_crs_under_scalar_table() {
+        let spec = spec_by_name("memplus").unwrap();
+        let a = generate(&spec, 2, 0.05);
+        let d = decide(&a, &tuning(Some(0.1)));
+        assert!(!d.transform);
+        assert_eq!(d.chosen, Implementation::CsrSeq);
+        assert!(d.d_mat > 0.1);
+    }
+
+    #[test]
+    fn no_threshold_never_transforms() {
+        let mut rng = Rng::new(2);
+        let a = banded_circulant(&mut rng, 50, &[0, 1]);
+        let d = decide(&a, &tuning(None));
+        assert!(!d.transform);
+        assert!(d.d_star.is_nan());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("spmv_at_tuning_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.tsv");
+        for t in [tuning(Some(0.25)), tuning(None)] {
+            t.save(&p).unwrap();
+            let back = TuningData::load(&p).unwrap();
+            assert_eq!(t, back);
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("spmv_at_tuning_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.tsv");
+        std::fs::write(&p, "not a tuning file\n").unwrap();
+        assert!(TuningData::load(&p).is_err());
+        std::fs::write(&p, "spmv-at-tuning v1\nbackend\tx\n").unwrap();
+        assert!(TuningData::load(&p).is_err(), "missing keys must fail");
+        std::fs::remove_file(&p).ok();
+    }
+}

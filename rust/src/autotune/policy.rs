@@ -1,0 +1,155 @@
+//! The memory auto-tuning policy (paper §2.2 drawback discussion):
+//! run-time transformation needs "approximately 2x or more of memory
+//! space" — the paper defers to OpenATLib's user-requirement "auto-tuning
+//! policy". This module implements that policy: a byte budget that
+//! admits or rejects candidate formats *before* allocation, and an
+//! eviction preference when several transformed copies are held.
+
+use crate::formats::FormatKind;
+use crate::machine::MatrixShape;
+use crate::{Index, Value};
+
+/// User-specified memory policy for run-time transformation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemoryPolicy {
+    /// Maximum extra bytes a transformed copy may occupy (None = unlimited).
+    pub budget_bytes: Option<usize>,
+    /// Whether the CRS original must be kept alongside the transformed
+    /// copy (the paper keeps it: the AT may fall back at any call).
+    pub keep_crs: bool,
+}
+
+impl Default for MemoryPolicy {
+    fn default() -> Self {
+        Self { budget_bytes: None, keep_crs: true }
+    }
+}
+
+impl MemoryPolicy {
+    /// Unlimited policy.
+    pub fn unlimited() -> Self {
+        Self::default()
+    }
+
+    /// Policy with a byte budget.
+    pub fn with_budget(bytes: usize) -> Self {
+        Self { budget_bytes: Some(bytes), keep_crs: true }
+    }
+
+    /// Predicted storage bytes of a matrix of shape `m` in `kind`
+    /// (without materialising it).
+    pub fn predicted_bytes(m: &MatrixShape, kind: FormatKind) -> usize {
+        let vb = std::mem::size_of::<Value>();
+        let ib = std::mem::size_of::<Index>();
+        let ub = std::mem::size_of::<usize>();
+        match kind {
+            FormatKind::Csr => m.nnz * (vb + ib) + (m.n + 1) * ub,
+            FormatKind::Csc => m.nnz * (vb + ib) + (m.n_cols + 1) * ub,
+            FormatKind::CooRow | FormatKind::CooCol => m.nnz * (vb + 2 * ib),
+            FormatKind::Ell => m.n.saturating_mul(m.bandwidth) * (vb + ib),
+            // 2×2 blocks, fill capped at 4 (worst case all singleton blocks).
+            FormatKind::Bcsr => {
+                let blocks = (m.nnz as f64 * m.fill_ratio.min(4.0) / 4.0).ceil() as usize;
+                blocks * (4 * vb + ib) + (m.n / 2 + 1) * ub
+            }
+            // JDS: nnz payload + perm + diagonal pointers (no fill).
+            FormatKind::Jds => {
+                m.nnz * (vb + ib) + m.n * ib + (m.bandwidth + 1) * ub
+            }
+            // HYB: body slots at ~1.5μ bandwidth + spilled tail (~10%).
+            FormatKind::Hyb => {
+                let body_bw = ((m.mu * 1.5).ceil() as usize).min(m.bandwidth).max(1);
+                m.n * body_bw * (vb + ib) + m.nnz / 10 * (vb + 2 * ib)
+            }
+        }
+    }
+
+    /// Does `kind` fit the budget for shape `m`?
+    pub fn admits(&self, m: &MatrixShape, kind: FormatKind) -> bool {
+        match self.budget_bytes {
+            None => true,
+            Some(cap) => Self::predicted_bytes(m, kind) <= cap,
+        }
+    }
+
+    /// All formats admitted for shape `m`, cheapest-first.
+    pub fn admissible(&self, m: &MatrixShape) -> Vec<FormatKind> {
+        let mut kinds: Vec<(usize, FormatKind)> = FormatKind::ALL
+            .iter()
+            .copied()
+            .filter(|&k| k != FormatKind::Csr && self.admits(m, k))
+            .map(|k| (Self::predicted_bytes(m, k), k))
+            .collect();
+        kinds.sort_by_key(|&(b, _)| b);
+        kinds.into_iter().map(|(_, k)| k).collect()
+    }
+
+    /// The ELL budget to pass to
+    /// [`crate::transform::crs_to_ell_bounded`].
+    pub fn ell_budget(&self) -> Option<usize> {
+        self.budget_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(n: usize, nnz: usize, bw: usize) -> MatrixShape {
+        MatrixShape {
+            n,
+            n_cols: n,
+            nnz,
+            mu: nnz as f64 / n as f64,
+            sigma: 0.0,
+            bandwidth: bw,
+            fill_ratio: (n * bw) as f64 / nnz as f64,
+        }
+    }
+
+    #[test]
+    fn unlimited_admits_all() {
+        let p = MemoryPolicy::unlimited();
+        let m = shape(1000, 5000, 5);
+        for k in FormatKind::ALL {
+            assert!(p.admits(&m, k), "{k}");
+        }
+    }
+
+    #[test]
+    fn torso1_style_ell_rejected() {
+        // Huge bandwidth: ELL blows up, COO stays linear in nnz.
+        let m = shape(100_000, 1_000_000, 5_000);
+        let coo_bytes = MemoryPolicy::predicted_bytes(&m, FormatKind::CooRow);
+        let p = MemoryPolicy::with_budget(2 * coo_bytes);
+        assert!(!p.admits(&m, FormatKind::Ell), "ELL must exceed budget");
+        assert!(p.admits(&m, FormatKind::CooRow));
+        let adm = p.admissible(&m);
+        assert!(!adm.contains(&FormatKind::Ell));
+        assert!(adm.contains(&FormatKind::CooRow));
+    }
+
+    #[test]
+    fn admissible_sorted_cheapest_first() {
+        let p = MemoryPolicy::unlimited();
+        let m = shape(1000, 5000, 5);
+        let adm = p.admissible(&m);
+        let bytes: Vec<usize> =
+            adm.iter().map(|&k| MemoryPolicy::predicted_bytes(&m, k)).collect();
+        let mut sorted = bytes.clone();
+        sorted.sort_unstable();
+        assert_eq!(bytes, sorted);
+        assert!(!adm.contains(&FormatKind::Csr), "CSR is the original, not a target");
+    }
+
+    #[test]
+    fn predicted_ell_matches_reality() {
+        use crate::formats::SparseMatrix as _;
+        use crate::rng::Rng;
+        let mut rng = Rng::new(8);
+        let a = crate::matrixgen::random_csr(&mut rng, 50, 50, 0.1);
+        let m = MatrixShape::of(&a);
+        let e = crate::transform::crs_to_ell(&a).unwrap();
+        assert_eq!(MemoryPolicy::predicted_bytes(&m, FormatKind::Ell), e.memory_bytes());
+    }
+}

@@ -1,0 +1,119 @@
+//! The paper's cost ratios (Eqs. 1–3).
+//!
+//! * `SP_crs/ell = t_crs / t_ell` — the SpMV speedup (Eq. 1).
+//! * `TT_ell` — the transformation overhead in units of one CRS SpMV.
+//!   **Note on the paper's Eq. (2):** the equation as printed reads
+//!   `TT = t_crs / t_trans`, but the paper's own Fig. 7 ("TT_ell indicates
+//!   the data transformation overheads based on one time of SpMV with
+//!   CRS", with values of 20×–50× for expensive transforms) and the
+//!   `c = 1.0` calibration example ("10× speedup … if and only if the
+//!   transformation time to SpMV in CRS is 10") both require the
+//!   *reciprocal*, `TT = t_trans / t_crs`. We implement the
+//!   figure-consistent semantics.
+//! * `R_ell = SP / TT` (Eq. 3) — speedup per unit of transformation
+//!   overhead. `R ≥ c = 1.0` means the transformation pays for itself
+//!   within `SP` iterations (§2.2's discussion: a 10× speedup amortises a
+//!   10-SpMV transformation).
+
+use crate::Value;
+
+/// The (SP, TT, R) triple for one matrix × implementation × machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ratios {
+    /// `SP = t_crs / t_imp` — SpMV speedup over the CRS baseline (Eq. 1).
+    pub sp: f64,
+    /// `TT = t_trans / t_crs` — transformation overhead in CRS-SpMV units
+    /// (Fig. 7 semantics; see module docs).
+    pub tt: f64,
+    /// `R = SP / TT` (Eq. 3).
+    pub r: f64,
+}
+
+impl Ratios {
+    /// Build from raw seconds. `t_trans == 0` (no transformation) yields
+    /// `TT = 0`, `R = +inf` — "free" optimisation always amortises.
+    pub fn from_times(t_crs: f64, t_imp: f64, t_trans: f64) -> Self {
+        assert!(t_crs > 0.0, "t_crs must be positive, got {t_crs}");
+        assert!(t_imp > 0.0, "t_imp must be positive, got {t_imp}");
+        assert!(t_trans >= 0.0, "t_trans must be non-negative, got {t_trans}");
+        let sp = t_crs / t_imp;
+        let tt = t_trans / t_crs;
+        let r = if tt > 0.0 { sp / tt } else { f64::INFINITY };
+        Self { sp, tt, r }
+    }
+
+    /// Break-even iteration count: how many SpMVs must run before the
+    /// transformed format has repaid `t_trans` (∞ if there is no speedup).
+    /// This is the §2.2 "iteration time needed to take advantage of the
+    /// transformation effect".
+    pub fn break_even_iterations(&self) -> f64 {
+        if self.sp <= 1.0 {
+            f64::INFINITY
+        } else {
+            // Each iteration saves t_crs·(1 − 1/SP); transform costs t_crs·TT.
+            self.tt / (1.0 - 1.0 / self.sp)
+        }
+    }
+
+    /// Total time (in units of `t_crs`) for `iters` SpMVs including the
+    /// transformation — the quantity an iterative solver actually pays.
+    pub fn total_cost(&self, iters: usize) -> f64 {
+        self.tt + iters as Value / self.sp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_calibration_example() {
+        // "a 10x speedup … if and only if the transformation time to SpMV
+        // in CRS is 10" defines R = 1.0.
+        let r = Ratios::from_times(1.0, 0.1, 10.0);
+        assert!((r.sp - 10.0).abs() < 1e-12);
+        assert!((r.tt - 10.0).abs() < 1e-12);
+        assert!((r.r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn free_transform_has_infinite_r() {
+        let r = Ratios::from_times(1.0, 0.5, 0.0);
+        assert_eq!(r.tt, 0.0);
+        assert!(r.r.is_infinite());
+        assert_eq!(r.break_even_iterations(), 0.0);
+    }
+
+    #[test]
+    fn break_even_matches_discussion() {
+        // 1000x speedup, R = 1 -> TT = 1000 -> ~1000 iterations needed
+        // (the §2.2 "enormous iteration time" example).
+        let r = Ratios::from_times(1.0, 1e-3, 1000.0);
+        assert!((r.r - 1.0).abs() < 1e-9);
+        let be = r.break_even_iterations();
+        assert!((be - 1001.0).abs() < 1.0, "break-even {be}");
+    }
+
+    #[test]
+    fn slowdown_never_breaks_even() {
+        let r = Ratios::from_times(1.0, 2.0, 0.5);
+        assert!(r.sp < 1.0);
+        assert!(r.break_even_iterations().is_infinite());
+    }
+
+    #[test]
+    fn total_cost_crossover() {
+        // SP=2, TT=4: transformed path wins once iters/1 > iters/2 + 4,
+        // i.e. after 8 iterations.
+        let r = Ratios::from_times(1.0, 0.5, 4.0);
+        let baseline = |iters: usize| iters as f64; // CRS cost in t_crs units
+        assert!(r.total_cost(7) > baseline(7));
+        assert!(r.total_cost(9) < baseline(9));
+    }
+
+    #[test]
+    #[should_panic(expected = "t_crs must be positive")]
+    fn rejects_zero_tcrs() {
+        let _ = Ratios::from_times(0.0, 1.0, 1.0);
+    }
+}

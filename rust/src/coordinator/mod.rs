@@ -1,0 +1,335 @@
+//! The L3 coordinator: matrix registry + online AT routing + serving loop.
+//!
+//! This is the long-lived process a numerical application talks to. It
+//! owns:
+//!
+//! * the machine's installed **tuning table** (offline-phase output),
+//! * the **memory policy** bounding transformed copies,
+//! * a **matrix registry** with per-matrix AT lifecycle state
+//!   ([`registry`]),
+//! * the optional **XLA runtime** so ELL SpMV can execute through the
+//!   AOT-compiled Pallas artifact instead of the native kernel,
+//! * and a channel-served **request loop** ([`server`]) so concurrent
+//!   clients (solvers, benches, the CLI) share one coordinator.
+//!
+//! Python never appears here: the tuning table is a text file, the XLA
+//! artifacts are pre-compiled HLO.
+
+pub mod registry;
+pub mod server;
+
+pub use registry::{AtState, EntryStats, MatrixEntry};
+pub use server::{Client, Request, Server, SolverKind};
+
+use crate::autotune::online::{decide, TuningData};
+use crate::autotune::MemoryPolicy;
+use crate::formats::{Csr, FormatKind, SparseMatrix};
+use crate::machine::MatrixShape;
+use crate::runtime::XlaHandle;
+use crate::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use crate::{Result, Value};
+use std::collections::HashMap;
+
+/// How the coordinator executes ELL SpMV.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EllExec {
+    /// Native rust kernels (Figs. 3–4).
+    Native,
+    /// Through the AOT XLA artifact when a shape bucket fits, falling back
+    /// to native otherwise.
+    XlaPreferred,
+}
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    /// The installed tuning table.
+    pub tuning: TuningData,
+    /// Memory policy for transformed copies.
+    pub policy: MemoryPolicy,
+    /// Threads for the native parallel kernels.
+    pub threads: usize,
+    /// ELL execution preference.
+    pub ell_exec: EllExec,
+}
+
+impl CoordinatorConfig {
+    /// Config with an explicit tuning table and defaults elsewhere.
+    pub fn new(tuning: TuningData) -> Self {
+        Self {
+            tuning,
+            policy: MemoryPolicy::default(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            ell_exec: EllExec::Native,
+        }
+    }
+}
+
+/// The coordinator. Single-threaded state; wrap in [`Server`] for
+/// concurrent access.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    xla: Option<XlaHandle>,
+    entries: HashMap<String, MatrixEntry>,
+    ws: Workspace,
+}
+
+impl Coordinator {
+    /// New coordinator without an XLA runtime.
+    pub fn new(cfg: CoordinatorConfig) -> Self {
+        Self { cfg, xla: None, entries: HashMap::new(), ws: Workspace::new() }
+    }
+
+    /// Attach a handle to the XLA artifact service
+    /// ([`crate::runtime::XlaService`]).
+    pub fn with_xla(mut self, rt: XlaHandle) -> Self {
+        self.xla = Some(rt);
+        self
+    }
+
+    /// The active tuning table.
+    pub fn tuning(&self) -> &TuningData {
+        &self.cfg.tuning
+    }
+
+    /// Register a matrix under `name`, running the §2.2 online phase
+    /// (compute `D_mat`, compare to `D*`, record the decision). The
+    /// transformation itself is deferred to the first SpMV so registration
+    /// stays O(n).
+    pub fn register(&mut self, name: &str, csr: Csr) -> Result<EntryStats> {
+        anyhow::ensure!(
+            !self.entries.contains_key(name),
+            "matrix '{name}' already registered"
+        );
+        let mut decision = decide(&csr, &self.cfg.tuning);
+        // Memory policy veto (the OpenATLib policy hook).
+        if decision.transform {
+            let shape = MatrixShape::of(&csr);
+            if !self
+                .cfg
+                .policy
+                .admits(&shape, decision.chosen.required_format())
+            {
+                decision.transform = false;
+                decision.chosen = Implementation::CsrSeq;
+            }
+        }
+        let entry = MatrixEntry::new(name.to_string(), csr, decision);
+        let stats = entry.stats();
+        self.entries.insert(name.to_string(), entry);
+        Ok(stats)
+    }
+
+    /// Remove a matrix, returning whether it existed.
+    pub fn evict(&mut self, name: &str) -> bool {
+        self.entries.remove(name).is_some()
+    }
+
+    /// Names of all registered matrices.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// `y = A·x` for a registered matrix, routed through the AT decision.
+    /// The transformation runs (and is cached) on the first call that
+    /// needs it.
+    pub fn spmv(&mut self, name: &str, x: &[Value]) -> Result<Vec<Value>> {
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}'"))?;
+        anyhow::ensure!(
+            x.len() == entry.csr.n_cols(),
+            "x length {} != n_cols {}",
+            x.len(),
+            entry.csr.n_cols()
+        );
+        let mut y = vec![0.0; entry.csr.n_rows()];
+
+        // Trigger the deferred transformation if decided and not yet done.
+        if entry.decision.transform && matches!(entry.state, AtState::Baseline) {
+            let imp = entry.decision.chosen;
+            let t0 = std::time::Instant::now();
+            match AnyMatrix::prepare(&entry.csr, imp, self.cfg.policy.ell_budget()) {
+                Ok(m) => {
+                    entry.state = AtState::Transformed {
+                        imp,
+                        matrix: m,
+                        t_trans: t0.elapsed().as_secs_f64(),
+                    };
+                }
+                Err(_) => {
+                    // Transformation failed (e.g. ELL overflow): pin to CRS.
+                    entry.decision.transform = false;
+                    entry.decision.chosen = Implementation::CsrSeq;
+                }
+            }
+        }
+
+        let t0 = std::time::Instant::now();
+        let transformed = match &entry.state {
+            AtState::Baseline => {
+                crate::spmv::csr_row_par(&entry.csr, x, &mut y, self.cfg.threads);
+                false
+            }
+            AtState::Transformed { imp, matrix, .. } => {
+                // Prefer the XLA artifact path for ELL when configured.
+                let mut served = false;
+                if self.cfg.ell_exec == EllExec::XlaPreferred {
+                    if let (Some(rt), AnyMatrix::Ell(e)) = (&self.xla, matrix) {
+                        if rt.has_bucket(e.n_rows(), e.bandwidth) {
+                            let cols: Vec<i32> =
+                                e.col_idx.iter().map(|&c| c as i32).collect();
+                            let out =
+                                rt.ell_spmv(e.n_rows(), e.bandwidth, &e.values, &cols, x)?;
+                            y.copy_from_slice(&out);
+                            served = true;
+                        }
+                    }
+                }
+                if !served {
+                    kernels::run(*imp, matrix, x, &mut y, self.cfg.threads, &mut self.ws)?;
+                }
+                true
+            }
+        };
+        entry.record_call(transformed, t0.elapsed().as_secs_f64());
+        Ok(y)
+    }
+
+    /// Batched `Y = A·X` for a registered matrix: `xs` are multiple
+    /// right-hand vectors served under a single routing decision and a
+    /// single transformation trigger — the SpMM-style request shape a
+    /// serving deployment batches into. Returns one output per input.
+    pub fn spmv_batch(&mut self, name: &str, xs: &[Vec<Value>]) -> Result<Vec<Vec<Value>>> {
+        let mut out = Vec::with_capacity(xs.len());
+        for x in xs {
+            out.push(self.spmv(name, x)?);
+        }
+        Ok(out)
+    }
+
+    /// Per-matrix stats rows, sorted by name.
+    pub fn stats(&self) -> Vec<EntryStats> {
+        let mut rows: Vec<EntryStats> = self.entries.values().map(|e| e.stats()).collect();
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        rows
+    }
+
+    /// Total extra bytes held by transformed copies (memory-policy
+    /// observability).
+    pub fn extra_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.extra_bytes()).sum()
+    }
+
+    /// The format a registered matrix is currently served from.
+    pub fn serving_format(&self, name: &str) -> Option<FormatKind> {
+        self.entries.get(name).map(|e| match &e.state {
+            AtState::Baseline => FormatKind::Csr,
+            AtState::Transformed { matrix, .. } => matrix.kind(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::{banded_circulant, generate, spec_by_name};
+    use crate::rng::Rng;
+
+    fn tuning(d_star: Option<f64>) -> TuningData {
+        TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star,
+        }
+    }
+
+    fn coord(d_star: Option<f64>) -> Coordinator {
+        let mut cfg = CoordinatorConfig::new(tuning(d_star));
+        cfg.threads = 2;
+        Coordinator::new(cfg)
+    }
+
+    #[test]
+    fn register_spmv_roundtrip_matches_reference() {
+        let mut rng = Rng::new(1);
+        let a = crate::matrixgen::random_csr(&mut rng, 50, 50, 0.1);
+        let x: Vec<Value> = (0..50).map(|i| (i as f64 * 0.31).cos()).collect();
+        let mut want = vec![0.0; 50];
+        a.spmv(&x, &mut want);
+        let mut c = coord(Some(3.1));
+        c.register("m", a).unwrap();
+        let y = c.spmv("m", &x).unwrap();
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn banded_matrix_gets_transformed_lazily() {
+        let mut rng = Rng::new(2);
+        let a = banded_circulant(&mut rng, 128, &[-1, 0, 1]);
+        let mut c = coord(Some(3.1));
+        c.register("band", a).unwrap();
+        assert_eq!(c.serving_format("band"), Some(FormatKind::Csr), "lazy until first call");
+        let x = vec![1.0; 128];
+        c.spmv("band", &x).unwrap();
+        assert_eq!(c.serving_format("band"), Some(FormatKind::Ell));
+        assert!(c.extra_bytes() > 0);
+        let s = &c.stats()[0];
+        assert_eq!(s.transformed_calls, 1);
+        assert!(s.t_trans > 0.0);
+    }
+
+    #[test]
+    fn high_dmat_matrix_stays_on_crs() {
+        let spec = spec_by_name("memplus").unwrap();
+        let a = generate(&spec, 5, 0.02);
+        let n = a.n_rows();
+        let mut c = coord(Some(0.1)); // SR16000-style threshold
+        c.register("memplus", a).unwrap();
+        let x = vec![1.0; n];
+        c.spmv("memplus", &x).unwrap();
+        assert_eq!(c.serving_format("memplus"), Some(FormatKind::Csr));
+        assert_eq!(c.extra_bytes(), 0);
+    }
+
+    #[test]
+    fn memory_policy_vetoes_transformation() {
+        let mut rng = Rng::new(3);
+        let a = banded_circulant(&mut rng, 256, &[-1, 0, 1]);
+        let mut cfg = CoordinatorConfig::new(tuning(Some(3.1)));
+        cfg.policy = MemoryPolicy::with_budget(16); // absurdly tight
+        let mut c = Coordinator::new(cfg);
+        c.register("band", a).unwrap();
+        let x = vec![1.0; 256];
+        c.spmv("band", &x).unwrap();
+        assert_eq!(c.serving_format("band"), Some(FormatKind::Csr));
+    }
+
+    #[test]
+    fn duplicate_and_unknown_names_rejected() {
+        let mut c = coord(None);
+        c.register("a", Csr::identity(4)).unwrap();
+        assert!(c.register("a", Csr::identity(4)).is_err());
+        assert!(c.spmv("nope", &[1.0; 4]).is_err());
+        assert!(c.spmv("a", &[1.0; 3]).is_err(), "dimension mismatch");
+        assert!(c.evict("a"));
+        assert!(!c.evict("a"));
+    }
+
+    #[test]
+    fn stats_sorted_and_complete() {
+        let mut c = coord(Some(3.1));
+        c.register("zz", Csr::identity(8)).unwrap();
+        c.register("aa", Csr::identity(8)).unwrap();
+        let names: Vec<String> = c.stats().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names, vec!["aa", "zz"]);
+        assert_eq!(c.names(), vec!["aa", "zz"]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Matrix registry: per-matrix auto-tuning lifecycle state.
+//!
+//! Every registered matrix walks the state machine
+//!
+//! ```text
+//! Registered --(online AT decision at register time)--> decision recorded
+//!    |                                                        |
+//!    |  first SpMV, decision = keep CRS                       | first SpMV, decision = transform
+//!    v                                                        v
+//! Baseline (CRS kernels)                        Transformed { imp, copy, t_trans }
+//! ```
+//!
+//! plus amortisation accounting: how many calls the transformed copy has
+//! served and whether the transformation cost has been repaid — the §2.2
+//! break-even analysis made observable.
+
+use crate::autotune::online::OnlineDecision;
+use crate::formats::Csr;
+use crate::spmv::{AnyMatrix, Implementation};
+
+/// Execution state of one registered matrix.
+pub enum AtState {
+    /// Serving CRS (either the decision said so, or the transformation has
+    /// not been triggered yet).
+    Baseline,
+    /// A transformed copy is live.
+    Transformed {
+        /// Implementation the copy serves.
+        imp: Implementation,
+        /// The transformed data.
+        matrix: AnyMatrix,
+        /// Seconds the transformation took (amortisation numerator).
+        t_trans: f64,
+    },
+}
+
+/// One registered matrix with its AT lifecycle.
+pub struct MatrixEntry {
+    /// Registry key.
+    pub name: String,
+    /// The CRS original (always kept — the §2.2 memory-policy default).
+    pub csr: Csr,
+    /// The online decision taken at registration.
+    pub decision: OnlineDecision,
+    /// Current execution state.
+    pub state: AtState,
+    /// Total SpMV calls served.
+    pub calls: u64,
+    /// Calls served by the transformed copy.
+    pub transformed_calls: u64,
+    /// Measured seconds of CRS SpMV (running mean), for amortisation.
+    pub t_crs_mean: f64,
+    /// Measured seconds of transformed SpMV (running mean).
+    pub t_imp_mean: f64,
+}
+
+impl MatrixEntry {
+    /// New entry in the baseline state.
+    pub fn new(name: String, csr: Csr, decision: OnlineDecision) -> Self {
+        Self {
+            name,
+            csr,
+            decision,
+            state: AtState::Baseline,
+            calls: 0,
+            transformed_calls: 0,
+            t_crs_mean: 0.0,
+            t_imp_mean: 0.0,
+        }
+    }
+
+    /// Transformation seconds paid so far (0 while baseline).
+    pub fn t_trans(&self) -> f64 {
+        match &self.state {
+            AtState::Baseline => 0.0,
+            AtState::Transformed { t_trans, .. } => *t_trans,
+        }
+    }
+
+    /// Whether the transformation cost has been repaid by the measured
+    /// per-call saving: `transformed_calls · (t_crs − t_imp) ≥ t_trans`.
+    pub fn amortized(&self) -> bool {
+        match &self.state {
+            AtState::Baseline => true,
+            AtState::Transformed { t_trans, .. } => {
+                let saving = (self.t_crs_mean - self.t_imp_mean).max(0.0);
+                self.transformed_calls as f64 * saving >= *t_trans
+            }
+        }
+    }
+
+    /// Estimated calls until break-even (0 when already amortised; ∞ when
+    /// the transformed kernel is not actually faster).
+    pub fn calls_to_break_even(&self) -> f64 {
+        match &self.state {
+            AtState::Baseline => 0.0,
+            AtState::Transformed { t_trans, .. } => {
+                let saving = self.t_crs_mean - self.t_imp_mean;
+                if saving <= 0.0 {
+                    return f64::INFINITY;
+                }
+                (t_trans / saving - self.transformed_calls as f64).max(0.0)
+            }
+        }
+    }
+
+    /// Record a served call.
+    pub fn record_call(&mut self, transformed: bool, seconds: f64) {
+        self.calls += 1;
+        if transformed {
+            self.transformed_calls += 1;
+            let k = self.transformed_calls as f64;
+            self.t_imp_mean += (seconds - self.t_imp_mean) / k;
+        } else {
+            let k = (self.calls - self.transformed_calls) as f64;
+            self.t_crs_mean += (seconds - self.t_crs_mean) / k;
+        }
+    }
+
+    /// Extra memory held by the transformed copy, bytes.
+    pub fn extra_bytes(&self) -> usize {
+        match &self.state {
+            AtState::Baseline => 0,
+            AtState::Transformed { matrix, .. } => matrix.memory_bytes(),
+        }
+    }
+}
+
+/// Summary row for reporting (`stats` requests).
+#[derive(Clone, Debug)]
+pub struct EntryStats {
+    /// Registry key.
+    pub name: String,
+    /// Matrix rows.
+    pub n: usize,
+    /// Matrix non-zeros.
+    pub nnz: usize,
+    /// `D_mat`.
+    pub d_mat: f64,
+    /// The implementation currently serving.
+    pub serving: Implementation,
+    /// Total calls.
+    pub calls: u64,
+    /// Transformed calls.
+    pub transformed_calls: u64,
+    /// Transformation seconds paid.
+    pub t_trans: f64,
+    /// Amortised yet?
+    pub amortized: bool,
+    /// Extra bytes held.
+    pub extra_bytes: usize,
+}
+
+impl MatrixEntry {
+    /// Produce the report row.
+    pub fn stats(&self) -> EntryStats {
+        use crate::formats::SparseMatrix as _;
+        EntryStats {
+            name: self.name.clone(),
+            n: self.csr.n_rows(),
+            nnz: self.csr.nnz(),
+            d_mat: self.decision.d_mat,
+            serving: match &self.state {
+                AtState::Baseline => Implementation::CsrSeq,
+                AtState::Transformed { imp, .. } => *imp,
+            },
+            calls: self.calls,
+            transformed_calls: self.transformed_calls,
+            t_trans: self.t_trans(),
+            amortized: self.amortized(),
+            extra_bytes: self.extra_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::Implementation;
+
+    fn decision(transform: bool) -> OnlineDecision {
+        OnlineDecision {
+            d_mat: 0.1,
+            d_star: 1.0,
+            transform,
+            chosen: if transform {
+                Implementation::EllRowOuter
+            } else {
+                Implementation::CsrSeq
+            },
+        }
+    }
+
+    #[test]
+    fn baseline_is_trivially_amortized() {
+        let e = MatrixEntry::new("m".into(), Csr::identity(4), decision(false));
+        assert!(e.amortized());
+        assert_eq!(e.t_trans(), 0.0);
+        assert_eq!(e.extra_bytes(), 0);
+        assert_eq!(e.calls_to_break_even(), 0.0);
+    }
+
+    #[test]
+    fn amortization_crossover() {
+        let mut e = MatrixEntry::new("m".into(), Csr::identity(4), decision(true));
+        // Pretend: CRS costs 1ms/call, transformed 0.1ms, transform 5ms.
+        e.record_call(false, 1e-3);
+        e.state = AtState::Transformed {
+            imp: Implementation::EllRowOuter,
+            matrix: AnyMatrix::Csr(Csr::identity(4)),
+            t_trans: 5e-3,
+        };
+        for _ in 0..5 {
+            e.record_call(true, 1e-4);
+            assert!(!e.amortized(), "not yet at {} calls", e.transformed_calls);
+        }
+        let before = e.calls_to_break_even();
+        assert!(before > 0.0 && before.is_finite());
+        e.record_call(true, 1e-4); // 6 * 0.9ms = 5.4ms >= 5ms
+        assert!(e.amortized());
+        assert_eq!(e.calls_to_break_even(), 0.0);
+    }
+
+    #[test]
+    fn never_amortizes_when_not_faster() {
+        let mut e = MatrixEntry::new("m".into(), Csr::identity(4), decision(true));
+        e.record_call(false, 1e-4);
+        e.state = AtState::Transformed {
+            imp: Implementation::EllRowOuter,
+            matrix: AnyMatrix::Csr(Csr::identity(4)),
+            t_trans: 1e-3,
+        };
+        e.record_call(true, 2e-4); // slower than CRS
+        assert!(!e.amortized());
+        assert!(e.calls_to_break_even().is_infinite());
+    }
+
+    #[test]
+    fn stats_row_reflects_state() {
+        let mut e = MatrixEntry::new("m".into(), Csr::identity(4), decision(true));
+        e.record_call(false, 1e-3);
+        let s = e.stats();
+        assert_eq!(s.serving, Implementation::CsrSeq);
+        assert_eq!(s.calls, 1);
+        e.state = AtState::Transformed {
+            imp: Implementation::EllRowInner,
+            matrix: AnyMatrix::Csr(Csr::identity(4)),
+            t_trans: 1e-3,
+        };
+        assert_eq!(e.stats().serving, Implementation::EllRowInner);
+        assert!(e.stats().extra_bytes > 0);
+    }
+}

@@ -1,0 +1,394 @@
+//! Channel-served request loop around [`Coordinator`].
+//!
+//! The environment has no async runtime, so the serving layer is a plain
+//! worker thread draining an MPSC queue — the same request/response
+//! contract a tokio service would expose, without the dependency.
+//! [`Client`] is cheap to clone; every request carries its own response
+//! channel (rendezvous style), so concurrent clients interleave safely
+//! and back-pressure falls out of the bounded queue.
+
+use super::{Coordinator, EntryStats};
+use crate::formats::Csr;
+use crate::solver::{SolveStats, SolverOptions};
+use crate::{Result, Value};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Solver selection for [`Request::Solve`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Conjugate Gradient (SPD systems).
+    Cg,
+    /// BiCGStab (general systems).
+    BiCgStab,
+    /// GMRES(30).
+    Gmres,
+    /// Damped Jacobi (ω = 1).
+    Jacobi,
+    /// Jacobi-preconditioned CG.
+    Pcg,
+}
+
+impl SolverKind {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cg" => Some(Self::Cg),
+            "bicgstab" | "bicg" => Some(Self::BiCgStab),
+            "gmres" => Some(Self::Gmres),
+            "jacobi" => Some(Self::Jacobi),
+            "pcg" => Some(Self::Pcg),
+            _ => None,
+        }
+    }
+}
+
+/// Requests the server accepts.
+pub enum Request {
+    /// Register a matrix under a name.
+    Register {
+        /// Registry key.
+        name: String,
+        /// The matrix (CRS).
+        csr: Csr,
+        /// Response: stats row at registration.
+        resp: mpsc::Sender<Result<EntryStats>>,
+    },
+    /// `y = A·x`.
+    Spmv {
+        /// Registry key.
+        name: String,
+        /// Input vector.
+        x: Vec<Value>,
+        /// Response: y.
+        resp: mpsc::Sender<Result<Vec<Value>>>,
+    },
+    /// Solve `A·x = b` with the AT-routed operator.
+    Solve {
+        /// Registry key.
+        name: String,
+        /// Right-hand side.
+        b: Vec<Value>,
+        /// Solver to use.
+        solver: SolverKind,
+        /// Options.
+        opts: SolverOptions,
+        /// Response: (solution, stats).
+        resp: mpsc::Sender<Result<(Vec<Value>, SolveStats)>>,
+    },
+    /// Batched `Y = A·X` (multiple right-hand sides, one decision).
+    SpmvBatch {
+        /// Registry key.
+        name: String,
+        /// Input vectors.
+        xs: Vec<Vec<Value>>,
+        /// Response: one output per input.
+        resp: mpsc::Sender<Result<Vec<Vec<Value>>>>,
+    },
+    /// All stats rows.
+    Stats {
+        /// Response channel.
+        resp: mpsc::Sender<Vec<EntryStats>>,
+    },
+    /// Drop a matrix.
+    Evict {
+        /// Registry key.
+        name: String,
+        /// Response: whether it existed.
+        resp: mpsc::Sender<bool>,
+    },
+    /// Stop the server loop.
+    Shutdown,
+}
+
+/// Cloneable handle to a running [`Server`].
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::SyncSender<Request>,
+}
+
+impl Client {
+    /// Register a matrix.
+    pub fn register(&self, name: &str, csr: Csr) -> Result<EntryStats> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Register { name: name.into(), csr, resp })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
+    }
+
+    /// `y = A·x`.
+    pub fn spmv(&self, name: &str, x: Vec<Value>) -> Result<Vec<Value>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Spmv { name: name.into(), x, resp })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
+    }
+
+    /// Solve `A·x = b`.
+    pub fn solve(
+        &self,
+        name: &str,
+        b: Vec<Value>,
+        solver: SolverKind,
+        opts: SolverOptions,
+    ) -> Result<(Vec<Value>, SolveStats)> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Solve { name: name.into(), b, solver, opts, resp })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
+    }
+
+    /// Batched `Y = A·X`.
+    pub fn spmv_batch(&self, name: &str, xs: Vec<Vec<Value>>) -> Result<Vec<Vec<Value>>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::SpmvBatch { name: name.into(), xs, resp })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
+    }
+
+    /// Fetch all stats rows.
+    pub fn stats(&self) -> Result<Vec<EntryStats>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Stats { resp })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))
+    }
+
+    /// Evict a matrix.
+    pub fn evict(&self, name: &str) -> Result<bool> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Evict { name: name.into(), resp })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))
+    }
+}
+
+/// The worker-thread server owning a [`Coordinator`].
+pub struct Server {
+    tx: mpsc::SyncSender<Request>,
+    handle: Option<JoinHandle<Coordinator>>,
+}
+
+/// An adapter letting the solvers run against a coordinator-registered
+/// matrix (each `apply` is a routed SpMV).
+struct CoordOp<'c> {
+    coord: &'c mut Coordinator,
+    name: String,
+    n: usize,
+}
+
+impl crate::solver::SpmvOp for CoordOp<'_> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&mut self, x: &[Value], y: &mut [Value]) -> Result<()> {
+        let out = self.coord.spmv(&self.name, x)?;
+        y.copy_from_slice(&out);
+        Ok(())
+    }
+
+    fn diagonal(&self) -> Result<Vec<Value>> {
+        let csr = &self
+            .coord
+            .entries
+            .get(&self.name)
+            .ok_or_else(|| anyhow::anyhow!("unknown matrix"))?
+            .csr;
+        crate::solver::SpmvOp::diagonal(csr)
+    }
+}
+
+impl Server {
+    /// Spawn the server with a bounded queue of `depth` requests.
+    pub fn spawn(coord: Coordinator, depth: usize) -> (Self, Client) {
+        let (tx, rx) = mpsc::sync_channel::<Request>(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            let mut coord = coord;
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Register { name, csr, resp } => {
+                        let _ = resp.send(coord.register(&name, csr));
+                    }
+                    Request::Spmv { name, x, resp } => {
+                        let _ = resp.send(coord.spmv(&name, &x));
+                    }
+                    Request::Solve { name, b, solver, opts, resp } => {
+                        let _ = resp.send(Self::do_solve(&mut coord, &name, &b, solver, &opts));
+                    }
+                    Request::SpmvBatch { name, xs, resp } => {
+                        let _ = resp.send(coord.spmv_batch(&name, &xs));
+                    }
+                    Request::Stats { resp } => {
+                        let _ = resp.send(coord.stats());
+                    }
+                    Request::Evict { name, resp } => {
+                        let _ = resp.send(coord.evict(&name));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+            coord
+        });
+        let client = Client { tx: tx.clone() };
+        (Self { tx, handle: Some(handle) }, client)
+    }
+
+    fn do_solve(
+        coord: &mut Coordinator,
+        name: &str,
+        b: &[Value],
+        solver: SolverKind,
+        opts: &SolverOptions,
+    ) -> Result<(Vec<Value>, SolveStats)> {
+        use crate::formats::SparseMatrix as _;
+        let n = coord
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}'"))?
+            .csr
+            .n_rows();
+        anyhow::ensure!(b.len() == n, "b length {} != n {}", b.len(), n);
+        let mut op = CoordOp { coord, name: name.to_string(), n };
+        let mut x = vec![0.0; n];
+        let stats = match solver {
+            SolverKind::Cg => crate::solver::cg(&mut op, b, &mut x, opts)?,
+            SolverKind::BiCgStab => crate::solver::bicgstab(&mut op, b, &mut x, opts)?,
+            SolverKind::Gmres => crate::solver::gmres(&mut op, b, &mut x, 30, opts)?,
+            SolverKind::Jacobi => crate::solver::jacobi(&mut op, b, &mut x, 1.0, opts)?,
+            SolverKind::Pcg => crate::solver::pcg(&mut op, b, &mut x, opts)?,
+        };
+        Ok((x, stats))
+    }
+
+    /// Stop the loop and recover the coordinator (with all its state).
+    pub fn shutdown(mut self) -> Coordinator {
+        let _ = self.tx.send(Request::Shutdown);
+        self.handle
+            .take()
+            .expect("shutdown called once")
+            .join()
+            .expect("server thread panicked")
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = self.tx.send(Request::Shutdown);
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::online::TuningData;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::matrixgen::make_spd;
+    use crate::rng::Rng;
+    use crate::spmv::Implementation;
+
+    fn server() -> (Server, Client) {
+        let tuning = TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        };
+        let mut cfg = CoordinatorConfig::new(tuning);
+        cfg.threads = 2;
+        Server::spawn(Coordinator::new(cfg), 16)
+    }
+
+    #[test]
+    fn request_response_roundtrip() {
+        let (srv, client) = server();
+        let mut rng = Rng::new(1);
+        let a = crate::matrixgen::random_csr(&mut rng, 30, 30, 0.2);
+        let mut want = vec![0.0; 30];
+        use crate::formats::SparseMatrix as _;
+        let x: Vec<Value> = (0..30).map(|i| (i as f64).sin()).collect();
+        a.spmv(&x, &mut want);
+
+        client.register("m", a).unwrap();
+        let y = client.spmv("m", x).unwrap();
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].calls, 1);
+        let coord = srv.shutdown();
+        assert_eq!(coord.names(), vec!["m"]);
+    }
+
+    #[test]
+    fn solve_through_server() {
+        let (_srv, client) = server();
+        let mut rng = Rng::new(2);
+        let a = make_spd(&crate::matrixgen::random_csr(&mut rng, 60, 60, 0.08));
+        let x_true: Vec<Value> = (0..60).map(|i| ((i + 1) as f64 * 0.17).sin()).collect();
+        let mut b = vec![0.0; 60];
+        use crate::formats::SparseMatrix as _;
+        a.spmv(&x_true, &mut b);
+        client.register("sys", a).unwrap();
+        let (x, stats) = client
+            .solve("sys", b, SolverKind::Cg, SolverOptions::default())
+            .unwrap();
+        assert!(stats.converged);
+        let err: f64 = x.iter().zip(&x_true).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(err < 1e-5, "error {err}");
+        // The coordinator served every solver SpMV.
+        let rows = client.stats().unwrap();
+        assert_eq!(rows[0].calls as usize, stats.spmv_calls);
+    }
+
+    #[test]
+    fn concurrent_clients_interleave() {
+        let (_srv, client) = server();
+        client.register("id", crate::formats::Csr::identity(16)).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..25 {
+                    let x = vec![(t * 100 + k) as f64; 16];
+                    let y = c.spmv("id", x.clone()).unwrap();
+                    assert_eq!(y, x, "identity must echo");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(client.stats().unwrap()[0].calls, 100);
+    }
+
+    #[test]
+    fn errors_propagate_to_clients() {
+        let (_srv, client) = server();
+        assert!(client.spmv("ghost", vec![1.0]).is_err());
+        assert!(client
+            .solve("ghost", vec![1.0], SolverKind::Cg, SolverOptions::default())
+            .is_err());
+        assert!(!client.evict("ghost").unwrap());
+    }
+
+    #[test]
+    fn solver_kind_parse() {
+        assert_eq!(SolverKind::parse("cg"), Some(SolverKind::Cg));
+        assert_eq!(SolverKind::parse("BICGSTAB"), Some(SolverKind::BiCgStab));
+        assert_eq!(SolverKind::parse("gmres"), Some(SolverKind::Gmres));
+        assert_eq!(SolverKind::parse("jacobi"), Some(SolverKind::Jacobi));
+        assert_eq!(SolverKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,218 @@
+//! Block CSR (BCSR) — register-blocked CSR with fixed `r × c` dense blocks.
+//!
+//! The paper names "transformation to other formats, such as BCSR, which
+//! enables cache blocking" as future work (§5); it is implemented here as a
+//! first-class extension so the ablation benches can compare it against ELL
+//! on the same auto-tuning machinery.
+
+use super::{FormatKind, SparseMatrix};
+use crate::formats::Csr;
+use crate::{Index, Result, Value};
+
+/// BCSR sparse matrix: a CSR structure over dense `r × c` blocks. Blocks are
+/// stored row-major within `values` (`block_nnz * r * c` scalars); logical
+/// rows/cols that don't divide the block size are zero-padded.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bcsr {
+    n_rows: usize,
+    n_cols: usize,
+    /// Block height `r`.
+    pub br: usize,
+    /// Block width `c`.
+    pub bc: usize,
+    /// Block-row pointers, length `ceil(n_rows/br) + 1`.
+    pub block_row_ptr: Vec<usize>,
+    /// Block-column index per stored block.
+    pub block_col_idx: Vec<Index>,
+    /// Block payloads, row-major `br*bc` scalars per block.
+    pub values: Vec<Value>,
+    /// Logical (unpadded) nnz of the source matrix.
+    logical_nnz: usize,
+}
+
+impl Bcsr {
+    /// Blocked row count.
+    pub fn n_block_rows(&self) -> usize {
+        self.block_row_ptr.len() - 1
+    }
+
+    /// Number of stored blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.block_col_idx.len()
+    }
+
+    /// Fill ratio: stored scalars / logical nnz (≥ 1.0; 1.0 = perfect blocks).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.logical_nnz == 0 {
+            1.0
+        } else {
+            (self.n_blocks() * self.br * self.bc) as f64 / self.logical_nnz as f64
+        }
+    }
+
+    /// Build from CSR with block shape `br × bc`.
+    pub fn from_csr(a: &Csr, br: usize, bc: usize) -> Result<Self> {
+        anyhow::ensure!(br > 0 && bc > 0, "block dims must be positive");
+        use crate::formats::SparseMatrix as _;
+        let n_rows = a.n_rows();
+        let n_cols = a.n_cols();
+        let nbr = n_rows.div_ceil(br);
+        let mut block_row_ptr = vec![0usize; nbr + 1];
+        let mut block_col_idx: Vec<Index> = Vec::new();
+        let mut values: Vec<Value> = Vec::new();
+
+        // Per block-row: discover populated block columns, then fill.
+        let mut touched: Vec<Index> = Vec::new();
+        for bi in 0..nbr {
+            touched.clear();
+            let r_lo = bi * br;
+            let r_hi = (r_lo + br).min(n_rows);
+            for i in r_lo..r_hi {
+                for (c, _) in a.row(i) {
+                    let bj = c / bc as Index;
+                    if let Err(pos) = touched.binary_search(&bj) {
+                        touched.insert(pos, bj);
+                    }
+                }
+            }
+            let base_block = block_col_idx.len();
+            block_col_idx.extend_from_slice(&touched);
+            values.resize(values.len() + touched.len() * br * bc, 0.0);
+            for i in r_lo..r_hi {
+                for (c, v) in a.row(i) {
+                    let bj = c / bc as Index;
+                    let slot = base_block + touched.binary_search(&bj).unwrap();
+                    let local = (i - r_lo) * bc + (c as usize - bj as usize * bc);
+                    values[slot * br * bc + local] += v;
+                }
+            }
+            block_row_ptr[bi + 1] = block_col_idx.len();
+        }
+        Ok(Self {
+            n_rows,
+            n_cols,
+            br,
+            bc,
+            block_row_ptr,
+            block_col_idx,
+            values,
+            logical_nnz: a.nnz(),
+        })
+    }
+}
+
+impl SparseMatrix for Bcsr {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.logical_nnz
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<Value>()
+            + self.block_col_idx.len() * std::mem::size_of::<Index>()
+            + self.block_row_ptr.len() * std::mem::size_of::<usize>()
+    }
+
+    /// Register-blocked SpMV: each block contributes a small dense
+    /// `br × bc` mat-vec kept in registers.
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        assert_eq!(y.len(), self.n_rows, "y length");
+        y.fill(0.0);
+        let (br, bc) = (self.br, self.bc);
+        for bi in 0..self.n_block_rows() {
+            let r_lo = bi * br;
+            let r_cap = (self.n_rows - r_lo).min(br);
+            for s in self.block_row_ptr[bi]..self.block_row_ptr[bi + 1] {
+                let bj = self.block_col_idx[s] as usize;
+                let c_lo = bj * bc;
+                let c_cap = (self.n_cols - c_lo).min(bc);
+                let blk = &self.values[s * br * bc..(s + 1) * br * bc];
+                for di in 0..r_cap {
+                    let mut acc = 0.0;
+                    let row = &blk[di * bc..di * bc + c_cap];
+                    for (dj, &v) in row.iter().enumerate() {
+                        acc += v * x[c_lo + dj];
+                    }
+                    y[r_lo + di] += acc;
+                }
+            }
+        }
+    }
+
+    fn kind(&self) -> FormatKind {
+        FormatKind::Bcsr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Csr::from_triplets(
+            5,
+            5,
+            &[
+                (0, 0, 1.0),
+                (0, 1, 2.0),
+                (1, 0, 3.0),
+                (2, 3, 4.0),
+                (3, 2, 5.0),
+                (4, 4, 6.0),
+                (4, 0, 7.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spmv_matches_csr_for_various_blocks() {
+        let a = sample();
+        let x = [1.0, -1.0, 2.0, 0.5, 3.0];
+        let mut want = vec![0.0; 5];
+        a.spmv(&x, &mut want);
+        for &(br, bc) in &[(1usize, 1usize), (2, 2), (3, 2), (2, 3), (4, 4), (5, 5), (8, 8)] {
+            let b = Bcsr::from_csr(&a, br, bc).unwrap();
+            let mut got = vec![0.0; 5];
+            b.spmv(&x, &mut got);
+            assert_eq!(got, want, "block {br}x{bc}");
+            assert_eq!(b.nnz(), a.nnz());
+            assert!(b.fill_ratio() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn one_by_one_blocks_have_csr_fill() {
+        let a = sample();
+        let b = Bcsr::from_csr(&a, 1, 1).unwrap();
+        assert_eq!(b.fill_ratio(), 1.0);
+        assert_eq!(b.n_blocks(), a.nnz());
+    }
+
+    #[test]
+    fn dense_block_matrix_perfect_fill() {
+        // 4x4 matrix of one dense 2x2 block at top-left and one at bottom-right.
+        let t = [
+            (0, 0, 1.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 1.0),
+            (2, 2, 1.0), (2, 3, 1.0), (3, 2, 1.0), (3, 3, 1.0),
+        ];
+        let a = Csr::from_triplets(4, 4, &t).unwrap();
+        let b = Bcsr::from_csr(&a, 2, 2).unwrap();
+        assert_eq!(b.n_blocks(), 2);
+        assert_eq!(b.fill_ratio(), 1.0);
+    }
+
+    #[test]
+    fn rejects_zero_blocks() {
+        assert!(Bcsr::from_csr(&sample(), 0, 2).is_err());
+        assert!(Bcsr::from_csr(&sample(), 2, 0).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Coordinate storage — the paper's COO format, in row-major (COO-Row) or
+//! column-major (COO-Column) entry order.
+//!
+//! The paper distinguishes the two orders because they admit different
+//! OpenMP parallelisations (Figs. 1 and 2): the entry stream is split into
+//! `[ISTART(k), IEND(k)]` chunks per thread and each thread accumulates into
+//! a private `YY(:,k)` copy that is reduced afterwards.
+
+use super::{check_triplets, FormatKind, SparseMatrix};
+use crate::{Index, Result, Value};
+
+/// Entry ordering of a [`Coo`] matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CooOrder {
+    /// Entries sorted by (row, col) — the paper's COO-Row.
+    RowMajor,
+    /// Entries sorted by (col, row) — the paper's COO-Column.
+    ColMajor,
+}
+
+/// COO sparse matrix: parallel arrays `row_idx`/`col_idx`/`values`
+/// (the paper's `IROW`/`ICOL`/`VAL`), sorted according to [`CooOrder`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coo {
+    n_rows: usize,
+    n_cols: usize,
+    /// `IROW` — row index per entry.
+    pub row_idx: Vec<Index>,
+    /// `ICOL` — column index per entry.
+    pub col_idx: Vec<Index>,
+    /// `VAL` — value per entry.
+    pub values: Vec<Value>,
+    order: CooOrder,
+}
+
+impl Coo {
+    /// Build from raw arrays; verifies bounds and the claimed ordering.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        row_idx: Vec<Index>,
+        col_idx: Vec<Index>,
+        values: Vec<Value>,
+        order: CooOrder,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            row_idx.len() == values.len() && col_idx.len() == values.len(),
+            "COO array length mismatch: rows {} cols {} vals {}",
+            row_idx.len(),
+            col_idx.len(),
+            values.len()
+        );
+        for (&r, &c) in row_idx.iter().zip(&col_idx) {
+            anyhow::ensure!(
+                (r as usize) < n_rows && (c as usize) < n_cols,
+                "entry ({r},{c}) out of bounds for {n_rows}x{n_cols}"
+            );
+        }
+        let sorted = match order {
+            CooOrder::RowMajor => row_idx
+                .windows(2)
+                .zip(col_idx.windows(2))
+                .all(|(r, c)| (r[0], c[0]) <= (r[1], c[1])),
+            CooOrder::ColMajor => col_idx
+                .windows(2)
+                .zip(row_idx.windows(2))
+                .all(|(c, r)| (c[0], r[0]) <= (c[1], r[1])),
+        };
+        anyhow::ensure!(sorted, "COO entries not sorted for {order:?}");
+        Ok(Self { n_rows, n_cols, row_idx, col_idx, values, order })
+    }
+
+    /// Build from triplets in the requested order (duplicates summed).
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(usize, usize, Value)],
+        order: CooOrder,
+    ) -> Result<Self> {
+        check_triplets(n_rows, n_cols, triplets)?;
+        let mut entries = triplets.to_vec();
+        match order {
+            CooOrder::RowMajor => entries.sort_unstable_by_key(|&(r, c, _)| (r, c)),
+            CooOrder::ColMajor => entries.sort_unstable_by_key(|&(r, c, _)| (c, r)),
+        }
+        let mut merged: Vec<(usize, usize, Value)> = Vec::with_capacity(entries.len());
+        for (r, c, v) in entries {
+            match merged.last_mut() {
+                Some(&mut (lr, lc, ref mut lv)) if lr == r && lc == c => *lv += v,
+                _ => merged.push((r, c, v)),
+            }
+        }
+        let mut row_idx = Vec::with_capacity(merged.len());
+        let mut col_idx = Vec::with_capacity(merged.len());
+        let mut values = Vec::with_capacity(merged.len());
+        for (r, c, v) in merged {
+            row_idx.push(r as Index);
+            col_idx.push(c as Index);
+            values.push(v);
+        }
+        Self::new(n_rows, n_cols, row_idx, col_idx, values, order)
+    }
+
+    /// Entry ordering.
+    pub fn order(&self) -> CooOrder {
+        self.order
+    }
+
+    /// Construct without the O(nnz) validation passes — for transforms
+    /// whose output is sorted/in-bounds *by construction* (perf pass,
+    /// EXPERIMENTS.md §Perf). Invariants are still checked in debug builds.
+    pub(crate) fn from_parts_unchecked(
+        n_rows: usize,
+        n_cols: usize,
+        row_idx: Vec<Index>,
+        col_idx: Vec<Index>,
+        values: Vec<Value>,
+        order: CooOrder,
+    ) -> Self {
+        debug_assert!(Self::new(
+            n_rows,
+            n_cols,
+            row_idx.clone(),
+            col_idx.clone(),
+            values.clone(),
+            order
+        )
+        .is_ok());
+        Self { n_rows, n_cols, row_idx, col_idx, values, order }
+    }
+}
+
+impl SparseMatrix for Coo {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<Value>()
+            + (self.row_idx.len() + self.col_idx.len()) * std::mem::size_of::<Index>()
+    }
+
+    /// Sequential entry-stream SpMV (order-independent).
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        assert_eq!(y.len(), self.n_rows, "y length");
+        y.fill(0.0);
+        for k in 0..self.values.len() {
+            let r = self.row_idx[k] as usize;
+            let c = self.col_idx[k] as usize;
+            y[r] += self.values[k] * x[c];
+        }
+    }
+
+    fn kind(&self) -> FormatKind {
+        match self.order {
+            CooOrder::RowMajor => FormatKind::CooRow,
+            CooOrder::ColMajor => FormatKind::CooCol,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: [(usize, usize, Value); 5] =
+        [(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)];
+
+    #[test]
+    fn row_major_ordering() {
+        let a = Coo::from_triplets(3, 3, &T, CooOrder::RowMajor).unwrap();
+        assert_eq!(a.row_idx, vec![0, 0, 1, 2, 2]);
+        assert_eq!(a.col_idx, vec![0, 2, 1, 0, 2]);
+        assert_eq!(a.kind(), FormatKind::CooRow);
+    }
+
+    #[test]
+    fn col_major_ordering() {
+        let a = Coo::from_triplets(3, 3, &T, CooOrder::ColMajor).unwrap();
+        assert_eq!(a.col_idx, vec![0, 0, 1, 2, 2]);
+        assert_eq!(a.row_idx, vec![0, 2, 1, 0, 2]);
+        assert_eq!(a.kind(), FormatKind::CooCol);
+    }
+
+    #[test]
+    fn spmv_same_result_both_orders() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y1 = vec![0.0; 3];
+        let mut y2 = vec![0.0; 3];
+        Coo::from_triplets(3, 3, &T, CooOrder::RowMajor)
+            .unwrap()
+            .spmv(&x, &mut y1);
+        Coo::from_triplets(3, 3, &T, CooOrder::ColMajor)
+            .unwrap()
+            .spmv(&x, &mut y2);
+        assert_eq!(y1, vec![7.0, 6.0, 19.0]);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn unsorted_input_rejected_by_new() {
+        let r = Coo::new(2, 2, vec![1, 0], vec![0, 0], vec![1.0, 1.0], CooOrder::RowMajor);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let a =
+            Coo::from_triplets(2, 2, &[(1, 1, 2.0), (1, 1, 3.0)], CooOrder::RowMajor).unwrap();
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.values, vec![5.0]);
+    }
+}

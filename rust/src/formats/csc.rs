@@ -1,0 +1,163 @@
+//! Compressed Column Storage — the paper's CCS, the Phase-I intermediate of
+//! the column-wise run-time transformation (§2.1).
+
+use super::{FormatKind, SparseMatrix};
+use crate::{Index, Result, Value};
+
+/// CCS/CSC sparse matrix: column `j`'s entries live in
+/// `values[col_ptr[j]..col_ptr[j+1]]` with row indices in `row_idx`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    n_rows: usize,
+    n_cols: usize,
+    /// Column start offsets, length `n_cols + 1`.
+    pub col_ptr: Vec<usize>,
+    /// Row index per stored entry.
+    pub row_idx: Vec<Index>,
+    /// Value per stored entry.
+    pub values: Vec<Value>,
+}
+
+impl Csc {
+    /// Build from raw arrays, validating the CSC invariants.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<Index>,
+        values: Vec<Value>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            col_ptr.len() == n_cols + 1,
+            "col_ptr length {} != n_cols+1 {}",
+            col_ptr.len(),
+            n_cols + 1
+        );
+        anyhow::ensure!(col_ptr[0] == 0, "col_ptr[0] != 0");
+        anyhow::ensure!(
+            row_idx.len() == values.len(),
+            "row_idx/values length mismatch"
+        );
+        anyhow::ensure!(
+            *col_ptr.last().unwrap() == values.len(),
+            "col_ptr[n] != nnz"
+        );
+        for w in col_ptr.windows(2) {
+            anyhow::ensure!(w[0] <= w[1], "col_ptr not monotone");
+        }
+        for &r in &row_idx {
+            anyhow::ensure!((r as usize) < n_rows, "row {r} out of bounds {n_rows}");
+        }
+        Ok(Self { n_rows, n_cols, col_ptr, row_idx, values })
+    }
+
+    /// Number of stored entries in column `j`.
+    #[inline]
+    pub fn col_len(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Iterator over `(row, value)` pairs of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> impl Iterator<Item = (Index, Value)> + '_ {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        self.row_idx[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Extract triplets sorted column-major.
+    pub fn to_triplets_col_major(&self) -> Vec<(usize, usize, Value)> {
+        let mut out = Vec::with_capacity(self.nnz());
+        for j in 0..self.n_cols {
+            for (r, v) in self.col(j) {
+                out.push((r as usize, j, v));
+            }
+        }
+        out
+    }
+}
+
+impl SparseMatrix for Csc {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<Value>()
+            + self.row_idx.len() * std::mem::size_of::<Index>()
+            + self.col_ptr.len() * std::mem::size_of::<usize>()
+    }
+
+    /// Column-wise SpMV: scatter `x[j] * col_j(A)` into `y`.
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        assert_eq!(y.len(), self.n_rows, "y length");
+        y.fill(0.0);
+        for j in 0..self.n_cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            for (r, v) in self.col(j) {
+                y[r as usize] += v * xj;
+            }
+        }
+    }
+
+    fn kind(&self) -> FormatKind {
+        FormatKind::Csc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csr;
+    use crate::transform::crs_to_ccs;
+
+    #[test]
+    fn spmv_matches_csr() {
+        let a = Csr::from_triplets(
+            3,
+            4,
+            &[(0, 0, 1.0), (0, 3, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)],
+        )
+        .unwrap();
+        let c = crs_to_ccs(&a);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y1 = vec![0.0; 3];
+        let mut y2 = vec![0.0; 3];
+        a.spmv(&x, &mut y1);
+        c.spmv(&x, &mut y2);
+        assert_eq!(y1, y2);
+        assert_eq!(c.kind(), FormatKind::Csc);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(Csc::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(Csc::new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err());
+        assert!(Csc::new(2, 2, vec![0, 1, 2], vec![0, 7], vec![1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn col_iteration() {
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (1, 0, 2.0), (1, 1, 3.0)]).unwrap();
+        let c = crs_to_ccs(&a);
+        assert_eq!(c.col_len(0), 2);
+        assert_eq!(c.col_len(1), 1);
+        let col0: Vec<_> = c.col(0).collect();
+        assert_eq!(col0, vec![(0, 1.0), (1, 2.0)]);
+    }
+}

@@ -1,0 +1,343 @@
+//! Compressed Row Storage — the paper's CRS, the library's input format.
+
+use super::{check_triplets, FormatKind, SparseMatrix};
+use crate::{Index, Result, Value};
+
+/// CRS/CSR sparse matrix.
+///
+/// Zero-based equivalent of the paper's `VAL(1:nnz)`, `ICOL(1:nnz)`,
+/// `IRP(1:n+1)` arrays: row `i`'s entries live in
+/// `values[row_ptr[i]..row_ptr[i+1]]` with matching column indices in
+/// `col_idx`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    n_rows: usize,
+    n_cols: usize,
+    /// `IRP` — row start offsets, length `n_rows + 1`, monotonically
+    /// non-decreasing, `row_ptr[0] == 0`, `row_ptr[n_rows] == nnz`.
+    pub row_ptr: Vec<usize>,
+    /// `ICOL` — column index per stored entry.
+    pub col_idx: Vec<Index>,
+    /// `VAL` — value per stored entry.
+    pub values: Vec<Value>,
+}
+
+impl Csr {
+    /// Build from raw arrays, validating the CSR invariants.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<Index>,
+        values: Vec<Value>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            row_ptr.len() == n_rows + 1,
+            "row_ptr length {} != n_rows+1 {}",
+            row_ptr.len(),
+            n_rows + 1
+        );
+        anyhow::ensure!(row_ptr[0] == 0, "row_ptr[0] = {} != 0", row_ptr[0]);
+        anyhow::ensure!(
+            col_idx.len() == values.len(),
+            "col_idx/values length mismatch: {} vs {}",
+            col_idx.len(),
+            values.len()
+        );
+        anyhow::ensure!(
+            *row_ptr.last().unwrap() == values.len(),
+            "row_ptr[n] = {} != nnz = {}",
+            row_ptr[n_rows],
+            values.len()
+        );
+        for w in row_ptr.windows(2) {
+            anyhow::ensure!(w[0] <= w[1], "row_ptr not monotone: {} > {}", w[0], w[1]);
+        }
+        for &c in &col_idx {
+            anyhow::ensure!((c as usize) < n_cols, "column {c} out of bounds {n_cols}");
+        }
+        Ok(Self { n_rows, n_cols, row_ptr, col_idx, values })
+    }
+
+    /// Build from (row, col, value) triplets. Duplicates are summed, entries
+    /// are sorted row-major then by column — the canonical form every
+    /// transformation in [`crate::transform`] assumes.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(usize, usize, Value)],
+    ) -> Result<Self> {
+        check_triplets(n_rows, n_cols, triplets)?;
+        let mut entries: Vec<(usize, usize, Value)> = triplets.to_vec();
+        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        // Sum duplicates in place.
+        let mut merged: Vec<(usize, usize, Value)> = Vec::with_capacity(entries.len());
+        for (r, c, v) in entries {
+            match merged.last_mut() {
+                Some(&mut (lr, lc, ref mut lv)) if lr == r && lc == c => *lv += v,
+                _ => merged.push((r, c, v)),
+            }
+        }
+        let nnz = merged.len();
+        let mut row_ptr = vec![0usize; n_rows + 1];
+        for &(r, _, _) in &merged {
+            row_ptr[r + 1] += 1;
+        }
+        for i in 0..n_rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for (_, c, v) in merged {
+            col_idx.push(c as Index);
+            values.push(v);
+        }
+        Self::new(n_rows, n_cols, row_ptr, col_idx, values)
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        Self {
+            n_rows: n,
+            n_cols: n,
+            row_ptr: (0..=n).collect(),
+            col_idx: (0..n as Index).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    /// Number of stored entries in row `i`.
+    #[inline]
+    pub fn row_len(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Iterator over `(col, value)` pairs of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (Index, Value)> + '_ {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        self.col_idx[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Longest row length — the ELL bandwidth `nz` this matrix would need.
+    pub fn max_row_len(&self) -> usize {
+        (0..self.n_rows).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+
+    /// Extract triplets (sorted row-major) — used by tests and IO.
+    pub fn to_triplets(&self) -> Vec<(usize, usize, Value)> {
+        let mut out = Vec::with_capacity(self.nnz());
+        for i in 0..self.n_rows {
+            for (c, v) in self.row(i) {
+                out.push((i, c as usize, v));
+            }
+        }
+        out
+    }
+
+    /// Transpose (CSR of Aᵀ) — an O(nnz) counting pass, the same pattern as
+    /// the paper's CRS→CCS transformation.
+    pub fn transpose(&self) -> Csr {
+        let mut cnt = vec![0usize; self.n_cols + 1];
+        for &c in &self.col_idx {
+            cnt[c as usize + 1] += 1;
+        }
+        for j in 0..self.n_cols {
+            cnt[j + 1] += cnt[j];
+        }
+        let mut row_ptr = cnt.clone();
+        let mut col_idx = vec![0 as Index; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        for i in 0..self.n_rows {
+            for (c, v) in self.row(i) {
+                let slot = cnt[c as usize];
+                cnt[c as usize] += 1;
+                col_idx[slot] = i as Index;
+                values[slot] = v;
+            }
+        }
+        row_ptr[self.n_cols] = self.nnz();
+        Csr {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// `y = Aᵀ·x` without materialising the transpose.
+    pub fn spmv_transpose(&self, x: &[Value], y: &mut [Value]) {
+        assert_eq!(x.len(), self.n_rows);
+        assert_eq!(y.len(), self.n_cols);
+        y.fill(0.0);
+        for i in 0..self.n_rows {
+            let xi = x[i];
+            for (c, v) in self.row(i) {
+                y[c as usize] += v * xi;
+            }
+        }
+    }
+
+    /// Check structural invariants (used by property tests / debug assertions).
+    pub fn validate(&self) -> Result<()> {
+        let _ = Self::new(
+            self.n_rows,
+            self.n_cols,
+            self.row_ptr.clone(),
+            self.col_idx.clone(),
+            self.values.clone(),
+        )?;
+        Ok(())
+    }
+}
+
+impl SparseMatrix for Csr {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<Value>()
+            + self.col_idx.len() * std::mem::size_of::<Index>()
+            + self.row_ptr.len() * std::mem::size_of::<usize>()
+    }
+
+    /// The OpenATLib `OpenATI_DURMV` switch-11 baseline: a plain row loop.
+    /// The inner loop walks zipped value/column slices so the compiler can
+    /// elide the per-element bounds checks (perf pass, EXPERIMENTS.md §Perf).
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        assert_eq!(y.len(), self.n_rows, "y length");
+        for i in 0..self.n_rows {
+            let lo = self.row_ptr[i];
+            let hi = self.row_ptr[i + 1];
+            let acc: Value = self.values[lo..hi]
+                .iter()
+                .zip(&self.col_idx[lo..hi])
+                .map(|(&v, &c)| v * x[c as usize])
+                .sum();
+            y[i] = acc;
+        }
+    }
+
+    fn kind(&self) -> FormatKind {
+        FormatKind::Csr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1 0 2]
+        //  [0 3 0]
+        //  [4 0 5]]
+        Csr::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn from_triplets_builds_canonical_csr() {
+        let a = sample();
+        assert_eq!(a.row_ptr, vec![0, 2, 3, 5]);
+        assert_eq!(a.col_idx, vec![0, 2, 1, 0, 2]);
+        assert_eq!(a.values, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.5)]).unwrap();
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.values, vec![3.5]);
+    }
+
+    #[test]
+    fn spmv_matches_hand_computation() {
+        let a = sample();
+        let mut y = vec![0.0; 3];
+        a.spmv(&[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y, vec![7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = sample();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn spmv_transpose_matches_materialized() {
+        let a = sample();
+        let x = [1.0, -2.0, 0.5];
+        let mut y1 = vec![0.0; 3];
+        let mut y2 = vec![0.0; 3];
+        a.spmv_transpose(&x, &mut y1);
+        a.transpose().spmv(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn row_iteration_and_lengths() {
+        let a = sample();
+        assert_eq!(a.row_len(0), 2);
+        assert_eq!(a.row_len(1), 1);
+        assert_eq!(a.max_row_len(), 2);
+        let r0: Vec<_> = a.row(0).collect();
+        assert_eq!(r0, vec![(0, 1.0), (2, 2.0)]);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(Csr::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // short row_ptr
+        assert!(Csr::new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err()); // non-monotone
+        assert!(Csr::new(2, 2, vec![0, 1, 2], vec![0, 5], vec![1.0, 1.0]).is_err()); // col oob
+        assert!(Csr::new(2, 2, vec![0, 1, 1], vec![0], vec![1.0, 2.0]).is_err()); // len mismatch
+    }
+
+    #[test]
+    fn empty_rows_and_empty_matrix() {
+        let a = Csr::from_triplets(3, 3, &[(1, 1, 2.0)]).unwrap();
+        assert_eq!(a.row_len(0), 0);
+        assert_eq!(a.row_len(2), 0);
+        let e = Csr::from_triplets(0, 0, &[]).unwrap();
+        assert_eq!(e.nnz(), 0);
+        let mut y = vec![];
+        e.spmv(&[], &mut y);
+    }
+
+    #[test]
+    fn identity_spmv_is_copy() {
+        let a = Csr::identity(4);
+        let x = [9.0, 8.0, 7.0, 6.0];
+        let mut y = vec![0.0; 4];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn to_triplets_roundtrip() {
+        let t = vec![(0usize, 0usize, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)];
+        let a = Csr::from_triplets(3, 3, &t).unwrap();
+        assert_eq!(a.to_triplets(), t);
+    }
+}

@@ -1,0 +1,106 @@
+//! Dense matrix — correctness oracle for the sparse kernels and the
+//! reference the property tests compare everything against.
+
+use super::{FormatKind, SparseMatrix};
+use crate::{Result, Value};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    n_rows: usize,
+    n_cols: usize,
+    /// Row-major storage: entry (i, j) at `data[i*n_cols + j]`.
+    pub data: Vec<Value>,
+}
+
+impl Dense {
+    /// All-zeros matrix.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
+        Self { n_rows, n_cols, data: vec![0.0; n_rows * n_cols] }
+    }
+
+    /// Build from triplets (duplicates summed).
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(usize, usize, Value)],
+    ) -> Result<Self> {
+        super::check_triplets(n_rows, n_cols, triplets)?;
+        let mut m = Self::zeros(n_rows, n_cols);
+        for &(r, c, v) in triplets {
+            m.data[r * n_cols + c] += v;
+        }
+        Ok(m)
+    }
+
+    /// Entry accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> Value {
+        self.data[i * self.n_cols + j]
+    }
+
+    /// Mutable entry accessor.
+    #[inline]
+    pub fn get_mut(&mut self, i: usize, j: usize) -> &mut Value {
+        &mut self.data[i * self.n_cols + j]
+    }
+
+    /// Count of exact non-zeros.
+    pub fn count_nonzeros(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+}
+
+impl SparseMatrix for Dense {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.count_nonzeros()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<Value>()
+    }
+
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        assert_eq!(y.len(), self.n_rows, "y length");
+        for i in 0..self.n_rows {
+            let row = &self.data[i * self.n_cols..(i + 1) * self.n_cols];
+            y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+    }
+
+    fn kind(&self) -> FormatKind {
+        // Dense is not an AT target; report as the baseline.
+        FormatKind::Csr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_spmv() {
+        let d = Dense::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)]).unwrap();
+        let mut y = vec![0.0; 2];
+        d.spmv(&[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y, vec![7.0, 6.0]);
+        assert_eq!(d.nnz(), 3);
+        assert_eq!(d.get(0, 2), 2.0);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let d = Dense::from_triplets(1, 1, &[(0, 0, 1.0), (0, 0, 2.0)]).unwrap();
+        assert_eq!(d.get(0, 0), 3.0);
+        assert_eq!(d.nnz(), 1);
+    }
+}

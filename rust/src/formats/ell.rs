@@ -1,0 +1,206 @@
+//! ELLPACK/ITPACK storage — the paper's ELL format.
+//!
+//! `VAL(1:n, 1:nz)` and `ICOL(1:n, 1:nz)` are stored **band-major**
+//! (Fortran column-major): band `k` occupies the contiguous slice
+//! `val[k*n .. (k+1)*n]`, exactly the `J_PTR = N*(K-1) + I` addressing of
+//! the paper's Figs. 3–4. Rows shorter than the bandwidth `nz` are padded
+//! with explicit zeros whose column index points at column 0 (a harmless
+//! `0.0 * x[0]` contribution).
+//!
+//! Band-major layout is what gives ELL its vector-machine advantage: the
+//! inner `I = 1..N` loop of Fig. 3 walks `val` with unit stride over the
+//! whole matrix dimension `n`, so the SX-9's vector pipes run at full
+//! length instead of the per-row short vectors CRS yields.
+
+use super::{FormatKind, SparseMatrix};
+use crate::{Index, Result, Value};
+
+/// ELL sparse matrix with band-major padded storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ell {
+    n_rows: usize,
+    n_cols: usize,
+    /// Bandwidth `nz` — the maximum row population; every row is padded to it.
+    pub bandwidth: usize,
+    /// Stored non-zeros excluding padding.
+    logical_nnz: usize,
+    /// `VAL`, band-major: entry (row `i`, band `k`) at `values[k*n_rows + i]`.
+    pub values: Vec<Value>,
+    /// `ICOL`, band-major, same addressing; padding points at column 0.
+    pub col_idx: Vec<Index>,
+}
+
+impl Ell {
+    /// Build from raw band-major arrays.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        bandwidth: usize,
+        values: Vec<Value>,
+        col_idx: Vec<Index>,
+        logical_nnz: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            values.len() == n_rows * bandwidth,
+            "values length {} != n*nz = {}",
+            values.len(),
+            n_rows * bandwidth
+        );
+        anyhow::ensure!(
+            col_idx.len() == values.len(),
+            "col_idx/values length mismatch"
+        );
+        for &c in &col_idx {
+            anyhow::ensure!(
+                (c as usize) < n_cols.max(1),
+                "column {c} out of bounds {n_cols}"
+            );
+        }
+        anyhow::ensure!(
+            logical_nnz <= values.len(),
+            "logical nnz {} exceeds storage {}",
+            logical_nnz,
+            values.len()
+        );
+        Ok(Self { n_rows, n_cols, bandwidth, logical_nnz, values, col_idx })
+    }
+
+    /// Flat band-major offset of (row `i`, band `k`) — the paper's
+    /// `J_PTR = N*(K-1) + I` in zero-based form.
+    #[inline]
+    pub fn offset(&self, i: usize, k: usize) -> usize {
+        k * self.n_rows + i
+    }
+
+    /// Padding ratio: stored slots / logical non-zeros (1.0 = perfect band).
+    /// This is the memory- and compute-waste factor the `D_mat` statistic
+    /// predicts (paper §4.5).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.logical_nnz == 0 {
+            1.0
+        } else {
+            (self.n_rows * self.bandwidth) as f64 / self.logical_nnz as f64
+        }
+    }
+
+    /// Number of padded (explicit zero) slots.
+    pub fn padding(&self) -> usize {
+        self.n_rows * self.bandwidth - self.logical_nnz
+    }
+}
+
+impl SparseMatrix for Ell {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.logical_nnz
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<Value>()
+            + self.col_idx.len() * std::mem::size_of::<Index>()
+    }
+
+    /// Sequential band-loop SpMV (the sequential core of Fig. 3):
+    /// for each band, stream `val[k*n..]` with unit stride accumulating
+    /// into `y`.
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        assert_eq!(y.len(), self.n_rows, "y length");
+        y.fill(0.0);
+        for k in 0..self.bandwidth {
+            let base = k * self.n_rows;
+            let vals = &self.values[base..base + self.n_rows];
+            let cols = &self.col_idx[base..base + self.n_rows];
+            // Zipped sweep: one bounds check per band instead of per slot
+            // (perf pass, EXPERIMENTS.md §Perf).
+            for ((yi, &v), &c) in y.iter_mut().zip(vals).zip(cols) {
+                *yi += v * x[c as usize];
+            }
+        }
+    }
+
+    fn kind(&self) -> FormatKind {
+        FormatKind::Ell
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csr;
+    use crate::transform::crs_to_ell;
+
+    fn sample_csr() -> Csr {
+        Csr::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn band_major_addressing() {
+        let e = crs_to_ell(&sample_csr()).unwrap();
+        assert_eq!(e.bandwidth, 2);
+        // Band 0: first entry of each row -> values [1,3,4].
+        assert_eq!(&e.values[0..3], &[1.0, 3.0, 4.0]);
+        // Band 1: second entry or padding -> [2, 0(pad), 5].
+        assert_eq!(&e.values[3..6], &[2.0, 0.0, 5.0]);
+        assert_eq!(e.offset(1, 1), 4);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let a = sample_csr();
+        let e = crs_to_ell(&a).unwrap();
+        let x = [1.0, 2.0, 3.0];
+        let mut y1 = vec![0.0; 3];
+        let mut y2 = vec![0.0; 3];
+        a.spmv(&x, &mut y1);
+        e.spmv(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn fill_ratio_and_padding() {
+        let e = crs_to_ell(&sample_csr()).unwrap();
+        assert_eq!(e.nnz(), 5);
+        assert_eq!(e.padding(), 1);
+        assert!((e.fill_ratio() - 6.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_band_has_unit_fill() {
+        // Tridiagonal interior rows all have 3 entries; use a circulant so
+        // every row has exactly 2.
+        let t: Vec<(usize, usize, Value)> =
+            (0..4).flat_map(|i| vec![(i, i, 2.0), (i, (i + 1) % 4, 1.0)]).collect();
+        let a = Csr::from_triplets(4, 4, &t).unwrap();
+        let e = crs_to_ell(&a).unwrap();
+        assert_eq!(e.fill_ratio(), 1.0);
+        assert_eq!(e.padding(), 0);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(Ell::new(2, 2, 2, vec![0.0; 3], vec![0; 3], 3).is_err()); // wrong len
+        assert!(Ell::new(2, 2, 1, vec![0.0; 2], vec![0, 9], 2).is_err()); // col oob
+        assert!(Ell::new(2, 2, 1, vec![0.0; 2], vec![0, 0], 5).is_err()); // nnz too big
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let e = Ell::new(0, 0, 0, vec![], vec![], 0).unwrap();
+        let mut y = vec![];
+        e.spmv(&[], &mut y);
+        assert_eq!(e.fill_ratio(), 1.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Hybrid ELL + COO storage (HYB) — the second extension experiment.
+//!
+//! The paper's §4.5 failure mode is a handful of pathological rows
+//! inflating the ELL bandwidth (memplus: μ = 7.1 but max row 574). HYB
+//! caps the ELL part at a threshold bandwidth `k` and spills the excess
+//! entries of long rows into a COO tail: the bulk of the matrix keeps
+//! ELL's regular vector/VMEM-friendly layout while the tail — a tiny
+//! fraction of nnz — runs through the scatter path. The threshold is
+//! chosen to minimise modelled cost: slots are only worth padding while
+//! the padded-slot count grows slower than the spilled-entry count
+//! (the classic HYB heuristic, cf. cuSPARSE).
+
+use super::{FormatKind, SparseMatrix};
+use crate::formats::{Coo, CooOrder, Csr, Ell};
+use crate::{Result, Value};
+
+/// HYB sparse matrix: an ELL body plus a COO-Row tail.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hyb {
+    /// The regular body (bandwidth = chosen threshold).
+    pub ell: Ell,
+    /// Spill entries of rows longer than the threshold.
+    pub tail: Coo,
+}
+
+impl Hyb {
+    /// Pick the threshold bandwidth that minimises `slots + spill·w`,
+    /// where `w` weights how much more a scatter-path entry costs than a
+    /// regular slot (vector machines: ~4–8; we use 4).
+    pub fn choose_threshold(a: &Csr) -> usize {
+        const SPILL_WEIGHT: f64 = 4.0;
+        let n = a.n_rows();
+        let max_len = a.max_row_len();
+        if n == 0 || max_len == 0 {
+            return 0;
+        }
+        // hist[l] = number of rows with length >= l.
+        let mut ge = vec![0usize; max_len + 2];
+        for i in 0..n {
+            ge[a.row_len(i)] += 1;
+        }
+        for l in (0..=max_len).rev() {
+            ge[l] += ge[l + 1];
+        }
+        // spill(k) = sum_{l>k} (l - k) * count(l) = sum_{j>k} ge[j].
+        let mut spill = vec![0usize; max_len + 2];
+        for k in (0..=max_len).rev() {
+            spill[k] = spill[k + 1] + ge[k + 1];
+        }
+        let mut best = (f64::INFINITY, max_len);
+        for k in 1..=max_len {
+            let cost = (n * k) as f64 + SPILL_WEIGHT * spill[k] as f64;
+            if cost < best.0 {
+                best = (cost, k);
+            }
+        }
+        best.1
+    }
+
+    /// Build from CSR with an explicit threshold.
+    pub fn from_csr_with_threshold(a: &Csr, k: usize) -> Result<Self> {
+        let n = a.n_rows();
+        let k = k.min(a.max_row_len());
+        let mut values = vec![0.0 as Value; n * k];
+        let mut col_idx = vec![0 as crate::Index; n * k];
+        let mut body_nnz = 0usize;
+        let mut tail: Vec<(usize, usize, Value)> = Vec::new();
+        for i in 0..n {
+            for (slot, (c, v)) in a.row(i).enumerate() {
+                if slot < k {
+                    values[slot * n + i] = v;
+                    col_idx[slot * n + i] = c;
+                    body_nnz += 1;
+                } else {
+                    tail.push((i, c as usize, v));
+                }
+            }
+        }
+        let ell = Ell::new(n, a.n_cols(), k, values, col_idx, body_nnz)?;
+        let tail = Coo::from_triplets(n, a.n_cols(), &tail, CooOrder::RowMajor)?;
+        Ok(Self { ell, tail })
+    }
+
+    /// Build from CSR with the auto-chosen threshold.
+    pub fn from_csr(a: &Csr) -> Result<Self> {
+        Self::from_csr_with_threshold(a, Self::choose_threshold(a))
+    }
+
+    /// The chosen ELL bandwidth.
+    pub fn threshold(&self) -> usize {
+        self.ell.bandwidth
+    }
+
+    /// Fraction of nnz living in the COO tail.
+    pub fn spill_fraction(&self) -> f64 {
+        let total = self.nnz();
+        if total == 0 {
+            0.0
+        } else {
+            self.tail.nnz() as f64 / total as f64
+        }
+    }
+}
+
+impl SparseMatrix for Hyb {
+    fn n_rows(&self) -> usize {
+        self.ell.n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.ell.n_cols()
+    }
+
+    fn nnz(&self) -> usize {
+        self.ell.nnz() + self.tail.nnz()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.ell.memory_bytes() + self.tail.memory_bytes()
+    }
+
+    /// Body sweep (ELL) + tail scatter (COO), accumulated.
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        self.ell.spmv(x, y);
+        for e in 0..self.tail.nnz() {
+            let r = self.tail.row_idx[e] as usize;
+            let c = self.tail.col_idx[e] as usize;
+            y[r] += self.tail.values[e] * x[c];
+        }
+    }
+
+    fn kind(&self) -> FormatKind {
+        FormatKind::Hyb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::{banded_circulant, generate, random_csr, spec_by_name};
+    use crate::rng::Rng;
+
+    #[test]
+    fn spmv_matches_csr_on_random_matrices() {
+        let mut rng = Rng::new(71);
+        for _ in 0..10 {
+            let nr = rng.range(1, 70);
+            let nc = rng.range(1, 70);
+            let a = random_csr(&mut rng, nr, nc, 0.2);
+            let h = Hyb::from_csr(&a).unwrap();
+            assert_eq!(h.nnz(), a.nnz());
+            let x: Vec<Value> = (0..nc).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let mut want = vec![0.0; nr];
+            let mut got = vec![0.0; nr];
+            a.spmv(&x, &mut want);
+            h.spmv(&x, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn memplus_spills_the_tail_and_shrinks_storage() {
+        let spec = spec_by_name("memplus").unwrap();
+        let a = generate(&spec, 5, 0.03);
+        let h = Hyb::from_csr(&a).unwrap();
+        let ell = crate::transform::crs_to_ell(&a).unwrap();
+        // Threshold far below the full bandwidth, small spill fraction,
+        // storage an order of magnitude below pure ELL.
+        assert!(h.threshold() < ell.bandwidth / 4, "threshold {}", h.threshold());
+        assert!(h.spill_fraction() < 0.35, "spill {}", h.spill_fraction());
+        assert!(h.memory_bytes() * 4 < ell.memory_bytes());
+    }
+
+    #[test]
+    fn perfect_band_has_empty_tail() {
+        let mut rng = Rng::new(72);
+        let a = banded_circulant(&mut rng, 64, &[-1, 0, 1]);
+        let h = Hyb::from_csr(&a).unwrap();
+        assert_eq!(h.threshold(), 3);
+        assert_eq!(h.tail.nnz(), 0);
+        assert_eq!(h.spill_fraction(), 0.0);
+    }
+
+    #[test]
+    fn explicit_threshold_respected() {
+        let mut rng = Rng::new(73);
+        let a = random_csr(&mut rng, 40, 40, 0.3);
+        let h = Hyb::from_csr_with_threshold(&a, 2).unwrap();
+        assert_eq!(h.threshold(), 2);
+        assert_eq!(h.ell.nnz() + h.tail.nnz(), a.nnz());
+        let x = vec![1.0; 40];
+        let mut want = vec![0.0; 40];
+        let mut got = vec![0.0; 40];
+        a.spmv(&x, &mut want);
+        h.spmv(&x, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = Csr::from_triplets(4, 4, &[]).unwrap();
+        let h = Hyb::from_csr(&a).unwrap();
+        assert_eq!(h.nnz(), 0);
+        let mut y = vec![9.0; 4];
+        h.spmv(&[0.0; 4], &mut y);
+        assert_eq!(y, vec![0.0; 4]);
+    }
+}

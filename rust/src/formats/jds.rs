@@ -1,0 +1,238 @@
+//! Jagged Diagonal Storage (JDS) — the classic vector-machine sparse
+//! format, implemented as an extension experiment.
+//!
+//! The paper's ELL results die on high-`D_mat` matrices because padding
+//! inflates both storage and compute (memplus: fill ≈ 80×). JDS is the
+//! historical fix on exactly the paper's target machine class (it was
+//! designed for the Cray/NEC vector pipeline): rows are sorted by
+//! descending population and stored as *jagged diagonals* — the k-th
+//! stored element of every row long enough to have one. Every diagonal is
+//! a dense unit-stride vector of length = (number of rows with ≥ k+1
+//! entries), so the SpMV vectorises like ELL **without any zero fill**.
+//! The price is a row permutation on `y` and one extra indirection.
+//!
+//! The `ablation` bench quantifies this: on the ES2 model JDS recovers
+//! most of the vector win for memplus where ELL loses to COO.
+
+use super::{FormatKind, SparseMatrix};
+use crate::formats::Csr;
+use crate::{Index, Result, Value};
+
+/// JDS sparse matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Jds {
+    n_rows: usize,
+    n_cols: usize,
+    /// `perm[i]` = original row index of sorted position `i` (rows sorted
+    /// by descending length).
+    pub perm: Vec<Index>,
+    /// Start offset of each jagged diagonal, length `n_diags + 1`.
+    pub jd_ptr: Vec<usize>,
+    /// Values, diagonal-major.
+    pub values: Vec<Value>,
+    /// Column indices, diagonal-major.
+    pub col_idx: Vec<Index>,
+}
+
+impl Jds {
+    /// Build from CSR (stable counting sort by row length, then diagonal
+    /// gather — O(n + nnz)).
+    pub fn from_csr(a: &Csr) -> Self {
+        let n = a.n_rows();
+        let max_len = a.max_row_len();
+        // Counting sort rows by length, descending, stable.
+        let mut count = vec![0usize; max_len + 2];
+        for i in 0..n {
+            count[a.row_len(i)] += 1;
+        }
+        // Positions for descending order: longest first.
+        let mut start = vec![0usize; max_len + 2];
+        let mut acc = 0usize;
+        for len in (0..=max_len).rev() {
+            start[len] = acc;
+            acc += count[len];
+        }
+        let mut perm = vec![0 as Index; n];
+        for i in 0..n {
+            let len = a.row_len(i);
+            perm[start[len]] = i as Index;
+            start[len] += 1;
+        }
+        // Number of rows with length > k = length of diagonal k.
+        let n_diags = max_len;
+        let mut jd_ptr = Vec::with_capacity(n_diags + 1);
+        jd_ptr.push(0usize);
+        let mut diag_len = vec![0usize; n_diags];
+        for i in 0..n {
+            let l = a.row_len(i);
+            for d in diag_len.iter_mut().take(l) {
+                *d += 1;
+            }
+        }
+        for k in 0..n_diags {
+            jd_ptr.push(jd_ptr[k] + diag_len[k]);
+        }
+        let nnz = a.nnz();
+        debug_assert_eq!(jd_ptr[n_diags], nnz);
+        let mut values = vec![0.0 as Value; nnz];
+        let mut col_idx = vec![0 as Index; nnz];
+        for (pos, &orig) in perm.iter().enumerate() {
+            for (k, (c, v)) in a.row(orig as usize).enumerate() {
+                // Sorted-descending rows guarantee `pos` is inside
+                // diagonal k's range whenever row has a k-th element.
+                let off = jd_ptr[k] + pos;
+                values[off] = v;
+                col_idx[off] = c;
+            }
+        }
+        Self { n_rows: n, n_cols: a.n_cols(), perm, jd_ptr, values, col_idx }
+    }
+
+    /// Number of jagged diagonals (= max row length).
+    pub fn n_diags(&self) -> usize {
+        self.jd_ptr.len() - 1
+    }
+
+    /// Length of diagonal `k`.
+    pub fn diag_len(&self, k: usize) -> usize {
+        self.jd_ptr[k + 1] - self.jd_ptr[k]
+    }
+
+    /// SpMV with a caller-provided permuted scratch buffer (`yp.len() >=
+    /// n_rows`), avoiding the per-call allocation of the trait method.
+    pub fn spmv_into(&self, x: &[Value], y: &mut [Value], yp: &mut [Value]) {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        assert_eq!(y.len(), self.n_rows, "y length");
+        assert!(yp.len() >= self.n_rows, "scratch too small");
+        let yp = &mut yp[..self.n_rows];
+        yp.fill(0.0);
+        // Accumulate in permuted order, then scatter once at the end —
+        // keeps the inner loops unit-stride (the vector-machine schedule).
+        for k in 0..self.n_diags() {
+            let lo = self.jd_ptr[k];
+            let len = self.diag_len(k);
+            let vals = &self.values[lo..lo + len];
+            let cols = &self.col_idx[lo..lo + len];
+            for ((ypi, &v), &c) in yp.iter_mut().zip(vals).zip(cols) {
+                *ypi += v * x[c as usize];
+            }
+        }
+        for (pos, &orig) in self.perm.iter().enumerate() {
+            y[orig as usize] = yp[pos];
+        }
+    }
+}
+
+impl SparseMatrix for Jds {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<Value>()
+            + self.col_idx.len() * std::mem::size_of::<Index>()
+            + self.perm.len() * std::mem::size_of::<Index>()
+            + self.jd_ptr.len() * std::mem::size_of::<usize>()
+    }
+
+    /// Diagonal-sweep SpMV: each diagonal is a dense unit-stride vector op
+    /// accumulating into the permuted prefix of `y`. Allocates the
+    /// permuted scratch internally; hot paths use [`Jds::spmv_into`] with
+    /// a reused buffer (perf pass, EXPERIMENTS.md §Perf).
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        let mut yp = vec![0.0 as Value; self.n_rows];
+        self.spmv_into(x, y, &mut yp);
+    }
+
+    fn kind(&self) -> FormatKind {
+        FormatKind::Jds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::{generate, random_csr, spec_by_name};
+    use crate::rng::Rng;
+
+    #[test]
+    fn spmv_matches_csr_on_random_matrices() {
+        let mut rng = Rng::new(61);
+        for _ in 0..10 {
+            let nr = rng.range(1, 80);
+            let nc = rng.range(1, 80);
+            let a = random_csr(&mut rng, nr, nc, 0.15);
+            let j = Jds::from_csr(&a);
+            assert_eq!(j.nnz(), a.nnz());
+            let x: Vec<Value> = (0..nc).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let mut want = vec![0.0; nr];
+            let mut got = vec![0.0; nr];
+            a.spmv(&x, &mut want);
+            j.spmv(&x, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn diagonals_are_monotonically_shorter() {
+        let spec = spec_by_name("memplus").unwrap();
+        let a = generate(&spec, 3, 0.03);
+        let j = Jds::from_csr(&a);
+        for k in 1..j.n_diags() {
+            assert!(j.diag_len(k) <= j.diag_len(k - 1), "diag {k}");
+        }
+        // First diagonal covers every non-empty row.
+        let non_empty = (0..a.n_rows()).filter(|&i| a.row_len(i) > 0).count();
+        if j.n_diags() > 0 {
+            assert_eq!(j.diag_len(0), non_empty);
+        }
+    }
+
+    #[test]
+    fn no_fill_storage_matches_nnz_exactly() {
+        // The whole point vs ELL: memplus-like tails cost nothing extra.
+        let spec = spec_by_name("memplus").unwrap();
+        let a = generate(&spec, 5, 0.03);
+        let j = Jds::from_csr(&a);
+        let ell = crate::transform::crs_to_ell(&a).unwrap();
+        assert_eq!(j.values.len(), a.nnz());
+        assert!(ell.values.len() > 10 * j.values.len(), "ELL fill should dwarf JDS");
+    }
+
+    #[test]
+    fn perm_is_a_permutation_sorted_by_length() {
+        let mut rng = Rng::new(62);
+        let a = random_csr(&mut rng, 50, 50, 0.1);
+        let j = Jds::from_csr(&a);
+        let mut seen = vec![false; 50];
+        let mut last_len = usize::MAX;
+        for &p in &j.perm {
+            assert!(!seen[p as usize], "duplicate in perm");
+            seen[p as usize] = true;
+            let l = a.row_len(p as usize);
+            assert!(l <= last_len, "perm not sorted by descending length");
+            last_len = l;
+        }
+        assert!(seen.into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let a = Csr::from_triplets(3, 3, &[]).unwrap();
+        let j = Jds::from_csr(&a);
+        assert_eq!(j.n_diags(), 0);
+        let mut y = vec![1.0; 3];
+        j.spmv(&[0.0; 3], &mut y);
+        assert_eq!(y, vec![0.0; 3]);
+    }
+}

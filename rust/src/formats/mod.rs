@@ -1,0 +1,174 @@
+//! Sparse matrix storage formats.
+//!
+//! The paper (§2.1) works with four formats:
+//!
+//! * **CRS** (Compressed Row Storage; here [`Csr`] using the modern name) —
+//!   `VAL(1:nnz)`, `ICOL(1:nnz)`, `IRP(1:n+1)`. The input format of the
+//!   library and of OpenATLib's `OpenATI_DURMV`.
+//! * **CCS** (Compressed Column Storage; [`Csc`]) — the Phase-I intermediate
+//!   of the column-wise transformation.
+//! * **COO** ([`Coo`]) — `VAL/ICOL/IROW(1:nnz)`, in row-major
+//!   ([`CooOrder::RowMajor`]) or column-major ([`CooOrder::ColMajor`]) entry
+//!   order; the order determines which parallel SpMV (Fig. 1 vs Fig. 2)
+//!   applies.
+//! * **ELL** ([`Ell`]) — `VAL(1:n,1:nz)` band-major (Fortran column-major)
+//!   storage padded with explicit zeros, the format the paper's headline
+//!   151x vector-machine speedup comes from.
+//!
+//! [`Bcsr`] (register-blocked CSR) is implemented as the paper's named
+//! future-work extension, and [`Dense`] exists as a correctness oracle.
+
+mod bcsr;
+mod coo;
+mod hyb;
+mod jds;
+mod csc;
+mod csr;
+mod dense;
+mod ell;
+
+pub use bcsr::Bcsr;
+pub use coo::{Coo, CooOrder};
+pub use csc::Csc;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use hyb::Hyb;
+pub use jds::Jds;
+pub use ell::Ell;
+
+use crate::{Index, Value};
+
+/// The format tags the auto-tuner switches between (paper §2–§3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FormatKind {
+    /// Compressed row storage — the baseline input format.
+    Csr,
+    /// Compressed column storage (paper: CCS) — transformation intermediate.
+    Csc,
+    /// Coordinate storage, row-major entry order.
+    CooRow,
+    /// Coordinate storage, column-major entry order.
+    CooCol,
+    /// ELLPACK/ITPACK, band-major padded storage.
+    Ell,
+    /// Register-blocked CSR (paper future work).
+    Bcsr,
+    /// Jagged Diagonal Storage (extension: the historical vector-machine
+    /// format; no zero fill).
+    Jds,
+    /// Hybrid ELL + COO tail (extension: caps the ELL bandwidth, spills
+    /// pathological rows).
+    Hyb,
+}
+
+impl FormatKind {
+    /// All format kinds, in a stable report order.
+    pub const ALL: [FormatKind; 8] = [
+        FormatKind::Csr,
+        FormatKind::Csc,
+        FormatKind::CooRow,
+        FormatKind::CooCol,
+        FormatKind::Ell,
+        FormatKind::Bcsr,
+        FormatKind::Jds,
+        FormatKind::Hyb,
+    ];
+
+    /// Short, stable display name used by reports and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            FormatKind::Csr => "CRS",
+            FormatKind::Csc => "CCS",
+            FormatKind::CooRow => "COO-Row",
+            FormatKind::CooCol => "COO-Col",
+            FormatKind::Ell => "ELL",
+            FormatKind::Bcsr => "BCSR",
+            FormatKind::Jds => "JDS",
+            FormatKind::Hyb => "HYB",
+        }
+    }
+
+    /// Parse the name emitted by [`FormatKind::name`] (case-insensitive).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "crs" | "csr" => Some(FormatKind::Csr),
+            "ccs" | "csc" => Some(FormatKind::Csc),
+            "coo-row" | "coorow" | "coo_row" => Some(FormatKind::CooRow),
+            "coo-col" | "coocol" | "coo_col" => Some(FormatKind::CooCol),
+            "ell" => Some(FormatKind::Ell),
+            "bcsr" => Some(FormatKind::Bcsr),
+            "jds" => Some(FormatKind::Jds),
+            "hyb" => Some(FormatKind::Hyb),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FormatKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Common behaviour across sparse formats: shape, nnz, memory footprint and
+/// a sequential `y = A·x`.
+pub trait SparseMatrix {
+    /// Number of rows.
+    fn n_rows(&self) -> usize;
+    /// Number of columns.
+    fn n_cols(&self) -> usize;
+    /// Number of *stored* non-zero entries (for ELL this excludes padding).
+    fn nnz(&self) -> usize;
+    /// Storage footprint in bytes (values + index arrays), the quantity the
+    /// memory auto-tuning policy (paper §2.2) budgets.
+    fn memory_bytes(&self) -> usize;
+    /// Sequential sparse matrix-vector product `y = A·x`.
+    ///
+    /// # Panics
+    /// Panics if `x.len() != n_cols()` or `y.len() != n_rows()`.
+    fn spmv(&self, x: &[Value], y: &mut [Value]);
+    /// The format tag.
+    fn kind(&self) -> FormatKind;
+}
+
+/// Validate a triplet list against a shape; shared by the `from_triplets`
+/// constructors.
+pub(crate) fn check_triplets(
+    n_rows: usize,
+    n_cols: usize,
+    triplets: &[(usize, usize, Value)],
+) -> crate::Result<()> {
+    for &(r, c, _) in triplets {
+        anyhow::ensure!(
+            r < n_rows && c < n_cols,
+            "triplet ({r},{c}) out of bounds for {n_rows}x{n_cols}"
+        );
+    }
+    anyhow::ensure!(
+        n_rows <= Index::MAX as usize && n_cols <= Index::MAX as usize,
+        "matrix dimensions exceed Index range"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_kind_roundtrip() {
+        for k in FormatKind::ALL {
+            assert_eq!(FormatKind::parse(k.name()), Some(k), "{k}");
+        }
+        assert_eq!(FormatKind::parse("nope"), None);
+        assert_eq!(FormatKind::parse("csr"), Some(FormatKind::Csr));
+        assert_eq!(FormatKind::parse("CSC"), Some(FormatKind::Csc));
+    }
+
+    #[test]
+    fn check_triplets_bounds() {
+        assert!(check_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 1.0)]).is_ok());
+        assert!(check_triplets(2, 2, &[(2, 0, 1.0)]).is_err());
+        assert!(check_triplets(2, 2, &[(0, 2, 1.0)]).is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Matrix I/O: MatrixMarket text format and a fast binary cache.
+//!
+//! MatrixMarket (`.mtx`) is the interchange format of the UF collection the
+//! paper draws its suite from; supporting it means real downloaded matrices
+//! drop straight into the auto-tuner. The binary cache exists because
+//! re-parsing multi-million-entry text files dominates bench startup.
+
+use crate::formats::{Csr, SparseMatrix};
+use crate::{Result, Value};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Symmetry field of a MatrixMarket header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MmSymmetry {
+    /// `general` — entries stored as-is.
+    General,
+    /// `symmetric` — lower triangle stored; mirror on read.
+    Symmetric,
+    /// `skew-symmetric` — mirror with negation.
+    SkewSymmetric,
+}
+
+/// Parse a MatrixMarket coordinate file into CSR.
+///
+/// Supports `matrix coordinate real/integer/pattern` with
+/// `general/symmetric/skew-symmetric` symmetry. Pattern entries get value
+/// 1.0. Complex matrices are rejected.
+pub fn read_matrix_market<R: Read>(reader: R) -> Result<Csr> {
+    let mut lines = BufReader::new(reader).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty MatrixMarket file"))??;
+    let h: Vec<String> = header.split_whitespace().map(|s| s.to_ascii_lowercase()).collect();
+    anyhow::ensure!(
+        h.len() >= 5 && h[0] == "%%matrixmarket" && h[1] == "matrix",
+        "bad MatrixMarket header: {header}"
+    );
+    anyhow::ensure!(h[2] == "coordinate", "only coordinate format supported, got {}", h[2]);
+    let pattern = match h[3].as_str() {
+        "real" | "integer" => false,
+        "pattern" => true,
+        other => anyhow::bail!("unsupported field type: {other}"),
+    };
+    let symmetry = match h[4].as_str() {
+        "general" => MmSymmetry::General,
+        "symmetric" => MmSymmetry::Symmetric,
+        "skew-symmetric" => MmSymmetry::SkewSymmetric,
+        other => anyhow::bail!("unsupported symmetry: {other}"),
+    };
+
+    // Skip comments, read size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(line);
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| anyhow::anyhow!("missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad size line '{size_line}': {e}"))?;
+    anyhow::ensure!(dims.len() == 3, "size line must be 'rows cols nnz', got '{size_line}'");
+    let (n_rows, n_cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut triplets: Vec<(usize, usize, Value)> = Vec::with_capacity(nnz * 2);
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("short entry line"))?
+            .parse()?;
+        let c: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("short entry line"))?
+            .parse()?;
+        let v: Value = if pattern {
+            1.0
+        } else {
+            it.next()
+                .ok_or_else(|| anyhow::anyhow!("missing value on entry line"))?
+                .parse()?
+        };
+        anyhow::ensure!(
+            (1..=n_rows).contains(&r) && (1..=n_cols).contains(&c),
+            "entry ({r},{c}) out of bounds {n_rows}x{n_cols}"
+        );
+        let (r, c) = (r - 1, c - 1); // 1-based -> 0-based
+        triplets.push((r, c, v));
+        match symmetry {
+            MmSymmetry::General => {}
+            MmSymmetry::Symmetric if r != c => triplets.push((c, r, v)),
+            MmSymmetry::SkewSymmetric if r != c => triplets.push((c, r, -v)),
+            _ => {}
+        }
+        seen += 1;
+    }
+    anyhow::ensure!(seen == nnz, "expected {nnz} entries, found {seen}");
+    Csr::from_triplets(n_rows, n_cols, &triplets)
+}
+
+/// Read a `.mtx` file from disk.
+pub fn read_matrix_market_file(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+    read_matrix_market(f)
+}
+
+/// Write CSR as MatrixMarket `coordinate real general`.
+pub fn write_matrix_market<W: Write>(a: &Csr, writer: W) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by spmv-at")?;
+    writeln!(w, "{} {} {}", a.n_rows(), a.n_cols(), a.nnz())?;
+    for i in 0..a.n_rows() {
+        for (c, v) in a.row(i) {
+            writeln!(w, "{} {} {:.17e}", i + 1, c as usize + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write a `.mtx` file to disk.
+pub fn write_matrix_market_file(a: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("create {}: {e}", path.display()))?;
+    write_matrix_market(a, f)
+}
+
+const BIN_MAGIC: &[u8; 8] = b"SPMVATB1";
+
+/// Serialize CSR to the fast binary cache format (little-endian).
+pub fn write_binary<W: Write>(a: &Csr, writer: W) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    w.write_all(BIN_MAGIC)?;
+    for v in [a.n_rows() as u64, a.n_cols() as u64, a.nnz() as u64] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &p in &a.row_ptr {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &c in &a.col_idx {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    for &v in &a.values {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Deserialize CSR from the binary cache format.
+pub fn read_binary<R: Read>(reader: R) -> Result<Csr> {
+    let mut r = BufReader::new(reader);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == BIN_MAGIC, "bad magic: not an spmv-at binary matrix");
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<R>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let n_rows = read_u64(&mut r)? as usize;
+    let n_cols = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+    let mut row_ptr = Vec::with_capacity(n_rows + 1);
+    let mut b8 = [0u8; 8];
+    for _ in 0..=n_rows {
+        r.read_exact(&mut b8)?;
+        row_ptr.push(u64::from_le_bytes(b8) as usize);
+    }
+    let mut col_idx = Vec::with_capacity(nnz);
+    let mut b4 = [0u8; 4];
+    for _ in 0..nnz {
+        r.read_exact(&mut b4)?;
+        col_idx.push(u32::from_le_bytes(b4));
+    }
+    let mut values = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        r.read_exact(&mut b8)?;
+        values.push(f64::from_le_bytes(b8));
+    }
+    Csr::new(n_rows, n_cols, row_ptr, col_idx, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::random_csr;
+    use crate::rng::Rng;
+
+    #[test]
+    fn mtx_roundtrip_general() {
+        let mut rng = Rng::new(1);
+        let a = random_csr(&mut rng, 20, 15, 0.15);
+        let mut buf = Vec::new();
+        write_matrix_market(&a, &mut buf).unwrap();
+        let b = read_matrix_market(&buf[..]).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mtx_symmetric_mirrors() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n3 3 3\n1 1 2.0\n2 1 -1.0\n3 3 4.0\n";
+        let a = read_matrix_market(text.as_bytes()).unwrap();
+        assert_eq!(a.nnz(), 4); // (0,0),(1,0),(0,1),(2,2)
+        let t = a.to_triplets();
+        assert!(t.contains(&(0, 1, -1.0)));
+        assert!(t.contains(&(1, 0, -1.0)));
+    }
+
+    #[test]
+    fn mtx_skew_symmetric_negates() {
+        let text =
+            "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n2 1 3.0\n";
+        let a = read_matrix_market(text.as_bytes()).unwrap();
+        let t = a.to_triplets();
+        assert!(t.contains(&(1, 0, 3.0)));
+        assert!(t.contains(&(0, 1, -3.0)));
+    }
+
+    #[test]
+    fn mtx_pattern_gets_unit_values() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 1\n2 2\n";
+        let a = read_matrix_market(text.as_bytes()).unwrap();
+        assert_eq!(a.values, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn mtx_rejects_garbage() {
+        assert!(read_matrix_market("not a header\n".as_bytes()).is_err());
+        assert!(read_matrix_market(
+            "%%MatrixMarket matrix array real general\n2 2\n".as_bytes()
+        )
+        .is_err());
+        assert!(read_matrix_market(
+            "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 0\n".as_bytes()
+        )
+        .is_err());
+        // Entry count mismatch.
+        assert!(read_matrix_market(
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n".as_bytes()
+        )
+        .is_err());
+        // Out of bounds entry.
+        assert!(read_matrix_market(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n".as_bytes()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = random_csr(&mut rng, 33, 47, 0.1);
+        let mut buf = Vec::new();
+        write_binary(&a, &mut buf).unwrap();
+        let b = read_binary(&buf[..]).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        assert!(read_binary(&b"XXXXXXXXrest"[..]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = random_csr(&mut rng, 10, 10, 0.3);
+        let dir = std::env::temp_dir().join("spmv_at_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.mtx");
+        write_matrix_market_file(&a, &p).unwrap();
+        let b = read_matrix_market_file(&p).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_file(&p).ok();
+    }
+}

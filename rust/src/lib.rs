@@ -1,0 +1,58 @@
+//! # spmv-at — run-time sparse data transformation auto-tuning for SpMV
+//!
+//! A reproduction of *"An Auto-tuning Method for Run-time Data Transformation
+//! for Sparse Matrix-Vector Multiplication"* (Katagiri & Sato).
+//!
+//! The library is organised in three layers:
+//!
+//! * **Substrates** — sparse formats ([`formats`]), run-time transformations
+//!   ([`transform`]), parallel SpMV implementations ([`spmv`]), synthetic
+//!   matrix generators ([`matrixgen`]), Matrix Market I/O ([`io`]), machine
+//!   cost models ([`machine`]) and iterative solvers ([`solver`]).
+//! * **The paper's contribution** — the auto-tuning engine ([`autotune`]):
+//!   the `D_mat` statistic, the `R_ell` cost ratio, the `D_mat`–`R_ell`
+//!   graph with its `D*` threshold, and the offline/online AT phases.
+//! * **The serving layer** — a PJRT-backed runtime ([`runtime`]) that
+//!   executes AOT-compiled JAX/Pallas SpMV artifacts, and a coordinator
+//!   ([`coordinator`]) that owns matrix lifecycles and routes SpMV requests
+//!   through the online AT decision.
+//!
+//! Quick start:
+//!
+//! ```
+//! use spmv_at::formats::{Csr, SparseMatrix};
+//! use spmv_at::autotune::dmat::RowStats;
+//!
+//! // 2x2 identity in CSR.
+//! let a = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 1.0)]).unwrap();
+//! let mut y = vec![0.0; 2];
+//! a.spmv(&[3.0, 4.0], &mut y);
+//! assert_eq!(y, vec![3.0, 4.0]);
+//! let stats = RowStats::of_csr(&a);
+//! assert_eq!(stats.mean, 1.0);
+//! assert_eq!(stats.d_mat(), 0.0);
+//! ```
+
+pub mod autotune;
+pub mod coordinator;
+pub mod formats;
+pub mod io;
+pub mod machine;
+pub mod matrixgen;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod spmv;
+pub mod transform;
+
+/// Scalar element type used throughout the library (the paper uses
+/// double-precision Fortran REAL*8).
+pub type Value = f64;
+
+/// Column/row index type. `u32` matches the 32-bit Fortran `INTEGER`s of the
+/// paper's kernels and halves index-array memory traffic relative to `usize`.
+pub type Index = u32;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

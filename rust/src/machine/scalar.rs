@@ -1,0 +1,319 @@
+//! Scalar/cache-machine cost model — the HITACHI SR16000/VL1 stand-in.
+//!
+//! One node: 64 × IBM POWER6 at 5.0 GHz (128 SMT threads), 64 KB L1 +
+//! 4 MB L2 per core, 32 MB L3 per core pair, big but finite memory
+//! bandwidth.
+//!
+//! Mechanisms modelled (the paper's Fig. 5 behaviour):
+//!
+//! * Both CRS and ELL stream their value/index arrays; per-element compute
+//!   cost is a few cycles with out-of-order overlap. CRS additionally pays
+//!   per-row loop/branch bookkeeping — the only margin ELL can win
+//!   (≤ 2.45× at 1 thread, and only when μ is small so the bookkeeping
+//!   share is large).
+//! * ELL's zero padding multiplies its element count by `fill_ratio`; as
+//!   `D_mat` grows the padding swallows the bookkeeping win — matrices
+//!   with `D_mat ≳ 0.1` stop benefiting (the paper's Fig. 8 SR16000 rule).
+//! * Thread scaling is compute-bound at first, then saturates on the
+//!   node's memory bandwidth — by 64–128 threads every format is
+//!   bandwidth-bound and "there is no advantage of ELL".
+//! * The CRS→ELL transformation is latency/allocation-bound on a cache
+//!   machine: zeroing + scattering `n·nz` padded slots costs 20–50 CRS
+//!   SpMVs for high-fill matrices (Fig. 7, memplus & sme3D*).
+
+use super::{transform_bytes, CostModel, MatrixShape};
+use crate::formats::FormatKind;
+use crate::spmv::Implementation;
+
+/// Tunable parameters of the scalar model (cycles unless noted).
+#[derive(Clone, Debug)]
+pub struct ScalarParams {
+    /// Core clock in Hz (POWER6: 5.0 GHz).
+    pub clock_hz: f64,
+    /// Hardware threads per node (64 cores × 2 SMT).
+    pub threads: usize,
+    /// Per-element cost of the CRS inner loop (load val/icol, gather x, fma).
+    pub crs_elem: f64,
+    /// Per-row loop/branch/store bookkeeping of CRS.
+    pub row_overhead: f64,
+    /// Per-element cost of the ELL band sweep (better pipelined: no branch,
+    /// unit-stride val/icol).
+    pub ell_elem: f64,
+    /// Per-element cost of the COO stream (extra irow load + indirect YY add).
+    pub coo_elem: f64,
+    /// Per-element cost of the serial YY reduction.
+    pub reduce_elem: f64,
+    /// Thread fork/join overhead per parallel region, cycles.
+    pub fork: f64,
+    /// Single-thread sustainable memory bandwidth, bytes/s.
+    pub mem_bw_1t: f64,
+    /// Node-level saturated memory bandwidth, bytes/s.
+    pub mem_bw_node: f64,
+    /// Threads at which bandwidth saturates.
+    pub bw_knee: f64,
+    /// Gather miss penalty (cycles) applied per element for matrices whose
+    /// x-vector spills L2 (scaled by a locality factor).
+    pub miss_penalty: f64,
+    /// L2 capacity per core, bytes.
+    pub l2_bytes: f64,
+}
+
+impl Default for ScalarParams {
+    fn default() -> Self {
+        Self {
+            clock_hz: 5.0e9,
+            threads: 128,
+            crs_elem: 3.0,
+            row_overhead: 40.0,
+            ell_elem: 2.4,
+            coo_elem: 5.0,
+            reduce_elem: 1.5,
+            fork: 40_000.0,
+            mem_bw_1t: 20e9,
+            mem_bw_node: 160e9,
+            bw_knee: 8.0,
+            miss_penalty: 90.0,
+            l2_bytes: 4.0 * 1024.0 * 1024.0,
+        }
+    }
+}
+
+/// The SR16000/VL1 stand-in. See module docs for the modelled mechanisms.
+pub struct ScalarMachine {
+    /// Model parameters (public so ablation benches can perturb them).
+    pub p: ScalarParams,
+}
+
+impl Default for ScalarMachine {
+    fn default() -> Self {
+        Self { p: ScalarParams::default() }
+    }
+}
+
+impl ScalarMachine {
+    /// Model with explicit parameters.
+    pub fn new(p: ScalarParams) -> Self {
+        Self { p }
+    }
+
+    /// Aggregate memory bandwidth available to `t` threads: linear up to
+    /// the knee, flat at the node ceiling after.
+    fn bw(&self, t: usize) -> f64 {
+        let t = (t.max(1) as f64).min(self.p.bw_knee);
+        (self.p.mem_bw_1t * t).min(self.p.mem_bw_node)
+    }
+
+    /// Probability-weighted gather penalty per element: 0 when x fits in
+    /// L2, growing with the x footprint (random column access pattern).
+    fn gather_penalty(&self, m: &MatrixShape) -> f64 {
+        let x_bytes = m.n_cols as f64 * 8.0;
+        if x_bytes <= self.p.l2_bytes {
+            0.0
+        } else {
+            // Fraction of x accesses that miss; saturates at 35%.
+            let over = 1.0 - self.p.l2_bytes / x_bytes;
+            self.p.miss_penalty * 0.35 * over
+        }
+    }
+
+    /// Roofline combine: max of compute time and memory-traffic time.
+    fn roofline(&self, cycles: f64, bytes: f64, t: usize) -> f64 {
+        let compute = cycles / self.p.clock_hz;
+        let memory = bytes / self.bw(t);
+        compute.max(memory)
+    }
+
+    /// Parallel compute scaling (linear to core count, weak SMT gain after 64).
+    fn par(&self, t: usize) -> f64 {
+        let t = t.max(1) as f64;
+        if t <= 64.0 {
+            t
+        } else {
+            64.0 * (t / 64.0).powf(0.3)
+        }
+    }
+}
+
+impl CostModel for ScalarMachine {
+    fn name(&self) -> &'static str {
+        "SR16000"
+    }
+
+    fn max_threads(&self) -> usize {
+        self.p.threads
+    }
+
+    fn spmv_seconds(&self, m: &MatrixShape, imp: Implementation, threads: usize) -> f64 {
+        let t = threads.clamp(1, self.p.threads);
+        let n = m.n as f64;
+        let nnz = m.nnz as f64;
+        let slots = n * m.bandwidth as f64;
+        let gp = self.gather_penalty(m);
+        let fork = if t > 1 { self.p.fork / self.p.clock_hz } else { 0.0 };
+        match imp {
+            Implementation::CsrSeq => {
+                let cycles = nnz * (self.p.crs_elem + gp) + n * self.p.row_overhead;
+                let bytes = nnz * 12.0 + n * 24.0;
+                self.roofline(cycles, bytes, 1)
+            }
+            Implementation::CsrRowPar => {
+                let cycles = (nnz * (self.p.crs_elem + gp) + n * self.p.row_overhead) / self.par(t);
+                let bytes = nnz * 12.0 + n * 24.0;
+                self.roofline(cycles, bytes, t) + fork
+            }
+            Implementation::EllRowInner => {
+                let cycles = slots * (self.p.ell_elem + gp) / self.par(t);
+                let bytes = slots * 12.0 + n * 16.0;
+                self.roofline(cycles, bytes, t) + fork
+            }
+            Implementation::EllRowOuter => {
+                let t_eff = (t as f64).min(m.bandwidth.max(1) as f64);
+                let sweep = slots * (self.p.ell_elem + gp) / t_eff;
+                let reduce = if t > 1 { t as f64 * n * self.p.reduce_elem } else { 0.0 };
+                let bytes = slots * 12.0 + (1.0 + t as f64) * n * 8.0;
+                self.roofline(sweep + reduce, bytes, t) + fork
+            }
+            Implementation::CooRowOuter | Implementation::CooColOuter => {
+                let stream = nnz * (self.p.coo_elem + gp) / self.par(t);
+                let reduce = if t > 1 { t as f64 * n * self.p.reduce_elem } else { 0.0 };
+                let bytes = nnz * 16.0 + (1.0 + t as f64) * n * 8.0;
+                self.roofline(stream + reduce, bytes, t) + fork
+            }
+            Implementation::BcsrSeq => {
+                // 2x2 blocks: fewer index loads, some zero fill (~fill-capped).
+                let eff = nnz * m.fill_ratio.min(2.0);
+                let cycles = eff * (self.p.crs_elem * 0.7 + gp) + n * self.p.row_overhead * 0.5;
+                let bytes = eff * 9.0 + n * 24.0;
+                self.roofline(cycles, bytes, 1)
+            }
+            Implementation::JdsSeq => {
+                // Extension: no fill, but the permuted y access costs an
+                // extra indirection per element on a cache machine.
+                let cycles = nnz * (self.p.crs_elem + 1.0 + gp) + n * 6.0;
+                let bytes = nnz * 12.0 + n * 28.0;
+                self.roofline(cycles, bytes, 1)
+            }
+            Implementation::HybSeq => {
+                // Extension: ELL body at ~1.5μ bandwidth + COO tail.
+                let body_slots = n * (m.mu * 1.5).ceil().min(m.bandwidth as f64).max(1.0);
+                let tail_frac = (0.12 * (1.0 - 1.5 / m.fill_ratio)).max(0.0);
+                let cycles = body_slots * (self.p.ell_elem + gp)
+                    + tail_frac * nnz * (self.p.coo_elem + gp);
+                let bytes = body_slots * 12.0 + tail_frac * nnz * 16.0 + n * 16.0;
+                self.roofline(cycles, bytes, 1)
+            }
+        }
+    }
+
+    fn transform_seconds(&self, m: &MatrixShape, target: FormatKind) -> f64 {
+        let bytes = transform_bytes(m, target);
+        // Cache-machine transforms are latency-bound scatters plus
+        // allocation/zeroing; effective bandwidth is a fraction of stream
+        // bandwidth, and the counting transform pays per-element latency.
+        let (eff_bw, extra_cycles) = match target {
+            FormatKind::Csr => (self.p.mem_bw_1t, 0.0),
+            FormatKind::CooRow => (self.p.mem_bw_1t * 0.6, m.nnz as f64 * 1.0),
+            FormatKind::Csc | FormatKind::CooCol => {
+                (self.p.mem_bw_1t * 0.35, m.nnz as f64 * (4.0 + self.gather_penalty(m)))
+            }
+            FormatKind::Ell => {
+                // malloc + zero + scatter of n*nz slots.
+                (self.p.mem_bw_1t * 0.6, m.nnz as f64 * 2.0)
+            }
+            FormatKind::Bcsr => (self.p.mem_bw_1t * 0.35, m.nnz as f64 * 6.0),
+            FormatKind::Jds => (self.p.mem_bw_1t * 0.5, m.nnz as f64 * 3.0),
+            FormatKind::Hyb => (self.p.mem_bw_1t * 0.5, m.nnz as f64 * 2.5),
+        };
+        bytes / eff_bw + extra_cycles / self.p.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chem_master() -> MatrixShape {
+        MatrixShape {
+            n: 40_401, n_cols: 40_401, nnz: 201_201,
+            mu: 4.98, sigma: 0.14, bandwidth: 6,
+            fill_ratio: 40_401.0 * 6.0 / 201_201.0,
+        }
+    }
+
+    fn memplus() -> MatrixShape {
+        MatrixShape {
+            n: 17_758, n_cols: 17_758, nnz: 126_150,
+            mu: 7.10, sigma: 22.03, bandwidth: 574,
+            fill_ratio: 17_758.0 * 574.0 / 126_150.0,
+        }
+    }
+
+    fn sme3da() -> MatrixShape {
+        MatrixShape {
+            n: 12_504, n_cols: 12_504, nnz: 874_887,
+            mu: 69.96, sigma: 34.92, bandwidth: 345,
+            fill_ratio: 12_504.0 * 345.0 / 874_887.0,
+        }
+    }
+
+    #[test]
+    fn small_dmat_gets_modest_ell_win_at_one_thread() {
+        let mch = ScalarMachine::default();
+        let m = chem_master();
+        let sp = mch.spmv_seconds(&m, Implementation::CsrSeq, 1)
+            / mch.spmv_seconds(&m, Implementation::EllRowInner, 1);
+        // Paper: max 2.45x on SR16000 (chem_master1, 1 thread).
+        assert!((1.3..3.5).contains(&sp), "SP = {sp}");
+    }
+
+    #[test]
+    fn high_dmat_loses_on_scalar_machine() {
+        let mch = ScalarMachine::default();
+        let m = memplus();
+        let sp = mch.spmv_seconds(&m, Implementation::CsrSeq, 1)
+            / mch.spmv_seconds(&m, Implementation::EllRowInner, 1);
+        assert!(sp < 1.0, "memplus ELL should lose: SP = {sp}");
+    }
+
+    #[test]
+    fn advantage_dies_at_high_thread_count() {
+        let mch = ScalarMachine::default();
+        let m = chem_master();
+        let sp128 = mch.spmv_seconds(&m, Implementation::CsrRowPar, 128)
+            / mch.spmv_seconds(&m, Implementation::EllRowInner, 128);
+        // Paper: "there is no advantage of ELL for 64 and 128 threads".
+        assert!(sp128 < 1.4, "SP at 128 threads = {sp128}");
+    }
+
+    #[test]
+    fn transform_overhead_tens_of_spmvs_for_high_fill() {
+        let mch = ScalarMachine::default();
+        for (m, lo, hi) in [(memplus(), 10.0, 150.0), (sme3da(), 3.0, 80.0)] {
+            let ratio = mch.transform_seconds(&m, FormatKind::Ell)
+                / mch.spmv_seconds(&m, Implementation::CsrSeq, 1);
+            // Paper Fig. 7: 20x–50x for these matrices.
+            assert!((lo..hi).contains(&ratio), "t_trans/t_crs = {ratio}");
+        }
+    }
+
+    #[test]
+    fn transform_overhead_small_for_low_fill() {
+        let mch = ScalarMachine::default();
+        let m = chem_master();
+        let ratio = mch.transform_seconds(&m, FormatKind::Ell)
+            / mch.spmv_seconds(&m, Implementation::CsrSeq, 1);
+        assert!(ratio < 10.0, "t_trans/t_crs = {ratio}");
+    }
+
+    #[test]
+    fn thread_scaling_saturates() {
+        let mch = ScalarMachine::default();
+        let m = sme3da();
+        let t1 = mch.spmv_seconds(&m, Implementation::CsrRowPar, 1);
+        let t16 = mch.spmv_seconds(&m, Implementation::CsrRowPar, 16);
+        let t128 = mch.spmv_seconds(&m, Implementation::CsrRowPar, 128);
+        assert!(t16 < t1);
+        // Saturation: 128t is not 8x faster than 16t.
+        assert!(t128 > t16 / 8.0, "t128 {t128} vs t16 {t16}");
+    }
+}

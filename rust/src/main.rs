@@ -1,0 +1,363 @@
+//! `spmv-at` — CLI entry point for the run-time sparse-transformation
+//! auto-tuning library.
+//!
+//! Subcommands:
+//!
+//! * `suite` — print the Table-1 synthetic matrix suite (spec vs generated).
+//! * `offline` — run the offline AT phase on a backend, write the tuning
+//!   table (the "library install" step).
+//! * `decide` — run the online phase for one matrix against a tuning table.
+//! * `spmv` — run SpMV through an `OpenATI_DURMV`-style switch.
+//! * `solve` — solve a generated system through the AT-routed coordinator.
+//! * `serve` — line-oriented REPL over the coordinator server.
+//!
+//! The CLI is dependency-free (no clap in the offline environment): flags
+//! are `--key value` pairs parsed by [`Args`].
+
+use anyhow::{anyhow, bail, ensure, Result};
+use spmv_at::autotune::atlib::{switches, Durmv};
+use spmv_at::autotune::online::TuningData;
+use spmv_at::autotune::{run_offline, MemoryPolicy, OfflineConfig};
+use spmv_at::coordinator::{Coordinator, CoordinatorConfig, Server, SolverKind};
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::machine::scalar::ScalarMachine;
+use spmv_at::machine::vector::VectorMachine;
+use spmv_at::machine::{Backend, MeasuredBackend, SimulatedBackend};
+use spmv_at::matrixgen::{generate, measure, spec_by_name, table1_specs};
+use spmv_at::metrics::Table;
+use spmv_at::solver::SolverOptions;
+use spmv_at::spmv::Implementation;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Tiny `--key value` flag parser.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{a}'"))?;
+            let val = it
+                .next()
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn parse_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    fn parse_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+}
+
+fn make_backend(name: &str) -> Result<Box<dyn Backend>> {
+    Ok(match name {
+        "es2" => Box::new(SimulatedBackend::new(VectorMachine::default())),
+        "sr16000" => Box::new(SimulatedBackend::new(ScalarMachine::default())),
+        "host" => Box::new(MeasuredBackend::default()),
+        other => bail!("unknown backend '{other}' (es2 | sr16000 | host)"),
+    })
+}
+
+/// Load a matrix: `--matrix <table1-name>` (generated) or `--mtx <file>`.
+fn load_matrix(args: &Args, seed: u64, scale: f64) -> Result<(String, Csr)> {
+    if let Some(name) = args.get("matrix") {
+        let spec = spec_by_name(name)
+            .ok_or_else(|| anyhow!("'{name}' is not a Table-1 matrix name"))?;
+        Ok((name.to_string(), generate(&spec, seed, scale)))
+    } else if let Some(path) = args.get("mtx") {
+        let csr = spmv_at::io::read_matrix_market_file(Path::new(path))?;
+        Ok((path.to_string(), csr))
+    } else {
+        bail!("need --matrix <table1-name> or --mtx <file.mtx>")
+    }
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let scale = args.parse_f64("scale", 0.05)?;
+    let seed = args.parse_usize("seed", 42)? as u64;
+    let mut t = Table::new(vec![
+        "no", "name", "N", "NNZ", "mu", "sigma", "D_mat", "gen_mu", "gen_sigma", "gen_D",
+    ]);
+    for spec in table1_specs() {
+        let a = generate(&spec, seed, scale);
+        let m = measure(&a);
+        t.row(vec![
+            spec.no.to_string(),
+            spec.name.to_string(),
+            m.n.to_string(),
+            m.nnz.to_string(),
+            format!("{:.2}", spec.mu),
+            format!("{:.2}", spec.sigma),
+            format!("{:.2}", spec.d_mat),
+            format!("{:.2}", m.mu),
+            format!("{:.2}", m.sigma),
+            format!("{:.2}", m.d_mat),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_offline(args: &Args) -> Result<()> {
+    let backend = make_backend(&args.get_or("backend", "es2"))?;
+    let scale = args.parse_f64("scale", 0.05)?;
+    let seed = args.parse_usize("seed", 42)? as u64;
+    let imp = Implementation::parse(&args.get_or("imp", "ell-row-outer"))
+        .ok_or_else(|| anyhow!("bad --imp"))?;
+    let cfg = OfflineConfig {
+        imp,
+        threads: args.parse_usize("threads", 1)?,
+        c: args.parse_f64("c", 1.0)?,
+    };
+    let suite: Vec<(String, Csr)> = table1_specs()
+        .iter()
+        .map(|s| (s.name.to_string(), generate(s, seed, scale)))
+        .collect();
+    let result = run_offline(backend.as_ref(), &suite, &cfg)?;
+    print!("{}", result.graph.render(cfg.c));
+    if let Some(fit) = result.graph.fit_power_law() {
+        println!(
+            "power-law fit: R ~= {:.3} * D^{:.3} (R2 = {:.3}), model threshold {:.3}",
+            fit.a,
+            fit.b,
+            fit.r2,
+            fit.threshold(cfg.c)
+        );
+    }
+    if let Some(out) = args.get("out") {
+        result.tuning_data().save(Path::new(out))?;
+        println!("tuning table written to {out}");
+    }
+    if let Some(json) = args.get("json") {
+        std::fs::write(json, result.to_json().render())?;
+        println!("json written to {json}");
+    }
+    Ok(())
+}
+
+fn load_tuning(args: &Args) -> Result<TuningData> {
+    match args.get("tuning") {
+        Some(path) => TuningData::load(Path::new(path)),
+        None => Ok(TuningData {
+            backend: "default:ES2".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        }),
+    }
+}
+
+fn cmd_decide(args: &Args) -> Result<()> {
+    let tuning = load_tuning(args)?;
+    let scale = args.parse_f64("scale", 0.05)?;
+    let (name, a) = load_matrix(args, args.parse_usize("seed", 42)? as u64, scale)?;
+    let d = spmv_at::autotune::decide(&a, &tuning);
+    println!(
+        "matrix={name} n={} nnz={} D_mat={:.4} D*={:.4} -> {} ({})",
+        a.n_rows(),
+        a.nnz(),
+        d.d_mat,
+        d.d_star,
+        if d.transform { "TRANSFORM" } else { "keep CRS" },
+        d.chosen
+    );
+    Ok(())
+}
+
+fn cmd_spmv(args: &Args) -> Result<()> {
+    let tuning = load_tuning(args)?;
+    let scale = args.parse_f64("scale", 0.05)?;
+    let (name, a) = load_matrix(args, args.parse_usize("seed", 42)? as u64, scale)?;
+    let switch: u32 = args.get_or("switch", "0").parse()?;
+    let iters = args.parse_usize("iters", 10)?;
+    let threads = args.parse_usize("threads", 1)?;
+    let n = a.n_rows();
+    let ncols = a.n_cols();
+    let mut h = Durmv::new(a, tuning, MemoryPolicy::unlimited(), threads);
+    if switch == switches::AUTO {
+        println!("AUTO choice: {}", h.auto_choice());
+    }
+    let x = vec![1.0; ncols];
+    let mut y = vec![0.0; n];
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        h.durmv(switch, &x, &mut y)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "matrix={name} switch={switch} iters={iters} total={:.4}s per-spmv={:.6}s transform={:.6}s checksum={:.6e}",
+        dt,
+        dt / iters as f64,
+        h.transform_seconds,
+        y.iter().sum::<f64>()
+    );
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let tuning = load_tuning(args)?;
+    let scale = args.parse_f64("scale", 0.05)?;
+    let (name, a0) = load_matrix(args, args.parse_usize("seed", 42)? as u64, scale)?;
+    ensure!(a0.n_rows() == a0.n_cols(), "solve needs a square matrix");
+    // Make the system solvable: SPD for cg/jacobi, dominant for the rest.
+    let a = spmv_at::matrixgen::make_spd(&a0);
+    let n = a.n_rows();
+    let solver = SolverKind::parse(&args.get_or("solver", "cg"))
+        .ok_or_else(|| anyhow!("bad --solver"))?;
+    let mut cfg = CoordinatorConfig::new(tuning);
+    cfg.threads = args.parse_usize("threads", 1)?;
+    let (_srv, client) = Server::spawn(Coordinator::new(cfg), 32);
+    client.register(&name, a)?;
+    let b = vec![1.0; n];
+    let opts = SolverOptions {
+        tol: args.parse_f64("tol", 1e-8)?,
+        max_iters: args.parse_usize("max-iters", 2000)?,
+    };
+    let t0 = std::time::Instant::now();
+    let (x, stats) = client.solve(&name, b, solver, opts)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "matrix={name} solver={solver:?} iters={} converged={} residual={:.3e} spmv_calls={} wall={:.4}s |x|={:.6e}",
+        stats.iterations,
+        stats.converged,
+        stats.residual,
+        stats.spmv_calls,
+        dt,
+        x.iter().map(|v| v * v).sum::<f64>().sqrt()
+    );
+    for row in client.stats()? {
+        println!(
+            "  serving={} calls={} transformed_calls={} t_trans={:.6}s amortized={}",
+            row.serving, row.calls, row.transformed_calls, row.t_trans, row.amortized
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+    let tuning = load_tuning(args)?;
+    let mut cfg = CoordinatorConfig::new(tuning);
+    cfg.threads = args.parse_usize("threads", 1)?;
+    let mut coord = Coordinator::new(cfg);
+    // Attach XLA runtime if artifacts exist.
+    let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut _xla_service = None;
+    if art.join("manifest.tsv").exists() {
+        match spmv_at::runtime::XlaService::spawn(art) {
+            Ok((svc, handle)) => {
+                println!(
+                    "# XLA runtime attached ({})",
+                    handle.platform().unwrap_or_else(|_| "?".into())
+                );
+                coord = coord.with_xla(handle);
+                _xla_service = Some(svc);
+            }
+            Err(e) => println!("# XLA runtime unavailable: {e}"),
+        }
+    }
+    let (_srv, client) = Server::spawn(coord, 64);
+    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | stats | evict <name> | quit");
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        match parts.as_slice() {
+            [] => {}
+            ["quit"] | ["exit"] => break,
+            ["register", name, spec_name, rest @ ..] => {
+                let scale: f64 = rest.first().unwrap_or(&"0.05").parse().unwrap_or(0.05);
+                match spec_by_name(spec_name) {
+                    None => println!("! unknown spec {spec_name}"),
+                    Some(spec) => {
+                        let a = generate(&spec, 42, scale);
+                        match client.register(name, a) {
+                            Ok(s) => println!("ok n={} nnz={} D_mat={:.4}", s.n, s.nnz, s.d_mat),
+                            Err(e) => println!("! {e}"),
+                        }
+                    }
+                }
+            }
+            ["spmv", name] => {
+                match client.stats()?.iter().find(|s| &s.name == name) {
+                    None => println!("! unknown matrix {name}"),
+                    Some(s) => {
+                        let x = vec![1.0; s.n];
+                        match client.spmv(name, x) {
+                            Ok(y) => println!("ok checksum={:.6e}", y.iter().sum::<f64>()),
+                            Err(e) => println!("! {e}"),
+                        }
+                    }
+                }
+            }
+            ["stats"] => {
+                for s in client.stats()? {
+                    println!(
+                        "{}: n={} nnz={} D={:.3} serving={} calls={} amortized={}",
+                        s.name, s.n, s.nnz, s.d_mat, s.serving, s.calls, s.amortized
+                    );
+                }
+            }
+            ["evict", name] => {
+                println!("{}", if client.evict(name)? { "ok" } else { "! not found" });
+            }
+            other => println!("! unknown command {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: spmv-at <suite|offline|decide|spmv|solve|serve> [--flag value]...\n\
+         examples:\n\
+         \x20 spmv-at suite --scale 0.05\n\
+         \x20 spmv-at offline --backend es2 --scale 0.05 --out tuning-es2.tsv\n\
+         \x20 spmv-at decide --tuning tuning-es2.tsv --matrix memplus\n\
+         \x20 spmv-at spmv --matrix chem_master1 --switch 0 --iters 100\n\
+         \x20 spmv-at solve --matrix xenon1 --solver cg\n\
+         \x20 spmv-at serve"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "suite" => cmd_suite(&args),
+        "offline" => cmd_offline(&args),
+        "decide" => cmd_decide(&args),
+        "spmv" => cmd_spmv(&args),
+        "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
+        _ => usage(),
+    }
+}

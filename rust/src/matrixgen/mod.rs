@@ -1,0 +1,231 @@
+//! Synthetic sparse matrix generators.
+//!
+//! The paper evaluates on 22 matrices from the UF (SuiteSparse) collection
+//! (Table 1). That collection is not available offline, so [`suite`]
+//! regenerates each matrix *synthetically* to the same specification:
+//! dimension `N`, non-zero count `NNZ`, mean `μ` and standard deviation `σ`
+//! of non-zeros per row (hence the same `D_mat = σ/μ`), and a qualitative
+//! structure class (banded FEM stencil, circuit with dense-row outliers,
+//! power-tail, …).
+//!
+//! The auto-tuner's decision statistic only reads the row-length
+//! distribution and the bandwidth structure, so matching those moments
+//! exercises the same decision boundary as the originals.
+
+pub mod rowlen;
+pub mod suite;
+
+pub use suite::{generate, measure, spec_by_name, table1_specs, GenClass, MatrixSpec};
+
+use crate::formats::Csr;
+use crate::rng::Rng;
+use crate::{Index, Value};
+
+/// How column positions are placed within a row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Clustered around the diagonal within a window ~3× the row length —
+    /// FEM/stencil-like locality (good cache behaviour for `x`).
+    Banded,
+    /// Uniform over all columns — circuit/graph-like (poor locality).
+    Uniform,
+}
+
+/// Uniform random CSR with Bernoulli density. Intended for tests; entries
+/// are in `[-1, 1)`. Always places at least one entry when `density > 0`
+/// and the matrix is non-empty... (no: may produce empty rows; that is a
+/// feature, the kernels must handle them).
+pub fn random_csr(rng: &mut Rng, n_rows: usize, n_cols: usize, density: f64) -> Csr {
+    let mut triplets = Vec::new();
+    for i in 0..n_rows {
+        for j in 0..n_cols {
+            if rng.next_bool(density) {
+                triplets.push((i, j, rng.range_f64(-1.0, 1.0)));
+            }
+        }
+    }
+    Csr::from_triplets(n_rows, n_cols, &triplets).expect("in-bounds by construction")
+}
+
+/// Perfect circulant band matrix: every row has exactly `offsets.len()`
+/// entries at `(i + off) mod n`. `D_mat = 0` — the ideal ELL case
+/// ("ELL is compact if the matrix forms a perfect band", §4.5).
+pub fn banded_circulant(rng: &mut Rng, n: usize, offsets: &[isize]) -> Csr {
+    let mut triplets = Vec::with_capacity(n * offsets.len());
+    for i in 0..n {
+        for &off in offsets {
+            let j = (i as isize + off).rem_euclid(n as isize) as usize;
+            triplets.push((i, j, rng.range_f64(-1.0, 1.0)));
+        }
+    }
+    Csr::from_triplets(n, n, &triplets).expect("in-bounds by construction")
+}
+
+/// Assemble a CSR matrix from a per-row length vector, placing columns
+/// according to `placement`. Duplicate columns within a row are re-drawn,
+/// so the resulting row lengths match `lens` exactly (capped at `n_cols`).
+pub fn assemble_from_row_lens(
+    rng: &mut Rng,
+    n_cols: usize,
+    lens: &[usize],
+    placement: Placement,
+) -> Csr {
+    let n_rows = lens.len();
+    let nnz: usize = lens.iter().map(|&l| l.min(n_cols)).sum();
+    let mut row_ptr = Vec::with_capacity(n_rows + 1);
+    let mut col_idx: Vec<Index> = Vec::with_capacity(nnz);
+    let mut values: Vec<Value> = Vec::with_capacity(nnz);
+    row_ptr.push(0usize);
+    let mut scratch: Vec<usize> = Vec::new();
+    for (i, &len_raw) in lens.iter().enumerate() {
+        let len = len_raw.min(n_cols);
+        scratch.clear();
+        match placement {
+            Placement::Uniform => {
+                scratch.extend(rng.sample_indices(n_cols, len));
+            }
+            Placement::Banded => {
+                // Window of width max(3*len, len) centred at the scaled
+                // diagonal position, clipped to the matrix.
+                let centre = if n_rows <= 1 {
+                    0
+                } else {
+                    i * (n_cols - 1) / (n_rows - 1)
+                };
+                let w = (3 * len).max(len).max(1).min(n_cols);
+                let lo = centre.saturating_sub(w / 2).min(n_cols - w);
+                let picked = rng.sample_indices(w, len);
+                scratch.extend(picked.into_iter().map(|p| lo + p));
+                scratch.sort_unstable();
+            }
+        }
+        debug_assert_eq!(scratch.len(), len);
+        for &c in scratch.iter() {
+            col_idx.push(c as Index);
+            values.push(rng.range_f64(-1.0, 1.0));
+        }
+        // Uniform sample_indices returns sorted for the rejection path but
+        // shuffled for the dense path — enforce sorted per CSR convention.
+        let lo_off = *row_ptr.last().unwrap();
+        let row_cols = &mut col_idx[lo_off..];
+        if !row_cols.windows(2).all(|w| w[0] <= w[1]) {
+            // sort cols and values together
+            let mut pairs: Vec<(Index, Value)> = row_cols
+                .iter()
+                .copied()
+                .zip(values[lo_off..].iter().copied())
+                .collect();
+            pairs.sort_unstable_by_key(|&(c, _)| c);
+            for (k, (c, v)) in pairs.into_iter().enumerate() {
+                col_idx[lo_off + k] = c;
+                values[lo_off + k] = v;
+            }
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr::new(n_rows, n_cols, row_ptr, col_idx, values).expect("assembled CSR is valid")
+}
+
+/// Make a matrix symmetric-positive-definite-ish for solver tests: returns
+/// `A + Aᵀ + diag(shift)` where `shift` exceeds the max row sum, giving a
+/// strictly diagonally dominant (hence SPD for symmetric) system.
+pub fn make_spd(a: &Csr) -> Csr {
+    use crate::formats::SparseMatrix as _;
+    assert_eq!(a.n_rows(), a.n_cols(), "make_spd needs a square matrix");
+    let n = a.n_rows();
+    let at = a.transpose();
+    let mut triplets = a.to_triplets();
+    triplets.extend(at.to_triplets());
+    // Row sums of |A + Aᵀ| to size the diagonal shift.
+    let sym = Csr::from_triplets(n, n, &triplets).unwrap();
+    let mut max_row_sum: Value = 0.0;
+    for i in 0..n {
+        let s: Value = sym.row(i).map(|(_, v)| v.abs()).sum();
+        max_row_sum = max_row_sum.max(s);
+    }
+    let shift = max_row_sum + 1.0;
+    let mut t = sym.to_triplets();
+    for i in 0..n {
+        t.push((i, i, shift));
+    }
+    Csr::from_triplets(n, n, &t).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::SparseMatrix;
+
+    #[test]
+    fn random_csr_density_ballpark() {
+        let mut rng = Rng::new(1);
+        let a = random_csr(&mut rng, 100, 100, 0.1);
+        let d = a.nnz() as f64 / 10_000.0;
+        assert!((0.07..0.13).contains(&d), "density {d}");
+    }
+
+    #[test]
+    fn banded_has_zero_dmat() {
+        let mut rng = Rng::new(2);
+        let a = banded_circulant(&mut rng, 50, &[-1, 0, 1]);
+        assert_eq!(a.nnz(), 150);
+        for i in 0..50 {
+            assert_eq!(a.row_len(i), 3);
+        }
+    }
+
+    #[test]
+    fn assemble_exact_row_lengths() {
+        let mut rng = Rng::new(3);
+        let lens = vec![3usize, 0, 7, 1, 4];
+        for placement in [Placement::Banded, Placement::Uniform] {
+            let a = assemble_from_row_lens(&mut rng, 40, &lens, placement);
+            for (i, &l) in lens.iter().enumerate() {
+                assert_eq!(a.row_len(i), l, "row {i} {placement:?}");
+            }
+            a.validate().unwrap();
+            // Columns sorted & unique within rows.
+            for i in 0..lens.len() {
+                let cols: Vec<_> = a.row(i).map(|(c, _)| c).collect();
+                let mut s = cols.clone();
+                s.sort_unstable();
+                s.dedup();
+                assert_eq!(cols, s, "row {i} not sorted/unique");
+            }
+        }
+    }
+
+    #[test]
+    fn assemble_caps_at_ncols() {
+        let mut rng = Rng::new(4);
+        let a = assemble_from_row_lens(&mut rng, 5, &[9], Placement::Uniform);
+        assert_eq!(a.row_len(0), 5);
+    }
+
+    #[test]
+    fn banded_placement_is_local() {
+        let mut rng = Rng::new(5);
+        let lens = vec![5usize; 200];
+        let a = assemble_from_row_lens(&mut rng, 200, &lens, Placement::Banded);
+        for i in 0..200 {
+            for (c, _) in a.row(i) {
+                let d = (c as isize - i as isize).abs();
+                assert!(d <= 20, "row {i} col {c} too far from diagonal");
+            }
+        }
+    }
+
+    #[test]
+    fn make_spd_is_symmetric_dominant() {
+        let mut rng = Rng::new(6);
+        let a = random_csr(&mut rng, 30, 30, 0.1);
+        let s = make_spd(&a);
+        let st = s.transpose();
+        assert_eq!(s, st, "not symmetric");
+        for i in 0..30 {
+            let diag = s.row(i).find(|&(c, _)| c as usize == i).map(|(_, v)| v).unwrap();
+            let off: f64 = s.row(i).filter(|&(c, _)| c as usize != i).map(|(_, v)| v.abs()).sum();
+            assert!(diag > off, "row {i} not dominant: {diag} <= {off}");
+        }
+    }
+}

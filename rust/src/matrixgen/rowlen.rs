@@ -1,0 +1,248 @@
+//! Row-length distribution synthesis.
+//!
+//! Given targets `(n, nnz, μ, σ)` from Table 1, produce a vector of `n` row
+//! lengths whose sum is exactly `nnz` and whose sample standard deviation
+//! approximates `σ`. Two regimes:
+//!
+//! * **Low variation** (`σ/μ` small — chem_master, wang3, epb1, …):
+//!   a clamped rounded normal, then a repair pass that nudges random rows
+//!   by ±1 until the sum is exact (preserving σ to first order).
+//! * **Heavy tail** (`σ/μ` large — memplus, torso1, viscoplastic2):
+//!   a two-point mixture: `n·p` outlier rows of length `b + d` over a base
+//!   of length ≈ `b`. Moment matching gives `d = (σ² + m₁²)/m₁`,
+//!   `p = m₁ / d` with `m₁ = μ − b`, which reproduces both moments exactly
+//!   in expectation (`Var = p·d² − (p·d)²= m₁·d − m₁²`).
+
+use crate::rng::Rng;
+
+/// Sample statistics of a row-length vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LenStats {
+    /// Arithmetic mean μ.
+    pub mean: f64,
+    /// Population standard deviation σ.
+    pub std: f64,
+    /// Maximum length (the ELL bandwidth this vector implies).
+    pub max: usize,
+    /// Total (= nnz).
+    pub sum: usize,
+}
+
+/// Compute [`LenStats`] for a length vector.
+pub fn stats(lens: &[usize]) -> LenStats {
+    let n = lens.len().max(1) as f64;
+    let sum: usize = lens.iter().sum();
+    let mean = sum as f64 / n;
+    let var = lens.iter().map(|&l| (l as f64 - mean).powi(2)).sum::<f64>() / n;
+    LenStats { mean, std: var.sqrt(), max: lens.iter().copied().max().unwrap_or(0), sum }
+}
+
+/// Synthesize `n` row lengths with total exactly `nnz` and standard
+/// deviation approximately `sigma`. `max_cols` caps individual lengths.
+pub fn synthesize(rng: &mut Rng, n: usize, nnz: usize, sigma: f64, max_cols: usize) -> Vec<usize> {
+    synthesize_with_max(rng, n, nnz, sigma, max_cols, None)
+}
+
+/// Like [`synthesize`], but when `target_max` is given the heavy-tail
+/// mixture is solved so the longest rows land near that bandwidth (the
+/// published max-row of the original UF matrix), pinning the ELL fill
+/// ratio as well as σ. With base length `b`, outlier excess `d = max − b`
+/// and rate `p = (μ−b)/d`, the variance is `(μ−b)·d − (μ−b)²`; requiring
+/// it to equal σ² gives `b = μ − σ²/(max − μ)`.
+pub fn synthesize_with_max(
+    rng: &mut Rng,
+    n: usize,
+    nnz: usize,
+    sigma: f64,
+    max_cols: usize,
+    target_max: Option<usize>,
+) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let mu = nnz as f64 / n as f64;
+    let mut lens = match target_max {
+        Some(m) if (m as f64) > mu + sigma => {
+            synth_heavy_tail_pinned(rng, n, mu, sigma, max_cols, m as f64)
+        }
+        _ if sigma <= mu * 0.75 => synth_normal(rng, n, mu, sigma, max_cols),
+        _ => synth_heavy_tail(rng, n, mu, sigma, max_cols),
+    };
+    repair_sum(rng, &mut lens, nnz, max_cols);
+    lens
+}
+
+/// Two-point mixture with the outlier length pinned at `target_max`.
+fn synth_heavy_tail_pinned(
+    rng: &mut Rng,
+    n: usize,
+    mu: f64,
+    sigma: f64,
+    max_cols: usize,
+    target_max: f64,
+) -> Vec<usize> {
+    let target_max = target_max.min(max_cols as f64);
+    // b = mu - sigma^2/(max - mu), clamped to at least 1.
+    let b = (mu - sigma * sigma / (target_max - mu)).max(1.0);
+    let m1 = (mu - b).max(1e-3);
+    let d = (target_max - b).max(1.0);
+    let p = (m1 / d).clamp(0.0, 0.5);
+    let n_out = ((n as f64 * p).round() as usize).clamp(1, n / 2 + 1);
+    let mut lens: Vec<usize> = (0..n)
+        .map(|_| rng.next_rounded_normal(b, (b * 0.1).max(0.5)).clamp(1, max_cols))
+        .collect();
+    for idx in rng.sample_indices(n, n_out) {
+        // Tight jitter so the bandwidth stays near the published max.
+        let l = rng.next_rounded_normal(target_max, target_max * 0.03);
+        lens[idx] = l.clamp(1, max_cols);
+    }
+    lens
+}
+
+/// Clamped rounded normal draw.
+fn synth_normal(rng: &mut Rng, n: usize, mu: f64, sigma: f64, max_cols: usize) -> Vec<usize> {
+    (0..n)
+        .map(|_| rng.next_rounded_normal(mu, sigma).min(max_cols))
+        .collect()
+}
+
+/// Two-point mixture for heavy-tailed targets (memplus/torso1-like).
+fn synth_heavy_tail(rng: &mut Rng, n: usize, mu: f64, sigma: f64, max_cols: usize) -> Vec<usize> {
+    // Base length: most rows are short. Use half the mean, at least 1.
+    let b = (mu * 0.5).max(1.0).floor();
+    let m1 = (mu - b).max(0.5);
+    let d = (sigma * sigma + m1 * m1) / m1;
+    let p = (m1 / d).clamp(0.0, 0.5);
+    let n_out = ((n as f64 * p).round() as usize).clamp(1, n / 2 + 1);
+    let out_len = ((b + d).round() as usize).min(max_cols).max(1);
+    let mut lens: Vec<usize> = (0..n)
+        .map(|_| {
+            // Small jitter on the base so it isn't a delta spike.
+            let jitter = rng.next_rounded_normal(b, (b * 0.2).max(0.5));
+            jitter.clamp(1, max_cols)
+        })
+        .collect();
+    for idx in rng.sample_indices(n, n_out) {
+        // Jitter outlier lengths ±20% so the tail isn't a single atom.
+        let l = rng.next_rounded_normal(out_len as f64, out_len as f64 * 0.2);
+        lens[idx] = l.clamp(1, max_cols);
+    }
+    lens
+}
+
+/// Nudge random rows by ±1 until `sum(lens) == nnz`. Rows at 0 or
+/// `max_cols` are skipped, so termination is guaranteed for feasible
+/// targets (`nnz ≤ n · max_cols`).
+fn repair_sum(rng: &mut Rng, lens: &mut [usize], nnz: usize, max_cols: usize) {
+    assert!(
+        nnz <= lens.len() * max_cols,
+        "infeasible target: nnz={nnz} > n*max_cols={}",
+        lens.len() * max_cols
+    );
+    let mut sum: usize = lens.iter().sum();
+    let n = lens.len();
+    let mut stall = 0usize;
+    while sum != nnz && stall < 100 * n + 1000 {
+        let i = rng.range(0, n);
+        if sum < nnz && lens[i] < max_cols {
+            lens[i] += 1;
+            sum += 1;
+        } else if sum > nnz && lens[i] > 0 {
+            lens[i] -= 1;
+            sum -= 1;
+        } else {
+            stall += 1;
+            continue;
+        }
+        stall = 0;
+    }
+    // Deterministic fallback sweep for pathological cases.
+    if sum != nnz {
+        for l in lens.iter_mut() {
+            while sum < nnz && *l < max_cols {
+                *l += 1;
+                sum += 1;
+            }
+            while sum > nnz && *l > 0 {
+                *l -= 1;
+                sum -= 1;
+            }
+        }
+    }
+    debug_assert_eq!(sum, nnz);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sum_low_variance() {
+        let mut rng = Rng::new(10);
+        let lens = synthesize(&mut rng, 10_000, 49_800, 0.14, 10_000);
+        let s = stats(&lens);
+        assert_eq!(s.sum, 49_800);
+        assert!((s.mean - 4.98).abs() < 0.01);
+        // σ target 0.14 is tiny; allow generous but bounded slack.
+        assert!(s.std < 0.6, "std {}", s.std);
+    }
+
+    #[test]
+    fn heavy_tail_matches_moments() {
+        // memplus: n=17758, nnz=126150, mu=7.10, sigma=22.03.
+        let mut rng = Rng::new(11);
+        let lens = synthesize(&mut rng, 17_758, 126_150, 22.03, 17_758);
+        let s = stats(&lens);
+        assert_eq!(s.sum, 126_150);
+        assert!((s.mean - 7.10).abs() < 0.02, "mean {}", s.mean);
+        let dmat = s.std / s.mean;
+        assert!((2.0..4.5).contains(&dmat), "D_mat {dmat} target 3.10");
+        assert!(s.max > 100, "tail too short: max {}", s.max);
+    }
+
+    #[test]
+    fn extreme_tail_torso1_like() {
+        // torso1 scaled 1/10: n=11616, nnz=851650, mu=73.3, sigma=419.6.
+        let mut rng = Rng::new(12);
+        let lens = synthesize(&mut rng, 11_616, 851_650, 419.58, 11_616);
+        let s = stats(&lens);
+        assert_eq!(s.sum, 851_650);
+        let dmat = s.std / s.mean;
+        assert!((3.5..8.5).contains(&dmat), "D_mat {dmat} target 5.72");
+    }
+
+    #[test]
+    fn moderate_sigma_regime() {
+        // ex19: mu=21.64 sigma=12.28 (sigma/mu = 0.57 -> normal regime).
+        let mut rng = Rng::new(13);
+        let lens = synthesize(&mut rng, 12_005, 259_879, 12.28, 12_005);
+        let s = stats(&lens);
+        assert_eq!(s.sum, 259_879);
+        let dmat = s.std / s.mean;
+        assert!((0.4..0.75).contains(&dmat), "D_mat {dmat} target 0.56");
+    }
+
+    #[test]
+    fn feasibility_assertion() {
+        let mut rng = Rng::new(14);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            synthesize(&mut rng, 2, 100, 1.0, 3)
+        }));
+        assert!(r.is_err(), "infeasible target must panic");
+    }
+
+    #[test]
+    fn zero_rows() {
+        let mut rng = Rng::new(15);
+        assert!(synthesize(&mut rng, 0, 0, 0.0, 10).is_empty());
+    }
+
+    #[test]
+    fn stats_of_constant_vector() {
+        let s = stats(&[4, 4, 4, 4]);
+        assert_eq!(s.mean, 4.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.max, 4);
+        assert_eq!(s.sum, 16);
+    }
+}

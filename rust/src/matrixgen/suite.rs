@@ -1,0 +1,229 @@
+//! The Table-1 benchmark suite, regenerated synthetically.
+//!
+//! Each [`MatrixSpec`] carries the published `(N, NNZ, μ, σ)` of one UF
+//! collection matrix plus a structure class; [`generate`] synthesizes a
+//! matrix matching those moments (and therefore the published `D_mat`).
+//! A `scale` factor shrinks `N`/`NNZ` proportionally (keeping `μ`, `σ`,
+//! `D_mat`) so tests can run the whole suite quickly.
+
+use super::rowlen;
+use super::{assemble_from_row_lens, Placement};
+use crate::formats::Csr;
+use crate::rng::Rng;
+
+/// Qualitative structure class driving column placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GenClass {
+    /// FEM / device stencil: near-diagonal banded locality.
+    BandedFem,
+    /// Circuit / graph: uniform scatter, heavy-tailed rows.
+    Circuit,
+    /// Bio-mechanical power-tail (torso1): extreme outlier rows.
+    PowerTail,
+}
+
+/// One Table-1 row.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    /// Paper's matrix number (1–22).
+    pub no: u32,
+    /// UF collection name.
+    pub name: &'static str,
+    /// Dimension `N` (all Table-1 matrices are square).
+    pub n: usize,
+    /// Non-zero count `NNZ`.
+    pub nnz: usize,
+    /// Published mean non-zeros per row `μ`.
+    pub mu: f64,
+    /// Published standard deviation `σ`.
+    pub sigma: f64,
+    /// Published `D_mat = σ/μ`.
+    pub d_mat: f64,
+    /// Application field (Table-1 "Field" column).
+    pub field: &'static str,
+    /// Table-1 set (I or II).
+    pub set: u8,
+    /// Structure class used for synthesis.
+    pub class: GenClass,
+    /// Published max non-zeros per row of the original UF matrix, where
+    /// known — pins the synthetic ELL bandwidth (hence fill ratio).
+    pub max_row: Option<usize>,
+}
+
+impl MatrixSpec {
+    const fn new(
+        no: u32,
+        name: &'static str,
+        n: usize,
+        nnz: usize,
+        mu: f64,
+        sigma: f64,
+        d_mat: f64,
+        field: &'static str,
+        set: u8,
+        class: GenClass,
+    ) -> Self {
+        Self { no, name, n, nnz, mu, sigma, d_mat, field, set, class, max_row: None }
+    }
+
+    const fn with_max_row(mut self, max_row: usize) -> Self {
+        self.max_row = Some(max_row);
+        self
+    }
+}
+
+/// The 22 Table-1 matrices (sets I and II).
+pub fn table1_specs() -> Vec<MatrixSpec> {
+    use GenClass::*;
+    vec![
+        MatrixSpec::new(1, "chipcool0", 20_082, 281_150, 14.00, 2.69, 0.19, "2D/3D", 1, BandedFem),
+        MatrixSpec::new(2, "chem_master1", 40_401, 201_201, 4.98, 0.14, 0.02, "2D/3D", 1, BandedFem),
+        MatrixSpec::new(3, "torso1", 116_158, 8_516_500, 73.31, 419.58, 5.72, "2D/3D", 1, PowerTail)
+            .with_max_row(3_263),
+        MatrixSpec::new(4, "torso2", 115_067, 1_033_473, 8.91, 0.58, 0.06, "2D/3D", 1, BandedFem),
+        MatrixSpec::new(5, "torso3", 259_156, 4_429_042, 17.09, 4.39, 0.25, "2D/3D", 1, BandedFem),
+        MatrixSpec::new(6, "memplus", 17_758, 126_150, 7.10, 22.03, 3.10, "Electric circuit", 1, Circuit)
+            .with_max_row(574),
+        MatrixSpec::new(7, "ex19", 12_005, 259_879, 21.64, 12.28, 0.56, "Fluid dynamics", 1, BandedFem),
+        MatrixSpec::new(8, "poisson3Da", 13_514, 352_762, 26.10, 13.76, 0.52, "Fluid dynamics", 1, BandedFem),
+        MatrixSpec::new(9, "poisson3Db", 85_623, 2_374_949, 27.73, 14.71, 0.53, "Fluid dynamics", 1, BandedFem),
+        MatrixSpec::new(10, "airfoil_2d", 14_214, 259_688, 18.26, 3.94, 0.21, "Fluid dynamics", 1, BandedFem),
+        MatrixSpec::new(11, "viscoplastic2", 32_769, 381_326, 11.63, 13.95, 1.19, "Materials", 1, Circuit),
+        MatrixSpec::new(12, "xenon1", 48_600, 1_181_120, 24.30, 4.25, 0.17, "Materials", 2, BandedFem),
+        MatrixSpec::new(13, "xenon2", 157_464, 3_866_688, 24.55, 4.06, 0.16, "Materials", 2, BandedFem),
+        MatrixSpec::new(14, "wang3", 26_064, 177_168, 6.79, 0.43, 0.06, "Semiconductor device", 2, BandedFem),
+        MatrixSpec::new(15, "wang4", 26_068, 177_196, 6.79, 0.43, 0.06, "Semiconductor device", 2, BandedFem),
+        MatrixSpec::new(16, "ec132", 51_993, 380_415, 7.31, 3.35, 0.45, "Semiconductor device", 2, BandedFem),
+        MatrixSpec::new(17, "sme3Da", 12_504, 874_887, 69.96, 34.92, 0.49, "Structural", 2, BandedFem),
+        MatrixSpec::new(18, "sme3Db", 29_067, 2_081_063, 71.59, 37.06, 0.51, "Structural", 2, BandedFem),
+        MatrixSpec::new(19, "sme3Dc", 42_930, 3_148_656, 73.34, 36.98, 0.50, "Structural", 2, BandedFem),
+        MatrixSpec::new(20, "epb1", 14_734, 95_053, 6.45, 0.57, 0.08, "Thermal", 2, BandedFem),
+        MatrixSpec::new(21, "epb2", 25_228, 175_027, 6.93, 6.38, 0.92, "Thermal", 2, Circuit),
+        MatrixSpec::new(22, "epb3", 84_617, 463_625, 5.47, 0.54, 0.10, "Thermal", 2, BandedFem),
+    ]
+}
+
+/// Look up a spec by its Table-1 name.
+pub fn spec_by_name(name: &str) -> Option<MatrixSpec> {
+    table1_specs().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+/// Generate the matrix for `spec` at `scale` ∈ (0, 1]. `scale` shrinks
+/// `N` and `NNZ` together so `μ`, `σ` and `D_mat` are preserved; 1.0
+/// reproduces the published size. The generator is deterministic in
+/// `(spec.no, seed, scale)`.
+pub fn generate(spec: &MatrixSpec, seed: u64, scale: f64) -> Csr {
+    assert!(scale > 0.0 && scale <= 1.0, "scale must be in (0,1], got {scale}");
+    let n = ((spec.n as f64 * scale).round() as usize).max(8);
+    // Keep μ: nnz scales with n.
+    let nnz = ((spec.mu * n as f64).round() as usize).min(n * n);
+    let mut rng = Rng::new(seed ^ (spec.no as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let lens = rowlen::synthesize_with_max(&mut rng, n, nnz, spec.sigma, n, spec.max_row);
+    let placement = match spec.class {
+        GenClass::BandedFem => Placement::Banded,
+        GenClass::Circuit | GenClass::PowerTail => Placement::Uniform,
+    };
+    assemble_from_row_lens(&mut rng, n, &lens, placement)
+}
+
+/// Measured moments of a generated matrix, for Table-1 reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasuredStats {
+    /// Rows.
+    pub n: usize,
+    /// Non-zeros.
+    pub nnz: usize,
+    /// Mean non-zeros/row.
+    pub mu: f64,
+    /// Std non-zeros/row.
+    pub sigma: f64,
+    /// σ/μ.
+    pub d_mat: f64,
+    /// Max row length (ELL bandwidth).
+    pub max_row: usize,
+}
+
+/// Measure the Table-1 statistics of any CSR matrix.
+pub fn measure(a: &Csr) -> MeasuredStats {
+    use crate::formats::SparseMatrix as _;
+    let lens: Vec<usize> = (0..a.n_rows()).map(|i| a.row_len(i)).collect();
+    let s = rowlen::stats(&lens);
+    MeasuredStats {
+        n: a.n_rows(),
+        nnz: a.nnz(),
+        mu: s.mean,
+        sigma: s.std,
+        d_mat: if s.mean > 0.0 { s.std / s.mean } else { 0.0 },
+        max_row: s.max,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_22_rows_with_published_dmat() {
+        let specs = table1_specs();
+        assert_eq!(specs.len(), 22);
+        for s in &specs {
+            let computed = s.sigma / s.mu;
+            assert!(
+                (computed - s.d_mat).abs() < 0.02,
+                "{}: published D_mat {} vs σ/μ {computed}",
+                s.name,
+                s.d_mat
+            );
+        }
+        // Set split: 11 + 11.
+        assert_eq!(specs.iter().filter(|s| s.set == 1).count(), 11);
+        assert_eq!(specs.iter().filter(|s| s.set == 2).count(), 11);
+    }
+
+    #[test]
+    fn generated_moments_match_spec_at_small_scale() {
+        for spec in table1_specs() {
+            let a = generate(&spec, 42, 0.05);
+            let m = measure(&a);
+            assert!(
+                (m.mu - spec.mu).abs() / spec.mu < 0.05,
+                "{}: μ {} vs {}",
+                spec.name,
+                m.mu,
+                spec.mu
+            );
+            let d_err = (m.d_mat - spec.d_mat).abs() / spec.d_mat.max(0.02);
+            assert!(
+                d_err < 0.75,
+                "{}: D_mat {} vs {} (rel err {d_err})",
+                spec.name,
+                m.d_mat,
+                spec.d_mat
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = spec_by_name("memplus").unwrap();
+        let a = generate(&spec, 7, 0.05);
+        let b = generate(&spec, 7, 0.05);
+        assert_eq!(a, b);
+        let c = generate(&spec, 8, 0.05);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn spec_lookup() {
+        assert!(spec_by_name("torso1").is_some());
+        assert!(spec_by_name("TORSO1").is_some());
+        assert!(spec_by_name("nope").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "scale must be in (0,1]")]
+    fn rejects_bad_scale() {
+        let spec = table1_specs().remove(0);
+        let _ = generate(&spec, 1, 0.0);
+    }
+}

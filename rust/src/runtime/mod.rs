@@ -1,0 +1,303 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas SpMV
+//! artifacts from the rust request path.
+//!
+//! The build-time Python side (`python/compile/aot.py`) lowers the L2 JAX
+//! model (which calls the L1 Pallas ELL kernel) to **HLO text** — the
+//! interchange format this image's xla_extension 0.5.1 accepts — for a
+//! fixed set of `(rows, bandwidth)` shape buckets, and writes
+//! `artifacts/manifest.tsv`. This module:
+//!
+//! * parses the manifest ([`Manifest`]);
+//! * compiles artifacts on the PJRT CPU client lazily and caches the
+//!   executables ([`XlaRuntime`]) — one compiled executable per model
+//!   variant, compiled at most once;
+//! * exposes [`EllXlaKernel`], an ELL SpMV that pads a matrix into its
+//!   bucket and executes on XLA, so the coordinator can route SpMV
+//!   requests to the Pallas-authored kernel with Python long gone.
+
+pub mod service;
+
+pub use service::{XlaHandle, XlaService};
+
+use crate::formats::{Ell, SparseMatrix};
+use crate::{Result, Value};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One artifact entry: an HLO module computing ELL SpMV for a shape bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Kernel kind (currently `ell_spmv`).
+    pub kind: String,
+    /// Bucket row count.
+    pub rows: usize,
+    /// Bucket bandwidth.
+    pub bandwidth: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+}
+
+/// The parsed `artifacts/manifest.tsv`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Directory the manifest lives in (file paths are relative to it).
+    pub dir: PathBuf,
+    /// Entries in file order.
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = t.split('\t').collect();
+            anyhow::ensure!(
+                cols.len() == 4,
+                "manifest line {}: expected 4 tab-separated fields, got {}",
+                lineno + 1,
+                cols.len()
+            );
+            entries.push(ArtifactEntry {
+                kind: cols[0].to_string(),
+                rows: cols[1].parse()?,
+                bandwidth: cols[2].parse()?,
+                file: cols[3].to_string(),
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest {} is empty", path.display());
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    /// The smallest bucket that fits `(rows, bandwidth)`, or `None` if the
+    /// matrix exceeds every bucket.
+    pub fn bucket_for(&self, kind: &str, rows: usize, bandwidth: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind && e.rows >= rows && e.bandwidth >= bandwidth)
+            .min_by_key(|e| (e.rows, e.bandwidth))
+    }
+
+    /// All bucketed shapes for a kind (used by reports/tests).
+    pub fn buckets(&self, kind: &str) -> Vec<(usize, usize)> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| (e.rows, e.bandwidth))
+            .collect()
+    }
+}
+
+/// Lazily-compiling PJRT executable cache, one per artifact.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<(usize, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu: {e:?}"))?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for a bucket.
+    fn executable(
+        &self,
+        entry: &ArtifactEntry,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (entry.rows, entry.bandwidth);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-UTF8 path {}", path.display()))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute ELL SpMV through the bucketed artifact: pads
+    /// `(values, col_idx, x)` to the bucket shape, runs, truncates `y`.
+    ///
+    /// Inputs are band-major exactly like [`Ell`]: `values[k*n + i]`.
+    pub fn ell_spmv(
+        &self,
+        n_rows: usize,
+        bandwidth: usize,
+        values: &[Value],
+        col_idx_i32: &[i32],
+        x: &[Value],
+        y: &mut [Value],
+    ) -> Result<()> {
+        let entry = self
+            .manifest
+            .bucket_for("ell_spmv", n_rows, bandwidth)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact bucket fits rows={n_rows} bandwidth={bandwidth} \
+                     (available: {:?})",
+                    self.manifest.buckets("ell_spmv")
+                )
+            })?
+            .clone();
+        let exe = self.executable(&entry)?;
+        let (br, bk) = (entry.rows, entry.bandwidth);
+
+        // Pad band-major arrays into the bucket. Padding values are 0.0
+        // with column 0 — contributes 0.0 * x[0].
+        let mut pv = vec![0.0f64; br * bk];
+        let mut pc = vec![0i32; br * bk];
+        for k in 0..bandwidth {
+            pv[k * br..k * br + n_rows].copy_from_slice(&values[k * n_rows..(k + 1) * n_rows]);
+            pc[k * br..k * br + n_rows]
+                .copy_from_slice(&col_idx_i32[k * n_rows..(k + 1) * n_rows]);
+        }
+        let mut px = vec![0.0f64; br];
+        px[..x.len().min(br)].copy_from_slice(&x[..x.len().min(br)]);
+
+        let lv = xla::Literal::vec1(&pv)
+            .reshape(&[bk as i64, br as i64])
+            .map_err(|e| anyhow::anyhow!("reshape values: {e:?}"))?;
+        let lc = xla::Literal::vec1(&pc)
+            .reshape(&[bk as i64, br as i64])
+            .map_err(|e| anyhow::anyhow!("reshape col_idx: {e:?}"))?;
+        let lx = xla::Literal::vec1(&px);
+        let result = exe
+            .execute::<xla::Literal>(&[lv, lc, lx])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let full: Vec<f64> = out
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(full.len() == br, "bucket output length {} != {br}", full.len());
+        y.copy_from_slice(&full[..y.len()]);
+        Ok(())
+    }
+}
+
+/// ELL SpMV kernel backed by the XLA runtime — the coordinator's
+/// "serve through the Pallas artifact" path.
+pub struct EllXlaKernel<'rt> {
+    rt: &'rt XlaRuntime,
+    ell: Ell,
+    col_idx_i32: Vec<i32>,
+}
+
+impl<'rt> EllXlaKernel<'rt> {
+    /// Wrap an ELL matrix for execution on `rt`. Fails early if no bucket
+    /// fits.
+    pub fn new(rt: &'rt XlaRuntime, ell: Ell) -> Result<Self> {
+        anyhow::ensure!(
+            rt.manifest
+                .bucket_for("ell_spmv", ell.n_rows(), ell.bandwidth)
+                .is_some(),
+            "no artifact bucket for rows={} bandwidth={}",
+            ell.n_rows(),
+            ell.bandwidth
+        );
+        let col_idx_i32: Vec<i32> = ell.col_idx.iter().map(|&c| c as i32).collect();
+        Ok(Self { rt, ell, col_idx_i32 })
+    }
+
+    /// The wrapped matrix.
+    pub fn ell(&self) -> &Ell {
+        &self.ell
+    }
+
+    /// `y = A·x` on the XLA executable.
+    pub fn spmv(&self, x: &[Value], y: &mut [Value]) -> Result<()> {
+        assert_eq!(x.len(), self.ell.n_cols(), "x length");
+        assert_eq!(y.len(), self.ell.n_rows(), "y length");
+        self.rt.ell_spmv(
+            self.ell.n_rows(),
+            self.ell.bandwidth,
+            &self.ell.values,
+            &self.col_idx_i32,
+            x,
+            y,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, lines: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), lines).unwrap();
+    }
+
+    #[test]
+    fn manifest_parse_and_bucket_selection() {
+        let dir = std::env::temp_dir().join("spmv_at_manifest_test");
+        write_manifest(
+            &dir,
+            "# comment\nell_spmv\t1024\t8\ta.hlo.txt\nell_spmv\t1024\t32\tb.hlo.txt\nell_spmv\t8192\t8\tc.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let b = m.bucket_for("ell_spmv", 1000, 6).unwrap();
+        assert_eq!((b.rows, b.bandwidth), (1024, 8));
+        let b = m.bucket_for("ell_spmv", 1000, 20).unwrap();
+        assert_eq!((b.rows, b.bandwidth), (1024, 32));
+        let b = m.bucket_for("ell_spmv", 5000, 8).unwrap();
+        assert_eq!((b.rows, b.bandwidth), (8192, 8));
+        assert!(m.bucket_for("ell_spmv", 100_000, 8).is_none());
+        assert!(m.bucket_for("coo_spmv", 10, 1).is_none());
+        assert_eq!(m.buckets("ell_spmv").len(), 3);
+    }
+
+    #[test]
+    fn manifest_rejects_bad_lines() {
+        let dir = std::env::temp_dir().join("spmv_at_manifest_bad");
+        write_manifest(&dir, "ell_spmv\t1024\n");
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "");
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "ell_spmv\tx\t8\ta.hlo.txt\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    // End-to-end XLA execution tests live in rust/tests/runtime_xla.rs and
+    // run only when `make artifacts` has produced real HLO files.
+}

@@ -1,0 +1,159 @@
+//! XLA runtime service: pins the (non-`Send`) PJRT client to one dedicated
+//! thread and serves SpMV executions over a channel.
+//!
+//! The `xla` crate's client and executables hold `Rc` internals, so they
+//! must never cross threads. The coordinator therefore talks to
+//! [`XlaHandle`] — a cheap, cloneable, `Send + Sync` front — while the
+//! actual `XlaRuntime` lives inside the service thread for its whole life.
+
+use super::XlaRuntime;
+use crate::{Result, Value};
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+enum Msg {
+    EllSpmv {
+        n_rows: usize,
+        bandwidth: usize,
+        values: Vec<Value>,
+        col_idx_i32: Vec<i32>,
+        x: Vec<Value>,
+        resp: mpsc::Sender<Result<Vec<Value>>>,
+    },
+    /// Does any bucket fit (rows, bandwidth)?
+    HasBucket {
+        rows: usize,
+        bandwidth: usize,
+        resp: mpsc::Sender<bool>,
+    },
+    Platform {
+        resp: mpsc::Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the XLA service.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: mpsc::SyncSender<Msg>,
+}
+
+impl XlaHandle {
+    /// Whether an artifact bucket fits the given ELL shape.
+    pub fn has_bucket(&self, rows: usize, bandwidth: usize) -> bool {
+        let (resp, rx) = mpsc::channel();
+        if self.tx.send(Msg::HasBucket { rows, bandwidth, resp }).is_err() {
+            return false;
+        }
+        rx.recv().unwrap_or(false)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> Result<String> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Platform { resp })
+            .map_err(|_| anyhow::anyhow!("xla service stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("xla service dropped response"))
+    }
+
+    /// Execute ELL SpMV on the service thread (band-major inputs, like
+    /// [`crate::formats::Ell`]).
+    pub fn ell_spmv(
+        &self,
+        n_rows: usize,
+        bandwidth: usize,
+        values: &[Value],
+        col_idx_i32: &[i32],
+        x: &[Value],
+    ) -> Result<Vec<Value>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::EllSpmv {
+                n_rows,
+                bandwidth,
+                values: values.to_vec(),
+                col_idx_i32: col_idx_i32.to_vec(),
+                x: x.to_vec(),
+                resp,
+            })
+            .map_err(|_| anyhow::anyhow!("xla service stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("xla service dropped response"))?
+    }
+}
+
+/// The service thread owner. Dropping it shuts the thread down.
+pub struct XlaService {
+    tx: mpsc::SyncSender<Msg>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl XlaService {
+    /// Spawn the service over an artifact directory. Fails (synchronously)
+    /// if the manifest cannot be loaded or the PJRT client cannot start.
+    pub fn spawn(artifact_dir: PathBuf) -> Result<(Self, XlaHandle)> {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(32);
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::spawn(move || {
+            let rt = match XlaRuntime::new(&artifact_dir) {
+                Ok(rt) => {
+                    let _ = init_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::EllSpmv { n_rows, bandwidth, values, col_idx_i32, x, resp } => {
+                        let mut y = vec![0.0; n_rows];
+                        let r = rt
+                            .ell_spmv(n_rows, bandwidth, &values, &col_idx_i32, &x, &mut y)
+                            .map(|()| y);
+                        let _ = resp.send(r);
+                    }
+                    Msg::HasBucket { rows, bandwidth, resp } => {
+                        let _ = resp.send(
+                            rt.manifest().bucket_for("ell_spmv", rows, bandwidth).is_some(),
+                        );
+                    }
+                    Msg::Platform { resp } => {
+                        let _ = resp.send(rt.platform());
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+        });
+        init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("xla service thread died during init"))??;
+        let client = XlaHandle { tx: tx.clone() };
+        Ok((Self { tx, handle: Some(handle) }, client))
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_fails_cleanly_without_manifest() {
+        let dir = std::env::temp_dir().join("spmv_at_no_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.tsv"));
+        assert!(XlaService::spawn(dir).is_err());
+    }
+
+    // Execution tests require real artifacts; see rust/tests/runtime_xla.rs.
+}

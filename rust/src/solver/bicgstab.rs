@@ -1,0 +1,152 @@
+//! BiCGStab for general (unsymmetric) systems — most Table-1 matrices are
+//! unsymmetric, so this is the solver their applications would actually run.
+
+use super::{axpy, dot, norm2, SolveStats, SolverOptions, SpmvOp};
+use crate::{Result, Value};
+
+/// Solve `A·x = b` with BiCGStab (van der Vorst). `x` carries the initial
+/// guess in and the solution out.
+pub fn bicgstab<Op: SpmvOp + ?Sized>(
+    a: &mut Op,
+    b: &[Value],
+    x: &mut [Value],
+    opts: &SolverOptions,
+) -> Result<SolveStats> {
+    let n = a.n();
+    anyhow::ensure!(b.len() == n && x.len() == n, "dimension mismatch");
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut spmv_calls = 0usize;
+
+    let mut r = vec![0.0; n];
+    a.apply(x, &mut r)?;
+    spmv_calls += 1;
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    let r0 = r.clone(); // shadow residual
+    let mut rho_prev = 1.0;
+    let mut alpha = 1.0;
+    let mut omega = 1.0;
+    let mut v = vec![0.0; n];
+    let mut p = vec![0.0; n];
+    let mut s = vec![0.0; n];
+    let mut t = vec![0.0; n];
+
+    for k in 0..opts.max_iters {
+        let res = norm2(&r);
+        if res / bnorm <= opts.tol {
+            return Ok(SolveStats { iterations: k, residual: res, converged: true, spmv_calls });
+        }
+        let rho = dot(&r0, &r);
+        anyhow::ensure!(rho.abs() > 1e-300, "BiCGStab breakdown: rho = {rho}");
+        if k == 0 {
+            p.copy_from_slice(&r);
+        } else {
+            let beta = (rho / rho_prev) * (alpha / omega);
+            for i in 0..n {
+                p[i] = r[i] + beta * (p[i] - omega * v[i]);
+            }
+        }
+        a.apply(&p, &mut v)?;
+        spmv_calls += 1;
+        let r0v = dot(&r0, &v);
+        anyhow::ensure!(r0v.abs() > 1e-300, "BiCGStab breakdown: r0·v = {r0v}");
+        alpha = rho / r0v;
+        for i in 0..n {
+            s[i] = r[i] - alpha * v[i];
+        }
+        // Early half-step convergence.
+        let snorm = norm2(&s);
+        if snorm / bnorm <= opts.tol {
+            axpy(alpha, &p, x);
+            return Ok(SolveStats {
+                iterations: k + 1,
+                residual: snorm,
+                converged: true,
+                spmv_calls,
+            });
+        }
+        a.apply(&s, &mut t)?;
+        spmv_calls += 1;
+        let tt = dot(&t, &t);
+        anyhow::ensure!(tt > 1e-300, "BiCGStab breakdown: t·t = {tt}");
+        omega = dot(&t, &s) / tt;
+        anyhow::ensure!(omega.abs() > 1e-300, "BiCGStab breakdown: omega = {omega}");
+        for i in 0..n {
+            x[i] += alpha * p[i] + omega * s[i];
+            r[i] = s[i] - omega * t[i];
+        }
+        rho_prev = rho;
+    }
+    let res = norm2(&r);
+    Ok(SolveStats {
+        iterations: opts.max_iters,
+        residual: res,
+        converged: res / bnorm <= opts.tol,
+        spmv_calls,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{assert_solution, spd_system};
+    use super::*;
+    use crate::formats::{Csr, SparseMatrix};
+    use crate::matrixgen::random_csr;
+    use crate::rng::Rng;
+
+    /// Unsymmetric diagonally dominant system.
+    fn unsym_system(seed: u64, n: usize) -> (Csr, Vec<Value>, Vec<Value>) {
+        let mut rng = Rng::new(seed);
+        let a = random_csr(&mut rng, n, n, 0.08);
+        let mut t = a.to_triplets();
+        // Dominant diagonal (keeps the spectrum in the right half plane).
+        for i in 0..n {
+            let row_sum: f64 = a.row(i).map(|(_, v)| v.abs()).sum();
+            t.push((i, i, row_sum + 1.0));
+        }
+        let a = Csr::from_triplets(n, n, &t).unwrap();
+        let x_true: Vec<Value> = (0..n).map(|i| ((i * 3 + 1) as f64 * 0.211).cos()).collect();
+        let mut b = vec![0.0; n];
+        a.spmv(&x_true, &mut b);
+        (a, b, x_true)
+    }
+
+    #[test]
+    fn bicgstab_solves_unsymmetric_system() {
+        let (mut a, b, x_true) = unsym_system(21, 150);
+        let mut x = vec![0.0; 150];
+        let stats = bicgstab(&mut a, &b, &mut x, &SolverOptions::default()).unwrap();
+        assert!(stats.converged, "residual {}", stats.residual);
+        assert_solution(&x, &x_true, 1e-6);
+    }
+
+    #[test]
+    fn bicgstab_also_handles_spd() {
+        let (mut a, b, x_true) = spd_system(22, 90);
+        let mut x = vec![0.0; 90];
+        let stats = bicgstab(&mut a, &b, &mut x, &SolverOptions::default()).unwrap();
+        assert!(stats.converged);
+        assert_solution(&x, &x_true, 1e-6);
+    }
+
+    #[test]
+    fn bicgstab_counts_two_spmv_per_iteration() {
+        let (mut a, b, _) = unsym_system(23, 60);
+        let mut x = vec![0.0; 60];
+        let stats = bicgstab(&mut a, &b, &mut x, &SolverOptions::default()).unwrap();
+        // 1 initial + ~2 per full iteration.
+        assert!(stats.spmv_calls >= stats.iterations, "{stats:?}");
+        assert!(stats.spmv_calls <= 2 * stats.iterations + 2, "{stats:?}");
+    }
+
+    #[test]
+    fn bicgstab_zero_rhs() {
+        let (mut a, _, _) = unsym_system(24, 30);
+        let b = vec![0.0; 30];
+        let mut x = vec![0.0; 30];
+        let stats = bicgstab(&mut a, &b, &mut x, &SolverOptions::default()).unwrap();
+        assert!(stats.converged);
+        assert_eq!(stats.iterations, 0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Conjugate Gradient for SPD systems — the canonical SpMV-bound iterative
+//! solver the paper's amortisation argument targets.
+
+use super::{axpy, dot, norm2, xpby, SolveStats, SolverOptions, SpmvOp};
+use crate::{Result, Value};
+
+/// Solve `A·x = b` with (unpreconditioned) CG. `x` carries the initial
+/// guess in and the solution out.
+pub fn cg<Op: SpmvOp + ?Sized>(
+    a: &mut Op,
+    b: &[Value],
+    x: &mut [Value],
+    opts: &SolverOptions,
+) -> Result<SolveStats> {
+    let n = a.n();
+    anyhow::ensure!(b.len() == n && x.len() == n, "dimension mismatch");
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut spmv_calls = 0usize;
+
+    // r = b - A x0
+    let mut r = vec![0.0; n];
+    a.apply(x, &mut r)?;
+    spmv_calls += 1;
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let mut rr = dot(&r, &r);
+
+    for k in 0..opts.max_iters {
+        if rr.sqrt() / bnorm <= opts.tol {
+            return Ok(SolveStats {
+                iterations: k,
+                residual: rr.sqrt(),
+                converged: true,
+                spmv_calls,
+            });
+        }
+        a.apply(&p, &mut ap)?;
+        spmv_calls += 1;
+        let pap = dot(&p, &ap);
+        anyhow::ensure!(
+            pap > 0.0,
+            "CG breakdown: p·Ap = {pap} ≤ 0 (matrix not SPD?)"
+        );
+        let alpha = rr / pap;
+        axpy(alpha, &p, x);
+        axpy(-alpha, &ap, &mut r);
+        let rr_new = dot(&r, &r);
+        let beta = rr_new / rr;
+        xpby(&r, beta, &mut p);
+        rr = rr_new;
+    }
+    Ok(SolveStats {
+        iterations: opts.max_iters,
+        residual: rr.sqrt(),
+        converged: rr.sqrt() / bnorm <= opts.tol,
+        spmv_calls,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{assert_solution, spd_system};
+    use super::*;
+    use crate::autotune::atlib::Durmv;
+    use crate::autotune::online::TuningData;
+    use crate::autotune::MemoryPolicy;
+    use crate::spmv::Implementation;
+
+    #[test]
+    fn cg_solves_spd_system() {
+        let (mut a, b, x_true) = spd_system(1, 120);
+        let mut x = vec![0.0; 120];
+        let stats = cg(&mut a, &b, &mut x, &SolverOptions::default()).unwrap();
+        assert!(stats.converged, "residual {}", stats.residual);
+        assert_solution(&x, &x_true, 1e-6);
+        assert!(stats.spmv_calls >= stats.iterations);
+    }
+
+    #[test]
+    fn cg_through_autotuned_handle() {
+        let (a, b, x_true) = spd_system(2, 80);
+        let tuning = TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        };
+        let mut h = Durmv::new(a, tuning, MemoryPolicy::unlimited(), 2);
+        let mut x = vec![0.0; 80];
+        let stats = cg(&mut h, &b, &mut x, &SolverOptions::default()).unwrap();
+        assert!(stats.converged);
+        assert_solution(&x, &x_true, 1e-6);
+        // The AT handle served every SpMV and transformed at most once.
+        assert_eq!(h.calls as usize, stats.spmv_calls);
+    }
+
+    #[test]
+    fn cg_zero_rhs_converges_immediately() {
+        let (mut a, _, _) = spd_system(3, 40);
+        let b = vec![0.0; 40];
+        let mut x = vec![0.0; 40];
+        let stats = cg(&mut a, &b, &mut x, &SolverOptions::default()).unwrap();
+        assert!(stats.converged);
+        assert_eq!(stats.iterations, 0);
+    }
+
+    #[test]
+    fn cg_respects_iteration_cap() {
+        let (mut a, b, _) = spd_system(4, 100);
+        let mut x = vec![0.0; 100];
+        let opts = SolverOptions { tol: 1e-300, max_iters: 3 };
+        let stats = cg(&mut a, &b, &mut x, &opts).unwrap();
+        assert_eq!(stats.iterations, 3);
+        assert!(!stats.converged);
+    }
+
+    #[test]
+    fn cg_rejects_dimension_mismatch() {
+        let (mut a, _, _) = spd_system(5, 10);
+        let b = vec![0.0; 9];
+        let mut x = vec![0.0; 10];
+        assert!(cg(&mut a, &b, &mut x, &SolverOptions::default()).is_err());
+    }
+}

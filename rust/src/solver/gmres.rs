@@ -1,0 +1,192 @@
+//! Restarted GMRES(m) for general systems — completes the solver substrate
+//! (OpenATLib's target solvers are Krylov methods of exactly this family).
+
+use super::{norm2, SolveStats, SolverOptions, SpmvOp};
+use crate::{Result, Value};
+
+/// Solve `A·x = b` with GMRES restarted every `restart` iterations.
+pub fn gmres<Op: SpmvOp + ?Sized>(
+    a: &mut Op,
+    b: &[Value],
+    x: &mut [Value],
+    restart: usize,
+    opts: &SolverOptions,
+) -> Result<SolveStats> {
+    let n = a.n();
+    anyhow::ensure!(b.len() == n && x.len() == n, "dimension mismatch");
+    anyhow::ensure!(restart >= 1, "restart must be >= 1");
+    let m = restart.min(n);
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut spmv_calls = 0usize;
+    let mut total_iters = 0usize;
+
+    let mut r = vec![0.0; n];
+    loop {
+        // r = b - A x
+        a.apply(x, &mut r)?;
+        spmv_calls += 1;
+        for i in 0..n {
+            r[i] = b[i] - r[i];
+        }
+        let beta = norm2(&r);
+        if beta / bnorm <= opts.tol {
+            return Ok(SolveStats {
+                iterations: total_iters,
+                residual: beta,
+                converged: true,
+                spmv_calls,
+            });
+        }
+        if total_iters >= opts.max_iters {
+            return Ok(SolveStats {
+                iterations: total_iters,
+                residual: beta,
+                converged: false,
+                spmv_calls,
+            });
+        }
+
+        // Arnoldi with modified Gram-Schmidt; Givens-rotated least squares.
+        let mut v: Vec<Vec<Value>> = Vec::with_capacity(m + 1);
+        v.push(r.iter().map(|&ri| ri / beta).collect());
+        let mut h = vec![vec![0.0; m]; m + 1]; // (m+1) x m Hessenberg
+        let mut cs = vec![0.0; m];
+        let mut sn = vec![0.0; m];
+        let mut g = vec![0.0; m + 1];
+        g[0] = beta;
+        let mut k_used = 0usize;
+
+        for k in 0..m {
+            if total_iters >= opts.max_iters {
+                break;
+            }
+            let mut w = vec![0.0; n];
+            a.apply(&v[k], &mut w)?;
+            spmv_calls += 1;
+            total_iters += 1;
+            for j in 0..=k {
+                let hjk = super::dot(&w, &v[j]);
+                h[j][k] = hjk;
+                super::axpy(-hjk, &v[j], &mut w);
+            }
+            let wn = norm2(&w);
+            h[k + 1][k] = wn;
+            // Apply previous rotations to the new column.
+            for j in 0..k {
+                let t = cs[j] * h[j][k] + sn[j] * h[j + 1][k];
+                h[j + 1][k] = -sn[j] * h[j][k] + cs[j] * h[j + 1][k];
+                h[j][k] = t;
+            }
+            // New rotation annihilating h[k+1][k].
+            let denom = (h[k][k] * h[k][k] + h[k + 1][k] * h[k + 1][k]).sqrt();
+            if denom < 1e-300 {
+                k_used = k + 1;
+                break;
+            }
+            cs[k] = h[k][k] / denom;
+            sn[k] = h[k + 1][k] / denom;
+            h[k][k] = denom;
+            h[k + 1][k] = 0.0;
+            g[k + 1] = -sn[k] * g[k];
+            g[k] *= cs[k];
+            k_used = k + 1;
+            let res = g[k + 1].abs();
+            if wn < 1e-300 || res / bnorm <= opts.tol {
+                break;
+            }
+            v.push(w.iter().map(|&wi| wi / wn).collect());
+        }
+
+        // Back-substitute y from the triangular system, update x.
+        let k = k_used;
+        if k == 0 {
+            return Ok(SolveStats {
+                iterations: total_iters,
+                residual: beta,
+                converged: beta / bnorm <= opts.tol,
+                spmv_calls,
+            });
+        }
+        let mut y = vec![0.0; k];
+        for i in (0..k).rev() {
+            let mut s = g[i];
+            for j in i + 1..k {
+                s -= h[i][j] * y[j];
+            }
+            y[i] = s / h[i][i];
+        }
+        for (j, yj) in y.iter().enumerate() {
+            super::axpy(*yj, &v[j], x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{assert_solution, spd_system};
+    use super::*;
+    use crate::formats::{Csr, SparseMatrix};
+    use crate::matrixgen::random_csr;
+    use crate::rng::Rng;
+
+    fn unsym_system(seed: u64, n: usize) -> (Csr, Vec<Value>, Vec<Value>) {
+        let mut rng = Rng::new(seed);
+        let a = random_csr(&mut rng, n, n, 0.1);
+        let mut t = a.to_triplets();
+        for i in 0..n {
+            let row_sum: f64 = a.row(i).map(|(_, v)| v.abs()).sum();
+            t.push((i, i, row_sum + 1.0));
+        }
+        let a = Csr::from_triplets(n, n, &t).unwrap();
+        let x_true: Vec<Value> = (0..n).map(|i| ((i + 2) as f64 * 0.149).sin()).collect();
+        let mut b = vec![0.0; n];
+        a.spmv(&x_true, &mut b);
+        (a, b, x_true)
+    }
+
+    #[test]
+    fn gmres_solves_unsymmetric_system() {
+        let (mut a, b, x_true) = unsym_system(31, 120);
+        let mut x = vec![0.0; 120];
+        let stats = gmres(&mut a, &b, &mut x, 30, &SolverOptions::default()).unwrap();
+        assert!(stats.converged, "residual {}", stats.residual);
+        assert_solution(&x, &x_true, 1e-6);
+    }
+
+    #[test]
+    fn gmres_with_tiny_restart_still_converges() {
+        let (mut a, b, x_true) = spd_system(32, 60);
+        let mut x = vec![0.0; 60];
+        let opts = SolverOptions { tol: 1e-8, max_iters: 5000 };
+        let stats = gmres(&mut a, &b, &mut x, 5, &opts).unwrap();
+        assert!(stats.converged, "residual {}", stats.residual);
+        assert_solution(&x, &x_true, 1e-5);
+    }
+
+    #[test]
+    fn gmres_zero_rhs() {
+        let (mut a, _, _) = unsym_system(33, 20);
+        let b = vec![0.0; 20];
+        let mut x = vec![0.0; 20];
+        let stats = gmres(&mut a, &b, &mut x, 10, &SolverOptions::default()).unwrap();
+        assert!(stats.converged);
+        assert_eq!(stats.iterations, 0);
+    }
+
+    #[test]
+    fn gmres_respects_cap() {
+        let (mut a, b, _) = unsym_system(34, 80);
+        let mut x = vec![0.0; 80];
+        let opts = SolverOptions { tol: 1e-300, max_iters: 7 };
+        let stats = gmres(&mut a, &b, &mut x, 4, &opts).unwrap();
+        assert!(!stats.converged);
+        assert!(stats.iterations >= 7, "{stats:?}");
+    }
+
+    #[test]
+    fn gmres_rejects_zero_restart() {
+        let (mut a, b, _) = unsym_system(35, 10);
+        let mut x = vec![0.0; 10];
+        assert!(gmres(&mut a, &b, &mut x, 0, &SolverOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! Weighted Jacobi iteration — the simplest SpMV-per-step solver; converges
+//! for strictly diagonally dominant systems (which
+//! [`crate::matrixgen::make_spd`] produces).
+
+use super::{norm2, SolveStats, SolverOptions, SpmvOp};
+use crate::{Result, Value};
+
+/// Solve `A·x = b` with damped Jacobi: `x ← x + ω·D⁻¹·(b − A·x)`.
+pub fn jacobi<Op: SpmvOp + ?Sized>(
+    a: &mut Op,
+    b: &[Value],
+    x: &mut [Value],
+    omega: f64,
+    opts: &SolverOptions,
+) -> Result<SolveStats> {
+    let n = a.n();
+    anyhow::ensure!(b.len() == n && x.len() == n, "dimension mismatch");
+    anyhow::ensure!(omega > 0.0 && omega <= 1.0, "omega must be in (0,1], got {omega}");
+    let d = a.diagonal()?;
+    anyhow::ensure!(
+        d.iter().all(|&v| v != 0.0),
+        "Jacobi needs a zero-free diagonal"
+    );
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut ax = vec![0.0; n];
+    let mut spmv_calls = 0usize;
+    for k in 0..opts.max_iters {
+        a.apply(x, &mut ax)?;
+        spmv_calls += 1;
+        let mut rnorm2 = 0.0;
+        for i in 0..n {
+            let r = b[i] - ax[i];
+            rnorm2 += r * r;
+            x[i] += omega * r / d[i];
+        }
+        let rel = rnorm2.sqrt() / bnorm;
+        if rel <= opts.tol {
+            return Ok(SolveStats {
+                iterations: k + 1,
+                residual: rnorm2.sqrt(),
+                converged: true,
+                spmv_calls,
+            });
+        }
+    }
+    // Final residual check.
+    a.apply(x, &mut ax)?;
+    spmv_calls += 1;
+    let res: f64 = (0..n).map(|i| (b[i] - ax[i]).powi(2)).sum::<f64>().sqrt();
+    Ok(SolveStats {
+        iterations: opts.max_iters,
+        residual: res,
+        converged: res / bnorm <= opts.tol,
+        spmv_calls,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{assert_solution, spd_system};
+    use super::*;
+
+    #[test]
+    fn jacobi_converges_on_dominant_system() {
+        let (mut a, b, x_true) = spd_system(11, 60);
+        let mut x = vec![0.0; 60];
+        let opts = SolverOptions { tol: 1e-10, max_iters: 5000 };
+        let stats = jacobi(&mut a, &b, &mut x, 1.0, &opts).unwrap();
+        assert!(stats.converged, "residual {}", stats.residual);
+        assert_solution(&x, &x_true, 1e-7);
+    }
+
+    #[test]
+    fn jacobi_rejects_zero_diagonal() {
+        use crate::formats::Csr;
+        let mut a = Csr::from_triplets(2, 2, &[(0, 1, 1.0), (1, 0, 1.0)]).unwrap();
+        let b = vec![1.0, 1.0];
+        let mut x = vec![0.0; 2];
+        assert!(jacobi(&mut a, &b, &mut x, 1.0, &SolverOptions::default()).is_err());
+    }
+
+    #[test]
+    fn jacobi_rejects_bad_omega() {
+        let (mut a, b, _) = spd_system(12, 10);
+        let mut x = vec![0.0; 10];
+        assert!(jacobi(&mut a, &b, &mut x, 0.0, &SolverOptions::default()).is_err());
+        assert!(jacobi(&mut a, &b, &mut x, 1.5, &SolverOptions::default()).is_err());
+    }
+}

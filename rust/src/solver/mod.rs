@@ -1,0 +1,178 @@
+//! Iterative solvers driving AT-routed SpMV.
+//!
+//! The paper motivates run-time transformation by iterative solvers: the
+//! §2.2 discussion prices the transformation in SpMV iterations ("2–100
+//! times … achievable for many iterative solvers"). These solvers call
+//! SpMV through a [`SpmvOp`] abstraction so the auto-tuned
+//! [`crate::autotune::atlib::Durmv`] handle (or a plain CSR, or the XLA
+//! runtime) can sit underneath, and the break-even analysis of
+//! [`crate::autotune::Ratios`] becomes observable end-to-end.
+
+pub mod bicgstab;
+pub mod cg;
+pub mod gmres;
+pub mod jacobi;
+pub mod pcg;
+
+pub use bicgstab::bicgstab;
+pub use cg::cg;
+pub use gmres::gmres;
+pub use jacobi::jacobi;
+pub use pcg::pcg;
+
+use crate::formats::{Csr, SparseMatrix};
+use crate::Result;
+use crate::Value;
+
+/// A `y = A·x` operator the solvers iterate with.
+pub trait SpmvOp {
+    /// Rows of the operator (must be square for these solvers).
+    fn n(&self) -> usize;
+    /// `y = A·x`.
+    fn apply(&mut self, x: &[Value], y: &mut [Value]) -> Result<()>;
+    /// Diagonal of A (needed by Jacobi; default extracts lazily = error).
+    fn diagonal(&self) -> Result<Vec<Value>> {
+        anyhow::bail!("diagonal not available for this operator")
+    }
+}
+
+impl SpmvOp for Csr {
+    fn n(&self) -> usize {
+        self.n_rows()
+    }
+
+    fn apply(&mut self, x: &[Value], y: &mut [Value]) -> Result<()> {
+        self.spmv(x, y);
+        Ok(())
+    }
+
+    fn diagonal(&self) -> Result<Vec<Value>> {
+        let n = self.n_rows();
+        let mut d = vec![0.0; n];
+        for i in 0..n {
+            for (c, v) in self.row(i) {
+                if c as usize == i {
+                    d[i] = v;
+                }
+            }
+        }
+        Ok(d)
+    }
+}
+
+impl SpmvOp for crate::autotune::atlib::Durmv {
+    fn n(&self) -> usize {
+        self.csr().n_rows()
+    }
+
+    fn apply(&mut self, x: &[Value], y: &mut [Value]) -> Result<()> {
+        self.durmv(crate::autotune::atlib::switches::AUTO, x, y)
+    }
+
+    fn diagonal(&self) -> Result<Vec<Value>> {
+        self.csr().diagonal()
+    }
+}
+
+/// Convergence report shared by the solvers.
+#[derive(Clone, Debug)]
+pub struct SolveStats {
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Final residual 2-norm.
+    pub residual: f64,
+    /// Whether the tolerance was met.
+    pub converged: bool,
+    /// SpMV applications performed (the amortisation denominator).
+    pub spmv_calls: usize,
+}
+
+/// Solver stopping controls.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverOptions {
+    /// Relative residual tolerance ‖r‖/‖b‖.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+}
+
+impl Default for SolverOptions {
+    fn default() -> Self {
+        Self { tol: 1e-8, max_iters: 1000 }
+    }
+}
+
+// ---- small dense-vector helpers shared by the solvers ----
+
+pub(crate) fn dot(a: &[Value], b: &[Value]) -> Value {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub(crate) fn norm2(a: &[Value]) -> Value {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x`
+pub(crate) fn axpy(alpha: Value, x: &[Value], y: &mut [Value]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = x + beta * y`
+pub(crate) fn xpby(x: &[Value], beta: Value, y: &mut [Value]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + beta * *yi;
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::matrixgen::{make_spd, random_csr};
+    use crate::rng::Rng;
+
+    /// A random SPD system (A, b, x_true) of order n.
+    pub fn spd_system(seed: u64, n: usize) -> (Csr, Vec<Value>, Vec<Value>) {
+        let mut rng = Rng::new(seed);
+        let a = make_spd(&random_csr(&mut rng, n, n, 0.08));
+        let x_true: Vec<Value> = (0..n).map(|i| ((i + 1) as f64 * 0.173).sin()).collect();
+        let mut b = vec![0.0; n];
+        a.spmv(&x_true, &mut b);
+        (a, b, x_true)
+    }
+
+    pub fn assert_solution(x: &[Value], x_true: &[Value], tol: f64) {
+        let err: f64 = x
+            .iter()
+            .zip(x_true)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        let norm = norm2(x_true).max(1e-30);
+        assert!(err / norm < tol, "relative error {} > {tol}", err / norm);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn helpers_behave() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0]);
+        let mut y = vec![1.0, 2.0];
+        xpby(&[10.0, 10.0], 0.5, &mut y);
+        assert_eq!(y, vec![10.5, 11.0]);
+    }
+
+    #[test]
+    fn csr_diagonal_extraction() {
+        let a = Csr::from_triplets(3, 3, &[(0, 0, 2.0), (1, 2, 5.0), (2, 2, 7.0)]).unwrap();
+        assert_eq!(a.diagonal().unwrap(), vec![2.0, 0.0, 7.0]);
+    }
+}

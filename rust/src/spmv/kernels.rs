@@ -1,0 +1,271 @@
+//! Kernel registry: named SpMV implementations over owned format data.
+//!
+//! [`Implementation`] enumerates the paper's five parallel codes plus the
+//! sequential baseline and the BCSR extension; [`AnyMatrix`] owns a matrix
+//! in whichever format an implementation needs, so the auto-tuner and the
+//! coordinator can hold "the chosen representation" as a single value.
+
+use super::Workspace;
+use crate::formats::{Bcsr, Coo, CooOrder, Csc, Csr, Ell, FormatKind, Hyb, Jds, SparseMatrix};
+use crate::transform;
+use crate::{Result, Value};
+
+/// A named SpMV implementation (paper §3 + baseline + extension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Implementation {
+    /// OpenATLib `OpenATI_DURMV` switch 11: sequential CRS.
+    CsrSeq,
+    /// Row-parallel CRS (nnz-balanced) — the multi-thread baseline.
+    CsrRowPar,
+    /// Fig. 1: COO-Column, outer-parallelised entry stream.
+    CooColOuter,
+    /// Fig. 2: COO-Row, outer-parallelised entry stream.
+    CooRowOuter,
+    /// Fig. 3: ELL-Row, inner `N`-loop parallelised.
+    EllRowInner,
+    /// Fig. 4: ELL-Row, outer band-loop parallelised (parallelism ≤ NE).
+    EllRowOuter,
+    /// BCSR 2×2 register-blocked (paper future work; sequential kernel).
+    BcsrSeq,
+    /// JDS diagonal-sweep (extension; sequential, vectorisable).
+    JdsSeq,
+    /// HYB body+tail (extension; sequential).
+    HybSeq,
+}
+
+impl Implementation {
+    /// Every implementation, in the order the paper's figures report them.
+    pub const ALL: [Implementation; 9] = [
+        Implementation::CsrSeq,
+        Implementation::CsrRowPar,
+        Implementation::CooColOuter,
+        Implementation::CooRowOuter,
+        Implementation::EllRowInner,
+        Implementation::EllRowOuter,
+        Implementation::BcsrSeq,
+        Implementation::JdsSeq,
+        Implementation::HybSeq,
+    ];
+
+    /// The candidates the paper's AT method chooses between at run time
+    /// (its figures 5–8 series, excluding the baseline itself).
+    pub const AT_CANDIDATES: [Implementation; 4] = [
+        Implementation::CooColOuter,
+        Implementation::CooRowOuter,
+        Implementation::EllRowInner,
+        Implementation::EllRowOuter,
+    ];
+
+    /// Stable display name (matches the paper's legend strings).
+    pub fn name(self) -> &'static str {
+        match self {
+            Implementation::CsrSeq => "CRS",
+            Implementation::CsrRowPar => "CRS-Par",
+            Implementation::CooColOuter => "COO-Col Outer",
+            Implementation::CooRowOuter => "COO-Row Outer",
+            Implementation::EllRowInner => "ELL-Row Inner",
+            Implementation::EllRowOuter => "ELL-Row Outer",
+            Implementation::BcsrSeq => "BCSR",
+            Implementation::JdsSeq => "JDS",
+            Implementation::HybSeq => "HYB",
+        }
+    }
+
+    /// Parse a CLI/report name.
+    pub fn parse(s: &str) -> Option<Self> {
+        let norm: String = s
+            .to_ascii_lowercase()
+            .chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .collect();
+        Some(match norm.as_str() {
+            "crs" | "csr" | "crsseq" | "csrseq" => Implementation::CsrSeq,
+            "crspar" | "csrpar" | "csrrowpar" => Implementation::CsrRowPar,
+            "coocolouter" | "coocol" => Implementation::CooColOuter,
+            "coorowouter" | "coorow" => Implementation::CooRowOuter,
+            "ellrowinner" | "ellinner" => Implementation::EllRowInner,
+            "ellrowouter" | "ellouter" | "ell" => Implementation::EllRowOuter,
+            "bcsr" | "bcsrseq" => Implementation::BcsrSeq,
+            "jds" | "jdsseq" => Implementation::JdsSeq,
+            "hyb" | "hybseq" => Implementation::HybSeq,
+            _ => return None,
+        })
+    }
+
+    /// The storage format this implementation runs on.
+    pub fn required_format(self) -> FormatKind {
+        match self {
+            Implementation::CsrSeq | Implementation::CsrRowPar => FormatKind::Csr,
+            Implementation::CooColOuter => FormatKind::CooCol,
+            Implementation::CooRowOuter => FormatKind::CooRow,
+            Implementation::EllRowInner | Implementation::EllRowOuter => FormatKind::Ell,
+            Implementation::BcsrSeq => FormatKind::Bcsr,
+            Implementation::JdsSeq => FormatKind::Jds,
+            Implementation::HybSeq => FormatKind::Hyb,
+        }
+    }
+
+    /// Whether the implementation needs a data transformation away from CRS.
+    pub fn needs_transform(self) -> bool {
+        self.required_format() != FormatKind::Csr
+    }
+}
+
+impl std::fmt::Display for Implementation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A matrix owned in any of the library's formats.
+#[derive(Clone, Debug)]
+pub enum AnyMatrix {
+    /// CRS/CSR.
+    Csr(Csr),
+    /// CCS/CSC.
+    Csc(Csc),
+    /// COO (either order; see [`Coo::order`]).
+    Coo(Coo),
+    /// ELL.
+    Ell(Ell),
+    /// BCSR.
+    Bcsr(Bcsr),
+    /// JDS.
+    Jds(Jds),
+    /// HYB.
+    Hyb(Hyb),
+}
+
+impl AnyMatrix {
+    /// Transform a CRS source into whatever `imp` requires.
+    pub fn prepare(a: &Csr, imp: Implementation, max_bytes: Option<usize>) -> Result<Self> {
+        Ok(match imp.required_format() {
+            FormatKind::Csr => AnyMatrix::Csr(a.clone()),
+            FormatKind::Csc => AnyMatrix::Csc(transform::crs_to_ccs(a)),
+            FormatKind::CooRow => AnyMatrix::Coo(transform::crs_to_coo_row(a)),
+            FormatKind::CooCol => AnyMatrix::Coo(transform::crs_to_coo_col(a)),
+            FormatKind::Ell => AnyMatrix::Ell(transform::crs_to_ell_bounded(a, max_bytes)?),
+            FormatKind::Bcsr => AnyMatrix::Bcsr(transform::crs_to_bcsr(a, 2, 2)?),
+            FormatKind::Jds => AnyMatrix::Jds(transform::crs_to_jds(a)),
+            FormatKind::Hyb => AnyMatrix::Hyb(transform::crs_to_hyb(a)?),
+        })
+    }
+
+    /// View as the dynamic [`SparseMatrix`] trait.
+    pub fn as_sparse(&self) -> &dyn SparseMatrix {
+        match self {
+            AnyMatrix::Csr(m) => m,
+            AnyMatrix::Csc(m) => m,
+            AnyMatrix::Coo(m) => m,
+            AnyMatrix::Ell(m) => m,
+            AnyMatrix::Bcsr(m) => m,
+            AnyMatrix::Jds(m) => m,
+            AnyMatrix::Hyb(m) => m,
+        }
+    }
+
+    /// The stored format tag.
+    pub fn kind(&self) -> FormatKind {
+        self.as_sparse().kind()
+    }
+
+    /// Storage footprint in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.as_sparse().memory_bytes()
+    }
+}
+
+/// Execute implementation `imp` on `m` with `n_threads` threads.
+///
+/// # Errors
+/// Returns an error if `m`'s format does not match `imp`'s requirement.
+pub fn run(
+    imp: Implementation,
+    m: &AnyMatrix,
+    x: &[Value],
+    y: &mut [Value],
+    n_threads: usize,
+    ws: &mut Workspace,
+) -> Result<()> {
+    match (imp, m) {
+        (Implementation::CsrSeq, AnyMatrix::Csr(a)) => super::csr_seq(a, x, y),
+        (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => super::csr_row_par(a, x, y, n_threads),
+        (Implementation::CooColOuter, AnyMatrix::Coo(c)) if c.order() == CooOrder::ColMajor => {
+            super::coo_col_outer(c, x, y, n_threads, ws)
+        }
+        (Implementation::CooRowOuter, AnyMatrix::Coo(c)) if c.order() == CooOrder::RowMajor => {
+            super::coo_row_outer(c, x, y, n_threads, ws)
+        }
+        (Implementation::EllRowInner, AnyMatrix::Ell(e)) => {
+            super::ell_row_inner(e, x, y, n_threads)
+        }
+        (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => {
+            super::ell_row_outer(e, x, y, n_threads, ws)
+        }
+        (Implementation::BcsrSeq, AnyMatrix::Bcsr(b)) => b.spmv(x, y),
+        (Implementation::JdsSeq, AnyMatrix::Jds(j)) => {
+            let yp = ws.yy(j.n_rows(), 1);
+            j.spmv_into(x, y, yp)
+        }
+        (Implementation::HybSeq, AnyMatrix::Hyb(h)) => h.spmv(x, y),
+        _ => anyhow::bail!(
+            "implementation {imp} requires {} data but matrix is {}",
+            imp.required_format(),
+            m.kind()
+        ),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::random_csr;
+    use crate::rng::Rng;
+
+    #[test]
+    fn names_roundtrip() {
+        for imp in Implementation::ALL {
+            assert_eq!(Implementation::parse(imp.name()), Some(imp), "{imp}");
+        }
+        assert_eq!(Implementation::parse("garbage"), None);
+    }
+
+    #[test]
+    fn prepare_and_run_all_implementations() {
+        let mut rng = Rng::new(5);
+        let a = random_csr(&mut rng, 40, 40, 0.1);
+        let x: Vec<Value> = (0..40).map(|i| (i as f64).cos()).collect();
+        let mut want = vec![0.0; 40];
+        a.spmv(&x, &mut want);
+        let mut ws = Workspace::new();
+        for imp in Implementation::ALL {
+            let m = AnyMatrix::prepare(&a, imp, None).unwrap();
+            assert_eq!(m.kind(), imp.required_format(), "{imp}");
+            let mut y = vec![0.0; 40];
+            run(imp, &m, &x, &mut y, 3, &mut ws).unwrap();
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{imp}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_rejects_format_mismatch() {
+        let a = Csr::identity(4);
+        let m = AnyMatrix::Csr(a);
+        let x = vec![1.0; 4];
+        let mut y = vec![0.0; 4];
+        let mut ws = Workspace::new();
+        assert!(run(Implementation::EllRowInner, &m, &x, &mut y, 1, &mut ws).is_err());
+    }
+
+    #[test]
+    fn needs_transform_flags() {
+        assert!(!Implementation::CsrSeq.needs_transform());
+        assert!(!Implementation::CsrRowPar.needs_transform());
+        for imp in Implementation::AT_CANDIDATES {
+            assert!(imp.needs_transform(), "{imp}");
+        }
+    }
+}

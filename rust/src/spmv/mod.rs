@@ -1,0 +1,332 @@
+//! Parallel SpMV implementations (paper §3, Figs. 1–4).
+//!
+//! Each OpenMP listing in the paper maps to one function here, with the
+//! same work decomposition:
+//!
+//! | Paper | Function | Decomposition |
+//! |---|---|---|
+//! | Fig. 1 | [`coo_col_outer`] | entry stream split per thread, private `YY`, serial reduction |
+//! | Fig. 2 | [`coo_row_outer`] | same, over the row-major stream |
+//! | Fig. 3 | [`ell_row_inner`] | parallel `N`-loop inside the band loop, no reduction |
+//! | Fig. 4 | [`ell_row_outer`] | band range split per thread, private `YY`, serial reduction |
+//! | switch 11 | [`csr_seq`] / [`csr_row_par`] | OpenATLib CRS baseline (+ row-parallel variant) |
+//!
+//! The per-thread accumulation buffers (`YY(1:n, 1:threads)` in the paper)
+//! live in a reusable [`Workspace`] so the hot path performs no allocation
+//! after the first call.
+
+pub mod kernels;
+pub mod partition;
+
+pub use kernels::{AnyMatrix, Implementation};
+
+use crate::formats::{Coo, CooOrder, Csr, Ell, SparseMatrix};
+use crate::Value;
+use partition::{split_by_nnz, split_even};
+
+/// Reusable per-call scratch: the paper's `YY(1:N, 1:NUM_SMP)` private
+/// accumulation buffers plus the padded `y` staging area.
+#[derive(Default, Debug)]
+pub struct Workspace {
+    yy: Vec<Value>,
+}
+
+impl Workspace {
+    /// Fresh, empty workspace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow a zeroed `n × k` buffer, growing the backing storage if needed.
+    pub(crate) fn yy(&mut self, n: usize, k: usize) -> &mut [Value] {
+        let need = n * k;
+        if self.yy.len() < need {
+            self.yy.resize(need, 0.0);
+        }
+        let buf = &mut self.yy[..need];
+        buf.fill(0.0);
+        buf
+    }
+
+    /// Bytes currently held.
+    pub fn capacity_bytes(&self) -> usize {
+        self.yy.capacity() * std::mem::size_of::<Value>()
+    }
+}
+
+/// Sequential CRS SpMV — the paper's baseline (OpenATLib `OpenATI_DURMV`
+/// switch no. 11). `t_crs` in every ratio is measured on this kernel.
+pub fn csr_seq(a: &Csr, x: &[Value], y: &mut [Value]) {
+    a.spmv(x, y);
+}
+
+/// Row-parallel CRS SpMV with nnz-balanced row ranges; each thread writes a
+/// disjoint `y` slice, so no reduction is needed.
+pub fn csr_row_par(a: &Csr, x: &[Value], y: &mut [Value], n_threads: usize) {
+    assert_eq!(x.len(), a.n_cols(), "x length");
+    assert_eq!(y.len(), a.n_rows(), "y length");
+    let ranges = split_by_nnz(&a.row_ptr, n_threads);
+    if ranges.len() <= 1 {
+        return csr_seq(a, x, y);
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [Value] = y;
+        let mut pos = 0usize;
+        for r in &ranges {
+            let (chunk, tail) = rest.split_at_mut(r.end - pos);
+            rest = tail;
+            pos = r.end;
+            let (lo, hi) = (r.start, r.end);
+            s.spawn(move || {
+                for i in lo..hi {
+                    let mut acc = 0.0;
+                    for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+                        acc += a.values[k] * x[a.col_idx[k] as usize];
+                    }
+                    chunk[i - lo] = acc;
+                }
+            });
+        }
+    });
+}
+
+/// Shared body of Figs. 1 and 2: split the COO entry stream into
+/// `ISTART(K)..IEND(K)` chunks, accumulate into private `YY(:,K)`, then do
+/// the serial reduction of lines 12–16 ("the overhead of the thread fork is
+/// high if N is small. Hence, we do not parallelize this part").
+fn coo_outer(c: &Coo, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+    assert_eq!(x.len(), c.n_cols(), "x length");
+    assert_eq!(y.len(), c.n_rows(), "y length");
+    let nnz = c.nnz();
+    let n = c.n_rows();
+    let ranges = split_even(nnz, n_threads);
+    if ranges.len() <= 1 {
+        return c.spmv(x, y);
+    }
+    let k = ranges.len();
+    let yy = ws.yy(n, k);
+    std::thread::scope(|s| {
+        let mut rest: &mut [Value] = yy;
+        for r in &ranges {
+            let (slice, tail) = rest.split_at_mut(n);
+            rest = tail;
+            let (lo, hi) = (r.start, r.end);
+            s.spawn(move || {
+                for j in lo..hi {
+                    // <5> II = ICOL(J_PTR); <6> KK = row; <7> accumulate.
+                    let row = c.row_idx[j] as usize;
+                    let col = c.col_idx[j] as usize;
+                    slice[row] += c.values[j] * x[col];
+                }
+            });
+        }
+    });
+    // Lines <12>-<16>: serial reduction over thread-private copies.
+    y.fill(0.0);
+    for t in 0..k {
+        let slice = &yy[t * n..(t + 1) * n];
+        for i in 0..n {
+            y[i] += slice[i];
+        }
+    }
+}
+
+/// Fig. 1 — outer-loop parallel SpMV over the **column-major** COO stream.
+///
+/// # Panics
+/// Panics if `c` is not column-major ordered.
+pub fn coo_col_outer(c: &Coo, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+    assert_eq!(c.order(), CooOrder::ColMajor, "Fig. 1 requires COO-Column data");
+    coo_outer(c, x, y, n_threads, ws);
+}
+
+/// Fig. 2 — outer-loop parallel SpMV over the **row-major** COO stream.
+///
+/// # Panics
+/// Panics if `c` is not row-major ordered.
+pub fn coo_row_outer(c: &Coo, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+    assert_eq!(c.order(), CooOrder::RowMajor, "Fig. 2 requires COO-Row data");
+    coo_outer(c, x, y, n_threads, ws);
+}
+
+/// Fig. 3 — ELL-Row with the **inner `N`-loop parallelised**: each thread
+/// owns a contiguous row range and streams every band over it with unit
+/// stride. "There is no reduction loop, which is an advantage of this
+/// format."
+pub fn ell_row_inner(e: &Ell, x: &[Value], y: &mut [Value], n_threads: usize) {
+    assert_eq!(x.len(), e.n_cols(), "x length");
+    assert_eq!(y.len(), e.n_rows(), "y length");
+    let n = e.n_rows();
+    let ranges = split_even(n, n_threads);
+    if ranges.len() <= 1 {
+        return e.spmv(x, y);
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [Value] = y;
+        let mut pos = 0usize;
+        for r in &ranges {
+            let (chunk, tail) = rest.split_at_mut(r.end - pos);
+            rest = tail;
+            pos = r.end;
+            let (lo, hi) = (r.start, r.end);
+            s.spawn(move || {
+                chunk.fill(0.0);
+                for k in 0..e.bandwidth {
+                    let base = k * n;
+                    let vals = &e.values[base + lo..base + hi];
+                    let cols = &e.col_idx[base + lo..base + hi];
+                    for i in 0..hi - lo {
+                        // <8> Y(I) = Y(I) + VAL(J_PTR) * X(II)
+                        chunk[i] += vals[i] * x[cols[i] as usize];
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Fig. 4 — ELL-Row with the **outer band loop parallelised**: the band
+/// range `K = 1..NE` is split across threads (`ISTART(J)..IEND(J)`), each
+/// thread accumulates into its private `YY(:,J)`, then the serial
+/// reduction runs. Parallelism is capped at the bandwidth `NE` — the
+/// paper's point that "if NE = 2, the parallelism is only 2".
+pub fn ell_row_outer(e: &Ell, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+    assert_eq!(x.len(), e.n_cols(), "x length");
+    assert_eq!(y.len(), e.n_rows(), "y length");
+    let n = e.n_rows();
+    let ranges = split_even(e.bandwidth, n_threads); // capped at NE chunks
+    if ranges.len() <= 1 {
+        return e.spmv(x, y);
+    }
+    let k = ranges.len();
+    let yy = ws.yy(n, k);
+    std::thread::scope(|s| {
+        let mut rest: &mut [Value] = yy;
+        for r in &ranges {
+            let (slice, tail) = rest.split_at_mut(n);
+            rest = tail;
+            let (lo, hi) = (r.start, r.end);
+            s.spawn(move || {
+                for band in lo..hi {
+                    let base = band * n;
+                    let vals = &e.values[base..base + n];
+                    let cols = &e.col_idx[base..base + n];
+                    for i in 0..n {
+                        slice[i] += vals[i] * x[cols[i] as usize];
+                    }
+                }
+            });
+        }
+    });
+    y.fill(0.0);
+    for t in 0..k {
+        let slice = &yy[t * n..(t + 1) * n];
+        for i in 0..n {
+            y[i] += slice[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::random_csr;
+    use crate::rng::Rng;
+    use crate::transform::{crs_to_coo_col, crs_to_coo_row, crs_to_ell};
+
+    fn assert_close(a: &[Value], b: &[Value]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-9 * (1.0 + x.abs()),
+                "index {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    fn cases() -> Vec<Csr> {
+        let mut rng = Rng::new(31);
+        vec![
+            random_csr(&mut rng, 1, 1, 1.0),
+            random_csr(&mut rng, 17, 17, 0.3),
+            random_csr(&mut rng, 128, 96, 0.06),
+            random_csr(&mut rng, 200, 200, 0.02),
+            Csr::from_triplets(9, 9, &[]).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn all_kernels_match_baseline_across_threads() {
+        let mut ws = Workspace::new();
+        for a in cases() {
+            let x: Vec<Value> = (0..a.n_cols()).map(|i| ((i * 7 + 1) as f64).recip()).collect();
+            let mut want = vec![0.0; a.n_rows()];
+            csr_seq(&a, &x, &mut want);
+            let ell = crs_to_ell(&a).unwrap();
+            let coo_r = crs_to_coo_row(&a);
+            let coo_c = crs_to_coo_col(&a);
+            for t in [1usize, 2, 3, 4, 9] {
+                let mut y = vec![0.0; a.n_rows()];
+                csr_row_par(&a, &x, &mut y, t);
+                assert_close(&y, &want);
+                coo_col_outer(&coo_c, &x, &mut y, t, &mut ws);
+                assert_close(&y, &want);
+                coo_row_outer(&coo_r, &x, &mut y, t, &mut ws);
+                assert_close(&y, &want);
+                ell_row_inner(&ell, &x, &mut y, t);
+                assert_close(&y, &want);
+                ell_row_outer(&ell, &x, &mut y, t, &mut ws);
+                assert_close(&y, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_rejects_wrong_order() {
+        let a = cases()[1].clone();
+        let coo_r = crs_to_coo_row(&a);
+        let x = vec![1.0; a.n_cols()];
+        let mut y = vec![0.0; a.n_rows()];
+        let mut ws = Workspace::new();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            coo_col_outer(&coo_r, &x, &mut y, 2, &mut ws);
+        }));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn ell_outer_parallelism_capped_at_bandwidth() {
+        // bandwidth 2, 8 threads -> must still be correct (only 2 chunks used).
+        let a = Csr::from_triplets(
+            4,
+            4,
+            &[(0, 0, 1.0), (0, 1, 2.0), (1, 1, 3.0), (2, 2, 4.0), (3, 0, 5.0), (3, 3, 6.0)],
+        )
+        .unwrap();
+        let ell = crs_to_ell(&a).unwrap();
+        assert_eq!(ell.bandwidth, 2);
+        let x = [1.0, 1.0, 1.0, 1.0];
+        let mut want = vec![0.0; 4];
+        csr_seq(&a, &x, &mut want);
+        let mut y = vec![0.0; 4];
+        let mut ws = Workspace::new();
+        ell_row_outer(&ell, &x, &mut y, 8, &mut ws);
+        assert_close(&y, &want);
+    }
+
+    #[test]
+    fn workspace_reuse_does_not_leak_state() {
+        let mut ws = Workspace::new();
+        let a = cases()[2].clone();
+        let coo = crs_to_coo_row(&a);
+        let x = vec![1.0; a.n_cols()];
+        let mut want = vec![0.0; a.n_rows()];
+        csr_seq(&a, &x, &mut want);
+        for _ in 0..3 {
+            let mut y = vec![0.0; a.n_rows()];
+            coo_row_outer(&coo, &x, &mut y, 4, &mut ws);
+            assert_close(&y, &want);
+        }
+        assert!(ws.capacity_bytes() > 0);
+    }
+}

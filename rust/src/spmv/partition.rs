@@ -1,0 +1,153 @@
+//! Work partitioning — the paper's `ISTART(K)`/`IEND(K)` arrays.
+//!
+//! The OpenMP codes in Figs. 1–4 pre-split their iteration space into one
+//! contiguous chunk per thread. Two policies are provided:
+//!
+//! * [`split_even`] — equal iteration counts (what a static OpenMP schedule
+//!   over the entry stream gives);
+//! * [`split_by_nnz`] — row ranges balanced by non-zero count, which is the
+//!   right policy for row-wise kernels on skewed matrices (memplus-like
+//!   dense rows would otherwise serialise one thread).
+
+use std::ops::Range;
+
+/// Split `0..n` into at most `k` contiguous ranges of near-equal length.
+/// Returns fewer than `k` ranges when `n < k`; never returns empty ranges
+/// (except that `n == 0` yields no ranges).
+pub fn split_even(n: usize, k: usize) -> Vec<Range<usize>> {
+    let k = k.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.min(n);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split rows `0..row_ptr.len()-1` into at most `k` contiguous ranges with
+/// near-equal non-zero counts, using the CSR row pointers as the prefix-sum
+/// of work. Greedy boundary placement at the ideal quantiles.
+pub fn split_by_nnz(row_ptr: &[usize], k: usize) -> Vec<Range<usize>> {
+    let n = row_ptr.len().saturating_sub(1);
+    let k = k.max(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let nnz = row_ptr[n];
+    if nnz == 0 {
+        return split_even(n, k);
+    }
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        if start >= n {
+            break;
+        }
+        // Ideal cumulative work at the end of chunk i.
+        let target = ((i + 1) as u128 * nnz as u128 / k as u128) as usize;
+        // First row boundary whose prefix ≥ target, but always advance.
+        let mut end = match row_ptr[start + 1..=n].binary_search(&target) {
+            Ok(p) => start + 1 + p,
+            Err(p) => start + 1 + p,
+        };
+        end = end.clamp(start + 1, n);
+        if i == k - 1 {
+            end = n;
+        }
+        out.push(start..end);
+        start = end;
+    }
+    if let Some(last) = out.last_mut() {
+        if last.end < n {
+            last.end = n;
+        }
+    }
+    out
+}
+
+/// Imbalance factor of a partition under a per-row cost prefix: max chunk
+/// work / ideal work. 1.0 is perfect.
+pub fn imbalance(row_ptr: &[usize], ranges: &[Range<usize>]) -> f64 {
+    let n = row_ptr.len().saturating_sub(1);
+    if ranges.is_empty() || row_ptr[n] == 0 {
+        return 1.0;
+    }
+    let ideal = row_ptr[n] as f64 / ranges.len() as f64;
+    ranges
+        .iter()
+        .map(|r| (row_ptr[r.end] - row_ptr[r.start]) as f64 / ideal)
+        .fold(1.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_covers(ranges: &[Range<usize>], n: usize) {
+        let mut pos = 0;
+        for r in ranges {
+            assert_eq!(r.start, pos, "gap/overlap at {pos}");
+            assert!(r.end > r.start, "empty range {r:?}");
+            pos = r.end;
+        }
+        assert_eq!(pos, n, "does not cover 0..{n}");
+    }
+
+    #[test]
+    fn split_even_basic() {
+        assert_covers(&split_even(10, 3), 10);
+        assert_eq!(split_even(10, 3), vec![0..4, 4..7, 7..10]);
+        assert_eq!(split_even(2, 8).len(), 2);
+        assert!(split_even(0, 4).is_empty());
+        assert_eq!(split_even(5, 1), vec![0..5]);
+    }
+
+    #[test]
+    fn split_by_nnz_balances_skew() {
+        // Row 0 has 97 nnz, rows 1..=3 have 1 each.
+        let row_ptr = vec![0, 97, 98, 99, 100];
+        let r = split_by_nnz(&row_ptr, 4);
+        assert_covers(&r, 4);
+        // The heavy row must sit alone in its chunk.
+        assert_eq!(r[0], 0..1);
+    }
+
+    #[test]
+    fn split_by_nnz_uniform_matches_even() {
+        let row_ptr: Vec<usize> = (0..=100).map(|i| i * 5).collect();
+        let r = split_by_nnz(&row_ptr, 4);
+        assert_covers(&r, 100);
+        let imb = imbalance(&row_ptr, &r);
+        assert!(imb < 1.05, "imbalance {imb}");
+    }
+
+    #[test]
+    fn split_by_nnz_more_threads_than_rows() {
+        let row_ptr = vec![0, 3, 6];
+        let r = split_by_nnz(&row_ptr, 16);
+        assert_covers(&r, 2);
+    }
+
+    #[test]
+    fn split_by_nnz_empty_matrix() {
+        let row_ptr = vec![0, 0, 0];
+        let r = split_by_nnz(&row_ptr, 2);
+        assert_covers(&r, 2);
+    }
+
+    #[test]
+    fn imbalance_of_even_partition() {
+        let row_ptr: Vec<usize> = (0..=8).map(|i| i * 2).collect();
+        let r = split_even(8, 4);
+        assert!((imbalance(&row_ptr, &r) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,239 @@
+//! Parallel data transformations (the paper's §5 future work:
+//! "we do not show the parallel implementations of the data transformation
+//! processes … Evaluation with parallelized transformations … are future
+//! work").
+//!
+//! Strategy: every transform splits its scatter pass over row (or entry)
+//! ranges with per-thread write cursors derived from a shared counting
+//! pass, mirroring how the SpMV kernels split work with `ISTART/IEND`.
+
+use crate::formats::{Coo, CooOrder, Csc, Csr, Ell, SparseMatrix};
+use crate::spmv::partition::split_even;
+use crate::{Index, Result, Value};
+
+/// Parallel CRS → ELL: each thread owns a contiguous row range and fills
+/// its band-major slots independently (no write conflicts: slot `k*n+i`
+/// belongs to exactly one row `i`).
+pub fn crs_to_ell_par(a: &Csr, n_threads: usize) -> Result<Ell> {
+    let n = a.n_rows();
+    let nz = a.max_row_len();
+    let slots = n.checked_mul(nz).ok_or_else(|| anyhow::anyhow!("ELL size overflow"))?;
+    let mut values = vec![0.0 as Value; slots];
+    let mut col_idx = vec![0 as Index; slots];
+    let ranges = split_even(n, n_threads);
+
+    // SAFETY-free sharing: give each thread disjoint &mut views per band is
+    // awkward (rows interleave in band-major layout), so use raw pointers
+    // wrapped in a Sync newtype; disjointness is by row index.
+    struct Shared(*mut Value, *mut Index);
+    unsafe impl Sync for Shared {}
+    let shared = Shared(values.as_mut_ptr(), col_idx.as_mut_ptr());
+
+    std::thread::scope(|s| {
+        for r in &ranges {
+            let (lo, hi) = (r.start, r.end);
+            let shared = &shared;
+            s.spawn(move || {
+                for i in lo..hi {
+                    for (k, (c, v)) in a.row(i).enumerate() {
+                        // Each (i, k) slot is written by exactly one thread
+                        // because row ranges are disjoint.
+                        unsafe {
+                            *shared.0.add(k * n + i) = v;
+                            *shared.1.add(k * n + i) = c;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Ell::new(n, a.n_cols(), nz, values, col_idx, a.nnz())
+}
+
+/// Parallel CRS → COO-Row: the `IROW` expansion is embarrassingly parallel
+/// over row ranges.
+pub fn crs_to_coo_row_par(a: &Csr, n_threads: usize) -> Coo {
+    let nnz = a.nnz();
+    let n = a.n_rows();
+    let mut row_idx = vec![0 as Index; nnz];
+    let ranges = split_even(n, n_threads);
+    std::thread::scope(|s| {
+        let mut rest: &mut [Index] = &mut row_idx;
+        for r in &ranges {
+            let lo_off = a.row_ptr[r.start];
+            let hi_off = a.row_ptr[r.end];
+            let (chunk, tail) = rest.split_at_mut(hi_off - lo_off);
+            rest = tail;
+            let (lo, hi) = (r.start, r.end);
+            s.spawn(move || {
+                let mut w = 0;
+                for i in lo..hi {
+                    for _ in 0..(a.row_ptr[i + 1] - a.row_ptr[i]) {
+                        chunk[w] = i as Index;
+                        w += 1;
+                    }
+                }
+            });
+        }
+    });
+    Coo::new(n, a.n_cols(), row_idx, a.col_idx.clone(), a.values.clone(), CooOrder::RowMajor)
+        .expect("parallel IROW expansion preserves ordering")
+}
+
+/// Parallel CRS → CCS. The counting pass is parallelised with per-thread
+/// count arrays that are then reduced; the scatter pass is parallel over
+/// row ranges with per-thread cursor arrays offset by the counts of all
+/// preceding threads (a two-level prefix sum) — each (column, thread) pair
+/// owns a disjoint slot range, so scatters never conflict.
+pub fn crs_to_ccs_par(a: &Csr, n_threads: usize) -> Csc {
+    let n_cols = a.n_cols();
+    let n = a.n_rows();
+    let nnz = a.nnz();
+    let ranges = split_even(n, n_threads);
+    let t = ranges.len().max(1);
+
+    // Phase 1: per-thread column counts.
+    let mut counts = vec![vec![0usize; n_cols]; t];
+    std::thread::scope(|s| {
+        for (cnt, r) in counts.iter_mut().zip(&ranges) {
+            let (lo, hi) = (r.start, r.end);
+            s.spawn(move || {
+                for k in a.row_ptr[lo]..a.row_ptr[hi] {
+                    cnt[a.col_idx[k] as usize] += 1;
+                }
+            });
+        }
+    });
+
+    // Phase 2: two-level exclusive prefix sum -> col_ptr and per-thread
+    // starting cursors (thread-major within each column to preserve the
+    // row-sorted-within-column invariant).
+    let mut col_ptr = vec![0usize; n_cols + 1];
+    let mut cursors = vec![vec![0usize; n_cols]; t];
+    let mut running = 0usize;
+    for j in 0..n_cols {
+        col_ptr[j] = running;
+        for ti in 0..t {
+            cursors[ti][j] = running;
+            running += counts[ti][j];
+        }
+    }
+    col_ptr[n_cols] = running;
+    debug_assert_eq!(running, nnz);
+
+    // Phase 3: parallel scatter.
+    let mut row_idx = vec![0 as Index; nnz];
+    let mut values = vec![0.0 as Value; nnz];
+    struct Shared(*mut Index, *mut Value);
+    unsafe impl Sync for Shared {}
+    let shared = Shared(row_idx.as_mut_ptr(), values.as_mut_ptr());
+    std::thread::scope(|s| {
+        for (cur, r) in cursors.iter_mut().zip(&ranges) {
+            let (lo, hi) = (r.start, r.end);
+            let shared = &shared;
+            s.spawn(move || {
+                for i in lo..hi {
+                    for (c, v) in a.row(i) {
+                        let slot = cur[c as usize];
+                        cur[c as usize] += 1;
+                        // (column, thread) slot ranges are disjoint by the
+                        // two-level prefix sum above.
+                        unsafe {
+                            *shared.0.add(slot) = i as Index;
+                            *shared.1.add(slot) = v;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    Csc::new(n, n_cols, col_ptr, row_idx, values).expect("parallel counting transform valid")
+}
+
+/// Parallel CRS → COO-Column (parallel Phase I + parallel Phase II).
+pub fn crs_to_coo_col_par(a: &Csr, n_threads: usize) -> Coo {
+    let ccs = crs_to_ccs_par(a, n_threads);
+    let n_cols = ccs.n_cols();
+    let nnz = ccs.nnz();
+    let mut col_idx = vec![0 as Index; nnz];
+    let ranges = split_even(n_cols, n_threads);
+    std::thread::scope(|s| {
+        let mut rest: &mut [Index] = &mut col_idx;
+        for r in &ranges {
+            let lo_off = ccs.col_ptr[r.start];
+            let hi_off = ccs.col_ptr[r.end];
+            let (chunk, tail) = rest.split_at_mut(hi_off - lo_off);
+            rest = tail;
+            let (lo, hi) = (r.start, r.end);
+            let ccs = &ccs;
+            s.spawn(move || {
+                let mut w = 0;
+                for j in lo..hi {
+                    for _ in 0..ccs.col_len(j) {
+                        chunk[w] = j as Index;
+                        w += 1;
+                    }
+                }
+            });
+        }
+    });
+    Coo::new(a.n_rows(), a.n_cols(), ccs.row_idx.clone(), col_idx, ccs.values.clone(), CooOrder::ColMajor)
+        .expect("parallel phase II preserves ordering")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::random_csr;
+    use crate::rng::Rng;
+    use crate::transform::{crs_to_ccs, crs_to_coo_col, crs_to_coo_row, crs_to_ell};
+
+    fn cases() -> Vec<Csr> {
+        let mut rng = Rng::new(77);
+        vec![
+            random_csr(&mut rng, 1, 1, 1.0),
+            random_csr(&mut rng, 7, 5, 0.4),
+            random_csr(&mut rng, 100, 100, 0.05),
+            random_csr(&mut rng, 33, 61, 0.11),
+            Csr::from_triplets(5, 5, &[]).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn par_ell_matches_sequential() {
+        for a in cases() {
+            for t in [1, 2, 3, 8] {
+                let seq = crs_to_ell(&a).unwrap();
+                let par = crs_to_ell_par(&a, t).unwrap();
+                assert_eq!(seq, par, "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_coo_row_matches_sequential() {
+        for a in cases() {
+            for t in [1, 2, 5] {
+                assert_eq!(crs_to_coo_row(&a), crs_to_coo_row_par(&a, t), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_ccs_matches_sequential() {
+        for a in cases() {
+            for t in [1, 2, 3, 8] {
+                assert_eq!(crs_to_ccs(&a), crs_to_ccs_par(&a, t), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_coo_col_matches_sequential() {
+        for a in cases() {
+            for t in [1, 2, 4] {
+                assert_eq!(crs_to_coo_col(&a), crs_to_coo_col_par(&a, t), "t={t}");
+            }
+        }
+    }
+}

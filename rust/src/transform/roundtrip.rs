@@ -1,0 +1,146 @@
+//! Inverse transformations back to CRS.
+//!
+//! The paper only transforms *away* from CRS; the inverses exist here so
+//! that (a) property tests can assert lossless round-trips and (b) the
+//! coordinator can evict a transformed copy and rebuild CRS if the memory
+//! policy demands it.
+
+use crate::formats::{Coo, Csc, Csr, Ell, SparseMatrix};
+use crate::Index;
+
+/// COO (either order) → CRS.
+pub fn coo_to_crs(c: &Coo) -> Csr {
+    let nnz = c.nnz();
+    let n_rows = c.n_rows();
+    // Counting sort by row, preserving the (already sorted) column order
+    // within rows for RowMajor input; ColMajor input gets columns in
+    // ascending row order per column which after the scatter is also
+    // column-sorted within each row (stable counting scatter over a
+    // col-major stream yields col-sorted rows).
+    let mut cnt = vec![0usize; n_rows + 1];
+    for &r in &c.row_idx {
+        cnt[r as usize + 1] += 1;
+    }
+    for i in 0..n_rows {
+        cnt[i + 1] += cnt[i];
+    }
+    let row_ptr = cnt.clone();
+    let mut col_idx = vec![0 as Index; nnz];
+    let mut values = vec![0.0; nnz];
+    for k in 0..nnz {
+        let r = c.row_idx[k] as usize;
+        let slot = cnt[r];
+        cnt[r] += 1;
+        col_idx[slot] = c.col_idx[k];
+        values[slot] = c.values[k];
+    }
+    Csr::new(n_rows, c.n_cols(), row_ptr, col_idx, values)
+        .expect("COO scatter produces valid CSR")
+}
+
+/// CCS → CRS (the reverse counting transform).
+pub fn csc_to_crs(c: &Csc) -> Csr {
+    let nnz = c.nnz();
+    let n_rows = c.n_rows();
+    let mut cnt = vec![0usize; n_rows + 1];
+    for &r in &c.row_idx {
+        cnt[r as usize + 1] += 1;
+    }
+    for i in 0..n_rows {
+        cnt[i + 1] += cnt[i];
+    }
+    let row_ptr = cnt.clone();
+    let mut col_idx = vec![0 as Index; nnz];
+    let mut values = vec![0.0; nnz];
+    for j in 0..c.n_cols() {
+        for (r, v) in c.col(j) {
+            let slot = cnt[r as usize];
+            cnt[r as usize] += 1;
+            col_idx[slot] = j as Index;
+            values[slot] = v;
+        }
+    }
+    Csr::new(n_rows, c.n_cols(), row_ptr, col_idx, values)
+        .expect("CSC scatter produces valid CSR")
+}
+
+/// ELL → CRS, dropping padding slots (zero value **and** column 0 beyond the
+/// row's logical population cannot be distinguished from a stored exact
+/// zero at column 0, so this uses the stored-value-count convention: slots
+/// are dropped only if they are padding, i.e. trailing `(0.0, col 0)`
+/// entries; stored exact zeros inside the band survive).
+pub fn ell_to_crs(e: &Ell) -> Csr {
+    let n = e.n_rows();
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(e.nnz());
+    for i in 0..n {
+        for k in 0..e.bandwidth {
+            let off = e.offset(i, k);
+            let v = e.values[off];
+            let c = e.col_idx[off] as usize;
+            if v != 0.0 || c != 0 {
+                triplets.push((i, c, v));
+            }
+        }
+    }
+    Csr::from_triplets(n, e.n_cols(), &triplets).expect("ELL entries are in bounds")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::CooOrder;
+    use crate::matrixgen::random_csr;
+    use crate::rng::Rng;
+    use crate::transform::{crs_to_ccs, crs_to_coo_col, crs_to_coo_row, crs_to_ell};
+
+    fn random_matrix(seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        random_csr(&mut rng, 64, 48, 0.07)
+    }
+
+    #[test]
+    fn coo_row_roundtrip_exact() {
+        let a = random_matrix(1);
+        let back = coo_to_crs(&crs_to_coo_row(&a));
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn coo_col_roundtrip_exact() {
+        let a = random_matrix(2);
+        let back = coo_to_crs(&crs_to_coo_col(&a));
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn ccs_roundtrip_exact() {
+        let a = random_matrix(3);
+        let back = csc_to_crs(&crs_to_ccs(&a));
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn ell_roundtrip_preserves_nonzeros() {
+        let a = random_matrix(4);
+        let back = ell_to_crs(&crs_to_ell(&a).unwrap());
+        assert_eq!(a, back);
+    }
+
+    #[test]
+    fn ell_roundtrip_keeps_explicit_zero_off_column_zero() {
+        use crate::Value;
+        // A stored 0.0 at column 2 must survive; padding must not.
+        let a = Csr::from_triplets(2, 3, &[(0, 2, 0.0), (0, 1, 5.0), (1, 0, 1.0)]).unwrap();
+        let e = crs_to_ell(&a).unwrap();
+        let back = ell_to_crs(&e);
+        let t: Vec<(usize, usize, Value)> = back.to_triplets();
+        assert!(t.contains(&(0, 2, 0.0)), "explicit zero dropped: {t:?}");
+        assert_eq!(back.nnz(), 3);
+    }
+
+    #[test]
+    fn order_marker_used() {
+        // Exercise the pub use to keep the import meaningful.
+        let _ = CooOrder::RowMajor;
+    }
+}

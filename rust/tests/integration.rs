@@ -1,0 +1,325 @@
+//! Cross-module integration tests: the full offline→online→serve pipeline
+//! glued together the way a downstream application would use it, plus
+//! failure-injection cases (memory-policy vetoes, transformation failures,
+//! dimension errors crossing the server boundary).
+
+use spmv_at::autotune::atlib::{switches, Durmv};
+use spmv_at::autotune::online::TuningData;
+use spmv_at::autotune::{decide, run_offline, MemoryPolicy, OfflineConfig};
+use spmv_at::coordinator::{Coordinator, CoordinatorConfig, Server, SolverKind};
+use spmv_at::formats::{Csr, FormatKind, SparseMatrix};
+use spmv_at::machine::scalar::ScalarMachine;
+use spmv_at::machine::vector::VectorMachine;
+use spmv_at::machine::{MeasuredBackend, SimulatedBackend};
+use spmv_at::matrixgen::{banded_circulant, generate, make_spd, spec_by_name, table1_specs};
+use spmv_at::rng::Rng;
+use spmv_at::solver::{bicgstab, cg, gmres, jacobi, SolverOptions};
+use spmv_at::spmv::Implementation;
+
+fn small_suite(scale: f64) -> Vec<(String, Csr)> {
+    table1_specs()
+        .iter()
+        .filter(|s| s.no != 3)
+        .map(|s| (s.name.to_string(), generate(s, 7, scale)))
+        .collect()
+}
+
+#[test]
+fn offline_to_online_to_serving_full_pipeline() {
+    // 1. Offline install on the vector machine.
+    let backend = SimulatedBackend::new(VectorMachine::default());
+    let offline = run_offline(&backend, &small_suite(0.02), &OfflineConfig::default()).unwrap();
+    let d_star = offline.d_star.expect("vector machine must accept matrices");
+    assert!(d_star > 1.0, "ES2 D* = {d_star} (paper: 3.10)");
+
+    // 2. Persist + reload the tuning table (the install artifact).
+    let dir = std::env::temp_dir().join("spmv_at_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tuning.tsv");
+    offline.tuning_data().save(&path).unwrap();
+    let tuning = TuningData::load(&path).unwrap();
+    assert_eq!(tuning, offline.tuning_data());
+
+    // 3. Serve matrices through a coordinator configured with it.
+    let mut cfg = CoordinatorConfig::new(tuning);
+    cfg.threads = 2;
+    let (_srv, client) = Server::spawn(Coordinator::new(cfg), 8);
+    let mut rng = Rng::new(5);
+    let band = banded_circulant(&mut rng, 500, &[-1, 0, 1]);
+    let mut want = vec![0.0; 500];
+    let x: Vec<f64> = (0..500).map(|i| (i as f64 * 0.2).sin()).collect();
+    band.spmv(&x, &mut want);
+    client.register("band", band).unwrap();
+    let y = client.spmv("band", x).unwrap();
+    for (g, w) in y.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-9);
+    }
+    // The decision actually transformed (D=0 < D*).
+    let rows = client.stats().unwrap();
+    assert_ne!(rows[0].serving, Implementation::CsrSeq);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn machine_dependence_of_decisions() {
+    // The same matrix set produces different D* per machine — the paper's
+    // core observation (R depends on the architecture, D_mat does not).
+    let suite = small_suite(0.02);
+    let cfg = OfflineConfig::default();
+    let es2 = run_offline(
+        &SimulatedBackend::new(VectorMachine::default()),
+        &suite,
+        &cfg,
+    )
+    .unwrap();
+    let sr = run_offline(
+        &SimulatedBackend::new(ScalarMachine::default()),
+        &suite,
+        &cfg,
+    )
+    .unwrap();
+    let (d_es2, d_sr) = (es2.d_star.unwrap(), sr.d_star.unwrap());
+    assert!(d_es2 > 1.0 && d_sr < 0.5 && d_sr < d_es2);
+
+    // epb2 (D ~= 0.92) transforms under the ES2 table but not under the
+    // SR table — the machine-dependent middle of the D range.
+    let epb2 = generate(&spec_by_name("epb2").unwrap(), 3, 0.05);
+    assert!(decide(&epb2, &es2.tuning_data()).transform);
+    assert!(!decide(&epb2, &sr.tuning_data()).transform);
+}
+
+#[test]
+fn durmv_numbered_switches_agree_with_coordinator() {
+    let mut rng = Rng::new(9);
+    let a = spmv_at::matrixgen::random_csr(&mut rng, 80, 80, 0.1);
+    let x: Vec<f64> = (0..80).map(|i| (i as f64).cos()).collect();
+    let mut want = vec![0.0; 80];
+    a.spmv(&x, &mut want);
+
+    let tuning = TuningData {
+        backend: "t".into(),
+        imp: Implementation::EllRowInner,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(10.0),
+    };
+    // Durmv path.
+    let mut h = Durmv::new(a.clone(), tuning.clone(), MemoryPolicy::unlimited(), 2);
+    let mut y1 = vec![0.0; 80];
+    h.durmv(switches::AUTO, &x, &mut y1).unwrap();
+    // Coordinator path.
+    let mut c = Coordinator::new(CoordinatorConfig::new(tuning));
+    c.register("m", a).unwrap();
+    let y2 = c.spmv("m", &x).unwrap();
+    for ((a, b), w) in y1.iter().zip(&y2).zip(&want) {
+        assert!((a - w).abs() < 1e-9 && (b - w).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn all_solvers_converge_through_at_routed_operator() {
+    let mut rng = Rng::new(11);
+    let a = make_spd(&banded_circulant(&mut rng, 400, &[-2, -1, 0, 1, 2]));
+    let x_true: Vec<f64> = (0..400).map(|i| ((i + 1) as f64 * 0.113).sin()).collect();
+    let mut b = vec![0.0; 400];
+    a.spmv(&x_true, &mut b);
+
+    let tuning = TuningData {
+        backend: "t".into(),
+        imp: Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let opts = SolverOptions { tol: 1e-9, max_iters: 4000 };
+    for solver in ["cg", "bicgstab", "gmres", "jacobi"] {
+        let mut h = Durmv::new(a.clone(), tuning.clone(), MemoryPolicy::unlimited(), 1);
+        let mut x = vec![0.0; 400];
+        let stats = match solver {
+            "cg" => cg(&mut h, &b, &mut x, &opts).unwrap(),
+            "bicgstab" => bicgstab(&mut h, &b, &mut x, &opts).unwrap(),
+            "gmres" => gmres(&mut h, &b, &mut x, 30, &opts).unwrap(),
+            _ => jacobi(&mut h, &b, &mut x, 1.0, &opts).unwrap(),
+        };
+        assert!(stats.converged, "{solver} residual {}", stats.residual);
+        let err: f64 = x
+            .iter()
+            .zip(&x_true)
+            .map(|(p, q)| (p - q) * (p - q))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err < 1e-5, "{solver} err {err}");
+        // The AT handle transformed exactly once and served every SpMV.
+        assert!(h.transform_seconds > 0.0, "{solver} never transformed");
+        assert_eq!(h.calls as usize, stats.spmv_calls, "{solver}");
+    }
+}
+
+#[test]
+fn failure_injection_memory_policy_and_bad_requests() {
+    // ELL blow-up matrix with a tight budget: decision must fall back.
+    let spec = spec_by_name("torso1").unwrap();
+    let a = generate(&spec, 3, 0.01);
+    let n = a.n_rows();
+    let tuning = TuningData {
+        backend: "t".into(),
+        imp: Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(100.0), // would always transform
+    };
+    let mut cfg = CoordinatorConfig::new(tuning);
+    cfg.policy = MemoryPolicy::with_budget(1 << 20); // 1 MiB
+    let (_srv, client) = Server::spawn(Coordinator::new(cfg), 8);
+    client.register("torso1", a).unwrap();
+    let y = client.spmv("torso1", vec![1.0; n]).unwrap();
+    assert_eq!(y.len(), n);
+    let rows = client.stats().unwrap();
+    assert_eq!(rows[0].serving, Implementation::CsrSeq, "policy must veto ELL");
+    assert_eq!(rows[0].extra_bytes, 0);
+
+    // Bad requests error across the channel without killing the server.
+    assert!(client.spmv("torso1", vec![1.0; n + 1]).is_err());
+    assert!(client.spmv("ghost", vec![1.0]).is_err());
+    assert!(client
+        .solve("torso1", vec![1.0; 3], SolverKind::Cg, SolverOptions::default())
+        .is_err());
+    // Server still alive afterwards.
+    assert_eq!(client.stats().unwrap().len(), 1);
+}
+
+#[test]
+fn measured_backend_offline_phase_runs_end_to_end() {
+    // Tiny suite on the host backend: real wallclock, real transforms.
+    let suite: Vec<(String, Csr)> = table1_specs()
+        .iter()
+        .filter(|s| [2u32, 6, 14].contains(&s.no))
+        .map(|s| (s.name.to_string(), generate(s, 5, 0.02)))
+        .collect();
+    let backend = MeasuredBackend::new(0, 3);
+    let r = run_offline(&backend, &suite, &OfflineConfig::default()).unwrap();
+    assert_eq!(r.samples.len(), 3);
+    for s in &r.samples {
+        assert!(s.t_crs > 0.0, "{}", s.name);
+        assert!(s.ratios.is_some(), "{} excluded unexpectedly", s.name);
+    }
+}
+
+#[test]
+fn mtx_file_to_coordinator_roundtrip() {
+    // MatrixMarket in -> registered -> served: the external-data path.
+    let mut rng = Rng::new(21);
+    let a = spmv_at::matrixgen::random_csr(&mut rng, 40, 40, 0.15);
+    let dir = std::env::temp_dir().join("spmv_at_integration_mtx");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("m.mtx");
+    spmv_at::io::write_matrix_market_file(&a, &p).unwrap();
+    let back = spmv_at::io::read_matrix_market_file(&p).unwrap();
+    assert_eq!(a, back);
+
+    let tuning = TuningData {
+        backend: "t".into(),
+        imp: Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let mut c = Coordinator::new(CoordinatorConfig::new(tuning));
+    c.register("mtx", back).unwrap();
+    let x = vec![1.0; 40];
+    let mut want = vec![0.0; 40];
+    a.spmv(&x, &mut want);
+    let y = c.spmv("mtx", &x).unwrap();
+    for (g, w) in y.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-9);
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn serving_format_tracks_decision_lifecycle() {
+    let tuning = TuningData {
+        backend: "t".into(),
+        imp: Implementation::CooRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(0.5),
+    };
+    let mut c = Coordinator::new(CoordinatorConfig::new(tuning));
+    let mut rng = Rng::new(30);
+    // Low-D matrix: transforms to COO-Row per the tuning table.
+    let band = banded_circulant(&mut rng, 64, &[0, 1]);
+    c.register("low", band).unwrap();
+    assert_eq!(c.serving_format("low"), Some(FormatKind::Csr));
+    c.spmv("low", &vec![1.0; 64]).unwrap();
+    assert_eq!(c.serving_format("low"), Some(FormatKind::CooRow));
+    // High-D matrix stays CRS forever.
+    let spiky = generate(&spec_by_name("memplus").unwrap(), 1, 0.02);
+    let n = spiky.n_rows();
+    c.register("high", spiky).unwrap();
+    c.spmv("high", &vec![1.0; n]).unwrap();
+    assert_eq!(c.serving_format("high"), Some(FormatKind::Csr));
+    // Evict and the registry reflects it.
+    assert!(c.evict("low"));
+    assert_eq!(c.serving_format("low"), None);
+}
+
+#[test]
+fn break_even_accounting_matches_ratios_module() {
+    // Coordinator amortisation must agree with the Ratios::break_even math.
+    let mut rng = Rng::new(40);
+    let a = banded_circulant(&mut rng, 2000, &[-1, 0, 1, 2, 3]);
+    let tuning = TuningData {
+        backend: "t".into(),
+        imp: Implementation::EllRowInner,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let mut c = Coordinator::new(CoordinatorConfig::new(tuning));
+    c.register("m", a).unwrap();
+    let x = vec![1.0; 2000];
+    for _ in 0..50 {
+        c.spmv("m", &x).unwrap();
+    }
+    let s = &c.stats()[0];
+    assert_eq!(s.calls, 50);
+    assert_eq!(s.transformed_calls, 50, "all calls after decision use ELL");
+    assert!(s.t_trans > 0.0);
+}
+
+#[test]
+fn batched_spmv_serves_multiple_rhs_under_one_decision() {
+    let tuning = TuningData {
+        backend: "t".into(),
+        imp: Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let (_srv, client) = Server::spawn(
+        Coordinator::new(CoordinatorConfig::new(tuning)),
+        8,
+    );
+    let mut rng = Rng::new(77);
+    let a = banded_circulant(&mut rng, 200, &[-1, 0, 1]);
+    let reference = a.clone();
+    client.register("band", a).unwrap();
+    let xs: Vec<Vec<f64>> = (0..5)
+        .map(|k| (0..200).map(|i| ((i + k) as f64 * 0.13).sin()).collect())
+        .collect();
+    let ys = client.spmv_batch("band", xs.clone()).unwrap();
+    assert_eq!(ys.len(), 5);
+    for (x, y) in xs.iter().zip(&ys) {
+        let mut want = vec![0.0; 200];
+        reference.spmv(x, &mut want);
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+    // One transformation served the whole batch.
+    let s = &client.stats().unwrap()[0];
+    assert_eq!(s.calls, 5);
+    assert_eq!(s.transformed_calls, 5);
+    assert!(s.t_trans > 0.0);
+}

@@ -1,0 +1,380 @@
+//! Property-based tests (seeded randomised invariants — the environment
+//! carries no proptest crate, so `for_seeds` plays its role with explicit
+//! deterministic seeds and shrink-friendly failure messages).
+
+use spmv_at::autotune::dmat::RowStats;
+use spmv_at::autotune::{MemoryPolicy, Ratios};
+use spmv_at::formats::{Csr, FormatKind, SparseMatrix};
+use spmv_at::machine::MatrixShape;
+use spmv_at::matrixgen::{assemble_from_row_lens, random_csr, rowlen, Placement};
+use spmv_at::rng::Rng;
+use spmv_at::spmv::partition::{imbalance, split_by_nnz, split_even};
+use spmv_at::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use spmv_at::transform;
+
+/// Run `f` for a batch of deterministic seeds; failures report the seed.
+fn for_seeds(n: u64, mut f: impl FnMut(u64, &mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xABCD_0000 + seed);
+        f(seed, &mut rng);
+    }
+}
+
+/// Random matrix with diverse shapes: rectangular, empty rows, varying
+/// density.
+fn arbitrary_matrix(rng: &mut Rng) -> Csr {
+    let n_rows = rng.range(1, 120);
+    let n_cols = rng.range(1, 120);
+    let density = rng.range_f64(0.0, 0.3);
+    random_csr(rng, n_rows, n_cols, density)
+}
+
+#[test]
+fn prop_every_transform_roundtrips_losslessly() {
+    for_seeds(40, |seed, rng| {
+        let a = arbitrary_matrix(rng);
+        let r1 = transform::coo_to_crs(&transform::crs_to_coo_row(&a));
+        assert_eq!(a, r1, "COO-Row roundtrip, seed {seed}");
+        let r2 = transform::coo_to_crs(&transform::crs_to_coo_col(&a));
+        assert_eq!(a, r2, "COO-Col roundtrip, seed {seed}");
+        let r3 = transform::csc_to_crs(&transform::crs_to_ccs(&a));
+        assert_eq!(a, r3, "CCS roundtrip, seed {seed}");
+        let r4 = transform::ell_to_crs(&transform::crs_to_ell(&a).unwrap());
+        assert_eq!(a, r4, "ELL roundtrip, seed {seed}");
+    });
+}
+
+#[test]
+fn prop_transforms_preserve_nnz_and_shape() {
+    for_seeds(40, |seed, rng| {
+        let a = arbitrary_matrix(rng);
+        for kind in FormatKind::ALL {
+            let m = transform::transform_to(&a, kind, None).unwrap();
+            assert_eq!(m.nnz(), a.nnz(), "{kind} nnz, seed {seed}");
+            assert_eq!(m.n_rows(), a.n_rows(), "{kind} rows, seed {seed}");
+            assert_eq!(m.n_cols(), a.n_cols(), "{kind} cols, seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_all_kernels_agree_with_csr_at_random_thread_counts() {
+    let mut ws = Workspace::new();
+    for_seeds(25, |seed, rng| {
+        let a = arbitrary_matrix(rng);
+        let x: Vec<f64> = (0..a.n_cols()).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        let mut want = vec![0.0; a.n_rows()];
+        a.spmv(&x, &mut want);
+        let threads = rng.range(1, 9);
+        for imp in Implementation::ALL {
+            let m = AnyMatrix::prepare(&a, imp, None).unwrap();
+            let mut y = vec![0.0; a.n_rows()];
+            kernels::run(imp, &m, &x, &mut y, threads, &mut ws).unwrap();
+            for (i, (g, w)) in y.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-9 * (1.0 + w.abs()),
+                    "{imp} row {i}: {g} vs {w}, seed {seed}, threads {threads}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_partitions_cover_without_overlap() {
+    for_seeds(50, |seed, rng| {
+        let n = rng.range(0, 200);
+        let k = rng.range(1, 20);
+        // Random row_ptr.
+        let mut row_ptr = vec![0usize];
+        for _ in 0..n {
+            let len = if rng.next_bool(0.2) { rng.range(0, 50) } else { rng.range(0, 5) };
+            row_ptr.push(row_ptr.last().unwrap() + len);
+        }
+        for ranges in [split_even(n, k), split_by_nnz(&row_ptr, k)] {
+            let mut pos = 0;
+            for r in &ranges {
+                assert_eq!(r.start, pos, "gap/overlap, seed {seed}");
+                assert!(r.end > r.start, "empty range, seed {seed}");
+                pos = r.end;
+            }
+            assert_eq!(pos, n, "coverage, seed {seed}");
+            assert!(ranges.len() <= k, "too many ranges, seed {seed}");
+        }
+        // nnz balancing never does worse than even splitting (on imbalance).
+        if n > 0 && row_ptr[n] > 0 {
+            let ie = imbalance(&row_ptr, &split_even(n, k));
+            let ib = imbalance(&row_ptr, &split_by_nnz(&row_ptr, k));
+            // Greedy quantile placement can lose a little on near-uniform
+            // inputs (boundary rounding) but must never be much worse.
+            assert!(
+                ib <= ie * 1.2 + 1e-9,
+                "by_nnz {ib} much worse than even {ie}, seed {seed}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_dmat_invariances() {
+    for_seeds(30, |seed, rng| {
+        let a = arbitrary_matrix(rng);
+        let d = RowStats::of_csr(&a).d_mat();
+        assert!(d >= 0.0 && d.is_finite(), "seed {seed}");
+        // Column permutation leaves the row-length distribution unchanged.
+        let mut perm: Vec<usize> = (0..a.n_cols()).collect();
+        rng.shuffle(&mut perm);
+        let permuted: Vec<(usize, usize, f64)> = a
+            .to_triplets()
+            .into_iter()
+            .map(|(r, c, v)| (r, perm[c], v))
+            .collect();
+        let b = Csr::from_triplets(a.n_rows(), a.n_cols(), &permuted).unwrap();
+        let d2 = RowStats::of_csr(&b).d_mat();
+        assert!((d - d2).abs() < 1e-12, "column permutation changed D_mat, seed {seed}");
+        // Scaling values leaves D_mat unchanged (it never reads values).
+        let scaled: Vec<(usize, usize, f64)> =
+            a.to_triplets().into_iter().map(|(r, c, v)| (r, c, v * 7.5)).collect();
+        let c = Csr::from_triplets(a.n_rows(), a.n_cols(), &scaled).unwrap();
+        assert_eq!(d, RowStats::of_csr(&c).d_mat(), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_memory_predictions_match_materialized_formats() {
+    for_seeds(25, |seed, rng| {
+        let a = arbitrary_matrix(rng);
+        let shape = MatrixShape::of(&a);
+        for kind in [FormatKind::CooRow, FormatKind::CooCol, FormatKind::Ell] {
+            let m = transform::transform_to(&a, kind, None).unwrap();
+            let predicted = MemoryPolicy::predicted_bytes(&shape, kind);
+            assert_eq!(predicted, m.memory_bytes(), "{kind}, seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_ratios_consistency() {
+    for_seeds(200, |seed, rng| {
+        let t_crs = rng.range_f64(1e-6, 1e-2);
+        let t_imp = rng.range_f64(1e-7, 1e-2);
+        let t_trans = rng.range_f64(0.0, 1e-1);
+        let r = Ratios::from_times(t_crs, t_imp, t_trans);
+        // Definitional identities.
+        assert!((r.sp - t_crs / t_imp).abs() < 1e-12 * r.sp, "seed {seed}");
+        if t_trans > 0.0 {
+            assert!((r.r - r.sp / r.tt).abs() <= 1e-9 * r.r.abs(), "seed {seed}");
+        }
+        // Break-even: at the break-even iteration count, transformed total
+        // cost equals the CRS-only cost (within fp tolerance).
+        let be = r.break_even_iterations();
+        if be.is_finite() && be > 0.0 {
+            let iters = be.ceil() as usize + 1;
+            let transformed = r.total_cost(iters);
+            let baseline = iters as f64;
+            assert!(
+                transformed <= baseline + 1e-9,
+                "past break-even but still losing: {transformed} > {baseline}, seed {seed}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_rowlen_synthesis_hits_sum_exactly() {
+    for_seeds(40, |seed, rng| {
+        let n = rng.range(1, 3000);
+        let mu = rng.range_f64(1.0, 40.0);
+        let nnz = ((n as f64 * mu) as usize).min(n * n).max(1);
+        let sigma = rng.range_f64(0.0, mu * 4.0);
+        let lens = rowlen::synthesize(rng, n, nnz, sigma, n);
+        let s = rowlen::stats(&lens);
+        assert_eq!(s.sum, nnz, "sum, seed {seed} (n={n}, mu={mu}, sigma={sigma})");
+        assert!(s.max <= n, "cap, seed {seed}");
+    });
+}
+
+#[test]
+fn prop_assembled_matrices_are_valid_with_exact_row_lens() {
+    for_seeds(30, |seed, rng| {
+        let n = rng.range(1, 150);
+        let n_cols = rng.range(1, 150);
+        let lens: Vec<usize> = (0..n).map(|_| rng.range(0, 12)).collect();
+        for placement in [Placement::Banded, Placement::Uniform] {
+            let a = assemble_from_row_lens(rng, n_cols, &lens, placement);
+            a.validate().expect("valid CSR");
+            for (i, &l) in lens.iter().enumerate() {
+                assert_eq!(a.row_len(i), l.min(n_cols), "row {i}, seed {seed} {placement:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ell_fill_ratio_bounds() {
+    for_seeds(30, |seed, rng| {
+        let a = arbitrary_matrix(rng);
+        if a.nnz() == 0 {
+            return;
+        }
+        let e = transform::crs_to_ell(&a).unwrap();
+        assert!(e.fill_ratio() >= 1.0, "seed {seed}");
+        // fill == 1 iff every row has the same length.
+        let s = RowStats::of_csr(&a);
+        if s.max_row == s.min_row {
+            assert!((e.fill_ratio() - 1.0).abs() < 1e-12, "seed {seed}");
+        } else {
+            assert!(e.fill_ratio() > 1.0, "seed {seed}");
+        }
+        // Padding accounting is exact.
+        assert_eq!(e.padding() + e.nnz(), a.n_rows() * e.bandwidth, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_coordinator_random_op_sequences_stay_consistent() {
+    use spmv_at::autotune::online::TuningData;
+    use spmv_at::coordinator::{Coordinator, CoordinatorConfig};
+    for_seeds(10, |seed, rng| {
+        let tuning = TuningData {
+            backend: "t".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(rng.range_f64(0.0, 4.0)),
+        };
+        let mut c = Coordinator::new(CoordinatorConfig::new(tuning));
+        let mut live: Vec<(String, usize, u64)> = Vec::new(); // (name, n_cols, calls)
+        for step in 0..40 {
+            match rng.range(0, 4) {
+                0 => {
+                    let name = format!("m{seed}_{step}");
+                    let a = arbitrary_matrix(rng);
+                    let nc = a.n_cols();
+                    c.register(&name, a).unwrap();
+                    live.push((name, nc, 0));
+                }
+                1 if !live.is_empty() => {
+                    let k = rng.range(0, live.len());
+                    let (name, nc, calls) = &mut live[k];
+                    let x = vec![1.0; *nc];
+                    c.spmv(name, &x).unwrap();
+                    *calls += 1;
+                }
+                2 if !live.is_empty() => {
+                    let k = rng.range(0, live.len());
+                    let (name, _, _) = live.remove(k);
+                    assert!(c.evict(&name), "seed {seed} step {step}");
+                }
+                _ => {
+                    // Stats must match our book-keeping exactly.
+                    let stats = c.stats();
+                    assert_eq!(stats.len(), live.len(), "seed {seed} step {step}");
+                    for (name, _, calls) in &live {
+                        let row = stats.iter().find(|s| &s.name == name).unwrap();
+                        assert_eq!(row.calls, *calls, "seed {seed} step {step} {name}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spmv_linearity() {
+    // SpMV is linear: A(αx + βz) = αAx + βAz — catches padding slots that
+    // read uninitialised columns.
+    let mut ws = Workspace::new();
+    for_seeds(20, |seed, rng| {
+        let a = arbitrary_matrix(rng);
+        let (nr, nc) = (a.n_rows(), a.n_cols());
+        let x: Vec<f64> = (0..nc).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let z: Vec<f64> = (0..nc).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let (alpha, beta) = (rng.range_f64(-2.0, 2.0), rng.range_f64(-2.0, 2.0));
+        let combo: Vec<f64> = x.iter().zip(&z).map(|(a, b)| alpha * a + beta * b).collect();
+        for imp in [Implementation::EllRowInner, Implementation::CooRowOuter] {
+            let m = AnyMatrix::prepare(&a, imp, None).unwrap();
+            let mut yx = vec![0.0; nr];
+            let mut yz = vec![0.0; nr];
+            let mut yc = vec![0.0; nr];
+            kernels::run(imp, &m, &x, &mut yx, 2, &mut ws).unwrap();
+            kernels::run(imp, &m, &z, &mut yz, 2, &mut ws).unwrap();
+            kernels::run(imp, &m, &combo, &mut yc, 2, &mut ws).unwrap();
+            for i in 0..nr {
+                let want = alpha * yx[i] + beta * yz[i];
+                assert!(
+                    (yc[i] - want).abs() <= 1e-8 * (1.0 + want.abs()),
+                    "{imp} linearity row {i}, seed {seed}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cost_models_are_sane() {
+    // Structural invariants of the machine models, fuzzed over shapes:
+    // positive times, monotone in nnz, ELL monotone in fill, CRS-par
+    // non-increasing in threads.
+    use spmv_at::machine::scalar::ScalarMachine;
+    use spmv_at::machine::vector::VectorMachine;
+    use spmv_at::machine::CostModel;
+    let models: [Box<dyn CostModel>; 2] = [
+        Box::new(VectorMachine::default()),
+        Box::new(ScalarMachine::default()),
+    ];
+    for_seeds(40, |seed, rng| {
+        let n = rng.range(64, 300_000);
+        let mu = rng.range_f64(1.0, 80.0);
+        let nnz = (n as f64 * mu) as usize;
+        let bw = ((mu * rng.range_f64(1.0, 20.0)).ceil() as usize).max(1).min(n);
+        let shape = MatrixShape {
+            n,
+            n_cols: n,
+            nnz,
+            mu,
+            sigma: rng.range_f64(0.0, mu * 3.0),
+            bandwidth: bw,
+            fill_ratio: (n * bw) as f64 / nnz as f64,
+        };
+        for m in &models {
+            for imp in Implementation::ALL {
+                let t = m.spmv_seconds(&shape, imp, 1);
+                assert!(t > 0.0 && t.is_finite(), "{} {imp} t={t}, seed {seed}", m.name());
+            }
+            // More nnz at fixed n must not be faster (CRS baseline).
+            let bigger = MatrixShape { nnz: nnz * 2, mu: mu * 2.0, ..shape };
+            assert!(
+                m.spmv_seconds(&bigger, Implementation::CsrSeq, 1)
+                    >= m.spmv_seconds(&shape, Implementation::CsrSeq, 1),
+                "{}: CRS not monotone in nnz, seed {seed}",
+                m.name()
+            );
+            // Wider band (same nnz) must not make ELL faster.
+            if bw * 2 <= n {
+                let wider = MatrixShape {
+                    bandwidth: bw * 2,
+                    fill_ratio: (n * bw * 2) as f64 / nnz as f64,
+                    ..shape
+                };
+                assert!(
+                    m.spmv_seconds(&wider, Implementation::EllRowInner, 1)
+                        >= m.spmv_seconds(&shape, Implementation::EllRowInner, 1) * 0.999,
+                    "{}: ELL not monotone in fill, seed {seed}",
+                    m.name()
+                );
+            }
+            // Threads never hurt the parallel CRS baseline (weak check).
+            let t1 = m.spmv_seconds(&shape, Implementation::CsrRowPar, 1);
+            let t8 = m.spmv_seconds(&shape, Implementation::CsrRowPar, 8);
+            assert!(t8 <= t1 * 1.6, "{}: 8 threads much slower than 1, seed {seed}", m.name());
+            // Transform times positive for every non-CRS target.
+            for kind in spmv_at::formats::FormatKind::ALL {
+                if kind != spmv_at::formats::FormatKind::Csr {
+                    let tt = m.transform_seconds(&shape, kind);
+                    assert!(tt > 0.0 && tt.is_finite(), "{} {kind}, seed {seed}", m.name());
+                }
+            }
+        }
+    });
+}

@@ -1,0 +1,157 @@
+//! End-to-end XLA runtime integration: load the AOT artifacts produced by
+//! `make artifacts`, execute the Pallas-authored ELL SpMV through PJRT,
+//! and check numerics against the native rust kernels.
+//!
+//! Tests are skipped (not failed) when `artifacts/manifest.tsv` is absent,
+//! so `cargo test` works before the first `make artifacts`.
+
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::matrixgen::{banded_circulant, random_csr};
+use spmv_at::rng::Rng;
+use spmv_at::runtime::{EllXlaKernel, XlaRuntime, XlaService};
+use spmv_at::transform::crs_to_ell;
+use std::path::PathBuf;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn assert_close(a: &[f64], b: &[f64]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-9 * (1.0 + x.abs()),
+            "index {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn xla_ell_spmv_matches_native_exact_bucket() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    // Exact bucket: 256 rows, bandwidth 4 (circulant band).
+    let mut rng = Rng::new(1);
+    let a = banded_circulant(&mut rng, 256, &[-1, 0, 1, 2]);
+    let ell = crs_to_ell(&a).unwrap();
+    assert_eq!(ell.bandwidth, 4);
+    let x: Vec<f64> = (0..256).map(|i| (i as f64 * 0.37).sin()).collect();
+    let mut want = vec![0.0; 256];
+    a.spmv(&x, &mut want);
+    let k = EllXlaKernel::new(&rt, ell).unwrap();
+    let mut got = vec![0.0; 256];
+    k.spmv(&x, &mut got).unwrap();
+    assert_close(&got, &want);
+    assert_eq!(rt.compiled_count(), 1);
+}
+
+#[test]
+fn xla_ell_spmv_pads_into_larger_bucket() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    // 300 rows, bandwidth ~13: needs the 1024x16 bucket with padding on
+    // both axes.
+    let mut rng = Rng::new(2);
+    let a = random_csr(&mut rng, 300, 300, 0.02);
+    let ell = crs_to_ell(&a).unwrap();
+    assert!(ell.bandwidth <= 16, "bandwidth {} too wide for test", ell.bandwidth);
+    let x: Vec<f64> = (0..300).map(|i| 1.0 + (i % 5) as f64).collect();
+    let mut want = vec![0.0; 300];
+    a.spmv(&x, &mut want);
+    let k = EllXlaKernel::new(&rt, ell).unwrap();
+    let mut got = vec![0.0; 300];
+    k.spmv(&x, &mut got).unwrap();
+    assert_close(&got, &want);
+}
+
+#[test]
+fn xla_executable_cache_reused_across_calls() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let mut rng = Rng::new(3);
+    let a = banded_circulant(&mut rng, 256, &[0, 1]);
+    let ell = crs_to_ell(&a).unwrap();
+    let k = EllXlaKernel::new(&rt, ell).unwrap();
+    let x = vec![1.0; 256];
+    let mut y = vec![0.0; 256];
+    for _ in 0..5 {
+        k.spmv(&x, &mut y).unwrap();
+    }
+    assert_eq!(rt.compiled_count(), 1, "one executable per bucket, compiled once");
+}
+
+#[test]
+fn xla_rejects_oversized_matrix() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    // Bandwidth 100 exceeds every bucket at 16384 rows.
+    let t: Vec<(usize, usize, f64)> = (0..100).map(|j| (0, j * 163, 1.0)).collect();
+    let a = Csr::from_triplets(16_384, 16_384, &t).unwrap();
+    let ell = crs_to_ell(&a).unwrap();
+    assert!(EllXlaKernel::new(&rt, ell).is_err());
+}
+
+#[test]
+fn xla_service_thread_roundtrip() {
+    let Some(dir) = artifact_dir() else { return };
+    let (_svc, handle) = XlaService::spawn(dir).expect("service");
+    assert!(handle.platform().unwrap().to_lowercase().contains("cpu")
+        || handle.platform().unwrap().to_lowercase().contains("host"));
+    assert!(handle.has_bucket(256, 4));
+    assert!(!handle.has_bucket(1 << 20, 4));
+
+    let mut rng = Rng::new(4);
+    let a = banded_circulant(&mut rng, 200, &[-1, 0, 1]);
+    let ell = crs_to_ell(&a).unwrap();
+    let cols: Vec<i32> = ell.col_idx.iter().map(|&c| c as i32).collect();
+    let x: Vec<f64> = (0..200).map(|i| (i as f64).cos()).collect();
+    let mut want = vec![0.0; 200];
+    a.spmv(&x, &mut want);
+    let got = handle
+        .ell_spmv(200, ell.bandwidth, &ell.values, &cols, &x)
+        .unwrap();
+    assert_close(&got, &want);
+
+    // Handle is Send + Sync: exercise from two threads.
+    let h2 = handle.clone();
+    let t = std::thread::spawn(move || h2.has_bucket(256, 4));
+    assert!(t.join().unwrap());
+}
+
+#[test]
+fn coordinator_serves_through_xla_artifact() {
+    use spmv_at::autotune::online::TuningData;
+    use spmv_at::coordinator::{Coordinator, CoordinatorConfig, EllExec};
+    use spmv_at::formats::FormatKind;
+    use spmv_at::spmv::Implementation;
+
+    let Some(dir) = artifact_dir() else { return };
+    let (_svc, handle) = XlaService::spawn(dir).expect("service");
+    let tuning = TuningData {
+        backend: "sim:ES2".into(),
+        imp: Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let mut cfg = CoordinatorConfig::new(tuning);
+    cfg.ell_exec = EllExec::XlaPreferred;
+    let mut coord = Coordinator::new(cfg).with_xla(handle);
+
+    let mut rng = Rng::new(5);
+    let a = banded_circulant(&mut rng, 256, &[-2, 0, 3]);
+    let x: Vec<f64> = (0..256).map(|i| (i as f64 * 0.11).sin()).collect();
+    let mut want = vec![0.0; 256];
+    a.spmv(&x, &mut want);
+
+    coord.register("band", a).unwrap();
+    let got = coord.spmv("band", &x).unwrap();
+    assert_close(&got, &want);
+    assert_eq!(coord.serving_format("band"), Some(FormatKind::Ell));
+}
