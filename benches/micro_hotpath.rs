@@ -1,10 +1,13 @@
 //! Hot-path microbenchmarks on the host CPU: real wall-clock for the
-//! transformations (§2.1) and every SpMV kernel (§3), per matrix class.
-//! This is the measurement substrate for the performance pass
-//! (EXPERIMENTS.md §Perf): run before/after every optimisation.
+//! transformations (§2.1), every SpMV kernel (§3) executed through a
+//! cached `SpmvPlan`, and the per-call dispatch overhead of the
+//! persistent pool vs. spawn-per-call scoped threads. This is the
+//! measurement substrate for the performance pass (EXPERIMENTS.md §Perf):
+//! run before/after every optimisation.
 //!
 //! Env knobs: SPMV_AT_SCALE (default 0.05 here — host wallclock, keep it
-//! quick), SPMV_AT_REPS (default 7).
+//! quick), SPMV_AT_REPS (default 7), SPMV_AT_THREADS (pool width for the
+//! dispatch-overhead case).
 
 #[path = "common.rs"]
 mod common;
@@ -12,8 +15,11 @@ mod common;
 use spmv_at::formats::{Csr, SparseMatrix};
 use spmv_at::matrixgen::{generate, spec_by_name};
 use spmv_at::metrics::{time_median, Json, Table};
-use spmv_at::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use spmv_at::spmv::partition::split_even;
+use spmv_at::spmv::pool::{configured_threads, ParPool};
+use spmv_at::spmv::{Implementation, SpmvPlan};
 use spmv_at::transform;
+use std::sync::Arc;
 
 fn reps() -> usize {
     std::env::var("SPMV_AT_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
@@ -62,24 +68,23 @@ fn bench_transforms(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
     ]
 }
 
-fn bench_kernels(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
+fn bench_kernels(a: &Csr, name: &str, pool: &Arc<ParPool>, json: &mut Vec<Json>) -> Vec<String> {
     let r = reps();
     let x: Vec<f64> = (0..a.n_cols()).map(|i| 1.0 + (i % 9) as f64 * 0.1).collect();
     let mut y = vec![0.0; a.n_rows()];
-    let mut ws = Workspace::new();
     let mut cells = Vec::new();
     let gflops = |t: f64| 2.0 * a.nnz() as f64 / t / 1e9;
     for imp in Implementation::ALL {
-        let m = match AnyMatrix::prepare(a, imp, None) {
-            Ok(m) => m,
+        let mut plan = match SpmvPlan::build(a, imp, None, pool.clone()) {
+            Ok(p) => p,
             Err(_) => {
                 cells.push("-".to_string());
                 continue;
             }
         };
-        kernels::run(imp, &m, &x, &mut y, 1, &mut ws).unwrap();
+        plan.execute(&x, &mut y).unwrap();
         let t = time_median(1, r, || {
-            kernels::run(imp, &m, &x, &mut y, 1, &mut ws).unwrap();
+            plan.execute(&x, &mut y).unwrap();
         });
         std::hint::black_box(&y);
         cells.push(format!("{:.3}/{:.2}", t * 1e3, gflops(t)));
@@ -94,8 +99,58 @@ fn bench_kernels(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
     cells
 }
 
+/// The tentpole's headline number: per-call dispatch cost of the
+/// persistent pool vs. a fresh `std::thread::scope` fork/join, on a
+/// trivially cheap body (sum a range of `x`) so dispatch dominates at
+/// small `n` and amortises at large `n`.
+fn bench_pool_vs_scoped(json: &mut Vec<Json>) {
+    let r = reps().max(9);
+    let threads = configured_threads().clamp(2, 8);
+    let pool = ParPool::new(threads);
+    println!(
+        "\ndispatch overhead ({threads} threads): spawn-per-call vs persistent pool (us/call):"
+    );
+    let mut t = Table::new(vec!["n", "scoped", "pool", "speedup"]);
+    for n in [1_000usize, 100_000] {
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+        let ranges = split_even(n, threads);
+        let body = |rr: std::ops::Range<usize>| {
+            let mut acc = 0.0;
+            for i in rr {
+                acc += x[i];
+            }
+            std::hint::black_box(acc);
+        };
+        let t_scoped = time_median(2, r, || {
+            std::thread::scope(|s| {
+                for rr in &ranges {
+                    let rr = rr.clone();
+                    s.spawn(|| body(rr));
+                }
+            });
+        });
+        let t_pool = time_median(2, r, || {
+            pool.run_chunks(&ranges, |_tid, rr| body(rr));
+        });
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", t_scoped * 1e6),
+            format!("{:.2}", t_pool * 1e6),
+            format!("{:.2}x", t_scoped / t_pool.max(1e-12)),
+        ]);
+        json.push(Json::Obj(vec![
+            ("kind".into(), Json::Str("pool_vs_scoped".into())),
+            ("n".into(), Json::Num(n as f64)),
+            ("threads".into(), Json::Num(threads as f64)),
+            ("scoped_seconds".into(), Json::Num(t_scoped)),
+            ("pool_seconds".into(), Json::Num(t_pool)),
+        ]));
+    }
+    print!("{}", t.render());
+}
+
 fn main() {
-    common::banner("micro_hotpath", "host wallclock: transforms + SpMV kernels (1 thread)");
+    common::banner("micro_hotpath", "host wallclock: transforms + SpMV plans + dispatch overhead");
     let mut json = Vec::new();
 
     println!("\ntransformations (ms):");
@@ -109,7 +164,8 @@ fn main() {
     }
     print!("{}", tt.render());
 
-    println!("\nSpMV kernels (ms / GFLOP-s), 1 thread:");
+    println!("\nSpMV plans (ms / GFLOP-s), pool size 1:");
+    let pool1 = Arc::new(ParPool::new(1));
     let mut kt = Table::new(vec![
         "matrix", "CRS", "CRS-Par", "COO-Col", "COO-Row", "ELL-In", "ELL-Out", "BCSR", "JDS",
         "HYB",
@@ -118,9 +174,11 @@ fn main() {
         let spec = spec_by_name(name).unwrap();
         let a = generate(&spec, common::seed(), scale());
         let mut row = vec![name.to_string()];
-        row.extend(bench_kernels(&a, name, &mut json));
+        row.extend(bench_kernels(&a, name, &pool1, &mut json));
         kt.row(row);
     }
     print!("{}", kt.render());
+
+    bench_pool_vs_scoped(&mut json);
     common::write_json("micro_hotpath", Json::Arr(json));
 }

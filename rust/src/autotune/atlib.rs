@@ -5,13 +5,21 @@
 //! reproduces that calling convention: a matrix handle plus an integer
 //! switch selecting the SpMV implementation, with switch 0 meaning
 //! **AUTO** — the run-time AT decision of §2.2.
+//!
+//! Execution goes through the plan engine: the handle owns a
+//! [`Planner`] (tuning table + memory policy + a persistent worker pool)
+//! and caches one [`SpmvPlan`] per implementation it has served, so the
+//! transformation *and* the work partition are paid once and replayed on
+//! every subsequent call — no per-call thread spawns, no per-call
+//! partitioning.
 
-use super::online::{decide, TuningData};
+use super::online::TuningData;
 use super::policy::MemoryPolicy;
 use crate::formats::Csr;
-use crate::machine::MatrixShape;
-use crate::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use crate::spmv::pool::ParPool;
+use crate::spmv::{Implementation, Planner, SpmvPlan};
 use crate::{Result, Value};
+use std::sync::Arc;
 
 /// Switch numbers (OpenATLib style).
 pub mod switches {
@@ -55,35 +63,30 @@ pub fn switch_to_impl(switch: u32) -> Result<Option<Implementation>> {
     })
 }
 
-/// A matrix handle with lazily-materialised transformed copies — the
-/// `OpenATI_DURMV` equivalent. Holds the CRS original, the tuning table,
-/// the memory policy, and (after first use) the transformed copy the AT
-/// decision selected.
+/// A matrix handle with cached execution plans — the `OpenATI_DURMV`
+/// equivalent. Holds the CRS original plus a [`Planner`]; each
+/// implementation that gets exercised materialises one [`SpmvPlan`]
+/// (kept across calls — the run-time transformation happens once and
+/// amortises over iterations).
 pub struct Durmv {
     crs: Csr,
-    tuning: TuningData,
-    policy: MemoryPolicy,
-    threads: usize,
-    /// The transformed copy, if any (kept across calls — the run-time
-    /// transformation happens once and amortises over iterations).
-    cached: Option<(Implementation, AnyMatrix)>,
-    ws: Workspace,
+    planner: Planner,
+    plans: Vec<SpmvPlan>,
     /// Cumulative SpMV calls served (amortisation accounting).
     pub calls: u64,
-    /// Seconds spent transforming (accounted once).
+    /// Seconds spent transforming (accounted once per implementation).
     pub transform_seconds: f64,
 }
 
 impl Durmv {
-    /// New handle with the given tuning table and policy.
+    /// New handle with the given tuning table and policy, executing on a
+    /// dedicated pool of `threads` workers.
     pub fn new(crs: Csr, tuning: TuningData, policy: MemoryPolicy, threads: usize) -> Self {
+        let pool = Arc::new(ParPool::new(threads.max(1)));
         Self {
             crs,
-            tuning,
-            policy,
-            threads: threads.max(1),
-            cached: None,
-            ws: Workspace::new(),
+            planner: Planner::new(tuning, policy, pool),
+            plans: Vec::new(),
             calls: 0,
             transform_seconds: 0.0,
         }
@@ -94,25 +97,15 @@ impl Durmv {
         &self.crs
     }
 
-    /// The implementation AUTO would choose for this matrix right now.
+    /// The implementation AUTO would choose for this matrix right now
+    /// (tuning-table decision + memory-policy veto).
     pub fn auto_choice(&self) -> Implementation {
-        let d = decide(&self.crs, &self.tuning);
-        if !d.transform {
-            return Implementation::CsrSeq;
-        }
-        // Respect the memory policy: if the chosen format doesn't fit,
-        // fall back to CRS (the paper's OpenATLib policy hook).
-        let shape = MatrixShape::of(&self.crs);
-        if self.policy.admits(&shape, d.chosen.required_format()) {
-            d.chosen
-        } else {
-            Implementation::CsrSeq
-        }
+        self.planner.auto_choice(&self.crs)
     }
 
     /// `y = A·x` through the numbered switch. Switch 0 (AUTO) runs the
-    /// online AT phase; the transformation (if chosen) happens on first
-    /// use and is cached for subsequent calls.
+    /// online AT phase; the plan (transformation + partition) is built on
+    /// first use of an implementation and cached for subsequent calls.
     pub fn durmv(&mut self, switch: u32, x: &[Value], y: &mut [Value]) -> Result<()> {
         let imp = match switch_to_impl(switch)? {
             Some(imp) => imp,
@@ -123,24 +116,13 @@ impl Durmv {
 
     fn run_impl(&mut self, imp: Implementation, x: &[Value], y: &mut [Value]) -> Result<()> {
         self.calls += 1;
-        if imp == Implementation::CsrSeq {
-            crate::spmv::csr_seq(&self.crs, x, y);
-            return Ok(());
+        if let Some(pos) = self.plans.iter().position(|p| p.implementation() == imp) {
+            return self.plans[pos].execute(x, y);
         }
-        if imp == Implementation::CsrRowPar {
-            crate::spmv::csr_row_par(&self.crs, x, y, self.threads);
-            return Ok(());
-        }
-        // Transformed path: materialise once, reuse afterwards.
-        let need_new = !matches!(&self.cached, Some((c, _)) if *c == imp);
-        if need_new {
-            let t0 = std::time::Instant::now();
-            let m = AnyMatrix::prepare(&self.crs, imp, self.policy.ell_budget())?;
-            self.transform_seconds += t0.elapsed().as_secs_f64();
-            self.cached = Some((imp, m));
-        }
-        let (_, m) = self.cached.as_ref().expect("cached above");
-        kernels::run(imp, m, x, y, self.threads, &mut self.ws)
+        let plan = self.planner.plan_for(&self.crs, imp)?;
+        self.transform_seconds += plan.transform_seconds();
+        self.plans.push(plan);
+        self.plans.last_mut().expect("pushed above").execute(x, y)
     }
 }
 
@@ -200,8 +182,25 @@ mod tests {
         let t1 = h.transform_seconds;
         assert!(t1 > 0.0, "transformation must be accounted");
         h.durmv(switches::AUTO, &x, &mut y).unwrap();
-        assert_eq!(h.transform_seconds, t1, "second call must reuse the cache");
+        assert_eq!(h.transform_seconds, t1, "second call must reuse the cached plan");
         assert_eq!(h.calls, 2);
+    }
+
+    #[test]
+    fn interleaved_switches_keep_their_plans() {
+        // AUTO (ELL) → explicit CRS → AUTO again: the ELL plan must not be
+        // rebuilt (the per-implementation plan cache, not a single slot).
+        let mut rng = Rng::new(12);
+        let a = banded_circulant(&mut rng, 150, &[-1, 0, 1]);
+        let mut h = Durmv::new(a, tuning(Some(3.1)), MemoryPolicy::unlimited(), 2);
+        let x = vec![1.0; 150];
+        let mut y = vec![0.0; 150];
+        h.durmv(switches::AUTO, &x, &mut y).unwrap();
+        let t1 = h.transform_seconds;
+        h.durmv(switches::CRS, &x, &mut y).unwrap();
+        h.durmv(switches::AUTO, &x, &mut y).unwrap();
+        assert_eq!(h.transform_seconds, t1, "ELL transformation must be paid once");
+        assert_eq!(h.calls, 3);
     }
 
     #[test]

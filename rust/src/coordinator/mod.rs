@@ -5,6 +5,10 @@
 //!
 //! * the machine's installed **tuning table** (offline-phase output),
 //! * the **memory policy** bounding transformed copies,
+//! * one persistent **worker pool** ([`crate::spmv::pool::ParPool`]) and a
+//!   [`Planner`] that turns registered matrices into cached, reusable
+//!   [`SpmvPlan`]s — every served SpMV executes through a plan, never
+//!   through per-call thread spawns or per-call partitioning,
 //! * a **matrix registry** with per-matrix AT lifecycle state
 //!   ([`registry`]),
 //! * the optional **XLA runtime** so ELL SpMV can execute through the
@@ -26,9 +30,11 @@ use crate::autotune::MemoryPolicy;
 use crate::formats::{Csr, FormatKind, SparseMatrix};
 use crate::machine::MatrixShape;
 use crate::runtime::XlaHandle;
-use crate::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use crate::spmv::pool::{self, ParPool};
+use crate::spmv::{Implementation, Planner};
 use crate::{Result, Value};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// How the coordinator executes ELL SpMV.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,19 +53,23 @@ pub struct CoordinatorConfig {
     pub tuning: TuningData,
     /// Memory policy for transformed copies.
     pub policy: MemoryPolicy,
-    /// Threads for the native parallel kernels.
+    /// Size of the coordinator's worker pool (native parallel kernels and
+    /// parallel transformations).
     pub threads: usize,
     /// ELL execution preference.
     pub ell_exec: EllExec,
 }
 
 impl CoordinatorConfig {
-    /// Config with an explicit tuning table and defaults elsewhere.
+    /// Config with an explicit tuning table and defaults elsewhere. The
+    /// thread count comes from [`pool::configured_threads`] — the
+    /// `SPMV_AT_THREADS` environment variable when set, hardware
+    /// parallelism otherwise.
     pub fn new(tuning: TuningData) -> Self {
         Self {
             tuning,
             policy: MemoryPolicy::default(),
-            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            threads: pool::configured_threads(),
             ell_exec: EllExec::Native,
         }
     }
@@ -69,15 +79,18 @@ impl CoordinatorConfig {
 /// concurrent access.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
+    planner: Planner,
     xla: Option<XlaHandle>,
     entries: HashMap<String, MatrixEntry>,
-    ws: Workspace,
 }
 
 impl Coordinator {
-    /// New coordinator without an XLA runtime.
+    /// New coordinator without an XLA runtime. Spawns the worker pool
+    /// (`cfg.threads` wide) that every plan built here executes on.
     pub fn new(cfg: CoordinatorConfig) -> Self {
-        Self { cfg, xla: None, entries: HashMap::new(), ws: Workspace::new() }
+        let pool = Arc::new(ParPool::new(cfg.threads));
+        let planner = Planner::new(cfg.tuning.clone(), cfg.policy, pool);
+        Self { cfg, planner, xla: None, entries: HashMap::new() }
     }
 
     /// Attach a handle to the XLA artifact service
@@ -93,9 +106,9 @@ impl Coordinator {
     }
 
     /// Register a matrix under `name`, running the §2.2 online phase
-    /// (compute `D_mat`, compare to `D*`, record the decision). The
-    /// transformation itself is deferred to the first SpMV so registration
-    /// stays O(n).
+    /// (compute `D_mat`, compare to `D*`, record the decision) and caching
+    /// the baseline CRS plan. The transformation itself is deferred to the
+    /// first SpMV so registration stays cheap.
     pub fn register(&mut self, name: &str, csr: Csr) -> Result<EntryStats> {
         anyhow::ensure!(
             !self.entries.contains_key(name),
@@ -114,7 +127,8 @@ impl Coordinator {
                 decision.chosen = Implementation::CsrSeq;
             }
         }
-        let entry = MatrixEntry::new(name.to_string(), csr, decision);
+        let baseline = self.planner.plan_for(&csr, Implementation::CsrRowPar)?;
+        let entry = MatrixEntry::new(name.to_string(), csr, decision, baseline);
         let stats = entry.stats();
         self.entries.insert(name.to_string(), entry);
         Ok(stats)
@@ -133,8 +147,8 @@ impl Coordinator {
     }
 
     /// `y = A·x` for a registered matrix, routed through the AT decision.
-    /// The transformation runs (and is cached) on the first call that
-    /// needs it.
+    /// The transformed plan is built (and cached) on the first call that
+    /// needs it; every call executes through a cached plan.
     pub fn spmv(&mut self, name: &str, x: &[Value]) -> Result<Vec<Value>> {
         let entry = self
             .entries
@@ -150,15 +164,10 @@ impl Coordinator {
 
         // Trigger the deferred transformation if decided and not yet done.
         if entry.decision.transform && matches!(entry.state, AtState::Baseline) {
-            let imp = entry.decision.chosen;
-            let t0 = std::time::Instant::now();
-            match AnyMatrix::prepare(&entry.csr, imp, self.cfg.policy.ell_budget()) {
-                Ok(m) => {
-                    entry.state = AtState::Transformed {
-                        imp,
-                        matrix: m,
-                        t_trans: t0.elapsed().as_secs_f64(),
-                    };
+            match self.planner.plan_for(&entry.csr, entry.decision.chosen) {
+                Ok(plan) => {
+                    let t_trans = plan.transform_seconds();
+                    entry.state = AtState::Transformed { plan, t_trans };
                 }
                 Err(_) => {
                     // Transformation failed (e.g. ELL overflow): pin to CRS.
@@ -169,16 +178,16 @@ impl Coordinator {
         }
 
         let t0 = std::time::Instant::now();
-        let transformed = match &entry.state {
+        let transformed = match &mut entry.state {
             AtState::Baseline => {
-                crate::spmv::csr_row_par(&entry.csr, x, &mut y, self.cfg.threads);
+                entry.baseline.execute(x, &mut y)?;
                 false
             }
-            AtState::Transformed { imp, matrix, .. } => {
+            AtState::Transformed { plan, .. } => {
                 // Prefer the XLA artifact path for ELL when configured.
                 let mut served = false;
                 if self.cfg.ell_exec == EllExec::XlaPreferred {
-                    if let (Some(rt), AnyMatrix::Ell(e)) = (&self.xla, matrix) {
+                    if let (Some(rt), Some(e)) = (&self.xla, plan.ell()) {
                         if rt.has_bucket(e.n_rows(), e.bandwidth) {
                             let cols: Vec<i32> =
                                 e.col_idx.iter().map(|&c| c as i32).collect();
@@ -190,7 +199,7 @@ impl Coordinator {
                     }
                 }
                 if !served {
-                    kernels::run(*imp, matrix, x, &mut y, self.cfg.threads, &mut self.ws)?;
+                    plan.execute(x, &mut y)?;
                 }
                 true
             }
@@ -228,7 +237,7 @@ impl Coordinator {
     pub fn serving_format(&self, name: &str) -> Option<FormatKind> {
         self.entries.get(name).map(|e| match &e.state {
             AtState::Baseline => FormatKind::Csr,
-            AtState::Transformed { matrix, .. } => matrix.kind(),
+            AtState::Transformed { plan, .. } => plan.kind(),
         })
     }
 }
@@ -331,5 +340,24 @@ mod tests {
         let names: Vec<String> = c.stats().iter().map(|s| s.name.clone()).collect();
         assert_eq!(names, vec!["aa", "zz"]);
         assert_eq!(c.names(), vec!["aa", "zz"]);
+    }
+
+    #[test]
+    fn repeated_calls_reuse_one_plan_and_pool() {
+        // Many calls through one coordinator: results stay bitwise stable
+        // (same plan, same partition, same reduction order every call).
+        let mut rng = Rng::new(8);
+        let a = banded_circulant(&mut rng, 300, &[-1, 0, 1, 2]);
+        let mut c = coord(Some(3.1));
+        c.register("m", a).unwrap();
+        let x: Vec<Value> = (0..300).map(|i| (i as f64 * 0.17).sin()).collect();
+        let first = c.spmv("m", &x).unwrap();
+        for _ in 0..5 {
+            let again = c.spmv("m", &x).unwrap();
+            assert_eq!(first, again, "repeated execution must be bitwise stable");
+        }
+        let s = &c.stats()[0];
+        assert_eq!(s.calls, 6);
+        assert!(s.t_trans > 0.0, "transformed exactly once");
     }
 }

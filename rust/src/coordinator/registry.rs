@@ -7,28 +7,29 @@
 //!    |                                                        |
 //!    |  first SpMV, decision = keep CRS                       | first SpMV, decision = transform
 //!    v                                                        v
-//! Baseline (CRS kernels)                        Transformed { imp, copy, t_trans }
+//! Baseline (cached CRS plan)                    Transformed { plan, t_trans }
 //! ```
 //!
-//! plus amortisation accounting: how many calls the transformed copy has
-//! served and whether the transformation cost has been repaid — the §2.2
-//! break-even analysis made observable.
+//! Both states execute through a cached [`SpmvPlan`]: the baseline plan
+//! (row-parallel CRS on the coordinator's pool) is built at registration,
+//! and the transformed plan replaces it as the serving path on the first
+//! SpMV after a transform decision. Amortisation accounting — how many
+//! calls the transformed copy has served and whether the transformation
+//! cost has been repaid — makes the §2.2 break-even analysis observable.
 
 use crate::autotune::online::OnlineDecision;
 use crate::formats::Csr;
-use crate::spmv::{AnyMatrix, Implementation};
+use crate::spmv::{Implementation, SpmvPlan};
 
 /// Execution state of one registered matrix.
 pub enum AtState {
-    /// Serving CRS (either the decision said so, or the transformation has
-    /// not been triggered yet).
+    /// Serving the CRS baseline plan (either the decision said so, or the
+    /// transformation has not been triggered yet).
     Baseline,
-    /// A transformed copy is live.
+    /// A transformed plan is live.
     Transformed {
-        /// Implementation the copy serves.
-        imp: Implementation,
-        /// The transformed data.
-        matrix: AnyMatrix,
+        /// The executable plan owning the transformed data.
+        plan: SpmvPlan,
         /// Seconds the transformation took (amortisation numerator).
         t_trans: f64,
     },
@@ -42,6 +43,8 @@ pub struct MatrixEntry {
     pub csr: Csr,
     /// The online decision taken at registration.
     pub decision: OnlineDecision,
+    /// The cached CRS baseline plan serving the [`AtState::Baseline`] state.
+    pub baseline: SpmvPlan,
     /// Current execution state.
     pub state: AtState,
     /// Total SpMV calls served.
@@ -55,12 +58,13 @@ pub struct MatrixEntry {
 }
 
 impl MatrixEntry {
-    /// New entry in the baseline state.
-    pub fn new(name: String, csr: Csr, decision: OnlineDecision) -> Self {
+    /// New entry in the baseline state, serving through `baseline`.
+    pub fn new(name: String, csr: Csr, decision: OnlineDecision, baseline: SpmvPlan) -> Self {
         Self {
             name,
             csr,
             decision,
+            baseline,
             state: AtState::Baseline,
             calls: 0,
             transformed_calls: 0,
@@ -117,11 +121,12 @@ impl MatrixEntry {
         }
     }
 
-    /// Extra memory held by the transformed copy, bytes.
+    /// Extra memory held by the transformed copy, bytes (the baseline plan
+    /// serves from CRS and counts as zero).
     pub fn extra_bytes(&self) -> usize {
         match &self.state {
             AtState::Baseline => 0,
-            AtState::Transformed { matrix, .. } => matrix.memory_bytes(),
+            AtState::Transformed { plan, .. } => plan.extra_bytes(),
         }
     }
 }
@@ -152,7 +157,8 @@ pub struct EntryStats {
 }
 
 impl MatrixEntry {
-    /// Produce the report row.
+    /// Produce the report row. The baseline state reports as the paper's
+    /// CRS switch regardless of which CRS kernel the baseline plan runs.
     pub fn stats(&self) -> EntryStats {
         use crate::formats::SparseMatrix as _;
         EntryStats {
@@ -162,7 +168,7 @@ impl MatrixEntry {
             d_mat: self.decision.d_mat,
             serving: match &self.state {
                 AtState::Baseline => Implementation::CsrSeq,
-                AtState::Transformed { imp, .. } => *imp,
+                AtState::Transformed { plan, .. } => plan.implementation(),
             },
             calls: self.calls,
             transformed_calls: self.transformed_calls,
@@ -176,7 +182,9 @@ impl MatrixEntry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spmv::pool::ParPool;
     use crate::spmv::Implementation;
+    use std::sync::Arc;
 
     fn decision(transform: bool) -> OnlineDecision {
         OnlineDecision {
@@ -191,9 +199,34 @@ mod tests {
         }
     }
 
+    fn crs_plan(n: usize) -> SpmvPlan {
+        SpmvPlan::build(
+            &Csr::identity(n),
+            Implementation::CsrSeq,
+            None,
+            Arc::new(ParPool::new(1)),
+        )
+        .unwrap()
+    }
+
+    fn ell_plan(n: usize, t_trans: f64) -> AtState {
+        let plan = SpmvPlan::build(
+            &Csr::identity(n),
+            Implementation::EllRowOuter,
+            None,
+            Arc::new(ParPool::new(1)),
+        )
+        .unwrap();
+        AtState::Transformed { plan, t_trans }
+    }
+
+    fn entry(transform: bool) -> MatrixEntry {
+        MatrixEntry::new("m".into(), Csr::identity(4), decision(transform), crs_plan(4))
+    }
+
     #[test]
     fn baseline_is_trivially_amortized() {
-        let e = MatrixEntry::new("m".into(), Csr::identity(4), decision(false));
+        let e = entry(false);
         assert!(e.amortized());
         assert_eq!(e.t_trans(), 0.0);
         assert_eq!(e.extra_bytes(), 0);
@@ -202,14 +235,10 @@ mod tests {
 
     #[test]
     fn amortization_crossover() {
-        let mut e = MatrixEntry::new("m".into(), Csr::identity(4), decision(true));
+        let mut e = entry(true);
         // Pretend: CRS costs 1ms/call, transformed 0.1ms, transform 5ms.
         e.record_call(false, 1e-3);
-        e.state = AtState::Transformed {
-            imp: Implementation::EllRowOuter,
-            matrix: AnyMatrix::Csr(Csr::identity(4)),
-            t_trans: 5e-3,
-        };
+        e.state = ell_plan(4, 5e-3);
         for _ in 0..5 {
             e.record_call(true, 1e-4);
             assert!(!e.amortized(), "not yet at {} calls", e.transformed_calls);
@@ -223,13 +252,9 @@ mod tests {
 
     #[test]
     fn never_amortizes_when_not_faster() {
-        let mut e = MatrixEntry::new("m".into(), Csr::identity(4), decision(true));
+        let mut e = entry(true);
         e.record_call(false, 1e-4);
-        e.state = AtState::Transformed {
-            imp: Implementation::EllRowOuter,
-            matrix: AnyMatrix::Csr(Csr::identity(4)),
-            t_trans: 1e-3,
-        };
+        e.state = ell_plan(4, 1e-3);
         e.record_call(true, 2e-4); // slower than CRS
         assert!(!e.amortized());
         assert!(e.calls_to_break_even().is_infinite());
@@ -237,17 +262,13 @@ mod tests {
 
     #[test]
     fn stats_row_reflects_state() {
-        let mut e = MatrixEntry::new("m".into(), Csr::identity(4), decision(true));
+        let mut e = entry(true);
         e.record_call(false, 1e-3);
         let s = e.stats();
         assert_eq!(s.serving, Implementation::CsrSeq);
         assert_eq!(s.calls, 1);
-        e.state = AtState::Transformed {
-            imp: Implementation::EllRowInner,
-            matrix: AnyMatrix::Csr(Csr::identity(4)),
-            t_trans: 1e-3,
-        };
-        assert_eq!(e.stats().serving, Implementation::EllRowInner);
+        e.state = ell_plan(4, 1e-3);
+        assert_eq!(e.stats().serving, Implementation::EllRowOuter);
         assert!(e.stats().extra_bytes > 0);
     }
 }

@@ -3,12 +3,32 @@
 //! A reproduction of *"An Auto-tuning Method for Run-time Data Transformation
 //! for Sparse Matrix-Vector Multiplication"* (Katagiri & Sato).
 //!
-//! The library is organised in three layers:
+//! The library is organised in four layers:
+//!
+//! ```text
+//!   serving      coordinator ── registry of MatrixEntry{ decision, plans }
+//!                runtime (XLA/PJRT artifacts)     │
+//!   autotune     offline/online AT phases, D_mat, │D*, memory policy
+//!                        │ decision               │ cached SpmvPlan
+//!   execution    spmv::plan  Planner ──▶ SpmvPlan{ AnyMatrix, partition,
+//!   engine                                         Workspace, pool }
+//!                spmv::pool  ParPool — persistent parked workers;
+//!                            the crate's only thread-spawning site
+//!   substrates   formats · transform · spmv kernels · matrixgen · io
+//!                machine cost models · solvers
+//! ```
 //!
 //! * **Substrates** — sparse formats ([`formats`]), run-time transformations
 //!   ([`transform`]), parallel SpMV implementations ([`spmv`]), synthetic
 //!   matrix generators ([`matrixgen`]), Matrix Market I/O ([`io`]), machine
 //!   cost models ([`machine`]) and iterative solvers ([`solver`]).
+//! * **The execution engine** — a persistent worker pool
+//!   ([`spmv::pool::ParPool`]: parked workers, no per-call spawning) and
+//!   reusable plans ([`spmv::plan`]): a [`spmv::SpmvPlan`] owns the chosen
+//!   representation, its work partition (computed once) and its workspace,
+//!   so the hot path is allocation- and fork-free. Every layer above —
+//!   the `Durmv` handle, the coordinator, the solvers, the CLI — executes
+//!   through cached plans.
 //! * **The paper's contribution** — the auto-tuning engine ([`autotune`]):
 //!   the `D_mat` statistic, the `R_ell` cost ratio, the `D_mat`–`R_ell`
 //!   graph with its `D*` threshold, and the offline/online AT phases.
@@ -16,6 +36,11 @@
 //!   executes AOT-compiled JAX/Pallas SpMV artifacts, and a coordinator
 //!   ([`coordinator`]) that owns matrix lifecycles and routes SpMV requests
 //!   through the online AT decision.
+//!
+//! Thread-count truth lives in one place:
+//! [`spmv::pool::configured_threads`] (the `SPMV_AT_THREADS` environment
+//! variable when set, hardware parallelism otherwise) sizes the global
+//! pool, `CoordinatorConfig::new`, and the CLI defaults.
 //!
 //! Quick start:
 //!

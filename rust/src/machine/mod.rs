@@ -22,8 +22,11 @@ pub mod scalar;
 pub mod vector;
 
 use crate::formats::{Csr, FormatKind, SparseMatrix};
-use crate::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use crate::spmv::pool::{self, ParPool};
+use crate::spmv::{Implementation, SpmvPlan};
 use crate::{Result, Value};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// The size/shape summary a cost model consumes. Everything the paper's
 /// analysis depends on: dimension, nnz, row-length moments, the ELL
@@ -150,50 +153,61 @@ impl<M: CostModel> Backend for SimulatedBackend<M> {
     }
 }
 
-/// Backend measuring the library's real kernels on the host CPU.
+/// Backend measuring the library's real kernels on the host CPU. Kernel
+/// runs execute through a cached [`SpmvPlan`] on a persistent pool of the
+/// requested width (pools are cached per thread count so repeated
+/// offline-phase measurements never re-spawn workers).
 pub struct MeasuredBackend {
     /// Unmeasured warmup repetitions.
     pub warmup: usize,
     /// Measured repetitions (median taken).
     pub reps: usize,
+    pools: Mutex<HashMap<usize, Arc<ParPool>>>,
 }
 
 impl Default for MeasuredBackend {
     fn default() -> Self {
-        Self { warmup: 1, reps: 5 }
+        Self::new(1, 5)
     }
 }
 
 impl MeasuredBackend {
     /// Backend with explicit repetition counts.
     pub fn new(warmup: usize, reps: usize) -> Self {
-        Self { warmup, reps }
+        Self { warmup, reps, pools: Mutex::new(HashMap::new()) }
     }
 
-    fn available_threads() -> usize {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    fn pool(&self, threads: usize) -> Arc<ParPool> {
+        if threads == pool::configured_threads() {
+            return pool::global();
+        }
+        self.pools
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .entry(threads)
+            .or_insert_with(|| Arc::new(ParPool::new(threads)))
+            .clone()
     }
 }
 
 impl Backend for MeasuredBackend {
     fn name(&self) -> String {
-        format!("host:{}t", Self::available_threads())
+        format!("host:{}t", pool::configured_threads())
     }
 
     fn max_threads(&self) -> usize {
-        Self::available_threads()
+        pool::configured_threads()
     }
 
     fn spmv_seconds(&self, a: &Csr, imp: Implementation, threads: usize) -> Result<f64> {
         anyhow::ensure!(threads >= 1, "threads must be >= 1");
-        let m = AnyMatrix::prepare(a, imp, None)?;
+        let mut plan = SpmvPlan::build(a, imp, None, self.pool(threads))?;
         let x: Vec<Value> = (0..a.n_cols()).map(|i| 1.0 + (i % 7) as f64 * 0.125).collect();
         let mut y = vec![0.0; a.n_rows()];
-        let mut ws = Workspace::new();
         // Prime the workspace outside the timed region.
-        kernels::run(imp, &m, &x, &mut y, threads, &mut ws)?;
+        plan.execute(&x, &mut y)?;
         let t = crate::metrics::time_median(self.warmup, self.reps, || {
-            kernels::run(imp, &m, &x, &mut y, threads, &mut ws).expect("kernel run");
+            plan.execute(&x, &mut y).expect("kernel run");
         });
         std::hint::black_box(&y);
         Ok(t)
@@ -203,8 +217,13 @@ impl Backend for MeasuredBackend {
         if !imp.needs_transform() {
             return Ok(0.0);
         }
+        let target = imp.required_format();
+        // Time the same pool-parallel pipeline `SpmvPlan::build` pays, so
+        // break-even accounting reflects the cost actually incurred.
+        let pool = pool::global();
         let t = crate::metrics::time_median(self.warmup.min(1), self.reps.min(3), || {
-            let m = AnyMatrix::prepare(a, imp, None).expect("transform");
+            let m = crate::transform::par::transform_to_on(a, target, None, &pool)
+                .expect("transform");
             std::hint::black_box(&m);
         });
         Ok(t)

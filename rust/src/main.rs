@@ -26,6 +26,7 @@ use spmv_at::machine::{Backend, MeasuredBackend, SimulatedBackend};
 use spmv_at::matrixgen::{generate, measure, spec_by_name, table1_specs};
 use spmv_at::metrics::Table;
 use spmv_at::solver::SolverOptions;
+use spmv_at::spmv::pool::configured_threads;
 use spmv_at::spmv::Implementation;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -196,7 +197,8 @@ fn cmd_spmv(args: &Args) -> Result<()> {
     let (name, a) = load_matrix(args, args.parse_usize("seed", 42)? as u64, scale)?;
     let switch: u32 = args.get_or("switch", "0").parse()?;
     let iters = args.parse_usize("iters", 10)?;
-    let threads = args.parse_usize("threads", 1)?;
+    // SPMV_AT_THREADS (or hardware parallelism) unless --threads overrides.
+    let threads = args.parse_usize("threads", configured_threads())?;
     let n = a.n_rows();
     let ncols = a.n_cols();
     let mut h = Durmv::new(a, tuning, MemoryPolicy::unlimited(), threads);
@@ -231,7 +233,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let solver = SolverKind::parse(&args.get_or("solver", "cg"))
         .ok_or_else(|| anyhow!("bad --solver"))?;
     let mut cfg = CoordinatorConfig::new(tuning);
-    cfg.threads = args.parse_usize("threads", 1)?;
+    cfg.threads = args.parse_usize("threads", configured_threads())?;
     let (_srv, client) = Server::spawn(Coordinator::new(cfg), 32);
     client.register(&name, a)?;
     let b = vec![1.0; n];
@@ -264,7 +266,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use std::io::BufRead;
     let tuning = load_tuning(args)?;
     let mut cfg = CoordinatorConfig::new(tuning);
-    cfg.threads = args.parse_usize("threads", 1)?;
+    cfg.threads = args.parse_usize("threads", configured_threads())?;
     let mut coord = Coordinator::new(cfg);
     // Attach XLA runtime if artifacts exist.
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));

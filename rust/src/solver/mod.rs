@@ -3,10 +3,12 @@
 //! The paper motivates run-time transformation by iterative solvers: the
 //! §2.2 discussion prices the transformation in SpMV iterations ("2–100
 //! times … achievable for many iterative solvers"). These solvers call
-//! SpMV through a [`SpmvOp`] abstraction so the auto-tuned
-//! [`crate::autotune::atlib::Durmv`] handle (or a plain CSR, or the XLA
-//! runtime) can sit underneath, and the break-even analysis of
-//! [`crate::autotune::Ratios`] becomes observable end-to-end.
+//! SpMV through a [`SpmvOp`] abstraction so a cached
+//! [`crate::spmv::SpmvPlan`] (the preferred operator: one transformation,
+//! one partition, a persistent pool), the auto-tuned
+//! [`crate::autotune::atlib::Durmv`] handle, or a plain CSR can sit
+//! underneath, and the break-even analysis of [`crate::autotune::Ratios`]
+//! becomes observable end-to-end.
 
 pub mod bicgstab;
 pub mod cg;
@@ -57,6 +59,16 @@ impl SpmvOp for Csr {
             }
         }
         Ok(d)
+    }
+}
+
+impl SpmvOp for crate::spmv::SpmvPlan {
+    fn n(&self) -> usize {
+        self.n_rows()
+    }
+
+    fn apply(&mut self, x: &[Value], y: &mut [Value]) -> Result<()> {
+        self.execute(x, y)
     }
 }
 

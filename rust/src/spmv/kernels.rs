@@ -2,13 +2,21 @@
 //!
 //! [`Implementation`] enumerates the paper's five parallel codes plus the
 //! sequential baseline and the BCSR extension; [`AnyMatrix`] owns a matrix
-//! in whichever format an implementation needs, so the auto-tuner and the
-//! coordinator can hold "the chosen representation" as a single value.
+//! in whichever format an implementation needs, so the plan layer can hold
+//! "the chosen representation" as a single value. [`run_on`] is the single
+//! dispatch point from `(Implementation, AnyMatrix)` to a kernel: it takes
+//! a [`ParPool`] plus precomputed partitions ([`partition_for`]) so a
+//! cached [`super::plan::SpmvPlan`] pays no partitioning cost per call;
+//! [`run`] is the compatibility wrapper that partitions on the fly and
+//! executes on the global pool.
 
+use super::pool::{self, ParPool};
 use super::Workspace;
 use crate::formats::{Bcsr, Coo, CooOrder, Csc, Csr, Ell, FormatKind, Hyb, Jds, SparseMatrix};
+use crate::spmv::partition::{split_by_nnz, split_even};
 use crate::transform;
 use crate::{Result, Value};
+use std::ops::Range;
 
 /// A named SpMV implementation (paper §3 + baseline + extension).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -71,7 +79,9 @@ impl Implementation {
         }
     }
 
-    /// Parse a CLI/report name.
+    /// Parse a CLI/report name. Bare `"ell"` means the paper's headline
+    /// ELL-Row *inner* kernel (Fig. 3); the outer variant must be named
+    /// explicitly (`"ellouter"` / `"ell-row-outer"`).
     pub fn parse(s: &str) -> Option<Self> {
         let norm: String = s
             .to_ascii_lowercase()
@@ -83,8 +93,8 @@ impl Implementation {
             "crspar" | "csrpar" | "csrrowpar" => Implementation::CsrRowPar,
             "coocolouter" | "coocol" => Implementation::CooColOuter,
             "coorowouter" | "coorow" => Implementation::CooRowOuter,
-            "ellrowinner" | "ellinner" => Implementation::EllRowInner,
-            "ellrowouter" | "ellouter" | "ell" => Implementation::EllRowOuter,
+            "ellrowinner" | "ellinner" | "ell" => Implementation::EllRowInner,
+            "ellrowouter" | "ellouter" => Implementation::EllRowOuter,
             "bcsr" | "bcsrseq" => Implementation::BcsrSeq,
             "jds" | "jdsseq" => Implementation::JdsSeq,
             "hyb" | "hybseq" => Implementation::HybSeq,
@@ -137,7 +147,8 @@ pub enum AnyMatrix {
 }
 
 impl AnyMatrix {
-    /// Transform a CRS source into whatever `imp` requires.
+    /// Transform a CRS source into whatever `imp` requires, using the
+    /// sequential transformations.
     pub fn prepare(a: &Csr, imp: Implementation, max_bytes: Option<usize>) -> Result<Self> {
         Ok(match imp.required_format() {
             FormatKind::Csr => AnyMatrix::Csr(a.clone()),
@@ -145,6 +156,29 @@ impl AnyMatrix {
             FormatKind::CooRow => AnyMatrix::Coo(transform::crs_to_coo_row(a)),
             FormatKind::CooCol => AnyMatrix::Coo(transform::crs_to_coo_col(a)),
             FormatKind::Ell => AnyMatrix::Ell(transform::crs_to_ell_bounded(a, max_bytes)?),
+            FormatKind::Bcsr => AnyMatrix::Bcsr(transform::crs_to_bcsr(a, 2, 2)?),
+            FormatKind::Jds => AnyMatrix::Jds(transform::crs_to_jds(a)),
+            FormatKind::Hyb => AnyMatrix::Hyb(transform::crs_to_hyb(a)?),
+        })
+    }
+
+    /// Transform a CRS source into whatever `imp` requires, running the
+    /// parallel transformation pipelines (paper §5 future work) on `pool`
+    /// where one exists. This is the plan-construction path.
+    pub fn prepare_on(
+        a: &Csr,
+        imp: Implementation,
+        max_bytes: Option<usize>,
+        pool: &ParPool,
+    ) -> Result<Self> {
+        Ok(match imp.required_format() {
+            FormatKind::Csr => AnyMatrix::Csr(a.clone()),
+            FormatKind::Csc => AnyMatrix::Csc(transform::par::crs_to_ccs_on(a, pool)),
+            FormatKind::CooRow => AnyMatrix::Coo(transform::par::crs_to_coo_row_on(a, pool)),
+            FormatKind::CooCol => AnyMatrix::Coo(transform::par::crs_to_coo_col_on(a, pool)),
+            FormatKind::Ell => {
+                AnyMatrix::Ell(transform::par::crs_to_ell_bounded_on(a, max_bytes, pool)?)
+            }
             FormatKind::Bcsr => AnyMatrix::Bcsr(transform::crs_to_bcsr(a, 2, 2)?),
             FormatKind::Jds => AnyMatrix::Jds(transform::crs_to_jds(a)),
             FormatKind::Hyb => AnyMatrix::Hyb(transform::crs_to_hyb(a)?),
@@ -175,32 +209,54 @@ impl AnyMatrix {
     }
 }
 
-/// Execute implementation `imp` on `m` with `n_threads` threads.
+/// Compute the work partition `imp` wants over `m` at `n_chunks`-way
+/// parallelism: nnz-balanced row ranges for row-parallel CRS, even entry
+/// ranges for the COO outer kernels, even row ranges for ELL-inner and
+/// band ranges (capped at the bandwidth) for ELL-outer. Sequential
+/// implementations get an empty partition. A [`super::plan::SpmvPlan`]
+/// computes this once and replays it every call.
+pub fn partition_for(imp: Implementation, m: &AnyMatrix, n_chunks: usize) -> Vec<Range<usize>> {
+    match (imp, m) {
+        (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => split_by_nnz(&a.row_ptr, n_chunks),
+        (Implementation::CooColOuter | Implementation::CooRowOuter, AnyMatrix::Coo(c)) => {
+            split_even(c.nnz(), n_chunks)
+        }
+        (Implementation::EllRowInner, AnyMatrix::Ell(e)) => split_even(e.n_rows(), n_chunks),
+        (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => split_even(e.bandwidth, n_chunks),
+        _ => Vec::new(),
+    }
+}
+
+/// Execute implementation `imp` on `m` over `pool` with the precomputed
+/// partition `ranges` (see [`partition_for`]).
 ///
 /// # Errors
 /// Returns an error if `m`'s format does not match `imp`'s requirement.
-pub fn run(
+pub fn run_on(
     imp: Implementation,
     m: &AnyMatrix,
     x: &[Value],
     y: &mut [Value],
-    n_threads: usize,
+    pool: &ParPool,
+    ranges: &[Range<usize>],
     ws: &mut Workspace,
 ) -> Result<()> {
     match (imp, m) {
         (Implementation::CsrSeq, AnyMatrix::Csr(a)) => super::csr_seq(a, x, y),
-        (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => super::csr_row_par(a, x, y, n_threads),
+        (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => {
+            super::csr_row_par_on(a, x, y, pool, ranges)
+        }
         (Implementation::CooColOuter, AnyMatrix::Coo(c)) if c.order() == CooOrder::ColMajor => {
-            super::coo_col_outer(c, x, y, n_threads, ws)
+            super::coo_col_outer_on(c, x, y, pool, ranges, ws)
         }
         (Implementation::CooRowOuter, AnyMatrix::Coo(c)) if c.order() == CooOrder::RowMajor => {
-            super::coo_row_outer(c, x, y, n_threads, ws)
+            super::coo_row_outer_on(c, x, y, pool, ranges, ws)
         }
         (Implementation::EllRowInner, AnyMatrix::Ell(e)) => {
-            super::ell_row_inner(e, x, y, n_threads)
+            super::ell_row_inner_on(e, x, y, pool, ranges)
         }
         (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => {
-            super::ell_row_outer(e, x, y, n_threads, ws)
+            super::ell_row_outer_on(e, x, y, pool, ranges, ws)
         }
         (Implementation::BcsrSeq, AnyMatrix::Bcsr(b)) => b.spmv(x, y),
         (Implementation::JdsSeq, AnyMatrix::Jds(j)) => {
@@ -215,6 +271,24 @@ pub fn run(
         ),
     }
     Ok(())
+}
+
+/// Execute implementation `imp` on `m` at `n_threads`-way parallelism,
+/// partitioning on the fly and running on the global pool (compatibility
+/// wrapper around [`run_on`]).
+///
+/// # Errors
+/// Returns an error if `m`'s format does not match `imp`'s requirement.
+pub fn run(
+    imp: Implementation,
+    m: &AnyMatrix,
+    x: &[Value],
+    y: &mut [Value],
+    n_threads: usize,
+    ws: &mut Workspace,
+) -> Result<()> {
+    let ranges = partition_for(imp, m, n_threads);
+    run_on(imp, m, x, y, &pool::global(), &ranges, ws)
 }
 
 #[cfg(test)]
@@ -232,6 +306,17 @@ mod tests {
     }
 
     #[test]
+    fn bare_ell_parses_to_the_inner_kernel() {
+        assert_eq!(Implementation::parse("ell"), Some(Implementation::EllRowInner));
+        assert_eq!(Implementation::parse("ellinner"), Some(Implementation::EllRowInner));
+        assert_eq!(Implementation::parse("ellouter"), Some(Implementation::EllRowOuter));
+        assert_eq!(
+            Implementation::parse("ell-row-outer"),
+            Some(Implementation::EllRowOuter)
+        );
+    }
+
+    #[test]
     fn prepare_and_run_all_implementations() {
         let mut rng = Rng::new(5);
         let a = random_csr(&mut rng, 40, 40, 0.1);
@@ -244,6 +329,27 @@ mod tests {
             assert_eq!(m.kind(), imp.required_format(), "{imp}");
             let mut y = vec![0.0; 40];
             run(imp, &m, &x, &mut y, 3, &mut ws).unwrap();
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{imp}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepare_on_matches_sequential_prepare() {
+        let mut rng = Rng::new(6);
+        let a = random_csr(&mut rng, 50, 50, 0.12);
+        let pool = ParPool::new(3);
+        let x: Vec<Value> = (0..50).map(|i| (i as f64 * 0.7).sin()).collect();
+        let mut want = vec![0.0; 50];
+        a.spmv(&x, &mut want);
+        let mut ws = Workspace::new();
+        for imp in Implementation::ALL {
+            let m = AnyMatrix::prepare_on(&a, imp, None, &pool).unwrap();
+            assert_eq!(m.kind(), imp.required_format(), "{imp}");
+            let ranges = partition_for(imp, &m, pool.size());
+            let mut y = vec![0.0; 50];
+            run_on(imp, &m, &x, &mut y, &pool, &ranges, &mut ws).unwrap();
             for (g, w) in y.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-9, "{imp}: {g} vs {w}");
             }

@@ -1,28 +1,52 @@
-//! Parallel SpMV implementations (paper §3, Figs. 1–4).
+//! Parallel SpMV implementations (paper §3, Figs. 1–4) on the persistent
+//! execution engine.
 //!
 //! Each OpenMP listing in the paper maps to one function here, with the
 //! same work decomposition:
 //!
 //! | Paper | Function | Decomposition |
 //! |---|---|---|
-//! | Fig. 1 | [`coo_col_outer`] | entry stream split per thread, private `YY`, serial reduction |
+//! | Fig. 1 | [`coo_col_outer`] | entry stream split per chunk, private `YY`, tree reduction |
 //! | Fig. 2 | [`coo_row_outer`] | same, over the row-major stream |
 //! | Fig. 3 | [`ell_row_inner`] | parallel `N`-loop inside the band loop, no reduction |
-//! | Fig. 4 | [`ell_row_outer`] | band range split per thread, private `YY`, serial reduction |
+//! | Fig. 4 | [`ell_row_outer`] | band range split per chunk, private `YY`, tree reduction |
 //! | switch 11 | [`csr_seq`] / [`csr_row_par`] | OpenATLib CRS baseline (+ row-parallel variant) |
+//!
+//! Two layers sit underneath and above these kernels:
+//!
+//! * [`pool`] — the crate-wide persistent worker pool ([`pool::ParPool`]).
+//!   No kernel (and no parallel transform) spawns OS threads per call any
+//!   more: each `*_on` kernel takes `(&ParPool, &[Range])` and executes its
+//!   pre-partitioned chunks on parked workers. The `n_threads`-taking
+//!   entry points below are compatibility wrappers that partition on the
+//!   fly and run on the [`pool::global`] pool.
+//! * [`plan`] — [`plan::SpmvPlan`], an executable plan owning the chosen
+//!   [`AnyMatrix`], its partitions (computed once, not per call), and its
+//!   [`Workspace`]; and [`plan::Planner`], which turns a CSR matrix plus
+//!   the online AT decision into such a plan. The auto-tuner handle, the
+//!   coordinator, the solvers and the CLI all execute through cached
+//!   plans.
 //!
 //! The per-thread accumulation buffers (`YY(1:n, 1:threads)` in the paper)
 //! live in a reusable [`Workspace`] so the hot path performs no allocation
-//! after the first call.
+//! after the first call. The serial reduction of the paper's listings
+//! ("we do not parallelize this part") is replaced by a pairwise tree
+//! reduction over the pool, parallel across row ranges.
 
 pub mod kernels;
 pub mod partition;
+pub mod plan;
+pub mod pool;
 
 pub use kernels::{AnyMatrix, Implementation};
+pub use plan::{Planner, SpmvPlan};
+pub use pool::ParPool;
 
 use crate::formats::{Coo, CooOrder, Csr, Ell, SparseMatrix};
 use crate::Value;
 use partition::{split_by_nnz, split_even};
+use pool::SendPtr;
+use std::ops::Range;
 
 /// Reusable per-call scratch: the paper's `YY(1:N, 1:NUM_SMP)` private
 /// accumulation buffers plus the padded `y` staging area.
@@ -60,171 +84,250 @@ pub fn csr_seq(a: &Csr, x: &[Value], y: &mut [Value]) {
     a.spmv(x, y);
 }
 
-/// Row-parallel CRS SpMV with nnz-balanced row ranges; each thread writes a
-/// disjoint `y` slice, so no reduction is needed.
-pub fn csr_row_par(a: &Csr, x: &[Value], y: &mut [Value], n_threads: usize) {
+/// Row-parallel CRS SpMV over precomputed nnz-balanced row ranges; each
+/// chunk writes a disjoint `y` slice, so no reduction is needed.
+pub fn csr_row_par_on(
+    a: &Csr,
+    x: &[Value],
+    y: &mut [Value],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+) {
     assert_eq!(x.len(), a.n_cols(), "x length");
     assert_eq!(y.len(), a.n_rows(), "y length");
-    let ranges = split_by_nnz(&a.row_ptr, n_threads);
     if ranges.len() <= 1 {
         return csr_seq(a, x, y);
     }
-    std::thread::scope(|s| {
-        let mut rest: &mut [Value] = y;
-        let mut pos = 0usize;
-        for r in &ranges {
-            let (chunk, tail) = rest.split_at_mut(r.end - pos);
-            rest = tail;
-            pos = r.end;
-            let (lo, hi) = (r.start, r.end);
-            s.spawn(move || {
-                for i in lo..hi {
-                    let mut acc = 0.0;
-                    for k in a.row_ptr[i]..a.row_ptr[i + 1] {
-                        acc += a.values[k] * x[a.col_idx[k] as usize];
-                    }
-                    chunk[i - lo] = acc;
-                }
-            });
+    let yp = SendPtr(y.as_mut_ptr());
+    pool.run_chunks(ranges, |_tid, r| {
+        for i in r {
+            let mut acc = 0.0;
+            for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+                acc += a.values[k] * x[a.col_idx[k] as usize];
+            }
+            // Row ranges are disjoint: each y[i] has exactly one writer.
+            unsafe { *yp.get().add(i) = acc };
         }
     });
 }
 
-/// Shared body of Figs. 1 and 2: split the COO entry stream into
-/// `ISTART(K)..IEND(K)` chunks, accumulate into private `YY(:,K)`, then do
-/// the serial reduction of lines 12–16 ("the overhead of the thread fork is
-/// high if N is small. Hence, we do not parallelize this part").
-fn coo_outer(c: &Coo, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+/// Row-parallel CRS SpMV, partitioning on the fly and executing on the
+/// [`pool::global`] pool (compatibility entry point; plans precompute the
+/// partition instead).
+pub fn csr_row_par(a: &Csr, x: &[Value], y: &mut [Value], n_threads: usize) {
+    let ranges = split_by_nnz(&a.row_ptr, n_threads);
+    csr_row_par_on(a, x, y, &pool::global(), &ranges);
+}
+
+/// Shared body of Figs. 1 and 2 over precomputed entry-stream ranges:
+/// each chunk accumulates into its private `YY(:,K)` slice, then the
+/// reduction of lines 12–16 runs. The paper keeps that reduction serial
+/// ("the overhead of the thread fork is high if N is small"); with parked
+/// workers the fork is free, so it runs as a pairwise tree over the pool,
+/// parallel across row ranges.
+fn coo_outer_on(
+    c: &Coo,
+    x: &[Value],
+    y: &mut [Value],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
     assert_eq!(x.len(), c.n_cols(), "x length");
     assert_eq!(y.len(), c.n_rows(), "y length");
-    let nnz = c.nnz();
     let n = c.n_rows();
-    let ranges = split_even(nnz, n_threads);
     if ranges.len() <= 1 {
         return c.spmv(x, y);
     }
     let k = ranges.len();
     let yy = ws.yy(n, k);
-    std::thread::scope(|s| {
-        let mut rest: &mut [Value] = yy;
-        for r in &ranges {
-            let (slice, tail) = rest.split_at_mut(n);
-            rest = tail;
-            let (lo, hi) = (r.start, r.end);
-            s.spawn(move || {
-                for j in lo..hi {
-                    // <5> II = ICOL(J_PTR); <6> KK = row; <7> accumulate.
-                    let row = c.row_idx[j] as usize;
-                    let col = c.col_idx[j] as usize;
-                    slice[row] += c.values[j] * x[col];
-                }
-            });
+    let yyp = SendPtr(yy.as_mut_ptr());
+    pool.run_chunks(ranges, |tid, r| {
+        // Chunk `tid` owns the disjoint column yy[tid*n .. (tid+1)*n].
+        let slice = unsafe { std::slice::from_raw_parts_mut(yyp.get().add(tid * n), n) };
+        for j in r {
+            // <5> II = ICOL(J_PTR); <6> KK = row; <7> accumulate.
+            let row = c.row_idx[j] as usize;
+            let col = c.col_idx[j] as usize;
+            slice[row] += c.values[j] * x[col];
         }
     });
-    // Lines <12>-<16>: serial reduction over thread-private copies.
-    y.fill(0.0);
-    for t in 0..k {
-        let slice = &yy[t * n..(t + 1) * n];
-        for i in 0..n {
-            y[i] += slice[i];
-        }
-    }
+    // Lines <12>-<16>, parallelised: tree reduction over thread-private copies.
+    reduce_yy_tree(pool, yy, y, n, k);
 }
 
-/// Fig. 1 — outer-loop parallel SpMV over the **column-major** COO stream.
+/// Reduce `k` private copies `yy[t*n..(t+1)*n]` into `y`, as a pairwise
+/// tree (`stride = 1, 2, 4, …`) executed over the pool, parallel across
+/// disjoint row ranges. Overwrites `y` entirely.
+pub(crate) fn reduce_yy_tree(
+    pool: &ParPool,
+    yy: &mut [Value],
+    y: &mut [Value],
+    n: usize,
+    k: usize,
+) {
+    debug_assert!(yy.len() >= n * k);
+    debug_assert_eq!(y.len(), n);
+    if n == 0 {
+        return;
+    }
+    let row_ranges = split_even(n, pool.size());
+    let yyp = SendPtr(yy.as_mut_ptr());
+    let yp = SendPtr(y.as_mut_ptr());
+    pool.run_chunks(&row_ranges, |_tid, r| {
+        // Rows are independent, so each chunk runs the whole tree over its
+        // own row range with no barrier between levels.
+        let mut stride = 1usize;
+        while stride < k {
+            let mut t = 0usize;
+            while t + stride < k {
+                unsafe {
+                    let dst = yyp.get().add(t * n);
+                    let src = yyp.get().add((t + stride) * n) as *const Value;
+                    for i in r.clone() {
+                        *dst.add(i) += *src.add(i);
+                    }
+                }
+                t += 2 * stride;
+            }
+            stride *= 2;
+        }
+        unsafe {
+            let src = yyp.get() as *const Value;
+            for i in r.clone() {
+                *yp.get().add(i) = *src.add(i);
+            }
+        }
+    });
+}
+
+/// Fig. 1 — outer-loop parallel SpMV over the **column-major** COO stream,
+/// on precomputed entry ranges.
 ///
 /// # Panics
 /// Panics if `c` is not column-major ordered.
-pub fn coo_col_outer(c: &Coo, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+pub fn coo_col_outer_on(
+    c: &Coo,
+    x: &[Value],
+    y: &mut [Value],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
     assert_eq!(c.order(), CooOrder::ColMajor, "Fig. 1 requires COO-Column data");
-    coo_outer(c, x, y, n_threads, ws);
+    coo_outer_on(c, x, y, pool, ranges, ws);
 }
 
-/// Fig. 2 — outer-loop parallel SpMV over the **row-major** COO stream.
+/// Fig. 1 compatibility wrapper (global pool, on-the-fly partition).
+pub fn coo_col_outer(c: &Coo, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+    let ranges = split_even(c.nnz(), n_threads);
+    coo_col_outer_on(c, x, y, &pool::global(), &ranges, ws);
+}
+
+/// Fig. 2 — outer-loop parallel SpMV over the **row-major** COO stream,
+/// on precomputed entry ranges.
 ///
 /// # Panics
 /// Panics if `c` is not row-major ordered.
-pub fn coo_row_outer(c: &Coo, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+pub fn coo_row_outer_on(
+    c: &Coo,
+    x: &[Value],
+    y: &mut [Value],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
     assert_eq!(c.order(), CooOrder::RowMajor, "Fig. 2 requires COO-Row data");
-    coo_outer(c, x, y, n_threads, ws);
+    coo_outer_on(c, x, y, pool, ranges, ws);
 }
 
-/// Fig. 3 — ELL-Row with the **inner `N`-loop parallelised**: each thread
-/// owns a contiguous row range and streams every band over it with unit
-/// stride. "There is no reduction loop, which is an advantage of this
-/// format."
-pub fn ell_row_inner(e: &Ell, x: &[Value], y: &mut [Value], n_threads: usize) {
+/// Fig. 2 compatibility wrapper (global pool, on-the-fly partition).
+pub fn coo_row_outer(c: &Coo, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+    let ranges = split_even(c.nnz(), n_threads);
+    coo_row_outer_on(c, x, y, &pool::global(), &ranges, ws);
+}
+
+/// Fig. 3 — ELL-Row with the **inner `N`-loop parallelised** over
+/// precomputed row ranges: each chunk owns a contiguous row range and
+/// streams every band over it with unit stride. "There is no reduction
+/// loop, which is an advantage of this format."
+pub fn ell_row_inner_on(
+    e: &Ell,
+    x: &[Value],
+    y: &mut [Value],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+) {
     assert_eq!(x.len(), e.n_cols(), "x length");
     assert_eq!(y.len(), e.n_rows(), "y length");
     let n = e.n_rows();
-    let ranges = split_even(n, n_threads);
     if ranges.len() <= 1 {
         return e.spmv(x, y);
     }
-    std::thread::scope(|s| {
-        let mut rest: &mut [Value] = y;
-        let mut pos = 0usize;
-        for r in &ranges {
-            let (chunk, tail) = rest.split_at_mut(r.end - pos);
-            rest = tail;
-            pos = r.end;
-            let (lo, hi) = (r.start, r.end);
-            s.spawn(move || {
-                chunk.fill(0.0);
-                for k in 0..e.bandwidth {
-                    let base = k * n;
-                    let vals = &e.values[base + lo..base + hi];
-                    let cols = &e.col_idx[base + lo..base + hi];
-                    for i in 0..hi - lo {
-                        // <8> Y(I) = Y(I) + VAL(J_PTR) * X(II)
-                        chunk[i] += vals[i] * x[cols[i] as usize];
-                    }
-                }
-            });
+    let yp = SendPtr(y.as_mut_ptr());
+    pool.run_chunks(ranges, |_tid, r| {
+        let (lo, hi) = (r.start, r.end);
+        // Row ranges are disjoint: this chunk is y[lo..hi]'s only writer.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(yp.get().add(lo), hi - lo) };
+        chunk.fill(0.0);
+        for k in 0..e.bandwidth {
+            let base = k * n;
+            let vals = &e.values[base + lo..base + hi];
+            let cols = &e.col_idx[base + lo..base + hi];
+            for i in 0..hi - lo {
+                // <8> Y(I) = Y(I) + VAL(J_PTR) * X(II)
+                chunk[i] += vals[i] * x[cols[i] as usize];
+            }
         }
     });
 }
 
-/// Fig. 4 — ELL-Row with the **outer band loop parallelised**: the band
-/// range `K = 1..NE` is split across threads (`ISTART(J)..IEND(J)`), each
-/// thread accumulates into its private `YY(:,J)`, then the serial
-/// reduction runs. Parallelism is capped at the bandwidth `NE` — the
-/// paper's point that "if NE = 2, the parallelism is only 2".
-pub fn ell_row_outer(e: &Ell, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+/// Fig. 3 compatibility wrapper (global pool, on-the-fly partition).
+pub fn ell_row_inner(e: &Ell, x: &[Value], y: &mut [Value], n_threads: usize) {
+    let ranges = split_even(e.n_rows(), n_threads);
+    ell_row_inner_on(e, x, y, &pool::global(), &ranges);
+}
+
+/// Fig. 4 — ELL-Row with the **outer band loop parallelised** over
+/// precomputed band ranges (`ISTART(J)..IEND(J)`), each chunk accumulating
+/// into its private `YY(:,J)`, followed by the tree reduction. Parallelism
+/// is capped at the bandwidth `NE` — the paper's point that "if NE = 2,
+/// the parallelism is only 2".
+pub fn ell_row_outer_on(
+    e: &Ell,
+    x: &[Value],
+    y: &mut [Value],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
     assert_eq!(x.len(), e.n_cols(), "x length");
     assert_eq!(y.len(), e.n_rows(), "y length");
     let n = e.n_rows();
-    let ranges = split_even(e.bandwidth, n_threads); // capped at NE chunks
     if ranges.len() <= 1 {
         return e.spmv(x, y);
     }
     let k = ranges.len();
     let yy = ws.yy(n, k);
-    std::thread::scope(|s| {
-        let mut rest: &mut [Value] = yy;
-        for r in &ranges {
-            let (slice, tail) = rest.split_at_mut(n);
-            rest = tail;
-            let (lo, hi) = (r.start, r.end);
-            s.spawn(move || {
-                for band in lo..hi {
-                    let base = band * n;
-                    let vals = &e.values[base..base + n];
-                    let cols = &e.col_idx[base..base + n];
-                    for i in 0..n {
-                        slice[i] += vals[i] * x[cols[i] as usize];
-                    }
-                }
-            });
+    let yyp = SendPtr(yy.as_mut_ptr());
+    pool.run_chunks(ranges, |tid, r| {
+        let slice = unsafe { std::slice::from_raw_parts_mut(yyp.get().add(tid * n), n) };
+        for band in r {
+            let base = band * n;
+            let vals = &e.values[base..base + n];
+            let cols = &e.col_idx[base..base + n];
+            for i in 0..n {
+                slice[i] += vals[i] * x[cols[i] as usize];
+            }
         }
     });
-    y.fill(0.0);
-    for t in 0..k {
-        let slice = &yy[t * n..(t + 1) * n];
-        for i in 0..n {
-            y[i] += slice[i];
-        }
-    }
+    reduce_yy_tree(pool, yy, y, n, k);
+}
+
+/// Fig. 4 compatibility wrapper (global pool, on-the-fly partition).
+pub fn ell_row_outer(e: &Ell, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+    let ranges = split_even(e.bandwidth, n_threads); // capped at NE chunks
+    ell_row_outer_on(e, x, y, &pool::global(), &ranges, ws);
 }
 
 #[cfg(test)]
@@ -279,6 +382,45 @@ mod tests {
                 assert_close(&y, &want);
             }
         }
+    }
+
+    #[test]
+    fn explicit_pool_kernels_match_baseline() {
+        // The `_on` entry points with a dedicated (non-global) pool and
+        // hand-built partitions must agree with the baseline too.
+        let pool = ParPool::new(3);
+        let mut ws = Workspace::new();
+        let a = cases()[2].clone();
+        let x: Vec<Value> = (0..a.n_cols()).map(|i| (i as f64 * 0.3).cos()).collect();
+        let mut want = vec![0.0; a.n_rows()];
+        csr_seq(&a, &x, &mut want);
+
+        let mut y = vec![0.0; a.n_rows()];
+        csr_row_par_on(&a, &x, &mut y, &pool, &split_by_nnz(&a.row_ptr, 5));
+        assert_close(&y, &want);
+
+        let ell = crs_to_ell(&a).unwrap();
+        ell_row_inner_on(&ell, &x, &mut y, &pool, &split_even(ell.n_rows(), 5));
+        assert_close(&y, &want);
+        ell_row_outer_on(&ell, &x, &mut y, &pool, &split_even(ell.bandwidth, 5), &mut ws);
+        assert_close(&y, &want);
+
+        let coo_r = crs_to_coo_row(&a);
+        coo_row_outer_on(&coo_r, &x, &mut y, &pool, &split_even(coo_r.nnz(), 5), &mut ws);
+        assert_close(&y, &want);
+    }
+
+    #[test]
+    fn tree_reduction_matches_serial_sum() {
+        let pool = ParPool::new(4);
+        let (n, k) = (101usize, 7usize);
+        let mut yy: Vec<Value> = (0..n * k).map(|i| (i as f64 * 0.01).sin()).collect();
+        let want: Vec<Value> = (0..n)
+            .map(|i| (0..k).map(|t| yy[t * n + i]).sum())
+            .collect();
+        let mut y = vec![0.0; n];
+        reduce_yy_tree(&pool, &mut yy, &mut y, n, k);
+        assert_close(&y, &want);
     }
 
     #[test]

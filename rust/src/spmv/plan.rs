@@ -1,0 +1,354 @@
+//! Reusable SpMV execution plans.
+//!
+//! The paper's run-time auto-tuning amortises one transformation over many
+//! SpMV calls. A [`SpmvPlan`] widens that idea to *everything* the hot
+//! path would otherwise recompute per call: it owns the chosen
+//! representation ([`AnyMatrix`]), the work partition for the chosen
+//! kernel (computed once via [`kernels::partition_for`]), the reusable
+//! [`Workspace`], and a handle to the persistent [`ParPool`] it executes
+//! on. After construction, [`SpmvPlan::execute`] performs no allocation,
+//! no partitioning and no thread spawning.
+//!
+//! [`Planner`] is the factory: it carries the installed tuning table, the
+//! memory policy and the pool, and turns a CSR matrix into a plan either
+//! through the §2.2 online AT decision ([`Planner::plan`]) or for an
+//! explicitly requested implementation ([`Planner::plan_for`]). The
+//! `Durmv` handle, the coordinator registry, the solvers and the CLI all
+//! build and cache plans here instead of hand-rolling the
+//! decide→transform→kernel→workspace pipeline.
+
+use super::kernels::{self, AnyMatrix};
+use super::pool::{self, ParPool};
+use super::{Implementation, Workspace};
+use crate::autotune::online::{decide, TuningData};
+use crate::autotune::MemoryPolicy;
+use crate::formats::{Csr, Ell, FormatKind, SparseMatrix};
+use crate::machine::MatrixShape;
+use crate::{Result, Value};
+use std::ops::Range;
+use std::sync::Arc;
+
+/// An executable SpMV plan: chosen representation + partition + workspace
+/// + pool, built once and replayed per call.
+pub struct SpmvPlan {
+    imp: Implementation,
+    matrix: AnyMatrix,
+    ranges: Vec<Range<usize>>,
+    ws: Workspace,
+    pool: Arc<ParPool>,
+    n_rows: usize,
+    n_cols: usize,
+    transform_seconds: f64,
+    calls: u64,
+}
+
+impl SpmvPlan {
+    /// Build a plan executing `imp` for `csr` on `pool`. The (possibly
+    /// parallel) transformation runs here, once; `max_bytes` bounds ELL
+    /// storage (the §2.2 memory-policy hook).
+    pub fn build(
+        csr: &Csr,
+        imp: Implementation,
+        max_bytes: Option<usize>,
+        pool: Arc<ParPool>,
+    ) -> Result<Self> {
+        let t0 = std::time::Instant::now();
+        let matrix = AnyMatrix::prepare_on(csr, imp, max_bytes, &pool)?;
+        let transform_seconds = if imp.needs_transform() {
+            t0.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+        let ranges = kernels::partition_for(imp, &matrix, pool.size());
+        Ok(Self {
+            imp,
+            matrix,
+            ranges,
+            ws: Workspace::new(),
+            pool,
+            n_rows: csr.n_rows(),
+            n_cols: csr.n_cols(),
+            transform_seconds,
+            calls: 0,
+        })
+    }
+
+    /// `y = A·x` through the planned kernel.
+    ///
+    /// # Errors
+    /// Fails on dimension mismatch.
+    pub fn execute(&mut self, x: &[Value], y: &mut [Value]) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != n_cols {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.n_rows,
+            "y length {} != n_rows {}",
+            y.len(),
+            self.n_rows
+        );
+        self.calls += 1;
+        kernels::run_on(self.imp, &self.matrix, x, y, &self.pool, &self.ranges, &mut self.ws)
+    }
+
+    /// Batched `Y = A·X`: one output per input, all served by this plan's
+    /// single transformation and partition — the multi-RHS request shape a
+    /// serving deployment batches into.
+    ///
+    /// # Errors
+    /// Fails if `xs` and `ys` differ in length or any vector mismatches.
+    pub fn execute_many(&mut self, xs: &[Vec<Value>], ys: &mut [Vec<Value>]) -> Result<()> {
+        anyhow::ensure!(
+            xs.len() == ys.len(),
+            "batch mismatch: {} inputs vs {} outputs",
+            xs.len(),
+            ys.len()
+        );
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            self.execute(x, y)?;
+        }
+        Ok(())
+    }
+
+    /// The implementation this plan executes.
+    pub fn implementation(&self) -> Implementation {
+        self.imp
+    }
+
+    /// The stored format tag.
+    pub fn kind(&self) -> FormatKind {
+        self.matrix.kind()
+    }
+
+    /// The owned representation.
+    pub fn matrix(&self) -> &AnyMatrix {
+        &self.matrix
+    }
+
+    /// The ELL data when this plan serves an ELL kernel (the XLA runtime
+    /// path inspects this without reaching into [`AnyMatrix`]).
+    pub fn ell(&self) -> Option<&Ell> {
+        match &self.matrix {
+            AnyMatrix::Ell(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// Rows of the operator.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Columns of the operator.
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Seconds the transformation took at build time (0 for CRS plans).
+    pub fn transform_seconds(&self) -> f64 {
+        self.transform_seconds
+    }
+
+    /// Calls served so far (the amortisation denominator).
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// Storage footprint of the owned representation, bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.matrix.memory_bytes()
+    }
+
+    /// Extra bytes relative to serving from the CRS original: 0 for CRS
+    /// plans, the full copy size otherwise.
+    pub fn extra_bytes(&self) -> usize {
+        if self.kind() == FormatKind::Csr {
+            0
+        } else {
+            self.memory_bytes()
+        }
+    }
+
+    /// The pool this plan executes on.
+    pub fn pool(&self) -> &Arc<ParPool> {
+        &self.pool
+    }
+}
+
+impl std::fmt::Debug for SpmvPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpmvPlan")
+            .field("imp", &self.imp)
+            .field("kind", &self.kind())
+            .field("chunks", &self.ranges.len())
+            .field("pool", &self.pool.size())
+            .field("calls", &self.calls)
+            .finish()
+    }
+}
+
+/// Plan factory: tuning table + memory policy + pool.
+pub struct Planner {
+    tuning: TuningData,
+    policy: MemoryPolicy,
+    pool: Arc<ParPool>,
+}
+
+impl Planner {
+    /// Planner over an explicit pool.
+    pub fn new(tuning: TuningData, policy: MemoryPolicy, pool: Arc<ParPool>) -> Self {
+        Self { tuning, policy, pool }
+    }
+
+    /// Planner over the process-wide [`pool::global`] pool.
+    pub fn with_global_pool(tuning: TuningData, policy: MemoryPolicy) -> Self {
+        Self::new(tuning, policy, pool::global())
+    }
+
+    /// The installed tuning table.
+    pub fn tuning(&self) -> &TuningData {
+        &self.tuning
+    }
+
+    /// The memory policy bounding transformed copies.
+    pub fn policy(&self) -> &MemoryPolicy {
+        &self.policy
+    }
+
+    /// The pool plans will execute on.
+    pub fn pool(&self) -> &Arc<ParPool> {
+        &self.pool
+    }
+
+    /// The implementation the §2.2 online phase chooses for `csr` right
+    /// now: the tuning table's candidate when `D_mat < D*` *and* the
+    /// memory policy admits the target format, CRS otherwise.
+    pub fn auto_choice(&self, csr: &Csr) -> Implementation {
+        let d = decide(csr, &self.tuning);
+        if !d.transform {
+            return Implementation::CsrSeq;
+        }
+        let shape = MatrixShape::of(csr);
+        if self.policy.admits(&shape, d.chosen.required_format()) {
+            d.chosen
+        } else {
+            Implementation::CsrSeq
+        }
+    }
+
+    /// Build the plan the online AT decision selects, falling back to the
+    /// CRS baseline if the selected transformation fails at run time
+    /// (e.g. an ELL blow-up the size predictor underestimated).
+    pub fn plan(&self, csr: &Csr) -> Result<SpmvPlan> {
+        let imp = self.auto_choice(csr);
+        match self.plan_for(csr, imp) {
+            Ok(p) => Ok(p),
+            Err(_) if imp != Implementation::CsrSeq => {
+                self.plan_for(csr, Implementation::CsrSeq)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Build a plan for an explicitly requested implementation.
+    pub fn plan_for(&self, csr: &Csr, imp: Implementation) -> Result<SpmvPlan> {
+        SpmvPlan::build(csr, imp, self.policy.ell_budget(), self.pool.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::{banded_circulant, generate, random_csr, spec_by_name};
+    use crate::rng::Rng;
+
+    fn tuning(d_star: Option<f64>, imp: Implementation) -> TuningData {
+        TuningData { backend: "sim:ES2".into(), imp, threads: 1, c: 1.0, d_star }
+    }
+
+    #[test]
+    fn plan_matches_baseline_for_every_implementation() {
+        let mut rng = Rng::new(41);
+        let a = random_csr(&mut rng, 60, 60, 0.1);
+        let x: Vec<Value> = (0..60).map(|i| (i as f64 * 0.21).cos()).collect();
+        let mut want = vec![0.0; 60];
+        a.spmv(&x, &mut want);
+        let pool = Arc::new(ParPool::new(4));
+        for imp in Implementation::ALL {
+            let mut plan = SpmvPlan::build(&a, imp, None, pool.clone()).unwrap();
+            assert_eq!(plan.kind(), imp.required_format());
+            let mut y = vec![0.0; 60];
+            plan.execute(&x, &mut y).unwrap();
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9, "{imp}: {g} vs {w}");
+            }
+            assert_eq!(plan.calls(), 1);
+        }
+    }
+
+    #[test]
+    fn auto_plan_transforms_banded_and_vetoes_on_policy() {
+        let mut rng = Rng::new(42);
+        let band = banded_circulant(&mut rng, 128, &[-1, 0, 1]);
+        let planner = Planner::new(
+            tuning(Some(3.1), Implementation::EllRowOuter),
+            MemoryPolicy::unlimited(),
+            Arc::new(ParPool::new(2)),
+        );
+        assert_eq!(planner.auto_choice(&band), Implementation::EllRowOuter);
+        let plan = planner.plan(&band).unwrap();
+        assert_eq!(plan.implementation(), Implementation::EllRowOuter);
+        assert!(plan.transform_seconds() > 0.0);
+        assert!(plan.extra_bytes() > 0);
+
+        // Tail-heavy matrix + tight budget: the policy vetoes ELL.
+        let spiky = generate(&spec_by_name("memplus").unwrap(), 3, 0.03);
+        let vetoed = Planner::new(
+            tuning(Some(10.0), Implementation::EllRowOuter),
+            MemoryPolicy::with_budget(64 * 1024),
+            Arc::new(ParPool::new(2)),
+        );
+        assert_eq!(vetoed.auto_choice(&spiky), Implementation::CsrSeq);
+        let plan = vetoed.plan(&spiky).unwrap();
+        assert_eq!(plan.implementation(), Implementation::CsrSeq);
+        assert_eq!(plan.transform_seconds(), 0.0);
+        assert_eq!(plan.extra_bytes(), 0);
+    }
+
+    #[test]
+    fn execute_many_matches_individual_executes() {
+        let mut rng = Rng::new(43);
+        let a = random_csr(&mut rng, 32, 32, 0.2);
+        let pool = Arc::new(ParPool::new(2));
+        let mut plan = SpmvPlan::build(&a, Implementation::CsrRowPar, None, pool).unwrap();
+        let xs: Vec<Vec<Value>> = (0..4)
+            .map(|k| (0..32).map(|i| ((i + k) as f64 * 0.31).sin()).collect())
+            .collect();
+        let mut ys = vec![vec![0.0; 32]; 4];
+        plan.execute_many(&xs, &mut ys).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 32];
+            a.spmv(x, &mut want);
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12);
+            }
+        }
+        assert_eq!(plan.calls(), 4);
+        // Length mismatches are rejected.
+        let mut short = vec![vec![0.0; 32]; 3];
+        assert!(plan.execute_many(&xs, &mut short).is_err());
+    }
+
+    #[test]
+    fn plan_rejects_dimension_mismatch() {
+        let a = Csr::identity(8);
+        let mut plan =
+            SpmvPlan::build(&a, Implementation::CsrSeq, None, Arc::new(ParPool::new(1))).unwrap();
+        let mut y = vec![0.0; 8];
+        assert!(plan.execute(&[1.0; 7], &mut y).is_err());
+        assert!(plan.execute(&[1.0; 8], &mut vec![0.0; 9]).is_err());
+    }
+}

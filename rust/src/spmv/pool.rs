@@ -1,0 +1,449 @@
+//! Persistent worker pool — the crate's single thread-spawning site.
+//!
+//! The paper's premise is that run-time transformation cost is amortised
+//! over many SpMV calls, but a fork/join of fresh OS threads on *every*
+//! call (the "thread fork overhead" its §3 listings warn about) eats the
+//! amortised win back. [`ParPool`] keeps a fixed set of parked workers
+//! alive for the life of the process (or of a coordinator / `Durmv`
+//! handle) and hands them pre-partitioned chunk ranges through
+//! [`ParPool::run_chunks`]; the hot path performs no `spawn`, no
+//! allocation, and no channel traffic — one mutex/condvar handshake per
+//! call.
+//!
+//! Invariants:
+//!
+//! * `std::thread::scope`/`std::thread::spawn` for kernel or transform
+//!   work exist **only in this file**; every parallel code path in the
+//!   crate executes through a pool.
+//! * `run_chunks` blocks until every chunk has finished, so borrowed
+//!   closures and range slices never escape the call (the lifetime
+//!   erasure below is sound for exactly this reason).
+//! * The caller participates in chunk execution instead of idling, so a
+//!   pool of size `k` uses `k-1` parked workers plus the calling thread.
+//! * Nested `run_chunks` calls (a chunk body re-entering the pool) fall
+//!   back to serial execution instead of deadlocking.
+//!
+//! The pool size defaults to [`configured_threads`]: the `SPMV_AT_THREADS`
+//! environment variable when set, otherwise the hardware parallelism.
+//! That function is the crate-wide single source of thread-count truth.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::thread::JoinHandle;
+
+/// The crate-wide thread-count: `SPMV_AT_THREADS` when set to a positive
+/// integer, else the hardware's available parallelism.
+pub fn configured_threads() -> usize {
+    match std::env::var("SPMV_AT_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => default_threads(),
+        },
+        Err(_) => default_threads(),
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<Arc<ParPool>> = OnceLock::new();
+
+/// The process-wide shared pool, sized by [`configured_threads`] on first
+/// use. Library entry points that take a plain `n_threads` count execute
+/// on this pool (`n_threads` becomes the chunk count, so any request is
+/// served correctly even when it exceeds the pool size).
+pub fn global() -> Arc<ParPool> {
+    GLOBAL
+        .get_or_init(|| Arc::new(ParPool::new(configured_threads())))
+        .clone()
+}
+
+/// Send/Sync wrapper for a raw pointer into a buffer that chunk bodies
+/// write through at provably disjoint indices (each chunk owns its range).
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub(crate) fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+/// A published unit of work: the chunk body plus the range table, with
+/// borrow lifetimes erased (sound because `run_chunks` blocks until
+/// `pending == 0`, keeping both borrows alive past the last use).
+struct Job {
+    f: *const (dyn Fn(usize, Range<usize>) + Sync),
+    ranges: *const [Range<usize>],
+}
+
+unsafe impl Send for Job {}
+
+struct PoolState {
+    job: Option<Job>,
+    /// Bumped once per published job so parked workers can tell a new job
+    /// from the one they already drained.
+    epoch: u64,
+    /// Next chunk index to claim.
+    next_chunk: usize,
+    /// Chunks claimed-or-unclaimed that have not finished executing.
+    pending: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// Callers park here while a job drains (and while waiting for the
+    /// job slot when several callers share one pool).
+    done: Condvar,
+}
+
+impl PoolShared {
+    fn lock(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+thread_local! {
+    /// Set while this thread is executing a chunk body; a nested
+    /// `run_chunks` from such a context runs serially instead of
+    /// deadlocking on the single job slot.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A persistent worker pool with a scoped fork/join primitive.
+pub struct ParPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ParPool {
+    /// Pool of logical size `size` (`size - 1` parked workers; the caller
+    /// of [`ParPool::run_chunks`] is the remaining thread). `size == 1`
+    /// spawns nothing and runs everything serially.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                next_chunk: 0,
+                pending: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(size - 1);
+        for id in 1..size {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("spmv-pool-{id}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+            workers.push(h);
+        }
+        Self { shared, workers, size }
+    }
+
+    /// Pool sized by [`configured_threads`].
+    pub fn with_configured_size() -> Self {
+        Self::new(configured_threads())
+    }
+
+    /// Logical size (workers + caller).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Execute `f(chunk_index, range)` once per range, in parallel across
+    /// the pool, blocking until every chunk has finished. Chunk indices
+    /// are the positions in `ranges`, so a body indexing a per-chunk
+    /// buffer by `tid` gets a disjoint slot per chunk.
+    ///
+    /// Chunks are claimed dynamically (a fast worker takes more), so
+    /// passing more ranges than the pool size is correct — parallelism is
+    /// simply capped at `self.size()`.
+    ///
+    /// # Panics
+    /// Re-raises (as a single panic) if any chunk body panicked; the pool
+    /// itself stays usable afterwards.
+    #[allow(clippy::useless_transmute)] // lifetime-erasing transmute below
+    pub fn run_chunks(&self, ranges: &[Range<usize>], f: impl Fn(usize, Range<usize>) + Sync) {
+        let n = ranges.len();
+        if n == 0 {
+            return;
+        }
+        let nested = IN_POOL.with(|c| c.get());
+        if n == 1 || self.workers.is_empty() || nested {
+            for (i, r) in ranges.iter().enumerate() {
+                f(i, r.clone());
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
+        // Erase the borrow lifetimes. Sound: this function does not return
+        // until `pending == 0`, i.e. until no thread can touch the job.
+        let f_static: &'static (dyn Fn(usize, Range<usize>) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize, Range<usize>) + Sync),
+                &'static (dyn Fn(usize, Range<usize>) + Sync),
+            >(f_ref)
+        };
+        let job = Job { f: f_static as *const _, ranges: ranges as *const [Range<usize>] };
+        {
+            let mut st = self.shared.lock();
+            // One job slot: if another caller's job is in flight, queue
+            // behind it (its owner clears the slot and signals `done`).
+            while st.job.is_some() {
+                st = self.shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            st.job = Some(job);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.next_chunk = 0;
+            st.pending = n;
+            st.panicked = false;
+        }
+        self.shared.work.notify_all();
+        // The caller participates instead of idling.
+        IN_POOL.with(|c| c.set(true));
+        claim_chunks(&self.shared);
+        IN_POOL.with(|c| c.set(false));
+        // Wait for straggler workers, then release the job slot.
+        let panicked;
+        {
+            let mut st = self.shared.lock();
+            while st.pending > 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            st.job = None;
+            panicked = st.panicked;
+            st.panicked = false;
+        }
+        // Wake callers queued on the job slot.
+        self.shared.done.notify_all();
+        if panicked {
+            panic!("ParPool chunk body panicked");
+        }
+    }
+}
+
+impl Drop for ParPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ParPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParPool").field("size", &self.size).finish()
+    }
+}
+
+/// Claim and execute chunks of the current job until none remain. Shared
+/// by workers and the publishing caller.
+fn claim_chunks(shared: &PoolShared) {
+    loop {
+        let (f, ranges, i) = {
+            let mut st = shared.lock();
+            // Copy the raw pointers out so the `&Job` borrow of the guard
+            // ends before `next_chunk` is mutated.
+            let (f_ptr, ranges_ptr) = match st.job.as_ref() {
+                Some(job) => (job.f, job.ranges),
+                None => return,
+            };
+            // SAFETY: the job owner blocks until pending == 0, so both
+            // pointers are live for as long as this chunk executes.
+            let ranges = unsafe { &*ranges_ptr };
+            if st.next_chunk >= ranges.len() {
+                return;
+            }
+            let i = st.next_chunk;
+            st.next_chunk += 1;
+            (unsafe { &*f_ptr }, ranges, i)
+        };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(i, ranges[i].clone());
+        }))
+        .is_ok();
+        let mut st = shared.lock();
+        if !ok {
+            st.panicked = true;
+        }
+        st.pending -= 1;
+        if st.pending == 0 {
+            drop(st);
+            shared.done.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    // Workers always run chunk bodies, so nested pool entry from a body
+    // on this thread must serialise.
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        {
+            let mut st = shared.lock();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.job.is_some() && st.epoch != seen {
+                    seen = st.epoch;
+                    break;
+                }
+                st = shared.work.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        }
+        claim_chunks(shared);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::partition::split_even;
+
+    #[test]
+    fn chunks_cover_iteration_space_once() {
+        let pool = ParPool::new(4);
+        let n = 10_000usize;
+        let mut hits = vec![0u8; n];
+        let ranges = split_even(n, 7);
+        let p = SendPtr(hits.as_mut_ptr());
+        pool.run_chunks(&ranges, |_tid, r| {
+            for i in r {
+                // Disjoint ranges: each index written by exactly one chunk.
+                unsafe { *p.get().add(i) += 1 };
+            }
+        });
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_calls() {
+        let pool = ParPool::new(3);
+        let n = 512usize;
+        let ranges = split_even(n, 3);
+        let mut out = vec![0.0f64; n];
+        for round in 1..=10u32 {
+            let p = SendPtr(out.as_mut_ptr());
+            pool.run_chunks(&ranges, |_tid, r| {
+                for i in r {
+                    unsafe { *p.get().add(i) = (round as f64) * (i as f64) };
+                }
+            });
+            assert_eq!(out[17], round as f64 * 17.0, "round {round}");
+            assert_eq!(out[n - 1], round as f64 * (n - 1) as f64);
+        }
+    }
+
+    #[test]
+    fn size_one_pool_runs_serially() {
+        let pool = ParPool::new(1);
+        assert_eq!(pool.size(), 1);
+        let mut sum = 0usize;
+        let p = SendPtr(&mut sum as *mut usize);
+        pool.run_chunks(&split_even(100, 4), |_tid, r| {
+            // Serial execution: unsynchronised accumulation is safe.
+            for i in r {
+                unsafe { *p.get() += i };
+            }
+        });
+        assert_eq!(sum, 99 * 100 / 2);
+    }
+
+    #[test]
+    fn nested_run_chunks_degrades_to_serial() {
+        let pool = ParPool::new(4);
+        let n = 64usize;
+        let mut out = vec![0usize; n];
+        let outer = split_even(n, 4);
+        let p = SendPtr(out.as_mut_ptr());
+        pool.run_chunks(&outer, |_tid, r| {
+            // Nested entry must not deadlock on the single job slot.
+            let inner = split_even(r.end - r.start, 2);
+            let base = r.start;
+            pool.run_chunks(&inner, |_t2, r2| {
+                for i in r2 {
+                    unsafe { *p.get().add(base + i) = base + i };
+                }
+            });
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_share_one_pool() {
+        let pool = Arc::new(ParPool::new(4));
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                let n = 2048usize;
+                let ranges = split_even(n, 4);
+                let mut out = vec![0.0f64; n];
+                for _ in 0..20 {
+                    let p = SendPtr(out.as_mut_ptr());
+                    pool.run_chunks(&ranges, |_tid, r| {
+                        for i in r {
+                            unsafe { *p.get().add(i) = (t * n + i) as f64 };
+                        }
+                    });
+                }
+                (0..n).all(|i| out[i] == (t * n + i) as f64)
+            }));
+        }
+        for h in handles {
+            assert!(h.join().unwrap(), "a caller observed torn results");
+        }
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let pool = ParPool::new(2);
+        let ranges = split_even(8, 2);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks(&ranges, |tid, _r| {
+                if tid == 1 {
+                    panic!("injected");
+                }
+            });
+        }));
+        assert!(err.is_err(), "panic must propagate to the caller");
+        // The pool must still be usable.
+        let mut sum = vec![0usize; 2];
+        let p = SendPtr(sum.as_mut_ptr());
+        pool.run_chunks(&ranges, |tid, r| unsafe {
+            *p.get().add(tid) = r.end - r.start;
+        });
+        assert_eq!(sum[0] + sum[1], 8);
+    }
+
+    #[test]
+    fn configured_threads_is_positive() {
+        assert!(configured_threads() >= 1);
+        assert!(global().size() >= 1);
+    }
+}

@@ -105,11 +105,11 @@ pub fn crs_to_coo_col(a: &Csr) -> Coo {
     )
 }
 
-/// CRS → ELL with band-major padded storage. Rows shorter than the
-/// bandwidth get explicit `0.0` values with column index 0. Fails if the
-/// padded storage would exceed `max_bytes` (the §2.2 memory auto-tuning
-/// policy hook; the paper had to drop `torso1` for exactly this reason).
-pub fn crs_to_ell_bounded(a: &Csr, max_bytes: Option<usize>) -> Result<Ell> {
+/// Checked ELL slot count `n·nz`, enforcing the optional byte budget
+/// (the §2.2 memory auto-tuning policy hook; the paper had to drop
+/// `torso1` for exactly this reason). Shared by the sequential and
+/// parallel ELL builders so both paths enforce the same policy.
+pub(crate) fn ell_checked_slots(a: &Csr, max_bytes: Option<usize>) -> Result<usize> {
     let n = a.n_rows();
     let nz = a.max_row_len();
     let slots = n.checked_mul(nz).ok_or_else(|| anyhow::anyhow!("ELL size overflow"))?;
@@ -120,6 +120,16 @@ pub fn crs_to_ell_bounded(a: &Csr, max_bytes: Option<usize>) -> Result<Ell> {
             "ELL storage {bytes} B exceeds memory budget {cap} B (n={n}, nz={nz})"
         );
     }
+    Ok(slots)
+}
+
+/// CRS → ELL with band-major padded storage. Rows shorter than the
+/// bandwidth get explicit `0.0` values with column index 0. Fails if the
+/// padded storage would exceed `max_bytes` (see [`ell_checked_slots`]).
+pub fn crs_to_ell_bounded(a: &Csr, max_bytes: Option<usize>) -> Result<Ell> {
+    let n = a.n_rows();
+    let nz = a.max_row_len();
+    let slots = ell_checked_slots(a, max_bytes)?;
     let mut values = vec![0.0 as Value; slots];
     let mut col_idx = vec![0 as Index; slots];
     for i in 0..n {

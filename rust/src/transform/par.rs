@@ -4,109 +4,126 @@
 //! work").
 //!
 //! Strategy: every transform splits its scatter pass over row (or entry)
-//! ranges with per-thread write cursors derived from a shared counting
+//! ranges with per-chunk write cursors derived from a shared counting
 //! pass, mirroring how the SpMV kernels split work with `ISTART/IEND`.
+//! All chunks execute on a persistent [`ParPool`] — the `*_on` entry
+//! points take an explicit pool (this is what plan construction uses);
+//! the `*_par(a, n_threads)` wrappers keep the historical signature and
+//! run `n_threads` chunks on the global pool.
 
 use crate::formats::{Coo, CooOrder, Csc, Csr, Ell, SparseMatrix};
 use crate::spmv::partition::split_even;
+use crate::spmv::pool::{self, ParPool, SendPtr};
 use crate::{Index, Result, Value};
 
-/// Parallel CRS → ELL: each thread owns a contiguous row range and fills
-/// its band-major slots independently (no write conflicts: slot `k*n+i`
-/// belongs to exactly one row `i`).
+/// Parallel CRS → ELL on `pool` with a storage bound (the same
+/// [`super::ell_checked_slots`] policy the sequential builder enforces):
+/// each chunk owns a contiguous row range and fills its band-major slots
+/// independently (no write conflicts: slot `k*n+i` belongs to exactly one
+/// row `i`).
+pub fn crs_to_ell_bounded_on(a: &Csr, max_bytes: Option<usize>, pool: &ParPool) -> Result<Ell> {
+    super::ell_checked_slots(a, max_bytes)?;
+    crs_to_ell_chunked(a, pool, pool.size())
+}
+
+/// Parallel CRS → ELL on `pool` without a storage bound.
+pub fn crs_to_ell_on(a: &Csr, pool: &ParPool) -> Result<Ell> {
+    crs_to_ell_bounded_on(a, None, pool)
+}
+
+/// Parallel CRS → ELL at `n_threads` chunks on the global pool.
 pub fn crs_to_ell_par(a: &Csr, n_threads: usize) -> Result<Ell> {
+    crs_to_ell_chunked(a, &pool::global(), n_threads)
+}
+
+fn crs_to_ell_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Result<Ell> {
     let n = a.n_rows();
     let nz = a.max_row_len();
     let slots = n.checked_mul(nz).ok_or_else(|| anyhow::anyhow!("ELL size overflow"))?;
     let mut values = vec![0.0 as Value; slots];
     let mut col_idx = vec![0 as Index; slots];
-    let ranges = split_even(n, n_threads);
-
-    // SAFETY-free sharing: give each thread disjoint &mut views per band is
-    // awkward (rows interleave in band-major layout), so use raw pointers
-    // wrapped in a Sync newtype; disjointness is by row index.
-    struct Shared(*mut Value, *mut Index);
-    unsafe impl Sync for Shared {}
-    let shared = Shared(values.as_mut_ptr(), col_idx.as_mut_ptr());
-
-    std::thread::scope(|s| {
-        for r in &ranges {
-            let (lo, hi) = (r.start, r.end);
-            let shared = &shared;
-            s.spawn(move || {
-                for i in lo..hi {
-                    for (k, (c, v)) in a.row(i).enumerate() {
-                        // Each (i, k) slot is written by exactly one thread
-                        // because row ranges are disjoint.
-                        unsafe {
-                            *shared.0.add(k * n + i) = v;
-                            *shared.1.add(k * n + i) = c;
-                        }
-                    }
+    let ranges = split_even(n, n_chunks);
+    let vp = SendPtr(values.as_mut_ptr());
+    let cp = SendPtr(col_idx.as_mut_ptr());
+    pool.run_chunks(&ranges, |_tid, r| {
+        for i in r {
+            for (k, (c, v)) in a.row(i).enumerate() {
+                unsafe {
+                    *vp.get().add(k * n + i) = v;
+                    *cp.get().add(k * n + i) = c;
                 }
-            });
+            }
         }
     });
     Ell::new(n, a.n_cols(), nz, values, col_idx, a.nnz())
 }
 
 /// Parallel CRS → COO-Row: the `IROW` expansion is embarrassingly parallel
-/// over row ranges.
+/// over row ranges (each chunk writes the disjoint `row_ptr[lo]..row_ptr[hi]`
+/// span of `IROW`).
+pub fn crs_to_coo_row_on(a: &Csr, pool: &ParPool) -> Coo {
+    crs_to_coo_row_chunked(a, pool, pool.size())
+}
+
+/// Parallel CRS → COO-Row at `n_threads` chunks on the global pool.
 pub fn crs_to_coo_row_par(a: &Csr, n_threads: usize) -> Coo {
+    crs_to_coo_row_chunked(a, &pool::global(), n_threads)
+}
+
+fn crs_to_coo_row_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Coo {
     let nnz = a.nnz();
     let n = a.n_rows();
     let mut row_idx = vec![0 as Index; nnz];
-    let ranges = split_even(n, n_threads);
-    std::thread::scope(|s| {
-        let mut rest: &mut [Index] = &mut row_idx;
-        for r in &ranges {
-            let lo_off = a.row_ptr[r.start];
-            let hi_off = a.row_ptr[r.end];
-            let (chunk, tail) = rest.split_at_mut(hi_off - lo_off);
-            rest = tail;
-            let (lo, hi) = (r.start, r.end);
-            s.spawn(move || {
-                let mut w = 0;
-                for i in lo..hi {
-                    for _ in 0..(a.row_ptr[i + 1] - a.row_ptr[i]) {
-                        chunk[w] = i as Index;
-                        w += 1;
-                    }
-                }
-            });
+    let ranges = split_even(n, n_chunks);
+    let rp = SendPtr(row_idx.as_mut_ptr());
+    pool.run_chunks(&ranges, |_tid, r| {
+        let mut w = a.row_ptr[r.start];
+        for i in r {
+            for _ in 0..(a.row_ptr[i + 1] - a.row_ptr[i]) {
+                // Chunks own disjoint row_ptr spans of IROW.
+                unsafe { *rp.get().add(w) = i as Index };
+                w += 1;
+            }
         }
     });
     Coo::new(n, a.n_cols(), row_idx, a.col_idx.clone(), a.values.clone(), CooOrder::RowMajor)
         .expect("parallel IROW expansion preserves ordering")
 }
 
-/// Parallel CRS → CCS. The counting pass is parallelised with per-thread
+/// Parallel CRS → CCS. The counting pass is parallelised with per-chunk
 /// count arrays that are then reduced; the scatter pass is parallel over
-/// row ranges with per-thread cursor arrays offset by the counts of all
-/// preceding threads (a two-level prefix sum) — each (column, thread) pair
+/// row ranges with per-chunk cursor arrays offset by the counts of all
+/// preceding chunks (a two-level prefix sum) — each (column, chunk) pair
 /// owns a disjoint slot range, so scatters never conflict.
+pub fn crs_to_ccs_on(a: &Csr, pool: &ParPool) -> Csc {
+    crs_to_ccs_chunked(a, pool, pool.size())
+}
+
+/// Parallel CRS → CCS at `n_threads` chunks on the global pool.
 pub fn crs_to_ccs_par(a: &Csr, n_threads: usize) -> Csc {
+    crs_to_ccs_chunked(a, &pool::global(), n_threads)
+}
+
+fn crs_to_ccs_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Csc {
     let n_cols = a.n_cols();
     let n = a.n_rows();
     let nnz = a.nnz();
-    let ranges = split_even(n, n_threads);
+    let ranges = split_even(n, n_chunks);
     let t = ranges.len().max(1);
 
-    // Phase 1: per-thread column counts.
+    // Phase 1: per-chunk column counts.
     let mut counts = vec![vec![0usize; n_cols]; t];
-    std::thread::scope(|s| {
-        for (cnt, r) in counts.iter_mut().zip(&ranges) {
-            let (lo, hi) = (r.start, r.end);
-            s.spawn(move || {
-                for k in a.row_ptr[lo]..a.row_ptr[hi] {
-                    cnt[a.col_idx[k] as usize] += 1;
-                }
-            });
+    let countp = SendPtr(counts.as_mut_ptr());
+    pool.run_chunks(&ranges, |tid, r| {
+        // Chunk `tid` owns counts[tid] exclusively.
+        let cnt = unsafe { &mut *countp.get().add(tid) };
+        for k in a.row_ptr[r.start]..a.row_ptr[r.end] {
+            cnt[a.col_idx[k] as usize] += 1;
         }
     });
 
-    // Phase 2: two-level exclusive prefix sum -> col_ptr and per-thread
-    // starting cursors (thread-major within each column to preserve the
+    // Phase 2: two-level exclusive prefix sum -> col_ptr and per-chunk
+    // starting cursors (chunk-major within each column to preserve the
     // row-sorted-within-column invariant).
     let mut col_ptr = vec![0usize; n_cols + 1];
     let mut cursors = vec![vec![0usize; n_cols]; t];
@@ -124,61 +141,88 @@ pub fn crs_to_ccs_par(a: &Csr, n_threads: usize) -> Csc {
     // Phase 3: parallel scatter.
     let mut row_idx = vec![0 as Index; nnz];
     let mut values = vec![0.0 as Value; nnz];
-    struct Shared(*mut Index, *mut Value);
-    unsafe impl Sync for Shared {}
-    let shared = Shared(row_idx.as_mut_ptr(), values.as_mut_ptr());
-    std::thread::scope(|s| {
-        for (cur, r) in cursors.iter_mut().zip(&ranges) {
-            let (lo, hi) = (r.start, r.end);
-            let shared = &shared;
-            s.spawn(move || {
-                for i in lo..hi {
-                    for (c, v) in a.row(i) {
-                        let slot = cur[c as usize];
-                        cur[c as usize] += 1;
-                        // (column, thread) slot ranges are disjoint by the
-                        // two-level prefix sum above.
-                        unsafe {
-                            *shared.0.add(slot) = i as Index;
-                            *shared.1.add(slot) = v;
-                        }
-                    }
+    let rp = SendPtr(row_idx.as_mut_ptr());
+    let vp = SendPtr(values.as_mut_ptr());
+    let curp = SendPtr(cursors.as_mut_ptr());
+    pool.run_chunks(&ranges, |tid, r| {
+        let cur = unsafe { &mut *curp.get().add(tid) };
+        for i in r {
+            for (c, v) in a.row(i) {
+                let slot = cur[c as usize];
+                cur[c as usize] += 1;
+                // (column, chunk) slot ranges are disjoint by the
+                // two-level prefix sum above.
+                unsafe {
+                    *rp.get().add(slot) = i as Index;
+                    *vp.get().add(slot) = v;
                 }
-            });
+            }
         }
     });
     Csc::new(n, n_cols, col_ptr, row_idx, values).expect("parallel counting transform valid")
 }
 
 /// Parallel CRS → COO-Column (parallel Phase I + parallel Phase II).
+pub fn crs_to_coo_col_on(a: &Csr, pool: &ParPool) -> Coo {
+    crs_to_coo_col_chunked(a, pool, pool.size())
+}
+
+/// Parallel CRS → COO-Column at `n_threads` chunks on the global pool.
 pub fn crs_to_coo_col_par(a: &Csr, n_threads: usize) -> Coo {
-    let ccs = crs_to_ccs_par(a, n_threads);
+    crs_to_coo_col_chunked(a, &pool::global(), n_threads)
+}
+
+fn crs_to_coo_col_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Coo {
+    let ccs = crs_to_ccs_chunked(a, pool, n_chunks);
     let n_cols = ccs.n_cols();
     let nnz = ccs.nnz();
     let mut col_idx = vec![0 as Index; nnz];
-    let ranges = split_even(n_cols, n_threads);
-    std::thread::scope(|s| {
-        let mut rest: &mut [Index] = &mut col_idx;
-        for r in &ranges {
-            let lo_off = ccs.col_ptr[r.start];
-            let hi_off = ccs.col_ptr[r.end];
-            let (chunk, tail) = rest.split_at_mut(hi_off - lo_off);
-            rest = tail;
-            let (lo, hi) = (r.start, r.end);
-            let ccs = &ccs;
-            s.spawn(move || {
-                let mut w = 0;
-                for j in lo..hi {
-                    for _ in 0..ccs.col_len(j) {
-                        chunk[w] = j as Index;
-                        w += 1;
-                    }
-                }
-            });
+    let ranges = split_even(n_cols, n_chunks);
+    let cp = SendPtr(col_idx.as_mut_ptr());
+    let ccs_ref = &ccs;
+    pool.run_chunks(&ranges, |_tid, r| {
+        let mut w = ccs_ref.col_ptr[r.start];
+        for j in r {
+            for _ in 0..ccs_ref.col_len(j) {
+                // Chunks own disjoint col_ptr spans of ICOL.
+                unsafe { *cp.get().add(w) = j as Index };
+                w += 1;
+            }
         }
     });
-    Coo::new(a.n_rows(), a.n_cols(), ccs.row_idx.clone(), col_idx, ccs.values.clone(), CooOrder::ColMajor)
-        .expect("parallel phase II preserves ordering")
+    Coo::new(
+        a.n_rows(),
+        a.n_cols(),
+        ccs.row_idx.clone(),
+        col_idx,
+        ccs.values.clone(),
+        CooOrder::ColMajor,
+    )
+    .expect("parallel phase II preserves ordering")
+}
+
+/// Pool-parallel counterpart of [`crate::transform::transform_to`]: the
+/// uniform entry point dispatching to the parallel pipelines where they
+/// exist (sequential builders otherwise) — exactly what plan construction
+/// pays, so timing harnesses measure the cost actually incurred at
+/// `SpmvPlan` build time.
+pub fn transform_to_on(
+    a: &Csr,
+    target: crate::formats::FormatKind,
+    max_bytes: Option<usize>,
+    pool: &ParPool,
+) -> Result<Box<dyn SparseMatrix + Send + Sync>> {
+    use crate::formats::FormatKind::*;
+    Ok(match target {
+        Csr => Box::new(a.clone()),
+        Csc => Box::new(crs_to_ccs_on(a, pool)),
+        CooRow => Box::new(crs_to_coo_row_on(a, pool)),
+        CooCol => Box::new(crs_to_coo_col_on(a, pool)),
+        Ell => Box::new(crs_to_ell_bounded_on(a, max_bytes, pool)?),
+        Bcsr => Box::new(crate::transform::crs_to_bcsr(a, 2, 2)?),
+        Jds => Box::new(crate::transform::crs_to_jds(a)),
+        Hyb => Box::new(crate::transform::crs_to_hyb(a)?),
+    })
 }
 
 #[cfg(test)]
@@ -235,5 +279,44 @@ mod tests {
                 assert_eq!(crs_to_coo_col(&a), crs_to_coo_col_par(&a, t), "t={t}");
             }
         }
+    }
+
+    #[test]
+    fn pool_entry_points_match_sequential() {
+        let pool = ParPool::new(3);
+        for a in cases() {
+            assert_eq!(crs_to_ell(&a).unwrap(), crs_to_ell_on(&a, &pool).unwrap());
+            assert_eq!(crs_to_coo_row(&a), crs_to_coo_row_on(&a, &pool));
+            assert_eq!(crs_to_ccs(&a), crs_to_ccs_on(&a, &pool));
+            assert_eq!(crs_to_coo_col(&a), crs_to_coo_col_on(&a, &pool));
+        }
+    }
+
+    #[test]
+    fn transform_to_on_agrees_on_spmv() {
+        let pool = ParPool::new(3);
+        let mut rng = Rng::new(91);
+        let a = random_csr(&mut rng, 40, 35, 0.12);
+        let x: Vec<Value> = (0..35).map(|i| (i as f64 * 0.23).sin()).collect();
+        let mut want = vec![0.0; 40];
+        a.spmv(&x, &mut want);
+        for kind in crate::formats::FormatKind::ALL {
+            let m = transform_to_on(&a, kind, None, &pool).unwrap();
+            let mut got = vec![0.0; 40];
+            m.spmv(&x, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12, "{kind}: {g} != {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_ell_respects_budget() {
+        let pool = ParPool::new(2);
+        let mut t: Vec<(usize, usize, Value)> = (0..100).map(|j| (0, j, 1.0)).collect();
+        t.extend((1..100).map(|i| (i, i, 1.0)));
+        let a = Csr::from_triplets(100, 100, &t).unwrap();
+        assert!(crs_to_ell_bounded_on(&a, Some(1024), &pool).is_err());
+        assert!(crs_to_ell_bounded_on(&a, None, &pool).is_ok());
     }
 }

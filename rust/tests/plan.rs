@@ -1,0 +1,165 @@
+//! Execution-engine tests: `SpmvPlan` correctness against the sequential
+//! CRS baseline for every implementation across thread counts, bitwise
+//! stability of repeated executions, and pool reuse across consecutive
+//! plans (no stale `YY`/partition state).
+
+use spmv_at::autotune::online::TuningData;
+use spmv_at::autotune::MemoryPolicy;
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::matrixgen::{banded_circulant, random_csr};
+use spmv_at::rng::Rng;
+use spmv_at::solver::{cg, SolverOptions};
+use spmv_at::spmv::pool::ParPool;
+use spmv_at::spmv::{Implementation, Planner, SpmvPlan};
+use std::sync::Arc;
+
+fn assert_close(tag: &str, got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-9 * (1.0 + w.abs()),
+            "{tag}: index {i}: {g} vs {w}"
+        );
+    }
+}
+
+fn cases() -> Vec<Csr> {
+    let mut rng = Rng::new(2024);
+    vec![
+        random_csr(&mut rng, 1, 1, 1.0),
+        random_csr(&mut rng, 23, 19, 0.25),
+        random_csr(&mut rng, 150, 150, 0.04),
+        banded_circulant(&mut rng, 97, &[-1, 0, 1, 3]),
+        Csr::from_triplets(11, 11, &[]).unwrap(),
+    ]
+}
+
+/// The headline property: for every implementation and every pool width
+/// in {1, 2, 7, 16}, `SpmvPlan::execute` matches `csr_seq` within 1e-9
+/// relative tolerance, and repeated executions of one plan are bitwise
+/// identical (fixed partition + fixed reduction order).
+#[test]
+fn plan_execute_matches_csr_seq_for_every_implementation_and_thread_count() {
+    for threads in [1usize, 2, 7, 16] {
+        let pool = Arc::new(ParPool::new(threads));
+        for a in cases() {
+            let x: Vec<f64> = (0..a.n_cols()).map(|i| ((i * 3 + 1) as f64).recip()).collect();
+            let mut want = vec![0.0; a.n_rows()];
+            spmv_at::spmv::csr_seq(&a, &x, &mut want);
+            for imp in Implementation::ALL {
+                let tag = format!("{imp} t={threads} n={}", a.n_rows());
+                let mut plan = SpmvPlan::build(&a, imp, None, pool.clone())
+                    .unwrap_or_else(|e| panic!("{tag}: build failed: {e}"));
+                let mut y1 = vec![0.0; a.n_rows()];
+                plan.execute(&x, &mut y1).unwrap();
+                assert_close(&tag, &y1, &want);
+                // Bitwise stability across repeated executes.
+                for _ in 0..3 {
+                    let mut y2 = vec![0.0; a.n_rows()];
+                    plan.execute(&x, &mut y2).unwrap();
+                    assert_eq!(y1, y2, "{tag}: repeated execute must be bitwise stable");
+                }
+            }
+        }
+    }
+}
+
+/// One shared pool, ≥3 consecutive plans of different shapes and
+/// implementations: later plans must not observe stale `YY` or partition
+/// state from earlier ones, and earlier plans must stay correct after
+/// later ones ran.
+#[test]
+fn consecutive_plans_share_one_pool_without_stale_state() {
+    let pool = Arc::new(ParPool::new(4));
+    let mut rng = Rng::new(7);
+
+    let a1 = random_csr(&mut rng, 64, 64, 0.1);
+    let a2 = banded_circulant(&mut rng, 200, &[-2, -1, 0, 1, 2]);
+    let a3 = random_csr(&mut rng, 33, 47, 0.2);
+
+    let specs: Vec<(&Csr, Implementation)> = vec![
+        (&a1, Implementation::CooRowOuter),
+        (&a2, Implementation::EllRowOuter),
+        (&a3, Implementation::CsrRowPar),
+        (&a1, Implementation::EllRowInner),
+        (&a2, Implementation::CooColOuter),
+    ];
+
+    let mut plans = Vec::new();
+    let mut wants = Vec::new();
+    let mut xs = Vec::new();
+    for (k, (a, imp)) in specs.iter().enumerate() {
+        let x: Vec<f64> = (0..a.n_cols()).map(|i| ((i + k) as f64 * 0.29).sin()).collect();
+        let mut want = vec![0.0; a.n_rows()];
+        a.spmv(&x, &mut want);
+        let mut plan = SpmvPlan::build(a, *imp, None, pool.clone()).unwrap();
+        let mut y = vec![0.0; a.n_rows()];
+        plan.execute(&x, &mut y).unwrap();
+        assert_close(&format!("plan {k} ({imp}) fresh"), &y, &want);
+        plans.push(plan);
+        wants.push(want);
+        xs.push(x);
+    }
+    // Re-run every plan after all the others executed, twice.
+    for round in 0..2 {
+        for (k, plan) in plans.iter_mut().enumerate() {
+            let mut y = vec![0.0; wants[k].len()];
+            plan.execute(&xs[k], &mut y).unwrap();
+            assert_close(&format!("plan {k} round {round}"), &y, &wants[k]);
+        }
+    }
+}
+
+/// Planner auto-decision: a low-D matrix transforms to the tuning-table
+/// candidate; the plan is the operator the solvers iterate with.
+#[test]
+fn solver_iterates_through_a_cached_plan() {
+    let mut rng = Rng::new(13);
+    let a = spmv_at::matrixgen::make_spd(&banded_circulant(&mut rng, 120, &[-1, 0, 1]));
+    let x_true: Vec<f64> = (0..120).map(|i| ((i + 1) as f64 * 0.37).sin()).collect();
+    let mut b = vec![0.0; 120];
+    a.spmv(&x_true, &mut b);
+
+    let tuning = TuningData {
+        backend: "t".into(),
+        imp: Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let planner = Planner::new(tuning, MemoryPolicy::unlimited(), Arc::new(ParPool::new(3)));
+    let mut plan = planner.plan(&a).unwrap();
+    assert_eq!(plan.implementation(), Implementation::EllRowOuter);
+    let mut x = vec![0.0; 120];
+    let stats = cg(&mut plan, &b, &mut x, &SolverOptions::default()).unwrap();
+    assert!(stats.converged, "residual {}", stats.residual);
+    let err: f64 = x
+        .iter()
+        .zip(&x_true)
+        .map(|(p, q)| (p - q) * (p - q))
+        .sum::<f64>()
+        .sqrt();
+    assert!(err < 1e-6, "err {err}");
+    assert_eq!(plan.calls() as usize, stats.spmv_calls, "plan served every SpMV");
+    assert!(plan.transform_seconds() > 0.0, "transformation accounted once");
+}
+
+/// `execute_many` batches multiple right-hand sides under one plan.
+#[test]
+fn execute_many_batches_under_one_plan() {
+    let mut rng = Rng::new(17);
+    let a = random_csr(&mut rng, 48, 48, 0.15);
+    let mut plan =
+        SpmvPlan::build(&a, Implementation::CsrRowPar, None, Arc::new(ParPool::new(2))).unwrap();
+    let xs: Vec<Vec<f64>> = (0..6)
+        .map(|k| (0..48).map(|i| ((i * 5 + k) as f64 * 0.11).cos()).collect())
+        .collect();
+    let mut ys = vec![vec![0.0; 48]; 6];
+    plan.execute_many(&xs, &mut ys).unwrap();
+    for (k, (x, y)) in xs.iter().zip(&ys).enumerate() {
+        let mut want = vec![0.0; 48];
+        a.spmv(x, &mut want);
+        assert_close(&format!("rhs {k}"), y, &want);
+    }
+    assert_eq!(plan.calls(), 6);
+}

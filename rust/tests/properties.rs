@@ -9,8 +9,10 @@ use spmv_at::machine::MatrixShape;
 use spmv_at::matrixgen::{assemble_from_row_lens, random_csr, rowlen, Placement};
 use spmv_at::rng::Rng;
 use spmv_at::spmv::partition::{imbalance, split_by_nnz, split_even};
-use spmv_at::spmv::{kernels, AnyMatrix, Implementation, Workspace};
+use spmv_at::spmv::pool::ParPool;
+use spmv_at::spmv::{Implementation, SpmvPlan};
 use spmv_at::transform;
+use std::sync::Arc;
 
 /// Run `f` for a batch of deterministic seeds; failures report the seed.
 fn for_seeds(n: u64, mut f: impl FnMut(u64, &mut Rng)) {
@@ -59,17 +61,17 @@ fn prop_transforms_preserve_nnz_and_shape() {
 
 #[test]
 fn prop_all_kernels_agree_with_csr_at_random_thread_counts() {
-    let mut ws = Workspace::new();
     for_seeds(25, |seed, rng| {
         let a = arbitrary_matrix(rng);
         let x: Vec<f64> = (0..a.n_cols()).map(|_| rng.range_f64(-2.0, 2.0)).collect();
         let mut want = vec![0.0; a.n_rows()];
         a.spmv(&x, &mut want);
         let threads = rng.range(1, 9);
+        let pool = Arc::new(ParPool::new(threads));
         for imp in Implementation::ALL {
-            let m = AnyMatrix::prepare(&a, imp, None).unwrap();
+            let mut plan = SpmvPlan::build(&a, imp, None, pool.clone()).unwrap();
             let mut y = vec![0.0; a.n_rows()];
-            kernels::run(imp, &m, &x, &mut y, threads, &mut ws).unwrap();
+            plan.execute(&x, &mut y).unwrap();
             for (i, (g, w)) in y.iter().zip(&want).enumerate() {
                 assert!(
                     (g - w).abs() <= 1e-9 * (1.0 + w.abs()),
@@ -284,7 +286,7 @@ fn prop_coordinator_random_op_sequences_stay_consistent() {
 fn prop_spmv_linearity() {
     // SpMV is linear: A(αx + βz) = αAx + βAz — catches padding slots that
     // read uninitialised columns.
-    let mut ws = Workspace::new();
+    let pool = Arc::new(ParPool::new(2));
     for_seeds(20, |seed, rng| {
         let a = arbitrary_matrix(rng);
         let (nr, nc) = (a.n_rows(), a.n_cols());
@@ -293,13 +295,13 @@ fn prop_spmv_linearity() {
         let (alpha, beta) = (rng.range_f64(-2.0, 2.0), rng.range_f64(-2.0, 2.0));
         let combo: Vec<f64> = x.iter().zip(&z).map(|(a, b)| alpha * a + beta * b).collect();
         for imp in [Implementation::EllRowInner, Implementation::CooRowOuter] {
-            let m = AnyMatrix::prepare(&a, imp, None).unwrap();
+            let mut plan = SpmvPlan::build(&a, imp, None, pool.clone()).unwrap();
             let mut yx = vec![0.0; nr];
             let mut yz = vec![0.0; nr];
             let mut yc = vec![0.0; nr];
-            kernels::run(imp, &m, &x, &mut yx, 2, &mut ws).unwrap();
-            kernels::run(imp, &m, &z, &mut yz, 2, &mut ws).unwrap();
-            kernels::run(imp, &m, &combo, &mut yc, 2, &mut ws).unwrap();
+            plan.execute(&x, &mut yx).unwrap();
+            plan.execute(&z, &mut yz).unwrap();
+            plan.execute(&combo, &mut yc).unwrap();
             for i in 0..nr {
                 let want = alpha * yx[i] + beta * yz[i];
                 assert!(
