@@ -148,19 +148,21 @@ fn main() {
     // --- 4. Parallel transformation (paper future work), host-measured ---
     println!("\n[4] parallel CRS->ELL / CRS->CCS on host (speedup vs sequential):");
     let spec = spmv_at::matrixgen::spec_by_name("xenon1").unwrap();
-    let a = spmv_at::matrixgen::generate(&spec, common::seed(), 0.2);
-    let t_ell_seq = time_median(1, 5, || {
+    let sc = if common::quick() { 0.05 } else { 0.2 };
+    let a = spmv_at::matrixgen::generate(&spec, common::seed(), sc);
+    let r = common::reps(5);
+    let t_ell_seq = time_median(1, r, || {
         std::hint::black_box(transform::crs_to_ell(&a).ok());
     });
-    let t_ccs_seq = time_median(1, 5, || {
+    let t_ccs_seq = time_median(1, r, || {
         std::hint::black_box(transform::crs_to_ccs(&a));
     });
     let mut t = Table::new(vec!["threads", "ELL speedup", "CCS speedup"]);
     for threads in [1usize, 2, 4] {
-        let t_ell = time_median(1, 5, || {
+        let t_ell = time_median(1, r, || {
             std::hint::black_box(transform::par::crs_to_ell_par(&a, threads).ok());
         });
-        let t_ccs = time_median(1, 5, || {
+        let t_ccs = time_median(1, r, || {
             std::hint::black_box(transform::par::crs_to_ccs_par(&a, threads));
         });
         t.row(vec![

@@ -13,6 +13,11 @@
 //! the empirical crossover — the iteration count where the AUTO path's
 //! cumulative time (transformation included) drops below the plain-CRS
 //! path.
+//!
+//! Part C (measured): `spmm_tile_sweep` — per-SpMV time of the tiled
+//! `execute_many` SpMM at batch k ∈ {1, 4, 16, 64} against looped
+//! single-RHS executes, making the single-pass-per-tile bandwidth win
+//! measurable per PR.
 
 #[path = "common.rs"]
 mod common;
@@ -107,7 +112,8 @@ fn main() {
         let mut t_crs_total = 0.0f64;
         let mut t_auto_total = 0.0f64;
         let mut crossover: Option<usize> = None;
-        for iter in 1..=400usize {
+        let max_iters = if common::quick() { 50 } else { 400 };
+        for iter in 1..=max_iters {
             let t0 = std::time::Instant::now();
             crs.durmv(switches::CRS, &x, &mut y).unwrap();
             t_crs_total += t0.elapsed().as_secs_f64();
@@ -121,7 +127,7 @@ fn main() {
         t.row(vec![
             spec.name.to_string(),
             format!("{:.2}", spec.d_mat),
-            crossover.map_or(">400".to_string(), |c| c.to_string()),
+            crossover.map_or(format!(">{max_iters}"), |c| c.to_string()),
             format!("{:.3}", auto.transform_seconds * 1e3),
         ]);
         json.push(Json::Obj(vec![
@@ -136,5 +142,56 @@ fn main() {
     }
     print!("{}", t.render());
     println!("(AUTO includes the one-off transformation; crossover = amortisation point)");
+
+    // ---- Part C: tiled SpMM sweep on the host ----
+    println!("\n--- host: spmm_tile_sweep (tiled execute_many vs looped execute) ---");
+    let backend = spmv_at::machine::MeasuredBackend::new(
+        if common::quick() { 0 } else { 1 },
+        common::reps(5),
+    );
+    let threads = spmv_at::spmv::pool::configured_threads().clamp(1, 8);
+    let batches: &[usize] = if common::quick() { &[1, 4] } else { &[1, 4, 16, 64] };
+    let mut t = Table::new(vec![
+        "matrix",
+        "imp",
+        "batch k",
+        "looped us/spmv",
+        "tiled us/spmv",
+        "speedup",
+    ]);
+    for (spec, a) in suite.iter().filter(|(s, _)| [2u32, 12].contains(&s.no)) {
+        for imp in [Implementation::CsrRowPar, Implementation::EllRowInner] {
+            let t_single = match backend.spmv_seconds(a, imp, threads) {
+                Ok(t) => t,
+                Err(_) => continue, // e.g. ELL excluded by shape
+            };
+            for &k in batches {
+                let t_tiled = match backend.spmm_seconds_per_rhs(a, imp, threads, k, None) {
+                    Ok(t) => t,
+                    Err(_) => continue,
+                };
+                t.row(vec![
+                    spec.name.to_string(),
+                    imp.to_string(),
+                    k.to_string(),
+                    format!("{:.2}", t_single * 1e6),
+                    format!("{:.2}", t_tiled * 1e6),
+                    format!("{:.2}x", t_single / t_tiled.max(1e-12)),
+                ]);
+                json.push(Json::Obj(vec![
+                    ("machine".into(), Json::Str("host".into())),
+                    ("case".into(), Json::Str("spmm_tile_sweep".into())),
+                    ("matrix".into(), Json::Str(spec.name.into())),
+                    ("imp".into(), Json::Str(imp.name().into())),
+                    ("batch".into(), Json::Num(k as f64)),
+                    ("threads".into(), Json::Num(threads as f64)),
+                    ("looped_seconds_per_spmv".into(), Json::Num(t_single)),
+                    ("tiled_seconds_per_spmv".into(), Json::Num(t_tiled)),
+                ]));
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!("(tiled = one matrix pass per SPMV_AT_BATCH_TILE column tile)");
     common::write_json("amortization", Json::Arr(json));
 }

@@ -2,19 +2,44 @@
 //! criterion; each bench is a `harness = false` main that prints the
 //! paper's table/figure and dumps machine-readable JSON under
 //! `target/bench-results/`).
+//!
+//! **Quick mode** (`--quick` argv flag or `SPMV_AT_QUICK=1`): the CI
+//! bench-smoke job runs every bench in a 1-iteration / reduced-scale mode
+//! so each binary exercises its full code path in seconds. Every JSON
+//! write also rebuilds the combined `target/bench-results/BENCH_pr.json`
+//! (one key per bench), which CI uploads as the per-PR perf-trajectory
+//! artifact.
 
 use spmv_at::formats::Csr;
 use spmv_at::matrixgen::{generate, table1_specs, MatrixSpec};
 use spmv_at::metrics::Json;
 
-/// Suite scale factor: `SPMV_AT_SCALE` env var, default 0.2 (preserves
-/// μ/σ/D_mat; see matrixgen::suite docs).
+/// Whether the bench runs in quick (smoke) mode: `--quick` on the
+/// command line or `SPMV_AT_QUICK=1` in the environment.
+#[allow(dead_code)]
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("SPMV_AT_QUICK").map(|v| v.trim() == "1").unwrap_or(false)
+}
+
+/// Clamp a repetition/iteration count to 1 in quick mode.
+#[allow(dead_code)]
+pub fn reps(full: usize) -> usize {
+    if quick() {
+        1
+    } else {
+        full
+    }
+}
+
+/// Suite scale factor: `SPMV_AT_SCALE` env var, default 0.2 (0.05 in
+/// quick mode; preserves μ/σ/D_mat — see matrixgen::suite docs).
 #[allow(dead_code)]
 pub fn scale() -> f64 {
     std::env::var("SPMV_AT_SCALE")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(0.2)
+        .unwrap_or(if quick() { 0.05 } else { 0.2 })
 }
 
 /// Deterministic suite seed (`SPMV_AT_SEED`, default 42).
@@ -39,7 +64,9 @@ pub fn suite() -> Vec<(MatrixSpec, Csr)> {
         .collect()
 }
 
-/// Write a bench's JSON payload to `target/bench-results/<name>.json`.
+/// Write a bench's JSON payload to `target/bench-results/<name>.json`
+/// and refresh the combined `BENCH_pr.json` (one key per bench file) the
+/// CI bench-smoke job uploads.
 #[allow(dead_code)]
 pub fn write_json(name: &str, payload: Json) {
     let dir = std::path::Path::new("target/bench-results");
@@ -47,6 +74,43 @@ pub fn write_json(name: &str, payload: Json) {
     let path = dir.join(format!("{name}.json"));
     std::fs::write(&path, payload.render()).expect("write bench json");
     println!("\n[json -> {}]", path.display());
+    rebuild_combined(dir);
+}
+
+/// Rebuild `BENCH_pr.json` by stitching every per-bench JSON file in
+/// `dir` into one object `{"<bench>": <payload>, ...}` (the payloads are
+/// already rendered JSON, so plain concatenation stays valid).
+#[allow(dead_code)]
+fn rebuild_combined(dir: &std::path::Path) {
+    let mut names: Vec<String> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let f = e.file_name().to_string_lossy().into_owned();
+                f.strip_suffix(".json")
+                    .filter(|stem| *stem != "BENCH_pr")
+                    .map(str::to_string)
+            })
+            .collect(),
+        Err(_) => return,
+    };
+    names.sort();
+    let mut out = String::from("{\n");
+    let mut first = true;
+    for name in names {
+        let Ok(body) = std::fs::read_to_string(dir.join(format!("{name}.json"))) else {
+            continue;
+        };
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&format!("\"{name}\": {}", body.trim_end()));
+    }
+    out.push_str("\n}\n");
+    let combined = dir.join("BENCH_pr.json");
+    std::fs::write(&combined, out).expect("write combined bench json");
+    println!("[combined -> {}]", combined.display());
 }
 
 /// Standard bench banner.
@@ -54,6 +118,11 @@ pub fn write_json(name: &str, payload: Json) {
 pub fn banner(id: &str, what: &str) {
     println!("================================================================");
     println!("{id}: {what}");
-    println!("scale={} seed={}", scale(), seed());
+    println!(
+        "scale={} seed={}{}",
+        scale(),
+        seed(),
+        if quick() { " (quick mode)" } else { "" }
+    );
     println!("================================================================");
 }

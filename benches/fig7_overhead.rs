@@ -18,7 +18,7 @@ fn main() {
     common::banner("Fig. 7", "TT_ell = t_trans/t_crs at 1 thread");
     let sr = SimulatedBackend::new(ScalarMachine::default());
     let es2 = SimulatedBackend::new(VectorMachine::default());
-    let host = MeasuredBackend::new(0, 3);
+    let host = MeasuredBackend::new(0, common::reps(3));
     let suite = common::suite();
     let imp = Implementation::EllRowOuter;
 

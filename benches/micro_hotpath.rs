@@ -22,11 +22,17 @@ use spmv_at::transform;
 use std::sync::Arc;
 
 fn reps() -> usize {
-    std::env::var("SPMV_AT_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+    std::env::var("SPMV_AT_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if common::quick() { 1 } else { 7 })
 }
 
 fn scale() -> f64 {
-    std::env::var("SPMV_AT_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.05)
+    std::env::var("SPMV_AT_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if common::quick() { 0.02 } else { 0.05 })
 }
 
 /// Representative matrices: near-band (best ELL case), moderate, heavy
@@ -68,7 +74,12 @@ fn bench_transforms(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
     ]
 }
 
-fn bench_kernels(a: &Csr, name: &str, pool: &Arc<ParPool>, json: &mut Vec<Json>) -> Vec<String> {
+fn bench_kernels(
+    a: &Arc<Csr>,
+    name: &str,
+    pool: &Arc<ParPool>,
+    json: &mut Vec<Json>,
+) -> Vec<String> {
     let r = reps();
     let x: Vec<f64> = (0..a.n_cols()).map(|i| 1.0 + (i % 9) as f64 * 0.1).collect();
     let mut y = vec![0.0; a.n_rows()];
@@ -104,7 +115,7 @@ fn bench_kernels(a: &Csr, name: &str, pool: &Arc<ParPool>, json: &mut Vec<Json>)
 /// trivially cheap body (sum a range of `x`) so dispatch dominates at
 /// small `n` and amortises at large `n`.
 fn bench_pool_vs_scoped(json: &mut Vec<Json>) {
-    let r = reps().max(9);
+    let r = if common::quick() { 3 } else { reps().max(9) };
     let threads = configured_threads().clamp(2, 8);
     let pool = ParPool::new(threads);
     println!(
@@ -172,7 +183,7 @@ fn main() {
     ]);
     for name in PICKS {
         let spec = spec_by_name(name).unwrap();
-        let a = generate(&spec, common::seed(), scale());
+        let a = Arc::new(generate(&spec, common::seed(), scale()));
         let mut row = vec![name.to_string()];
         row.extend(bench_kernels(&a, name, &pool1, &mut json));
         kt.row(row);

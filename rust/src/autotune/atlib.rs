@@ -64,12 +64,13 @@ pub fn switch_to_impl(switch: u32) -> Result<Option<Implementation>> {
 }
 
 /// A matrix handle with cached execution plans — the `OpenATI_DURMV`
-/// equivalent. Holds the CRS original plus a [`Planner`]; each
+/// equivalent. Holds the CRS original (shared by `Arc`, so the cached
+/// CRS plans are zero-copy views of it) plus a [`Planner`]; each
 /// implementation that gets exercised materialises one [`SpmvPlan`]
 /// (kept across calls — the run-time transformation happens once and
 /// amortises over iterations).
 pub struct Durmv {
-    crs: Csr,
+    crs: Arc<Csr>,
     planner: Planner,
     plans: Vec<SpmvPlan>,
     /// Cumulative SpMV calls served (amortisation accounting).
@@ -84,7 +85,7 @@ impl Durmv {
     pub fn new(crs: Csr, tuning: TuningData, policy: MemoryPolicy, threads: usize) -> Self {
         let pool = Arc::new(ParPool::new(threads.max(1)));
         Self {
-            crs,
+            crs: Arc::new(crs),
             planner: Planner::new(tuning, policy, pool),
             plans: Vec::new(),
             calls: 0,
@@ -111,18 +112,38 @@ impl Durmv {
             Some(imp) => imp,
             None => self.auto_choice(),
         };
-        self.run_impl(imp, x, y)
+        self.calls += 1;
+        self.plan_mut(imp)?.execute(x, y)
     }
 
-    fn run_impl(&mut self, imp: Implementation, x: &[Value], y: &mut [Value]) -> Result<()> {
-        self.calls += 1;
+    /// Batched `Y = A·X` through the numbered switch: the whole batch is
+    /// served by one cached plan as a tiled SpMM
+    /// ([`SpmvPlan::execute_many`]), streaming the matrix once per column
+    /// tile instead of once per vector.
+    pub fn durmv_many(
+        &mut self,
+        switch: u32,
+        xs: &[Vec<Value>],
+        ys: &mut [Vec<Value>],
+    ) -> Result<()> {
+        let imp = match switch_to_impl(switch)? {
+            Some(imp) => imp,
+            None => self.auto_choice(),
+        };
+        self.calls += xs.len() as u64;
+        self.plan_mut(imp)?.execute_many(xs, ys)
+    }
+
+    /// The cached plan for `imp`, built (and its transformation
+    /// accounted) on first use.
+    fn plan_mut(&mut self, imp: Implementation) -> Result<&mut SpmvPlan> {
         if let Some(pos) = self.plans.iter().position(|p| p.implementation() == imp) {
-            return self.plans[pos].execute(x, y);
+            return Ok(&mut self.plans[pos]);
         }
         let plan = self.planner.plan_for(&self.crs, imp)?;
         self.transform_seconds += plan.transform_seconds();
         self.plans.push(plan);
-        self.plans.last_mut().expect("pushed above").execute(x, y)
+        Ok(self.plans.last_mut().expect("pushed above"))
     }
 }
 
@@ -201,6 +222,26 @@ mod tests {
         h.durmv(switches::AUTO, &x, &mut y).unwrap();
         assert_eq!(h.transform_seconds, t1, "ELL transformation must be paid once");
         assert_eq!(h.calls, 3);
+    }
+
+    #[test]
+    fn durmv_many_matches_looped_durmv_bitwise() {
+        let mut rng = Rng::new(11);
+        let a = banded_circulant(&mut rng, 120, &[-1, 0, 1]);
+        let xs: Vec<Vec<Value>> = (0..5)
+            .map(|k| (0..120).map(|i| ((i + k) as f64 * 0.21).cos()).collect())
+            .collect();
+        let mut looped = Durmv::new(a.clone(), tuning(Some(3.1)), MemoryPolicy::unlimited(), 2);
+        let mut batched = Durmv::new(a, tuning(Some(3.1)), MemoryPolicy::unlimited(), 2);
+        let mut want = vec![vec![0.0; 120]; 5];
+        for (x, y) in xs.iter().zip(want.iter_mut()) {
+            looped.durmv(switches::AUTO, x, y).unwrap();
+        }
+        let mut got = vec![vec![0.0; 120]; 5];
+        batched.durmv_many(switches::AUTO, &xs, &mut got).unwrap();
+        assert_eq!(got, want, "tiled batch must match looped calls bitwise");
+        assert_eq!(batched.calls, 5);
+        assert!(batched.transform_seconds > 0.0, "one transformation for the batch");
     }
 
     #[test]

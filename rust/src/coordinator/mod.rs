@@ -5,33 +5,40 @@
 //!
 //! * the machine's installed **tuning table** (offline-phase output),
 //! * the **memory policy** bounding transformed copies,
-//! * one persistent **worker pool** ([`crate::spmv::pool::ParPool`]) and a
-//!   [`Planner`] that turns registered matrices into cached, reusable
-//!   [`SpmvPlan`]s — every served SpMV executes through a plan, never
-//!   through per-call thread spawns or per-call partitioning,
+//! * **sharded worker pools** ([`shards::PlanShards`]): N independent
+//!   [`crate::spmv::pool::ParPool`]s (N from `SPMV_AT_SHARDS`) with a
+//!   [`shards::ShardedPlanner`] routing each registered matrix to one
+//!   shard by registry key, so batches against different matrices run on
+//!   disjoint workers. Every served SpMV/SpMM executes through a cached,
+//!   reusable [`crate::spmv::SpmvPlan`] — never through per-call thread
+//!   spawns or per-call partitioning,
 //! * a **matrix registry** with per-matrix AT lifecycle state
 //!   ([`registry`]),
 //! * the optional **XLA runtime** so ELL SpMV can execute through the
 //!   AOT-compiled Pallas artifact instead of the native kernel,
 //! * and a channel-served **request loop** ([`server`]) so concurrent
-//!   clients (solvers, benches, the CLI) share one coordinator.
+//!   clients (solvers, benches, the CLI) share one coordinator —
+//!   [`Server::spawn_sharded`] runs one loop per shard so requests for
+//!   matrices on different shards execute concurrently.
 //!
 //! Python never appears here: the tuning table is a text file, the XLA
 //! artifacts are pre-compiled HLO.
 
 pub mod registry;
 pub mod server;
+pub mod shards;
 
 pub use registry::{AtState, EntryStats, MatrixEntry};
 pub use server::{Client, Request, Server, SolverKind};
+pub use shards::{PlanShards, ShardedPlanner};
 
 use crate::autotune::online::{decide, TuningData};
 use crate::autotune::MemoryPolicy;
 use crate::formats::{Csr, FormatKind, SparseMatrix};
 use crate::machine::MatrixShape;
 use crate::runtime::XlaHandle;
-use crate::spmv::pool::{self, ParPool};
-use crate::spmv::{Implementation, Planner};
+use crate::spmv::pool;
+use crate::spmv::Implementation;
 use crate::{Result, Value};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -53,9 +60,11 @@ pub struct CoordinatorConfig {
     pub tuning: TuningData,
     /// Memory policy for transformed copies.
     pub policy: MemoryPolicy,
-    /// Size of the coordinator's worker pool (native parallel kernels and
-    /// parallel transformations).
+    /// Total worker threads, divided between the shards (native parallel
+    /// kernels and parallel transformations).
     pub threads: usize,
+    /// Independent pool shards matrices are routed across.
+    pub shards: usize,
     /// ELL execution preference.
     pub ell_exec: EllExec,
 }
@@ -64,32 +73,42 @@ impl CoordinatorConfig {
     /// Config with an explicit tuning table and defaults elsewhere. The
     /// thread count comes from [`pool::configured_threads`] — the
     /// `SPMV_AT_THREADS` environment variable when set, hardware
-    /// parallelism otherwise.
+    /// parallelism otherwise — and the shard count from
+    /// [`shards::configured_shards`] (`SPMV_AT_SHARDS`, default 1).
     pub fn new(tuning: TuningData) -> Self {
         Self {
             tuning,
             policy: MemoryPolicy::default(),
             threads: pool::configured_threads(),
+            shards: shards::configured_shards(),
             ell_exec: EllExec::Native,
         }
     }
 }
 
 /// The coordinator. Single-threaded state; wrap in [`Server`] for
-/// concurrent access.
+/// concurrent access ([`Server::spawn_sharded`] for one request loop per
+/// shard).
 pub struct Coordinator {
     cfg: CoordinatorConfig,
-    planner: Planner,
+    planner: ShardedPlanner,
     xla: Option<XlaHandle>,
     entries: HashMap<String, MatrixEntry>,
 }
 
 impl Coordinator {
-    /// New coordinator without an XLA runtime. Spawns the worker pool
-    /// (`cfg.threads` wide) that every plan built here executes on.
+    /// New coordinator without an XLA runtime. Spawns `cfg.shards`
+    /// independent worker pools (`cfg.threads` workers divided between
+    /// them) that every plan built here executes on.
     pub fn new(cfg: CoordinatorConfig) -> Self {
-        let pool = Arc::new(ParPool::new(cfg.threads));
-        let planner = Planner::new(cfg.tuning.clone(), cfg.policy, pool);
+        let pools = PlanShards::spread(cfg.shards, cfg.threads);
+        let planner = ShardedPlanner::new(cfg.tuning.clone(), cfg.policy, pools);
+        Self::with_planner(cfg, planner)
+    }
+
+    /// New coordinator over an explicitly built [`ShardedPlanner`] (the
+    /// sharded server hands each per-shard coordinator its own slice).
+    pub fn with_planner(cfg: CoordinatorConfig, planner: ShardedPlanner) -> Self {
         Self { cfg, planner, xla: None, entries: HashMap::new() }
     }
 
@@ -106,14 +125,17 @@ impl Coordinator {
     }
 
     /// Register a matrix under `name`, running the §2.2 online phase
-    /// (compute `D_mat`, compare to `D*`, record the decision) and caching
-    /// the baseline CRS plan. The transformation itself is deferred to the
-    /// first SpMV so registration stays cheap.
+    /// (compute `D_mat`, compare to `D*`, record the decision), routing
+    /// the matrix to its pool shard, and caching the baseline CRS plan
+    /// (a zero-copy `Arc` view of the registered matrix). The
+    /// transformation itself is deferred to the first SpMV so
+    /// registration stays cheap.
     pub fn register(&mut self, name: &str, csr: Csr) -> Result<EntryStats> {
         anyhow::ensure!(
             !self.entries.contains_key(name),
             "matrix '{name}' already registered"
         );
+        let csr = Arc::new(csr);
         let mut decision = decide(&csr, &self.cfg.tuning);
         // Memory policy veto (the OpenATLib policy hook).
         if decision.transform {
@@ -127,11 +149,22 @@ impl Coordinator {
                 decision.chosen = Implementation::CsrSeq;
             }
         }
-        let baseline = self.planner.plan_for(&csr, Implementation::CsrRowPar)?;
-        let entry = MatrixEntry::new(name.to_string(), csr, decision, baseline);
+        let shard = self.planner.shard_of(name);
+        let baseline = self.planner.planner(shard).plan_for(&csr, Implementation::CsrRowPar)?;
+        let entry = MatrixEntry::new(name.to_string(), csr, decision, baseline, shard);
         let stats = entry.stats();
         self.entries.insert(name.to_string(), entry);
         Ok(stats)
+    }
+
+    /// The pool shard a registry key routes to.
+    pub fn shard_of(&self, name: &str) -> usize {
+        self.planner.shard_of(name)
+    }
+
+    /// The sharded planner (observability / tests).
+    pub fn planner(&self) -> &ShardedPlanner {
+        &self.planner
     }
 
     /// Remove a matrix, returning whether it existed.
@@ -161,21 +194,7 @@ impl Coordinator {
             entry.csr.n_cols()
         );
         let mut y = vec![0.0; entry.csr.n_rows()];
-
-        // Trigger the deferred transformation if decided and not yet done.
-        if entry.decision.transform && matches!(entry.state, AtState::Baseline) {
-            match self.planner.plan_for(&entry.csr, entry.decision.chosen) {
-                Ok(plan) => {
-                    let t_trans = plan.transform_seconds();
-                    entry.state = AtState::Transformed { plan, t_trans };
-                }
-                Err(_) => {
-                    // Transformation failed (e.g. ELL overflow): pin to CRS.
-                    entry.decision.transform = false;
-                    entry.decision.chosen = Implementation::CsrSeq;
-                }
-            }
-        }
+        Self::trigger_transform(&self.planner, entry);
 
         let t0 = std::time::Instant::now();
         let transformed = match &mut entry.state {
@@ -208,16 +227,73 @@ impl Coordinator {
         Ok(y)
     }
 
-    /// Batched `Y = A·X` for a registered matrix: `xs` are multiple
-    /// right-hand vectors served under a single routing decision and a
-    /// single transformation trigger — the SpMM-style request shape a
-    /// serving deployment batches into. Returns one output per input.
-    pub fn spmv_batch(&mut self, name: &str, xs: &[Vec<Value>]) -> Result<Vec<Vec<Value>>> {
-        let mut out = Vec::with_capacity(xs.len());
-        for x in xs {
-            out.push(self.spmv(name, x)?);
+    /// Trigger the deferred transformation for `entry` if decided and not
+    /// yet done, building the plan on the entry's shard. On failure
+    /// (e.g. an ELL overflow the predictor missed) the entry is pinned to
+    /// CRS.
+    fn trigger_transform(planner: &ShardedPlanner, entry: &mut MatrixEntry) {
+        if entry.decision.transform && matches!(entry.state, AtState::Baseline) {
+            match planner.planner(entry.shard).plan_for(&entry.csr, entry.decision.chosen) {
+                Ok(plan) => {
+                    let t_trans = plan.transform_seconds();
+                    entry.state = AtState::Transformed { plan, t_trans };
+                }
+                Err(_) => {
+                    entry.decision.transform = false;
+                    entry.decision.chosen = Implementation::CsrSeq;
+                }
+            }
         }
-        Ok(out)
+    }
+
+    /// Batched `Y = A·X` for a registered matrix: `xs` are multiple
+    /// right-hand vectors served under a single routing decision, a
+    /// single transformation trigger, and — the SpMM win — a single
+    /// [`crate::spmv::SpmvPlan::execute_many`] that streams the matrix
+    /// once per column tile instead of once per vector. Returns one
+    /// output per input.
+    ///
+    /// The XLA-preferred ELL path stays single-RHS (the AOT artifact's
+    /// contract is one vector per call) and falls back to looped
+    /// [`Coordinator::spmv`].
+    pub fn spmv_batch(&mut self, name: &str, xs: &[Vec<Value>]) -> Result<Vec<Vec<Value>>> {
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.cfg.ell_exec == EllExec::XlaPreferred && self.xla.is_some() {
+            let mut out = Vec::with_capacity(xs.len());
+            for x in xs {
+                out.push(self.spmv(name, x)?);
+            }
+            return Ok(out);
+        }
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}'"))?;
+        for x in xs {
+            anyhow::ensure!(
+                x.len() == entry.csr.n_cols(),
+                "x length {} != n_cols {}",
+                x.len(),
+                entry.csr.n_cols()
+            );
+        }
+        Self::trigger_transform(&self.planner, entry);
+        let mut ys = vec![vec![0.0; entry.csr.n_rows()]; xs.len()];
+        let t0 = std::time::Instant::now();
+        let transformed = match &mut entry.state {
+            AtState::Baseline => {
+                entry.baseline.execute_many(xs, &mut ys)?;
+                false
+            }
+            AtState::Transformed { plan, .. } => {
+                plan.execute_many(xs, &mut ys)?;
+                true
+            }
+        };
+        entry.record_batch(transformed, xs.len() as u64, t0.elapsed().as_secs_f64());
+        Ok(ys)
     }
 
     /// Per-matrix stats rows, sorted by name.
@@ -340,6 +416,58 @@ mod tests {
         let names: Vec<String> = c.stats().iter().map(|s| s.name.clone()).collect();
         assert_eq!(names, vec!["aa", "zz"]);
         assert_eq!(c.names(), vec!["aa", "zz"]);
+    }
+
+    #[test]
+    fn spmv_batch_is_tiled_and_matches_reference() {
+        let mut rng = Rng::new(9);
+        let a = banded_circulant(&mut rng, 96, &[-1, 0, 1]);
+        let mut c = coord(Some(3.1));
+        c.register("band", a.clone()).unwrap();
+        let xs: Vec<Vec<Value>> = (0..5)
+            .map(|k| (0..96).map(|i| ((i + k) as f64 * 0.23).sin()).collect())
+            .collect();
+        let ys = c.spmv_batch("band", &xs).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 96];
+            a.spmv(x, &mut want);
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9);
+            }
+        }
+        let s = &c.stats()[0];
+        assert_eq!(s.calls, 5);
+        assert_eq!(s.transformed_calls, 5, "one trigger served the whole batch");
+        // Batched and looped serving agree bitwise.
+        let mut c2 = coord(Some(3.1));
+        c2.register("band", a).unwrap();
+        let looped: Vec<Vec<Value>> = xs.iter().map(|x| c2.spmv("band", x).unwrap()).collect();
+        assert_eq!(ys, looped);
+        // Empty batches are a no-op, not an error.
+        assert!(c.spmv_batch("band", &[]).unwrap().is_empty());
+        // Bad widths are rejected.
+        assert!(c.spmv_batch("band", &[vec![0.0; 7]]).is_err());
+    }
+
+    #[test]
+    fn matrices_route_to_distinct_shard_pools() {
+        let mut cfg = CoordinatorConfig::new(tuning(None));
+        cfg.threads = 2;
+        cfg.shards = 2;
+        let mut c = Coordinator::new(cfg);
+        // Find two names on different shards (16 candidates must cover 2).
+        let names: Vec<String> = (0..16).map(|i| format!("m-{i}")).collect();
+        let a = names.iter().find(|n| c.shard_of(n) == 0).unwrap().clone();
+        let b = names.iter().find(|n| c.shard_of(n) == 1).unwrap().clone();
+        c.register(&a, Csr::identity(8)).unwrap();
+        c.register(&b, Csr::identity(8)).unwrap();
+        assert!(!Arc::ptr_eq(
+            c.planner().planner_for(&a).pool(),
+            c.planner().planner_for(&b).pool(),
+        ));
+        let x = vec![1.0; 8];
+        assert_eq!(c.spmv(&a, &x).unwrap(), x, "shard 0 serves correctly");
+        assert_eq!(c.spmv(&b, &x).unwrap(), x, "shard 1 serves correctly");
     }
 
     #[test]

@@ -20,6 +20,7 @@
 use crate::autotune::online::OnlineDecision;
 use crate::formats::Csr;
 use crate::spmv::{Implementation, SpmvPlan};
+use std::sync::Arc;
 
 /// Execution state of one registered matrix.
 pub enum AtState {
@@ -39,12 +40,15 @@ pub enum AtState {
 pub struct MatrixEntry {
     /// Registry key.
     pub name: String,
-    /// The CRS original (always kept — the §2.2 memory-policy default).
-    pub csr: Csr,
+    /// The CRS original (always kept — the §2.2 memory-policy default),
+    /// shared by `Arc` with the baseline plan so CRS serving is zero-copy.
+    pub csr: Arc<Csr>,
     /// The online decision taken at registration.
     pub decision: OnlineDecision,
     /// The cached CRS baseline plan serving the [`AtState::Baseline`] state.
     pub baseline: SpmvPlan,
+    /// The pool shard this matrix's plans build and execute on.
+    pub shard: usize,
     /// Current execution state.
     pub state: AtState,
     /// Total SpMV calls served.
@@ -58,13 +62,21 @@ pub struct MatrixEntry {
 }
 
 impl MatrixEntry {
-    /// New entry in the baseline state, serving through `baseline`.
-    pub fn new(name: String, csr: Csr, decision: OnlineDecision, baseline: SpmvPlan) -> Self {
+    /// New entry in the baseline state, serving through `baseline` on
+    /// pool shard `shard`.
+    pub fn new(
+        name: String,
+        csr: Arc<Csr>,
+        decision: OnlineDecision,
+        baseline: SpmvPlan,
+        shard: usize,
+    ) -> Self {
         Self {
             name,
             csr,
             decision,
             baseline,
+            shard,
             state: AtState::Baseline,
             calls: 0,
             transformed_calls: 0,
@@ -110,14 +122,25 @@ impl MatrixEntry {
 
     /// Record a served call.
     pub fn record_call(&mut self, transformed: bool, seconds: f64) {
-        self.calls += 1;
+        self.record_batch(transformed, 1, seconds);
+    }
+
+    /// Record a batch of `k` calls served in `seconds_total` (one tiled
+    /// SpMM dispatch): the running means absorb `k` samples at the
+    /// per-call average.
+    pub fn record_batch(&mut self, transformed: bool, k: u64, seconds_total: f64) {
+        if k == 0 {
+            return;
+        }
+        let per_call = seconds_total / k as f64;
+        self.calls += k;
         if transformed {
-            self.transformed_calls += 1;
-            let k = self.transformed_calls as f64;
-            self.t_imp_mean += (seconds - self.t_imp_mean) / k;
+            self.transformed_calls += k;
+            let n = self.transformed_calls as f64;
+            self.t_imp_mean += (per_call - self.t_imp_mean) * (k as f64 / n);
         } else {
-            let k = (self.calls - self.transformed_calls) as f64;
-            self.t_crs_mean += (seconds - self.t_crs_mean) / k;
+            let n = (self.calls - self.transformed_calls) as f64;
+            self.t_crs_mean += (per_call - self.t_crs_mean) * (k as f64 / n);
         }
     }
 
@@ -201,7 +224,7 @@ mod tests {
 
     fn crs_plan(n: usize) -> SpmvPlan {
         SpmvPlan::build(
-            &Csr::identity(n),
+            &Arc::new(Csr::identity(n)),
             Implementation::CsrSeq,
             None,
             Arc::new(ParPool::new(1)),
@@ -211,7 +234,7 @@ mod tests {
 
     fn ell_plan(n: usize, t_trans: f64) -> AtState {
         let plan = SpmvPlan::build(
-            &Csr::identity(n),
+            &Arc::new(Csr::identity(n)),
             Implementation::EllRowOuter,
             None,
             Arc::new(ParPool::new(1)),
@@ -221,7 +244,46 @@ mod tests {
     }
 
     fn entry(transform: bool) -> MatrixEntry {
-        MatrixEntry::new("m".into(), Csr::identity(4), decision(transform), crs_plan(4))
+        MatrixEntry::new(
+            "m".into(),
+            Arc::new(Csr::identity(4)),
+            decision(transform),
+            crs_plan(4),
+            0,
+        )
+    }
+
+    #[test]
+    fn baseline_plan_shares_the_registered_matrix() {
+        let csr = Arc::new(Csr::identity(6));
+        let pool = Arc::new(ParPool::new(1));
+        let baseline = SpmvPlan::build(&csr, Implementation::CsrRowPar, None, pool).unwrap();
+        let e = MatrixEntry::new("m".into(), csr.clone(), decision(false), baseline, 0);
+        match e.baseline.matrix() {
+            crate::spmv::AnyMatrix::Csr(shared) => {
+                assert!(Arc::ptr_eq(shared, &csr), "baseline must not clone the CRS");
+            }
+            _ => panic!("baseline must be CRS"),
+        }
+    }
+
+    #[test]
+    fn record_batch_matches_equivalent_single_calls() {
+        let mut a = entry(true);
+        let mut b = entry(true);
+        a.record_call(false, 2e-3);
+        b.record_call(false, 2e-3);
+        // One batch of 4 at 1ms/call vs 4 singles of 1ms.
+        a.record_batch(true, 4, 4e-3);
+        for _ in 0..4 {
+            b.record_call(true, 1e-3);
+        }
+        assert_eq!(a.calls, b.calls);
+        assert_eq!(a.transformed_calls, b.transformed_calls);
+        assert!((a.t_imp_mean - b.t_imp_mean).abs() < 1e-15);
+        // Zero-width batches are ignored.
+        a.record_batch(true, 0, 1.0);
+        assert_eq!(a.calls, b.calls);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Channel-served request loop around [`Coordinator`].
+//! Channel-served request loop around [`Coordinator`] — optionally one
+//! loop **per pool shard**.
 //!
 //! The environment has no async runtime, so the serving layer is a plain
 //! worker thread draining an MPSC queue — the same request/response
@@ -6,8 +7,18 @@
 //! [`Client`] is cheap to clone; every request carries its own response
 //! channel (rendezvous style), so concurrent clients interleave safely
 //! and back-pressure falls out of the bounded queue.
+//!
+//! [`Server::spawn`] runs a single loop over one coordinator (the
+//! pre-sharding behaviour). [`Server::spawn_sharded`] spawns one loop —
+//! and one single-shard [`Coordinator`] with its own
+//! [`crate::spmv::ParPool`] — per configured shard, and the [`Client`]
+//! routes every keyed request with the same [`shards::route_key`] hash
+//! the pools use, so batched SpMM against matrices on different shards
+//! executes concurrently instead of serialising on one pool's job slot.
+//! `Stats` broadcasts and merges.
 
-use super::{Coordinator, EntryStats};
+use super::shards::{self, PlanShards, ShardedPlanner};
+use super::{Coordinator, CoordinatorConfig, EntryStats};
 use crate::formats::Csr;
 use crate::solver::{SolveStats, SolverOptions};
 use crate::{Result, Value};
@@ -101,17 +112,28 @@ pub enum Request {
     Shutdown,
 }
 
-/// Cloneable handle to a running [`Server`].
+/// Cloneable handle to a running [`Server`]: one request queue per shard
+/// loop, keyed requests routed by [`shards::route_key`].
 #[derive(Clone)]
 pub struct Client {
-    tx: mpsc::SyncSender<Request>,
+    txs: Vec<mpsc::SyncSender<Request>>,
 }
 
 impl Client {
-    /// Register a matrix.
+    /// The shard loop serving `name`.
+    fn tx_for(&self, name: &str) -> &mpsc::SyncSender<Request> {
+        &self.txs[shards::route_key(name, self.txs.len()) as usize]
+    }
+
+    /// Number of shard loops behind this client.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Register a matrix (routed to its shard).
     pub fn register(&self, name: &str, csr: Csr) -> Result<EntryStats> {
         let (resp, rx) = mpsc::channel();
-        self.tx
+        self.tx_for(name)
             .send(Request::Register { name: name.into(), csr, resp })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
@@ -120,7 +142,7 @@ impl Client {
     /// `y = A·x`.
     pub fn spmv(&self, name: &str, x: Vec<Value>) -> Result<Vec<Value>> {
         let (resp, rx) = mpsc::channel();
-        self.tx
+        self.tx_for(name)
             .send(Request::Spmv { name: name.into(), x, resp })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
@@ -135,44 +157,50 @@ impl Client {
         opts: SolverOptions,
     ) -> Result<(Vec<Value>, SolveStats)> {
         let (resp, rx) = mpsc::channel();
-        self.tx
+        self.tx_for(name)
             .send(Request::Solve { name: name.into(), b, solver, opts, resp })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
     }
 
-    /// Batched `Y = A·X`.
+    /// Batched `Y = A·X` (tiled SpMM on the matrix's shard).
     pub fn spmv_batch(&self, name: &str, xs: Vec<Vec<Value>>) -> Result<Vec<Vec<Value>>> {
         let (resp, rx) = mpsc::channel();
-        self.tx
+        self.tx_for(name)
             .send(Request::SpmvBatch { name: name.into(), xs, resp })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
     }
 
-    /// Fetch all stats rows.
+    /// Fetch all stats rows (broadcast to every shard, merged and sorted
+    /// by name).
     pub fn stats(&self) -> Result<Vec<EntryStats>> {
-        let (resp, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Stats { resp })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))
+        let mut rows = Vec::new();
+        for tx in &self.txs {
+            let (resp, rx) = mpsc::channel();
+            tx.send(Request::Stats { resp })
+                .map_err(|_| anyhow::anyhow!("server stopped"))?;
+            rows.extend(rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?);
+        }
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(rows)
     }
 
-    /// Evict a matrix.
+    /// Evict a matrix (routed to its shard).
     pub fn evict(&self, name: &str) -> Result<bool> {
         let (resp, rx) = mpsc::channel();
-        self.tx
+        self.tx_for(name)
             .send(Request::Evict { name: name.into(), resp })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))
     }
 }
 
-/// The worker-thread server owning a [`Coordinator`].
+/// The worker-thread server: one loop per shard, each owning a
+/// [`Coordinator`].
 pub struct Server {
-    tx: mpsc::SyncSender<Request>,
-    handle: Option<JoinHandle<Coordinator>>,
+    txs: Vec<mpsc::SyncSender<Request>>,
+    handles: Vec<JoinHandle<Coordinator>>,
 }
 
 /// An adapter letting the solvers run against a coordinator-registered
@@ -201,43 +229,78 @@ impl crate::solver::SpmvOp for CoordOp<'_> {
             .get(&self.name)
             .ok_or_else(|| anyhow::anyhow!("unknown matrix"))?
             .csr;
-        crate::solver::SpmvOp::diagonal(csr)
+        crate::solver::SpmvOp::diagonal(csr.as_ref())
     }
 }
 
 impl Server {
-    /// Spawn the server with a bounded queue of `depth` requests.
+    /// Spawn a single request loop over one coordinator with a bounded
+    /// queue of `depth` requests.
     pub fn spawn(coord: Coordinator, depth: usize) -> (Self, Client) {
-        let (tx, rx) = mpsc::sync_channel::<Request>(depth.max(1));
-        let handle = std::thread::spawn(move || {
-            let mut coord = coord;
-            while let Ok(req) = rx.recv() {
-                match req {
-                    Request::Register { name, csr, resp } => {
-                        let _ = resp.send(coord.register(&name, csr));
-                    }
-                    Request::Spmv { name, x, resp } => {
-                        let _ = resp.send(coord.spmv(&name, &x));
-                    }
-                    Request::Solve { name, b, solver, opts, resp } => {
-                        let _ = resp.send(Self::do_solve(&mut coord, &name, &b, solver, &opts));
-                    }
-                    Request::SpmvBatch { name, xs, resp } => {
-                        let _ = resp.send(coord.spmv_batch(&name, &xs));
-                    }
-                    Request::Stats { resp } => {
-                        let _ = resp.send(coord.stats());
-                    }
-                    Request::Evict { name, resp } => {
-                        let _ = resp.send(coord.evict(&name));
-                    }
-                    Request::Shutdown => break,
+        Self::spawn_loops(vec![coord], depth)
+    }
+
+    /// Spawn one request loop per configured shard: `cfg.shards`
+    /// coordinators, each owning one independent pool (`cfg.threads`
+    /// workers divided between them, remainder spread — see
+    /// [`shards::shard_thread_counts`]), with every keyed request routed
+    /// by [`shards::route_key`]. Requests for matrices on different
+    /// shards execute concurrently.
+    pub fn spawn_sharded(cfg: CoordinatorConfig, depth: usize) -> (Self, Client) {
+        let counts = shards::shard_thread_counts(cfg.threads, cfg.shards);
+        let coords: Vec<Coordinator> = counts
+            .into_iter()
+            .map(|threads| {
+                // Each loop owns a single-shard coordinator over its own
+                // pool; the client's hash does the cross-shard routing.
+                let planner = ShardedPlanner::new(
+                    cfg.tuning.clone(),
+                    cfg.policy,
+                    PlanShards::new(1, threads),
+                );
+                Coordinator::with_planner(cfg.clone(), planner)
+            })
+            .collect();
+        Self::spawn_loops(coords, depth)
+    }
+
+    fn spawn_loops(coords: Vec<Coordinator>, depth: usize) -> (Self, Client) {
+        let mut txs = Vec::with_capacity(coords.len());
+        let mut handles = Vec::with_capacity(coords.len());
+        for coord in coords {
+            let (tx, rx) = mpsc::sync_channel::<Request>(depth.max(1));
+            handles.push(std::thread::spawn(move || Self::serve_loop(coord, &rx)));
+            txs.push(tx);
+        }
+        let client = Client { txs: txs.clone() };
+        (Self { txs, handles }, client)
+    }
+
+    fn serve_loop(mut coord: Coordinator, rx: &mpsc::Receiver<Request>) -> Coordinator {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Register { name, csr, resp } => {
+                    let _ = resp.send(coord.register(&name, csr));
                 }
+                Request::Spmv { name, x, resp } => {
+                    let _ = resp.send(coord.spmv(&name, &x));
+                }
+                Request::Solve { name, b, solver, opts, resp } => {
+                    let _ = resp.send(Self::do_solve(&mut coord, &name, &b, solver, &opts));
+                }
+                Request::SpmvBatch { name, xs, resp } => {
+                    let _ = resp.send(coord.spmv_batch(&name, &xs));
+                }
+                Request::Stats { resp } => {
+                    let _ = resp.send(coord.stats());
+                }
+                Request::Evict { name, resp } => {
+                    let _ = resp.send(coord.evict(&name));
+                }
+                Request::Shutdown => break,
             }
-            coord
-        });
-        let client = Client { tx: tx.clone() };
-        (Self { tx, handle: Some(handle) }, client)
+        }
+        coord
     }
 
     fn do_solve(
@@ -267,21 +330,35 @@ impl Server {
         Ok((x, stats))
     }
 
-    /// Stop the loop and recover the coordinator (with all its state).
-    pub fn shutdown(mut self) -> Coordinator {
-        let _ = self.tx.send(Request::Shutdown);
-        self.handle
-            .take()
-            .expect("shutdown called once")
-            .join()
-            .expect("server thread panicked")
+    /// Stop a single-loop server and recover its coordinator (with all
+    /// its state). Sharded servers use [`Server::shutdown_all`].
+    ///
+    /// # Panics
+    /// Panics if this server runs more than one shard loop.
+    pub fn shutdown(self) -> Coordinator {
+        let mut coords = self.shutdown_all();
+        assert_eq!(coords.len(), 1, "sharded server: use shutdown_all");
+        coords.pop().expect("one coordinator")
+    }
+
+    /// Stop every shard loop and recover the coordinators, in shard order.
+    pub fn shutdown_all(mut self) -> Vec<Coordinator> {
+        for tx in &self.txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        self.handles
+            .drain(..)
+            .map(|h| h.join().expect("server thread panicked"))
+            .collect()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        if let Some(h) = self.handle.take() {
-            let _ = self.tx.send(Request::Shutdown);
+        for tx in &self.txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -381,6 +458,75 @@ mod tests {
             .solve("ghost", vec![1.0], SolverKind::Cg, SolverOptions::default())
             .is_err());
         assert!(!client.evict("ghost").unwrap());
+    }
+
+    #[test]
+    fn sharded_server_routes_and_serves_concurrently() {
+        let tuning = TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        };
+        let mut cfg = CoordinatorConfig::new(tuning);
+        cfg.threads = 2;
+        cfg.shards = 2;
+        let (srv, client) = Server::spawn_sharded(cfg, 16);
+        assert_eq!(client.shards(), 2);
+        // Find two names on different shards.
+        let names: Vec<String> = (0..16).map(|i| format!("m-{i}")).collect();
+        let a = names
+            .iter()
+            .find(|n| crate::coordinator::shards::route_key(n, 2) == 0)
+            .unwrap()
+            .clone();
+        let b = names
+            .iter()
+            .find(|n| crate::coordinator::shards::route_key(n, 2) == 1)
+            .unwrap()
+            .clone();
+        let mut rng = Rng::new(5);
+        let ma = crate::matrixgen::random_csr(&mut rng, 24, 24, 0.2);
+        let mb = crate::matrixgen::random_csr(&mut rng, 24, 24, 0.2);
+        client.register(&a, ma.clone()).unwrap();
+        client.register(&b, mb.clone()).unwrap();
+
+        // Concurrent batched SpMM on both matrices from two client threads.
+        let mut handles = Vec::new();
+        for (name, m) in [(a.clone(), ma), (b.clone(), mb)] {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                use crate::formats::SparseMatrix as _;
+                let xs: Vec<Vec<Value>> = (0..8)
+                    .map(|k| (0..24).map(|i| ((i + k) as f64 * 0.3).sin()).collect())
+                    .collect();
+                for _ in 0..10 {
+                    let ys = c.spmv_batch(&name, xs.clone()).unwrap();
+                    for (x, y) in xs.iter().zip(&ys) {
+                        let mut want = vec![0.0; 24];
+                        m.spmv(x, &mut want);
+                        for (g, w) in y.iter().zip(&want) {
+                            assert!((g - w).abs() < 1e-9, "{name}");
+                        }
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Stats merge across shards, sorted by name.
+        let rows = client.stats().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.windows(2).all(|w| w[0].name <= w[1].name));
+        assert!(rows.iter().all(|r| r.calls == 80));
+        // Both shard coordinators come back, each holding its matrix.
+        let coords = srv.shutdown_all();
+        assert_eq!(coords.len(), 2);
+        let total: usize = coords.iter().map(|c| c.names().len()).sum();
+        assert_eq!(total, 2);
+        assert!(coords[0].names() != coords[1].names());
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Sharded plan serving: N independent worker pools with deterministic
+//! matrix→shard routing.
+//!
+//! A single crate-wide [`ParPool`] serialises every `execute_many` in the
+//! process on one job slot: two clients batching SpMM against *different*
+//! matrices still take turns on the same workers. [`PlanShards`] owns N
+//! independent pools (N from the `SPMV_AT_SHARDS` environment variable,
+//! or explicit configuration) and routes each registry key to one shard
+//! by a stable FNV-1a hash, so plans for different matrices land on
+//! disjoint worker sets and proceed concurrently. [`ShardedPlanner`] puts
+//! one [`Planner`] (same tuning table, same memory policy) over each
+//! shard's pool; the coordinator registers every matrix through
+//! `planner_for(key)` and the sharded server runs one request loop per
+//! shard on top.
+//!
+//! This is also the hook the NUMA roadmap item builds on: pinning each
+//! shard's pool to one socket turns key-routing into locality-routing.
+
+use crate::autotune::online::TuningData;
+use crate::autotune::MemoryPolicy;
+use crate::spmv::pool::ParPool;
+use crate::spmv::Planner;
+use std::sync::Arc;
+
+/// The configured shard count: `SPMV_AT_SHARDS` when set to a positive
+/// integer, else 1 (single-pool serving, the pre-sharding behaviour).
+pub fn configured_shards() -> usize {
+    match std::env::var("SPMV_AT_SHARDS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => 1,
+        },
+        Err(_) => 1,
+    }
+}
+
+/// Split `total_threads` workers across `shards` pools: every shard gets
+/// the floor share, the first `total % shards` shards absorb the
+/// remainder, and no shard drops below one thread (so a shard count
+/// above the thread budget oversubscribes by design rather than
+/// spawning dead pools — pick `SPMV_AT_SHARDS ≤ SPMV_AT_THREADS`).
+pub fn shard_thread_counts(total_threads: usize, shards: usize) -> Vec<usize> {
+    let n = shards.max(1);
+    let base = total_threads / n;
+    let rem = total_threads % n;
+    (0..n).map(|i| (base + usize::from(i < rem)).max(1)).collect()
+}
+
+/// Stable FNV-1a over the registry key — deterministic across processes
+/// (unlike `DefaultHasher`), so a key always lands on the same shard.
+fn fnv1a(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The shard index a registry key routes to among `shards` shards — the
+/// one routing function shared by [`PlanShards`], the sharded server's
+/// client, and anything else that must agree on placement.
+pub fn route_key(key: &str, shards: usize) -> u64 {
+    fnv1a(key) % shards.max(1) as u64
+}
+
+/// N independent worker pools plus the key→shard route.
+pub struct PlanShards {
+    pools: Vec<Arc<ParPool>>,
+}
+
+impl PlanShards {
+    /// `n_shards` pools of `threads_each` workers.
+    pub fn new(n_shards: usize, threads_each: usize) -> Self {
+        let n = n_shards.max(1);
+        let pools = (0..n).map(|_| Arc::new(ParPool::new(threads_each))).collect();
+        Self { pools }
+    }
+
+    /// `n_shards` pools dividing `total_threads` workers between them,
+    /// remainder spread over the leading shards
+    /// (see [`shard_thread_counts`]).
+    pub fn spread(n_shards: usize, total_threads: usize) -> Self {
+        let pools = shard_thread_counts(total_threads, n_shards)
+            .into_iter()
+            .map(|t| Arc::new(ParPool::new(t)))
+            .collect();
+        Self { pools }
+    }
+
+    /// Shards sized from the environment: `SPMV_AT_SHARDS` pools dividing
+    /// `total_threads` workers between them.
+    pub fn from_env(total_threads: usize) -> Self {
+        Self::spread(configured_shards(), total_threads)
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Always false (there is at least one shard).
+    pub fn is_empty(&self) -> bool {
+        self.pools.is_empty()
+    }
+
+    /// The shard a registry key routes to.
+    pub fn route(&self, key: &str) -> usize {
+        route_key(key, self.pools.len()) as usize
+    }
+
+    /// Pool of shard `i`.
+    ///
+    /// # Panics
+    /// Panics if `i >= len()`.
+    pub fn pool(&self, i: usize) -> &Arc<ParPool> {
+        &self.pools[i]
+    }
+
+    /// Pool the key's shard owns.
+    pub fn pool_for(&self, key: &str) -> &Arc<ParPool> {
+        self.pool(self.route(key))
+    }
+}
+
+impl std::fmt::Debug for PlanShards {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanShards")
+            .field("shards", &self.pools.len())
+            .field("threads_each", &self.pools.first().map(|p| p.size()))
+            .finish()
+    }
+}
+
+/// One [`Planner`] per shard, all sharing one tuning table and memory
+/// policy; plans for a key build on (and execute on) the key's shard pool.
+pub struct ShardedPlanner {
+    shards: PlanShards,
+    planners: Vec<Planner>,
+}
+
+impl ShardedPlanner {
+    /// A planner per shard over `shards`.
+    pub fn new(tuning: TuningData, policy: MemoryPolicy, shards: PlanShards) -> Self {
+        let planners = (0..shards.len())
+            .map(|i| Planner::new(tuning.clone(), policy, shards.pool(i).clone()))
+            .collect();
+        Self { shards, planners }
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.planners.len()
+    }
+
+    /// Always false (there is at least one shard).
+    pub fn is_empty(&self) -> bool {
+        self.planners.is_empty()
+    }
+
+    /// The shard a registry key routes to.
+    pub fn shard_of(&self, key: &str) -> usize {
+        self.shards.route(key)
+    }
+
+    /// Planner of shard `i`.
+    ///
+    /// # Panics
+    /// Panics if `i >= len()`.
+    pub fn planner(&self, i: usize) -> &Planner {
+        &self.planners[i]
+    }
+
+    /// The planner serving a registry key.
+    pub fn planner_for(&self, key: &str) -> &Planner {
+        self.planner(self.shard_of(key))
+    }
+
+    /// The underlying pools + route.
+    pub fn shards(&self) -> &PlanShards {
+        &self.shards
+    }
+}
+
+impl std::fmt::Debug for ShardedPlanner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedPlanner").field("shards", &self.shards).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::Implementation;
+
+    fn tuning() -> TuningData {
+        TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        let s = PlanShards::new(4, 1);
+        for key in ["a", "b", "xenon1", "memplus", "m-0", "m-1", "m-2"] {
+            let r = s.route(key);
+            assert!(r < 4);
+            assert_eq!(r, s.route(key), "route must be stable");
+            assert!(Arc::ptr_eq(s.pool_for(key), s.pool(r)));
+        }
+    }
+
+    #[test]
+    fn distinct_keys_spread_over_shards() {
+        let s = PlanShards::new(2, 1);
+        // Some pair among a small key set must land on each shard.
+        let hit: std::collections::HashSet<usize> =
+            (0..16).map(|i| s.route(&format!("m-{i}"))).collect();
+        assert_eq!(hit.len(), 2, "16 keys over 2 shards must hit both");
+    }
+
+    #[test]
+    fn sharded_planner_builds_on_the_routed_pool() {
+        let sp = ShardedPlanner::new(tuning(), MemoryPolicy::unlimited(), PlanShards::new(3, 2));
+        assert_eq!(sp.len(), 3);
+        for key in ["p", "q", "r", "s"] {
+            let shard = sp.shard_of(key);
+            assert!(Arc::ptr_eq(sp.planner_for(key).pool(), sp.shards().pool(shard)));
+        }
+    }
+
+    #[test]
+    fn thread_split_spreads_remainder_and_keeps_every_shard_alive() {
+        assert_eq!(shard_thread_counts(8, 2), vec![4, 4]);
+        // Remainder workers go to the leading shards, none stranded.
+        assert_eq!(shard_thread_counts(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(shard_thread_counts(10, 4).iter().sum::<usize>(), 10);
+        // More shards than threads: every shard stays alive at width 1.
+        assert_eq!(shard_thread_counts(1, 4), vec![1, 1, 1, 1]);
+        assert_eq!(shard_thread_counts(0, 3), vec![1, 1, 1]);
+        assert_eq!(shard_thread_counts(5, 0), vec![5]);
+        let s = PlanShards::spread(4, 10);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.pool(0).size(), 3);
+        assert_eq!(s.pool(3).size(), 2);
+    }
+
+    #[test]
+    fn env_default_is_single_shard() {
+        // SPMV_AT_SHARDS unset in the test environment → 1 shard.
+        if std::env::var("SPMV_AT_SHARDS").is_err() {
+            assert_eq!(configured_shards(), 1);
+            assert_eq!(PlanShards::from_env(4).len(), 1);
+        }
+    }
+}

@@ -7,11 +7,14 @@
 //!
 //! ```text
 //!   serving      coordinator ── registry of MatrixEntry{ decision, plans }
-//!                runtime (XLA/PJRT artifacts)     │
+//!                coordinator::shards — N pools, key-routed matrices,
+//!                runtime (XLA/PJRT artifacts)     │  one server loop/shard
 //!   autotune     offline/online AT phases, D_mat, │D*, memory policy
 //!                        │ decision               │ cached SpmvPlan
 //!   execution    spmv::plan  Planner ──▶ SpmvPlan{ AnyMatrix, partition,
-//!   engine                                         Workspace, pool }
+//!   engine                                         Workspace, pool, tile }
+//!                execute (SpMV) · execute_many (tiled SpMM: one matrix
+//!                pass per SPMV_AT_BATCH_TILE right-hand sides)
 //!                spmv::pool  ParPool — persistent parked workers;
 //!                            the crate's only thread-spawning site
 //!   substrates   formats · transform · spmv kernels · matrixgen · io
@@ -25,22 +28,33 @@
 //! * **The execution engine** — a persistent worker pool
 //!   ([`spmv::pool::ParPool`]: parked workers, no per-call spawning) and
 //!   reusable plans ([`spmv::plan`]): a [`spmv::SpmvPlan`] owns the chosen
-//!   representation, its work partition (computed once) and its workspace,
-//!   so the hot path is allocation- and fork-free. Every layer above —
-//!   the `Durmv` handle, the coordinator, the solvers, the CLI — executes
-//!   through cached plans.
+//!   representation (sharing the CRS original by `Arc`, so baseline plans
+//!   are zero-copy), its work partition (computed once) and its workspace,
+//!   so the hot path is allocation- and fork-free. Batches execute as a
+//!   **tiled SpMM** ([`spmv::SpmvPlan::execute_many`]): every kernel has a
+//!   blocked multi-RHS variant that streams the matrix once per column
+//!   tile, bitwise-identical to looped single executes. Every layer
+//!   above — the `Durmv` handle, the coordinator, the solvers, the CLI —
+//!   executes through cached plans.
 //! * **The paper's contribution** — the auto-tuning engine ([`autotune`]):
 //!   the `D_mat` statistic, the `R_ell` cost ratio, the `D_mat`–`R_ell`
 //!   graph with its `D*` threshold, and the offline/online AT phases.
 //! * **The serving layer** — a PJRT-backed runtime ([`runtime`]) that
 //!   executes AOT-compiled JAX/Pallas SpMV artifacts, and a coordinator
-//!   ([`coordinator`]) that owns matrix lifecycles and routes SpMV requests
-//!   through the online AT decision.
+//!   ([`coordinator`]) that owns matrix lifecycles, routes SpMV requests
+//!   through the online AT decision, and shards plans across independent
+//!   pools ([`coordinator::shards`], `SPMV_AT_SHARDS`) with one server
+//!   loop per shard so batches against different matrices run
+//!   concurrently.
 //!
 //! Thread-count truth lives in one place:
 //! [`spmv::pool::configured_threads`] (the `SPMV_AT_THREADS` environment
 //! variable when set, hardware parallelism otherwise) sizes the global
-//! pool, `CoordinatorConfig::new`, and the CLI defaults.
+//! pool, `CoordinatorConfig::new`, and the CLI defaults; shard-count truth
+//! likewise in [`coordinator::shards::configured_shards`]
+//! (`SPMV_AT_SHARDS`, default 1) and batch-tile truth in
+//! [`spmv::plan::configured_batch_tile`] (`SPMV_AT_BATCH_TILE`, default
+//! sized to the last-level cache).
 //!
 //! Quick start:
 //!

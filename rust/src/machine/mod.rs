@@ -188,6 +188,39 @@ impl MeasuredBackend {
             .or_insert_with(|| Arc::new(ParPool::new(threads)))
             .clone()
     }
+
+    /// Measured **per-SpMV** seconds of a tiled `execute_many` batch of
+    /// `batch` right-hand sides (optionally at a forced tile width) —
+    /// the SpMM counterpart of [`Backend::spmv_seconds`], used by the
+    /// amortisation bench's tile sweep. Dividing the batch wall time by
+    /// `batch` makes the number directly comparable to the single-RHS
+    /// measurement.
+    pub fn spmm_seconds_per_rhs(
+        &self,
+        a: &Csr,
+        imp: Implementation,
+        threads: usize,
+        batch: usize,
+        tile: Option<usize>,
+    ) -> Result<f64> {
+        anyhow::ensure!(threads >= 1, "threads must be >= 1");
+        anyhow::ensure!(batch >= 1, "batch must be >= 1");
+        let mut plan = SpmvPlan::build_ref(a, imp, None, self.pool(threads))?;
+        if let Some(t) = tile {
+            plan.set_batch_tile(t);
+        }
+        let xs: Vec<Vec<Value>> = (0..batch)
+            .map(|j| (0..a.n_cols()).map(|i| 1.0 + ((i + j) % 7) as f64 * 0.125).collect())
+            .collect();
+        let mut ys = vec![vec![0.0; a.n_rows()]; batch];
+        // Prime the workspace outside the timed region.
+        plan.execute_many(&xs, &mut ys)?;
+        let t = crate::metrics::time_median(self.warmup, self.reps, || {
+            plan.execute_many(&xs, &mut ys).expect("kernel run");
+        });
+        std::hint::black_box(&ys);
+        Ok(t / batch as f64)
+    }
 }
 
 impl Backend for MeasuredBackend {
@@ -201,7 +234,7 @@ impl Backend for MeasuredBackend {
 
     fn spmv_seconds(&self, a: &Csr, imp: Implementation, threads: usize) -> Result<f64> {
         anyhow::ensure!(threads >= 1, "threads must be >= 1");
-        let mut plan = SpmvPlan::build(a, imp, None, self.pool(threads))?;
+        let mut plan = SpmvPlan::build_ref(a, imp, None, self.pool(threads))?;
         let x: Vec<Value> = (0..a.n_cols()).map(|i| 1.0 + (i % 7) as f64 * 0.125).collect();
         let mut y = vec![0.0; a.n_rows()];
         // Prime the workspace outside the timed region.
@@ -290,6 +323,11 @@ mod tests {
         let b = MeasuredBackend::new(0, 3);
         let t_crs = b.spmv_seconds(&a, Implementation::CsrSeq, 1).unwrap();
         assert!(t_crs > 0.0);
+        let t_spmm = b
+            .spmm_seconds_per_rhs(&a, Implementation::CsrSeq, 1, 4, Some(4))
+            .unwrap();
+        assert!(t_spmm > 0.0);
+        assert!(b.spmm_seconds_per_rhs(&a, Implementation::CsrSeq, 1, 0, None).is_err());
         let t_tr = b.transform_seconds(&a, Implementation::EllRowInner).unwrap();
         assert!(t_tr > 0.0);
         assert_eq!(

@@ -197,6 +197,8 @@ fn cmd_spmv(args: &Args) -> Result<()> {
     let (name, a) = load_matrix(args, args.parse_usize("seed", 42)? as u64, scale)?;
     let switch: u32 = args.get_or("switch", "0").parse()?;
     let iters = args.parse_usize("iters", 10)?;
+    // Batch width: >1 serves each iteration as one tiled SpMM.
+    let batch = args.parse_usize("batch", 1)?.max(1);
     // SPMV_AT_THREADS (or hardware parallelism) unless --threads overrides.
     let threads = args.parse_usize("threads", configured_threads())?;
     let n = a.n_rows();
@@ -205,19 +207,35 @@ fn cmd_spmv(args: &Args) -> Result<()> {
     if switch == switches::AUTO {
         println!("AUTO choice: {}", h.auto_choice());
     }
-    let x = vec![1.0; ncols];
-    let mut y = vec![0.0; n];
-    let t0 = std::time::Instant::now();
-    for _ in 0..iters {
-        h.durmv(switch, &x, &mut y)?;
+    let checksum;
+    let dt;
+    if batch > 1 {
+        let xs: Vec<Vec<f64>> = (0..batch)
+            .map(|j| (0..ncols).map(|i| 1.0 + ((i + j) % 5) as f64 * 0.25).collect())
+            .collect();
+        let mut ys = vec![vec![0.0; n]; batch];
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            h.durmv_many(switch, &xs, &mut ys)?;
+        }
+        dt = t0.elapsed().as_secs_f64();
+        checksum = ys.iter().flatten().sum::<f64>();
+    } else {
+        let x = vec![1.0; ncols];
+        let mut y = vec![0.0; n];
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            h.durmv(switch, &x, &mut y)?;
+        }
+        dt = t0.elapsed().as_secs_f64();
+        checksum = y.iter().sum::<f64>();
     }
-    let dt = t0.elapsed().as_secs_f64();
     println!(
-        "matrix={name} switch={switch} iters={iters} total={:.4}s per-spmv={:.6}s transform={:.6}s checksum={:.6e}",
+        "matrix={name} switch={switch} iters={iters} batch={batch} total={:.4}s per-spmv={:.6}s transform={:.6}s checksum={:.6e}",
         dt,
-        dt / iters as f64,
+        dt / (iters * batch) as f64,
         h.transform_seconds,
-        y.iter().sum::<f64>()
+        checksum
     );
     Ok(())
 }
@@ -234,7 +252,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --solver"))?;
     let mut cfg = CoordinatorConfig::new(tuning);
     cfg.threads = args.parse_usize("threads", configured_threads())?;
-    let (_srv, client) = Server::spawn(Coordinator::new(cfg), 32);
+    // SPMV_AT_SHARDS (default 1) unless --shards overrides.
+    cfg.shards = args.parse_usize("shards", cfg.shards)?;
+    let (_srv, client) = Server::spawn_sharded(cfg, 32);
     client.register(&name, a)?;
     let b = vec![1.0; n];
     let opts = SolverOptions {
@@ -267,11 +287,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tuning = load_tuning(args)?;
     let mut cfg = CoordinatorConfig::new(tuning);
     cfg.threads = args.parse_usize("threads", configured_threads())?;
-    let mut coord = Coordinator::new(cfg);
-    // Attach XLA runtime if artifacts exist.
+    // SPMV_AT_SHARDS (default 1) unless --shards overrides.
+    cfg.shards = args.parse_usize("shards", cfg.shards)?;
+    // Attach XLA runtime if artifacts exist (XLA serving is single-loop:
+    // the artifact handle is not shared across shard coordinators).
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let mut _xla_service = None;
-    if art.join("manifest.tsv").exists() {
+    let (_srv, client) = if art.join("manifest.tsv").exists() {
+        let mut coord = Coordinator::new(cfg);
         match spmv_at::runtime::XlaService::spawn(art) {
             Ok((svc, handle)) => {
                 println!(
@@ -283,9 +306,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             Err(e) => println!("# XLA runtime unavailable: {e}"),
         }
-    }
-    let (_srv, client) = Server::spawn(coord, 64);
-    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | stats | evict <name> | quit");
+        Server::spawn(coord, 64)
+    } else {
+        println!("# serving {} shard(s), {} thread(s)", cfg.shards.max(1), cfg.threads);
+        Server::spawn_sharded(cfg, 64)
+    };
+    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | spmm <name> <batch> | stats | evict <name> | quit");
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
         let line = line?;
@@ -318,6 +344,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     }
                 }
             }
+            ["spmm", name, batch] => {
+                let k: usize = batch.parse().unwrap_or(0);
+                match client.stats()?.iter().find(|s| &s.name == name) {
+                    None => println!("! unknown matrix {name}"),
+                    Some(_) if k == 0 => println!("! batch must be a positive integer"),
+                    Some(s) => {
+                        let xs: Vec<Vec<f64>> = (0..k)
+                            .map(|j| {
+                                (0..s.n).map(|i| 1.0 + ((i + j) % 5) as f64 * 0.25).collect()
+                            })
+                            .collect();
+                        match client.spmv_batch(name, xs) {
+                            Ok(ys) => println!(
+                                "ok batch={k} checksum={:.6e}",
+                                ys.iter().flatten().sum::<f64>()
+                            ),
+                            Err(e) => println!("! {e}"),
+                        }
+                    }
+                }
+            }
             ["stats"] => {
                 for s in client.stats()? {
                     println!(
@@ -342,9 +389,9 @@ fn usage() -> ! {
          \x20 spmv-at suite --scale 0.05\n\
          \x20 spmv-at offline --backend es2 --scale 0.05 --out tuning-es2.tsv\n\
          \x20 spmv-at decide --tuning tuning-es2.tsv --matrix memplus\n\
-         \x20 spmv-at spmv --matrix chem_master1 --switch 0 --iters 100\n\
+         \x20 spmv-at spmv --matrix chem_master1 --switch 0 --iters 100 --batch 16\n\
          \x20 spmv-at solve --matrix xenon1 --solver cg\n\
-         \x20 spmv-at serve"
+         \x20 spmv-at serve --shards 4"
     );
     std::process::exit(2)
 }

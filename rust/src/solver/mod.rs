@@ -32,6 +32,22 @@ pub trait SpmvOp {
     fn n(&self) -> usize;
     /// `y = A·x`.
     fn apply(&mut self, x: &[Value], y: &mut [Value]) -> Result<()>;
+    /// Batched `ys[j] = A·xs[j]` — multi-RHS workloads (block methods,
+    /// multiple simultaneous systems) funnel through here so operators
+    /// with a blocked SpMM kernel ([`crate::spmv::SpmvPlan`]) stream the
+    /// matrix once per tile. The default loops [`SpmvOp::apply`].
+    fn apply_many(&mut self, xs: &[Vec<Value>], ys: &mut [Vec<Value>]) -> Result<()> {
+        anyhow::ensure!(
+            xs.len() == ys.len(),
+            "batch mismatch: {} inputs vs {} outputs",
+            xs.len(),
+            ys.len()
+        );
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            self.apply(x, y)?;
+        }
+        Ok(())
+    }
     /// Diagonal of A (needed by Jacobi; default extracts lazily = error).
     fn diagonal(&self) -> Result<Vec<Value>> {
         anyhow::bail!("diagonal not available for this operator")
@@ -70,6 +86,10 @@ impl SpmvOp for crate::spmv::SpmvPlan {
     fn apply(&mut self, x: &[Value], y: &mut [Value]) -> Result<()> {
         self.execute(x, y)
     }
+
+    fn apply_many(&mut self, xs: &[Vec<Value>], ys: &mut [Vec<Value>]) -> Result<()> {
+        self.execute_many(xs, ys)
+    }
 }
 
 impl SpmvOp for crate::autotune::atlib::Durmv {
@@ -79,6 +99,10 @@ impl SpmvOp for crate::autotune::atlib::Durmv {
 
     fn apply(&mut self, x: &[Value], y: &mut [Value]) -> Result<()> {
         self.durmv(crate::autotune::atlib::switches::AUTO, x, y)
+    }
+
+    fn apply_many(&mut self, xs: &[Vec<Value>], ys: &mut [Vec<Value>]) -> Result<()> {
+        self.durmv_many(crate::autotune::atlib::switches::AUTO, xs, ys)
     }
 
     fn diagonal(&self) -> Result<Vec<Value>> {
@@ -186,5 +210,22 @@ mod tests {
     fn csr_diagonal_extraction() {
         let a = Csr::from_triplets(3, 3, &[(0, 0, 2.0), (1, 2, 5.0), (2, 2, 7.0)]).unwrap();
         assert_eq!(a.diagonal().unwrap(), vec![2.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn apply_many_default_matches_looped_apply() {
+        let mut a =
+            Csr::from_triplets(3, 3, &[(0, 0, 2.0), (1, 1, 3.0), (2, 0, 1.0), (2, 2, 4.0)])
+                .unwrap();
+        let xs = vec![vec![1.0, 2.0, 3.0], vec![-1.0, 0.5, 0.0]];
+        let mut want = vec![vec![0.0; 3]; 2];
+        for (x, y) in xs.iter().zip(want.iter_mut()) {
+            a.apply(x, y).unwrap();
+        }
+        let mut got = vec![vec![0.0; 3]; 2];
+        a.apply_many(&xs, &mut got).unwrap();
+        assert_eq!(got, want);
+        let mut short = vec![vec![0.0; 3]; 1];
+        assert!(a.apply_many(&xs, &mut short).is_err());
     }
 }

@@ -17,6 +17,7 @@ use crate::spmv::partition::{split_by_nnz, split_even};
 use crate::transform;
 use crate::{Result, Value};
 use std::ops::Range;
+use std::sync::Arc;
 
 /// A named SpMV implementation (paper §3 + baseline + extension).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -128,10 +129,14 @@ impl std::fmt::Display for Implementation {
 }
 
 /// A matrix owned in any of the library's formats.
+///
+/// The CRS arm shares the original through an [`Arc`]: a CRS plan (the
+/// baseline every registered matrix keeps) is a zero-copy view of the
+/// registry's matrix rather than a private clone.
 #[derive(Clone, Debug)]
 pub enum AnyMatrix {
-    /// CRS/CSR.
-    Csr(Csr),
+    /// CRS/CSR, shared with whoever registered the matrix.
+    Csr(Arc<Csr>),
     /// CCS/CSC.
     Csc(Csc),
     /// COO (either order; see [`Coo::order`]).
@@ -148,10 +153,12 @@ pub enum AnyMatrix {
 
 impl AnyMatrix {
     /// Transform a CRS source into whatever `imp` requires, using the
-    /// sequential transformations.
+    /// sequential transformations. The CRS case copies `a`; plan
+    /// construction goes through [`AnyMatrix::prepare_on`] with a shared
+    /// handle instead.
     pub fn prepare(a: &Csr, imp: Implementation, max_bytes: Option<usize>) -> Result<Self> {
         Ok(match imp.required_format() {
-            FormatKind::Csr => AnyMatrix::Csr(a.clone()),
+            FormatKind::Csr => AnyMatrix::Csr(Arc::new(a.clone())),
             FormatKind::Csc => AnyMatrix::Csc(transform::crs_to_ccs(a)),
             FormatKind::CooRow => AnyMatrix::Coo(transform::crs_to_coo_row(a)),
             FormatKind::CooCol => AnyMatrix::Coo(transform::crs_to_coo_col(a)),
@@ -164,15 +171,46 @@ impl AnyMatrix {
 
     /// Transform a CRS source into whatever `imp` requires, running the
     /// parallel transformation pipelines (paper §5 future work) on `pool`
-    /// where one exists. This is the plan-construction path.
+    /// where one exists. This is the plan-construction path; the CRS case
+    /// is zero-copy (it clones the `Arc`, not the matrix).
     pub fn prepare_on(
+        a: &Arc<Csr>,
+        imp: Implementation,
+        max_bytes: Option<usize>,
+        pool: &ParPool,
+    ) -> Result<Self> {
+        match imp.required_format() {
+            FormatKind::Csr => Ok(AnyMatrix::Csr(Arc::clone(a))),
+            _ => Self::transform_on(a, imp, max_bytes, pool),
+        }
+    }
+
+    /// Like [`AnyMatrix::prepare_on`] for a borrowed CRS nobody shares:
+    /// the CRS case copies `a` (pre-`Arc` behaviour), the transformed
+    /// cases never copy the source at all. Throwaway measurement plans
+    /// build through this.
+    pub fn prepare_ref_on(
+        a: &Csr,
+        imp: Implementation,
+        max_bytes: Option<usize>,
+        pool: &ParPool,
+    ) -> Result<Self> {
+        match imp.required_format() {
+            FormatKind::Csr => Ok(AnyMatrix::Csr(Arc::new(a.clone()))),
+            _ => Self::transform_on(a, imp, max_bytes, pool),
+        }
+    }
+
+    /// The non-CRS arms shared by [`AnyMatrix::prepare_on`] and
+    /// [`AnyMatrix::prepare_ref_on`].
+    fn transform_on(
         a: &Csr,
         imp: Implementation,
         max_bytes: Option<usize>,
         pool: &ParPool,
     ) -> Result<Self> {
         Ok(match imp.required_format() {
-            FormatKind::Csr => AnyMatrix::Csr(a.clone()),
+            FormatKind::Csr => AnyMatrix::Csr(Arc::new(a.clone())),
             FormatKind::Csc => AnyMatrix::Csc(transform::par::crs_to_ccs_on(a, pool)),
             FormatKind::CooRow => AnyMatrix::Coo(transform::par::crs_to_coo_row_on(a, pool)),
             FormatKind::CooCol => AnyMatrix::Coo(transform::par::crs_to_coo_col_on(a, pool)),
@@ -188,7 +226,7 @@ impl AnyMatrix {
     /// View as the dynamic [`SparseMatrix`] trait.
     pub fn as_sparse(&self) -> &dyn SparseMatrix {
         match self {
-            AnyMatrix::Csr(m) => m,
+            AnyMatrix::Csr(m) => m.as_ref(),
             AnyMatrix::Csc(m) => m,
             AnyMatrix::Coo(m) => m,
             AnyMatrix::Ell(m) => m,
@@ -273,6 +311,66 @@ pub fn run_on(
     Ok(())
 }
 
+/// Execute implementation `imp` on `m` for a whole **tile** of right-hand
+/// sides (`ys[j] = A·xs[j]`), streaming the matrix arrays once for the
+/// entire tile through the blocked SpMM kernels
+/// ([`super::csr_seq_many`], [`super::csr_row_par_many_on`],
+/// [`super::coo_col_outer_many_on`], [`super::coo_row_outer_many_on`],
+/// [`super::ell_row_inner_many_on`], [`super::ell_row_outer_many_on`]).
+/// The sequential extension formats (BCSR/JDS/HYB) have no blocked kernel
+/// and degrade to one [`run_on`] per right-hand side.
+///
+/// Per right-hand side the accumulation order matches the single-RHS
+/// kernel, so results are bitwise-identical to looped [`run_on`] calls.
+///
+/// # Errors
+/// Returns an error if `m`'s format does not match `imp`'s requirement or
+/// the tile widths differ.
+pub fn run_many_on(
+    imp: Implementation,
+    m: &AnyMatrix,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) -> Result<()> {
+    anyhow::ensure!(
+        xs.len() == ys.len(),
+        "tile mismatch: {} inputs vs {} outputs",
+        xs.len(),
+        ys.len()
+    );
+    if xs.is_empty() {
+        return Ok(());
+    }
+    match (imp, m) {
+        (Implementation::CsrSeq, AnyMatrix::Csr(a)) => super::csr_seq_many(a, xs, ys),
+        (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => {
+            super::csr_row_par_many_on(a, xs, ys, pool, ranges)
+        }
+        (Implementation::CooColOuter, AnyMatrix::Coo(c)) if c.order() == CooOrder::ColMajor => {
+            super::coo_col_outer_many_on(c, xs, ys, pool, ranges, ws)
+        }
+        (Implementation::CooRowOuter, AnyMatrix::Coo(c)) if c.order() == CooOrder::RowMajor => {
+            super::coo_row_outer_many_on(c, xs, ys, pool, ranges, ws)
+        }
+        (Implementation::EllRowInner, AnyMatrix::Ell(e)) => {
+            super::ell_row_inner_many_on(e, xs, ys, pool, ranges)
+        }
+        (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => {
+            super::ell_row_outer_many_on(e, xs, ys, pool, ranges, ws)
+        }
+        // No blocked kernel: stream the matrix once per right-hand side.
+        _ => {
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                run_on(imp, m, x, y, pool, ranges, ws)?;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Execute implementation `imp` on `m` at `n_threads`-way parallelism,
 /// partitioning on the fly and running on the global pool (compatibility
 /// wrapper around [`run_on`]).
@@ -338,7 +436,7 @@ mod tests {
     #[test]
     fn prepare_on_matches_sequential_prepare() {
         let mut rng = Rng::new(6);
-        let a = random_csr(&mut rng, 50, 50, 0.12);
+        let a = Arc::new(random_csr(&mut rng, 50, 50, 0.12));
         let pool = ParPool::new(3);
         let x: Vec<Value> = (0..50).map(|i| (i as f64 * 0.7).sin()).collect();
         let mut want = vec![0.0; 50];
@@ -359,11 +457,31 @@ mod tests {
     #[test]
     fn run_rejects_format_mismatch() {
         let a = Csr::identity(4);
-        let m = AnyMatrix::Csr(a);
+        let m = AnyMatrix::Csr(Arc::new(a));
         let x = vec![1.0; 4];
         let mut y = vec![0.0; 4];
         let mut ws = Workspace::new();
         assert!(run(Implementation::EllRowInner, &m, &x, &mut y, 1, &mut ws).is_err());
+        let xs = [x.as_slice()];
+        let mut y2 = vec![0.0; 4];
+        let mut ys = [y2.as_mut_slice()];
+        let pool = ParPool::new(1);
+        let imp = Implementation::EllRowInner;
+        let r = run_many_on(imp, &m, &xs, &mut ys, &pool, &[], &mut ws);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn prepare_on_shares_the_crs_original() {
+        let a = Arc::new(Csr::identity(16));
+        let pool = ParPool::new(1);
+        let m = AnyMatrix::prepare_on(&a, Implementation::CsrRowPar, None, &pool).unwrap();
+        match &m {
+            AnyMatrix::Csr(shared) => {
+                assert!(Arc::ptr_eq(shared, &a), "CRS plans must be zero-copy");
+            }
+            other => panic!("expected CRS, got {:?}", other.kind()),
+        }
     }
 
     #[test]

@@ -27,11 +27,21 @@
 //!   coordinator, the solvers and the CLI all execute through cached
 //!   plans.
 //!
-//! The per-thread accumulation buffers (`YY(1:n, 1:threads)` in the paper)
-//! live in a reusable [`Workspace`] so the hot path performs no allocation
-//! after the first call. The serial reduction of the paper's listings
-//! ("we do not parallelize this part") is replaced by a pairwise tree
-//! reduction over the pool, parallel across row ranges.
+//! Every kernel also has a **blocked multi-RHS (SpMM) variant**
+//! (`*_many_on`, dispatched through [`kernels::run_many_on`]): a tile of
+//! right-hand sides is served by a single pass over the matrix arrays,
+//! with the per-RHS accumulation order unchanged — so a tiled batch is
+//! bitwise-identical to looped single executes while streaming the
+//! matrix ⌈k/tile⌉ times instead of k. [`plan::SpmvPlan::execute_many`]
+//! does the tiling (`SPMV_AT_BATCH_TILE`); the coordinator's batch
+//! requests and the `Durmv` handle's `durmv_many` ride on it.
+//!
+//! The per-thread accumulation buffers (`YY(1:n, 1:threads)` in the paper,
+//! widened to `n × tile` blocks for SpMM) live in a reusable [`Workspace`]
+//! so the hot path performs no allocation after the first call. The
+//! serial reduction of the paper's listings ("we do not parallelize this
+//! part") is replaced by a pairwise tree reduction over the pool,
+//! parallel across row ranges.
 
 pub mod kernels;
 pub mod partition;
@@ -158,7 +168,10 @@ fn coo_outer_on(
 
 /// Reduce `k` private copies `yy[t*n..(t+1)*n]` into `y`, as a pairwise
 /// tree (`stride = 1, 2, 4, …`) executed over the pool, parallel across
-/// disjoint row ranges. Overwrites `y` entirely.
+/// disjoint row ranges. Overwrites `y` entirely. This is exactly the
+/// single-RHS case of [`reduce_yy_tree_many`] (`b = 1` makes the block
+/// offsets `t*n*b + 0*n` collapse to `t*n`), so it delegates — one copy
+/// of the raw-pointer tree to keep correct.
 pub(crate) fn reduce_yy_tree(
     pool: &ParPool,
     yy: &mut [Value],
@@ -166,39 +179,7 @@ pub(crate) fn reduce_yy_tree(
     n: usize,
     k: usize,
 ) {
-    debug_assert!(yy.len() >= n * k);
-    debug_assert_eq!(y.len(), n);
-    if n == 0 {
-        return;
-    }
-    let row_ranges = split_even(n, pool.size());
-    let yyp = SendPtr(yy.as_mut_ptr());
-    let yp = SendPtr(y.as_mut_ptr());
-    pool.run_chunks(&row_ranges, |_tid, r| {
-        // Rows are independent, so each chunk runs the whole tree over its
-        // own row range with no barrier between levels.
-        let mut stride = 1usize;
-        while stride < k {
-            let mut t = 0usize;
-            while t + stride < k {
-                unsafe {
-                    let dst = yyp.get().add(t * n);
-                    let src = yyp.get().add((t + stride) * n) as *const Value;
-                    for i in r.clone() {
-                        *dst.add(i) += *src.add(i);
-                    }
-                }
-                t += 2 * stride;
-            }
-            stride *= 2;
-        }
-        unsafe {
-            let src = yyp.get() as *const Value;
-            for i in r.clone() {
-                *yp.get().add(i) = *src.add(i);
-            }
-        }
-    });
+    reduce_yy_tree_many(pool, yy, &mut [y], n, 1, k);
 }
 
 /// Fig. 1 — outer-loop parallel SpMV over the **column-major** COO stream,
@@ -330,6 +311,282 @@ pub fn ell_row_outer(e: &Ell, x: &[Value], y: &mut [Value], n_threads: usize, ws
     ell_row_outer_on(e, x, y, &pool::global(), &ranges, ws);
 }
 
+// ---- Blocked multi-RHS (SpMM) kernels ----
+//
+// Each `*_many_on` kernel computes `ys[j] = A·xs[j]` for a whole tile of
+// right-hand sides while streaming the matrix arrays **once**: the outer
+// loops walk the matrix exactly as the single-RHS kernel does, and only
+// the innermost accumulation fans out over the tile. Per right-hand side
+// the floating-point accumulation order is identical to the single-RHS
+// kernel, so a tiled batch is bitwise-identical to looped single
+// executes. When the precomputed partition is degenerate
+// (`ranges.len() <= 1`) each kernel falls back to the same serial path
+// the single-RHS kernel uses, per right-hand side, preserving that
+// bitwise identity.
+
+fn assert_tile(xs: &[&[Value]], ys: &[&mut [Value]], n_cols: usize, n_rows: usize) {
+    assert_eq!(xs.len(), ys.len(), "tile width");
+    for x in xs {
+        assert_eq!(x.len(), n_cols, "x length");
+    }
+    for y in ys.iter() {
+        assert_eq!(y.len(), n_rows, "y length");
+    }
+}
+
+/// Sequential CRS SpMM: one pass over the CRS arrays serves every
+/// right-hand side in the tile (the multi-RHS form of [`csr_seq`]).
+pub fn csr_seq_many(a: &Csr, xs: &[&[Value]], ys: &mut [&mut [Value]]) {
+    assert_tile(xs, ys, a.n_cols(), a.n_rows());
+    for i in 0..a.n_rows() {
+        for y in ys.iter_mut() {
+            y[i] = 0.0;
+        }
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            let v = a.values[k];
+            let c = a.col_idx[k] as usize;
+            for (y, x) in ys.iter_mut().zip(xs) {
+                y[i] += v * x[c];
+            }
+        }
+    }
+}
+
+/// Row-parallel CRS SpMM over precomputed nnz-balanced row ranges: each
+/// chunk streams its rows once and writes the same disjoint row slice of
+/// every output in the tile.
+pub fn csr_row_par_many_on(
+    a: &Csr,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+) {
+    assert_tile(xs, ys, a.n_cols(), a.n_rows());
+    if ranges.len() <= 1 {
+        // Same serial path as the single-RHS kernel, per right-hand side.
+        for (y, x) in ys.iter_mut().zip(xs) {
+            csr_seq(a, x, y);
+        }
+        return;
+    }
+    let yps: Vec<SendPtr<Value>> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
+    pool.run_chunks(ranges, |_tid, r| {
+        for i in r {
+            // Row ranges are disjoint: each ys[j][i] has exactly one writer.
+            for yp in &yps {
+                unsafe { *yp.get().add(i) = 0.0 };
+            }
+            for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+                let v = a.values[k];
+                let c = a.col_idx[k] as usize;
+                for (yp, x) in yps.iter().zip(xs) {
+                    unsafe { *yp.get().add(i) += v * x[c] };
+                }
+            }
+        }
+    });
+}
+
+/// Shared multi-RHS body of Figs. 1 and 2: each chunk streams its entry
+/// range once, accumulating into a private `n × tile` block of `YY`, then
+/// the pairwise tree reduction runs per right-hand side.
+fn coo_outer_many_on(
+    c: &Coo,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
+    assert_tile(xs, ys, c.n_cols(), c.n_rows());
+    let n = c.n_rows();
+    let b = xs.len();
+    if ranges.len() <= 1 {
+        for (y, x) in ys.iter_mut().zip(xs) {
+            c.spmv(x, y);
+        }
+        return;
+    }
+    let k = ranges.len();
+    let yy = ws.yy(n * b, k);
+    let yyp = SendPtr(yy.as_mut_ptr());
+    pool.run_chunks(ranges, |tid, r| {
+        // Chunk `tid` owns the disjoint block yy[tid*n*b .. (tid+1)*n*b];
+        // right-hand side `j` lives at offset j*n inside it.
+        let block = unsafe { std::slice::from_raw_parts_mut(yyp.get().add(tid * n * b), n * b) };
+        for e in r {
+            let row = c.row_idx[e] as usize;
+            let col = c.col_idx[e] as usize;
+            let v = c.values[e];
+            for (j, x) in xs.iter().enumerate() {
+                block[j * n + row] += v * x[col];
+            }
+        }
+    });
+    reduce_yy_tree_many(pool, yy, ys, n, b, k);
+}
+
+/// Reduce `k` private `n × b` blocks `yy[t*n*b..(t+1)*n*b]` into the `b`
+/// outputs, as the same pairwise tree [`reduce_yy_tree`] runs — per
+/// right-hand side, so each output's summation order matches the
+/// single-RHS reduction bitwise. Overwrites every `ys[j]` entirely.
+pub(crate) fn reduce_yy_tree_many(
+    pool: &ParPool,
+    yy: &mut [Value],
+    ys: &mut [&mut [Value]],
+    n: usize,
+    b: usize,
+    k: usize,
+) {
+    debug_assert!(yy.len() >= n * b * k);
+    debug_assert_eq!(ys.len(), b);
+    if n == 0 || b == 0 {
+        return;
+    }
+    let row_ranges = split_even(n, pool.size());
+    let yyp = SendPtr(yy.as_mut_ptr());
+    let yps: Vec<SendPtr<Value>> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
+    pool.run_chunks(&row_ranges, |_tid, r| {
+        for (j, yp) in yps.iter().enumerate() {
+            let mut stride = 1usize;
+            while stride < k {
+                let mut t = 0usize;
+                while t + stride < k {
+                    unsafe {
+                        let dst = yyp.get().add(t * n * b + j * n);
+                        let src = yyp.get().add((t + stride) * n * b + j * n) as *const Value;
+                        for i in r.clone() {
+                            *dst.add(i) += *src.add(i);
+                        }
+                    }
+                    t += 2 * stride;
+                }
+                stride *= 2;
+            }
+            unsafe {
+                let src = yyp.get().add(j * n) as *const Value;
+                for i in r.clone() {
+                    *yp.get().add(i) = *src.add(i);
+                }
+            }
+        }
+    });
+}
+
+/// Fig. 1, blocked: multi-RHS SpMM over the **column-major** COO stream.
+///
+/// # Panics
+/// Panics if `c` is not column-major ordered.
+pub fn coo_col_outer_many_on(
+    c: &Coo,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
+    assert_eq!(c.order(), CooOrder::ColMajor, "Fig. 1 requires COO-Column data");
+    coo_outer_many_on(c, xs, ys, pool, ranges, ws);
+}
+
+/// Fig. 2, blocked: multi-RHS SpMM over the **row-major** COO stream.
+///
+/// # Panics
+/// Panics if `c` is not row-major ordered.
+pub fn coo_row_outer_many_on(
+    c: &Coo,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
+    assert_eq!(c.order(), CooOrder::RowMajor, "Fig. 2 requires COO-Row data");
+    coo_outer_many_on(c, xs, ys, pool, ranges, ws);
+}
+
+/// Fig. 3, blocked: each chunk owns a contiguous row range and streams
+/// every band over it once, fanning the padded entry out to the whole
+/// tile of right-hand sides.
+pub fn ell_row_inner_many_on(
+    e: &Ell,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+) {
+    assert_tile(xs, ys, e.n_cols(), e.n_rows());
+    let n = e.n_rows();
+    if ranges.len() <= 1 {
+        for (y, x) in ys.iter_mut().zip(xs) {
+            e.spmv(x, y);
+        }
+        return;
+    }
+    let yps: Vec<SendPtr<Value>> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
+    pool.run_chunks(ranges, |_tid, r| {
+        let (lo, hi) = (r.start, r.end);
+        // Row ranges are disjoint: this chunk is rows lo..hi's only writer.
+        for yp in &yps {
+            let chunk = unsafe { std::slice::from_raw_parts_mut(yp.get().add(lo), hi - lo) };
+            chunk.fill(0.0);
+        }
+        for k in 0..e.bandwidth {
+            let base = k * n;
+            let vals = &e.values[base + lo..base + hi];
+            let cols = &e.col_idx[base + lo..base + hi];
+            for i in 0..hi - lo {
+                let v = vals[i];
+                let c = cols[i] as usize;
+                for (yp, x) in yps.iter().zip(xs) {
+                    unsafe { *yp.get().add(lo + i) += v * x[c] };
+                }
+            }
+        }
+    });
+}
+
+/// Fig. 4, blocked: each chunk streams its band range once into a private
+/// `n × tile` block of `YY`, followed by the per-RHS tree reduction.
+pub fn ell_row_outer_many_on(
+    e: &Ell,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
+    assert_tile(xs, ys, e.n_cols(), e.n_rows());
+    let n = e.n_rows();
+    let b = xs.len();
+    if ranges.len() <= 1 {
+        for (y, x) in ys.iter_mut().zip(xs) {
+            e.spmv(x, y);
+        }
+        return;
+    }
+    let k = ranges.len();
+    let yy = ws.yy(n * b, k);
+    let yyp = SendPtr(yy.as_mut_ptr());
+    pool.run_chunks(ranges, |tid, r| {
+        let block = unsafe { std::slice::from_raw_parts_mut(yyp.get().add(tid * n * b), n * b) };
+        for band in r {
+            let base = band * n;
+            let vals = &e.values[base..base + n];
+            let cols = &e.col_idx[base..base + n];
+            for i in 0..n {
+                let v = vals[i];
+                let c = cols[i] as usize;
+                for (j, x) in xs.iter().enumerate() {
+                    block[j * n + i] += v * x[c];
+                }
+            }
+        }
+    });
+    reduce_yy_tree_many(pool, yy, ys, n, b, k);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -454,6 +711,92 @@ mod tests {
         let mut ws = Workspace::new();
         ell_row_outer(&ell, &x, &mut y, 8, &mut ws);
         assert_close(&y, &want);
+    }
+
+    #[test]
+    fn blocked_kernels_match_looped_single_rhs_bitwise() {
+        let pool = ParPool::new(3);
+        let mut ws = Workspace::new();
+        for a in cases() {
+            let (nr, nc) = (a.n_rows(), a.n_cols());
+            let b = 3usize;
+            let xs_own: Vec<Vec<Value>> = (0..b)
+                .map(|j| (0..nc).map(|i| ((i * 3 + j + 1) as f64 * 0.41).sin()).collect())
+                .collect();
+            let xs: Vec<&[Value]> = xs_own.iter().map(|v| v.as_slice()).collect();
+            let ell = crs_to_ell(&a).unwrap();
+            let coo_r = crs_to_coo_row(&a);
+            let coo_c = crs_to_coo_col(&a);
+
+            // Reference: looped single-RHS kernels with the same partitions.
+            let run_single = |f: &mut dyn FnMut(&[Value], &mut [Value])| -> Vec<Vec<Value>> {
+                xs_own
+                    .iter()
+                    .map(|x| {
+                        let mut y = vec![0.0; nr];
+                        f(x, &mut y);
+                        y
+                    })
+                    .collect()
+            };
+            let run_many =
+                |f: &mut dyn FnMut(&[&[Value]], &mut [&mut [Value]])| -> Vec<Vec<Value>> {
+                    let mut ys_own = vec![vec![0.0; nr]; b];
+                    let mut ys: Vec<&mut [Value]> =
+                        ys_own.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    f(&xs, &mut ys);
+                    ys_own
+                };
+
+            let got = run_many(&mut |xs, ys| csr_seq_many(&a, xs, ys));
+            assert_eq!(got, run_single(&mut |x, y| csr_seq(&a, x, y)), "csr_seq_many");
+
+            let r_csr = split_by_nnz(&a.row_ptr, 3);
+            let got = run_many(&mut |xs, ys| csr_row_par_many_on(&a, xs, ys, &pool, &r_csr));
+            assert_eq!(
+                got,
+                run_single(&mut |x, y| csr_row_par_on(&a, x, y, &pool, &r_csr)),
+                "csr_row_par_many_on"
+            );
+
+            let r_ell_in = split_even(ell.n_rows(), 3);
+            let got =
+                run_many(&mut |xs, ys| ell_row_inner_many_on(&ell, xs, ys, &pool, &r_ell_in));
+            assert_eq!(
+                got,
+                run_single(&mut |x, y| ell_row_inner_on(&ell, x, y, &pool, &r_ell_in)),
+                "ell_row_inner_many_on"
+            );
+
+            let r_ell_out = split_even(ell.bandwidth, 3);
+            let got = run_many(&mut |xs, ys| {
+                ell_row_outer_many_on(&ell, xs, ys, &pool, &r_ell_out, &mut ws)
+            });
+            assert_eq!(
+                got,
+                run_single(&mut |x, y| ell_row_outer_on(&ell, x, y, &pool, &r_ell_out, &mut ws)),
+                "ell_row_outer_many_on"
+            );
+
+            let r_coo = split_even(coo_r.nnz(), 3);
+            let got = run_many(&mut |xs, ys| {
+                coo_row_outer_many_on(&coo_r, xs, ys, &pool, &r_coo, &mut ws)
+            });
+            assert_eq!(
+                got,
+                run_single(&mut |x, y| coo_row_outer_on(&coo_r, x, y, &pool, &r_coo, &mut ws)),
+                "coo_row_outer_many_on"
+            );
+
+            let got = run_many(&mut |xs, ys| {
+                coo_col_outer_many_on(&coo_c, xs, ys, &pool, &r_coo, &mut ws)
+            });
+            assert_eq!(
+                got,
+                run_single(&mut |x, y| coo_col_outer_on(&coo_c, x, y, &pool, &r_coo, &mut ws)),
+                "coo_col_outer_many_on"
+            );
+        }
     }
 
     #[test]

@@ -16,6 +16,16 @@
 //! `Durmv` handle, the coordinator registry, the solvers and the CLI all
 //! build and cache plans here instead of hand-rolling the
 //! decide→transform→kernel→workspace pipeline.
+//!
+//! [`SpmvPlan::execute_many`] is a true blocked SpMM: the batch of
+//! right-hand sides is tiled into column blocks (`SPMV_AT_BATCH_TILE`,
+//! defaulting to a width whose `x`/`y` columns — plus, for the
+//! YY-reduction kernels, their per-chunk private copies — fit in the
+//! last-level cache) and each tile streams the matrix **once** through the
+//! multi-RHS kernels — ⌈k/tile⌉ matrix passes for a batch of `k` instead
+//! of `k`, observable through [`SpmvPlan::matrix_passes`] and the pool's
+//! dispatch counters. Plans share the CRS original by `Arc`, so the CRS
+//! baseline plan every registered matrix keeps is zero-copy.
 
 use super::kernels::{self, AnyMatrix};
 use super::pool::{self, ParPool};
@@ -27,6 +37,51 @@ use crate::machine::MatrixShape;
 use crate::{Result, Value};
 use std::ops::Range;
 use std::sync::Arc;
+
+/// The batch-tile width for blocked SpMM: the `SPMV_AT_BATCH_TILE`
+/// environment variable when set to a positive integer, else a width
+/// chosen so one tile's per-RHS working set (`rows_per_rhs` output/
+/// scratch rows plus an `x` column) fits in a conservative
+/// last-level-cache budget (the matrix stream then misses cache at most
+/// once per tile, which is the whole point of blocking). For the
+/// direct-output kernels `rows_per_rhs` is just `n_rows`; the
+/// YY-reduction kernels pass their private-copy footprint so the
+/// workspace the tile allocates is counted too.
+pub fn configured_batch_tile(rows_per_rhs: usize, n_cols: usize) -> usize {
+    if let Ok(s) = std::env::var("SPMV_AT_BATCH_TILE") {
+        if let Ok(t) = s.trim().parse::<usize>() {
+            if t >= 1 {
+                return t;
+            }
+        }
+    }
+    default_batch_tile(rows_per_rhs, n_cols)
+}
+
+/// Default tile width: as many RHS columns as fit in half of an assumed
+/// 32 MiB LLC, clamped to [1, 32]. The `.max(1)` divisor guard keeps the
+/// empty-matrix degenerate case (0 rows, 0 cols) from dividing by zero —
+/// it clamps to the top of the range.
+fn default_batch_tile(rows_per_rhs: usize, n_cols: usize) -> usize {
+    const LLC_BUDGET_BYTES: usize = 16 << 20;
+    let bytes_per_rhs = (rows_per_rhs + n_cols).max(1) * std::mem::size_of::<Value>();
+    (LLC_BUDGET_BYTES / bytes_per_rhs).clamp(1, 32)
+}
+
+/// Rows of output/scratch one right-hand side costs `imp` per tile: the
+/// YY-reduction kernels (COO outer, ELL outer) keep one private `y` copy
+/// per chunk on top of the output itself, so their tile must shrink with
+/// the partition width or one `execute_many` call grows the workspace to
+/// `n_rows × tile × chunks` values — past any cache budget and retained
+/// for the plan's lifetime.
+fn rows_per_rhs_for(imp: Implementation, n_rows: usize, n_chunks: usize) -> usize {
+    match imp {
+        Implementation::CooColOuter
+        | Implementation::CooRowOuter
+        | Implementation::EllRowOuter => n_rows * (n_chunks.max(1) + 1),
+        _ => n_rows,
+    }
+}
 
 /// An executable SpMV plan: chosen representation + partition + workspace
 /// + pool, built once and replayed per call.
@@ -40,27 +95,56 @@ pub struct SpmvPlan {
     n_cols: usize,
     transform_seconds: f64,
     calls: u64,
+    batch_tile: usize,
+    matrix_passes: u64,
 }
 
 impl SpmvPlan {
     /// Build a plan executing `imp` for `csr` on `pool`. The (possibly
     /// parallel) transformation runs here, once; `max_bytes` bounds ELL
-    /// storage (the §2.2 memory-policy hook).
+    /// storage (the §2.2 memory-policy hook). CRS plans share `csr`
+    /// zero-copy; transformed plans own their converted data.
     pub fn build(
-        csr: &Csr,
+        csr: &Arc<Csr>,
         imp: Implementation,
         max_bytes: Option<usize>,
         pool: Arc<ParPool>,
     ) -> Result<Self> {
         let t0 = std::time::Instant::now();
         let matrix = AnyMatrix::prepare_on(csr, imp, max_bytes, &pool)?;
+        Ok(Self::assemble(csr, imp, matrix, t0, pool))
+    }
+
+    /// Like [`SpmvPlan::build`] for a borrowed CRS nobody shares: the CRS
+    /// case clones it, the transformed cases never copy the source. The
+    /// measurement backend builds its throwaway plans here so sweeping
+    /// t_imp across implementations does not pay a matrix copy per cell.
+    pub fn build_ref(
+        csr: &Csr,
+        imp: Implementation,
+        max_bytes: Option<usize>,
+        pool: Arc<ParPool>,
+    ) -> Result<Self> {
+        let t0 = std::time::Instant::now();
+        let matrix = AnyMatrix::prepare_ref_on(csr, imp, max_bytes, &pool)?;
+        Ok(Self::assemble(csr, imp, matrix, t0, pool))
+    }
+
+    fn assemble(
+        csr: &Csr,
+        imp: Implementation,
+        matrix: AnyMatrix,
+        t0: std::time::Instant,
+        pool: Arc<ParPool>,
+    ) -> Self {
         let transform_seconds = if imp.needs_transform() {
             t0.elapsed().as_secs_f64()
         } else {
             0.0
         };
         let ranges = kernels::partition_for(imp, &matrix, pool.size());
-        Ok(Self {
+        let rows_per_rhs = rows_per_rhs_for(imp, csr.n_rows(), ranges.len());
+        Self {
             imp,
             matrix,
             ranges,
@@ -70,7 +154,9 @@ impl SpmvPlan {
             n_cols: csr.n_cols(),
             transform_seconds,
             calls: 0,
-        })
+            batch_tile: configured_batch_tile(rows_per_rhs, csr.n_cols()),
+            matrix_passes: 0,
+        }
     }
 
     /// `y = A·x` through the planned kernel.
@@ -91,12 +177,17 @@ impl SpmvPlan {
             self.n_rows
         );
         self.calls += 1;
+        self.matrix_passes += 1;
         kernels::run_on(self.imp, &self.matrix, x, y, &self.pool, &self.ranges, &mut self.ws)
     }
 
-    /// Batched `Y = A·X`: one output per input, all served by this plan's
-    /// single transformation and partition — the multi-RHS request shape a
-    /// serving deployment batches into.
+    /// Batched `Y = A·X` as a **tiled SpMM**: the batch is cut into column
+    /// tiles of [`SpmvPlan::batch_tile`] right-hand sides and each tile is
+    /// served by one pass of the blocked multi-RHS kernels over the
+    /// matrix — ⌈k/tile⌉ matrix passes total instead of the k passes
+    /// looped [`SpmvPlan::execute`] calls would make, with bitwise-identical
+    /// results. All served by this plan's single transformation and
+    /// partition.
     ///
     /// # Errors
     /// Fails if `xs` and `ys` differ in length or any vector mismatches.
@@ -107,10 +198,58 @@ impl SpmvPlan {
             xs.len(),
             ys.len()
         );
-        for (x, y) in xs.iter().zip(ys.iter_mut()) {
-            self.execute(x, y)?;
+        for x in xs {
+            anyhow::ensure!(
+                x.len() == self.n_cols,
+                "x length {} != n_cols {}",
+                x.len(),
+                self.n_cols
+            );
         }
+        for y in ys.iter() {
+            anyhow::ensure!(
+                y.len() == self.n_rows,
+                "y length {} != n_rows {}",
+                y.len(),
+                self.n_rows
+            );
+        }
+        let tile = self.batch_tile.max(1);
+        for (txs, tys) in xs.chunks(tile).zip(ys.chunks_mut(tile)) {
+            let xrefs: Vec<&[Value]> = txs.iter().map(|v| v.as_slice()).collect();
+            let mut yrefs: Vec<&mut [Value]> = tys.iter_mut().map(|v| v.as_mut_slice()).collect();
+            kernels::run_many_on(
+                self.imp,
+                &self.matrix,
+                &xrefs,
+                &mut yrefs,
+                &self.pool,
+                &self.ranges,
+                &mut self.ws,
+            )?;
+            self.matrix_passes += 1;
+        }
+        self.calls += xs.len() as u64;
         Ok(())
+    }
+
+    /// The batch-tile width `execute_many` blocks on (see
+    /// [`configured_batch_tile`]).
+    pub fn batch_tile(&self) -> usize {
+        self.batch_tile
+    }
+
+    /// Override the batch-tile width (tests and tuning sweeps).
+    pub fn set_batch_tile(&mut self, tile: usize) {
+        self.batch_tile = tile.max(1);
+    }
+
+    /// Passes over the matrix data so far: one per `execute`, ⌈k/tile⌉
+    /// per `execute_many` of k right-hand sides (the SpMM amortisation
+    /// probe; for the sequential extension formats without a blocked
+    /// kernel a "pass" is one tile dispatch).
+    pub fn matrix_passes(&self) -> u64 {
+        self.matrix_passes
     }
 
     /// The implementation this plan executes.
@@ -242,7 +381,7 @@ impl Planner {
     /// Build the plan the online AT decision selects, falling back to the
     /// CRS baseline if the selected transformation fails at run time
     /// (e.g. an ELL blow-up the size predictor underestimated).
-    pub fn plan(&self, csr: &Csr) -> Result<SpmvPlan> {
+    pub fn plan(&self, csr: &Arc<Csr>) -> Result<SpmvPlan> {
         let imp = self.auto_choice(csr);
         match self.plan_for(csr, imp) {
             Ok(p) => Ok(p),
@@ -253,8 +392,9 @@ impl Planner {
         }
     }
 
-    /// Build a plan for an explicitly requested implementation.
-    pub fn plan_for(&self, csr: &Csr, imp: Implementation) -> Result<SpmvPlan> {
+    /// Build a plan for an explicitly requested implementation. CRS plans
+    /// share `csr` instead of cloning it.
+    pub fn plan_for(&self, csr: &Arc<Csr>, imp: Implementation) -> Result<SpmvPlan> {
         SpmvPlan::build(csr, imp, self.policy.ell_budget(), self.pool.clone())
     }
 }
@@ -272,7 +412,7 @@ mod tests {
     #[test]
     fn plan_matches_baseline_for_every_implementation() {
         let mut rng = Rng::new(41);
-        let a = random_csr(&mut rng, 60, 60, 0.1);
+        let a = Arc::new(random_csr(&mut rng, 60, 60, 0.1));
         let x: Vec<Value> = (0..60).map(|i| (i as f64 * 0.21).cos()).collect();
         let mut want = vec![0.0; 60];
         a.spmv(&x, &mut want);
@@ -292,7 +432,7 @@ mod tests {
     #[test]
     fn auto_plan_transforms_banded_and_vetoes_on_policy() {
         let mut rng = Rng::new(42);
-        let band = banded_circulant(&mut rng, 128, &[-1, 0, 1]);
+        let band = Arc::new(banded_circulant(&mut rng, 128, &[-1, 0, 1]));
         let planner = Planner::new(
             tuning(Some(3.1), Implementation::EllRowOuter),
             MemoryPolicy::unlimited(),
@@ -305,7 +445,7 @@ mod tests {
         assert!(plan.extra_bytes() > 0);
 
         // Tail-heavy matrix + tight budget: the policy vetoes ELL.
-        let spiky = generate(&spec_by_name("memplus").unwrap(), 3, 0.03);
+        let spiky = Arc::new(generate(&spec_by_name("memplus").unwrap(), 3, 0.03));
         let vetoed = Planner::new(
             tuning(Some(10.0), Implementation::EllRowOuter),
             MemoryPolicy::with_budget(64 * 1024),
@@ -321,7 +461,7 @@ mod tests {
     #[test]
     fn execute_many_matches_individual_executes() {
         let mut rng = Rng::new(43);
-        let a = random_csr(&mut rng, 32, 32, 0.2);
+        let a = Arc::new(random_csr(&mut rng, 32, 32, 0.2));
         let pool = Arc::new(ParPool::new(2));
         let mut plan = SpmvPlan::build(&a, Implementation::CsrRowPar, None, pool).unwrap();
         let xs: Vec<Vec<Value>> = (0..4)
@@ -343,12 +483,73 @@ mod tests {
     }
 
     #[test]
+    fn execute_many_streams_the_matrix_once_per_tile() {
+        let mut rng = Rng::new(44);
+        let a = Arc::new(random_csr(&mut rng, 40, 40, 0.15));
+        let pool = Arc::new(ParPool::new(3));
+        let mut plan = SpmvPlan::build(&a, Implementation::CsrRowPar, None, pool.clone()).unwrap();
+        let k = 7usize;
+        let xs: Vec<Vec<Value>> = (0..k)
+            .map(|j| (0..40).map(|i| ((i * 2 + j) as f64 * 0.19).cos()).collect())
+            .collect();
+        let mut ys = vec![vec![0.0; 40]; k];
+        for (tile, want_passes) in [(3usize, 3u64), (1, 7), (7, 1), (100, 1)] {
+            plan.set_batch_tile(tile);
+            assert_eq!(plan.batch_tile(), tile.max(1));
+            let before_passes = plan.matrix_passes();
+            let before_dispatch = pool.dispatch_count();
+            plan.execute_many(&xs, &mut ys).unwrap();
+            assert_eq!(
+                plan.matrix_passes() - before_passes,
+                want_passes,
+                "tile {tile}: ceil(k/tile) matrix passes"
+            );
+            // Row-parallel CRS SpMM is exactly one pool dispatch per pass.
+            assert_eq!(
+                pool.dispatch_count() - before_dispatch,
+                want_passes,
+                "tile {tile}: one dispatch per pass"
+            );
+        }
+    }
+
+    #[test]
     fn plan_rejects_dimension_mismatch() {
-        let a = Csr::identity(8);
+        let a = Arc::new(Csr::identity(8));
         let mut plan =
             SpmvPlan::build(&a, Implementation::CsrSeq, None, Arc::new(ParPool::new(1))).unwrap();
         let mut y = vec![0.0; 8];
         assert!(plan.execute(&[1.0; 7], &mut y).is_err());
         assert!(plan.execute(&[1.0; 8], &mut vec![0.0; 9]).is_err());
+        // Batched dimension mismatches are rejected up front too.
+        let bad_x = vec![vec![0.0; 7]; 2];
+        let mut ys = vec![vec![0.0; 8]; 2];
+        assert!(plan.execute_many(&bad_x, &mut ys).is_err());
+        let good_x = vec![vec![0.0; 8]; 2];
+        let mut bad_y = vec![vec![0.0; 9]; 2];
+        assert!(plan.execute_many(&good_x, &mut bad_y).is_err());
+    }
+
+    #[test]
+    fn reduction_kernels_get_smaller_default_tiles() {
+        let direct = super::rows_per_rhs_for(Implementation::CsrRowPar, 1000, 8);
+        let reduced = super::rows_per_rhs_for(Implementation::EllRowOuter, 1000, 8);
+        assert_eq!(direct, 1000);
+        assert_eq!(reduced, 9000, "8 private chunk copies + the output itself");
+        // At sizes where the budget binds, the YY footprint shrinks the tile.
+        assert!(
+            super::default_batch_tile(200_000 * 9, 200_000)
+                < super::default_batch_tile(200_000, 200_000)
+        );
+    }
+
+    #[test]
+    fn default_tile_respects_llc_budget_and_clamps() {
+        assert_eq!(super::default_batch_tile(0, 0), 32, "degenerate clamps high");
+        assert_eq!(super::default_batch_tile(10_000_000, 10_000_000), 1, "huge clamps low");
+        let t = super::default_batch_tile(100_000, 100_000);
+        assert!((1..=32).contains(&t));
+        // Half of 32 MiB over (n_rows + n_cols) * 8 bytes, clamped.
+        assert_eq!(t, ((16usize << 20) / (200_000 * 8)).clamp(1, 32));
     }
 }

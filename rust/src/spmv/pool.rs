@@ -29,6 +29,7 @@
 
 use std::cell::Cell;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::thread::JoinHandle;
 
@@ -124,6 +125,10 @@ pub struct ParPool {
     shared: Arc<PoolShared>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    /// Chunked jobs dispatched over the pool's lifetime (including serial
+    /// fallbacks) — the observability counter the SpMM pass-count tests
+    /// read to prove a tiled batch streams the matrix once per tile.
+    dispatches: AtomicU64,
 }
 
 impl ParPool {
@@ -153,7 +158,7 @@ impl ParPool {
                 .expect("spawn pool worker");
             workers.push(h);
         }
-        Self { shared, workers, size }
+        Self { shared, workers, size, dispatches: AtomicU64::new(0) }
     }
 
     /// Pool sized by [`configured_threads`].
@@ -164,6 +169,14 @@ impl ParPool {
     /// Logical size (workers + caller).
     pub fn size(&self) -> usize {
         self.size
+    }
+
+    /// Chunked jobs dispatched so far (monotonic; serial fallbacks count
+    /// too). A blocked SpMM kernel performs a fixed number of dispatches
+    /// per matrix pass, so the delta of this counter across an
+    /// `execute_many` call exposes the ⌈k/tile⌉ pass count.
+    pub fn dispatch_count(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
     }
 
     /// Execute `f(chunk_index, range)` once per range, in parallel across
@@ -184,6 +197,7 @@ impl ParPool {
         if n == 0 {
             return;
         }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
         let nested = IN_POOL.with(|c| c.get());
         if n == 1 || self.workers.is_empty() || nested {
             for (i, r) in ranges.iter().enumerate() {
@@ -439,6 +453,18 @@ mod tests {
             *p.get().add(tid) = r.end - r.start;
         });
         assert_eq!(sum[0] + sum[1], 8);
+    }
+
+    #[test]
+    fn dispatch_count_is_monotonic_per_job() {
+        let pool = ParPool::new(2);
+        let before = pool.dispatch_count();
+        let ranges = split_even(64, 2);
+        pool.run_chunks(&ranges, |_tid, _r| {});
+        pool.run_chunks(&ranges, |_tid, _r| {});
+        assert_eq!(pool.dispatch_count() - before, 2);
+        pool.run_chunks(&[], |_tid, _r| {});
+        assert_eq!(pool.dispatch_count() - before, 2, "empty jobs are not dispatches");
     }
 
     #[test]

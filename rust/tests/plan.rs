@@ -23,14 +23,14 @@ fn assert_close(tag: &str, got: &[f64], want: &[f64]) {
     }
 }
 
-fn cases() -> Vec<Csr> {
+fn cases() -> Vec<Arc<Csr>> {
     let mut rng = Rng::new(2024);
     vec![
-        random_csr(&mut rng, 1, 1, 1.0),
-        random_csr(&mut rng, 23, 19, 0.25),
-        random_csr(&mut rng, 150, 150, 0.04),
-        banded_circulant(&mut rng, 97, &[-1, 0, 1, 3]),
-        Csr::from_triplets(11, 11, &[]).unwrap(),
+        Arc::new(random_csr(&mut rng, 1, 1, 1.0)),
+        Arc::new(random_csr(&mut rng, 23, 19, 0.25)),
+        Arc::new(random_csr(&mut rng, 150, 150, 0.04)),
+        Arc::new(banded_circulant(&mut rng, 97, &[-1, 0, 1, 3])),
+        Arc::new(Csr::from_triplets(11, 11, &[]).unwrap()),
     ]
 }
 
@@ -73,11 +73,11 @@ fn consecutive_plans_share_one_pool_without_stale_state() {
     let pool = Arc::new(ParPool::new(4));
     let mut rng = Rng::new(7);
 
-    let a1 = random_csr(&mut rng, 64, 64, 0.1);
-    let a2 = banded_circulant(&mut rng, 200, &[-2, -1, 0, 1, 2]);
-    let a3 = random_csr(&mut rng, 33, 47, 0.2);
+    let a1 = Arc::new(random_csr(&mut rng, 64, 64, 0.1));
+    let a2 = Arc::new(banded_circulant(&mut rng, 200, &[-2, -1, 0, 1, 2]));
+    let a3 = Arc::new(random_csr(&mut rng, 33, 47, 0.2));
 
-    let specs: Vec<(&Csr, Implementation)> = vec![
+    let specs: Vec<(&Arc<Csr>, Implementation)> = vec![
         (&a1, Implementation::CooRowOuter),
         (&a2, Implementation::EllRowOuter),
         (&a3, Implementation::CsrRowPar),
@@ -115,7 +115,7 @@ fn consecutive_plans_share_one_pool_without_stale_state() {
 #[test]
 fn solver_iterates_through_a_cached_plan() {
     let mut rng = Rng::new(13);
-    let a = spmv_at::matrixgen::make_spd(&banded_circulant(&mut rng, 120, &[-1, 0, 1]));
+    let a = Arc::new(spmv_at::matrixgen::make_spd(&banded_circulant(&mut rng, 120, &[-1, 0, 1])));
     let x_true: Vec<f64> = (0..120).map(|i| ((i + 1) as f64 * 0.37).sin()).collect();
     let mut b = vec![0.0; 120];
     a.spmv(&x_true, &mut b);
@@ -148,7 +148,7 @@ fn solver_iterates_through_a_cached_plan() {
 #[test]
 fn execute_many_batches_under_one_plan() {
     let mut rng = Rng::new(17);
-    let a = random_csr(&mut rng, 48, 48, 0.15);
+    let a = Arc::new(random_csr(&mut rng, 48, 48, 0.15));
     let mut plan =
         SpmvPlan::build(&a, Implementation::CsrRowPar, None, Arc::new(ParPool::new(2))).unwrap();
     let xs: Vec<Vec<f64>> = (0..6)

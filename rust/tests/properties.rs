@@ -62,7 +62,7 @@ fn prop_transforms_preserve_nnz_and_shape() {
 #[test]
 fn prop_all_kernels_agree_with_csr_at_random_thread_counts() {
     for_seeds(25, |seed, rng| {
-        let a = arbitrary_matrix(rng);
+        let a = Arc::new(arbitrary_matrix(rng));
         let x: Vec<f64> = (0..a.n_cols()).map(|_| rng.range_f64(-2.0, 2.0)).collect();
         let mut want = vec![0.0; a.n_rows()];
         a.spmv(&x, &mut want);
@@ -288,7 +288,7 @@ fn prop_spmv_linearity() {
     // read uninitialised columns.
     let pool = Arc::new(ParPool::new(2));
     for_seeds(20, |seed, rng| {
-        let a = arbitrary_matrix(rng);
+        let a = Arc::new(arbitrary_matrix(rng));
         let (nr, nc) = (a.n_rows(), a.n_cols());
         let x: Vec<f64> = (0..nc).map(|_| rng.range_f64(-1.0, 1.0)).collect();
         let z: Vec<f64> = (0..nc).map(|_| rng.range_f64(-1.0, 1.0)).collect();

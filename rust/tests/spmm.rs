@@ -1,0 +1,172 @@
+//! Blocked SpMM + sharded serving tests: tiled `execute_many` must be
+//! bitwise-identical to looped single-RHS `execute` for every
+//! implementation, thread count and tile width (the tile is a pure
+//! blocking transformation — it may never change a result), performing
+//! exactly ⌈k/tile⌉ passes over the matrix; and shard routing must place
+//! different matrices on distinct pools that serve concurrently.
+
+use spmv_at::autotune::online::TuningData;
+use spmv_at::coordinator::{shards, CoordinatorConfig, Server};
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::matrixgen::{banded_circulant, random_csr};
+use spmv_at::rng::Rng;
+use spmv_at::spmv::pool::ParPool;
+use spmv_at::spmv::{Implementation, SpmvPlan};
+use std::sync::Arc;
+
+fn cases() -> Vec<Arc<Csr>> {
+    let mut rng = Rng::new(4096);
+    vec![
+        Arc::new(random_csr(&mut rng, 1, 1, 1.0)),
+        Arc::new(random_csr(&mut rng, 37, 29, 0.2)),
+        Arc::new(banded_circulant(&mut rng, 90, &[-1, 0, 1, 4])),
+        Arc::new(Csr::from_triplets(13, 13, &[]).unwrap()),
+    ]
+}
+
+/// The headline SpMM property: for every implementation × pool width
+/// {1, 2, 7} × tile width {1, 3, k}, `execute_many` over a batch of k
+/// right-hand sides is **bitwise** identical to k individual `execute`
+/// calls on the same plan, and streams the matrix exactly ⌈k/tile⌉
+/// times.
+#[test]
+fn execute_many_is_bitwise_identical_to_looped_execute_everywhere() {
+    let k = 6usize;
+    for threads in [1usize, 2, 7] {
+        let pool = Arc::new(ParPool::new(threads));
+        for a in cases() {
+            let (nr, nc) = (a.n_rows(), a.n_cols());
+            let xs: Vec<Vec<f64>> = (0..k)
+                .map(|j| (0..nc).map(|i| ((i * 7 + j * 3 + 1) as f64 * 0.17).sin()).collect())
+                .collect();
+            for imp in Implementation::ALL {
+                let tag = format!("{imp} t={threads} n={nr}");
+                let mut plan = SpmvPlan::build(&a, imp, None, pool.clone())
+                    .unwrap_or_else(|e| panic!("{tag}: build failed: {e}"));
+                // Reference: k looped single-RHS executes on the same plan.
+                let mut want = vec![vec![0.0; nr]; k];
+                for (x, y) in xs.iter().zip(want.iter_mut()) {
+                    plan.execute(x, y).unwrap();
+                }
+                for tile in [1usize, 3, k] {
+                    plan.set_batch_tile(tile);
+                    let passes_before = plan.matrix_passes();
+                    let mut got = vec![vec![0.0; nr]; k];
+                    plan.execute_many(&xs, &mut got).unwrap();
+                    assert_eq!(got, want, "{tag} tile={tile}: tiled SpMM must be bitwise");
+                    assert_eq!(
+                        plan.matrix_passes() - passes_before,
+                        k.div_ceil(tile) as u64,
+                        "{tag} tile={tile}: ceil(k/tile) matrix passes"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The pool dispatch counter exposes the single-pass-per-tile behaviour
+/// end to end: a row-parallel CRS SpMM of k RHS at tile width t is
+/// exactly ⌈k/t⌉ pool dispatches (the looped equivalent is k).
+#[test]
+fn tiled_spmm_dispatches_once_per_tile() {
+    let mut rng = Rng::new(77);
+    let a = Arc::new(random_csr(&mut rng, 200, 200, 0.05));
+    let pool = Arc::new(ParPool::new(4));
+    let mut plan = SpmvPlan::build(&a, Implementation::CsrRowPar, None, pool.clone()).unwrap();
+    let k = 12usize;
+    let xs: Vec<Vec<f64>> = (0..k)
+        .map(|j| (0..200).map(|i| ((i + j) as f64 * 0.05).cos()).collect())
+        .collect();
+    let mut ys = vec![vec![0.0; 200]; k];
+
+    plan.set_batch_tile(4);
+    let before = pool.dispatch_count();
+    plan.execute_many(&xs, &mut ys).unwrap();
+    assert_eq!(pool.dispatch_count() - before, 3, "12 RHS / tile 4 = 3 passes");
+
+    let before = pool.dispatch_count();
+    for (x, y) in xs.iter().zip(ys.iter_mut()) {
+        plan.execute(x, y).unwrap();
+    }
+    assert_eq!(pool.dispatch_count() - before, 12, "looped executes pass per RHS");
+}
+
+/// Shard routing: two matrices whose keys hash to different shards land
+/// on distinct pools, and concurrent batched clients against both get
+/// correct results.
+#[test]
+fn sharded_serving_routes_to_distinct_pools_and_stays_correct() {
+    let tuning = TuningData {
+        backend: "sim:ES2".into(),
+        imp: Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let mut cfg = CoordinatorConfig::new(tuning.clone());
+    cfg.threads = 4;
+    cfg.shards = 2;
+
+    // Routing is deterministic and the two keys below differ in shard.
+    let names: Vec<String> = (0..32).map(|i| format!("mat-{i}")).collect();
+    let a_name = names
+        .iter()
+        .find(|n| shards::route_key(n, 2) == 0)
+        .expect("32 keys cover shard 0")
+        .clone();
+    let b_name = names
+        .iter()
+        .find(|n| shards::route_key(n, 2) == 1)
+        .expect("32 keys cover shard 1")
+        .clone();
+
+    // Coordinator-level: distinct pools per shard.
+    let coord = spmv_at::coordinator::Coordinator::new(cfg.clone());
+    assert_ne!(coord.shard_of(&a_name), coord.shard_of(&b_name));
+    assert!(!Arc::ptr_eq(
+        coord.planner().planner_for(&a_name).pool(),
+        coord.planner().planner_for(&b_name).pool(),
+    ));
+
+    // Server-level: one loop per shard, concurrent batched clients.
+    let (srv, client) = Server::spawn_sharded(cfg, 32);
+    let mut rng = Rng::new(21);
+    let ma = banded_circulant(&mut rng, 64, &[-1, 0, 1]);
+    let mb = random_csr(&mut rng, 64, 64, 0.15);
+    client.register(&a_name, ma.clone()).unwrap();
+    client.register(&b_name, mb.clone()).unwrap();
+
+    let mut handles = Vec::new();
+    for (name, m) in [(a_name.clone(), ma), (b_name.clone(), mb)] {
+        let c = client.clone();
+        handles.push(std::thread::spawn(move || {
+            let xs: Vec<Vec<f64>> = (0..6)
+                .map(|j| (0..64).map(|i| ((i * 2 + j) as f64 * 0.11).sin()).collect())
+                .collect();
+            let mut want = Vec::new();
+            for x in &xs {
+                let mut y = vec![0.0; 64];
+                m.spmv(x, &mut y);
+                want.push(y);
+            }
+            for _ in 0..8 {
+                let ys = c.spmv_batch(&name, xs.clone()).unwrap();
+                for (got, w) in ys.iter().zip(&want) {
+                    for (g, v) in got.iter().zip(w) {
+                        assert!((g - v).abs() < 1e-9, "{name}: {g} vs {v}");
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let rows = client.stats().unwrap();
+    assert_eq!(rows.len(), 2);
+    assert!(rows.iter().all(|r| r.calls == 48));
+    let coords = srv.shutdown_all();
+    assert_eq!(coords.len(), 2);
+    assert!(coords.iter().all(|c| c.names().len() == 1), "one matrix per shard");
+}
