@@ -18,6 +18,12 @@
 //! `execute_many` SpMM at batch k ∈ {1, 4, 16, 64} against looped
 //! single-RHS executes, making the single-pass-per-tile bandwidth win
 //! measurable per PR.
+//!
+//! Part D (measured): `adaptive_replan` — the adaptive loop's two costs
+//! per PR: decision-flip latency (calls + wall time from a contradicting
+//! measurement, anchored on MeasuredBackend timings, to the serving-plan
+//! swap) and exploration overhead (adaptive + forced shadow calls vs the
+//! decide-once pipeline on the same traffic).
 
 #[path = "common.rs"]
 mod common;
@@ -193,5 +199,91 @@ fn main() {
     }
     print!("{}", t.render());
     println!("(tiled = one matrix pass per SPMV_AT_BATCH_TILE column tile)");
+
+    // ---- Part D: adaptive re-plan latency + exploration overhead ----
+    println!("\n--- host: adaptive_replan (flip latency + exploration overhead) ---");
+    {
+        use spmv_at::coordinator::{Coordinator, CoordinatorConfig};
+        use spmv_at::formats::{FormatKind, SparseMatrix as _};
+        let spec = spmv_at::matrixgen::spec_by_name("chem_master1").unwrap();
+        let a = spmv_at::matrixgen::generate(&spec, common::seed(), common::scale());
+        let n = a.n_rows();
+        let x = vec![1.0; n];
+        let candidate = Implementation::EllRowInner;
+
+        // Flip latency: factory table says "keep CRS" (no D*); the rival
+        // arm is seeded with a MeasuredBackend timing scaled to contradict
+        // it decisively, and we count serves until the controller swaps.
+        let t_imp_measured = backend.spmv_seconds(&a, candidate, threads).unwrap_or(1e-6);
+        let wrong = TuningData { d_star: None, imp: candidate, ..tuning.clone() };
+        let mut cfg = CoordinatorConfig::new(wrong);
+        cfg.threads = threads;
+        cfg.adaptive.enabled = true;
+        cfg.adaptive.epsilon = 0.0; // injected measurements only
+        let mut coord = Coordinator::new(cfg.clone());
+        coord.register("m", a.clone()).unwrap();
+        coord.inject_sample("m", candidate, t_imp_measured * 1e-6, 16).unwrap();
+        let budget = cfg.adaptive.window * u64::from(cfg.adaptive.flip_windows) + 1;
+        let t0 = std::time::Instant::now();
+        let mut flip_calls = None;
+        for call in 1..=budget {
+            coord.spmv("m", &x).unwrap();
+            if coord.serving_format("m") == Some(FormatKind::Ell) {
+                flip_calls = Some(call);
+                break;
+            }
+        }
+        let flip_seconds = t0.elapsed().as_secs_f64();
+        let replans = coord.stats()[0].replans;
+
+        // Exploration overhead: identical traffic through the decide-once
+        // pipeline vs the adaptive loop with forced exploration.
+        let iters = if common::quick() { 32 } else { 512 };
+        let run = |adaptive: bool| -> (f64, u64) {
+            let mut c = cfg.clone();
+            c.adaptive.enabled = adaptive;
+            c.adaptive.epsilon = 1.0;
+            c.adaptive.explore_warmup = 0;
+            c.adaptive.budget_fraction = f64::INFINITY; // measure the raw cost
+            let mut coord = Coordinator::new(c);
+            coord.register("m", a.clone()).unwrap();
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                coord.spmv("m", &x).unwrap();
+            }
+            (t0.elapsed().as_secs_f64(), coord.stats()[0].explored)
+        };
+        let (t_plain, _) = run(false);
+        let (t_adapt, explored) = run(true);
+        let overhead = t_adapt / t_plain.max(1e-12) - 1.0;
+
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec![
+            "flip latency (calls)".into(),
+            flip_calls.map_or(format!(">{budget}"), |c| c.to_string()),
+        ]);
+        t.row(vec!["flip latency (ms)".into(), format!("{:.3}", flip_seconds * 1e3)]);
+        t.row(vec!["replans".into(), replans.to_string()]);
+        t.row(vec![
+            format!("exploration overhead ({iters} calls, eps=1)"),
+            format!("{:+.1}%", overhead * 1e2),
+        ]);
+        t.row(vec!["shadow calls".into(), explored.to_string()]);
+        print!("{}", t.render());
+        json.push(Json::Obj(vec![
+            ("machine".into(), Json::Str("host".into())),
+            ("case".into(), Json::Str("adaptive_replan".into())),
+            ("matrix".into(), Json::Str(spec.name.into())),
+            (
+                "flip_calls".into(),
+                flip_calls.map_or(Json::Null, |c| Json::Num(c as f64)),
+            ),
+            ("flip_seconds".into(), Json::Num(flip_seconds)),
+            ("replans".into(), Json::Num(replans as f64)),
+            ("explore_overhead_ratio".into(), Json::Num(overhead)),
+            ("explored".into(), Json::Num(explored as f64)),
+            ("threads".into(), Json::Num(threads as f64)),
+        ]));
+    }
     common::write_json("amortization", Json::Arr(json));
 }

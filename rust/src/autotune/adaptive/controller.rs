@@ -1,0 +1,203 @@
+//! Hysteresis-guarded re-decision: flip only on a sustained, significant
+//! contradiction.
+//!
+//! The naive adaptive loop — "switch whenever the rival's last sample was
+//! faster" — flip-flaps on timing noise and pays a re-plan (or at least a
+//! serving-path change) per oscillation. [`HysteresisController`] guards
+//! the flip twice:
+//!
+//! * a **dead-band**: the rival must be faster by more than a configured
+//!   relative margin (`deadband`), not merely faster;
+//! * **K consecutive windows**: serving samples are grouped into windows
+//!   of `window` calls, the dead-band comparison is evaluated once per
+//!   window, and only `flip_windows` *consecutive* contradicting windows
+//!   trigger a flip. Any window that fails the test (rival too slow,
+//!   within the dead-band, or not confidently measured) resets the vote
+//!   count to zero.
+//!
+//! The controller is pure decision logic over the EW means that
+//! [`super::telemetry`] maintains; the coordinator owns the actual plan
+//! swap and calls [`HysteresisController::note_serve`] after every served
+//! call or batch.
+
+/// One registered matrix's flip guard.
+#[derive(Clone, Debug)]
+pub struct HysteresisController {
+    deadband: f64,
+    window: u64,
+    flip_windows: u32,
+    min_rival_samples: u64,
+    fill: u64,
+    votes: u32,
+    windows: u64,
+    flips: u64,
+}
+
+impl HysteresisController {
+    /// Controller evaluating every `window` served calls, flipping after
+    /// `flip_windows` consecutive windows in which the rival mean beats
+    /// the serving mean by more than `deadband` (relative), provided the
+    /// rival has at least `min_rival_samples` telemetry samples.
+    pub fn new(deadband: f64, window: u64, flip_windows: u32, min_rival_samples: u64) -> Self {
+        Self {
+            deadband: deadband.max(0.0),
+            window: window.max(1),
+            flip_windows: flip_windows.max(1),
+            min_rival_samples,
+            fill: 0,
+            votes: 0,
+            windows: 0,
+            flips: 0,
+        }
+    }
+
+    /// Account `k` served calls; when they complete a window, evaluate the
+    /// dead-band comparison. Returns `true` when the flip fires (the
+    /// caller swaps the serving plan); the vote state resets either way at
+    /// a flip, and resets to zero on any non-contradicting window. One
+    /// dispatch evaluates at most one window — a mega-batch carries one
+    /// unit of independent evidence, not `k / window` votes — but the
+    /// remainder of its calls carries into the next window rather than
+    /// being dropped.
+    pub fn note_serve(
+        &mut self,
+        k: u64,
+        serving_mean: Option<f64>,
+        rival: Option<(f64, u64)>,
+    ) -> bool {
+        self.fill += k;
+        if self.fill < self.window {
+            return false;
+        }
+        self.fill %= self.window;
+        self.windows += 1;
+        let contradiction = match (serving_mean, rival) {
+            (Some(s), Some((r, n))) if n >= self.min_rival_samples && s > 0.0 => {
+                r < s * (1.0 - self.deadband)
+            }
+            _ => false,
+        };
+        if !contradiction {
+            self.votes = 0;
+            return false;
+        }
+        self.votes += 1;
+        if self.votes >= self.flip_windows {
+            self.votes = 0;
+            self.flips += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Clear window fill and votes (after a forced re-plan, so the new
+    /// serving choice gets a full K windows before the next flip).
+    pub fn reset(&mut self) {
+        self.fill = 0;
+        self.votes = 0;
+    }
+
+    /// Contradicting windows currently accumulated toward a flip.
+    pub fn votes(&self) -> u32 {
+        self.votes
+    }
+
+    /// Windows evaluated so far.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+
+    /// Flips fired so far.
+    pub fn flips(&self) -> u64 {
+        self.flips
+    }
+
+    /// Serve calls per evaluation window.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Consecutive contradicting windows required to flip.
+    pub fn flip_windows(&self) -> u32 {
+        self.flip_windows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_windows(c: &mut HysteresisController, samples: &[(f64, f64)]) -> Vec<bool> {
+        // One full window per (serving_mean, rival_mean) pair.
+        samples
+            .iter()
+            .map(|&(s, r)| c.note_serve(c.window(), Some(s), Some((r, 100))))
+            .collect()
+    }
+
+    #[test]
+    fn flips_after_k_consecutive_contradictions() {
+        let mut c = HysteresisController::new(0.15, 4, 3, 1);
+        // Rival 10x faster, well past the dead-band, three windows in a row.
+        let fired = run_windows(&mut c, &[(1e-3, 1e-4), (1e-3, 1e-4), (1e-3, 1e-4)]);
+        assert_eq!(fired, vec![false, false, true]);
+        assert_eq!(c.flips(), 1);
+        assert_eq!(c.votes(), 0, "votes reset after the flip");
+    }
+
+    #[test]
+    fn alternating_timings_never_flip() {
+        // Synthetic flip-flap: rival faster one window, slower the next.
+        let mut c = HysteresisController::new(0.1, 2, 2, 1);
+        let pattern: Vec<(f64, f64)> =
+            (0..20).map(|i| if i % 2 == 0 { (1e-3, 1e-4) } else { (1e-3, 1e-2) }).collect();
+        let fired = run_windows(&mut c, &pattern);
+        assert!(fired.iter().all(|f| !f), "hysteresis must suppress flip-flap");
+        assert_eq!(c.flips(), 0);
+        assert_eq!(c.windows(), 20);
+    }
+
+    #[test]
+    fn deadband_suppresses_marginal_wins() {
+        let mut c = HysteresisController::new(0.2, 1, 1, 1);
+        // Rival 10% faster — inside the 20% dead-band.
+        assert!(!c.note_serve(1, Some(1.0e-3), Some((0.9e-3, 10))));
+        // Rival 30% faster — outside it.
+        assert!(c.note_serve(1, Some(1.0e-3), Some((0.7e-3, 10))));
+    }
+
+    #[test]
+    fn unmeasured_or_thin_rival_never_votes() {
+        let mut c = HysteresisController::new(0.1, 1, 1, 5);
+        assert!(!c.note_serve(1, Some(1e-3), None));
+        assert!(!c.note_serve(1, None, Some((1e-9, 100))));
+        // Rival hugely faster but only 2 of the required 5 samples.
+        assert!(!c.note_serve(1, Some(1e-3), Some((1e-9, 2))));
+        assert!(c.note_serve(1, Some(1e-3), Some((1e-9, 5))));
+    }
+
+    #[test]
+    fn oversized_batches_carry_their_remainder() {
+        // window 4, flips after 2 contradicting windows. A 6-call batch
+        // completes one window (one vote) and carries 2 calls forward, so
+        // 2 more calls complete the second window — not 4.
+        let mut c = HysteresisController::new(0.1, 4, 2, 1);
+        assert!(!c.note_serve(6, Some(1e-3), Some((1e-5, 10))));
+        assert_eq!(c.votes(), 1);
+        assert!(c.note_serve(2, Some(1e-3), Some((1e-5, 10))), "remainder counted");
+        // A mega-batch is still at most one evaluation per dispatch.
+        let mut c = HysteresisController::new(0.1, 4, 3, 1);
+        assert!(!c.note_serve(400, Some(1e-3), Some((1e-5, 10))));
+        assert_eq!(c.votes(), 1, "one vote per dispatch, however large");
+    }
+
+    #[test]
+    fn partial_windows_accumulate_and_reset_clears() {
+        let mut c = HysteresisController::new(0.1, 8, 1, 1);
+        assert!(!c.note_serve(5, Some(1e-3), Some((1e-5, 10))), "window not full");
+        c.reset();
+        // After reset the 5 buffered calls are gone: 5 more still no window.
+        assert!(!c.note_serve(5, Some(1e-3), Some((1e-5, 10))));
+        assert!(c.note_serve(3, Some(1e-3), Some((1e-5, 10))), "8th call closes it");
+    }
+}

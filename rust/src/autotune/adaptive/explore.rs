@@ -1,0 +1,185 @@
+//! Epsilon-greedy shadow measurement with an overhead budget.
+//!
+//! The hysteresis controller can only correct a wrong decision if the
+//! *rival* implementation's timing estimate stays fresh — but the rival,
+//! by definition, is not serving. [`ExplorePolicy`] decides when a served
+//! call should additionally shadow-execute the rival (same input, output
+//! discarded, timing recorded into [`super::telemetry::Telemetry`]):
+//! an epsilon-greedy draw from the crate's deterministic
+//! [`crate::rng::Rng`], gated by a budget so cumulative exploration time
+//! never exceeds a configured fraction of cumulative serving time. The
+//! served result is never taken from the shadow execution, so
+//! exploration cannot change what a client observes.
+
+use crate::rng::Rng;
+
+/// The exploration decision policy for one registered matrix.
+#[derive(Debug)]
+pub struct ExplorePolicy {
+    epsilon: f64,
+    budget_fraction: f64,
+    warmup: u64,
+    rng: Rng,
+    steps: u64,
+    serve_seconds: f64,
+    explore_seconds: f64,
+    explored: u64,
+    budget_skips: u64,
+}
+
+impl ExplorePolicy {
+    /// Policy exploring with probability `epsilon` per served call, capped
+    /// so exploration time stays under `budget_fraction` of serving time,
+    /// and silent for the first `warmup` served steps (a one-shot or
+    /// short-lived matrix never pays a shadow transformation). `seed`
+    /// makes the draw sequence deterministic per matrix.
+    pub fn new(epsilon: f64, budget_fraction: f64, warmup: u64, seed: u64) -> Self {
+        Self {
+            epsilon: epsilon.clamp(0.0, 1.0),
+            budget_fraction: budget_fraction.max(0.0),
+            warmup,
+            rng: Rng::new(seed ^ 0x5eed_ad47),
+            steps: 0,
+            serve_seconds: 0.0,
+            explore_seconds: 0.0,
+            explored: 0,
+            budget_skips: 0,
+        }
+    }
+
+    /// Whether this served call should also shadow-measure the rival.
+    /// Draws epsilon first (so the sequence is deterministic regardless of
+    /// budget or warmup state), then applies the warmup and budget gates.
+    /// The first post-warmup exploration is always admitted — without one
+    /// sample the rival estimate can never exist.
+    pub fn should_explore(&mut self) -> bool {
+        if self.epsilon <= 0.0 || !self.rng.next_bool(self.epsilon) {
+            return false;
+        }
+        if self.steps <= self.warmup {
+            return false;
+        }
+        if self.within_budget() {
+            true
+        } else {
+            self.budget_skips += 1;
+            false
+        }
+    }
+
+    /// Whether cumulative exploration time is within budget.
+    pub fn within_budget(&self) -> bool {
+        self.explored == 0 || self.explore_seconds <= self.budget_fraction * self.serve_seconds
+    }
+
+    /// Account one served step (call or batch) of `seconds`.
+    pub fn note_serve(&mut self, seconds: f64) {
+        self.steps += 1;
+        if seconds.is_finite() && seconds > 0.0 {
+            self.serve_seconds += seconds;
+        }
+    }
+
+    /// Account seconds spent exploring (shadow build + shadow execute).
+    pub fn note_explore(&mut self, seconds: f64) {
+        self.explored += 1;
+        if seconds.is_finite() && seconds > 0.0 {
+            self.explore_seconds += seconds;
+        }
+    }
+
+    /// Shadow calls taken so far.
+    pub fn explored(&self) -> u64 {
+        self.explored
+    }
+
+    /// Shadow calls suppressed by the budget gate.
+    pub fn budget_skips(&self) -> u64 {
+        self.budget_skips
+    }
+
+    /// Exploration overhead as a fraction of serving time (0 when nothing
+    /// has been served yet).
+    pub fn overhead_fraction(&self) -> f64 {
+        if self.serve_seconds <= 0.0 {
+            0.0
+        } else {
+            self.explore_seconds / self.serve_seconds
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epsilon_zero_never_explores() {
+        let mut p = ExplorePolicy::new(0.0, 0.1, 0, 1);
+        for _ in 0..100 {
+            p.note_serve(1e-6);
+            assert!(!p.should_explore());
+        }
+        assert_eq!(p.explored(), 0);
+    }
+
+    #[test]
+    fn warmup_gates_the_first_explorations() {
+        let mut p = ExplorePolicy::new(1.0, f64::INFINITY, 5, 2);
+        for step in 1..=10u64 {
+            p.note_serve(1e-6);
+            let explored = p.should_explore();
+            assert_eq!(explored, step > 5, "step {step}");
+            if explored {
+                p.note_explore(1e-7);
+            }
+        }
+        assert_eq!(p.explored(), 5);
+    }
+
+    #[test]
+    fn epsilon_one_explores_until_budget_binds() {
+        let mut p = ExplorePolicy::new(1.0, 0.5, 0, 2);
+        p.note_serve(0.0);
+        // Bootstrap: first shadow is always admitted.
+        assert!(p.should_explore());
+        p.note_explore(1.0);
+        // Over budget (1.0 explore vs 0 serve) — must skip now.
+        assert!(!p.should_explore());
+        assert!(p.budget_skips() > 0);
+        // Enough serving time re-opens the budget.
+        p.note_serve(10.0);
+        assert!(p.should_explore());
+        assert!((p.overhead_fraction() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn draw_sequence_is_deterministic_per_seed() {
+        let draws = |seed| {
+            let mut p = ExplorePolicy::new(0.3, f64::INFINITY, 0, seed);
+            (0..64)
+                .map(|_| {
+                    p.note_serve(1e-6);
+                    p.should_explore()
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draws(7), draws(7));
+        assert_ne!(draws(7), draws(8), "different matrices draw differently");
+        // Roughly epsilon of the calls explore (loose bound, deterministic).
+        let n = draws(7).iter().filter(|b| **b).count();
+        assert!((5..=30).contains(&n), "{n} explorations of 64 at eps=0.3");
+    }
+
+    #[test]
+    fn overhead_fraction_tracks_accounting() {
+        let mut p = ExplorePolicy::new(0.5, 0.1, 0, 3);
+        assert_eq!(p.overhead_fraction(), 0.0);
+        p.note_serve(2.0);
+        p.note_explore(0.1);
+        assert!((p.overhead_fraction() - 0.05).abs() < 1e-12);
+        assert!(p.within_budget());
+        p.note_explore(0.2);
+        assert!(!p.within_budget());
+    }
+}

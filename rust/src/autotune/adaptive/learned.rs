@@ -1,0 +1,346 @@
+//! The `spmv-at-tuning v2` format: the factory table plus learned
+//! per-`D_mat`-bucket corrections.
+//!
+//! The offline phase produces one global threshold `D*` from the install
+//! suite. The adaptive loop observes *actual* cost ratios per served
+//! matrix; [`LearnedTuning`] folds each observed flip into a small table
+//! of `D_mat` buckets, so the correction generalises to the next matrix
+//! with similar row-length dispersion — and persists it, so the next
+//! process start begins from the learned table instead of the factory
+//! one.
+//!
+//! On disk, v2 is the v1 key-value file under a `spmv-at-tuning v2`
+//! header plus one `bucket` line per corrected bucket. The v2 loader
+//! reads v1 files (empty corrections); the v1 loader
+//! ([`TuningData::load`]) rejects v2 files with an error naming this
+//! loader — forward compatibility is explicit, never silent.
+
+use crate::autotune::online::{decide, OnlineDecision, TuningData};
+use crate::formats::Csr;
+use crate::spmv::Implementation;
+use crate::Result;
+use std::path::Path;
+
+/// Upper edges of the `D_mat` buckets corrections are keyed by; the last
+/// bucket is open-ended. Log-ish spacing over the Table-1 `D_mat` range
+/// (0.02 … 3.10 in the paper, with headroom above).
+pub const BUCKET_EDGES: [f64; 7] = [0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0];
+
+/// Number of buckets (`BUCKET_EDGES.len() + 1`, for the open tail).
+pub const N_BUCKETS: usize = BUCKET_EDGES.len() + 1;
+
+/// The bucket index a `D_mat` value falls into.
+pub fn bucket_of(d_mat: f64) -> usize {
+    BUCKET_EDGES.iter().position(|&e| d_mat < e).unwrap_or(BUCKET_EDGES.len())
+}
+
+/// One bucket's learned state: running mean of the measured cost ratio
+/// `R = t_crs / t_imp` over the flips recorded into it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BucketStat {
+    /// Running mean of measured `R`.
+    pub r_mean: f64,
+    /// Flips folded in.
+    pub samples: u64,
+}
+
+/// A v1 [`TuningData`] plus learned per-bucket corrections.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LearnedTuning {
+    /// The factory (offline-phase) table.
+    pub base: TuningData,
+    buckets: [Option<BucketStat>; N_BUCKETS],
+}
+
+impl LearnedTuning {
+    /// A learned table with no corrections yet — decisions are exactly the
+    /// factory table's until flips are recorded.
+    pub fn new(base: TuningData) -> Self {
+        Self { base, buckets: [None; N_BUCKETS] }
+    }
+
+    /// Fold one observed flip into the bucket of `d_mat`: `r_measured` is
+    /// the live cost ratio `t_crs / t_imp` at the moment the controller
+    /// re-decided. Non-finite or non-positive ratios are ignored.
+    pub fn record(&mut self, d_mat: f64, r_measured: f64) {
+        if !r_measured.is_finite() || r_measured <= 0.0 || !d_mat.is_finite() {
+            return;
+        }
+        let b = &mut self.buckets[bucket_of(d_mat)];
+        *b = Some(match *b {
+            None => BucketStat { r_mean: r_measured, samples: 1 },
+            Some(s) => {
+                let n = s.samples + 1;
+                BucketStat {
+                    r_mean: s.r_mean + (r_measured - s.r_mean) / n as f64,
+                    samples: n,
+                }
+            }
+        });
+    }
+
+    /// The learned correction covering `d_mat`, if any.
+    pub fn correction(&self, d_mat: f64) -> Option<BucketStat> {
+        self.buckets[bucket_of(d_mat)]
+    }
+
+    /// Buckets carrying a correction.
+    pub fn corrected_buckets(&self) -> usize {
+        self.buckets.iter().flatten().count()
+    }
+
+    /// The online decision for `a` under the learned table: the factory
+    /// §2.2 decision, overridden when the matrix's `D_mat` bucket has a
+    /// learned ratio contradicting it (`R >= c` means the transformation
+    /// pays at cost threshold `c`, per the paper's graph criterion).
+    pub fn decide(&self, a: &Csr) -> OnlineDecision {
+        let mut d = decide(a, &self.base);
+        if let Some(b) = self.correction(d.d_mat) {
+            let transform = b.r_mean >= self.base.c;
+            if transform != d.transform {
+                d.transform = transform;
+                d.chosen = if transform { self.base.imp } else { Implementation::CsrSeq };
+            }
+        }
+        d
+    }
+
+    /// Merge another learned table's corrections into this one (used for
+    /// tables with *disjoint* observations): per-bucket sample-weighted
+    /// mean. For per-shard tables that all started from one preloaded
+    /// snapshot, use [`LearnedTuning::merge_deltas`] instead — plain
+    /// merging would count the shared baseline once per shard.
+    pub fn merge_from(&mut self, other: &LearnedTuning) {
+        for (mine, theirs) in self.buckets.iter_mut().zip(&other.buckets) {
+            let Some(t) = theirs else { continue };
+            *mine = Some(match *mine {
+                None => *t,
+                Some(m) => {
+                    let n = m.samples + t.samples;
+                    BucketStat {
+                        r_mean: (m.r_mean * m.samples as f64 + t.r_mean * t.samples as f64)
+                            / n as f64,
+                        samples: n,
+                    }
+                }
+            });
+        }
+    }
+
+    /// Merge per-shard tables that each started from `self` (the shared
+    /// preloaded snapshot): every shard contributes only its observations
+    /// *beyond* the baseline, so preloaded corrections are counted once —
+    /// not once per shard, which would compound sample counts across
+    /// restarts and freeze the running means.
+    pub fn merge_deltas(&self, shards: &[&LearnedTuning]) -> LearnedTuning {
+        let mut out = self.clone();
+        for (i, mine) in out.buckets.iter_mut().enumerate() {
+            let (base_n, base_sum) = match &self.buckets[i] {
+                None => (0u64, 0.0),
+                Some(b) => (b.samples, b.r_mean * b.samples as f64),
+            };
+            let mut n = base_n;
+            let mut sum = base_sum;
+            for shard in shards {
+                let Some(s) = &shard.buckets[i] else { continue };
+                n += s.samples.saturating_sub(base_n);
+                sum += (s.r_mean * s.samples as f64 - base_sum).max(0.0);
+            }
+            *mine = (n > 0).then_some(BucketStat { r_mean: sum / n.max(1) as f64, samples: n });
+        }
+        out
+    }
+
+    /// Serialize as the v2 text format: the v1 body under a v2 header,
+    /// plus one `bucket⇥idx⇥r_mean⇥samples` line per corrected bucket.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut s = String::from("spmv-at-tuning v2\n");
+        s.push_str(&self.base.body_string());
+        for (i, b) in self.buckets.iter().enumerate() {
+            if let Some(b) = b {
+                s.push_str(&format!("bucket\t{i}\t{}\t{}\n", b.r_mean, b.samples));
+            }
+        }
+        std::fs::write(path, s).map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+    }
+
+    /// Load a learned table. Reads both v2 files and plain v1 files (the
+    /// factory table, no corrections) — the forward-compatible loader.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or_default();
+        let is_v2 = match header {
+            "spmv-at-tuning v2" => true,
+            "spmv-at-tuning v1" => false,
+            other => anyhow::bail!("unrecognised tuning file header: {other}"),
+        };
+        let mut buckets = [None; N_BUCKETS];
+        let mut body = Vec::new();
+        for line in lines {
+            match line.strip_prefix("bucket\t") {
+                Some(rest) if is_v2 => {
+                    let mut f = rest.split('\t');
+                    let idx: usize = f
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("bucket line missing index"))?
+                        .parse()?;
+                    anyhow::ensure!(idx < N_BUCKETS, "bucket index {idx} out of range");
+                    let r_mean: f64 = f
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("bucket line missing r_mean"))?
+                        .parse()?;
+                    let samples: u64 = f
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("bucket line missing samples"))?
+                        .parse()?;
+                    buckets[idx] = Some(BucketStat { r_mean, samples });
+                }
+                _ => body.push(line),
+            }
+        }
+        let base = TuningData::parse_body(body.into_iter())?;
+        Ok(Self { base, buckets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::banded_circulant;
+    use crate::rng::Rng;
+
+    fn base(d_star: Option<f64>) -> TuningData {
+        TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowInner,
+            threads: 1,
+            c: 1.0,
+            d_star,
+        }
+    }
+
+    #[test]
+    fn buckets_cover_the_line() {
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(0.07), 1);
+        assert_eq!(bucket_of(3.1), 6);
+        assert_eq!(bucket_of(1e9), N_BUCKETS - 1);
+        // Edges are half-open: d < edge lands below.
+        assert_eq!(bucket_of(0.05), 1);
+    }
+
+    #[test]
+    fn corrections_override_the_factory_decision_both_ways() {
+        let mut rng = Rng::new(4);
+        let band = banded_circulant(&mut rng, 64, &[-1, 0, 1]); // D_mat = 0
+        // Factory says never transform; a learned R >= c flips it on.
+        let mut lt = LearnedTuning::new(base(None));
+        assert!(!lt.decide(&band).transform);
+        lt.record(0.0, 4.0);
+        let d = lt.decide(&band);
+        assert!(d.transform);
+        assert_eq!(d.chosen, Implementation::EllRowInner);
+        // Factory says transform; a learned R < c flips it off.
+        let mut lt = LearnedTuning::new(base(Some(3.1)));
+        assert!(lt.decide(&band).transform);
+        lt.record(0.0, 0.5);
+        let d = lt.decide(&band);
+        assert!(!d.transform);
+        assert_eq!(d.chosen, Implementation::CsrSeq);
+    }
+
+    #[test]
+    fn record_keeps_running_mean_and_ignores_garbage() {
+        let mut lt = LearnedTuning::new(base(None));
+        lt.record(0.3, 2.0);
+        lt.record(0.3, 4.0);
+        let b = lt.correction(0.3).unwrap();
+        assert_eq!(b.samples, 2);
+        assert!((b.r_mean - 3.0).abs() < 1e-12);
+        lt.record(0.3, f64::NAN);
+        lt.record(0.3, -1.0);
+        lt.record(f64::NAN, 2.0);
+        assert_eq!(lt.correction(0.3).unwrap().samples, 2);
+        assert_eq!(lt.corrected_buckets(), 1);
+    }
+
+    #[test]
+    fn merge_deltas_counts_the_preload_once() {
+        // Preloaded snapshot with one corrected bucket, cloned into three
+        // "shards"; only one shard records a new flip. The merge must
+        // yield preload + 1 observation, not 3x the preload.
+        let mut pre = LearnedTuning::new(base(None));
+        pre.record(0.3, 2.0);
+        pre.record(0.3, 4.0); // bucket: mean 3.0, samples 2
+        let mut shards = vec![pre.clone(), pre.clone(), pre.clone()];
+        shards[1].record(0.3, 9.0); // one genuine new flip
+        shards[2].record(7.0, 1.5); // new bucket on another shard
+        let refs: Vec<&LearnedTuning> = shards.iter().collect();
+        let merged = pre.merge_deltas(&refs);
+        let b = merged.correction(0.3).unwrap();
+        assert_eq!(b.samples, 3, "2 preloaded + 1 new, preload counted once");
+        assert!((b.r_mean - 5.0).abs() < 1e-12, "(2 + 4 + 9) / 3");
+        assert_eq!(merged.correction(7.0).unwrap().samples, 1);
+        // No new flips anywhere: merge is the identity on the preload.
+        let same = pre.merge_deltas(&[&pre.clone(), &pre.clone()]);
+        assert_eq!(same, pre);
+    }
+
+    #[test]
+    fn merge_is_sample_weighted() {
+        let mut a = LearnedTuning::new(base(None));
+        let mut b = LearnedTuning::new(base(None));
+        a.record(0.3, 2.0);
+        b.record(0.3, 5.0);
+        b.record(0.3, 5.0);
+        b.record(7.0, 1.5);
+        a.merge_from(&b);
+        let s = a.correction(0.3).unwrap();
+        assert_eq!(s.samples, 3);
+        assert!((s.r_mean - 4.0).abs() < 1e-12, "(2 + 5 + 5) / 3");
+        assert_eq!(a.correction(7.0).unwrap().samples, 1);
+    }
+
+    #[test]
+    fn v2_roundtrip_and_v1_compat() {
+        let dir = std::env::temp_dir().join("spmv_at_learned_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t2.tsv");
+        for d_star in [Some(0.25), None] {
+            let mut lt = LearnedTuning::new(base(d_star));
+            lt.record(0.3, 2.5);
+            lt.record(9.0, 0.4);
+            lt.save(&p).unwrap();
+            assert_eq!(LearnedTuning::load(&p).unwrap(), lt);
+        }
+        // The v2 loader reads a v1 file as a correction-free table.
+        let v1 = dir.join("t1.tsv");
+        base(Some(1.25)).save(&v1).unwrap();
+        let lt = LearnedTuning::load(&v1).unwrap();
+        assert_eq!(lt.base, base(Some(1.25)));
+        assert_eq!(lt.corrected_buckets(), 0);
+        // The v1 loader rejects the v2 file with a clear error.
+        let mut lt2 = LearnedTuning::new(base(None));
+        lt2.record(0.3, 2.0);
+        lt2.save(&p).unwrap();
+        let err = TuningData::load(&p).unwrap_err().to_string();
+        assert!(err.contains("v2"), "error must name the version: {err}");
+        assert!(err.contains("LearnedTuning"), "error must point at the v2 loader: {err}");
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&v1).ok();
+    }
+
+    #[test]
+    fn v2_loader_rejects_garbage() {
+        let dir = std::env::temp_dir().join("spmv_at_learned_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad2.tsv");
+        std::fs::write(&p, "not a tuning file\n").unwrap();
+        assert!(LearnedTuning::load(&p).is_err());
+        std::fs::write(&p, "spmv-at-tuning v2\nbucket\t999\t1.0\t1\n").unwrap();
+        assert!(LearnedTuning::load(&p).is_err(), "out-of-range bucket");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! The adaptive runtime autotuner: measure, explore, re-decide.
+//!
+//! The paper's pipeline decides CRS→ELL **once**, at registration, from
+//! the offline table's `D*`. That table can be wrong for a matrix the
+//! install suite never saw — and the registry already measures per-call
+//! timings without acting on them. This subsystem closes the loop:
+//!
+//! ```text
+//!   offline (install)      online (register)        adaptive (serve)
+//!   suite → D_mat–R_ell →  D_mat < D*? → plan  →  telemetry (EWMA per imp)
+//!   graph → D*                                  →  explore (ε shadow calls)
+//!        ▲                                      →  controller (dead-band +
+//!        │                                         K-window hysteresis)
+//!        └── learned per-D_mat-bucket corrections ← re-plan + record flip
+//! ```
+//!
+//! * [`telemetry`] — per-(matrix, implementation) EWMA mean/variance and
+//!   sample counts, fed by `MatrixEntry::record_batch` for served traffic
+//!   and by exploration for the rival arm.
+//! * [`explore`] — epsilon-greedy shadow measurement: occasionally run the
+//!   rival implementation on a served input (output discarded), budgeted
+//!   so exploration overhead stays under a configured fraction of serving
+//!   time. Served results are never taken from a shadow execution.
+//! * [`controller`] — the hysteresis guard: flip only after K consecutive
+//!   evaluation windows in which the rival's measured mean beats the
+//!   serving mean by more than a dead-band.
+//! * [`learned`] — the `spmv-at-tuning v2` table: the factory [`TuningData`]
+//!   plus per-`D_mat`-bucket measured-ratio corrections, persisted so the
+//!   next process start begins from the learned table.
+//!
+//! The coordinator wires these together per registered matrix (one
+//! [`AdaptiveState`] per entry, so every shard runs its own controllers)
+//! and performs the actual plan swap — promoting the cached shadow plan in
+//! O(1), or parking the transformed plan when flipping back to CRS, so a
+//! re-decision never tears down the worker pool. Every serve keeps
+//! executing through a cached [`SpmvPlan`]; the adaptive layer only
+//! changes *which* plan that is, never how a result is produced.
+
+pub mod controller;
+pub mod explore;
+pub mod learned;
+pub mod telemetry;
+
+pub use controller::HysteresisController;
+pub use explore::ExplorePolicy;
+pub use learned::{bucket_of, BucketStat, LearnedTuning};
+pub use telemetry::{EwmaStats, Telemetry};
+
+use crate::autotune::online::TuningData;
+use crate::spmv::SpmvPlan;
+use crate::Value;
+
+/// Truth for the adaptive on/off switch: the `SPMV_AT_ADAPTIVE`
+/// environment variable, on for `1`/`true`/`on`/`yes` (case-insensitive),
+/// off otherwise (the PR 2 decide-once pipeline).
+pub fn configured_adaptive() -> bool {
+    match std::env::var("SPMV_AT_ADAPTIVE") {
+        Ok(v) => matches!(v.trim().to_ascii_lowercase().as_str(), "1" | "true" | "on" | "yes"),
+        Err(_) => false,
+    }
+}
+
+/// Tunables for the adaptive loop (one config shared by every matrix a
+/// coordinator registers).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Master switch; when false the coordinator behaves byte-for-byte
+    /// like the decide-once pipeline.
+    pub enabled: bool,
+    /// EWMA decay per telemetry sample.
+    pub ewma_alpha: f64,
+    /// Probability a served call also shadow-measures the rival.
+    pub epsilon: f64,
+    /// Exploration time budget as a fraction of serving time.
+    pub budget_fraction: f64,
+    /// Served steps before the first shadow call may fire (one-shot and
+    /// short-lived matrices never pay a shadow transformation; defaults
+    /// to one controller window).
+    pub explore_warmup: u64,
+    /// Relative margin the rival must beat the serving mean by.
+    pub deadband: f64,
+    /// Served calls per controller evaluation window.
+    pub window: u64,
+    /// Consecutive contradicting windows required to flip (the K).
+    pub flip_windows: u32,
+    /// Telemetry samples the rival arm needs before its mean counts.
+    pub min_rival_samples: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            ewma_alpha: 0.2,
+            epsilon: 0.05,
+            budget_fraction: 0.10,
+            explore_warmup: 16,
+            deadband: 0.15,
+            window: 16,
+            flip_windows: 3,
+            min_rival_samples: 4,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Defaults, with `enabled` taken from [`configured_adaptive`]
+    /// (`SPMV_AT_ADAPTIVE`).
+    pub fn from_env() -> Self {
+        Self { enabled: configured_adaptive(), ..Self::default() }
+    }
+}
+
+/// Per-matrix adaptive state the coordinator attaches to a registry
+/// entry: the measured arms, the exploration policy, the flip guard, and
+/// the cached rival ("shadow") plan that makes a flip O(1).
+#[derive(Debug)]
+pub struct AdaptiveState {
+    /// Per-implementation EWMA timings.
+    pub telemetry: Telemetry,
+    /// Epsilon-greedy shadow-measurement policy.
+    pub explore: ExplorePolicy,
+    /// Dead-band + K-window flip guard.
+    pub controller: HysteresisController,
+    /// The rival plan kept warm while not serving: the transformed plan
+    /// before its first promotion (built during exploration) or after a
+    /// flip back to CRS (parked, so flipping forward again is free).
+    pub shadow: Option<SpmvPlan>,
+    /// Set when the rival plan cannot exist on this matrix (transform
+    /// failure or memory-policy veto) — exploration stops retrying.
+    pub rival_dead: bool,
+    /// Discarded-output buffer for single-call shadow executions.
+    pub scratch: Vec<Value>,
+    /// Discarded-output buffers for batched shadow executions (reused
+    /// across explorations so the request path never allocates a fresh
+    /// `k × n_rows` block per shadow SpMM).
+    pub scratch_many: Vec<Vec<Value>>,
+}
+
+impl AdaptiveState {
+    /// Fresh state for one matrix; `seed` keys the deterministic
+    /// exploration draw sequence (the coordinator uses the registry-key
+    /// hash, so a matrix explores identically across runs).
+    pub fn new(cfg: &AdaptiveConfig, seed: u64) -> Self {
+        Self {
+            telemetry: Telemetry::new(cfg.ewma_alpha),
+            explore: ExplorePolicy::new(
+                cfg.epsilon,
+                cfg.budget_fraction,
+                cfg.explore_warmup,
+                seed,
+            ),
+            controller: HysteresisController::new(
+                cfg.deadband,
+                cfg.window,
+                cfg.flip_windows,
+                cfg.min_rival_samples,
+            ),
+            shadow: None,
+            rival_dead: false,
+            scratch: Vec::new(),
+            scratch_many: Vec::new(),
+        }
+    }
+}
+
+/// Convenience: a learned table seeded from a factory [`TuningData`].
+pub fn learned_from(tuning: &TuningData) -> LearnedTuning {
+    LearnedTuning::new(tuning.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_switch_default_off() {
+        if std::env::var("SPMV_AT_ADAPTIVE").is_err() {
+            assert!(!configured_adaptive());
+            assert!(!AdaptiveConfig::from_env().enabled);
+        }
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = AdaptiveConfig::default();
+        assert!(!c.enabled);
+        assert!(c.epsilon > 0.0 && c.epsilon < 1.0);
+        assert!(c.budget_fraction > 0.0 && c.budget_fraction < 1.0);
+        assert!(c.deadband > 0.0 && c.deadband < 1.0);
+        assert!(c.window >= 1 && c.flip_windows >= 1);
+        let s = AdaptiveState::new(&c, 7);
+        assert!(s.shadow.is_none());
+        assert!(!s.rival_dead);
+        assert_eq!(s.telemetry.samples(crate::spmv::Implementation::CsrSeq), 0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Per-(matrix, implementation) runtime statistics for the adaptive loop.
+//!
+//! The offline table predicts `R_ell` from `D_mat`; the telemetry layer
+//! measures it. Every served call (and every exploration shadow call)
+//! feeds one per-call timing sample into an exponentially-weighted mean
+//! and variance per implementation, keyed by the kernel that actually
+//! executed. [`crate::coordinator::MatrixEntry::record_batch`] is the
+//! feeding site for served traffic; the coordinator's exploration policy
+//! ([`super::explore`]) keeps the rival arm's estimate fresh, and the
+//! hysteresis controller ([`super::controller`]) compares the two arms'
+//! means to re-decide.
+//!
+//! EWMA (rather than the registry's running mean) is deliberate: the
+//! adaptive loop must notice *drift* — a matrix whose effective timings
+//! change under load (cache pressure, co-located shards) — so old samples
+//! must decay. Sample counts gate confidence: the controller never acts
+//! on an arm with fewer than its configured minimum of samples.
+
+use crate::spmv::Implementation;
+
+/// Exponentially-weighted mean/variance over per-call seconds.
+#[derive(Clone, Debug)]
+pub struct EwmaStats {
+    alpha: f64,
+    mean: f64,
+    var: f64,
+    count: u64,
+}
+
+impl EwmaStats {
+    /// Empty stats decaying with weight `alpha` per sample
+    /// (`0 < alpha <= 1`; higher = faster forgetting).
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha: alpha.clamp(1e-6, 1.0), mean: 0.0, var: 0.0, count: 0 }
+    }
+
+    /// Absorb one per-call timing sample.
+    pub fn record(&mut self, seconds: f64) {
+        self.count += 1;
+        if self.count == 1 {
+            self.mean = seconds;
+            self.var = 0.0;
+            return;
+        }
+        // Standard EW mean/variance update (West-style).
+        let d = seconds - self.mean;
+        self.mean += self.alpha * d;
+        self.var = (1.0 - self.alpha) * (self.var + self.alpha * d * d);
+    }
+
+    /// Absorb `k` calls that each took `seconds_per_call` (one tiled SpMM
+    /// dispatch reports the batch as `k` equal per-call samples).
+    pub fn record_n(&mut self, seconds_per_call: f64, k: u64) {
+        for _ in 0..k {
+            self.record(seconds_per_call);
+        }
+    }
+
+    /// EW mean seconds per call (`None` until the first sample).
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.mean)
+    }
+
+    /// EW standard deviation (0 until two samples arrive).
+    pub fn std(&self) -> f64 {
+        self.var.max(0.0).sqrt()
+    }
+
+    /// Samples absorbed so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether the estimate has absorbed at least `min_samples` samples —
+    /// the controller's confidence gate.
+    pub fn confident(&self, min_samples: u64) -> bool {
+        self.count >= min_samples
+    }
+}
+
+/// Per-implementation timing stats for one registered matrix.
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    alpha: f64,
+    arms: Vec<(Implementation, EwmaStats)>,
+}
+
+impl Telemetry {
+    /// Empty telemetry; every arm decays with `alpha`.
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, arms: Vec::new() }
+    }
+
+    /// Record `k` calls of `imp` at `seconds_per_call` each.
+    pub fn record(&mut self, imp: Implementation, seconds_per_call: f64, k: u64) {
+        if k == 0 || !seconds_per_call.is_finite() || seconds_per_call < 0.0 {
+            return;
+        }
+        if let Some((_, s)) = self.arms.iter_mut().find(|(i, _)| *i == imp) {
+            s.record_n(seconds_per_call, k);
+            return;
+        }
+        let mut s = EwmaStats::new(self.alpha);
+        s.record_n(seconds_per_call, k);
+        self.arms.push((imp, s));
+    }
+
+    /// Stats for `imp`, if any sample has arrived.
+    pub fn stats(&self, imp: Implementation) -> Option<&EwmaStats> {
+        self.arms.iter().find(|(i, _)| *i == imp).map(|(_, s)| s)
+    }
+
+    /// EW mean seconds per call of `imp` (`None` when unmeasured).
+    pub fn mean(&self, imp: Implementation) -> Option<f64> {
+        self.stats(imp).and_then(|s| s.mean())
+    }
+
+    /// Samples absorbed for `imp`.
+    pub fn samples(&self, imp: Implementation) -> u64 {
+        self.stats(imp).map_or(0, |s| s.count())
+    }
+
+    /// The measured cost ratio `t_a / t_b` when both arms are measured
+    /// (the live analogue of the offline `R_ell = t_crs / t_imp`).
+    pub fn ratio(&self, a: Implementation, b: Implementation) -> Option<f64> {
+        match (self.mean(a), self.mean(b)) {
+            (Some(ta), Some(tb)) if tb > 0.0 => Some(ta / tb),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_tracks_mean_and_decays_old_samples() {
+        let mut s = EwmaStats::new(0.5);
+        assert_eq!(s.mean(), None);
+        s.record(1.0);
+        assert_eq!(s.mean(), Some(1.0));
+        assert!(s.confident(1));
+        assert!(!s.confident(2));
+        // Shift the level: EWMA must converge toward the new value.
+        for _ in 0..30 {
+            s.record(3.0);
+        }
+        let m = s.mean().unwrap();
+        assert!((m - 3.0).abs() < 1e-6, "mean {m} must forget the old level");
+        assert_eq!(s.count(), 31);
+    }
+
+    #[test]
+    fn batch_record_matches_repeated_singles() {
+        let mut a = EwmaStats::new(0.2);
+        let mut b = EwmaStats::new(0.2);
+        a.record_n(2e-3, 5);
+        for _ in 0..5 {
+            b.record(2e-3);
+        }
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(a.count(), b.count());
+    }
+
+    #[test]
+    fn variance_is_zero_for_constant_series() {
+        let mut s = EwmaStats::new(0.3);
+        for _ in 0..10 {
+            s.record(1e-4);
+        }
+        assert!(s.std() < 1e-12);
+        let mut noisy = EwmaStats::new(0.3);
+        for i in 0..10 {
+            noisy.record(if i % 2 == 0 { 1e-4 } else { 3e-4 });
+        }
+        assert!(noisy.std() > 0.0);
+    }
+
+    #[test]
+    fn telemetry_keys_arms_independently() {
+        let mut t = Telemetry::new(0.2);
+        t.record(Implementation::CsrRowPar, 2e-3, 4);
+        t.record(Implementation::EllRowInner, 1e-3, 2);
+        assert_eq!(t.samples(Implementation::CsrRowPar), 4);
+        assert_eq!(t.samples(Implementation::EllRowInner), 2);
+        assert_eq!(t.samples(Implementation::CsrSeq), 0);
+        assert_eq!(t.mean(Implementation::CsrSeq), None);
+        let r = t
+            .ratio(Implementation::CsrRowPar, Implementation::EllRowInner)
+            .unwrap();
+        assert!((r - 2.0).abs() < 1e-12, "R = t_crs/t_imp = {r}");
+    }
+
+    #[test]
+    fn degenerate_samples_are_ignored() {
+        let mut t = Telemetry::new(0.2);
+        t.record(Implementation::CsrSeq, f64::NAN, 1);
+        t.record(Implementation::CsrSeq, -1.0, 1);
+        t.record(Implementation::CsrSeq, 1.0, 0);
+        assert_eq!(t.samples(Implementation::CsrSeq), 0);
+    }
+}

@@ -1,6 +1,7 @@
-//! The paper's auto-tuning method (§2.2).
+//! The paper's auto-tuning method (§2.2), plus the adaptive runtime loop
+//! that closes it.
 //!
-//! Two phases:
+//! Three phases:
 //!
 //! * **Offline** ([`offline`]) — run once per machine install: benchmark a
 //!   suite of matrices, computing for each the statistic
@@ -11,12 +12,22 @@
 //! * **Online** ([`online`]) — run at every library call: compute `D_mat`
 //!   of the input matrix (one cheap O(n) pass) and transform to ELL iff
 //!   `D_mat < D*`.
+//! * **Adaptive** ([`adaptive`]) — run *while serving*: per-implementation
+//!   EWMA telemetry ([`adaptive::telemetry`]) measures the actual cost
+//!   ratio, epsilon-greedy shadow calls ([`adaptive::explore`]) keep the
+//!   rival arm's estimate fresh inside an overhead budget, a dead-band +
+//!   K-window hysteresis controller ([`adaptive::controller`]) re-decides
+//!   when the measurements contradict the offline table, and the flips
+//!   are persisted as per-`D_mat`-bucket corrections in the
+//!   `spmv-at-tuning v2` format ([`adaptive::learned`]) so the next
+//!   process start begins from the learned table.
 //!
 //! [`atlib`] wraps the decision in an OpenATLib-style numbered-switch
 //! interface (the paper's `OpenATI_DURMV`), and [`policy`] implements the
 //! memory-budget auto-tuning policy the paper cites for the 2×-memory
 //! drawback.
 
+pub mod adaptive;
 pub mod atlib;
 pub mod dmat;
 pub mod graph;
@@ -25,6 +36,7 @@ pub mod online;
 pub mod policy;
 pub mod ratios;
 
+pub use adaptive::{AdaptiveConfig, LearnedTuning};
 pub use dmat::RowStats;
 pub use graph::{DrGraph, DrPoint};
 pub use offline::{run_offline, OfflineConfig, OfflineResult, OfflineSample};

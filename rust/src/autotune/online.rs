@@ -30,11 +30,10 @@ pub struct TuningData {
 }
 
 impl TuningData {
-    /// Serialize as a small key-value text file (the environment carries
-    /// no serde; the format is stable and human-inspectable).
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// The key-value body shared by the v1 format and the v2 format's
+    /// base-table section (everything but the header line).
+    pub(crate) fn body_string(&self) -> String {
         let mut s = String::new();
-        s.push_str("spmv-at-tuning v1\n");
         s.push_str(&format!("backend\t{}\n", self.backend));
         s.push_str(&format!("imp\t{}\n", self.imp.name()));
         s.push_str(&format!("threads\t{}\n", self.threads));
@@ -43,19 +42,38 @@ impl TuningData {
             Some(d) => s.push_str(&format!("d_star\t{d}\n")),
             None => s.push_str("d_star\tnone\n"),
         }
+        s
+    }
+
+    /// Serialize as a small key-value text file (the environment carries
+    /// no serde; the format is stable and human-inspectable).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let s = format!("spmv-at-tuning v1\n{}", self.body_string());
         std::fs::write(path, s).map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
     }
 
-    /// Load a tuning table saved by [`TuningData::save`].
+    /// Load a tuning table saved by [`TuningData::save`]. This is the v1
+    /// loader: it rejects v2 files (learned corrections) explicitly —
+    /// load those with [`crate::autotune::adaptive::LearnedTuning::load`],
+    /// which also reads v1 files.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
         let mut lines = text.lines();
-        let header = lines.next().unwrap_or_default();
-        anyhow::ensure!(
-            header == "spmv-at-tuning v1",
-            "unrecognised tuning file header: {header}"
-        );
+        match lines.next().unwrap_or_default() {
+            "spmv-at-tuning v1" => Self::parse_body(lines),
+            "spmv-at-tuning v2" => anyhow::bail!(
+                "{} is a v2 tuning file (learned adaptive corrections); \
+                 load it with autotune::adaptive::LearnedTuning::load",
+                path.display()
+            ),
+            header => anyhow::bail!("unrecognised tuning file header: {header}"),
+        }
+    }
+
+    /// Parse the key-value body lines (shared by the v1 loader and the v2
+    /// loader in [`crate::autotune::adaptive::learned`]).
+    pub(crate) fn parse_body<'a>(lines: impl Iterator<Item = &'a str>) -> Result<Self> {
         let mut backend = None;
         let mut imp = None;
         let mut threads = None;

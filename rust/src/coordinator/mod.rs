@@ -14,6 +14,13 @@
 //!   spawns or per-call partitioning,
 //! * a **matrix registry** with per-matrix AT lifecycle state
 //!   ([`registry`]),
+//! * the **adaptive loop** (`SPMV_AT_ADAPTIVE`,
+//!   [`crate::autotune::adaptive`]): per-matrix telemetry, budgeted
+//!   exploration shadow calls, and a hysteresis-guarded controller that
+//!   flips the serving plan — promoting the cached shadow plan or parking
+//!   the transformed one, always on the matrix's own shard, never
+//!   touching the result a client sees — and folds each flip into the
+//!   learned v2 tuning table,
 //! * the optional **XLA runtime** so ELL SpMV can execute through the
 //!   AOT-compiled Pallas artifact instead of the native kernel,
 //! * and a channel-served **request loop** ([`server`]) so concurrent
@@ -32,7 +39,8 @@ pub use registry::{AtState, EntryStats, MatrixEntry};
 pub use server::{Client, Request, Server, SolverKind};
 pub use shards::{PlanShards, ShardedPlanner};
 
-use crate::autotune::online::{decide, TuningData};
+use crate::autotune::adaptive::{AdaptiveConfig, AdaptiveState, LearnedTuning};
+use crate::autotune::online::{decide, OnlineDecision, TuningData};
 use crate::autotune::MemoryPolicy;
 use crate::formats::{Csr, FormatKind, SparseMatrix};
 use crate::machine::MatrixShape;
@@ -67,14 +75,23 @@ pub struct CoordinatorConfig {
     pub shards: usize,
     /// ELL execution preference.
     pub ell_exec: EllExec,
+    /// The adaptive loop's tunables; `adaptive.enabled = false` is the
+    /// decide-once pipeline, byte for byte.
+    pub adaptive: AdaptiveConfig,
+    /// A pre-learned table (v2 corrections) to start from; `None` seeds a
+    /// correction-free table from `tuning`.
+    pub learned: Option<LearnedTuning>,
 }
 
 impl CoordinatorConfig {
     /// Config with an explicit tuning table and defaults elsewhere. The
     /// thread count comes from [`pool::configured_threads`] — the
     /// `SPMV_AT_THREADS` environment variable when set, hardware
-    /// parallelism otherwise — and the shard count from
-    /// [`shards::configured_shards`] (`SPMV_AT_SHARDS`, default 1).
+    /// parallelism otherwise — the shard count from
+    /// [`shards::configured_shards`] (`SPMV_AT_SHARDS`, default 1), and
+    /// the adaptive switch from
+    /// [`crate::autotune::adaptive::configured_adaptive`]
+    /// (`SPMV_AT_ADAPTIVE`, default off).
     pub fn new(tuning: TuningData) -> Self {
         Self {
             tuning,
@@ -82,6 +99,8 @@ impl CoordinatorConfig {
             threads: pool::configured_threads(),
             shards: shards::configured_shards(),
             ell_exec: EllExec::Native,
+            adaptive: AdaptiveConfig::from_env(),
+            learned: None,
         }
     }
 }
@@ -94,6 +113,7 @@ pub struct Coordinator {
     planner: ShardedPlanner,
     xla: Option<XlaHandle>,
     entries: HashMap<String, MatrixEntry>,
+    learned: LearnedTuning,
 }
 
 impl Coordinator {
@@ -109,7 +129,11 @@ impl Coordinator {
     /// New coordinator over an explicitly built [`ShardedPlanner`] (the
     /// sharded server hands each per-shard coordinator its own slice).
     pub fn with_planner(cfg: CoordinatorConfig, planner: ShardedPlanner) -> Self {
-        Self { cfg, planner, xla: None, entries: HashMap::new() }
+        let learned = cfg
+            .learned
+            .clone()
+            .unwrap_or_else(|| LearnedTuning::new(cfg.tuning.clone()));
+        Self { cfg, planner, xla: None, entries: HashMap::new(), learned }
     }
 
     /// Attach a handle to the XLA artifact service
@@ -125,36 +149,53 @@ impl Coordinator {
     }
 
     /// Register a matrix under `name`, running the §2.2 online phase
-    /// (compute `D_mat`, compare to `D*`, record the decision), routing
-    /// the matrix to its pool shard, and caching the baseline CRS plan
-    /// (a zero-copy `Arc` view of the registered matrix). The
-    /// transformation itself is deferred to the first SpMV so
-    /// registration stays cheap.
+    /// (compute `D_mat`, compare to `D*` — through the learned per-bucket
+    /// corrections when the adaptive loop is on — and record the
+    /// decision), routing the matrix to its pool shard, and caching the
+    /// baseline CRS plan (a zero-copy `Arc` view of the registered
+    /// matrix). The transformation itself is deferred to the first SpMV
+    /// so registration stays cheap.
     pub fn register(&mut self, name: &str, csr: Csr) -> Result<EntryStats> {
         anyhow::ensure!(
             !self.entries.contains_key(name),
             "matrix '{name}' already registered"
         );
         let csr = Arc::new(csr);
-        let mut decision = decide(&csr, &self.cfg.tuning);
+        let mut decision = self.decide_for(&csr);
         // Memory policy veto (the OpenATLib policy hook).
-        if decision.transform {
+        let candidate = self.cfg.tuning.imp;
+        let candidate_admitted = {
             let shape = MatrixShape::of(&csr);
-            if !self
-                .cfg
-                .policy
-                .admits(&shape, decision.chosen.required_format())
-            {
-                decision.transform = false;
-                decision.chosen = Implementation::CsrSeq;
-            }
+            self.cfg.policy.admits(&shape, candidate.required_format())
+        };
+        if decision.transform && !(decision.chosen == candidate && candidate_admitted) {
+            decision.transform = false;
+            decision.chosen = Implementation::CsrSeq;
         }
         let shard = self.planner.shard_of(name);
         let baseline = self.planner.planner(shard).plan_for(&csr, Implementation::CsrRowPar)?;
-        let entry = MatrixEntry::new(name.to_string(), csr, decision, baseline, shard);
+        let mut entry =
+            MatrixEntry::new(name.to_string(), csr, decision, baseline, candidate, shard);
+        if self.cfg.adaptive.enabled {
+            let mut ad = AdaptiveState::new(&self.cfg.adaptive, shards::fnv1a(name));
+            // A vetoed candidate can never serve: don't shadow-measure it.
+            ad.rival_dead = !candidate_admitted;
+            entry.adaptive = Some(ad);
+        }
         let stats = entry.stats();
         self.entries.insert(name.to_string(), entry);
         Ok(stats)
+    }
+
+    /// The online decision for a matrix: the factory table's §2.2
+    /// comparison, overridden by learned `D_mat`-bucket corrections when
+    /// the adaptive loop is on.
+    fn decide_for(&self, csr: &Csr) -> OnlineDecision {
+        if self.cfg.adaptive.enabled {
+            self.learned.decide(csr)
+        } else {
+            decide(csr, &self.cfg.tuning)
+        }
     }
 
     /// The pool shard a registry key routes to.
@@ -223,7 +264,11 @@ impl Coordinator {
                 true
             }
         };
-        entry.record_call(transformed, t0.elapsed().as_secs_f64());
+        let dt = t0.elapsed().as_secs_f64();
+        entry.record_call(transformed, dt);
+        if self.cfg.adaptive.enabled {
+            Self::adaptive_step(&self.planner, &mut self.learned, entry, x, None, 1, dt);
+        }
         Ok(y)
     }
 
@@ -244,6 +289,232 @@ impl Coordinator {
                 }
             }
         }
+    }
+
+    /// One adaptive-loop step after a served call (`batch = None`) or
+    /// batch (`batch = Some(xs)`) of `k` calls that took `serve_seconds`:
+    /// budget accounting, an epsilon-greedy shadow measurement of the
+    /// rival arm (output discarded — the served result is never touched),
+    /// and the hysteresis evaluation that may flip the serving plan. A
+    /// batched serve shadow-measures the rival as the same tiled SpMM, so
+    /// the two arms' per-call means stay comparable (a single-RHS shadow
+    /// against a per-RHS-amortised serving mean would make the rival look
+    /// `k`× slower than it is).
+    fn adaptive_step(
+        planner: &ShardedPlanner,
+        learned: &mut LearnedTuning,
+        entry: &mut MatrixEntry,
+        x: &[Value],
+        batch: Option<&[Vec<Value>]>,
+        k: u64,
+        serve_seconds: f64,
+    ) {
+        let Some(ad) = entry.adaptive.as_mut() else { return };
+        ad.explore.note_serve(serve_seconds);
+        let serving_is_baseline = matches!(entry.state, AtState::Baseline);
+        let serving_imp = match &entry.state {
+            AtState::Baseline => entry.baseline.implementation(),
+            AtState::Transformed { plan, .. } => plan.implementation(),
+        };
+        let rival_imp = if serving_is_baseline {
+            entry.candidate
+        } else {
+            entry.baseline.implementation()
+        };
+
+        // Shadow-measure the rival occasionally to keep its estimate fresh.
+        if !ad.rival_dead && ad.explore.should_explore() {
+            let t0 = std::time::Instant::now();
+            if serving_is_baseline && ad.shadow.is_none() {
+                // The rival plan does not exist yet: build it now (its
+                // build cost is exploration overhead, and it is kept, so
+                // a later flip promotes it in O(1)).
+                match planner.planner(entry.shard).plan_for(&entry.csr, entry.candidate) {
+                    Ok(p) => ad.shadow = Some(p),
+                    Err(_) => ad.rival_dead = true,
+                }
+            }
+            let rival_plan = if serving_is_baseline {
+                ad.shadow.as_mut()
+            } else {
+                Some(&mut entry.baseline)
+            };
+            if let Some(plan) = rival_plan {
+                match batch {
+                    Some(xs) => {
+                        // Shadow the whole batch through the rival's tiled
+                        // SpMM: same work shape as the serve it mirrors.
+                        // Output buffers are reused across explorations.
+                        let n = plan.n_rows();
+                        if ad.scratch_many.len() < xs.len() {
+                            ad.scratch_many.resize(xs.len(), Vec::new());
+                        }
+                        for y in ad.scratch_many.iter_mut().take(xs.len()) {
+                            y.resize(n, 0.0);
+                        }
+                        let ys = &mut ad.scratch_many[..xs.len()];
+                        let te = std::time::Instant::now();
+                        if plan.execute_many(xs, ys).is_ok() {
+                            let per_call =
+                                te.elapsed().as_secs_f64() / xs.len().max(1) as f64;
+                            ad.telemetry.record(rival_imp, per_call, xs.len() as u64);
+                        }
+                    }
+                    None => {
+                        ad.scratch.resize(plan.n_rows(), 0.0);
+                        let te = std::time::Instant::now();
+                        if plan.execute(x, &mut ad.scratch).is_ok() {
+                            ad.telemetry.record(rival_imp, te.elapsed().as_secs_f64(), 1);
+                        }
+                    }
+                }
+                ad.explore.note_explore(t0.elapsed().as_secs_f64());
+            }
+        }
+
+        // Hysteresis evaluation over the measured arms.
+        let serving_mean = ad.telemetry.mean(serving_imp);
+        let rival =
+            ad.telemetry.mean(rival_imp).map(|m| (m, ad.telemetry.samples(rival_imp)));
+        if ad.controller.note_serve(k, serving_mean, rival) {
+            // Flip failures (transform blow-up) mark the rival dead inside
+            // apply_flip; the serving path is unaffected either way.
+            let _ = Self::apply_flip(planner, learned, entry);
+        }
+    }
+
+    /// Swap which plan serves `entry` — the adaptive re-decision. From
+    /// baseline, the cached shadow plan is promoted (or built now on the
+    /// entry's own shard); from transformed, the plan is parked as the
+    /// shadow so flipping back is O(1). The flip is recorded in the
+    /// entry's replan counter and folded into the learned per-`D_mat`
+    /// bucket corrections as the live measured ratio `t_crs / t_imp`.
+    fn apply_flip(
+        planner: &ShardedPlanner,
+        learned: &mut LearnedTuning,
+        entry: &mut MatrixEntry,
+    ) -> Result<()> {
+        // Measured ratio *before* mutating state, from the live telemetry.
+        let measured_r = entry.adaptive.as_ref().and_then(|ad| {
+            ad.telemetry.ratio(entry.baseline.implementation(), entry.candidate)
+        });
+        if matches!(entry.state, AtState::Baseline) {
+            // The register-time memory-policy veto (and any failed build)
+            // marks the rival dead; a flip must honour it even when rival
+            // telemetry was injected from outside.
+            if entry.adaptive.as_ref().is_some_and(|ad| ad.rival_dead) {
+                anyhow::bail!(
+                    "candidate implementation unavailable for '{}' (vetoed or failed)",
+                    entry.name
+                );
+            }
+            let shadow = entry.adaptive.as_mut().and_then(|ad| ad.shadow.take());
+            let plan = match shadow {
+                Some(p) => p,
+                None => match planner.planner(entry.shard).plan_for(&entry.csr, entry.candidate) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        if let Some(ad) = entry.adaptive.as_mut() {
+                            ad.rival_dead = true;
+                        }
+                        return Err(e);
+                    }
+                },
+            };
+            let t_trans = plan.transform_seconds();
+            entry.state = AtState::Transformed { plan, t_trans };
+            entry.decision.transform = true;
+            entry.decision.chosen = entry.candidate;
+        } else {
+            let old = std::mem::replace(&mut entry.state, AtState::Baseline);
+            if let (AtState::Transformed { plan, .. }, Some(ad)) = (old, entry.adaptive.as_mut()) {
+                ad.shadow = Some(plan);
+            }
+            entry.decision.transform = false;
+            entry.decision.chosen = Implementation::CsrSeq;
+        }
+        entry.replans += 1;
+        if let Some(r) = measured_r {
+            learned.record(entry.decision.d_mat, r);
+        }
+        Ok(())
+    }
+
+    /// Force an immediate re-decision for `name`: re-run the online phase
+    /// (through the learned corrections when adaptive), flip the serving
+    /// plan if the decision changed, or — when it did not change but a
+    /// transformed plan is serving — rebuild it and
+    /// [`crate::spmv::SpmvPlan::swap_executable`] the fresh plan into the
+    /// serving slot
+    /// (fresh partition and batch tile, no pool teardown). Resets the
+    /// hysteresis state so the new choice gets its full K windows.
+    pub fn replan(&mut self, name: &str) -> Result<EntryStats> {
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}'"))?;
+        let decision = if self.cfg.adaptive.enabled {
+            self.learned.decide(&entry.csr)
+        } else {
+            decide(&entry.csr, &self.cfg.tuning)
+        };
+        let shape = MatrixShape::of(&entry.csr);
+        let want_transform = decision.transform
+            && self.cfg.policy.admits(&shape, entry.candidate.required_format());
+        let is_transformed = matches!(entry.state, AtState::Transformed { .. });
+        if want_transform != is_transformed {
+            Self::apply_flip(&self.planner, &mut self.learned, entry)?;
+        } else if is_transformed {
+            let fresh =
+                self.planner.planner(entry.shard).plan_for(&entry.csr, entry.candidate)?;
+            if let AtState::Transformed { plan, t_trans } = &mut entry.state {
+                *t_trans = fresh.transform_seconds();
+                plan.swap_executable(fresh);
+            }
+            entry.replans += 1;
+        }
+        if let Some(ad) = entry.adaptive.as_mut() {
+            ad.controller.reset();
+        }
+        Ok(entry.stats())
+    }
+
+    /// Inject a measured per-call timing sample for `(name, imp)` straight
+    /// into the adaptive telemetry — the hook benches and tests use to
+    /// drive the controller from [`crate::machine::MeasuredBackend`]
+    /// timings (or synthetic ones) without waiting for wall-clock serving
+    /// traffic to accumulate.
+    ///
+    /// # Errors
+    /// Fails for unknown matrices or when the adaptive loop is off.
+    pub fn inject_sample(
+        &mut self,
+        name: &str,
+        imp: Implementation,
+        seconds_per_call: f64,
+        k: u64,
+    ) -> Result<()> {
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}'"))?;
+        let ad = entry
+            .adaptive
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("adaptive loop is off (SPMV_AT_ADAPTIVE)"))?;
+        ad.telemetry.record(imp, seconds_per_call, k);
+        Ok(())
+    }
+
+    /// The learned tuning table (factory base + per-`D_mat`-bucket
+    /// corrections recorded by flips on this coordinator).
+    pub fn learned(&self) -> &LearnedTuning {
+        &self.learned
+    }
+
+    /// Whether the adaptive loop is on.
+    pub fn adaptive_enabled(&self) -> bool {
+        self.cfg.adaptive.enabled
     }
 
     /// Batched `Y = A·X` for a registered matrix: `xs` are multiple
@@ -292,7 +563,15 @@ impl Coordinator {
                 true
             }
         };
-        entry.record_batch(transformed, xs.len() as u64, t0.elapsed().as_secs_f64());
+        let dt = t0.elapsed().as_secs_f64();
+        entry.record_batch(transformed, xs.len() as u64, dt);
+        if self.cfg.adaptive.enabled {
+            // One batch counts as k served calls toward the controller's
+            // window; exploration shadows the same batch through the
+            // rival's tiled SpMM.
+            let k = xs.len() as u64;
+            Self::adaptive_step(&self.planner, &mut self.learned, entry, &xs[0], Some(xs), k, dt);
+        }
         Ok(ys)
     }
 
@@ -468,6 +747,63 @@ mod tests {
         let x = vec![1.0; 8];
         assert_eq!(c.spmv(&a, &x).unwrap(), x, "shard 0 serves correctly");
         assert_eq!(c.spmv(&b, &x).unwrap(), x, "shard 1 serves correctly");
+    }
+
+    #[test]
+    fn inject_sample_requires_adaptive() {
+        // Pin the loop off explicitly — the CI adaptive leg sets
+        // SPMV_AT_ADAPTIVE=1, which CoordinatorConfig::new would inherit.
+        let mut cfg = CoordinatorConfig::new(tuning(None));
+        cfg.threads = 2;
+        cfg.adaptive.enabled = false;
+        let mut c = Coordinator::new(cfg);
+        c.register("m", Csr::identity(4)).unwrap();
+        assert!(c.inject_sample("m", Implementation::EllRowInner, 1e-6, 4).is_err());
+        assert!(c.inject_sample("ghost", Implementation::EllRowInner, 1e-6, 4).is_err());
+        assert!(!c.adaptive_enabled());
+    }
+
+    #[test]
+    fn forced_replan_flips_and_swaps() {
+        // Adaptive on with exploration disabled: decisions only move when
+        // told to (injected telemetry / forced replan). EllRowInner keeps
+        // per-row accumulation order identical to CRS, so flips are
+        // bitwise-invisible.
+        let mut cfg = CoordinatorConfig::new(TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowInner,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        });
+        cfg.threads = 2;
+        cfg.adaptive.enabled = true;
+        cfg.adaptive.epsilon = 0.0;
+        let mut c = Coordinator::new(cfg);
+        let mut rng = Rng::new(17);
+        let a = banded_circulant(&mut rng, 96, &[-1, 0, 1]);
+        c.register("band", a).unwrap();
+        let x = vec![1.0; 96];
+        let first = c.spmv("band", &x).unwrap();
+        assert_eq!(c.serving_format("band"), Some(FormatKind::Ell));
+
+        // Learned correction says the transformation does NOT pay for this
+        // D_mat bucket: the forced replan must flip back to CRS.
+        c.learned.record(0.0, 0.25);
+        let s = c.replan("band").unwrap();
+        assert_eq!(c.serving_format("band"), Some(FormatKind::Csr));
+        assert_eq!(s.replans, 1);
+        assert_eq!(c.spmv("band", &x).unwrap(), first, "flip must not change results");
+        // The transformed plan is parked, not dropped: still accounted.
+        assert!(c.extra_bytes() > 0, "shadow plan keeps its bytes");
+
+        // Correction now says it pays again: flip forward, promoting the
+        // parked shadow in O(1); replans counts both flips.
+        c.learned.record(0.0, 100.0); // running mean pulls >= c
+        let s = c.replan("band").unwrap();
+        assert_eq!(c.serving_format("band"), Some(FormatKind::Ell));
+        assert_eq!(s.replans, 2);
+        assert_eq!(c.spmv("band", &x).unwrap(), first);
     }
 
     #[test]

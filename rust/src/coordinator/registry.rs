@@ -17,6 +17,7 @@
 //! calls the transformed copy has served and whether the transformation
 //! cost has been repaid — makes the §2.2 break-even analysis observable.
 
+use crate::autotune::adaptive::AdaptiveState;
 use crate::autotune::online::OnlineDecision;
 use crate::formats::Csr;
 use crate::spmv::{Implementation, SpmvPlan};
@@ -47,6 +48,10 @@ pub struct MatrixEntry {
     pub decision: OnlineDecision,
     /// The cached CRS baseline plan serving the [`AtState::Baseline`] state.
     pub baseline: SpmvPlan,
+    /// The rival (transform-target) implementation the adaptive loop
+    /// measures against — the tuning table's candidate, regardless of
+    /// what the online decision chose.
+    pub candidate: Implementation,
     /// The pool shard this matrix's plans build and execute on.
     pub shard: usize,
     /// Current execution state.
@@ -59,16 +64,22 @@ pub struct MatrixEntry {
     pub t_crs_mean: f64,
     /// Measured seconds of transformed SpMV (running mean).
     pub t_imp_mean: f64,
+    /// Per-matrix adaptive loop state (`None` when the coordinator runs
+    /// the decide-once pipeline).
+    pub adaptive: Option<AdaptiveState>,
+    /// Serving-plan flips applied (controller-initiated or forced).
+    pub replans: u64,
 }
 
 impl MatrixEntry {
     /// New entry in the baseline state, serving through `baseline` on
-    /// pool shard `shard`.
+    /// pool shard `shard`, with `candidate` as the transform-target arm.
     pub fn new(
         name: String,
         csr: Arc<Csr>,
         decision: OnlineDecision,
         baseline: SpmvPlan,
+        candidate: Implementation,
         shard: usize,
     ) -> Self {
         Self {
@@ -76,12 +87,15 @@ impl MatrixEntry {
             csr,
             decision,
             baseline,
+            candidate,
             shard,
             state: AtState::Baseline,
             calls: 0,
             transformed_calls: 0,
             t_crs_mean: 0.0,
             t_imp_mean: 0.0,
+            adaptive: None,
+            replans: 0,
         }
     }
 
@@ -93,14 +107,21 @@ impl MatrixEntry {
         }
     }
 
+    /// The measured per-call saving of the transformed kernel over CRS,
+    /// clamped at zero — the single definition both the amortisation test
+    /// and the break-even estimate use (an unclamped negative saving
+    /// would let `calls · saving` go *backwards* past `t_trans`).
+    pub fn per_call_saving(&self) -> f64 {
+        (self.t_crs_mean - self.t_imp_mean).max(0.0)
+    }
+
     /// Whether the transformation cost has been repaid by the measured
-    /// per-call saving: `transformed_calls · (t_crs − t_imp) ≥ t_trans`.
+    /// per-call saving: `transformed_calls · saving ≥ t_trans`.
     pub fn amortized(&self) -> bool {
         match &self.state {
             AtState::Baseline => true,
             AtState::Transformed { t_trans, .. } => {
-                let saving = (self.t_crs_mean - self.t_imp_mean).max(0.0);
-                self.transformed_calls as f64 * saving >= *t_trans
+                self.transformed_calls as f64 * self.per_call_saving() >= *t_trans
             }
         }
     }
@@ -111,9 +132,11 @@ impl MatrixEntry {
         match &self.state {
             AtState::Baseline => 0.0,
             AtState::Transformed { t_trans, .. } => {
-                let saving = self.t_crs_mean - self.t_imp_mean;
+                let saving = self.per_call_saving();
                 if saving <= 0.0 {
-                    return f64::INFINITY;
+                    // Zero (clamped) saving: break-even only if nothing is
+                    // owed — consistent with `amortized`.
+                    return if *t_trans <= 0.0 { 0.0 } else { f64::INFINITY };
                 }
                 (t_trans / saving - self.transformed_calls as f64).max(0.0)
             }
@@ -127,7 +150,9 @@ impl MatrixEntry {
 
     /// Record a batch of `k` calls served in `seconds_total` (one tiled
     /// SpMM dispatch): the running means absorb `k` samples at the
-    /// per-call average.
+    /// per-call average, and — when the adaptive loop is on — the same
+    /// samples feed the per-implementation EWMA telemetry, keyed by the
+    /// kernel that actually executed.
     pub fn record_batch(&mut self, transformed: bool, k: u64, seconds_total: f64) {
         if k == 0 {
             return;
@@ -142,15 +167,29 @@ impl MatrixEntry {
             let n = (self.calls - self.transformed_calls) as f64;
             self.t_crs_mean += (per_call - self.t_crs_mean) * (k as f64 / n);
         }
+        let imp = match &self.state {
+            AtState::Baseline => self.baseline.implementation(),
+            AtState::Transformed { plan, .. } => plan.implementation(),
+        };
+        if let Some(ad) = &mut self.adaptive {
+            ad.telemetry.record(imp, per_call, k);
+        }
     }
 
-    /// Extra memory held by the transformed copy, bytes (the baseline plan
-    /// serves from CRS and counts as zero).
+    /// Extra memory held beyond the CRS original: the transformed copy
+    /// when serving it, plus the parked shadow plan the adaptive loop
+    /// keeps warm for O(1) flips.
     pub fn extra_bytes(&self) -> usize {
-        match &self.state {
+        let serving = match &self.state {
             AtState::Baseline => 0,
             AtState::Transformed { plan, .. } => plan.extra_bytes(),
-        }
+        };
+        let shadow = self
+            .adaptive
+            .as_ref()
+            .and_then(|ad| ad.shadow.as_ref())
+            .map_or(0, |p| p.extra_bytes());
+        serving + shadow
     }
 }
 
@@ -177,6 +216,15 @@ pub struct EntryStats {
     pub amortized: bool,
     /// Extra bytes held.
     pub extra_bytes: usize,
+    /// Serving-plan flips applied so far (adaptive re-decisions + forced
+    /// replans).
+    pub replans: u64,
+    /// Exploration shadow calls taken (0 when adaptive is off).
+    pub explored: u64,
+    /// Telemetry samples on the CRS baseline arm.
+    pub samples_crs: u64,
+    /// Telemetry samples on the candidate (transform-target) arm.
+    pub samples_imp: u64,
 }
 
 impl MatrixEntry {
@@ -184,6 +232,14 @@ impl MatrixEntry {
     /// CRS switch regardless of which CRS kernel the baseline plan runs.
     pub fn stats(&self) -> EntryStats {
         use crate::formats::SparseMatrix as _;
+        let (explored, samples_crs, samples_imp) = match &self.adaptive {
+            None => (0, 0, 0),
+            Some(ad) => (
+                ad.explore.explored(),
+                ad.telemetry.samples(self.baseline.implementation()),
+                ad.telemetry.samples(self.candidate),
+            ),
+        };
         EntryStats {
             name: self.name.clone(),
             n: self.csr.n_rows(),
@@ -198,6 +254,10 @@ impl MatrixEntry {
             t_trans: self.t_trans(),
             amortized: self.amortized(),
             extra_bytes: self.extra_bytes(),
+            replans: self.replans,
+            explored,
+            samples_crs,
+            samples_imp,
         }
     }
 }
@@ -249,6 +309,7 @@ mod tests {
             Arc::new(Csr::identity(4)),
             decision(transform),
             crs_plan(4),
+            Implementation::EllRowOuter,
             0,
         )
     }
@@ -258,7 +319,14 @@ mod tests {
         let csr = Arc::new(Csr::identity(6));
         let pool = Arc::new(ParPool::new(1));
         let baseline = SpmvPlan::build(&csr, Implementation::CsrRowPar, None, pool).unwrap();
-        let e = MatrixEntry::new("m".into(), csr.clone(), decision(false), baseline, 0);
+        let e = MatrixEntry::new(
+            "m".into(),
+            csr.clone(),
+            decision(false),
+            baseline,
+            Implementation::EllRowOuter,
+            0,
+        );
         match e.baseline.matrix() {
             crate::spmv::AnyMatrix::Csr(shared) => {
                 assert!(Arc::ptr_eq(shared, &csr), "baseline must not clone the CRS");
@@ -320,6 +388,47 @@ mod tests {
         e.record_call(true, 2e-4); // slower than CRS
         assert!(!e.amortized());
         assert!(e.calls_to_break_even().is_infinite());
+    }
+
+    #[test]
+    fn negative_saving_is_clamped_consistently() {
+        // Regression: amortized() clamped the saving while
+        // calls_to_break_even() did not — both now share per_call_saving().
+        let mut e = entry(true);
+        e.record_call(false, 1e-4);
+        e.state = ell_plan(4, 5e-3);
+        // Transformed kernel measures *slower*: negative raw saving.
+        for _ in 0..1_000 {
+            e.record_call(true, 2e-4);
+        }
+        assert_eq!(e.per_call_saving(), 0.0, "saving clamps at zero");
+        assert!(
+            !e.amortized(),
+            "a slower kernel must never report amortised, however many calls"
+        );
+        assert!(e.calls_to_break_even().is_infinite());
+        // Zero-cost transformation with zero saving: nothing owed.
+        e.state = ell_plan(4, 0.0);
+        assert!(e.amortized());
+        assert_eq!(e.calls_to_break_even(), 0.0);
+    }
+
+    #[test]
+    fn record_batch_feeds_adaptive_telemetry_by_serving_kernel() {
+        use crate::autotune::adaptive::{AdaptiveConfig, AdaptiveState};
+        let mut e = entry(true);
+        e.adaptive = Some(AdaptiveState::new(&AdaptiveConfig::default(), 1));
+        e.record_batch(false, 3, 3e-3); // baseline serves: CsrSeq plan here
+        e.state = ell_plan(4, 1e-3);
+        e.record_batch(true, 2, 2e-4);
+        let ad = e.adaptive.as_ref().unwrap();
+        assert_eq!(ad.telemetry.samples(e.baseline.implementation()), 3);
+        assert_eq!(ad.telemetry.samples(Implementation::EllRowOuter), 2);
+        let s = e.stats();
+        assert_eq!(s.samples_crs, 3);
+        assert_eq!(s.samples_imp, 2);
+        assert_eq!(s.replans, 0);
+        assert_eq!(s.explored, 0);
     }
 
     #[test]

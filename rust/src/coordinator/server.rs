@@ -96,6 +96,14 @@ pub enum Request {
         /// Response: one output per input.
         resp: mpsc::Sender<Result<Vec<Vec<Value>>>>,
     },
+    /// Force a re-decision for one matrix (the adaptive loop's manual
+    /// override; also rebuilds/swaps the serving plan when appropriate).
+    Replan {
+        /// Registry key.
+        name: String,
+        /// Response: stats row after the re-decision.
+        resp: mpsc::Sender<Result<EntryStats>>,
+    },
     /// All stats rows.
     Stats {
         /// Response channel.
@@ -168,6 +176,15 @@ impl Client {
         let (resp, rx) = mpsc::channel();
         self.tx_for(name)
             .send(Request::SpmvBatch { name: name.into(), xs, resp })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
+    }
+
+    /// Force a re-decision for a matrix (routed to its shard).
+    pub fn replan(&self, name: &str) -> Result<EntryStats> {
+        let (resp, rx) = mpsc::channel();
+        self.tx_for(name)
+            .send(Request::Replan { name: name.into(), resp })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped response"))?
     }
@@ -290,6 +307,9 @@ impl Server {
                 }
                 Request::SpmvBatch { name, xs, resp } => {
                     let _ = resp.send(coord.spmv_batch(&name, &xs));
+                }
+                Request::Replan { name, resp } => {
+                    let _ = resp.send(coord.replan(&name));
                 }
                 Request::Stats { resp } => {
                     let _ = resp.send(coord.stats());
@@ -454,6 +474,7 @@ mod tests {
     fn errors_propagate_to_clients() {
         let (_srv, client) = server();
         assert!(client.spmv("ghost", vec![1.0]).is_err());
+        assert!(client.replan("ghost").is_err());
         assert!(client
             .solve("ghost", vec![1.0], SolverKind::Cg, SolverOptions::default())
             .is_err());

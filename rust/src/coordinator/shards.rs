@@ -15,6 +15,11 @@
 //!
 //! This is also the hook the NUMA roadmap item builds on: pinning each
 //! shard's pool to one socket turns key-routing into locality-routing.
+//! The adaptive layer rides the same partitioning: every shard's
+//! coordinator owns the [`crate::autotune::adaptive`] controllers for the
+//! matrices routed to it, so re-planning happens on the matrix's own
+//! shard — rebuilds never cross worker sets, and a flip on one shard
+//! cannot stall serving on another.
 
 use crate::autotune::online::TuningData;
 use crate::autotune::MemoryPolicy;
@@ -47,8 +52,9 @@ pub fn shard_thread_counts(total_threads: usize, shards: usize) -> Vec<usize> {
 }
 
 /// Stable FNV-1a over the registry key — deterministic across processes
-/// (unlike `DefaultHasher`), so a key always lands on the same shard.
-fn fnv1a(key: &str) -> u64 {
+/// (unlike `DefaultHasher`), so a key always lands on the same shard (and
+/// the adaptive layer can seed per-matrix exploration deterministically).
+pub(crate) fn fnv1a(key: &str) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in key.as_bytes() {
         h ^= u64::from(*b);

@@ -10,11 +10,15 @@
 //!                coordinator::shards — N pools, key-routed matrices,
 //!                runtime (XLA/PJRT artifacts)     │  one server loop/shard
 //!   autotune     offline/online AT phases, D_mat, │D*, memory policy
-//!                        │ decision               │ cached SpmvPlan
+//!                autotune::adaptive — telemetry (EWMA/imp) · ε-explore ·
+//!                hysteresis controller · learned v2 table; per-shard
+//!                controllers re-plan serving entries under load
+//!                        │ decision (re-decidable) │ cached SpmvPlan
 //!   execution    spmv::plan  Planner ──▶ SpmvPlan{ AnyMatrix, partition,
 //!   engine                                         Workspace, pool, tile }
 //!                execute (SpMV) · execute_many (tiled SpMM: one matrix
-//!                pass per SPMV_AT_BATCH_TILE right-hand sides)
+//!                pass per SPMV_AT_BATCH_TILE right-hand sides) ·
+//!                swap_executable (O(1) plan swap, no pool teardown)
 //!                spmv::pool  ParPool — persistent parked workers;
 //!                            the crate's only thread-spawning site
 //!   substrates   formats · transform · spmv kernels · matrixgen · io
@@ -38,7 +42,15 @@
 //!   executes through cached plans.
 //! * **The paper's contribution** — the auto-tuning engine ([`autotune`]):
 //!   the `D_mat` statistic, the `R_ell` cost ratio, the `D_mat`–`R_ell`
-//!   graph with its `D*` threshold, and the offline/online AT phases.
+//!   graph with its `D*` threshold, and the offline/online AT phases —
+//!   extended by the **adaptive runtime loop** ([`autotune::adaptive`],
+//!   `SPMV_AT_ADAPTIVE`): per-implementation EWMA telemetry on served
+//!   traffic, budgeted epsilon-greedy shadow measurement of the rival
+//!   kernel, a dead-band + K-window hysteresis controller that re-plans a
+//!   matrix when the measured ratio contradicts the offline table, and a
+//!   `spmv-at-tuning v2` table persisting the learned per-`D_mat`-bucket
+//!   corrections. Exploration and re-planning never change served
+//!   results; with the flag off the pipeline is the decide-once one.
 //! * **The serving layer** — a PJRT-backed runtime ([`runtime`]) that
 //!   executes AOT-compiled JAX/Pallas SpMV artifacts, and a coordinator
 //!   ([`coordinator`]) that owns matrix lifecycles, routes SpMV requests
@@ -52,9 +64,11 @@
 //! variable when set, hardware parallelism otherwise) sizes the global
 //! pool, `CoordinatorConfig::new`, and the CLI defaults; shard-count truth
 //! likewise in [`coordinator::shards::configured_shards`]
-//! (`SPMV_AT_SHARDS`, default 1) and batch-tile truth in
+//! (`SPMV_AT_SHARDS`, default 1), batch-tile truth in
 //! [`spmv::plan::configured_batch_tile`] (`SPMV_AT_BATCH_TILE`, default
-//! sized to the last-level cache).
+//! sized to the last-level cache), and adaptive-loop truth in
+//! [`autotune::adaptive::configured_adaptive`] (`SPMV_AT_ADAPTIVE`,
+//! default off).
 //!
 //! Quick start:
 //!

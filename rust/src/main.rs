@@ -15,6 +15,7 @@
 //! are `--key value` pairs parsed by [`Args`].
 
 use anyhow::{anyhow, bail, ensure, Result};
+use spmv_at::autotune::adaptive::LearnedTuning;
 use spmv_at::autotune::atlib::{switches, Durmv};
 use spmv_at::autotune::online::TuningData;
 use spmv_at::autotune::{run_offline, MemoryPolicy, OfflineConfig};
@@ -71,6 +72,19 @@ impl Args {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        }
+    }
+
+    /// `--key 0|1|true|false|on|off`; `None` when the flag is absent (so
+    /// the environment default applies).
+    fn parse_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "1" | "true" | "on" | "yes" => Ok(Some(true)),
+                "0" | "false" | "off" | "no" => Ok(Some(false)),
+                other => Err(anyhow!("--{key}: expected 0/1, got '{other}'")),
+            },
         }
     }
 }
@@ -254,6 +268,10 @@ fn cmd_solve(args: &Args) -> Result<()> {
     cfg.threads = args.parse_usize("threads", configured_threads())?;
     // SPMV_AT_SHARDS (default 1) unless --shards overrides.
     cfg.shards = args.parse_usize("shards", cfg.shards)?;
+    // SPMV_AT_ADAPTIVE (default off) unless --adaptive overrides.
+    if let Some(on) = args.parse_bool("adaptive")? {
+        cfg.adaptive.enabled = on;
+    }
     let (_srv, client) = Server::spawn_sharded(cfg, 32);
     client.register(&name, a)?;
     let b = vec![1.0; n];
@@ -275,8 +293,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
     );
     for row in client.stats()? {
         println!(
-            "  serving={} calls={} transformed_calls={} t_trans={:.6}s amortized={}",
-            row.serving, row.calls, row.transformed_calls, row.t_trans, row.amortized
+            "  serving={} calls={} transformed_calls={} t_trans={:.6}s amortized={} \
+             explored={} replans={}",
+            row.serving,
+            row.calls,
+            row.transformed_calls,
+            row.t_trans,
+            row.amortized,
+            row.explored,
+            row.replans
         );
     }
     Ok(())
@@ -284,16 +309,41 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::io::BufRead;
-    let tuning = load_tuning(args)?;
+    let mut tuning = load_tuning(args)?;
+    // --learned <path>: start from a learned v2 table (reads v1 too) and
+    // save the corrections back on quit, closing the persistence loop.
+    let learned_path = args.get("learned").map(PathBuf::from);
+    let mut preloaded = None;
+    if let Some(p) = &learned_path {
+        if p.exists() {
+            let lt = LearnedTuning::load(p)?;
+            println!(
+                "# learned table loaded from {} ({} corrected bucket(s))",
+                p.display(),
+                lt.corrected_buckets()
+            );
+            tuning = lt.base.clone();
+            preloaded = Some(lt);
+        }
+    }
     let mut cfg = CoordinatorConfig::new(tuning);
+    // Every shard coordinator starts from the same snapshot; the quit-time
+    // merge folds in only each shard's delta beyond it.
+    let preload_snapshot = preloaded.clone();
+    cfg.learned = preloaded;
     cfg.threads = args.parse_usize("threads", configured_threads())?;
     // SPMV_AT_SHARDS (default 1) unless --shards overrides.
     cfg.shards = args.parse_usize("shards", cfg.shards)?;
+    // SPMV_AT_ADAPTIVE (default off) unless --adaptive overrides.
+    if let Some(on) = args.parse_bool("adaptive")? {
+        cfg.adaptive.enabled = on;
+    }
     // Attach XLA runtime if artifacts exist (XLA serving is single-loop:
     // the artifact handle is not shared across shard coordinators).
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let mut _xla_service = None;
-    let (_srv, client) = if art.join("manifest.tsv").exists() {
+    let adaptive_on = cfg.adaptive.enabled;
+    let (srv, client) = if art.join("manifest.tsv").exists() {
         let mut coord = Coordinator::new(cfg);
         match spmv_at::runtime::XlaService::spawn(art) {
             Ok((svc, handle)) => {
@@ -308,10 +358,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         Server::spawn(coord, 64)
     } else {
-        println!("# serving {} shard(s), {} thread(s)", cfg.shards.max(1), cfg.threads);
+        println!(
+            "# serving {} shard(s), {} thread(s), adaptive={}",
+            cfg.shards.max(1),
+            cfg.threads,
+            if adaptive_on { "on" } else { "off" }
+        );
         Server::spawn_sharded(cfg, 64)
     };
-    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | spmm <name> <batch> | stats | evict <name> | quit");
+    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | spmm <name> <batch> | stats | replan <name> | evict <name> | quit");
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
         let line = line?;
@@ -368,16 +423,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ["stats"] => {
                 for s in client.stats()? {
                     println!(
-                        "{}: n={} nnz={} D={:.3} serving={} calls={} amortized={}",
-                        s.name, s.n, s.nnz, s.d_mat, s.serving, s.calls, s.amortized
+                        "{}: n={} nnz={} D={:.3} serving={} calls={} amortized={} \
+                         samples=crs:{}/imp:{} explored={} replans={}",
+                        s.name,
+                        s.n,
+                        s.nnz,
+                        s.d_mat,
+                        s.serving,
+                        s.calls,
+                        s.amortized,
+                        s.samples_crs,
+                        s.samples_imp,
+                        s.explored,
+                        s.replans
                     );
                 }
             }
+            ["replan", name] => match client.replan(name) {
+                Ok(s) => println!("ok serving={} replans={}", s.serving, s.replans),
+                Err(e) => println!("! {e}"),
+            },
             ["evict", name] => {
                 println!("{}", if client.evict(name)? { "ok" } else { "! not found" });
             }
             other => println!("! unknown command {other:?}"),
         }
+    }
+    if let Some(p) = &learned_path {
+        // Merge what every shard coordinator learned beyond the shared
+        // preloaded snapshot and persist it as v2 (a plain merge would
+        // count the preload once per shard).
+        let coords = srv.shutdown_all();
+        let Some(first) = coords.first() else { return Ok(()) };
+        let base = preload_snapshot
+            .unwrap_or_else(|| LearnedTuning::new(first.learned().base.clone()));
+        let shard_tables: Vec<&LearnedTuning> = coords.iter().map(|c| c.learned()).collect();
+        let merged = base.merge_deltas(&shard_tables);
+        merged.save(p)?;
+        println!(
+            "# learned table saved to {} ({} corrected bucket(s))",
+            p.display(),
+            merged.corrected_buckets()
+        );
     }
     Ok(())
 }
@@ -385,13 +472,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn usage() -> ! {
     eprintln!(
         "usage: spmv-at <suite|offline|decide|spmv|solve|serve> [--flag value]...\n\
+         flags (solve/serve):\n\
+         \x20 --adaptive 0|1   adaptive runtime autotuner: online telemetry, budgeted\n\
+         \x20                  exploration, hysteresis-guarded re-planning\n\
+         \x20                  (overrides the SPMV_AT_ADAPTIVE environment variable)\n\
+         \x20 --learned <path> (serve) start from a learned v2 tuning table and save\n\
+         \x20                  the per-D_mat-bucket corrections back on quit\n\
          examples:\n\
          \x20 spmv-at suite --scale 0.05\n\
          \x20 spmv-at offline --backend es2 --scale 0.05 --out tuning-es2.tsv\n\
          \x20 spmv-at decide --tuning tuning-es2.tsv --matrix memplus\n\
          \x20 spmv-at spmv --matrix chem_master1 --switch 0 --iters 100 --batch 16\n\
-         \x20 spmv-at solve --matrix xenon1 --solver cg\n\
-         \x20 spmv-at serve --shards 4"
+         \x20 spmv-at solve --matrix xenon1 --solver cg --adaptive 1\n\
+         \x20 spmv-at serve --shards 4 --adaptive 1 --learned learned.tsv"
     );
     std::process::exit(2)
 }

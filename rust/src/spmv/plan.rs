@@ -315,6 +315,34 @@ impl SpmvPlan {
     pub fn pool(&self) -> &Arc<ParPool> {
         &self.pool
     }
+
+    /// Swap this plan's executable state — implementation, representation,
+    /// partition, batch tile, transform accounting — for `new`'s, while
+    /// keeping the accumulated `calls`/`matrix_passes` counters and
+    /// whichever workspace allocation is larger. The worker pool is an
+    /// `Arc` handle either way, so nothing is torn down or respawned: the
+    /// adaptive controller uses this to re-point a serving slot at a
+    /// re-decided plan in O(1) under load.
+    ///
+    /// # Panics
+    /// Panics if `new` is a plan for a different operator shape.
+    pub fn swap_executable(&mut self, new: SpmvPlan) {
+        assert_eq!(
+            (new.n_rows, new.n_cols),
+            (self.n_rows, self.n_cols),
+            "swap_executable requires plans over the same operator"
+        );
+        let SpmvPlan { imp, matrix, ranges, ws, pool, transform_seconds, batch_tile, .. } = new;
+        self.imp = imp;
+        self.matrix = matrix;
+        self.ranges = ranges;
+        self.pool = pool;
+        self.transform_seconds = transform_seconds;
+        self.batch_tile = batch_tile;
+        if ws.capacity_bytes() > self.ws.capacity_bytes() {
+            self.ws = ws;
+        }
+    }
 }
 
 impl std::fmt::Debug for SpmvPlan {
@@ -528,6 +556,44 @@ mod tests {
         let good_x = vec![vec![0.0; 8]; 2];
         let mut bad_y = vec![vec![0.0; 9]; 2];
         assert!(plan.execute_many(&good_x, &mut bad_y).is_err());
+    }
+
+    #[test]
+    fn swap_executable_keeps_counters_and_pool() {
+        let mut rng = Rng::new(45);
+        let a = Arc::new(banded_circulant(&mut rng, 64, &[-1, 0, 1]));
+        let pool = Arc::new(ParPool::new(2));
+        let mut plan = SpmvPlan::build(&a, Implementation::CsrRowPar, None, pool.clone()).unwrap();
+        let x: Vec<Value> = (0..64).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut want = vec![0.0; 64];
+        a.spmv(&x, &mut want);
+        let mut y = vec![0.0; 64];
+        plan.execute(&x, &mut y).unwrap();
+        let (calls, passes) = (plan.calls(), plan.matrix_passes());
+
+        // Re-point the slot at an ELL plan built on the same pool.
+        let ell = SpmvPlan::build(&a, Implementation::EllRowInner, None, pool.clone()).unwrap();
+        plan.swap_executable(ell);
+        assert_eq!(plan.implementation(), Implementation::EllRowInner);
+        assert_eq!(plan.kind(), FormatKind::Ell);
+        assert!(Arc::ptr_eq(plan.pool(), &pool), "no pool teardown across the swap");
+        assert_eq!(plan.calls(), calls, "cumulative counters survive");
+        assert_eq!(plan.matrix_passes(), passes);
+        plan.execute(&x, &mut y).unwrap();
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+        assert_eq!(plan.calls(), calls + 1);
+
+        // Shape mismatches are rejected loudly.
+        let other = Arc::new(Csr::identity(8));
+        let wrong =
+            SpmvPlan::build(&other, Implementation::CsrSeq, None, Arc::new(ParPool::new(1)))
+                .unwrap();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.swap_executable(wrong);
+        }));
+        assert!(err.is_err());
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Adaptive-loop invariants, end to end through the coordinator and the
+//! sharded server:
+//!
+//! * exploration (shadow measurement) never changes served results —
+//!   bitwise against the `csr_seq` reference, across thread counts;
+//! * a wrong offline decision is re-planned to the measured-faster
+//!   implementation within K controller windows, observably via the
+//!   replan counters, with results bitwise-stable across the flip;
+//! * hysteresis suppresses flip-flapping under alternating synthetic
+//!   timings;
+//! * with the flag off, the pipeline is the decide-once one (no
+//!   telemetry hooks, no flips, injection rejected);
+//! * the `spmv-at-tuning` v1/v2 formats round-trip and cross-load the
+//!   way the forward-compat contract promises.
+//!
+//! The tuning candidate everywhere is ELL-Row *inner*: its per-row
+//! accumulation order matches sequential CRS exactly (row-partitioned,
+//! band-ordered, no cross-chunk reduction), so "bitwise vs `csr_seq`"
+//! holds for every serving choice the controller can make.
+
+use spmv_at::autotune::adaptive::LearnedTuning;
+use spmv_at::autotune::online::TuningData;
+use spmv_at::coordinator::{Coordinator, CoordinatorConfig, Server};
+use spmv_at::formats::{Csr, FormatKind, SparseMatrix};
+use spmv_at::matrixgen::banded_circulant;
+use spmv_at::rng::Rng;
+use spmv_at::spmv::Implementation;
+use spmv_at::Value;
+
+fn tuning(d_star: Option<f64>) -> TuningData {
+    TuningData {
+        backend: "sim:ES2".into(),
+        imp: Implementation::EllRowInner,
+        threads: 1,
+        c: 1.0,
+        d_star,
+    }
+}
+
+fn cfg(d_star: Option<f64>, threads: usize, adaptive: bool) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(tuning(d_star));
+    cfg.threads = threads;
+    cfg.adaptive.enabled = adaptive;
+    // Deterministic tests: no wall-clock-driven exploration by default.
+    cfg.adaptive.epsilon = 0.0;
+    cfg
+}
+
+fn band(n: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    banded_circulant(&mut rng, n, &[-2, -1, 0, 1, 2])
+}
+
+fn reference(a: &Csr, x: &[Value]) -> Vec<Value> {
+    let mut y = vec![0.0; a.n_rows()];
+    a.spmv(x, &mut y); // csr_seq is Csr::spmv
+    y
+}
+
+#[test]
+fn exploration_never_changes_results_bitwise() {
+    for threads in [1usize, 2, 7] {
+        let a = band(160, 3);
+        let xs: Vec<Vec<Value>> = (0..6)
+            .map(|k| (0..160).map(|i| ((i * 3 + k) as f64 * 0.29).sin() - 0.4).collect())
+            .collect();
+
+        // Plain decide-once pipeline.
+        let mut plain = Coordinator::new(cfg(Some(3.1), threads, false));
+        plain.register("m", a.clone()).unwrap();
+
+        // Adaptive with exploration forced on every call, flips disabled so
+        // only the shadow machinery differs from the plain run.
+        let mut c = cfg(Some(3.1), threads, true);
+        c.adaptive.epsilon = 1.0;
+        c.adaptive.explore_warmup = 0;
+        c.adaptive.flip_windows = u32::MAX;
+        let mut explored = Coordinator::new(c);
+        explored.register("m", a.clone()).unwrap();
+
+        for x in &xs {
+            let want = reference(&a, x);
+            let yp = plain.spmv("m", x).unwrap();
+            let ye = explored.spmv("m", x).unwrap();
+            assert_eq!(yp, ye, "exploration must be invisible ({threads} threads)");
+            assert_eq!(ye, want, "bitwise vs csr_seq ({threads} threads)");
+        }
+        // Batched serving explores too (the whole batch is shadowed
+        // through the rival's tiled SpMM, keeping per-call means
+        // comparable across arms).
+        let yb = explored.spmv_batch("m", &xs).unwrap();
+        for (x, y) in xs.iter().zip(&yb) {
+            assert_eq!(*y, reference(&a, x), "batch bitwise vs csr_seq");
+        }
+        let s = &explored.stats()[0];
+        assert!(s.explored > 0, "shadow calls must have happened");
+        assert_eq!(s.replans, 0, "flips were disabled");
+        assert!(s.samples_imp > 0 || s.samples_crs > 0, "telemetry must fill");
+        // The plain run never explores and never builds telemetry.
+        let sp = &plain.stats()[0];
+        assert_eq!((sp.explored, sp.samples_crs, sp.samples_imp), (0, 0, 0));
+    }
+}
+
+#[test]
+fn wrong_keep_crs_decision_is_replanned_within_k_windows() {
+    // Offline table says "never transform" (no D*), but injected
+    // measurements (the synthetic stand-in for MeasuredBackend timings)
+    // show the candidate is far faster than any wall-clock serve.
+    let a = band(128, 5);
+    let mut c = Coordinator::new(cfg(None, 2, true));
+    c.register("m", a.clone()).unwrap();
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Csr));
+
+    let k_windows = {
+        let cfg = spmv_at::autotune::adaptive::AdaptiveConfig::default();
+        cfg.window * cfg.flip_windows as u64
+    };
+    c.inject_sample("m", Implementation::EllRowInner, 1e-12, 16).unwrap();
+
+    let x: Vec<Value> = (0..128).map(|i| (i as f64 * 0.41).cos()).collect();
+    let want = reference(&a, &x);
+    for call in 0..k_windows {
+        let y = c.spmv("m", &x).unwrap();
+        assert_eq!(y, want, "bitwise vs csr_seq at call {call}, across the flip");
+    }
+    assert_eq!(
+        c.serving_format("m"),
+        Some(FormatKind::Ell),
+        "the wrong decision must be corrected within K windows"
+    );
+    let s = &c.stats()[0];
+    assert_eq!(s.replans, 1, "the flip is observable in the counters");
+    assert_eq!(s.serving, Implementation::EllRowInner);
+    assert!(s.samples_crs > 0, "serving arm was measured");
+    // The flip was folded into the learned table for this D_mat bucket.
+    assert!(c.learned().correction(s.d_mat).is_some());
+    // And serving continues bitwise-stable after the flip.
+    assert_eq!(c.spmv("m", &x).unwrap(), want);
+}
+
+#[test]
+fn wrong_transform_decision_is_replanned_back_to_crs() {
+    // Offline table says "transform"; injected measurements say CRS wins.
+    let a = band(96, 6);
+    let mut c = Coordinator::new(cfg(Some(3.1), 2, true));
+    c.register("m", a.clone()).unwrap();
+    let x = vec![1.0; 96];
+    let want = reference(&a, &x);
+    assert_eq!(c.spmv("m", &x).unwrap(), want);
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Ell), "transformed on first call");
+
+    // Rival arm (the CRS baseline plan) measured much faster.
+    c.inject_sample("m", Implementation::CsrRowPar, 1e-12, 16).unwrap();
+    let k_windows = {
+        let cfg = spmv_at::autotune::adaptive::AdaptiveConfig::default();
+        cfg.window * cfg.flip_windows as u64
+    };
+    for _ in 0..k_windows {
+        assert_eq!(c.spmv("m", &x).unwrap(), want, "bitwise across the flip back");
+    }
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Csr));
+    let s = &c.stats()[0];
+    assert_eq!(s.replans, 1);
+    // The transformed plan is parked for a cheap flip forward, still
+    // accounted as held memory.
+    assert!(s.extra_bytes > 0, "parked shadow plan keeps its bytes");
+    // No immediate re-transform: the decision was updated with the flip.
+    for _ in 0..8 {
+        c.spmv("m", &x).unwrap();
+    }
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Csr));
+}
+
+#[test]
+fn hysteresis_prevents_flip_flap_on_alternating_timings() {
+    let a = band(64, 7);
+    let mut conf = cfg(None, 1, true);
+    conf.adaptive.window = 4;
+    conf.adaptive.flip_windows = 2;
+    conf.adaptive.ewma_alpha = 1.0; // telemetry = last injected sample
+    let mut c = Coordinator::new(conf);
+    c.register("m", a.clone()).unwrap();
+    let x = vec![1.0; 64];
+    // 20 windows of alternating synthetic rival timings: far faster on
+    // even windows, far slower on odd ones. Consecutive-window voting
+    // must never reach 2, so no flip ever fires.
+    for w in 0..20u64 {
+        let rival = if w % 2 == 0 { 1e-12 } else { 1e3 };
+        c.inject_sample("m", Implementation::EllRowInner, rival, 1).unwrap();
+        for _ in 0..4 {
+            c.spmv("m", &x).unwrap();
+        }
+    }
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Csr));
+    assert_eq!(c.stats()[0].replans, 0, "alternating evidence must not flip");
+}
+
+#[test]
+fn flag_off_is_the_decide_once_pipeline() {
+    let a = band(80, 9);
+    let mut c = Coordinator::new(cfg(None, 2, false));
+    c.register("m", a.clone()).unwrap();
+    assert!(!c.adaptive_enabled());
+    assert!(
+        c.inject_sample("m", Implementation::EllRowInner, 1e-12, 100).is_err(),
+        "telemetry injection is rejected when the loop is off"
+    );
+    let x = vec![1.0; 80];
+    let want = reference(&a, &x);
+    for _ in 0..64 {
+        assert_eq!(c.spmv("m", &x).unwrap(), want);
+    }
+    let s = &c.stats()[0];
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Csr), "decision never moves");
+    assert_eq!((s.replans, s.explored, s.samples_crs, s.samples_imp), (0, 0, 0, 0));
+}
+
+#[test]
+fn replan_flows_through_the_sharded_server() {
+    let mut conf = cfg(Some(3.1), 2, true);
+    conf.shards = 2;
+    let (srv, client) = Server::spawn_sharded(conf, 16);
+    let a = band(72, 11);
+    client.register("m", a.clone()).unwrap();
+    let x = vec![1.0; 72];
+    let want = reference(&a, &x);
+    assert_eq!(client.spmv("m", x.clone()).unwrap(), want);
+    let before = client.stats().unwrap();
+    assert_eq!(before[0].serving, Implementation::EllRowInner);
+    // Forced replan with an unchanged decision rebuilds + swaps in place.
+    let after = client.replan("m").unwrap();
+    assert_eq!(after.serving, Implementation::EllRowInner);
+    assert_eq!(after.replans, before[0].replans + 1);
+    assert_eq!(client.spmv("m", x).unwrap(), want, "swap is bitwise-invisible");
+    drop(srv);
+}
+
+#[test]
+fn tuning_v1_v2_forward_compat_contract() {
+    let dir = std::env::temp_dir().join("spmv_at_adaptive_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let v1 = dir.join("it1.tsv");
+    let v2 = dir.join("it2.tsv");
+
+    for d_star in [Some(0.5), None] {
+        // v1 roundtrip (including d_star = none).
+        let t = tuning(d_star);
+        t.save(&v1).unwrap();
+        assert_eq!(TuningData::load(&v1).unwrap(), t);
+        // v2 roundtrip with corrections.
+        let mut lt = LearnedTuning::new(t.clone());
+        lt.record(0.07, 3.5);
+        lt.save(&v2).unwrap();
+        assert_eq!(LearnedTuning::load(&v2).unwrap(), lt);
+        // Forward compat: the v2 loader reads v1 files…
+        let up = LearnedTuning::load(&v1).unwrap();
+        assert_eq!(up.base, t);
+        assert_eq!(up.corrected_buckets(), 0);
+        // …and the v1 loader rejects v2 files with a clear error.
+        let err = TuningData::load(&v2).unwrap_err().to_string();
+        assert!(err.contains("v2") && err.contains("LearnedTuning"), "{err}");
+    }
+    // Rejected-header path, both loaders.
+    let bad = dir.join("bad.tsv");
+    std::fs::write(&bad, "spmv-at-tuning v99\nbackend\tx\n").unwrap();
+    assert!(TuningData::load(&bad).is_err());
+    assert!(LearnedTuning::load(&bad).is_err());
+    for p in [v1, v2, bad] {
+        std::fs::remove_file(p).ok();
+    }
+}

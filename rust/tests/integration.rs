@@ -276,7 +276,12 @@ fn break_even_accounting_matches_ratios_module() {
         c: 1.0,
         d_star: Some(3.1),
     };
-    let mut c = Coordinator::new(CoordinatorConfig::new(tuning));
+    // This test is about decide-once amortisation accounting: pin the
+    // adaptive loop off so a measured re-plan (legitimate under
+    // SPMV_AT_ADAPTIVE=1) cannot divert calls from the transformed plan.
+    let mut cfg = CoordinatorConfig::new(tuning);
+    cfg.adaptive.enabled = false;
+    let mut c = Coordinator::new(cfg);
     c.register("m", a).unwrap();
     let x = vec![1.0; 2000];
     for _ in 0..50 {
