@@ -24,6 +24,14 @@
 //! measurement, anchored on MeasuredBackend timings, to the serving-plan
 //! swap) and exploration overhead (adaptive + forced shadow calls vs the
 //! decide-once pipeline on the same traffic).
+//!
+//! Part E (measured): `numa_split` — cross-socket SpMM: per-RHS time of
+//! `execute_split_many` (row blocks on socket-pinned shard pools, merged)
+//! vs the unsplit `execute_many` on one pool, on a large synthetic
+//! matrix. On a single-socket CI box this mostly prices the split's merge
+//! overhead; on a multi-socket machine it tracks the locality win. The
+//! split/unsplit checksums are asserted equal, so the case also guards
+//! the bitwise property per PR.
 
 #[path = "common.rs"]
 mod common;
@@ -285,5 +293,79 @@ fn main() {
             ("threads".into(), Json::Num(threads as f64)),
         ]));
     }
+    // ---- Part E: cross-socket split SpMM (numa_split) ----
+    println!("\n--- host: numa_split (execute_split_many vs execute_many) ---");
+    {
+        use spmv_at::coordinator::{PlanShards, ShardedPlanner};
+        use spmv_at::formats::SparseMatrix as _;
+        use spmv_at::machine::Topology;
+        use std::sync::Arc;
+
+        let topo = Topology::detect();
+        // Exercise the cross-shard path even on single-socket machines.
+        let shards = topo.n_sockets().max(2);
+        let spec = spmv_at::matrixgen::spec_by_name("xenon1").unwrap();
+        let a = Arc::new(spmv_at::matrixgen::generate(
+            &spec,
+            common::seed(),
+            common::scale() * if common::quick() { 1.0 } else { 2.0 },
+        ));
+        let n = a.n_rows();
+        let k = if common::quick() { 4 } else { 16 };
+        let xs: Vec<Vec<f64>> = (0..k)
+            .map(|j| (0..a.n_cols()).map(|i| 1.0 + ((i + j) % 7) as f64 * 0.125).collect())
+            .collect();
+        let mut ys = vec![vec![0.0; n]; k];
+        let imp = Implementation::CsrRowPar;
+        let sp = ShardedPlanner::new(
+            tuning.clone(),
+            MemoryPolicy::unlimited(),
+            PlanShards::spread_on(shards, threads, &topo),
+        );
+
+        // Unsplit: the whole matrix on shard 0's pool.
+        let mut full = sp.planner(0).plan_for(&a, imp).unwrap();
+        full.execute_many(&xs, &mut ys).unwrap(); // prime workspace
+        let t_unsplit = spmv_at::metrics::time_median(common::reps(1), common::reps(5), || {
+            full.execute_many(&xs, &mut ys).expect("unsplit SpMM");
+        }) / k as f64;
+        let unsplit_sum: f64 = ys.iter().flatten().sum();
+
+        // Split: one nnz-balanced row block per shard, merged.
+        let mut split = sp.plan_split(&a, imp, shards).unwrap();
+        sp.execute_split_many(&mut split, &xs, &mut ys).unwrap(); // prime
+        let t_split = spmv_at::metrics::time_median(common::reps(1), common::reps(5), || {
+            sp.execute_split_many(&mut split, &xs, &mut ys).expect("split SpMM");
+        }) / k as f64;
+        let split_sum: f64 = ys.iter().flatten().sum();
+        assert_eq!(
+            split_sum.to_bits(),
+            unsplit_sum.to_bits(),
+            "split SpMM must agree bitwise with the unsplit plan"
+        );
+
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec!["sockets (detected)".into(), topo.n_sockets().to_string()]);
+        t.row(vec!["shards / blocks".into(), format!("{shards} / {}", split.parts())]);
+        t.row(vec!["unsplit us/spmv".into(), format!("{:.2}", t_unsplit * 1e6)]);
+        t.row(vec!["split us/spmv".into(), format!("{:.2}", t_split * 1e6)]);
+        t.row(vec![
+            "split speedup".into(),
+            format!("{:.2}x", t_unsplit / t_split.max(1e-12)),
+        ]);
+        print!("{}", t.render());
+        json.push(Json::Obj(vec![
+            ("machine".into(), Json::Str("host".into())),
+            ("case".into(), Json::Str("numa_split".into())),
+            ("matrix".into(), Json::Str(spec.name.into())),
+            ("sockets".into(), Json::Num(topo.n_sockets() as f64)),
+            ("shards".into(), Json::Num(shards as f64)),
+            ("threads".into(), Json::Num(threads as f64)),
+            ("batch".into(), Json::Num(k as f64)),
+            ("unsplit_seconds_per_spmv".into(), Json::Num(t_unsplit)),
+            ("split_seconds_per_spmv".into(), Json::Num(t_split)),
+        ]));
+    }
+
     common::write_json("amortization", Json::Arr(json));
 }

@@ -67,9 +67,15 @@ impl ExplorePolicy {
         }
     }
 
-    /// Whether cumulative exploration time is within budget.
+    /// Whether cumulative exploration time is within budget. An infinite
+    /// `budget_fraction` means "no budget" unconditionally — the naive
+    /// product `INFINITY * 0.0` would be NaN when no serve time has
+    /// accrued yet (coarse clocks report 0.0), and a NaN comparison would
+    /// silently read as over-budget.
     pub fn within_budget(&self) -> bool {
-        self.explored == 0 || self.explore_seconds <= self.budget_fraction * self.serve_seconds
+        self.explored == 0
+            || self.budget_fraction.is_infinite()
+            || self.explore_seconds <= self.budget_fraction * self.serve_seconds
     }
 
     /// Account one served step (call or batch) of `seconds`.
@@ -151,6 +157,21 @@ mod tests {
         p.note_serve(10.0);
         assert!(p.should_explore());
         assert!((p.overhead_fraction() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infinite_budget_never_binds_even_with_zero_serve_time() {
+        // Regression: INFINITY * 0.0 = NaN used to read as over-budget,
+        // disabling exploration after the bootstrap on coarse-clock
+        // platforms where serves report 0.0 seconds.
+        let mut p = ExplorePolicy::new(1.0, f64::INFINITY, 0, 4);
+        p.note_serve(0.0);
+        assert!(p.should_explore());
+        p.note_explore(1.0);
+        p.note_serve(0.0);
+        assert!(p.within_budget(), "an infinite budget must never bind");
+        assert!(p.should_explore());
+        assert_eq!(p.budget_skips(), 0);
     }
 
     #[test]

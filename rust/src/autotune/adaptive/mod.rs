@@ -35,6 +35,38 @@
 //! re-decision never tears down the worker pool. Every serve keeps
 //! executing through a cached [`SpmvPlan`]; the adaptive layer only
 //! changes *which* plan that is, never how a result is produced.
+//!
+//! # Example
+//!
+//! Serve a tiny matrix through a coordinator with the adaptive loop on —
+//! results are identical to the decide-once pipeline, the loop only adds
+//! measurement:
+//!
+//! ```
+//! use spmv_at::coordinator::{Coordinator, CoordinatorConfig};
+//! use spmv_at::autotune::online::TuningData;
+//! use spmv_at::spmv::Implementation;
+//! use spmv_at::formats::Csr;
+//!
+//! let mut cfg = CoordinatorConfig::new(TuningData {
+//!     backend: "sim:ES2".into(),
+//!     imp: Implementation::EllRowInner,
+//!     threads: 1,
+//!     c: 1.0,
+//!     d_star: Some(3.1),
+//! });
+//! cfg.threads = 1;
+//! cfg.shards = 1;
+//! cfg.adaptive.enabled = true;
+//! cfg.adaptive.epsilon = 0.0; // keep the doc example deterministic
+//! let mut coord = Coordinator::new(cfg);
+//! coord.register("m", Csr::identity(3)).unwrap();
+//! let y = coord.spmv("m", &[1.0, 2.0, 3.0]).unwrap();
+//! assert_eq!(y, vec![1.0, 2.0, 3.0]);
+//! assert!(coord.adaptive_enabled());
+//! // Telemetry measured the serving arm on the way through.
+//! assert_eq!(coord.stats()[0].calls, 1);
+//! ```
 
 pub mod controller;
 pub mod explore;

@@ -5,13 +5,20 @@
 //!
 //! * the machine's installed **tuning table** (offline-phase output),
 //! * the **memory policy** bounding transformed copies,
-//! * **sharded worker pools** ([`shards::PlanShards`]): N independent
-//!   [`crate::spmv::pool::ParPool`]s (N from `SPMV_AT_SHARDS`) with a
-//!   [`shards::ShardedPlanner`] routing each registered matrix to one
-//!   shard by registry key, so batches against different matrices run on
-//!   disjoint workers. Every served SpMV/SpMM executes through a cached,
-//!   reusable [`crate::spmv::SpmvPlan`] — never through per-call thread
-//!   spawns or per-call partitioning,
+//! * **sharded, socket-pinned worker pools** ([`shards::PlanShards`]): N
+//!   independent [`crate::spmv::pool::ParPool`]s (N from `SPMV_AT_SHARDS`
+//!   when set, else the detected socket count —
+//!   [`crate::machine::Topology`]), shard `i` pinned to socket
+//!   `i mod sockets`, with a [`shards::ShardedPlanner`] routing each
+//!   registered matrix to one shard by registry key — so key-routing is
+//!   socket-routing, and every plan build or adaptive re-plan
+//!   first-touches its arrays on the owning socket through
+//!   [`crate::spmv::pool::ParPool::run_init`]. Batches against different
+//!   matrices run on disjoint workers; a single huge matrix can
+//!   row-split *across* shards ([`shards::SplitPlan`]). Every served
+//!   SpMV/SpMM executes through a cached, reusable
+//!   [`crate::spmv::SpmvPlan`] — never through per-call thread spawns or
+//!   per-call partitioning,
 //! * a **matrix registry** with per-matrix AT lifecycle state
 //!   ([`registry`]),
 //! * the **adaptive loop** (`SPMV_AT_ADAPTIVE`,
@@ -37,7 +44,7 @@ pub mod shards;
 
 pub use registry::{AtState, EntryStats, MatrixEntry};
 pub use server::{Client, Request, Server, SolverKind};
-pub use shards::{PlanShards, ShardedPlanner};
+pub use shards::{PlanShards, ShardedPlanner, SplitPlan};
 
 use crate::autotune::adaptive::{AdaptiveConfig, AdaptiveState, LearnedTuning};
 use crate::autotune::online::{decide, OnlineDecision, TuningData};
@@ -88,7 +95,8 @@ impl CoordinatorConfig {
     /// thread count comes from [`pool::configured_threads`] — the
     /// `SPMV_AT_THREADS` environment variable when set, hardware
     /// parallelism otherwise — the shard count from
-    /// [`shards::configured_shards`] (`SPMV_AT_SHARDS`, default 1), and
+    /// [`shards::configured_shards`] (`SPMV_AT_SHARDS` when set, else the
+    /// detected socket count — override with `SPMV_AT_TOPOLOGY`), and
     /// the adaptive switch from
     /// [`crate::autotune::adaptive::configured_adaptive`]
     /// (`SPMV_AT_ADAPTIVE`, default off).

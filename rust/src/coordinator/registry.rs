@@ -204,6 +204,8 @@ pub struct EntryStats {
     pub nnz: usize,
     /// `D_mat`.
     pub d_mat: f64,
+    /// The pool shard (= socket, under NUMA routing) serving this matrix.
+    pub shard: usize,
     /// The implementation currently serving.
     pub serving: Implementation,
     /// Total calls.
@@ -245,6 +247,7 @@ impl MatrixEntry {
             n: self.csr.n_rows(),
             nnz: self.csr.nnz(),
             d_mat: self.decision.d_mat,
+            shard: self.shard,
             serving: match &self.state {
                 AtState::Baseline => Implementation::CsrSeq,
                 AtState::Transformed { plan, .. } => plan.implementation(),

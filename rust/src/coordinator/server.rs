@@ -22,7 +22,7 @@ use super::{Coordinator, CoordinatorConfig, EntryStats};
 use crate::formats::Csr;
 use crate::solver::{SolveStats, SolverOptions};
 use crate::{Result, Value};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 /// Solver selection for [`Request::Solve`].
@@ -258,22 +258,32 @@ impl Server {
     }
 
     /// Spawn one request loop per configured shard: `cfg.shards`
-    /// coordinators, each owning one independent pool (`cfg.threads`
-    /// workers divided between them, remainder spread — see
-    /// [`shards::shard_thread_counts`]), with every keyed request routed
-    /// by [`shards::route_key`]. Requests for matrices on different
-    /// shards execute concurrently.
+    /// coordinators (clamped to the thread budget — see
+    /// [`shards::shard_thread_counts`]), each owning one independent pool
+    /// pinned to socket `i mod sockets` of the detected
+    /// [`crate::machine::Topology`], with every keyed request routed by
+    /// [`shards::route_key`]. Requests for matrices on different shards
+    /// execute concurrently, and each shard's plans — including adaptive
+    /// re-plans — first-touch their arrays on that shard's socket. The
+    /// request-loop thread itself pins to the same socket, so the `Vec`s
+    /// a request materialises (inputs, outputs) are local too.
     pub fn spawn_sharded(cfg: CoordinatorConfig, depth: usize) -> (Self, Client) {
+        let topo = crate::machine::Topology::detect();
         let counts = shards::shard_thread_counts(cfg.threads, cfg.shards);
+        shards::warn_if_clamped(cfg.threads, cfg.shards, counts.len());
         let coords: Vec<Coordinator> = counts
             .into_iter()
-            .map(|threads| {
+            .enumerate()
+            .map(|(i, threads)| {
                 // Each loop owns a single-shard coordinator over its own
-                // pool; the client's hash does the cross-shard routing.
+                // socket-pinned pool; the client's hash does the
+                // cross-shard routing.
+                let pool =
+                    Arc::new(crate::spmv::pool::ParPool::new_pinned(threads, topo.shard_cpus(i)));
                 let planner = ShardedPlanner::new(
                     cfg.tuning.clone(),
                     cfg.policy,
-                    PlanShards::new(1, threads),
+                    PlanShards::from_pools(vec![pool]),
                 );
                 Coordinator::with_planner(cfg.clone(), planner)
             })
@@ -294,6 +304,21 @@ impl Server {
     }
 
     fn serve_loop(mut coord: Coordinator, rx: &mpsc::Receiver<Request>) -> Coordinator {
+        // Join the shard's socket so request-side allocations (the
+        // response vectors every SpMV materialises) first-touch locally —
+        // but only when this loop serves exactly one shard (the
+        // `spawn_sharded` per-loop case). A single-loop server over a
+        // multi-shard coordinator (the XLA path) serves every socket from
+        // one thread; pinning it to shard 0's socket would mislocate all
+        // the others.
+        let affinity: Option<Vec<usize>> = if coord.planner().len() == 1 {
+            coord.planner().shards().pool(0).affinity().map(<[usize]>::to_vec)
+        } else {
+            None
+        };
+        if let Some(cpus) = &affinity {
+            crate::machine::topology::pin_current_thread(cpus);
+        }
         while let Ok(req) = rx.recv() {
             match req {
                 Request::Register { name, csr, resp } => {

@@ -13,42 +13,114 @@
 //! `planner_for(key)` and the sharded server runs one request loop per
 //! shard on top.
 //!
-//! This is also the hook the NUMA roadmap item builds on: pinning each
-//! shard's pool to one socket turns key-routing into locality-routing.
-//! The adaptive layer rides the same partitioning: every shard's
-//! coordinator owns the [`crate::autotune::adaptive`] controllers for the
-//! matrices routed to it, so re-planning happens on the matrix's own
-//! shard — rebuilds never cross worker sets, and a flip on one shard
+//! **This is the crate's NUMA locality layer.** Shard counts default to
+//! the machine's socket count ([`crate::machine::Topology`]), shard `i`'s
+//! pool is pinned to socket `i mod sockets`
+//! ([`crate::spmv::pool::ParPool::new_pinned`]), and — because every plan
+//! build and adaptive re-plan materialises its arrays through the owning
+//! pool's [`ParPool::run_init`] fan-out — key-routing *is*
+//! socket-routing: a matrix's transformed copies are first-touched on,
+//! and forever streamed from, the socket its registry key hashes to. The
+//! adaptive layer rides the same partitioning: every shard's coordinator
+//! owns the [`crate::autotune::adaptive`] controllers for the matrices
+//! routed to it, so re-planning happens on the matrix's own shard —
+//! rebuilds never cross worker sets (a NUMA re-plan is exactly a
+//! first-touch rebuild on the right socket), and a flip on one shard
 //! cannot stall serving on another.
+//!
+//! For a single matrix too large for one socket, [`SplitPlan`] splits the
+//! row range across shards ([`ShardedPlanner::plan_split`] /
+//! [`ShardedPlanner::execute_split_many`]): each shard holds and streams
+//! only its row block, and the per-row results are merged — bitwise
+//! identical to the unsplit [`crate::spmv::SpmvPlan::execute_many`] for
+//! the row-oriented kernels.
+//!
+//! # Example
+//!
+//! Build a tiny matrix, plan it on its routed shard, execute, assert:
+//!
+//! ```
+//! use spmv_at::coordinator::{PlanShards, ShardedPlanner};
+//! use spmv_at::autotune::online::TuningData;
+//! use spmv_at::autotune::MemoryPolicy;
+//! use spmv_at::spmv::Implementation;
+//! use spmv_at::formats::Csr;
+//! use std::sync::Arc;
+//!
+//! let tuning = TuningData {
+//!     backend: "sim:ES2".into(),
+//!     imp: Implementation::EllRowInner,
+//!     threads: 1,
+//!     c: 1.0,
+//!     d_star: Some(3.1),
+//! };
+//! let sp = ShardedPlanner::new(tuning, MemoryPolicy::unlimited(), PlanShards::new(2, 1));
+//! let a = Arc::new(Csr::identity(3));
+//! let mut plan = sp.planner_for("m").plan_for(&a, Implementation::CsrRowPar).unwrap();
+//! let mut y = vec![0.0; 3];
+//! plan.execute(&[1.0, 2.0, 3.0], &mut y).unwrap();
+//! assert_eq!(y, vec![1.0, 2.0, 3.0]);
+//!
+//! // A cross-shard row split of the same operator agrees bitwise.
+//! let mut split = sp.plan_split(&a, Implementation::CsrRowPar, 2).unwrap();
+//! let xs = vec![vec![1.0, 2.0, 3.0]];
+//! let mut ys = vec![vec![0.0; 3]];
+//! sp.execute_split_many(&mut split, &xs, &mut ys).unwrap();
+//! assert_eq!(ys[0], y);
+//! ```
 
 use crate::autotune::online::TuningData;
 use crate::autotune::MemoryPolicy;
+use crate::formats::{Csr, SparseMatrix};
+use crate::machine::Topology;
+use crate::spmv::partition::split_by_nnz;
 use crate::spmv::pool::ParPool;
-use crate::spmv::Planner;
+use crate::spmv::{Implementation, Planner, SpmvPlan};
+use crate::{Result, Value};
+use std::ops::Range;
 use std::sync::Arc;
 
 /// The configured shard count: `SPMV_AT_SHARDS` when set to a positive
-/// integer, else 1 (single-pool serving, the pre-sharding behaviour).
+/// integer, else the detected **socket count**
+/// ([`Topology::detect`] — 1 on single-node machines, which is the
+/// pre-NUMA behaviour; `SPMV_AT_TOPOLOGY=2:4` makes it 2 anywhere).
 pub fn configured_shards() -> usize {
     match std::env::var("SPMV_AT_SHARDS") {
         Ok(s) => match s.trim().parse::<usize>() {
             Ok(n) if n >= 1 => n,
-            _ => 1,
+            _ => Topology::detect().n_sockets(),
         },
-        Err(_) => 1,
+        Err(_) => Topology::detect().n_sockets(),
     }
 }
 
 /// Split `total_threads` workers across `shards` pools: every shard gets
-/// the floor share, the first `total % shards` shards absorb the
-/// remainder, and no shard drops below one thread (so a shard count
-/// above the thread budget oversubscribes by design rather than
-/// spawning dead pools — pick `SPMV_AT_SHARDS ≤ SPMV_AT_THREADS`).
+/// the floor share and the leading shards absorb the remainder. A shard
+/// count above the thread budget is **clamped** to it — the returned
+/// length is the effective shard count — so no shard is ever a
+/// zero-worker pool and no worker is oversubscribed across pools.
+/// Degenerate inputs clamp to one shard / one thread. Pure (display-only
+/// callers use it freely); the pool-spawning sites log the clamp through
+/// [`warn_if_clamped`].
 pub fn shard_thread_counts(total_threads: usize, shards: usize) -> Vec<usize> {
-    let n = shards.max(1);
-    let base = total_threads / n;
-    let rem = total_threads % n;
-    (0..n).map(|i| (base + usize::from(i < rem)).max(1)).collect()
+    let total = total_threads.max(1);
+    let n = shards.max(1).min(total);
+    let base = total / n;
+    let rem = total % n;
+    (0..n).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Log (once, from the site that actually spawns pools) that a requested
+/// shard count was clamped to the thread budget.
+pub(crate) fn warn_if_clamped(total_threads: usize, requested: usize, effective: usize) {
+    let want = requested.max(1);
+    if effective < want {
+        eprintln!(
+            "spmv-at: clamping {want} shard(s) to {effective} — only {} worker thread(s) \
+             configured (raise SPMV_AT_THREADS or lower SPMV_AT_SHARDS)",
+            total_threads.max(1)
+        );
+    }
 }
 
 /// Stable FNV-1a over the registry key — deterministic across processes
@@ -76,26 +148,49 @@ pub struct PlanShards {
 }
 
 impl PlanShards {
-    /// `n_shards` pools of `threads_each` workers.
+    /// `n_shards` unpinned pools of `threads_each` workers (tests and
+    /// single-node setups; production serving goes through
+    /// [`PlanShards::spread`], which pins).
     pub fn new(n_shards: usize, threads_each: usize) -> Self {
         let n = n_shards.max(1);
         let pools = (0..n).map(|_| Arc::new(ParPool::new(threads_each))).collect();
         Self { pools }
     }
 
-    /// `n_shards` pools dividing `total_threads` workers between them,
-    /// remainder spread over the leading shards
-    /// (see [`shard_thread_counts`]).
+    /// Wrap explicitly built pools (the sharded server hands each
+    /// per-shard coordinator its own pre-pinned pool).
+    ///
+    /// # Panics
+    /// Panics if `pools` is empty.
+    pub fn from_pools(pools: Vec<Arc<ParPool>>) -> Self {
+        assert!(!pools.is_empty(), "PlanShards needs at least one pool");
+        Self { pools }
+    }
+
+    /// `n_shards` pools dividing `total_threads` workers between them
+    /// (clamped + remainder spread, see [`shard_thread_counts`]), each
+    /// pinned to socket `i mod sockets` of the detected
+    /// [`Topology`] (no pinning on single-socket machines).
     pub fn spread(n_shards: usize, total_threads: usize) -> Self {
-        let pools = shard_thread_counts(total_threads, n_shards)
+        Self::spread_on(n_shards, total_threads, &Topology::detect())
+    }
+
+    /// [`PlanShards::spread`] against an explicit topology (tests,
+    /// benches, and anything that already detected one).
+    pub fn spread_on(n_shards: usize, total_threads: usize, topo: &Topology) -> Self {
+        let counts = shard_thread_counts(total_threads, n_shards);
+        warn_if_clamped(total_threads, n_shards, counts.len());
+        let pools = counts
             .into_iter()
-            .map(|t| Arc::new(ParPool::new(t)))
+            .enumerate()
+            .map(|(i, t)| Arc::new(ParPool::new_pinned(t, topo.shard_cpus(i))))
             .collect();
         Self { pools }
     }
 
-    /// Shards sized from the environment: `SPMV_AT_SHARDS` pools dividing
-    /// `total_threads` workers between them.
+    /// Shards sized from the environment: [`configured_shards`] pools
+    /// (socket count unless `SPMV_AT_SHARDS` overrides) dividing
+    /// `total_threads` workers between them, socket-pinned.
     pub fn from_env(total_threads: usize) -> Self {
         Self::spread(configured_shards(), total_threads)
     }
@@ -186,6 +281,190 @@ impl ShardedPlanner {
     pub fn shards(&self) -> &PlanShards {
         &self.shards
     }
+
+    /// Build a cross-shard row split of one matrix: the row range is cut
+    /// into `splits` nnz-balanced blocks, block `i` is sliced out
+    /// ([`Csr::slice_rows`]) and planned **on shard `i mod shards`** —
+    /// so on socket-pinned pools each socket holds (first-touched, via
+    /// the build's [`crate::spmv::pool::ParPool::run_init`] fan-outs)
+    /// exactly the row block it will stream. `splits == 1` degenerates to
+    /// an ordinary single-shard plan sharing the CRS original zero-copy.
+    ///
+    /// Use the row-oriented kernels (`CsrSeq`/`CsrRowPar`/`EllRowInner`/
+    /// `EllRowOuter`): every output row is produced by exactly one block
+    /// with unchanged per-row accumulation order, so results are
+    /// bitwise-identical to the unsplit plan. (The COO column-major
+    /// kernels reorder entries *across* rows of the whole matrix and are
+    /// not split-stable.)
+    ///
+    /// # Errors
+    /// Fails if any block's transformation fails (e.g. an ELL budget
+    /// overflow).
+    pub fn plan_split(
+        &self,
+        csr: &Arc<Csr>,
+        imp: Implementation,
+        splits: usize,
+    ) -> Result<SplitPlan> {
+        let n = csr.n_rows();
+        let mut parts = Vec::new();
+        for (i, rows) in split_by_nnz(&csr.row_ptr, splits.max(1)).into_iter().enumerate() {
+            let shard = i % self.len();
+            let block = if rows.start == 0 && rows.end == n {
+                Arc::clone(csr)
+            } else {
+                Arc::new(csr.slice_rows(rows.clone()))
+            };
+            let plan = self.planner(shard).plan_for(&block, imp)?;
+            parts.push(SplitPart { rows, shard, plan, scratch: Vec::new() });
+        }
+        Ok(SplitPlan { parts, n_rows: n, n_cols: csr.n_cols() })
+    }
+
+    /// Batched `Y = A·X` through a [`SplitPlan`]: each row block runs its
+    /// own blocked SpMM tile on its shard's pool and the per-block rows
+    /// are merged into `ys`. Bitwise-identical to
+    /// [`crate::spmv::SpmvPlan::execute_many`] on the unsplit plan for
+    /// the row-oriented kernels (see [`ShardedPlanner::plan_split`]).
+    ///
+    /// # Errors
+    /// Fails on dimension mismatches.
+    pub fn execute_split_many(
+        &self,
+        split: &mut SplitPlan,
+        xs: &[Vec<Value>],
+        ys: &mut [Vec<Value>],
+    ) -> Result<()> {
+        split.execute_many(xs, ys)
+    }
+}
+
+/// A single matrix row-split across shards: one [`SpmvPlan`] per
+/// nnz-balanced row block, each on its own shard pool (= its own socket
+/// when pinned). Built by [`ShardedPlanner::plan_split`]; executed by
+/// [`ShardedPlanner::execute_split_many`]. The per-block pass counters
+/// stay observable through [`SplitPlan::matrix_passes`] and each shard
+/// pool's `dispatch_count`, so tests can prove the split actually ran on
+/// every shard.
+pub struct SplitPlan {
+    parts: Vec<SplitPart>,
+    n_rows: usize,
+    n_cols: usize,
+}
+
+struct SplitPart {
+    rows: Range<usize>,
+    shard: usize,
+    plan: SpmvPlan,
+    /// Per-part output staging, reused across calls so the hot path does
+    /// not allocate `k × block_rows` per execution.
+    scratch: Vec<Vec<Value>>,
+}
+
+impl SplitPlan {
+    /// Number of row blocks (≤ requested splits when the matrix has
+    /// fewer rows).
+    pub fn parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// The shard serving block `i`.
+    ///
+    /// # Panics
+    /// Panics if `i >= parts()`.
+    pub fn part_shard(&self, i: usize) -> usize {
+        self.parts[i].shard
+    }
+
+    /// The row range of block `i`.
+    ///
+    /// # Panics
+    /// Panics if `i >= parts()`.
+    pub fn part_rows(&self, i: usize) -> Range<usize> {
+        self.parts[i].rows.clone()
+    }
+
+    /// Rows of the full operator.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Columns of the full operator.
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Total matrix passes across all blocks — the split analogue of
+    /// [`SpmvPlan::matrix_passes`]: one `execute_many` adds
+    /// ⌈k/tile⌉ per block, so the delta over a call is
+    /// `parts × ⌈k/tile⌉` when all blocks share one tile width.
+    pub fn matrix_passes(&self) -> u64 {
+        self.parts.iter().map(|p| p.plan.matrix_passes()).sum()
+    }
+
+    /// Force one batch-tile width on every block (tests and sweeps).
+    pub fn set_batch_tile(&mut self, tile: usize) {
+        for p in &mut self.parts {
+            p.plan.set_batch_tile(tile);
+        }
+    }
+
+    /// The implementation behind [`ShardedPlanner::execute_split_many`]
+    /// (the one public entry point for split execution).
+    ///
+    /// # Errors
+    /// Fails on dimension mismatches.
+    pub(crate) fn execute_many(&mut self, xs: &[Vec<Value>], ys: &mut [Vec<Value>]) -> Result<()> {
+        anyhow::ensure!(
+            xs.len() == ys.len(),
+            "batch mismatch: {} inputs vs {} outputs",
+            xs.len(),
+            ys.len()
+        );
+        for x in xs {
+            anyhow::ensure!(
+                x.len() == self.n_cols,
+                "x length {} != n_cols {}",
+                x.len(),
+                self.n_cols
+            );
+        }
+        for y in ys.iter() {
+            anyhow::ensure!(
+                y.len() == self.n_rows,
+                "y length {} != n_rows {}",
+                y.len(),
+                self.n_rows
+            );
+        }
+        for part in &mut self.parts {
+            let block_rows = part.rows.end - part.rows.start;
+            if part.scratch.len() < xs.len() {
+                part.scratch.resize_with(xs.len(), Vec::new);
+            }
+            for s in part.scratch.iter_mut().take(xs.len()) {
+                s.resize(block_rows, 0.0);
+            }
+            part.plan.execute_many(xs, &mut part.scratch[..xs.len()])?;
+            for (y, s) in ys.iter_mut().zip(&part.scratch) {
+                y[part.rows.clone()].copy_from_slice(s);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for SplitPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SplitPlan")
+            .field("parts", &self.parts.len())
+            .field("n_rows", &self.n_rows)
+            .field(
+                "shards",
+                &self.parts.iter().map(|p| p.shard).collect::<Vec<_>>(),
+            )
+            .finish()
+    }
 }
 
 impl std::fmt::Debug for ShardedPlanner {
@@ -240,15 +519,23 @@ mod tests {
     }
 
     #[test]
-    fn thread_split_spreads_remainder_and_keeps_every_shard_alive() {
+    fn thread_split_spreads_remainder_and_clamps_to_the_budget() {
         assert_eq!(shard_thread_counts(8, 2), vec![4, 4]);
         // Remainder workers go to the leading shards, none stranded.
         assert_eq!(shard_thread_counts(10, 4), vec![3, 3, 2, 2]);
         assert_eq!(shard_thread_counts(10, 4).iter().sum::<usize>(), 10);
-        // More shards than threads: every shard stays alive at width 1.
-        assert_eq!(shard_thread_counts(1, 4), vec![1, 1, 1, 1]);
-        assert_eq!(shard_thread_counts(0, 3), vec![1, 1, 1]);
+        // Regression: more shards than threads used to oversubscribe with
+        // width-1 pools; the shard count now clamps to the thread budget
+        // so no shard is ever thread-starved.
+        assert_eq!(shard_thread_counts(1, 4), vec![1]);
+        assert_eq!(shard_thread_counts(3, 7), vec![1, 1, 1]);
+        assert_eq!(shard_thread_counts(0, 3), vec![1]);
         assert_eq!(shard_thread_counts(5, 0), vec![5]);
+        for (total, shards) in [(1, 4), (2, 7), (16, 3), (0, 0), (7, 7)] {
+            let counts = shard_thread_counts(total, shards);
+            assert!(counts.iter().all(|&c| c >= 1), "({total},{shards}): no dead pools");
+            assert_eq!(counts.iter().sum::<usize>(), total.max(1), "({total},{shards})");
+        }
         let s = PlanShards::spread(4, 10);
         assert_eq!(s.len(), 4);
         assert_eq!(s.pool(0).size(), 3);
@@ -256,11 +543,63 @@ mod tests {
     }
 
     #[test]
-    fn env_default_is_single_shard() {
-        // SPMV_AT_SHARDS unset in the test environment → 1 shard.
+    fn env_default_tracks_the_socket_count() {
+        // SPMV_AT_SHARDS unset → the shard count is the detected socket
+        // count (1 on single-node machines: the pre-NUMA behaviour).
         if std::env::var("SPMV_AT_SHARDS").is_err() {
-            assert_eq!(configured_shards(), 1);
-            assert_eq!(PlanShards::from_env(4).len(), 1);
+            let sockets = crate::machine::Topology::detect().n_sockets();
+            assert_eq!(configured_shards(), sockets);
+            assert_eq!(PlanShards::from_env(4).len(), sockets.min(4));
         }
+    }
+
+    #[test]
+    fn spread_on_pins_pools_per_socket() {
+        let topo = crate::machine::Topology::parse_override("2:2").unwrap();
+        let s = PlanShards::spread_on(4, 4, &topo);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.pool(0).affinity(), Some(&[0usize, 1][..]));
+        assert_eq!(s.pool(1).affinity(), Some(&[2usize, 3][..]));
+        assert_eq!(s.pool(2).affinity(), Some(&[0usize, 1][..]), "wraps past the sockets");
+        // Single-socket topologies never pin.
+        let flat = crate::machine::Topology::single_node(4);
+        assert!(PlanShards::spread_on(2, 4, &flat).pool(0).affinity().is_none());
+    }
+
+    #[test]
+    fn split_plan_matches_unsplit_and_lands_on_every_shard() {
+        use crate::matrixgen::random_csr;
+        use crate::rng::Rng;
+        let mut rng = Rng::new(23);
+        let a = Arc::new(random_csr(&mut rng, 120, 120, 0.08));
+        let sp = ShardedPlanner::new(tuning(), MemoryPolicy::unlimited(), PlanShards::new(3, 2));
+        let xs: Vec<Vec<Value>> = (0..5)
+            .map(|j| (0..120).map(|i| 1.0 + ((i * 3 + j) % 7) as f64 * 0.125).collect())
+            .collect();
+        let mut want = vec![vec![0.0; 120]; 5];
+        let mut full = sp.planner(0).plan_for(&a, Implementation::CsrRowPar).unwrap();
+        full.execute_many(&xs, &mut want).unwrap();
+
+        let mut split = sp.plan_split(&a, Implementation::CsrRowPar, 3).unwrap();
+        assert_eq!(split.parts(), 3);
+        assert_eq!(split.n_rows(), 120);
+        let dispatch_before: Vec<u64> =
+            (0..3).map(|i| sp.shards().pool(i).dispatch_count()).collect();
+        let passes_before = split.matrix_passes();
+        let mut got = vec![vec![0.0; 120]; 5];
+        sp.execute_split_many(&mut split, &xs, &mut got).unwrap();
+        assert_eq!(got, want, "row split must be bitwise-identical");
+        // Every block really ran on its own shard pool.
+        for i in 0..split.parts() {
+            let shard = split.part_shard(i);
+            assert!(
+                sp.shards().pool(shard).dispatch_count() > dispatch_before[shard],
+                "block {i} must dispatch on shard {shard}"
+            );
+        }
+        assert!(split.matrix_passes() > passes_before);
+        // Dimension mismatches are rejected.
+        assert!(split.execute_many(&xs, &mut vec![vec![0.0; 119]; 5]).is_err());
+        assert!(split.execute_many(&xs[..2], &mut got).is_err());
     }
 }

@@ -183,6 +183,29 @@ impl Csr {
         }
     }
 
+    /// The contiguous row block `rows` as its own CSR matrix (column
+    /// width unchanged, row indices rebased to the block). This is the
+    /// cross-socket SpMM split's building block: each shard plans and
+    /// streams only its row block, and `y[rows]` of the full product is
+    /// exactly the block's product — per-row accumulation order is
+    /// untouched, so a row-split execution is bitwise-identical to the
+    /// unsplit one for the row-oriented kernels.
+    ///
+    /// # Panics
+    /// Panics if `rows.end > n_rows` or `rows.start > rows.end`.
+    pub fn slice_rows(&self, rows: std::ops::Range<usize>) -> Csr {
+        assert!(rows.start <= rows.end && rows.end <= self.n_rows, "bad row range {rows:?}");
+        let lo = self.row_ptr[rows.start];
+        let hi = self.row_ptr[rows.end];
+        Csr {
+            n_rows: rows.end - rows.start,
+            n_cols: self.n_cols,
+            row_ptr: self.row_ptr[rows.start..=rows.end].iter().map(|p| p - lo).collect(),
+            col_idx: self.col_idx[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
     /// Check structural invariants (used by property tests / debug assertions).
     pub fn validate(&self) -> Result<()> {
         let _ = Self::new(
@@ -332,6 +355,26 @@ mod tests {
         let mut y = vec![0.0; 4];
         a.spmv(&x, &mut y);
         assert_eq!(y, x);
+    }
+
+    #[test]
+    fn slice_rows_rebases_and_covers() {
+        let a = sample();
+        let s = a.slice_rows(1..3);
+        assert_eq!(s.n_rows(), 2);
+        assert_eq!(s.n_cols(), 3);
+        assert_eq!(s.row_ptr, vec![0, 1, 3]);
+        s.validate().unwrap();
+        // Block SpMV equals the matching rows of the full product.
+        let x = [1.0, 2.0, 3.0];
+        let mut full = vec![0.0; 3];
+        a.spmv(&x, &mut full);
+        let mut part = vec![0.0; 2];
+        s.spmv(&x, &mut part);
+        assert_eq!(part, full[1..3]);
+        // Degenerate slices.
+        assert_eq!(a.slice_rows(0..0).nnz(), 0);
+        assert_eq!(a.slice_rows(0..3), a);
     }
 
     #[test]

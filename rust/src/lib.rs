@@ -7,7 +7,8 @@
 //!
 //! ```text
 //!   serving      coordinator ── registry of MatrixEntry{ decision, plans }
-//!                coordinator::shards — N pools, key-routed matrices,
+//!                coordinator::shards — socket-pinned pools (one/socket),
+//!                key-routed matrices, cross-socket SplitPlan SpMM,
 //!                runtime (XLA/PJRT artifacts)     │  one server loop/shard
 //!   autotune     offline/online AT phases, D_mat, │D*, memory policy
 //!                autotune::adaptive — telemetry (EWMA/imp) · ε-explore ·
@@ -22,7 +23,7 @@
 //!                spmv::pool  ParPool — persistent parked workers;
 //!                            the crate's only thread-spawning site
 //!   substrates   formats · transform · spmv kernels · matrixgen · io
-//!                machine cost models · solvers
+//!                machine cost models + topology/affinity · solvers
 //! ```
 //!
 //! * **Substrates** — sparse formats ([`formats`]), run-time transformations
@@ -64,11 +65,14 @@
 //! variable when set, hardware parallelism otherwise) sizes the global
 //! pool, `CoordinatorConfig::new`, and the CLI defaults; shard-count truth
 //! likewise in [`coordinator::shards::configured_shards`]
-//! (`SPMV_AT_SHARDS`, default 1), batch-tile truth in
+//! (`SPMV_AT_SHARDS` when set, else the socket count from
+//! [`machine::Topology::detect`] — overridable with
+//! `SPMV_AT_TOPOLOGY=<sockets>:<cores>`), batch-tile truth in
 //! [`spmv::plan::configured_batch_tile`] (`SPMV_AT_BATCH_TILE`, default
 //! sized to the last-level cache), and adaptive-loop truth in
 //! [`autotune::adaptive::configured_adaptive`] (`SPMV_AT_ADAPTIVE`,
-//! default off).
+//! default off). The full knob reference lives in `docs/TUNING.md`; the
+//! request-path walkthrough in `docs/ARCHITECTURE.md`.
 //!
 //! Quick start:
 //!

@@ -17,9 +17,17 @@
 //! [`MeasuredBackend`] is the third backend: real wall-clock measurements
 //! of this library's kernels on the host CPU. The AT engine is generic
 //! over [`Backend`], so every experiment can run on all three.
+//!
+//! [`topology`] describes the *host* machine itself — socket/core layout
+//! from sysfs (or the `SPMV_AT_TOPOLOGY` override) plus the
+//! `sched_setaffinity` shim — so the shard layer can turn key-routing
+//! into socket-routing.
 
 pub mod scalar;
+pub mod topology;
 pub mod vector;
+
+pub use topology::Topology;
 
 use crate::formats::{Csr, FormatKind, SparseMatrix};
 use crate::spmv::pool::{self, ParPool};

@@ -1,0 +1,373 @@
+//! Socket/core topology detection and thread pinning — the NUMA layer's
+//! ground truth.
+//!
+//! The paper's headline speedups depend on the transformed arrays living
+//! close to the cores that stream them (on the Earth Simulator that is
+//! vector-pipe locality; on commodity multi-socket boxes it is NUMA
+//! locality). This module answers the one question the shard layer needs:
+//! *how many sockets does this machine have, and which CPUs belong to
+//! each?* [`Topology::detect`] resolves it from three sources, in order:
+//!
+//! 1. the `SPMV_AT_TOPOLOGY=<sockets>:<cores>` environment override
+//!    (synthetic contiguous CPU blocks — the test/bench/CI hook, and the
+//!    way to *pretend* a topology on a single-node dev box);
+//! 2. the Linux sysfs NUMA tree (`/sys/devices/system/node/node*/cpulist`,
+//!    intersected with `/sys/devices/system/cpu/online` so offline CPUs
+//!    are never pinned to);
+//! 3. a flat single-node fallback (one socket holding every hardware
+//!    thread) everywhere else.
+//!
+//! [`pin_current_thread`] is the affinity shim: on Linux it calls
+//! `sched_setaffinity` directly through the C ABI (no `libc` crate in
+//! this environment); on other targets it is a no-op returning `false`.
+//! Pinning is always best-effort — a synthetic override naming CPUs the
+//! machine does not have simply fails the syscall and the pool runs
+//! unpinned.
+//!
+//! [`crate::coordinator::shards`] consumes this: the shard count defaults
+//! to the socket count, shard `i`'s [`crate::spmv::pool::ParPool`] is
+//! pinned to socket `i mod sockets`, and every plan build first-touches
+//! its arrays from those pinned workers (see
+//! [`crate::spmv::pool::ParPool::run_init`]).
+
+use std::path::Path;
+
+/// How a [`Topology`] was obtained (reported by `spmv-at topology` and
+/// the serve banner; pinning itself only depends on the socket count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologySource {
+    /// The `SPMV_AT_TOPOLOGY=<sockets>:<cores>` override.
+    Override,
+    /// Parsed from the sysfs NUMA tree.
+    Sysfs,
+    /// Flat single-node fallback (no NUMA information available).
+    Flat,
+}
+
+/// The machine's socket/core layout: one CPU-id list per socket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    sockets: Vec<Vec<usize>>,
+    source: TopologySource,
+}
+
+impl Topology {
+    /// The topology this process should plan against: the
+    /// `SPMV_AT_TOPOLOGY` override when set and valid, the sysfs NUMA
+    /// tree on Linux, a flat single-node layout otherwise.
+    pub fn detect() -> Self {
+        if let Ok(s) = std::env::var("SPMV_AT_TOPOLOGY") {
+            if let Some(t) = Self::parse_override(&s) {
+                return t;
+            }
+        }
+        #[cfg(target_os = "linux")]
+        if let Some(t) = Self::from_sys_root(Path::new("/sys")) {
+            return t;
+        }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::single_node(cores)
+    }
+
+    /// A flat single-node topology: one socket holding CPUs `0..cores`.
+    pub fn single_node(cores: usize) -> Self {
+        Self {
+            sockets: vec![(0..cores.max(1)).collect()],
+            source: TopologySource::Flat,
+        }
+    }
+
+    /// Parse the `<sockets>:<cores>` override (e.g. `2:4` = two sockets
+    /// of four cores each, CPUs numbered contiguously per socket).
+    /// Returns `None` for anything malformed or non-positive.
+    pub fn parse_override(s: &str) -> Option<Self> {
+        let (sockets, cores) = s.trim().split_once(':')?;
+        let sockets: usize = sockets.trim().parse().ok().filter(|&n| n >= 1)?;
+        let cores: usize = cores.trim().parse().ok().filter(|&n| n >= 1)?;
+        Some(Self {
+            sockets: (0..sockets)
+                .map(|i| (i * cores..(i + 1) * cores).collect())
+                .collect(),
+            source: TopologySource::Override,
+        })
+    }
+
+    /// Parse a sysfs tree rooted at `root` (`/sys` in production, a
+    /// fixture directory in tests): one socket per
+    /// `devices/system/node/node<k>` directory, CPUs from its `cpulist`,
+    /// intersected with `devices/system/cpu/online` when present.
+    /// Memory-only nodes (no online CPUs) are dropped. Returns `None`
+    /// when no node directory with CPUs exists.
+    pub fn from_sys_root(root: &Path) -> Option<Self> {
+        let node_dir = root.join("devices/system/node");
+        let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+        for entry in std::fs::read_dir(&node_dir).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(idx) = name.strip_prefix("node").and_then(|r| r.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                continue;
+            };
+            nodes.push((idx, parse_cpu_list(&list)));
+        }
+        nodes.sort_by_key(|(idx, _)| *idx);
+        // Offline CPUs must never be pinned to: intersect with the online
+        // mask when the tree carries one.
+        if let Ok(online) = std::fs::read_to_string(root.join("devices/system/cpu/online")) {
+            let online = parse_cpu_list(&online);
+            for (_, cpus) in &mut nodes {
+                cpus.retain(|c| online.binary_search(c).is_ok());
+            }
+        }
+        let sockets: Vec<Vec<usize>> =
+            nodes.into_iter().map(|(_, cpus)| cpus).filter(|c| !c.is_empty()).collect();
+        if sockets.is_empty() {
+            return None;
+        }
+        Some(Self { sockets, source: TopologySource::Sysfs })
+    }
+
+    /// Number of sockets (always ≥ 1).
+    pub fn n_sockets(&self) -> usize {
+        self.sockets.len()
+    }
+
+    /// Total CPUs across all sockets.
+    pub fn n_cpus(&self) -> usize {
+        self.sockets.iter().map(Vec::len).sum()
+    }
+
+    /// The CPU ids of socket `i`.
+    ///
+    /// # Panics
+    /// Panics if `i >= n_sockets()`.
+    pub fn cpus(&self, i: usize) -> &[usize] {
+        &self.sockets[i]
+    }
+
+    /// Where this topology came from.
+    pub fn source(&self) -> TopologySource {
+        self.source
+    }
+
+    /// The CPU set pool shard `i` should pin to (socket `i mod sockets`),
+    /// or `None` on single-socket machines where pinning buys nothing.
+    pub fn shard_cpus(&self, shard: usize) -> Option<Vec<usize>> {
+        if self.n_sockets() <= 1 {
+            return None;
+        }
+        Some(self.sockets[shard % self.sockets.len()].clone())
+    }
+}
+
+/// Parse a kernel CPU-list string (`"0-3,8,10-11"`) into a sorted,
+/// deduplicated id list. Malformed tokens are skipped (the kernel never
+/// emits them; fixtures should not be able to panic production detect).
+pub fn parse_cpu_list(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for token in s.trim().split(',') {
+        let token = token.trim();
+        if token.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = token.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>()) {
+                if lo <= hi {
+                    out.extend(lo..=hi);
+                }
+            }
+        } else if let Ok(c) = token.parse::<usize>() {
+            out.push(c);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// The raw `sched_{set,get}affinity` shim (Linux only). glibc `cpu_set_t`
+/// is a fixed 1024-bit mask of unsigned longs; the symbols are declared
+/// directly against the C ABI because this environment carries no `libc`
+/// crate.
+#[cfg(target_os = "linux")]
+mod sys {
+    pub const SETSIZE: usize = 1024;
+    pub const WORD: usize = 8 * std::mem::size_of::<usize>();
+
+    #[repr(C)]
+    pub struct CpuSet {
+        pub bits: [usize; SETSIZE / WORD],
+    }
+
+    extern "C" {
+        // int sched_setaffinity(pid_t pid, size_t cpusetsize, const cpu_set_t *mask);
+        pub fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+        // int sched_getaffinity(pid_t pid, size_t cpusetsize, cpu_set_t *mask);
+        pub fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut CpuSet) -> i32;
+    }
+}
+
+/// Pin the calling thread to `cpus` via `sched_setaffinity`. Returns
+/// whether the kernel accepted the mask. Best-effort by design: an empty
+/// or entirely-invalid CPU set (e.g. a synthetic `SPMV_AT_TOPOLOGY`
+/// override naming CPUs this machine lacks) returns `false` and leaves
+/// the thread's affinity unchanged.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    use sys::{CpuSet, SETSIZE, WORD};
+    let mut set = CpuSet { bits: [0; SETSIZE / WORD] };
+    let mut any = false;
+    for &c in cpus {
+        if c < SETSIZE {
+            set.bits[c / WORD] |= 1 << (c % WORD);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    // SAFETY: `set` is a valid, fully initialised mask of the size passed;
+    // pid 0 targets the calling thread.
+    unsafe { sys::sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
+}
+
+/// The calling thread's current affinity mask as a CPU-id list, or `None`
+/// when it cannot be read.
+#[cfg(target_os = "linux")]
+pub fn current_affinity() -> Option<Vec<usize>> {
+    use sys::{CpuSet, SETSIZE, WORD};
+    let mut set = CpuSet { bits: [0; SETSIZE / WORD] };
+    // SAFETY: `set` is a writable mask of the size passed; pid 0 targets
+    // the calling thread.
+    if unsafe { sys::sched_getaffinity(0, std::mem::size_of::<CpuSet>(), &mut set) } != 0 {
+        return None;
+    }
+    let mut cpus = Vec::new();
+    for c in 0..SETSIZE {
+        if set.bits[c / WORD] & (1 << (c % WORD)) != 0 {
+            cpus.push(c);
+        }
+    }
+    Some(cpus)
+}
+
+/// Run `f` with the calling thread pinned to `cpus`, restoring the
+/// thread's previous affinity afterwards. If the previous mask cannot be
+/// read (so it could not be restored), `f` runs unpinned rather than
+/// permanently hijacking the caller's placement. This is what
+/// [`crate::spmv::pool::ParPool::run_init`] wraps initialization
+/// fan-outs in: the *caller* participates in chunk claiming (and runs
+/// everything on width-1 pools), so the first-touch guarantee needs the
+/// calling thread on the pool's socket too, not just the parked workers.
+pub fn with_affinity<R>(cpus: &[usize], f: impl FnOnce() -> R) -> R {
+    #[cfg(target_os = "linux")]
+    {
+        if let Some(saved) = current_affinity() {
+            let pinned = pin_current_thread(cpus);
+            let out = f();
+            if pinned {
+                pin_current_thread(&saved);
+            }
+            return out;
+        }
+    }
+    let _ = cpus;
+    f()
+}
+
+/// Non-Linux stub: affinity is not supported, nothing happens.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cpus: &[usize]) -> bool {
+    false
+}
+
+/// Non-Linux stub: the affinity mask is not readable.
+#[cfg(not(target_os = "linux"))]
+pub fn current_affinity() -> Option<Vec<usize>> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_list_parsing() {
+        assert_eq!(parse_cpu_list("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpu_list("0-1,4,6-7\n"), vec![0, 1, 4, 6, 7]);
+        assert_eq!(parse_cpu_list(" 2 , 0 "), vec![0, 2]);
+        assert_eq!(parse_cpu_list("3,3,1-3"), vec![1, 2, 3]);
+        assert!(parse_cpu_list("").is_empty());
+        assert!(parse_cpu_list("garbage,5-2").is_empty());
+    }
+
+    #[test]
+    fn override_parsing() {
+        let t = Topology::parse_override("2:4").unwrap();
+        assert_eq!(t.n_sockets(), 2);
+        assert_eq!(t.cpus(0), &[0, 1, 2, 3]);
+        assert_eq!(t.cpus(1), &[4, 5, 6, 7]);
+        assert_eq!(t.source(), TopologySource::Override);
+        assert_eq!(Topology::parse_override(" 1:2 ").unwrap().n_cpus(), 2);
+        for bad in ["", "2", "0:4", "2:0", "a:b", "2:4:8", "-1:4"] {
+            assert!(Topology::parse_override(bad).is_none(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn single_node_fallback_shape() {
+        let t = Topology::single_node(6);
+        assert_eq!(t.n_sockets(), 1);
+        assert_eq!(t.n_cpus(), 6);
+        assert_eq!(t.source(), TopologySource::Flat);
+        assert!(t.shard_cpus(0).is_none(), "single socket never pins");
+        assert_eq!(Topology::single_node(0).n_cpus(), 1, "degenerate clamps to one CPU");
+    }
+
+    #[test]
+    fn shard_cpus_wrap_around_sockets() {
+        let t = Topology::parse_override("2:2").unwrap();
+        assert_eq!(t.shard_cpus(0), Some(vec![0, 1]));
+        assert_eq!(t.shard_cpus(1), Some(vec![2, 3]));
+        assert_eq!(t.shard_cpus(2), Some(vec![0, 1]), "shard 2 wraps to socket 0");
+    }
+
+    #[test]
+    fn detect_is_always_usable() {
+        // Whatever the host looks like, detect() must produce a pinnable,
+        // non-empty layout.
+        let t = Topology::detect();
+        assert!(t.n_sockets() >= 1);
+        assert!(t.n_cpus() >= 1);
+        for i in 0..t.n_sockets() {
+            assert!(!t.cpus(i).is_empty());
+        }
+    }
+
+    #[test]
+    fn pinning_is_best_effort() {
+        // An empty set must be rejected without touching affinity.
+        assert!(!pin_current_thread(&[]));
+        // CPUs beyond the mask width are ignored rather than UB.
+        assert!(!pin_current_thread(&[usize::MAX]));
+    }
+
+    #[test]
+    fn with_affinity_restores_the_callers_mask() {
+        let before = current_affinity();
+        let ran = std::cell::Cell::new(false);
+        // Whatever CPU 0's validity on this host, the closure must run
+        // and the caller's mask must come back unchanged.
+        with_affinity(&[0], || ran.set(true));
+        assert!(ran.get());
+        assert_eq!(current_affinity(), before, "caller affinity must be restored");
+        // An unpinnable set still runs the closure.
+        let out = with_affinity(&[usize::MAX], || 42);
+        assert_eq!(out, 42);
+        assert_eq!(current_affinity(), before);
+    }
+}

@@ -10,6 +10,8 @@
 //! * `spmv` — run SpMV through an `OpenATI_DURMV`-style switch.
 //! * `solve` — solve a generated system through the AT-routed coordinator.
 //! * `serve` — line-oriented REPL over the coordinator server.
+//! * `topology` — print the detected socket/core layout and the shard
+//!   plan derived from it (NUMA observability).
 //!
 //! The CLI is dependency-free (no clap in the offline environment): flags
 //! are `--key value` pairs parsed by [`Args`].
@@ -266,7 +268,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --solver"))?;
     let mut cfg = CoordinatorConfig::new(tuning);
     cfg.threads = args.parse_usize("threads", configured_threads())?;
-    // SPMV_AT_SHARDS (default 1) unless --shards overrides.
+    // SPMV_AT_SHARDS (default: detected socket count) unless --shards overrides.
     cfg.shards = args.parse_usize("shards", cfg.shards)?;
     // SPMV_AT_ADAPTIVE (default off) unless --adaptive overrides.
     if let Some(on) = args.parse_bool("adaptive")? {
@@ -332,7 +334,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let preload_snapshot = preloaded.clone();
     cfg.learned = preloaded;
     cfg.threads = args.parse_usize("threads", configured_threads())?;
-    // SPMV_AT_SHARDS (default 1) unless --shards overrides.
+    // SPMV_AT_SHARDS (default: detected socket count) unless --shards overrides.
     cfg.shards = args.parse_usize("shards", cfg.shards)?;
     // SPMV_AT_ADAPTIVE (default off) unless --adaptive overrides.
     if let Some(on) = args.parse_bool("adaptive")? {
@@ -358,9 +360,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         Server::spawn(coord, 64)
     } else {
+        let effective =
+            spmv_at::coordinator::shards::shard_thread_counts(cfg.threads, cfg.shards).len();
+        let topo = spmv_at::machine::Topology::detect();
         println!(
-            "# serving {} shard(s), {} thread(s), adaptive={}",
-            cfg.shards.max(1),
+            "# serving {} shard(s) over {} socket(s), {} thread(s), adaptive={}",
+            effective,
+            topo.n_sockets(),
             cfg.threads,
             if adaptive_on { "on" } else { "off" }
         );
@@ -422,13 +428,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             ["stats"] => {
                 for s in client.stats()? {
+                    // The serving shard: the client's route when sharded
+                    // loops serve (each loop is internally single-shard),
+                    // the entry's own shard otherwise.
+                    let shard = if client.shards() > 1 {
+                        spmv_at::coordinator::shards::route_key(&s.name, client.shards()) as usize
+                    } else {
+                        s.shard
+                    };
                     println!(
-                        "{}: n={} nnz={} D={:.3} serving={} calls={} amortized={} \
+                        "{}: n={} nnz={} D={:.3} shard={} serving={} calls={} amortized={} \
                          samples=crs:{}/imp:{} explored={} replans={}",
                         s.name,
                         s.n,
                         s.nnz,
                         s.d_mat,
+                        shard,
                         s.serving,
                         s.calls,
                         s.amortized,
@@ -469,22 +484,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_topology(args: &Args) -> Result<()> {
+    use spmv_at::coordinator::shards::{configured_shards, shard_thread_counts};
+    use spmv_at::machine::topology::{Topology, TopologySource};
+    let topo = Topology::detect();
+    let source = match topo.source() {
+        TopologySource::Override => "SPMV_AT_TOPOLOGY override",
+        TopologySource::Sysfs => "sysfs NUMA tree",
+        TopologySource::Flat => "flat fallback (no NUMA info)",
+    };
+    println!("topology source: {source}");
+    println!("sockets: {}  cpus: {}", topo.n_sockets(), topo.n_cpus());
+    let mut t = Table::new(vec!["socket", "cpus"]);
+    for i in 0..topo.n_sockets() {
+        let cpus: Vec<String> = topo.cpus(i).iter().map(usize::to_string).collect();
+        t.row(vec![i.to_string(), cpus.join(",")]);
+    }
+    print!("{}", t.render());
+    let threads = args.parse_usize("threads", configured_threads())?;
+    let shards = args.parse_usize("shards", configured_shards())?;
+    let counts = shard_thread_counts(threads, shards);
+    println!(
+        "shard plan: {} shard(s) over {} thread(s) -> widths {:?}{}",
+        counts.len(),
+        threads,
+        counts,
+        if topo.n_sockets() > 1 {
+            " (each pinned to socket i mod sockets)"
+        } else {
+            " (single socket: unpinned)"
+        }
+    );
+    Ok(())
+}
+
 fn usage() -> ! {
     eprintln!(
-        "usage: spmv-at <suite|offline|decide|spmv|solve|serve> [--flag value]...\n\
+        "usage: spmv-at <suite|offline|decide|spmv|solve|serve|topology> [--flag value]...\n\
          flags (solve/serve):\n\
          \x20 --adaptive 0|1   adaptive runtime autotuner: online telemetry, budgeted\n\
          \x20                  exploration, hysteresis-guarded re-planning\n\
          \x20                  (overrides the SPMV_AT_ADAPTIVE environment variable)\n\
          \x20 --learned <path> (serve) start from a learned v2 tuning table and save\n\
          \x20                  the per-D_mat-bucket corrections back on quit\n\
+         \x20 --shards <n>     pool shards (default: SPMV_AT_SHARDS, else the machine's\n\
+         \x20                  socket count; each shard pins to one socket and plans\n\
+         \x20                  first-touch their data there)\n\
+         environment: SPMV_AT_THREADS, SPMV_AT_SHARDS, SPMV_AT_BATCH_TILE,\n\
+         \x20 SPMV_AT_ADAPTIVE, SPMV_AT_TOPOLOGY=<sockets>:<cores> (see docs/TUNING.md)\n\
          examples:\n\
          \x20 spmv-at suite --scale 0.05\n\
          \x20 spmv-at offline --backend es2 --scale 0.05 --out tuning-es2.tsv\n\
          \x20 spmv-at decide --tuning tuning-es2.tsv --matrix memplus\n\
          \x20 spmv-at spmv --matrix chem_master1 --switch 0 --iters 100 --batch 16\n\
          \x20 spmv-at solve --matrix xenon1 --solver cg --adaptive 1\n\
-         \x20 spmv-at serve --shards 4 --adaptive 1 --learned learned.tsv"
+         \x20 spmv-at serve --shards 4 --adaptive 1 --learned learned.tsv\n\
+         \x20 spmv-at topology"
     );
     std::process::exit(2)
 }
@@ -500,6 +555,7 @@ fn main() -> Result<()> {
         "spmv" => cmd_spmv(&args),
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
+        "topology" => cmd_topology(&args),
         _ => usage(),
     }
 }

@@ -223,6 +223,40 @@ impl AnyMatrix {
         })
     }
 
+    /// Fault the owned arrays into memory from `pool`'s workers via one
+    /// [`ParPool::run_init`] fan-out. On a socket-pinned pool this is the
+    /// NUMA first-touch/warm pass every plan build pays: freshly
+    /// transformed arrays were already written (first-touched) on these
+    /// workers by [`crate::transform::par`], and this pass additionally
+    /// walks the value/index streams so shared or pre-existing pages
+    /// (e.g. the zero-copy CRS original) are faulted and cache-warmed on
+    /// the socket that will stream them. Formats without exposed raw
+    /// arrays (BCSR/JDS/HYB) still count one init fan-out so a build is
+    /// always observable through [`ParPool::init_count`].
+    pub fn first_touch_on(&self, pool: &ParPool) {
+        let (vals, idx): (&[Value], Option<&[Index]>) = match self {
+            AnyMatrix::Csr(m) => (&m.values, Some(&m.col_idx)),
+            AnyMatrix::Csc(m) => (&m.values, Some(&m.row_idx)),
+            AnyMatrix::Coo(m) => (&m.values, Some(&m.col_idx)),
+            AnyMatrix::Ell(m) => (&m.values, Some(&m.col_idx)),
+            AnyMatrix::Bcsr(_) | AnyMatrix::Jds(_) | AnyMatrix::Hyb(_) => (&[], None),
+        };
+        let ranges = split_even(vals.len(), pool.size());
+        pool.run_init(&ranges, |_tid, r| {
+            let mut acc = 0.0f64;
+            for &v in &vals[r.clone()] {
+                acc += v;
+            }
+            let mut ci = 0u64;
+            if let Some(idx) = idx {
+                for &c in &idx[r] {
+                    ci = ci.wrapping_add(u64::from(c));
+                }
+            }
+            std::hint::black_box((acc, ci));
+        });
+    }
+
     /// View as the dynamic [`SparseMatrix`] trait.
     pub fn as_sparse(&self) -> &dyn SparseMatrix {
         match self {

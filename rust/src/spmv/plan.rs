@@ -26,6 +26,15 @@
 //! of `k`, observable through [`SpmvPlan::matrix_passes`] and the pool's
 //! dispatch counters. Plans share the CRS original by `Arc`, so the CRS
 //! baseline plan every registered matrix keeps is zero-copy.
+//!
+//! Construction is **first-touch aware**: the transformation writes its
+//! arrays through [`ParPool::run_init`] on the plan's pool, and every
+//! build ends with an [`AnyMatrix::first_touch_on`] pass over the chosen
+//! representation — so on a socket-pinned shard pool (see
+//! [`crate::coordinator::shards`] and [`crate::machine::topology`]) the
+//! data a plan will stream lives on the socket whose workers stream it,
+//! and each build/re-plan is observable as a
+//! [`ParPool::init_count`] delta.
 
 use super::kernels::{self, AnyMatrix};
 use super::pool::{self, ParPool};
@@ -142,6 +151,11 @@ impl SpmvPlan {
         } else {
             0.0
         };
+        // First-touch/warm the chosen representation from this pool's
+        // (possibly socket-pinned) workers — every build is observable as
+        // a `ParPool::init_count` delta, and on a NUMA shard the arrays
+        // end up faulted on the socket that will stream them.
+        matrix.first_touch_on(&pool);
         let ranges = kernels::partition_for(imp, &matrix, pool.size());
         let rows_per_rhs = rows_per_rhs_for(imp, csr.n_rows(), ranges.len());
         Self {

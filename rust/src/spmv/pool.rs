@@ -26,6 +26,44 @@
 //! The pool size defaults to [`configured_threads`]: the `SPMV_AT_THREADS`
 //! environment variable when set, otherwise the hardware parallelism.
 //! That function is the crate-wide single source of thread-count truth.
+//!
+//! **NUMA affinity.** A pool built with [`ParPool::new_pinned`] pins every
+//! worker to a CPU set (one socket, in the shard layer's usage) via the
+//! [`crate::machine::topology::pin_current_thread`] shim — best-effort,
+//! no-op off Linux. [`ParPool::run_init`] is the *initialization* fan-out:
+//! identical to [`ParPool::run_chunks`] but counted separately
+//! ([`ParPool::init_count`]), it is what plan construction and the
+//! parallel transforms run their array-materialising writes through, so
+//! on a pinned pool every transformed page is first-touched on the owning
+//! socket — and the counter makes that routing observable to tests.
+//!
+//! # Example
+//!
+//! Fan a reduction out over a pool, then build and execute a plan on it:
+//!
+//! ```
+//! use spmv_at::spmv::pool::ParPool;
+//! use spmv_at::spmv::{Implementation, SpmvPlan};
+//! use spmv_at::formats::Csr;
+//! use std::sync::Arc;
+//! use std::sync::atomic::{AtomicUsize, Ordering};
+//!
+//! let pool = Arc::new(ParPool::new(2));
+//! let total = AtomicUsize::new(0);
+//! pool.run_chunks(&[0..50, 50..100], |_chunk, r| {
+//!     total.fetch_add(r.sum::<usize>(), Ordering::Relaxed);
+//! });
+//! assert_eq!(total.into_inner(), 4950);
+//!
+//! // Plans execute on the same persistent workers (see `spmv::plan`).
+//! let a = Arc::new(Csr::identity(4));
+//! let before = pool.init_count();
+//! let mut plan = SpmvPlan::build(&a, Implementation::CsrRowPar, None, pool.clone()).unwrap();
+//! assert!(pool.init_count() > before, "builds first-touch through run_init");
+//! let mut y = vec![0.0; 4];
+//! plan.execute(&[1.0, 2.0, 3.0, 4.0], &mut y).unwrap();
+//! assert_eq!(y, vec![1.0, 2.0, 3.0, 4.0]);
+//! ```
 
 use std::cell::Cell;
 use std::ops::Range;
@@ -125,10 +163,18 @@ pub struct ParPool {
     shared: Arc<PoolShared>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    /// The CPU set every worker pinned itself to at spawn (`None` =
+    /// unpinned). The sharded server reads this back to pin its request
+    /// loop onto the same socket.
+    affinity: Option<Arc<Vec<usize>>>,
     /// Chunked jobs dispatched over the pool's lifetime (including serial
     /// fallbacks) — the observability counter the SpMM pass-count tests
     /// read to prove a tiled batch streams the matrix once per tile.
     dispatches: AtomicU64,
+    /// Initialization fan-outs ([`ParPool::run_init`]) over the pool's
+    /// lifetime — the observability counter proving plan builds and
+    /// re-plans first-touch their arrays on this pool's workers.
+    inits: AtomicU64,
 }
 
 impl ParPool {
@@ -136,7 +182,17 @@ impl ParPool {
     /// of [`ParPool::run_chunks`] is the remaining thread). `size == 1`
     /// spawns nothing and runs everything serially.
     pub fn new(size: usize) -> Self {
+        Self::new_pinned(size, None)
+    }
+
+    /// Pool of logical size `size` whose workers pin themselves to `cpus`
+    /// at spawn (the whole set, so the OS can still balance within the
+    /// socket). Pinning is best-effort — see
+    /// [`crate::machine::topology::pin_current_thread`] — and `None` (or
+    /// an empty set) spawns an ordinary unpinned pool.
+    pub fn new_pinned(size: usize, cpus: Option<Vec<usize>>) -> Self {
         let size = size.max(1);
+        let affinity = cpus.filter(|c| !c.is_empty()).map(Arc::new);
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState {
                 job: None,
@@ -152,13 +208,26 @@ impl ParPool {
         let mut workers = Vec::with_capacity(size - 1);
         for id in 1..size {
             let sh = Arc::clone(&shared);
+            let aff = affinity.clone();
             let h = std::thread::Builder::new()
                 .name(format!("spmv-pool-{id}"))
-                .spawn(move || worker_loop(&sh))
+                .spawn(move || {
+                    if let Some(cpus) = &aff {
+                        crate::machine::topology::pin_current_thread(cpus);
+                    }
+                    worker_loop(&sh)
+                })
                 .expect("spawn pool worker");
             workers.push(h);
         }
-        Self { shared, workers, size, dispatches: AtomicU64::new(0) }
+        Self {
+            shared,
+            workers,
+            size,
+            affinity,
+            dispatches: AtomicU64::new(0),
+            inits: AtomicU64::new(0),
+        }
     }
 
     /// Pool sized by [`configured_threads`].
@@ -177,6 +246,42 @@ impl ParPool {
     /// `execute_many` call exposes the ⌈k/tile⌉ pass count.
     pub fn dispatch_count(&self) -> u64 {
         self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Initialization fan-outs so far (monotonic). Every
+    /// [`ParPool::run_init`] call counts — including degenerate ones whose
+    /// range table is empty — so a plan build on this pool is always
+    /// visible as a positive delta.
+    pub fn init_count(&self) -> u64 {
+        self.inits.load(Ordering::Relaxed)
+    }
+
+    /// The CPU set this pool's workers pinned to, if any.
+    pub fn affinity(&self) -> Option<&[usize]> {
+        self.affinity.as_ref().map(|a| a.as_slice())
+    }
+
+    /// [`ParPool::run_chunks`], counted as an **initialization** fan-out:
+    /// the entry point for work that *materialises* arrays (parallel
+    /// CRS→COO/ELL/CCS transforms, plan-build first-touch passes) rather
+    /// than consuming them. On a pinned pool every chunk body executes on
+    /// the pool's socket — the parked workers are pinned at spawn, and
+    /// the **calling thread** (which claims chunks too, and runs
+    /// everything on width-1 pools) is temporarily moved onto the same
+    /// CPU set for the duration of the fan-out
+    /// ([`crate::machine::topology::with_affinity`], original mask
+    /// restored after) — so pages written here are first-touched —
+    /// physically allocated — on that socket's memory regardless of where
+    /// the build was driven from. [`ParPool::init_count`] exposes how
+    /// many such fan-outs ran.
+    pub fn run_init(&self, ranges: &[Range<usize>], f: impl Fn(usize, Range<usize>) + Sync) {
+        self.inits.fetch_add(1, Ordering::Relaxed);
+        match &self.affinity {
+            Some(cpus) => crate::machine::topology::with_affinity(cpus, || {
+                self.run_chunks(ranges, f);
+            }),
+            None => self.run_chunks(ranges, f),
+        }
     }
 
     /// Execute `f(chunk_index, range)` once per range, in parallel across
@@ -267,7 +372,10 @@ impl Drop for ParPool {
 
 impl std::fmt::Debug for ParPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("ParPool").field("size", &self.size).finish()
+        f.debug_struct("ParPool")
+            .field("size", &self.size)
+            .field("affinity", &self.affinity)
+            .finish()
     }
 }
 
@@ -471,5 +579,42 @@ mod tests {
     fn configured_threads_is_positive() {
         assert!(configured_threads() >= 1);
         assert!(global().size() >= 1);
+    }
+
+    #[test]
+    fn run_init_counts_separately_from_plain_dispatches() {
+        let pool = ParPool::new(2);
+        let ranges = split_even(64, 2);
+        let (d0, i0) = (pool.dispatch_count(), pool.init_count());
+        pool.run_chunks(&ranges, |_tid, _r| {});
+        assert_eq!(pool.init_count() - i0, 0, "plain chunks are not inits");
+        pool.run_init(&ranges, |_tid, _r| {});
+        assert_eq!(pool.init_count() - i0, 1);
+        assert_eq!(pool.dispatch_count() - d0, 2, "an init fan-out is also a dispatch");
+        // Degenerate init fan-outs still count (a CRS plan with nothing to
+        // materialise must stay observable).
+        pool.run_init(&[], |_tid, _r| {});
+        assert_eq!(pool.init_count() - i0, 2);
+    }
+
+    #[test]
+    fn pinned_pool_executes_correctly_whatever_the_host() {
+        // Pinning is best-effort: whether or not the mask applies on this
+        // machine, the pool must stay a correct executor.
+        let pool = ParPool::new_pinned(3, Some(vec![0, 1]));
+        assert_eq!(pool.affinity(), Some(&[0usize, 1][..]));
+        let n = 1024usize;
+        let ranges = split_even(n, 3);
+        let mut out = vec![0.0f64; n];
+        let p = SendPtr(out.as_mut_ptr());
+        pool.run_init(&ranges, |_tid, r| {
+            for i in r {
+                unsafe { *p.get().add(i) = i as f64 };
+            }
+        });
+        assert!((0..n).all(|i| out[i] == i as f64));
+        // Empty CPU sets degrade to an unpinned pool.
+        assert!(ParPool::new_pinned(2, Some(Vec::new())).affinity().is_none());
+        assert!(ParPool::new_pinned(2, None).affinity().is_none());
     }
 }

@@ -10,6 +10,13 @@
 //! points take an explicit pool (this is what plan construction uses);
 //! the `*_par(a, n_threads)` wrappers keep the historical signature and
 //! run `n_threads` chunks on the global pool.
+//!
+//! Every fan-out here goes through [`ParPool::run_init`], not plain
+//! `run_chunks`: a transform *is* array initialization, so on a
+//! socket-pinned shard pool the freshly written COO/ELL/CCS pages are
+//! first-touched — physically placed — on the socket that will stream
+//! them (the NUMA layer's core mechanism; see
+//! [`crate::machine::topology`]).
 
 use crate::formats::{Coo, CooOrder, Csc, Csr, Ell, SparseMatrix};
 use crate::spmv::partition::split_even;
@@ -45,7 +52,7 @@ fn crs_to_ell_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Result<Ell> {
     let ranges = split_even(n, n_chunks);
     let vp = SendPtr(values.as_mut_ptr());
     let cp = SendPtr(col_idx.as_mut_ptr());
-    pool.run_chunks(&ranges, |_tid, r| {
+    pool.run_init(&ranges, |_tid, r| {
         for i in r {
             for (k, (c, v)) in a.row(i).enumerate() {
                 unsafe {
@@ -76,7 +83,7 @@ fn crs_to_coo_row_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Coo {
     let mut row_idx = vec![0 as Index; nnz];
     let ranges = split_even(n, n_chunks);
     let rp = SendPtr(row_idx.as_mut_ptr());
-    pool.run_chunks(&ranges, |_tid, r| {
+    pool.run_init(&ranges, |_tid, r| {
         let mut w = a.row_ptr[r.start];
         for i in r {
             for _ in 0..(a.row_ptr[i + 1] - a.row_ptr[i]) {
@@ -114,7 +121,7 @@ fn crs_to_ccs_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Csc {
     // Phase 1: per-chunk column counts.
     let mut counts = vec![vec![0usize; n_cols]; t];
     let countp = SendPtr(counts.as_mut_ptr());
-    pool.run_chunks(&ranges, |tid, r| {
+    pool.run_init(&ranges, |tid, r| {
         // Chunk `tid` owns counts[tid] exclusively.
         let cnt = unsafe { &mut *countp.get().add(tid) };
         for k in a.row_ptr[r.start]..a.row_ptr[r.end] {
@@ -144,7 +151,7 @@ fn crs_to_ccs_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Csc {
     let rp = SendPtr(row_idx.as_mut_ptr());
     let vp = SendPtr(values.as_mut_ptr());
     let curp = SendPtr(cursors.as_mut_ptr());
-    pool.run_chunks(&ranges, |tid, r| {
+    pool.run_init(&ranges, |tid, r| {
         let cur = unsafe { &mut *curp.get().add(tid) };
         for i in r {
             for (c, v) in a.row(i) {
@@ -180,7 +187,7 @@ fn crs_to_coo_col_chunked(a: &Csr, pool: &ParPool, n_chunks: usize) -> Coo {
     let ranges = split_even(n_cols, n_chunks);
     let cp = SendPtr(col_idx.as_mut_ptr());
     let ccs_ref = &ccs;
-    pool.run_chunks(&ranges, |_tid, r| {
+    pool.run_init(&ranges, |_tid, r| {
         let mut w = ccs_ref.col_ptr[r.start];
         for j in r {
             for _ in 0..ccs_ref.col_len(j) {

@@ -1,0 +1,289 @@
+//! NUMA topology + cross-socket split integration tests.
+//!
+//! Covers the ISSUE-4 acceptance surface:
+//!
+//! * sysfs fixture parsing (single-node, 2-socket, offline CPUs);
+//! * the zero-thread-shard regression (`shard_thread_counts` clamps);
+//! * first-touch observability: every plan build and adaptive re-plan is
+//!   a `ParPool::run_init` fan-out on the owning shard's pool;
+//! * the bitwise property: `execute_split_many` equals `execute_many`
+//!   across splits {1, 2, shards} and thread counts {1, 2, 7}.
+//!
+//! No test here mutates environment variables (tests share the process
+//! and `set_var` racing `getenv` is UB on glibc): the
+//! `SPMV_AT_TOPOLOGY` override acceptance test lives alone in
+//! `rust/tests/topology_env.rs`, its own sequentially-run binary.
+
+use spmv_at::autotune::online::TuningData;
+use spmv_at::autotune::MemoryPolicy;
+use spmv_at::coordinator::shards::shard_thread_counts;
+use spmv_at::coordinator::{Coordinator, CoordinatorConfig, PlanShards, ShardedPlanner};
+use spmv_at::formats::{Csr, FormatKind, SparseMatrix};
+use spmv_at::machine::topology::{parse_cpu_list, Topology, TopologySource};
+use spmv_at::matrixgen::{banded_circulant, random_csr};
+use spmv_at::rng::Rng;
+use spmv_at::spmv::Implementation;
+use spmv_at::Value;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tuning(imp: Implementation, d_star: Option<f64>) -> TuningData {
+    TuningData { backend: "sim:ES2".into(), imp, threads: 1, c: 1.0, d_star }
+}
+
+/// Build a fixture /sys tree under a unique temp dir; returns its root.
+/// `nodes` maps node index -> cpulist contents; `online` is the optional
+/// devices/system/cpu/online contents.
+fn sys_fixture(tag: &str, nodes: &[(usize, &str)], online: Option<&str>) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("spmv-at-sys-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for (idx, cpulist) in nodes {
+        let d = root.join(format!("devices/system/node/node{idx}"));
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("cpulist"), cpulist).unwrap();
+    }
+    if let Some(online) = online {
+        let d = root.join("devices/system/cpu");
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("online"), online).unwrap();
+    } else {
+        // The node dir must exist even with zero nodes so read_dir works.
+        std::fs::create_dir_all(root.join("devices/system/node")).unwrap();
+    }
+    root
+}
+
+#[test]
+fn sysfs_single_node_fixture() {
+    let root = sys_fixture("single", &[(0, "0-3\n")], None);
+    let t = Topology::from_sys_root(&root).unwrap();
+    assert_eq!(t.n_sockets(), 1);
+    assert_eq!(t.cpus(0), &[0, 1, 2, 3]);
+    assert_eq!(t.source(), TopologySource::Sysfs);
+    assert!(t.shard_cpus(0).is_none(), "one socket: no pinning");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn sysfs_two_socket_fixture() {
+    let root = sys_fixture("dual", &[(0, "0-3\n"), (1, "4-7\n")], None);
+    let t = Topology::from_sys_root(&root).unwrap();
+    assert_eq!(t.n_sockets(), 2);
+    assert_eq!(t.cpus(0), &[0, 1, 2, 3]);
+    assert_eq!(t.cpus(1), &[4, 5, 6, 7]);
+    assert_eq!(t.shard_cpus(1), Some(vec![4, 5, 6, 7]));
+    assert_eq!(t.shard_cpus(3), Some(vec![4, 5, 6, 7]), "wraps modulo sockets");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn sysfs_offline_cpus_are_dropped() {
+    // CPUs 6-7 of node1 are offline; node2 is entirely offline and must
+    // disappear rather than become an unpinnable empty socket.
+    let root = sys_fixture(
+        "offline",
+        &[(0, "0-3\n"), (1, "4-7\n"), (2, "8-11\n")],
+        Some("0-5\n"),
+    );
+    let t = Topology::from_sys_root(&root).unwrap();
+    assert_eq!(t.n_sockets(), 2, "the all-offline node vanishes");
+    assert_eq!(t.cpus(0), &[0, 1, 2, 3]);
+    assert_eq!(t.cpus(1), &[4, 5], "offline CPUs never get pinned to");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn sysfs_memory_only_and_empty_trees() {
+    // A memory-only node (empty cpulist) is skipped.
+    let root = sys_fixture("memnode", &[(0, "0-1\n"), (1, "\n")], None);
+    let t = Topology::from_sys_root(&root).unwrap();
+    assert_eq!(t.n_sockets(), 1);
+    let _ = std::fs::remove_dir_all(&root);
+    // No node directories at all -> None (caller falls back to flat).
+    let root = sys_fixture("empty", &[], None);
+    assert!(Topology::from_sys_root(&root).is_none());
+    let _ = std::fs::remove_dir_all(&root);
+    // Missing tree entirely -> None.
+    assert!(Topology::from_sys_root(std::path::Path::new("/nonexistent-spmv-at")).is_none());
+}
+
+#[test]
+fn cpu_list_roundtrip_kernel_shapes() {
+    assert_eq!(parse_cpu_list("0-63\n").len(), 64);
+    assert_eq!(parse_cpu_list("0,32,1,33"), vec![0, 1, 32, 33]);
+    assert!(parse_cpu_list("\n").is_empty());
+}
+
+#[test]
+fn shard_thread_counts_never_returns_a_zero_thread_shard() {
+    // Regression (ISSUE 4): SPMV_AT_THREADS < shard count used to spawn
+    // width-1 pools oversubscribing the budget; now the shard count
+    // clamps. Exhaustive small-space sweep: no zero widths, sums match,
+    // length = min(shards, threads) clamped to >= 1.
+    for threads in 0..=9usize {
+        for shards in 0..=9usize {
+            let counts = shard_thread_counts(threads, shards);
+            assert!(!counts.is_empty(), "({threads},{shards})");
+            assert!(
+                counts.iter().all(|&c| c >= 1),
+                "({threads},{shards}): zero-thread shard in {counts:?}"
+            );
+            assert_eq!(counts.iter().sum::<usize>(), threads.max(1), "({threads},{shards})");
+            assert_eq!(counts.len(), shards.max(1).min(threads.max(1)), "({threads},{shards})");
+        }
+    }
+}
+
+#[test]
+fn plan_builds_run_init_on_the_owning_pool() {
+    // Acceptance: every plan build runs its array initialization through
+    // the owning shard's ParPool::run_init, observable via init_count.
+    let sp = ShardedPlanner::new(
+        tuning(Implementation::EllRowInner, Some(3.1)),
+        MemoryPolicy::unlimited(),
+        PlanShards::new(2, 2),
+    );
+    let mut rng = Rng::new(31);
+    let a = Arc::new(banded_circulant(&mut rng, 64, &[-1, 0, 1]));
+    for shard in 0..2 {
+        let before = sp.shards().pool(shard).init_count();
+        let other = sp.shards().pool(1 - shard).init_count();
+        sp.planner(shard).plan_for(&a, Implementation::EllRowInner).unwrap();
+        assert!(
+            sp.shards().pool(shard).init_count() > before,
+            "build must init on shard {shard}"
+        );
+        assert_eq!(
+            sp.shards().pool(1 - shard).init_count(),
+            other,
+            "build must not touch the other shard"
+        );
+        // CRS plans (zero-copy) still warm through run_init.
+        let before = sp.shards().pool(shard).init_count();
+        sp.planner(shard).plan_for(&a, Implementation::CsrRowPar).unwrap();
+        assert!(sp.shards().pool(shard).init_count() > before);
+    }
+}
+
+#[test]
+fn replans_and_adaptive_flips_first_touch_on_the_owning_shard() {
+    // A forced replan (the adaptive loop's re-decision path) rebuilds the
+    // serving plan through the owning shard's run_init fan-out.
+    let mut cfg = CoordinatorConfig::new(tuning(Implementation::EllRowInner, Some(3.1)));
+    cfg.threads = 2;
+    cfg.shards = 1;
+    cfg.adaptive.enabled = true;
+    cfg.adaptive.epsilon = 0.0;
+    let mut c = Coordinator::new(cfg);
+    let mut rng = Rng::new(7);
+    let a = banded_circulant(&mut rng, 96, &[-1, 0, 1]);
+    c.register("band", a).unwrap();
+    let x = vec![1.0; 96];
+    c.spmv("band", &x).unwrap();
+    assert_eq!(c.serving_format("band"), Some(FormatKind::Ell));
+
+    let before = c.planner().shards().pool(0).init_count();
+    c.replan("band").unwrap(); // same decision -> rebuild + swap_executable
+    let after = c.planner().shards().pool(0).init_count();
+    assert!(after > before, "a re-plan is a first-touch rebuild");
+}
+
+#[test]
+fn execute_split_many_is_bitwise_identical_across_splits_and_threads() {
+    // The ISSUE-4 property test: splits {1, 2, shards} x threads
+    // {1, 2, 7}, row-oriented kernels, bitwise equality with the unsplit
+    // tiled SpMM.
+    let shards = 3usize;
+    let mut rng = Rng::new(101);
+    let matrices: Vec<Csr> = vec![
+        random_csr(&mut rng, 150, 150, 0.06),
+        banded_circulant(&mut rng, 128, &[-2, -1, 0, 1, 2]),
+    ];
+    let xs_for = |n: usize| -> Vec<Vec<Value>> {
+        (0..4)
+            .map(|j| (0..n).map(|i| 1.0 + ((i * 5 + j * 3) % 11) as f64 * 0.0625).collect())
+            .collect()
+    };
+    for threads in [1usize, 2, 7] {
+        let sp = ShardedPlanner::new(
+            tuning(Implementation::EllRowInner, Some(3.1)),
+            MemoryPolicy::unlimited(),
+            PlanShards::new(shards, threads),
+        );
+        for a in &matrices {
+            let a = Arc::new(a.clone());
+            let n = a.n_rows();
+            let xs = xs_for(a.n_cols());
+            for imp in [Implementation::CsrRowPar, Implementation::EllRowInner] {
+                let mut want = vec![vec![0.0; n]; xs.len()];
+                let mut full = sp.planner(0).plan_for(&a, imp).unwrap();
+                full.execute_many(&xs, &mut want).unwrap();
+                for splits in [1usize, 2, shards] {
+                    let mut split = sp.plan_split(&a, imp, splits).unwrap();
+                    let mut got = vec![vec![0.0; n]; xs.len()];
+                    sp.execute_split_many(&mut split, &xs, &mut got).unwrap();
+                    assert_eq!(
+                        got, want,
+                        "threads={threads} imp={imp} splits={splits}: split SpMM \
+                         must be bitwise-identical"
+                    );
+                    // Repeat on the same split plan: stable and still equal.
+                    sp.execute_split_many(&mut split, &xs, &mut got).unwrap();
+                    assert_eq!(got, want, "threads={threads} imp={imp} splits={splits} (rerun)");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn split_pass_counters_expose_the_split() {
+    // matrix_passes on a split plan advances once per block per tile, so
+    // a uniform forced tile makes the count exactly parts x ceil(k/tile).
+    let sp = ShardedPlanner::new(
+        tuning(Implementation::EllRowInner, Some(3.1)),
+        MemoryPolicy::unlimited(),
+        PlanShards::new(2, 2),
+    );
+    let mut rng = Rng::new(55);
+    let a = Arc::new(random_csr(&mut rng, 90, 90, 0.1));
+    let mut split = sp.plan_split(&a, Implementation::CsrRowPar, 2).unwrap();
+    split.set_batch_tile(3);
+    let k = 7usize;
+    let xs: Vec<Vec<Value>> = (0..k)
+        .map(|j| (0..90).map(|i| ((i + j) as f64 * 0.21).cos()).collect())
+        .collect();
+    let mut ys = vec![vec![0.0; 90]; k];
+    let before = split.matrix_passes();
+    sp.execute_split_many(&mut split, &xs, &mut ys).unwrap();
+    assert_eq!(
+        split.matrix_passes() - before,
+        2 * 3, // 2 blocks x ceil(7/3)
+        "pass counter must expose parts x ceil(k/tile)"
+    );
+    assert_eq!(split.part_shard(0), 0);
+    assert_eq!(split.part_shard(1), 1);
+    // Blocks tile the row range contiguously.
+    assert_eq!(split.part_rows(0).start, 0);
+    assert_eq!(split.part_rows(0).end, split.part_rows(1).start);
+    assert_eq!(split.part_rows(1).end, 90);
+}
+
+#[test]
+fn sharded_server_still_serves_under_clamped_shards() {
+    // shards > threads now clamps the loop count instead of spawning
+    // thread-starved pools; the client transparently routes over the
+    // effective count.
+    let mut cfg = CoordinatorConfig::new(tuning(Implementation::EllRowInner, Some(3.1)));
+    cfg.threads = 1;
+    cfg.shards = 4; // clamps to 1
+    let (srv, client) = spmv_at::coordinator::Server::spawn_sharded(cfg, 8);
+    assert_eq!(client.shards(), 1, "loops follow the clamped count");
+    client.register("m", Csr::identity(8)).unwrap();
+    let y = client.spmv("m", vec![2.0; 8]).unwrap();
+    assert_eq!(y, vec![2.0; 8]);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].shard, 0);
+    srv.shutdown_all();
+}

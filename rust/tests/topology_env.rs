@@ -1,0 +1,49 @@
+//! The `SPMV_AT_TOPOLOGY` environment-override acceptance test, isolated
+//! in its own test binary.
+//!
+//! This is the ONLY test in the workspace that mutates topology-related
+//! environment variables. It lives alone because `std::env::set_var`
+//! racing `getenv` on another thread is undefined behaviour on glibc,
+//! and other tests (any `Coordinator::new`, `PlanShards::spread`,
+//! `Server::spawn_sharded`) read these variables through
+//! `Topology::detect`. Cargo runs test binaries sequentially and this
+//! binary holds a single `#[test]`, so no reader can race the writes.
+
+use spmv_at::autotune::online::TuningData;
+use spmv_at::coordinator::shards::configured_shards;
+use spmv_at::coordinator::{Coordinator, CoordinatorConfig};
+use spmv_at::machine::topology::{Topology, TopologySource};
+use spmv_at::spmv::Implementation;
+
+/// The acceptance-criteria scenario: `SPMV_AT_TOPOLOGY=2:4` on a
+/// single-node machine makes shards default to 2.
+#[test]
+fn topology_env_override_defaults_shards_to_sockets() {
+    std::env::remove_var("SPMV_AT_SHARDS");
+    std::env::set_var("SPMV_AT_TOPOLOGY", "2:4");
+    let t = Topology::detect();
+    assert_eq!(t.n_sockets(), 2);
+    assert_eq!(t.n_cpus(), 8);
+    assert_eq!(t.source(), TopologySource::Override);
+    assert_eq!(configured_shards(), 2, "shards default to the socket count");
+
+    // A coordinator built under the override really gets 2 shard pools
+    // (given enough threads for both after clamping).
+    let mut cfg = CoordinatorConfig::new(TuningData {
+        backend: "sim:ES2".into(),
+        imp: Implementation::EllRowInner,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    });
+    cfg.threads = 2;
+    cfg.shards = configured_shards();
+    let c = Coordinator::new(cfg);
+    assert_eq!(c.planner().len(), 2);
+
+    // Invalid overrides fall back to detection, not a panic.
+    std::env::set_var("SPMV_AT_TOPOLOGY", "banana");
+    let t = Topology::detect();
+    assert!(t.n_sockets() >= 1);
+    std::env::remove_var("SPMV_AT_TOPOLOGY");
+}
