@@ -343,6 +343,17 @@ fn main() {
             unsplit_sum.to_bits(),
             "split SpMM must agree bitwise with the unsplit plan"
         );
+        // Overlap factor: max row blocks simultaneously in flight over
+        // the timed runs, relative to the block count — 1.0 means every
+        // block of a call was in flight at once (the concurrent
+        // cross-socket execution ISSUE 5 added); a sequential split
+        // would report 1/parts.
+        let overlap_blocks = split.max_concurrent_blocks();
+        let overlap_factor = overlap_blocks as f64 / split.parts().max(1) as f64;
+        assert!(
+            overlap_blocks >= split.parts().min(2) as u64,
+            "split blocks must be in flight concurrently"
+        );
 
         let mut t = Table::new(vec!["metric", "value"]);
         t.row(vec!["sockets (detected)".into(), topo.n_sockets().to_string()]);
@@ -352,6 +363,10 @@ fn main() {
         t.row(vec![
             "split speedup".into(),
             format!("{:.2}x", t_unsplit / t_split.max(1e-12)),
+        ]);
+        t.row(vec![
+            "overlap (max blocks in flight / blocks)".into(),
+            format!("{overlap_blocks} / {} = {overlap_factor:.2}", split.parts()),
         ]);
         print!("{}", t.render());
         json.push(Json::Obj(vec![
@@ -364,6 +379,8 @@ fn main() {
             ("batch".into(), Json::Num(k as f64)),
             ("unsplit_seconds_per_spmv".into(), Json::Num(t_unsplit)),
             ("split_seconds_per_spmv".into(), Json::Num(t_split)),
+            ("overlap_max_blocks".into(), Json::Num(overlap_blocks as f64)),
+            ("overlap_factor".into(), Json::Num(overlap_factor)),
         ]));
     }
 

@@ -15,8 +15,12 @@
 //!   first-touches its arrays on the owning socket through
 //!   [`crate::spmv::pool::ParPool::run_init`]. Batches against different
 //!   matrices run on disjoint workers; a single huge matrix can
-//!   row-split *across* shards ([`shards::SplitPlan`]). Every served
-//!   SpMV/SpMM executes through a cached, reusable
+//!   row-split *across* shards ([`shards::SplitPlan`]) with the blocks
+//!   **concurrently in flight** (cross-pool join —
+//!   [`crate::spmv::pool::PoolGroup`]), and `spmv`/`spmv_batch` route
+//!   matrices past the split threshold ([`shards::SplitThreshold`],
+//!   `SPMV_AT_SPLIT_ROWS`) through a *cached* split automatically.
+//!   Every served SpMV/SpMM executes through a cached, reusable
 //!   [`crate::spmv::SpmvPlan`] — never through per-call thread spawns or
 //!   per-call partitioning,
 //! * a **matrix registry** with per-matrix AT lifecycle state
@@ -44,7 +48,7 @@ pub mod shards;
 
 pub use registry::{AtState, EntryStats, MatrixEntry};
 pub use server::{Client, Request, Server, SolverKind};
-pub use shards::{PlanShards, ShardedPlanner, SplitPlan};
+pub use shards::{PlanShards, ShardedPlanner, SplitPlan, SplitThreshold};
 
 use crate::autotune::adaptive::{AdaptiveConfig, AdaptiveState, LearnedTuning};
 use crate::autotune::online::{decide, OnlineDecision, TuningData};
@@ -82,6 +86,11 @@ pub struct CoordinatorConfig {
     pub shards: usize,
     /// ELL execution preference.
     pub ell_exec: EllExec,
+    /// When to route a matrix through a cached cross-shard
+    /// [`shards::SplitPlan`] instead of a single-shard plan
+    /// (`SPMV_AT_SPLIT_ROWS` / `--split-rows`; never engages on
+    /// single-shard planners, so single-socket serving is untouched).
+    pub split: shards::SplitThreshold,
     /// The adaptive loop's tunables; `adaptive.enabled = false` is the
     /// decide-once pipeline, byte for byte.
     pub adaptive: AdaptiveConfig,
@@ -96,9 +105,11 @@ impl CoordinatorConfig {
     /// `SPMV_AT_THREADS` environment variable when set, hardware
     /// parallelism otherwise — the shard count from
     /// [`shards::configured_shards`] (`SPMV_AT_SHARDS` when set, else the
-    /// detected socket count — override with `SPMV_AT_TOPOLOGY`), and
-    /// the adaptive switch from
-    /// [`crate::autotune::adaptive::configured_adaptive`]
+    /// detected socket count — override with `SPMV_AT_TOPOLOGY`), the
+    /// split-routing threshold from
+    /// [`shards::SplitThreshold::from_env`] (`SPMV_AT_SPLIT_ROWS`,
+    /// default: the nnz × shard-count heuristic), and the adaptive
+    /// switch from [`crate::autotune::adaptive::configured_adaptive`]
     /// (`SPMV_AT_ADAPTIVE`, default off).
     pub fn new(tuning: TuningData) -> Self {
         Self {
@@ -107,6 +118,7 @@ impl CoordinatorConfig {
             threads: pool::configured_threads(),
             shards: shards::configured_shards(),
             ell_exec: EllExec::Native,
+            split: shards::SplitThreshold::from_env(),
             adaptive: AdaptiveConfig::from_env(),
             learned: None,
         }
@@ -243,6 +255,27 @@ impl Coordinator {
             entry.csr.n_cols()
         );
         let mut y = vec![0.0; entry.csr.n_rows()];
+        // Oversized matrices route through a cached cross-shard split;
+        // the split replaces the transformed full-matrix plan (never both
+        // — that would double the memory and the build cost). The
+        // XLA-preferred serving shape keeps its artifact path: split
+        // routing stays out of the way there.
+        let xla_preferred = self.cfg.ell_exec == EllExec::XlaPreferred && self.xla.is_some();
+        if !xla_preferred {
+            Self::trigger_split(self.cfg.split, &self.planner, entry);
+            if let Some(split) = entry.split.as_mut() {
+                let t0 = std::time::Instant::now();
+                split.execute(x, &mut y)?;
+                let dt = t0.elapsed().as_secs_f64();
+                let transformed = split.implementation().needs_transform();
+                entry.split_calls += 1;
+                entry.record_call(transformed, dt);
+                // The adaptive controller's arms are full-matrix plans; a
+                // split-served entry skips exploration/flipping (a forced
+                // `replan` still re-decides and rebuilds the split).
+                return Ok(y);
+            }
+        }
         Self::trigger_transform(&self.planner, entry);
 
         let t0 = std::time::Instant::now();
@@ -278,6 +311,47 @@ impl Coordinator {
             Self::adaptive_step(&self.planner, &mut self.learned, entry, x, None, 1, dt);
         }
         Ok(y)
+    }
+
+    /// Build (once, lazily — like the deferred transformation) the cached
+    /// cross-shard [`SplitPlan`] for a matrix past the split threshold.
+    /// The split serves the online decision's chosen kernel when that
+    /// kernel is split-stable (row-oriented — see
+    /// [`Implementation::split_stable`]), the row-parallel CRS baseline
+    /// otherwise; `splits` = the planner's shard count, so each socket
+    /// streams one nnz-balanced block. A build failure (e.g. an ELL
+    /// budget overflow on one block) **pins the entry to the unsplit
+    /// path** (`split_vetoed`) so the failed build is never re-paid per
+    /// call; a successful build drops any full-size transformed plan —
+    /// an entry never holds both.
+    fn trigger_split(
+        threshold: shards::SplitThreshold,
+        planner: &ShardedPlanner,
+        entry: &mut MatrixEntry,
+    ) {
+        if entry.split.is_some()
+            || entry.split_vetoed
+            || !threshold.should_split(entry.csr.n_rows(), entry.csr.nnz(), planner.len())
+        {
+            return;
+        }
+        let imp = if entry.decision.transform && entry.decision.chosen.split_stable() {
+            entry.decision.chosen
+        } else {
+            Implementation::CsrRowPar
+        };
+        match planner.plan_split(&entry.csr, imp, planner.len()) {
+            Ok(split) => {
+                // The split replaces a full-size transformed plan (a
+                // veto-then-replan sequence can reach here with one
+                // serving); holding both would double the memory.
+                if matches!(entry.state, AtState::Transformed { .. }) {
+                    entry.state = AtState::Baseline;
+                }
+                entry.split = Some(split);
+            }
+            Err(_) => entry.split_vetoed = true,
+        }
     }
 
     /// Trigger the deferred transformation for `entry` if decided and not
@@ -441,6 +515,11 @@ impl Coordinator {
             entry.decision.transform = false;
             entry.decision.chosen = Implementation::CsrSeq;
         }
+        // The cached split (if any) was built for the old decision; drop
+        // it — and clear any split veto — so the next serve rebuilds for
+        // the new one.
+        entry.split = None;
+        entry.split_vetoed = false;
         entry.replans += 1;
         if let Some(r) = measured_r {
             learned.record(entry.decision.d_mat, r);
@@ -467,6 +546,28 @@ impl Coordinator {
             decide(&entry.csr, &self.cfg.tuning)
         };
         let shape = MatrixShape::of(&entry.csr);
+        if entry.split.is_some() {
+            // Split-served: record the fresh decision and rebuild the
+            // split on its shards — never materialise a full-size plan
+            // for a matrix that will keep serving split.
+            entry.decision = decision;
+            if entry.decision.transform
+                && !self.cfg.policy.admits(&shape, entry.candidate.required_format())
+            {
+                entry.decision.transform = false;
+                entry.decision.chosen = Implementation::CsrSeq;
+            }
+            entry.split = None;
+            Self::trigger_split(self.cfg.split, &self.planner, entry);
+            entry.replans += 1;
+            if let Some(ad) = entry.adaptive.as_mut() {
+                ad.controller.reset();
+            }
+            return Ok(entry.stats());
+        }
+        // A forced replan re-decides, so a previously failed split build
+        // gets one fresh chance on the next serve.
+        entry.split_vetoed = false;
         let want_transform = decision.transform
             && self.cfg.policy.admits(&shape, entry.candidate.required_format());
         let is_transformed = matches!(entry.state, AtState::Transformed { .. });
@@ -558,8 +659,20 @@ impl Coordinator {
                 entry.csr.n_cols()
             );
         }
-        Self::trigger_transform(&self.planner, entry);
+        Self::trigger_split(self.cfg.split, &self.planner, entry);
         let mut ys = vec![vec![0.0; entry.csr.n_rows()]; xs.len()];
+        if let Some(split) = entry.split.as_mut() {
+            let t0 = std::time::Instant::now();
+            split.execute_many(xs, &mut ys)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let transformed = split.implementation().needs_transform();
+            let k = xs.len() as u64;
+            entry.split_calls += k;
+            entry.record_batch(transformed, k, dt);
+            // Split-served entries skip the adaptive step (see `spmv`).
+            return Ok(ys);
+        }
+        Self::trigger_transform(&self.planner, entry);
         let t0 = std::time::Instant::now();
         let transformed = match &mut entry.state {
             AtState::Baseline => {
@@ -596,11 +709,13 @@ impl Coordinator {
         self.entries.values().map(|e| e.extra_bytes()).sum()
     }
 
-    /// The format a registered matrix is currently served from.
+    /// The format a registered matrix is currently served from (the
+    /// split plan's block format when a cross-shard split serves it).
     pub fn serving_format(&self, name: &str) -> Option<FormatKind> {
-        self.entries.get(name).map(|e| match &e.state {
-            AtState::Baseline => FormatKind::Csr,
-            AtState::Transformed { plan, .. } => plan.kind(),
+        self.entries.get(name).map(|e| match (&e.split, &e.state) {
+            (Some(split), _) => split.implementation().required_format(),
+            (None, AtState::Baseline) => FormatKind::Csr,
+            (None, AtState::Transformed { plan, .. }) => plan.kind(),
         })
     }
 }

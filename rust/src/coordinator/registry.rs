@@ -17,6 +17,7 @@
 //! calls the transformed copy has served and whether the transformation
 //! cost has been repaid — makes the §2.2 break-even analysis observable.
 
+use super::shards::SplitPlan;
 use crate::autotune::adaptive::AdaptiveState;
 use crate::autotune::online::OnlineDecision;
 use crate::formats::Csr;
@@ -69,6 +70,18 @@ pub struct MatrixEntry {
     pub adaptive: Option<AdaptiveState>,
     /// Serving-plan flips applied (controller-initiated or forced).
     pub replans: u64,
+    /// Cached cross-shard split plan serving an oversized matrix
+    /// (`None` = unsplit serving). Built lazily on the first call past
+    /// the split threshold; invalidated by flips/replans so it always
+    /// follows the current decision.
+    pub split: Option<SplitPlan>,
+    /// Calls served through the split plan.
+    pub split_calls: u64,
+    /// Set when an automatic split build failed: the entry is pinned to
+    /// unsplit serving so the hot path never re-pays the failed build on
+    /// every call. Reset by flips and forced replans (the decision the
+    /// split would serve has changed, so it gets one fresh chance).
+    pub split_vetoed: bool,
 }
 
 impl MatrixEntry {
@@ -96,11 +109,30 @@ impl MatrixEntry {
             t_imp_mean: 0.0,
             adaptive: None,
             replans: 0,
+            split: None,
+            split_calls: 0,
+            split_vetoed: false,
         }
     }
 
-    /// Transformation seconds paid so far (0 while baseline).
+    /// The implementation currently serving this entry — the split
+    /// plan's when one is cached, the serving state's otherwise.
+    pub fn serving_imp(&self) -> Implementation {
+        if let Some(split) = &self.split {
+            return split.implementation();
+        }
+        match &self.state {
+            AtState::Baseline => self.baseline.implementation(),
+            AtState::Transformed { plan, .. } => plan.implementation(),
+        }
+    }
+
+    /// Transformation seconds paid so far (0 while baseline; a
+    /// transformed split reports its blocks' summed build cost).
     pub fn t_trans(&self) -> f64 {
+        if let Some(split) = &self.split {
+            return split.transform_seconds();
+        }
         match &self.state {
             AtState::Baseline => 0.0,
             AtState::Transformed { t_trans, .. } => *t_trans,
@@ -116,31 +148,31 @@ impl MatrixEntry {
     }
 
     /// Whether the transformation cost has been repaid by the measured
-    /// per-call saving: `transformed_calls · saving ≥ t_trans`.
+    /// per-call saving: `transformed_calls · saving ≥ t_trans` (trivially
+    /// true when nothing was transformed — baseline and CRS-split
+    /// serving both owe zero).
     pub fn amortized(&self) -> bool {
-        match &self.state {
-            AtState::Baseline => true,
-            AtState::Transformed { t_trans, .. } => {
-                self.transformed_calls as f64 * self.per_call_saving() >= *t_trans
-            }
+        let t_trans = self.t_trans();
+        if t_trans <= 0.0 {
+            return true;
         }
+        self.transformed_calls as f64 * self.per_call_saving() >= t_trans
     }
 
     /// Estimated calls until break-even (0 when already amortised; ∞ when
     /// the transformed kernel is not actually faster).
     pub fn calls_to_break_even(&self) -> f64 {
-        match &self.state {
-            AtState::Baseline => 0.0,
-            AtState::Transformed { t_trans, .. } => {
-                let saving = self.per_call_saving();
-                if saving <= 0.0 {
-                    // Zero (clamped) saving: break-even only if nothing is
-                    // owed — consistent with `amortized`.
-                    return if *t_trans <= 0.0 { 0.0 } else { f64::INFINITY };
-                }
-                (t_trans / saving - self.transformed_calls as f64).max(0.0)
-            }
+        let t_trans = self.t_trans();
+        if t_trans <= 0.0 {
+            return 0.0;
         }
+        let saving = self.per_call_saving();
+        if saving <= 0.0 {
+            // Zero (clamped) saving with a real debt: never breaks even —
+            // consistent with `amortized`.
+            return f64::INFINITY;
+        }
+        (t_trans / saving - self.transformed_calls as f64).max(0.0)
     }
 
     /// Record a served call.
@@ -167,29 +199,27 @@ impl MatrixEntry {
             let n = (self.calls - self.transformed_calls) as f64;
             self.t_crs_mean += (per_call - self.t_crs_mean) * (k as f64 / n);
         }
-        let imp = match &self.state {
-            AtState::Baseline => self.baseline.implementation(),
-            AtState::Transformed { plan, .. } => plan.implementation(),
-        };
+        let imp = self.serving_imp();
         if let Some(ad) = &mut self.adaptive {
             ad.telemetry.record(imp, per_call, k);
         }
     }
 
     /// Extra memory held beyond the CRS original: the transformed copy
-    /// when serving it, plus the parked shadow plan the adaptive loop
-    /// keeps warm for O(1) flips.
+    /// when serving it, the cached cross-shard split's blocks, plus the
+    /// parked shadow plan the adaptive loop keeps warm for O(1) flips.
     pub fn extra_bytes(&self) -> usize {
         let serving = match &self.state {
             AtState::Baseline => 0,
             AtState::Transformed { plan, .. } => plan.extra_bytes(),
         };
+        let split = self.split.as_ref().map_or(0, SplitPlan::extra_bytes);
         let shadow = self
             .adaptive
             .as_ref()
             .and_then(|ad| ad.shadow.as_ref())
             .map_or(0, |p| p.extra_bytes());
-        serving + shadow
+        serving + split + shadow
     }
 }
 
@@ -227,6 +257,11 @@ pub struct EntryStats {
     pub samples_crs: u64,
     /// Telemetry samples on the candidate (transform-target) arm.
     pub samples_imp: u64,
+    /// Row blocks of the cached cross-shard split plan serving this
+    /// entry (0 = unsplit serving).
+    pub split_parts: usize,
+    /// Calls served through the split plan.
+    pub split_calls: u64,
 }
 
 impl MatrixEntry {
@@ -248,9 +283,14 @@ impl MatrixEntry {
             nnz: self.csr.nnz(),
             d_mat: self.decision.d_mat,
             shard: self.shard,
-            serving: match &self.state {
-                AtState::Baseline => Implementation::CsrSeq,
-                AtState::Transformed { plan, .. } => plan.implementation(),
+            // Deliberately NOT `serving_imp()`: the unsplit baseline
+            // state reports as the paper's CRS switch (`CsrSeq`)
+            // whichever CRS kernel the baseline plan runs, while the
+            // telemetry keys by the kernel that actually executed.
+            serving: match (&self.split, &self.state) {
+                (Some(split), _) => split.implementation(),
+                (None, AtState::Baseline) => Implementation::CsrSeq,
+                (None, AtState::Transformed { plan, .. }) => plan.implementation(),
             },
             calls: self.calls,
             transformed_calls: self.transformed_calls,
@@ -261,6 +301,8 @@ impl MatrixEntry {
             explored,
             samples_crs,
             samples_imp,
+            split_parts: self.split.as_ref().map_or(0, SplitPlan::parts),
+            split_calls: self.split_calls,
         }
     }
 }
@@ -432,6 +474,46 @@ mod tests {
         assert_eq!(s.samples_imp, 2);
         assert_eq!(s.replans, 0);
         assert_eq!(s.explored, 0);
+    }
+
+    #[test]
+    fn split_served_entry_reports_split_fields() {
+        use crate::autotune::online::TuningData;
+        use crate::autotune::MemoryPolicy;
+        use crate::coordinator::{PlanShards, ShardedPlanner};
+        let sp = ShardedPlanner::new(
+            TuningData {
+                backend: "sim:ES2".into(),
+                imp: Implementation::EllRowOuter,
+                threads: 1,
+                c: 1.0,
+                d_star: Some(3.1),
+            },
+            MemoryPolicy::unlimited(),
+            PlanShards::new(2, 1),
+        );
+        let csr = Arc::new(Csr::identity(64));
+        let split = sp.plan_split(&csr, Implementation::CsrRowPar, 2).unwrap();
+        let mut e = MatrixEntry::new(
+            "m".into(),
+            csr.clone(),
+            decision(false),
+            crs_plan(64),
+            Implementation::EllRowOuter,
+            0,
+        );
+        assert_eq!(e.stats().split_parts, 0, "unsplit entries report zero parts");
+        e.split = Some(split);
+        e.split_calls = 5;
+        let s = e.stats();
+        assert_eq!(s.split_parts, 2);
+        assert_eq!(s.split_calls, 5);
+        assert_eq!(s.serving, Implementation::CsrRowPar, "the split's kernel serves");
+        assert_eq!(e.serving_imp(), Implementation::CsrRowPar);
+        assert!(e.extra_bytes() > 0, "sliced CRS blocks are real copies");
+        assert_eq!(e.t_trans(), 0.0, "a CRS split owes no transformation");
+        assert!(e.amortized());
+        assert_eq!(e.calls_to_break_even(), 0.0);
     }
 
     #[test]

@@ -15,7 +15,19 @@
 //! routes every keyed request with the same [`shards::route_key`] hash
 //! the pools use, so batched SpMM against matrices on different shards
 //! executes concurrently instead of serialising on one pool's job slot.
-//! `Stats` broadcasts and merges.
+//! `Stats` broadcasts and merges — split-served entries report their
+//! `split_parts`/`split_calls` like any other row, and `shutdown` /
+//! `shutdown_all` hand back the coordinators with their cached
+//! [`super::SplitPlan`]s intact.
+//!
+//! Note the split-routing topology trade-off: each `spawn_sharded` loop
+//! owns a *single-shard* coordinator, so automatic cross-shard splitting
+//! ([`super::SplitThreshold`]) never engages there — every matrix stays
+//! whole on its socket. A single-loop [`Server::spawn`] over a
+//! multi-shard [`Coordinator`] (the XLA-path shape, and what the CLI
+//! uses when `--split-rows`/`SPMV_AT_SPLIT_ROWS` names an explicit
+//! threshold) is the serving shape where oversized matrices split and
+//! run their blocks concurrently across sockets.
 
 use super::shards::{self, PlanShards, ShardedPlanner};
 use super::{Coordinator, CoordinatorConfig, EntryStats};
@@ -573,6 +585,50 @@ mod tests {
         let total: usize = coords.iter().map(|c| c.names().len()).sum();
         assert_eq!(total, 2);
         assert!(coords[0].names() != coords[1].names());
+    }
+
+    #[test]
+    fn single_loop_server_serves_split_entries_and_reports_them() {
+        use crate::formats::SparseMatrix as _;
+        let tuning = TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowInner,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        };
+        let mut cfg = CoordinatorConfig::new(tuning);
+        cfg.threads = 2;
+        cfg.shards = 2;
+        cfg.split = crate::coordinator::SplitThreshold::Rows(32);
+        // One loop over a multi-shard coordinator: the serving shape
+        // where automatic cross-shard splitting engages.
+        let (srv, client) = Server::spawn(Coordinator::new(cfg), 16);
+        let mut rng = Rng::new(9);
+        let a = crate::matrixgen::random_csr(&mut rng, 64, 64, 0.1);
+        client.register("big", a.clone()).unwrap();
+        let xs: Vec<Vec<Value>> = (0..4)
+            .map(|j| (0..64).map(|i| ((i + j) as f64 * 0.2).sin()).collect())
+            .collect();
+        let ys = client.spmv_batch("big", xs.clone()).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 64];
+            a.spmv(x, &mut want);
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9);
+            }
+        }
+        let y1 = client.spmv("big", xs[0].clone()).unwrap();
+        assert_eq!(y1, ys[0], "single-RHS split serving agrees with the batch");
+        let rows = client.stats().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].split_parts, 2, "stats must expose the split");
+        assert_eq!(rows[0].split_calls, 5);
+        assert_eq!(rows[0].calls, 5);
+        // Shutdown hands back the coordinator with the split intact.
+        let coord = srv.shutdown();
+        let row = &coord.stats()[0];
+        assert_eq!((row.split_parts, row.split_calls), (2, 5));
     }
 
     #[test]

@@ -30,10 +30,16 @@
 //!
 //! For a single matrix too large for one socket, [`SplitPlan`] splits the
 //! row range across shards ([`ShardedPlanner::plan_split`] /
-//! [`ShardedPlanner::execute_split_many`]): each shard holds and streams
-//! only its row block, and the per-row results are merged — bitwise
-//! identical to the unsplit [`crate::spmv::SpmvPlan::execute_many`] for
-//! the row-oriented kernels.
+//! [`ShardedPlanner::execute_split_many`] /
+//! [`ShardedPlanner::execute_split`]): each shard holds and streams only
+//! its row block, all blocks run **concurrently** through the plan's
+//! cross-pool join ([`crate::spmv::pool::PoolGroup`], overlap observable
+//! via [`SplitPlan::max_concurrent_blocks`]), and the per-row results are
+//! merged — bitwise identical to the unsplit
+//! [`crate::spmv::SpmvPlan::execute_many`] for the row-oriented kernels.
+//! The coordinator routes oversized matrices through a *cached* split
+//! automatically ([`SplitThreshold`], `SPMV_AT_SPLIT_ROWS` /
+//! `--split-rows`; off on single-shard planners).
 //!
 //! # Example
 //!
@@ -74,11 +80,96 @@ use crate::autotune::MemoryPolicy;
 use crate::formats::{Csr, SparseMatrix};
 use crate::machine::Topology;
 use crate::spmv::partition::split_by_nnz;
-use crate::spmv::pool::ParPool;
+use crate::spmv::pool::{ParPool, PoolGroup};
 use crate::spmv::{Implementation, Planner, SpmvPlan};
 use crate::{Result, Value};
 use std::ops::Range;
 use std::sync::Arc;
+
+/// Non-zeros per shard below which an automatic split is not worth its
+/// merge overhead: with the default heuristic
+/// ([`SplitThreshold::Auto`]) a matrix splits only when every socket
+/// would stream at least this many entries (~48 MiB of CRS data — well
+/// past any LLC, so the stream is memory-bound and locality pays).
+pub const SPLIT_AUTO_NNZ_PER_SHARD: usize = 1 << 22;
+
+/// When the coordinator routes a matrix through a cached cross-shard
+/// [`SplitPlan`] instead of a single-shard plan. Never splits on
+/// single-shard planners (single-socket machines), whatever the
+/// threshold says.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitThreshold {
+    /// Never auto-split (`SPMV_AT_SPLIT_ROWS=0` / `--split-rows 0`): the
+    /// pre-split serving path, byte for byte.
+    Off,
+    /// Split matrices with at least this many rows.
+    Rows(usize),
+    /// The default heuristic: split when
+    /// `nnz >= SPLIT_AUTO_NNZ_PER_SHARD × shards`, i.e. when the matrix
+    /// is big enough that each socket still streams a memory-bound block.
+    Auto,
+}
+
+impl SplitThreshold {
+    /// The configured threshold: `SPMV_AT_SPLIT_ROWS` when set (`0`
+    /// disables, a positive integer is an explicit row threshold),
+    /// [`SplitThreshold::Auto`] otherwise. An unparseable value falls
+    /// back to `Auto` with a stderr warning — silently dropping an
+    /// explicitly requested threshold would also silently change the
+    /// CLI's serving shape (see `--split-rows` in `main.rs`).
+    pub fn from_env() -> Self {
+        match std::env::var("SPMV_AT_SPLIT_ROWS") {
+            Ok(s) if !s.trim().is_empty() => Self::parse(&s).unwrap_or_else(|| {
+                eprintln!(
+                    "spmv-at: ignoring invalid SPMV_AT_SPLIT_ROWS='{}' \
+                     (expected 0, a positive integer, or 'auto'); using auto",
+                    s.trim()
+                );
+                Self::Auto
+            }),
+            _ => Self::Auto,
+        }
+    }
+
+    /// Parse a CLI/env value: `0` → [`SplitThreshold::Off`], a positive
+    /// integer → [`SplitThreshold::Rows`], `auto` →
+    /// [`SplitThreshold::Auto`]; `None` for anything else.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("auto") {
+            return Some(Self::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(0) => Some(Self::Off),
+            Ok(n) => Some(Self::Rows(n)),
+            Err(_) => None,
+        }
+    }
+
+    /// The truth function: should a matrix of `n_rows` rows and `nnz`
+    /// non-zeros serve through a cross-shard split on a planner of
+    /// `shards` pools?
+    pub fn should_split(self, n_rows: usize, nnz: usize, shards: usize) -> bool {
+        if shards <= 1 || n_rows < 2 {
+            return false;
+        }
+        match self {
+            Self::Off => false,
+            Self::Rows(r) => n_rows >= r,
+            Self::Auto => nnz >= SPLIT_AUTO_NNZ_PER_SHARD.saturating_mul(shards),
+        }
+    }
+}
+
+impl std::fmt::Display for SplitThreshold {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Off => f.write_str("off"),
+            Self::Rows(r) => write!(f, ">={r} rows"),
+            Self::Auto => write!(f, "auto (nnz >= {SPLIT_AUTO_NNZ_PER_SHARD} per shard)"),
+        }
+    }
+}
 
 /// The configured shard count: `SPMV_AT_SHARDS` when set to a positive
 /// integer, else the detected **socket count**
@@ -308,6 +399,7 @@ impl ShardedPlanner {
     ) -> Result<SplitPlan> {
         let n = csr.n_rows();
         let mut parts = Vec::new();
+        let mut pools = Vec::new();
         for (i, rows) in split_by_nnz(&csr.row_ptr, splits.max(1)).into_iter().enumerate() {
             let shard = i % self.len();
             let block = if rows.start == 0 && rows.end == n {
@@ -316,14 +408,39 @@ impl ShardedPlanner {
                 Arc::new(csr.slice_rows(rows.clone()))
             };
             let plan = self.planner(shard).plan_for(&block, imp)?;
-            parts.push(SplitPart { rows, shard, plan, scratch: Vec::new() });
+            pools.push(plan.pool().clone());
+            parts.push(SplitPart {
+                rows,
+                shard,
+                plan,
+                scratch: Vec::new(),
+                scratch1: Vec::new(),
+                error: None,
+            });
         }
-        Ok(SplitPlan { parts, n_rows: n, n_cols: csr.n_cols() })
+        // One uniform batch tile across the blocks (the most conservative
+        // of their defaults), so the split's ⌈k/tile⌉ pass accounting
+        // matches an unsplit plan forced to the same tile.
+        let tile = parts.iter().map(|p| p.plan.batch_tile()).min().unwrap_or(1).max(1);
+        for p in &mut parts {
+            p.plan.set_batch_tile(tile);
+        }
+        Ok(SplitPlan {
+            parts,
+            pools,
+            group: PoolGroup::new(),
+            imp,
+            batch_tile: tile,
+            passes: 0,
+            n_rows: n,
+            n_cols: csr.n_cols(),
+        })
     }
 
-    /// Batched `Y = A·X` through a [`SplitPlan`]: each row block runs its
-    /// own blocked SpMM tile on its shard's pool and the per-block rows
-    /// are merged into `ys`. Bitwise-identical to
+    /// Batched `Y = A·X` through a [`SplitPlan`]: the row blocks run
+    /// their blocked SpMM tiles **concurrently**, each on its own shard
+    /// pool, joined through the plan's [`PoolGroup`], and the per-block
+    /// rows are merged into `ys` after the join. Bitwise-identical to
     /// [`crate::spmv::SpmvPlan::execute_many`] on the unsplit plan for
     /// the row-oriented kernels (see [`ShardedPlanner::plan_split`]).
     ///
@@ -337,17 +454,48 @@ impl ShardedPlanner {
     ) -> Result<()> {
         split.execute_many(xs, ys)
     }
+
+    /// Single-vector `y = A·x` through a [`SplitPlan`] — the same
+    /// concurrent fan-out as [`ShardedPlanner::execute_split_many`] for
+    /// one right-hand side.
+    ///
+    /// # Errors
+    /// Fails on dimension mismatches.
+    pub fn execute_split(
+        &self,
+        split: &mut SplitPlan,
+        x: &[Value],
+        y: &mut [Value],
+    ) -> Result<()> {
+        split.execute(x, y)
+    }
 }
 
 /// A single matrix row-split across shards: one [`SpmvPlan`] per
 /// nnz-balanced row block, each on its own shard pool (= its own socket
 /// when pinned). Built by [`ShardedPlanner::plan_split`]; executed by
-/// [`ShardedPlanner::execute_split_many`]. The per-block pass counters
-/// stay observable through [`SplitPlan::matrix_passes`] and each shard
-/// pool's `dispatch_count`, so tests can prove the split actually ran on
-/// every shard.
+/// [`ShardedPlanner::execute_split_many`] /
+/// [`ShardedPlanner::execute_split`], which run the blocks
+/// **concurrently** through the plan's [`PoolGroup`] — the cross-socket
+/// wall-clock win, not just cross-socket placement. Observability:
+/// [`SplitPlan::matrix_passes`] follows the unsplit ⌈k/tile⌉ semantics,
+/// [`SplitPlan::max_concurrent_blocks`] proves ≥2 blocks were in flight
+/// simultaneously, and each shard pool's `dispatch_count` still shows
+/// which pool served which block.
 pub struct SplitPlan {
     parts: Vec<SplitPart>,
+    /// Part `i`'s pool handle (cached so the fan-out does not re-clone
+    /// per call).
+    pools: Vec<Arc<ParPool>>,
+    /// The cross-pool join primitive + its overlap counters.
+    group: PoolGroup,
+    imp: Implementation,
+    /// Uniform batch-tile width across the blocks.
+    batch_tile: usize,
+    /// Passes over the matrix data, unsplit semantics: 1 per `execute`,
+    /// ⌈k/tile⌉ per `execute_many` — **not** summed per block (a split
+    /// call streams each row exactly once per tile, same as unsplit).
+    passes: u64,
     n_rows: usize,
     n_cols: usize,
 }
@@ -356,9 +504,14 @@ struct SplitPart {
     rows: Range<usize>,
     shard: usize,
     plan: SpmvPlan,
-    /// Per-part output staging, reused across calls so the hot path does
-    /// not allocate `k × block_rows` per execution.
+    /// Per-part batched-output staging, reused across calls so the hot
+    /// path does not allocate `k × block_rows` per execution.
     scratch: Vec<Vec<Value>>,
+    /// Per-part single-RHS staging for [`SplitPlan::execute`].
+    scratch1: Vec<Value>,
+    /// Error a concurrent block execution reported (drained by the
+    /// caller after the join).
+    error: Option<anyhow::Error>,
 }
 
 impl SplitPlan {
@@ -394,26 +547,85 @@ impl SplitPlan {
         self.n_cols
     }
 
-    /// Total matrix passes across all blocks — the split analogue of
-    /// [`SpmvPlan::matrix_passes`]: one `execute_many` adds
-    /// ⌈k/tile⌉ per block, so the delta over a call is
-    /// `parts × ⌈k/tile⌉` when all blocks share one tile width.
+    /// Matrix passes so far, with the **unsplit** ⌈k/tile⌉ semantics of
+    /// [`SpmvPlan::matrix_passes`]: one `execute_many` of `k` right-hand
+    /// sides adds ⌈k/tile⌉ once for the whole split call — every output
+    /// row is streamed once per tile, exactly like the unsplit plan —
+    /// not once per block. (Summing the per-block counters, as this
+    /// method once did, over-counted by a factor of `parts`.) Per-block
+    /// activity stays observable through each shard pool's
+    /// `dispatch_count`.
     pub fn matrix_passes(&self) -> u64 {
-        self.parts.iter().map(|p| p.plan.matrix_passes()).sum()
+        self.passes
+    }
+
+    /// The implementation every block executes.
+    pub fn implementation(&self) -> Implementation {
+        self.imp
+    }
+
+    /// The uniform batch-tile width the blocks execute with.
+    pub fn batch_tile(&self) -> usize {
+        self.batch_tile
     }
 
     /// Force one batch-tile width on every block (tests and sweeps).
     pub fn set_batch_tile(&mut self, tile: usize) {
+        self.batch_tile = tile.max(1);
         for p in &mut self.parts {
             p.plan.set_batch_tile(tile);
         }
     }
 
-    /// The implementation behind [`ShardedPlanner::execute_split_many`]
-    /// (the one public entry point for split execution).
+    /// Seconds the blocks' transformations took at build time, summed
+    /// (0 for CRS splits — same contract as
+    /// [`SpmvPlan::transform_seconds`]).
+    pub fn transform_seconds(&self) -> f64 {
+        self.parts.iter().map(|p| p.plan.transform_seconds()).sum()
+    }
+
+    /// Extra bytes the blocks hold beyond the shared CRS original,
+    /// summed. Transformed blocks report their converted copies; CRS
+    /// blocks report their row *slices* (real copies, unlike the
+    /// zero-copy unsplit CRS plan) — except the degenerate 1-block split,
+    /// which shares the original by `Arc`.
+    pub fn extra_bytes(&self) -> usize {
+        if self.parts.len() <= 1 {
+            return self.parts.iter().map(|p| p.plan.extra_bytes()).sum();
+        }
+        self.parts
+            .iter()
+            .map(|p| {
+                if p.plan.kind() == crate::formats::FormatKind::Csr {
+                    p.plan.memory_bytes()
+                } else {
+                    p.plan.extra_bytes()
+                }
+            })
+            .sum()
+    }
+
+    /// High-water mark of row blocks simultaneously in flight across
+    /// this plan's executions — ≥ 2 proves the blocks really ran
+    /// concurrently rather than one after another. See
+    /// [`PoolGroup::max_in_flight`].
+    pub fn max_concurrent_blocks(&self) -> u64 {
+        self.group.max_in_flight()
+    }
+
+    /// Concurrent fan-out executions so far ([`PoolGroup::join_count`]).
+    pub fn join_count(&self) -> u64 {
+        self.group.join_count()
+    }
+
+    /// The implementation behind [`ShardedPlanner::execute_split_many`]:
+    /// dimension checks up front, then every block's tiled SpMM in
+    /// flight at once through the [`PoolGroup`], then a deterministic
+    /// caller-side merge of the disjoint row ranges.
     ///
     /// # Errors
-    /// Fails on dimension mismatches.
+    /// Fails on dimension mismatches, or if any block's execution failed
+    /// (first block error wins; the join always completes).
     pub(crate) fn execute_many(&mut self, xs: &[Vec<Value>], ys: &mut [Vec<Value>]) -> Result<()> {
         anyhow::ensure!(
             xs.len() == ys.len(),
@@ -437,20 +649,81 @@ impl SplitPlan {
                 self.n_rows
             );
         }
-        for part in &mut self.parts {
+        if xs.is_empty() {
+            return Ok(());
+        }
+        self.group.join_all(&self.pools, &mut self.parts, |_i, part| {
             let block_rows = part.rows.end - part.rows.start;
+            // Scratch (re)sizing happens on the block's own fan-out
+            // thread, so growth is first-touched on the block's socket.
             if part.scratch.len() < xs.len() {
                 part.scratch.resize_with(xs.len(), Vec::new);
             }
             for s in part.scratch.iter_mut().take(xs.len()) {
                 s.resize(block_rows, 0.0);
             }
-            part.plan.execute_many(xs, &mut part.scratch[..xs.len()])?;
+            if let Err(e) = part.plan.execute_many(xs, &mut part.scratch[..xs.len()]) {
+                part.error = Some(e);
+            }
+        });
+        self.drain_errors()?;
+        for part in &self.parts {
             for (y, s) in ys.iter_mut().zip(&part.scratch) {
                 y[part.rows.clone()].copy_from_slice(s);
             }
         }
+        self.passes += (xs.len() as u64).div_ceil(self.batch_tile as u64);
         Ok(())
+    }
+
+    /// Single-vector split execution behind
+    /// [`ShardedPlanner::execute_split`] — the same concurrent fan-out
+    /// and merge for one right-hand side.
+    ///
+    /// # Errors
+    /// Fails on dimension mismatches, or if any block's execution failed.
+    pub(crate) fn execute(&mut self, x: &[Value], y: &mut [Value]) -> Result<()> {
+        anyhow::ensure!(
+            x.len() == self.n_cols,
+            "x length {} != n_cols {}",
+            x.len(),
+            self.n_cols
+        );
+        anyhow::ensure!(
+            y.len() == self.n_rows,
+            "y length {} != n_rows {}",
+            y.len(),
+            self.n_rows
+        );
+        self.group.join_all(&self.pools, &mut self.parts, |_i, part| {
+            let block_rows = part.rows.end - part.rows.start;
+            part.scratch1.resize(block_rows, 0.0);
+            if let Err(e) = part.plan.execute(x, &mut part.scratch1) {
+                part.error = Some(e);
+            }
+        });
+        self.drain_errors()?;
+        for part in &self.parts {
+            y[part.rows.clone()].copy_from_slice(&part.scratch1);
+        }
+        self.passes += 1;
+        Ok(())
+    }
+
+    /// Surface the first error any block reported during the last join,
+    /// clearing **every** slot — a stale error left behind must not fail
+    /// the next (successful) call.
+    fn drain_errors(&mut self) -> Result<()> {
+        let mut first = None;
+        for part in &mut self.parts {
+            if let Some(e) = part.error.take() {
+                first.get_or_insert(e);
+            }
+        }
+        match first {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -598,8 +871,93 @@ mod tests {
             );
         }
         assert!(split.matrix_passes() > passes_before);
+        // The blocks were dispatched concurrently, not one after another.
+        assert_eq!(split.max_concurrent_blocks(), 3);
+        assert_eq!(split.join_count(), 1);
+        // The single-vector path agrees with the batched one.
+        let mut y1 = vec![0.0; 120];
+        sp.execute_split(&mut split, &xs[0], &mut y1).unwrap();
+        assert_eq!(y1, want[0], "execute_split must match the batched rows");
         // Dimension mismatches are rejected.
         assert!(split.execute_many(&xs, &mut vec![vec![0.0; 119]; 5]).is_err());
         assert!(split.execute_many(&xs[..2], &mut got).is_err());
+        assert!(split.execute(&xs[0][..119], &mut y1).is_err());
+        assert!(split.execute(&xs[0], &mut vec![0.0; 119]).is_err());
+    }
+
+    #[test]
+    fn split_threshold_truth_function() {
+        use SplitThreshold::{Auto, Off, Rows};
+        assert_eq!(SplitThreshold::parse("0"), Some(Off));
+        assert_eq!(SplitThreshold::parse(" 4096 "), Some(Rows(4096)));
+        assert_eq!(SplitThreshold::parse("auto"), Some(Auto));
+        assert_eq!(SplitThreshold::parse("AUTO"), Some(Auto));
+        assert_eq!(SplitThreshold::parse("-3"), None);
+        assert_eq!(SplitThreshold::parse("rows"), None);
+        // Single-shard planners never split, whatever the threshold says.
+        assert!(!Rows(1).should_split(1 << 20, usize::MAX, 1));
+        assert!(!Auto.should_split(usize::MAX, usize::MAX, 1));
+        assert!(!Off.should_split(usize::MAX, usize::MAX, 8));
+        // Explicit row threshold is inclusive.
+        assert!(Rows(100).should_split(100, 1, 2));
+        assert!(!Rows(100).should_split(99, usize::MAX, 2));
+        // The nnz heuristic scales with the shard count.
+        assert!(Auto.should_split(1 << 20, SPLIT_AUTO_NNZ_PER_SHARD * 2, 2));
+        assert!(!Auto.should_split(1 << 20, SPLIT_AUTO_NNZ_PER_SHARD * 2 - 1, 2));
+        assert!(!Auto.should_split(1 << 20, SPLIT_AUTO_NNZ_PER_SHARD * 2, 3));
+        // One-row matrices cannot split.
+        assert!(!Rows(1).should_split(1, usize::MAX, 2));
+        // Unset environment = the Auto heuristic.
+        if std::env::var("SPMV_AT_SPLIT_ROWS").is_err() {
+            assert_eq!(SplitThreshold::from_env(), Auto);
+        }
+    }
+
+    #[test]
+    fn drain_errors_clears_every_slot() {
+        // Regression: two blocks failing in one join used to leave the
+        // second error in place, spuriously failing the NEXT call.
+        let sp = ShardedPlanner::new(tuning(), MemoryPolicy::unlimited(), PlanShards::new(2, 1));
+        let a = Arc::new(Csr::identity(8));
+        let mut split = sp.plan_split(&a, Implementation::CsrRowPar, 2).unwrap();
+        for p in &mut split.parts {
+            p.error = Some(anyhow::anyhow!("injected"));
+        }
+        assert!(split.drain_errors().is_err(), "the first error surfaces");
+        let xs = vec![vec![1.0; 8]];
+        let mut ys = vec![vec![0.0; 8]];
+        split.execute_many(&xs, &mut ys).unwrap();
+        assert_eq!(ys[0], vec![1.0; 8], "no stale error may fail a successful call");
+    }
+
+    #[test]
+    fn split_passes_follow_unsplit_tile_semantics() {
+        // Regression: matrix_passes once summed the per-block counters,
+        // over-counting by a factor of `parts` vs the unsplit plan.
+        use crate::matrixgen::random_csr;
+        use crate::rng::Rng;
+        let mut rng = Rng::new(29);
+        let a = Arc::new(random_csr(&mut rng, 80, 80, 0.1));
+        let sp = ShardedPlanner::new(tuning(), MemoryPolicy::unlimited(), PlanShards::new(2, 1));
+        let mut full = sp.planner(0).plan_for(&a, Implementation::CsrRowPar).unwrap();
+        let mut split = sp.plan_split(&a, Implementation::CsrRowPar, 2).unwrap();
+        full.set_batch_tile(3);
+        split.set_batch_tile(3);
+        assert_eq!(split.batch_tile(), 3);
+        let k = 7usize;
+        let xs: Vec<Vec<Value>> = (0..k)
+            .map(|j| (0..80).map(|i| ((i + j) as f64 * 0.19).sin()).collect())
+            .collect();
+        let mut ys = vec![vec![0.0; 80]; k];
+        full.execute_many(&xs, &mut ys).unwrap();
+        split.execute_many(&xs, &mut ys).unwrap();
+        assert_eq!(
+            split.matrix_passes(),
+            full.matrix_passes(),
+            "split passes must pin to the unsplit ceil(k/tile) count"
+        );
+        split.execute(&xs[0], &mut ys[0]).unwrap();
+        full.execute(&xs[0], &mut ys[1]).unwrap();
+        assert_eq!(split.matrix_passes(), full.matrix_passes(), "execute adds one pass each");
     }
 }

@@ -21,7 +21,7 @@ use spmv_at::autotune::adaptive::LearnedTuning;
 use spmv_at::autotune::atlib::{switches, Durmv};
 use spmv_at::autotune::online::TuningData;
 use spmv_at::autotune::{run_offline, MemoryPolicy, OfflineConfig};
-use spmv_at::coordinator::{Coordinator, CoordinatorConfig, Server, SolverKind};
+use spmv_at::coordinator::{Coordinator, CoordinatorConfig, Server, SolverKind, SplitThreshold};
 use spmv_at::formats::{Csr, SparseMatrix};
 use spmv_at::machine::scalar::ScalarMachine;
 use spmv_at::machine::vector::VectorMachine;
@@ -89,6 +89,20 @@ impl Args {
             },
         }
     }
+}
+
+/// Apply `--split-rows` (overriding `SPMV_AT_SPLIT_ROWS`) to the config;
+/// returns whether an explicit row threshold is active — the opt-in that
+/// switches solve/serve to a single request loop over one multi-shard
+/// coordinator, the serving shape where a cross-shard split can engage
+/// (each `spawn_sharded` loop is single-shard, so splits never fire
+/// there).
+fn apply_split_flag(args: &Args, cfg: &mut CoordinatorConfig) -> Result<bool> {
+    if let Some(v) = args.get("split-rows") {
+        cfg.split = SplitThreshold::parse(v)
+            .ok_or_else(|| anyhow!("--split-rows: expected 0, a positive integer, or 'auto'"))?;
+    }
+    Ok(matches!(cfg.split, SplitThreshold::Rows(_)))
 }
 
 fn make_backend(name: &str) -> Result<Box<dyn Backend>> {
@@ -274,7 +288,19 @@ fn cmd_solve(args: &Args) -> Result<()> {
     if let Some(on) = args.parse_bool("adaptive")? {
         cfg.adaptive.enabled = on;
     }
-    let (_srv, client) = Server::spawn_sharded(cfg, 32);
+    // SPMV_AT_SPLIT_ROWS unless --split-rows overrides; an explicit row
+    // threshold opts into the single-loop multi-shard serving shape so
+    // an oversized system can split across sockets.
+    let explicit_split = apply_split_flag(args, &mut cfg)?;
+    let effective_shards =
+        spmv_at::coordinator::shards::shard_thread_counts(cfg.threads, cfg.shards).len();
+    let (_srv, client) = if explicit_split && effective_shards > 1 {
+        let split = cfg.split;
+        println!("# split-rows {split}: one loop over {effective_shards} shard(s)");
+        Server::spawn(Coordinator::new(cfg), 32)
+    } else {
+        Server::spawn_sharded(cfg, 32)
+    };
     client.register(&name, a)?;
     let b = vec![1.0; n];
     let opts = SolverOptions {
@@ -294,9 +320,14 @@ fn cmd_solve(args: &Args) -> Result<()> {
         x.iter().map(|v| v * v).sum::<f64>().sqrt()
     );
     for row in client.stats()? {
+        let split = if row.split_parts > 0 {
+            format!(" split=blocks:{}/calls:{}", row.split_parts, row.split_calls)
+        } else {
+            String::new()
+        };
         println!(
             "  serving={} calls={} transformed_calls={} t_trans={:.6}s amortized={} \
-             explored={} replans={}",
+             explored={} replans={}{split}",
             row.serving,
             row.calls,
             row.transformed_calls,
@@ -340,11 +371,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(on) = args.parse_bool("adaptive")? {
         cfg.adaptive.enabled = on;
     }
+    // SPMV_AT_SPLIT_ROWS unless --split-rows overrides (see
+    // `apply_split_flag` for the serving-shape consequence).
+    let explicit_split = apply_split_flag(args, &mut cfg)?;
     // Attach XLA runtime if artifacts exist (XLA serving is single-loop:
     // the artifact handle is not shared across shard coordinators).
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let mut _xla_service = None;
     let adaptive_on = cfg.adaptive.enabled;
+    let effective =
+        spmv_at::coordinator::shards::shard_thread_counts(cfg.threads, cfg.shards).len();
     let (srv, client) = if art.join("manifest.tsv").exists() {
         let mut coord = Coordinator::new(cfg);
         match spmv_at::runtime::XlaService::spawn(art) {
@@ -359,9 +395,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Err(e) => println!("# XLA runtime unavailable: {e}"),
         }
         Server::spawn(coord, 64)
+    } else if explicit_split && effective > 1 {
+        // Explicit split threshold: one request loop over one multi-shard
+        // coordinator, so an oversized matrix can split across sockets
+        // and run its blocks concurrently.
+        let split = cfg.split;
+        let topo = spmv_at::machine::Topology::detect();
+        println!(
+            "# serving 1 loop over {} shard(s) / {} socket(s), {} thread(s), adaptive={}, \
+             split-rows {split}",
+            effective,
+            topo.n_sockets(),
+            cfg.threads,
+            if adaptive_on { "on" } else { "off" }
+        );
+        Server::spawn(Coordinator::new(cfg), 64)
     } else {
-        let effective =
-            spmv_at::coordinator::shards::shard_thread_counts(cfg.threads, cfg.shards).len();
         let topo = spmv_at::machine::Topology::detect();
         println!(
             "# serving {} shard(s) over {} socket(s), {} thread(s), adaptive={}",
@@ -436,9 +485,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     } else {
                         s.shard
                     };
+                    // Split-served entries show their block count and how
+                    // many calls the split served.
+                    let split = if s.split_parts > 0 {
+                        format!(" split=blocks:{}/calls:{}", s.split_parts, s.split_calls)
+                    } else {
+                        String::new()
+                    };
                     println!(
                         "{}: n={} nnz={} D={:.3} shard={} serving={} calls={} amortized={} \
-                         samples=crs:{}/imp:{} explored={} replans={}",
+                         samples=crs:{}/imp:{} explored={} replans={}{split}",
                         s.name,
                         s.n,
                         s.nnz,
@@ -515,6 +571,15 @@ fn cmd_topology(args: &Args) -> Result<()> {
             " (single socket: unpinned)"
         }
     );
+    let split = SplitThreshold::from_env();
+    println!(
+        "auto-split threshold: {split}{}",
+        if counts.len() > 1 {
+            ""
+        } else {
+            " (inactive: single shard)"
+        }
+    );
     Ok(())
 }
 
@@ -530,8 +595,16 @@ fn usage() -> ! {
          \x20 --shards <n>     pool shards (default: SPMV_AT_SHARDS, else the machine's\n\
          \x20                  socket count; each shard pins to one socket and plans\n\
          \x20                  first-touch their data there)\n\
+         \x20 --split-rows <n> route matrices with >= n rows through a cached\n\
+         \x20                  cross-shard SplitPlan whose row blocks execute\n\
+         \x20                  concurrently, one per socket (0 = never, 'auto' = the\n\
+         \x20                  nnz-per-socket heuristic; an explicit n also switches\n\
+         \x20                  solve/serve to one request loop over a multi-shard\n\
+         \x20                  coordinator so the split can span sockets; overrides\n\
+         \x20                  SPMV_AT_SPLIT_ROWS)\n\
          environment: SPMV_AT_THREADS, SPMV_AT_SHARDS, SPMV_AT_BATCH_TILE,\n\
-         \x20 SPMV_AT_ADAPTIVE, SPMV_AT_TOPOLOGY=<sockets>:<cores> (see docs/TUNING.md)\n\
+         \x20 SPMV_AT_ADAPTIVE, SPMV_AT_SPLIT_ROWS,\n\
+         \x20 SPMV_AT_TOPOLOGY=<sockets>:<cores> (see docs/TUNING.md)\n\
          examples:\n\
          \x20 spmv-at suite --scale 0.05\n\
          \x20 spmv-at offline --backend es2 --scale 0.05 --out tuning-es2.tsv\n\

@@ -120,6 +120,25 @@ impl Implementation {
     pub fn needs_transform(self) -> bool {
         self.required_format() != FormatKind::Csr
     }
+
+    /// Whether a row split of the operator leaves this kernel's results
+    /// bitwise-identical to the unsplit execution: every output row must
+    /// be produced by exactly one row block with unchanged per-row
+    /// accumulation order. True for the row-oriented kernels (the set
+    /// [`crate::coordinator::shards::ShardedPlanner::plan_split`]
+    /// supports); the COO column-major kernels reorder entries *across*
+    /// rows of the whole matrix and are not split-stable, and the
+    /// sequential extension formats (BCSR/JDS/HYB) resequence rows or
+    /// entries globally too.
+    pub fn split_stable(self) -> bool {
+        matches!(
+            self,
+            Implementation::CsrSeq
+                | Implementation::CsrRowPar
+                | Implementation::EllRowInner
+                | Implementation::EllRowOuter
+        )
+    }
 }
 
 impl std::fmt::Display for Implementation {

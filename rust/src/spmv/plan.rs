@@ -27,6 +27,13 @@
 //! dispatch counters. Plans share the CRS original by `Arc`, so the CRS
 //! baseline plan every registered matrix keeps is zero-copy.
 //!
+//! A plan is also the **per-block unit of cross-socket split serving**:
+//! [`crate::coordinator::shards::SplitPlan`] owns one `SpmvPlan` per
+//! nnz-balanced row block (each on its own shard pool) and runs them
+//! concurrently through [`crate::spmv::pool::PoolGroup::join_all`],
+//! forcing one uniform [`SpmvPlan::batch_tile`] across the blocks so the
+//! split's ⌈k/tile⌉ pass accounting stays comparable to an unsplit plan.
+//!
 //! Construction is **first-touch aware**: the transformation writes its
 //! arrays through [`ParPool::run_init`] on the plan's pool, and every
 //! build ends with an [`AnyMatrix::first_touch_on`] pass over the chosen

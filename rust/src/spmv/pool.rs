@@ -27,6 +27,15 @@
 //! environment variable when set, otherwise the hardware parallelism.
 //! That function is the crate-wide single source of thread-count truth.
 //!
+//! **Cross-pool join.** [`PoolGroup::join_all`] is the fan-out *across*
+//! pools: it runs one closure per pool concurrently (each on its own
+//! fan-out thread, pinned to its pool's CPU set) and blocks until all
+//! complete, with per-call overlap counters ([`PoolGroup::max_in_flight`],
+//! [`PoolGroup::join_count`]). The cross-socket split plan executes its
+//! row blocks through it, so blocks on different sockets are genuinely in
+//! flight simultaneously. Being a thread-spawning primitive, it lives in
+//! this file like everything else that spawns.
+//!
 //! **NUMA affinity.** A pool built with [`ParPool::new_pinned`] pins every
 //! worker to a CPU set (one socket, in the shard layer's usage) via the
 //! [`crate::machine::topology::pin_current_thread`] shim — best-effort,
@@ -357,6 +366,163 @@ impl ParPool {
     }
 }
 
+/// Cross-pool fork/join — the primitive behind concurrent split
+/// execution ([`crate::coordinator::shards::SplitPlan`]).
+///
+/// [`ParPool::run_chunks`] parallelises *within* one pool, but it blocks
+/// the calling thread, so a caller looping over N pools (one per socket)
+/// runs them one after another — the cross-socket wall-clock win of a
+/// row-split plan never materialises. [`PoolGroup::join_all`] dispatches
+/// one closure per pool onto its own fan-out thread (task 0 runs on the
+/// caller), each pinned to its pool's CPU set so the chunk claiming the
+/// fan-out thread participates in stays on the pool's socket, and blocks
+/// until every task has completed.
+///
+/// **Overlap observability.** Every task counts as *in flight* from the
+/// moment the group dispatches it until it completes; the high-water mark
+/// is exposed through [`PoolGroup::max_in_flight`] the same way
+/// [`ParPool::dispatch_count`] / [`ParPool::init_count`] expose pass and
+/// build activity. Because the whole batch is dispatched before the join
+/// waits, a call with `n` tasks always drives the mark to at least `n` —
+/// while a sequential caller running blocks one at a time through the
+/// same group can never push it past 1. Tests assert against this
+/// counter instead of timing. Note the deliberate division of labour:
+/// the counter measures *dispatch* concurrency (deterministic, so CI can
+/// gate on it even on one core), while *execution* concurrency — that
+/// the runners really proceed simultaneously — is guarded by the
+/// rendezvous unit test (`pool_group_tasks_truly_execute_concurrently`),
+/// which deadlock-times-out if `join_all` ever serialises its tasks.
+///
+/// **Panic containment.** A panicking task is caught on its own runner,
+/// the join still completes (no deadlock, no abandoned threads), the
+/// pools stay usable, and a single `"PoolGroup task panicked"` panic is
+/// re-raised to the caller afterwards — mirroring the
+/// [`ParPool::run_chunks`] contract.
+///
+/// # Example
+///
+/// ```
+/// use spmv_at::spmv::pool::{ParPool, PoolGroup};
+/// use std::sync::Arc;
+///
+/// let pools = vec![Arc::new(ParPool::new(1)), Arc::new(ParPool::new(1))];
+/// let group = PoolGroup::new();
+/// let mut sums = vec![0usize; 2];
+/// group.join_all(&pools, &mut sums, |i, s| {
+///     pools[i].run_chunks(&[0..50, 50..100], |_c, _r| {});
+///     *s = i + 1;
+/// });
+/// assert_eq!(sums, vec![1, 2]);
+/// assert!(group.max_in_flight() >= 2, "both tasks were in flight together");
+/// assert_eq!(group.join_count(), 1);
+/// ```
+#[derive(Default)]
+pub struct PoolGroup {
+    joins: AtomicU64,
+    in_flight: AtomicU64,
+    max_in_flight: AtomicU64,
+}
+
+impl PoolGroup {
+    /// A fresh group with zeroed counters.
+    pub const fn new() -> Self {
+        Self {
+            joins: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            max_in_flight: AtomicU64::new(0),
+        }
+    }
+
+    /// `join_all` calls so far (monotonic; empty batches do not count).
+    pub fn join_count(&self) -> u64 {
+        self.joins.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of tasks simultaneously in flight (dispatched and
+    /// not yet completed) across this group's lifetime. ≥ the largest
+    /// batch ever joined; stays at 1 if blocks were only ever run one at
+    /// a time.
+    pub fn max_in_flight(&self) -> u64 {
+        self.max_in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Run `f(i, &mut items[i])` for every task concurrently — task `i`
+    /// on its own fan-out thread pinned (best-effort) to `pools[i]`'s CPU
+    /// set, task 0 on the calling thread (temporarily joining `pools[0]`'s
+    /// set, original mask restored) — and block until all complete.
+    /// Distinct pools have independent job slots, so the tasks' inner
+    /// `run_chunks` calls proceed without contending on one slot.
+    ///
+    /// # Panics
+    /// Panics if `pools` and `items` differ in length, and re-raises (as
+    /// a single panic, after every task has finished) if any task body
+    /// panicked; the pools stay usable afterwards.
+    pub fn join_all<T: Send>(
+        &self,
+        pools: &[Arc<ParPool>],
+        items: &mut [T],
+        f: impl Fn(usize, &mut T) + Sync,
+    ) {
+        assert_eq!(pools.len(), items.len(), "join_all needs one pool per task");
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        self.joins.fetch_add(1, Ordering::Relaxed);
+        // The whole batch is in flight from here: the scope below waits
+        // for every task, and no task is queued behind another.
+        let was = self.in_flight.fetch_add(n as u64, Ordering::SeqCst);
+        self.max_in_flight.fetch_max(was + n as u64, Ordering::SeqCst);
+        let panicked = std::sync::atomic::AtomicBool::new(false);
+        let run = |i: usize, item: &mut T| {
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, item))).is_ok();
+            if !ok {
+                panicked.store(true, Ordering::SeqCst);
+            }
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        };
+        let mut iter = items.iter_mut().enumerate();
+        let (_, first) = iter.next().expect("n >= 1");
+        // Task 0 always runs on the caller, temporarily joining its
+        // pool's socket (mask restored after) — including the
+        // single-task degenerate case, which must keep the same
+        // first-touch behaviour as a fan-out.
+        let run_first = |first: &mut T| match pools[0].affinity() {
+            Some(cpus) => crate::machine::topology::with_affinity(cpus, || run(0, first)),
+            None => run(0, first),
+        };
+        if n == 1 {
+            run_first(first);
+        } else {
+            std::thread::scope(|s| {
+                for (i, item) in iter {
+                    let cpus = pools[i].affinity().map(<[usize]>::to_vec);
+                    let run = &run;
+                    s.spawn(move || {
+                        if let Some(cpus) = &cpus {
+                            crate::machine::topology::pin_current_thread(cpus);
+                        }
+                        run(i, item);
+                    });
+                }
+                run_first(first);
+            });
+        }
+        if panicked.load(Ordering::SeqCst) {
+            panic!("PoolGroup task panicked");
+        }
+    }
+}
+
+impl std::fmt::Debug for PoolGroup {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolGroup")
+            .field("joins", &self.join_count())
+            .field("max_in_flight", &self.max_in_flight())
+            .finish()
+    }
+}
+
 impl Drop for ParPool {
     fn drop(&mut self) {
         {
@@ -595,6 +761,91 @@ mod tests {
         // materialise must stay observable).
         pool.run_init(&[], |_tid, _r| {});
         assert_eq!(pool.init_count() - i0, 2);
+    }
+
+    #[test]
+    fn pool_group_joins_tasks_and_counts_overlap() {
+        let pools: Vec<Arc<ParPool>> =
+            (0..3).map(|_| Arc::new(ParPool::new(2))).collect();
+        let group = PoolGroup::new();
+        assert_eq!((group.join_count(), group.max_in_flight()), (0, 0));
+        let mut out = vec![0usize; 3];
+        group.join_all(&pools, &mut out, |i, o| {
+            // 2 disjoint chunks, each summed into its own slot.
+            let mut slots = [0usize; 2];
+            let p = SendPtr(slots.as_mut_ptr());
+            pools[i].run_chunks(&split_even(100, 2), |tid, r| {
+                let s: usize = r.sum();
+                unsafe { *p.get().add(tid) = s };
+            });
+            *o = slots[0] + slots[1] + i;
+        });
+        assert_eq!(out, vec![4950, 4951, 4952]);
+        assert_eq!(group.join_count(), 1);
+        assert_eq!(group.max_in_flight(), 3, "all 3 tasks dispatched before the join");
+        // Empty batches are a no-op, not a join.
+        group.join_all(&pools[..0], &mut out[..0], |_i, _o| {});
+        assert_eq!(group.join_count(), 1);
+        // A single-task batch runs on the caller and never raises the mark.
+        group.join_all(&pools[..1], &mut out[..1], |_i, o| *o = 7);
+        assert_eq!(out[0], 7);
+        assert_eq!(group.max_in_flight(), 3);
+    }
+
+    #[test]
+    fn pool_group_tasks_truly_execute_concurrently() {
+        // Rendezvous: each task spins until the other has started. If the
+        // group ran tasks sequentially, the first would spin to timeout
+        // and the assert below would fail.
+        let pools: Vec<Arc<ParPool>> =
+            (0..2).map(|_| Arc::new(ParPool::new(1))).collect();
+        let group = PoolGroup::new();
+        let started = AtomicU64::new(0);
+        let mut met = vec![false; 2];
+        group.join_all(&pools, &mut met, |_i, m| {
+            started.fetch_add(1, Ordering::SeqCst);
+            let t0 = std::time::Instant::now();
+            while started.load(Ordering::SeqCst) < 2 {
+                if t0.elapsed().as_secs() > 10 {
+                    return; // leaves *m == false -> assert fails below
+                }
+                std::thread::yield_now();
+            }
+            *m = true;
+        });
+        assert_eq!(met, vec![true, true], "both tasks must be in flight at once");
+        assert!(group.max_in_flight() >= 2);
+    }
+
+    #[test]
+    fn pool_group_panic_joins_without_poisoning() {
+        let pools: Vec<Arc<ParPool>> =
+            (0..3).map(|_| Arc::new(ParPool::new(2))).collect();
+        let group = PoolGroup::new();
+        let mut out = vec![0usize; 3];
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            group.join_all(&pools, &mut out, |i, o| {
+                if i == 1 {
+                    panic!("injected");
+                }
+                *o = i + 1;
+            });
+        }));
+        assert!(err.is_err(), "the task panic must re-raise on the caller");
+        assert_eq!(out[0], 1, "non-panicking tasks still completed");
+        assert_eq!(out[2], 3);
+        // The group and every pool stay usable for the next call.
+        group.join_all(&pools, &mut out, |i, o| {
+            let mut slots = [0usize; 2];
+            let p = SendPtr(slots.as_mut_ptr());
+            pools[i].run_chunks(&split_even(64, 2), |tid, r| {
+                let n = r.len();
+                unsafe { *p.get().add(tid) = n };
+            });
+            *o = slots[0] + slots[1];
+        });
+        assert_eq!(out, vec![64, 64, 64]);
+        assert_eq!(group.join_count(), 2);
     }
 
     #[test]

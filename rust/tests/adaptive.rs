@@ -18,23 +18,18 @@
 //! band-ordered, no cross-chunk reduction), so "bitwise vs `csr_seq`"
 //! holds for every serving choice the controller can make.
 
+mod common;
+
+use common::{band, reference};
 use spmv_at::autotune::adaptive::LearnedTuning;
 use spmv_at::autotune::online::TuningData;
 use spmv_at::coordinator::{Coordinator, CoordinatorConfig, Server};
-use spmv_at::formats::{Csr, FormatKind, SparseMatrix};
-use spmv_at::matrixgen::banded_circulant;
-use spmv_at::rng::Rng;
+use spmv_at::formats::FormatKind;
 use spmv_at::spmv::Implementation;
 use spmv_at::Value;
 
 fn tuning(d_star: Option<f64>) -> TuningData {
-    TuningData {
-        backend: "sim:ES2".into(),
-        imp: Implementation::EllRowInner,
-        threads: 1,
-        c: 1.0,
-        d_star,
-    }
+    common::tuning(Implementation::EllRowInner, d_star)
 }
 
 fn cfg(d_star: Option<f64>, threads: usize, adaptive: bool) -> CoordinatorConfig {
@@ -44,17 +39,6 @@ fn cfg(d_star: Option<f64>, threads: usize, adaptive: bool) -> CoordinatorConfig
     // Deterministic tests: no wall-clock-driven exploration by default.
     cfg.adaptive.epsilon = 0.0;
     cfg
-}
-
-fn band(n: usize, seed: u64) -> Csr {
-    let mut rng = Rng::new(seed);
-    banded_circulant(&mut rng, n, &[-2, -1, 0, 1, 2])
-}
-
-fn reference(a: &Csr, x: &[Value]) -> Vec<Value> {
-    let mut y = vec![0.0; a.n_rows()];
-    a.spmv(x, &mut y); // csr_seq is Csr::spmv
-    y
 }
 
 #[test]

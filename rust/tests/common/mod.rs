@@ -1,0 +1,105 @@
+//! Shared fixtures for the integration-test binaries.
+//!
+//! Every `rust/tests/*.rs` target is its own crate; before this module
+//! existed each of them carried private copies of the same tuning-table
+//! helper, matrix-generator suite, deterministic RHS batches and fixture
+//! `/sys` topology trees. Declare it from a test file with `mod common;`
+//! — each binary compiles its own copy, so only the items it uses are
+//! linked (hence the file-wide `dead_code` allow).
+
+#![allow(dead_code)]
+
+use spmv_at::autotune::online::TuningData;
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::matrixgen::{banded_circulant, random_csr};
+use spmv_at::rng::Rng;
+use spmv_at::spmv::Implementation;
+use spmv_at::Value;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// A minimal tuning table naming `imp` as the transform candidate.
+pub fn tuning(imp: Implementation, d_star: Option<f64>) -> TuningData {
+    TuningData { backend: "sim:ES2".into(), imp, threads: 1, c: 1.0, d_star }
+}
+
+/// The standard small correctness suite: degenerate 1×1, rectangular,
+/// larger sparse square, banded, and all-zero matrices (seed 2024 — the
+/// shapes the plan/SpMM property tests have always swept).
+pub fn small_suite() -> Vec<Arc<Csr>> {
+    let mut rng = Rng::new(2024);
+    vec![
+        Arc::new(random_csr(&mut rng, 1, 1, 1.0)),
+        Arc::new(random_csr(&mut rng, 23, 19, 0.25)),
+        Arc::new(random_csr(&mut rng, 150, 150, 0.04)),
+        Arc::new(banded_circulant(&mut rng, 97, &[-1, 0, 1, 3])),
+        Arc::new(Csr::from_triplets(11, 11, &[]).unwrap()),
+    ]
+}
+
+/// A banded circulant (bands −2..=2) — the adaptive/coordinator tests'
+/// well-conditioned ELL-friendly shape.
+pub fn band(n: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    banded_circulant(&mut rng, n, &[-2, -1, 0, 1, 2])
+}
+
+/// A seeded uniform random CSR.
+pub fn rand_csr(n_rows: usize, n_cols: usize, density: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    random_csr(&mut rng, n_rows, n_cols, density)
+}
+
+/// `k` deterministic right-hand sides of width `n_cols` (exact binary
+/// fractions, so bitwise assertions are meaningful).
+pub fn xs_batch(n_cols: usize, k: usize) -> Vec<Vec<Value>> {
+    (0..k)
+        .map(|j| (0..n_cols).map(|i| 1.0 + ((i * 5 + j * 3) % 11) as f64 * 0.0625).collect())
+        .collect()
+}
+
+/// The sequential CRS reference `y = A·x`.
+pub fn reference(a: &Csr, x: &[Value]) -> Vec<Value> {
+    let mut y = vec![0.0; a.n_rows()];
+    a.spmv(x, &mut y);
+    y
+}
+
+/// Relative-tolerance comparison for the non-bitwise-stable kernels.
+pub fn assert_close(tag: &str, got: &[Value], want: &[Value]) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-9 * (1.0 + w.abs()),
+            "{tag}: index {i}: {g} vs {w}"
+        );
+    }
+}
+
+/// Build a fixture `/sys` tree under a unique temp dir; returns its
+/// root. `nodes` maps node index → `cpulist` contents; `online` is the
+/// optional `devices/system/cpu/online` contents. Remove it with
+/// [`remove_sys_fixture`] when done.
+pub fn sys_fixture(tag: &str, nodes: &[(usize, &str)], online: Option<&str>) -> PathBuf {
+    let root = std::env::temp_dir().join(format!("spmv-at-sys-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for (idx, cpulist) in nodes {
+        let d = root.join(format!("devices/system/node/node{idx}"));
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("cpulist"), cpulist).unwrap();
+    }
+    if let Some(online) = online {
+        let d = root.join("devices/system/cpu");
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("online"), online).unwrap();
+    } else {
+        // The node dir must exist even with zero nodes so read_dir works.
+        std::fs::create_dir_all(root.join("devices/system/node")).unwrap();
+    }
+    root
+}
+
+/// Tear down a [`sys_fixture`] tree (best-effort).
+pub fn remove_sys_fixture(root: &std::path::Path) {
+    let _ = std::fs::remove_dir_all(root);
+}

@@ -14,7 +14,9 @@
 //! `SPMV_AT_TOPOLOGY` override acceptance test lives alone in
 //! `rust/tests/topology_env.rs`, its own sequentially-run binary.
 
-use spmv_at::autotune::online::TuningData;
+mod common;
+
+use common::{sys_fixture, tuning};
 use spmv_at::autotune::MemoryPolicy;
 use spmv_at::coordinator::shards::shard_thread_counts;
 use spmv_at::coordinator::{Coordinator, CoordinatorConfig, PlanShards, ShardedPlanner};
@@ -24,34 +26,7 @@ use spmv_at::matrixgen::{banded_circulant, random_csr};
 use spmv_at::rng::Rng;
 use spmv_at::spmv::Implementation;
 use spmv_at::Value;
-use std::path::PathBuf;
 use std::sync::Arc;
-
-fn tuning(imp: Implementation, d_star: Option<f64>) -> TuningData {
-    TuningData { backend: "sim:ES2".into(), imp, threads: 1, c: 1.0, d_star }
-}
-
-/// Build a fixture /sys tree under a unique temp dir; returns its root.
-/// `nodes` maps node index -> cpulist contents; `online` is the optional
-/// devices/system/cpu/online contents.
-fn sys_fixture(tag: &str, nodes: &[(usize, &str)], online: Option<&str>) -> PathBuf {
-    let root = std::env::temp_dir().join(format!("spmv-at-sys-{}-{tag}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&root);
-    for (idx, cpulist) in nodes {
-        let d = root.join(format!("devices/system/node/node{idx}"));
-        std::fs::create_dir_all(&d).unwrap();
-        std::fs::write(d.join("cpulist"), cpulist).unwrap();
-    }
-    if let Some(online) = online {
-        let d = root.join("devices/system/cpu");
-        std::fs::create_dir_all(&d).unwrap();
-        std::fs::write(d.join("online"), online).unwrap();
-    } else {
-        // The node dir must exist even with zero nodes so read_dir works.
-        std::fs::create_dir_all(root.join("devices/system/node")).unwrap();
-    }
-    root
-}
 
 #[test]
 fn sysfs_single_node_fixture() {
@@ -238,8 +213,10 @@ fn execute_split_many_is_bitwise_identical_across_splits_and_threads() {
 
 #[test]
 fn split_pass_counters_expose_the_split() {
-    // matrix_passes on a split plan advances once per block per tile, so
-    // a uniform forced tile makes the count exactly parts x ceil(k/tile).
+    // matrix_passes on a split plan follows the unsplit ceil(k/tile)
+    // semantics (ISSUE-5 regression fix: it used to sum per-block
+    // counters, over-counting by a factor of `parts`); per-block
+    // activity stays visible through the shard pools' dispatch counters.
     let sp = ShardedPlanner::new(
         tuning(Implementation::EllRowInner, Some(3.1)),
         MemoryPolicy::unlimited(),
@@ -255,12 +232,20 @@ fn split_pass_counters_expose_the_split() {
         .collect();
     let mut ys = vec![vec![0.0; 90]; k];
     let before = split.matrix_passes();
+    let dispatch_before: Vec<u64> =
+        (0..2).map(|i| sp.shards().pool(i).dispatch_count()).collect();
     sp.execute_split_many(&mut split, &xs, &mut ys).unwrap();
     assert_eq!(
         split.matrix_passes() - before,
-        2 * 3, // 2 blocks x ceil(7/3)
-        "pass counter must expose parts x ceil(k/tile)"
+        3, // ceil(7/3), once per split call — NOT multiplied by parts
+        "pass counter must match the unsplit ceil(k/tile) semantics"
     );
+    for i in 0..2 {
+        assert!(
+            sp.shards().pool(i).dispatch_count() > dispatch_before[i],
+            "block {i} still observable on its own pool"
+        );
+    }
     assert_eq!(split.part_shard(0), 0);
     assert_eq!(split.part_shard(1), 1);
     // Blocks tile the row range contiguously.

@@ -3,7 +3,9 @@
 //! stability of repeated executions, and pool reuse across consecutive
 //! plans (no stale `YY`/partition state).
 
-use spmv_at::autotune::online::TuningData;
+mod common;
+
+use common::{assert_close, small_suite as cases, tuning};
 use spmv_at::autotune::MemoryPolicy;
 use spmv_at::formats::{Csr, SparseMatrix};
 use spmv_at::matrixgen::{banded_circulant, random_csr};
@@ -12,27 +14,6 @@ use spmv_at::solver::{cg, SolverOptions};
 use spmv_at::spmv::pool::ParPool;
 use spmv_at::spmv::{Implementation, Planner, SpmvPlan};
 use std::sync::Arc;
-
-fn assert_close(tag: &str, got: &[f64], want: &[f64]) {
-    assert_eq!(got.len(), want.len(), "{tag}: length");
-    for (i, (g, w)) in got.iter().zip(want).enumerate() {
-        assert!(
-            (g - w).abs() <= 1e-9 * (1.0 + w.abs()),
-            "{tag}: index {i}: {g} vs {w}"
-        );
-    }
-}
-
-fn cases() -> Vec<Arc<Csr>> {
-    let mut rng = Rng::new(2024);
-    vec![
-        Arc::new(random_csr(&mut rng, 1, 1, 1.0)),
-        Arc::new(random_csr(&mut rng, 23, 19, 0.25)),
-        Arc::new(random_csr(&mut rng, 150, 150, 0.04)),
-        Arc::new(banded_circulant(&mut rng, 97, &[-1, 0, 1, 3])),
-        Arc::new(Csr::from_triplets(11, 11, &[]).unwrap()),
-    ]
-}
 
 /// The headline property: for every implementation and every pool width
 /// in {1, 2, 7, 16}, `SpmvPlan::execute` matches `csr_seq` within 1e-9
@@ -120,14 +101,8 @@ fn solver_iterates_through_a_cached_plan() {
     let mut b = vec![0.0; 120];
     a.spmv(&x_true, &mut b);
 
-    let tuning = TuningData {
-        backend: "t".into(),
-        imp: Implementation::EllRowOuter,
-        threads: 1,
-        c: 1.0,
-        d_star: Some(3.1),
-    };
-    let planner = Planner::new(tuning, MemoryPolicy::unlimited(), Arc::new(ParPool::new(3)));
+    let td = tuning(Implementation::EllRowOuter, Some(3.1));
+    let planner = Planner::new(td, MemoryPolicy::unlimited(), Arc::new(ParPool::new(3)));
     let mut plan = planner.plan(&a).unwrap();
     assert_eq!(plan.implementation(), Implementation::EllRowOuter);
     let mut x = vec![0.0; 120];

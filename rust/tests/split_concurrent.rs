@@ -1,0 +1,314 @@
+//! Concurrent cross-socket split execution — the ISSUE-5 acceptance
+//! surface:
+//!
+//! * the bitwise property: concurrent `execute_split_many` (and the new
+//!   single-vector `execute_split`) equals the unsplit tiled SpMM across
+//!   splits {1, 2, 3, 5} × pool widths {1, 2, 7} × the split-stable
+//!   kernels {CsrRowPar, EllRowInner} × batch sizes k ∈ {1, 4, 17};
+//! * overlap: ≥ 2 row blocks demonstrably in flight at once
+//!   (`SplitPlan::max_concurrent_blocks`, fed by the `PoolGroup` join
+//!   primitive) when splits ≥ 2 and threads ≥ 4;
+//! * panic containment: a panicking block neither deadlocks the join nor
+//!   poisons the pools for the next call;
+//! * the `matrix_passes` regression: split pass counts pin to the
+//!   unsplit ⌈k/tile⌉ semantics instead of summing per block;
+//! * automatic routing: matrices past `SplitThreshold` serve through a
+//!   *cached* `SplitPlan` (observable via `EntryStats`), adaptive mode
+//!   composes without double-building, and threshold-off / single-shard
+//!   setups reproduce the pre-split serving byte for byte.
+//!
+//! No test here mutates environment variables; thresholds are set
+//! through `CoordinatorConfig::split` (the `SPMV_AT_SPLIT_ROWS` parser
+//! has its own unit tests in `coordinator::shards`).
+
+mod common;
+
+use spmv_at::autotune::MemoryPolicy;
+use spmv_at::coordinator::{
+    Coordinator, CoordinatorConfig, PlanShards, ShardedPlanner, SplitThreshold,
+};
+use spmv_at::formats::{Csr, FormatKind, SparseMatrix};
+use spmv_at::spmv::pool::PoolGroup;
+use spmv_at::spmv::Implementation;
+use spmv_at::Value;
+use std::sync::Arc;
+
+fn planner(shards: usize, threads: usize) -> ShardedPlanner {
+    ShardedPlanner::new(
+        common::tuning(Implementation::EllRowInner, Some(3.1)),
+        MemoryPolicy::unlimited(),
+        PlanShards::new(shards, threads),
+    )
+}
+
+#[test]
+fn concurrent_split_is_bitwise_identical_to_unsplit() {
+    let matrices: Vec<Csr> = vec![
+        common::rand_csr(160, 160, 0.06, 101),
+        common::band(128, 102),
+    ];
+    for threads in [1usize, 2, 7] {
+        let sp = planner(3, threads);
+        for a in &matrices {
+            let a = Arc::new(a.clone());
+            let n = a.n_rows();
+            for imp in [Implementation::CsrRowPar, Implementation::EllRowInner] {
+                let mut full = sp.planner(0).plan_for(&a, imp).unwrap();
+                for splits in [1usize, 2, 3, 5] {
+                    let mut split = sp.plan_split(&a, imp, splits).unwrap();
+                    for k in [1usize, 4, 17] {
+                        let tag = format!("t={threads} imp={imp} splits={splits} k={k}");
+                        let xs = common::xs_batch(a.n_cols(), k);
+                        let mut want = vec![vec![0.0; n]; k];
+                        full.execute_many(&xs, &mut want).unwrap();
+                        let mut got = vec![vec![0.0; n]; k];
+                        sp.execute_split_many(&mut split, &xs, &mut got).unwrap();
+                        assert_eq!(got, want, "{tag}: concurrent split must be bitwise");
+                        // Stable on reuse of the same cached split plan.
+                        sp.execute_split_many(&mut split, &xs, &mut got).unwrap();
+                        assert_eq!(got, want, "{tag}: rerun");
+                        // The single-vector path agrees with the batch.
+                        let mut y1 = vec![0.0; n];
+                        sp.execute_split(&mut split, &xs[0], &mut y1).unwrap();
+                        assert_eq!(y1, want[0], "{tag}: execute_split");
+                    }
+                    // split_by_nnz yields at most `splits` blocks; these
+                    // near-uniform matrices always get at least 2 when
+                    // asked for 2+.
+                    assert!(split.parts() <= splits, "splits={splits}");
+                    assert!(split.parts() >= splits.min(2), "splits={splits}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn at_least_two_blocks_are_in_flight_concurrently() {
+    // The acceptance overlap assertion: splits >= 2, threads >= 4.
+    let sp = planner(2, 4);
+    let a = Arc::new(common::rand_csr(200, 200, 0.05, 7));
+    for splits in [2usize, 3] {
+        let mut split = sp.plan_split(&a, Implementation::CsrRowPar, splits).unwrap();
+        assert_eq!(split.max_concurrent_blocks(), 0, "fresh plan has not joined yet");
+        let xs = common::xs_batch(200, 4);
+        let mut ys = vec![vec![0.0; 200]; 4];
+        sp.execute_split_many(&mut split, &xs, &mut ys).unwrap();
+        assert!(
+            split.max_concurrent_blocks() >= 2,
+            "splits={splits}: >=2 blocks must be in flight simultaneously, saw {}",
+            split.max_concurrent_blocks()
+        );
+        assert_eq!(split.join_count(), 1);
+        // The single-vector path joins through the same group.
+        let mut y = vec![0.0; 200];
+        sp.execute_split(&mut split, &xs[0], &mut y).unwrap();
+        assert_eq!(split.join_count(), 2);
+    }
+}
+
+#[test]
+fn panic_in_one_block_joins_cleanly_and_pools_survive() {
+    let sp = planner(2, 2);
+    let pools = [sp.shards().pool(0).clone(), sp.shards().pool(1).clone()];
+    let group = PoolGroup::new();
+    let mut marks = vec![0u32; 2];
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        group.join_all(&pools, &mut marks, |i, m| {
+            if i == 1 {
+                panic!("injected block failure");
+            }
+            *m = 1;
+        });
+    }));
+    assert!(err.is_err(), "the block panic must re-raise after the join");
+    assert_eq!(marks[0], 1, "the surviving block still completed");
+
+    // The same pools serve a real split correctly afterwards — the join
+    // neither deadlocked nor poisoned them.
+    let a = Arc::new(common::band(96, 5));
+    let xs = common::xs_batch(96, 3);
+    let mut want = vec![vec![0.0; 96]; 3];
+    let mut full = sp.planner(0).plan_for(&a, Implementation::CsrRowPar).unwrap();
+    full.execute_many(&xs, &mut want).unwrap();
+    let mut split = sp.plan_split(&a, Implementation::CsrRowPar, 2).unwrap();
+    let mut got = vec![vec![0.0; 96]; 3];
+    sp.execute_split_many(&mut split, &xs, &mut got).unwrap();
+    assert_eq!(got, want, "pools must stay fully usable after a block panic");
+}
+
+#[test]
+fn split_matrix_passes_pin_to_unsplit_semantics() {
+    // Regression (ISSUE 5): SplitPlan::matrix_passes summed the per-block
+    // counters, over-counting by a factor of `parts` relative to the
+    // unsplit plan's ceil(k/tile) semantics.
+    let sp = planner(3, 2);
+    let a = Arc::new(common::rand_csr(120, 120, 0.08, 23));
+    let k = 7usize;
+    let xs = common::xs_batch(120, k);
+    let mut ys = vec![vec![0.0; 120]; k];
+    for tile in [1usize, 3] {
+        let mut full = sp.planner(0).plan_for(&a, Implementation::CsrRowPar).unwrap();
+        let mut split = sp.plan_split(&a, Implementation::CsrRowPar, 3).unwrap();
+        full.set_batch_tile(tile);
+        split.set_batch_tile(tile);
+        full.execute_many(&xs, &mut ys).unwrap();
+        sp.execute_split_many(&mut split, &xs, &mut ys).unwrap();
+        assert_eq!(
+            split.matrix_passes(),
+            full.matrix_passes(),
+            "tile={tile}: split passes must equal the unsplit ceil(k/tile)"
+        );
+        assert_eq!(split.matrix_passes(), (k as u64).div_ceil(tile as u64));
+    }
+    // Default (uniform) tile: still the ceil(k/tile) of the plan's own
+    // tile, counted once per call — never multiplied by the block count.
+    let mut split = sp.plan_split(&a, Implementation::CsrRowPar, 3).unwrap();
+    let before = split.matrix_passes();
+    sp.execute_split_many(&mut split, &xs, &mut ys).unwrap();
+    assert_eq!(
+        split.matrix_passes() - before,
+        (k as u64).div_ceil(split.batch_tile() as u64)
+    );
+    let mut y = vec![0.0; 120];
+    sp.execute_split(&mut split, &xs[0], &mut y).unwrap();
+    assert_eq!(split.matrix_passes() - before, (k as u64).div_ceil(split.batch_tile() as u64) + 1);
+}
+
+fn coord(threads: usize, shards: usize, split: SplitThreshold, adaptive: bool) -> Coordinator {
+    let mut cfg = CoordinatorConfig::new(common::tuning(Implementation::EllRowInner, Some(3.1)));
+    cfg.threads = threads;
+    cfg.shards = shards;
+    cfg.split = split;
+    cfg.adaptive.enabled = adaptive;
+    cfg.adaptive.epsilon = 0.0;
+    Coordinator::new(cfg)
+}
+
+#[test]
+fn oversized_matrix_auto_routes_through_a_cached_split_plan() {
+    let mut c = coord(2, 2, SplitThreshold::Rows(64), false);
+    let a = common::band(128, 31);
+    c.register("big", a.clone()).unwrap();
+    assert_eq!(c.stats()[0].split_parts, 0, "the split builds lazily, like the transform");
+
+    let x: Vec<Value> = (0..128).map(|i| 1.0 + (i % 9) as f64 * 0.125).collect();
+    let want = common::reference(&a, &x);
+    let y = c.spmv("big", &x).unwrap();
+    assert_eq!(y, want, "split serving must stay bitwise vs csr_seq (EllRowInner order)");
+    let s = &c.stats()[0];
+    assert_eq!(s.split_parts, 2, "the decided kernel serves through a 2-block split");
+    assert_eq!(s.split_calls, 1);
+    assert_eq!(s.serving, Implementation::EllRowInner);
+    assert_eq!(c.serving_format("big"), Some(FormatKind::Ell));
+    assert!(s.extra_bytes > 0, "the split blocks are accounted");
+    assert!(s.t_trans > 0.0, "block transforms are accounted once");
+
+    // The split plan is cached: further serving builds nothing new.
+    let inits: Vec<u64> = (0..2).map(|i| c.planner().shards().pool(i).init_count()).collect();
+    assert_eq!(c.spmv("big", &x).unwrap(), want);
+    let xs = common::xs_batch(128, 4);
+    let ys = c.spmv_batch("big", &xs).unwrap();
+    for (xi, yi) in xs.iter().zip(&ys) {
+        assert_eq!(*yi, common::reference(&a, xi), "batched split serving");
+    }
+    for (i, before) in inits.iter().enumerate() {
+        assert_eq!(
+            c.planner().shards().pool(i).init_count(),
+            *before,
+            "pool {i}: cached split must not rebuild on later serves"
+        );
+    }
+    let s = &c.stats()[0];
+    assert_eq!(s.split_calls, 6);
+    assert_eq!(s.calls, 6);
+
+    // Below the threshold nothing splits.
+    c.register("small", common::band(32, 33)).unwrap();
+    let xs32: Vec<Value> = vec![1.0; 32];
+    c.spmv("small", &xs32).unwrap();
+    let small = c.stats().into_iter().find(|s| s.name == "small").unwrap();
+    assert_eq!((small.split_parts, small.split_calls), (0, 0));
+}
+
+#[test]
+fn adaptive_and_split_routing_compose_without_double_building() {
+    // Exploration forced on every call: if split serving consulted the
+    // explorer it would build a full-matrix shadow plan immediately.
+    let mut cfg = CoordinatorConfig::new(common::tuning(Implementation::EllRowInner, Some(3.1)));
+    cfg.threads = 2;
+    cfg.shards = 2;
+    cfg.split = SplitThreshold::Rows(64);
+    cfg.adaptive.enabled = true;
+    cfg.adaptive.epsilon = 1.0;
+    cfg.adaptive.explore_warmup = 0;
+    let mut c = Coordinator::new(cfg);
+    let a = common::band(128, 41);
+    c.register("m", a.clone()).unwrap();
+    let x: Vec<Value> = (0..128).map(|i| 1.0 + (i % 7) as f64 * 0.25).collect();
+    let want = common::reference(&a, &x);
+    assert_eq!(c.spmv("m", &x).unwrap(), want);
+    assert_eq!(c.stats()[0].split_parts, 2);
+
+    // Adaptive serving over a split entry never builds the full-size
+    // shadow/transformed plans (that would be the double build): the
+    // init counters stay flat over sustained traffic.
+    let inits: Vec<u64> = (0..2).map(|i| c.planner().shards().pool(i).init_count()).collect();
+    for _ in 0..10 {
+        assert_eq!(c.spmv("m", &x).unwrap(), want, "bitwise-stable under adaptive");
+    }
+    for (i, before) in inits.iter().enumerate() {
+        assert_eq!(
+            c.planner().shards().pool(i).init_count(),
+            *before,
+            "pool {i}: no shadow or transform build behind split serving"
+        );
+    }
+    let s = &c.stats()[0];
+    assert_eq!(s.explored, 0, "split-served entries skip exploration");
+    assert_eq!(s.replans, 0);
+    assert_eq!(s.split_calls, 11);
+
+    // A forced replan re-decides and rebuilds the split exactly once.
+    let s = c.replan("m").unwrap();
+    assert_eq!(s.replans, 1);
+    assert_eq!(s.split_parts, 2, "the rebuilt split keeps serving");
+    let after: Vec<u64> = (0..2).map(|i| c.planner().shards().pool(i).init_count()).collect();
+    assert!(
+        after.iter().zip(&inits).all(|(a, b)| a > b),
+        "the replan rebuilt one block per shard ({inits:?} -> {after:?})"
+    );
+    assert_eq!(c.spmv("m", &x).unwrap(), want, "bitwise across the replan");
+    assert_eq!(
+        (0..2).map(|i| c.planner().shards().pool(i).init_count()).collect::<Vec<_>>(),
+        after,
+        "exactly one rebuild, then cached again"
+    );
+}
+
+#[test]
+fn threshold_off_and_single_shard_reproduce_unsplit_serving() {
+    let a = common::band(96, 51);
+    let x: Vec<Value> = (0..96).map(|i| 1.0 + (i % 5) as f64 * 0.5).collect();
+    let xs = common::xs_batch(96, 3);
+
+    // SPMV_AT_SPLIT_ROWS=0 semantics: identical bytes, no split built.
+    let mut on = coord(2, 2, SplitThreshold::Rows(16), false);
+    let mut off = coord(2, 2, SplitThreshold::Off, false);
+    on.register("m", a.clone()).unwrap();
+    off.register("m", a.clone()).unwrap();
+    let (y_on, y_off) = (on.spmv("m", &x).unwrap(), off.spmv("m", &x).unwrap());
+    assert_eq!(y_on, y_off, "split and unsplit serving must agree byte for byte");
+    assert_eq!(on.spmv_batch("m", &xs).unwrap(), off.spmv_batch("m", &xs).unwrap());
+    assert_eq!(on.stats()[0].split_parts, 2);
+    assert_eq!(off.stats()[0].split_parts, 0, "threshold off = the pre-split path");
+    assert_eq!(off.serving_format("m"), Some(FormatKind::Ell), "plain transform still runs");
+
+    // Single-shard planners (the single-socket topology case — shard
+    // count defaults to the socket count) never split, whatever the
+    // threshold says.
+    let mut single = coord(2, 1, SplitThreshold::Rows(1), false);
+    single.register("m", a.clone()).unwrap();
+    assert_eq!(single.spmv("m", &x).unwrap(), y_off);
+    assert_eq!(single.stats()[0].split_parts, 0, "single shard: never split");
+}

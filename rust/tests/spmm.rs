@@ -5,24 +5,16 @@
 //! exactly ⌈k/tile⌉ passes over the matrix; and shard routing must place
 //! different matrices on distinct pools that serve concurrently.
 
-use spmv_at::autotune::online::TuningData;
+mod common;
+
+use common::{small_suite as cases, tuning};
 use spmv_at::coordinator::{shards, CoordinatorConfig, Server};
-use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::formats::SparseMatrix;
 use spmv_at::matrixgen::{banded_circulant, random_csr};
 use spmv_at::rng::Rng;
 use spmv_at::spmv::pool::ParPool;
 use spmv_at::spmv::{Implementation, SpmvPlan};
 use std::sync::Arc;
-
-fn cases() -> Vec<Arc<Csr>> {
-    let mut rng = Rng::new(4096);
-    vec![
-        Arc::new(random_csr(&mut rng, 1, 1, 1.0)),
-        Arc::new(random_csr(&mut rng, 37, 29, 0.2)),
-        Arc::new(banded_circulant(&mut rng, 90, &[-1, 0, 1, 4])),
-        Arc::new(Csr::from_triplets(13, 13, &[]).unwrap()),
-    ]
-}
 
 /// The headline SpMM property: for every implementation × pool width
 /// {1, 2, 7} × tile width {1, 3, k}, `execute_many` over a batch of k
@@ -97,14 +89,8 @@ fn tiled_spmm_dispatches_once_per_tile() {
 /// correct results.
 #[test]
 fn sharded_serving_routes_to_distinct_pools_and_stays_correct() {
-    let tuning = TuningData {
-        backend: "sim:ES2".into(),
-        imp: Implementation::EllRowOuter,
-        threads: 1,
-        c: 1.0,
-        d_star: Some(3.1),
-    };
-    let mut cfg = CoordinatorConfig::new(tuning.clone());
+    let td = tuning(Implementation::EllRowOuter, Some(3.1));
+    let mut cfg = CoordinatorConfig::new(td);
     cfg.threads = 4;
     cfg.shards = 2;
 

@@ -9,7 +9,8 @@
 //! `Topology::detect`. Cargo runs test binaries sequentially and this
 //! binary holds a single `#[test]`, so no reader can race the writes.
 
-use spmv_at::autotune::online::TuningData;
+mod common;
+
 use spmv_at::coordinator::shards::configured_shards;
 use spmv_at::coordinator::{Coordinator, CoordinatorConfig};
 use spmv_at::machine::topology::{Topology, TopologySource};
@@ -29,13 +30,8 @@ fn topology_env_override_defaults_shards_to_sockets() {
 
     // A coordinator built under the override really gets 2 shard pools
     // (given enough threads for both after clamping).
-    let mut cfg = CoordinatorConfig::new(TuningData {
-        backend: "sim:ES2".into(),
-        imp: Implementation::EllRowInner,
-        threads: 1,
-        c: 1.0,
-        d_star: Some(3.1),
-    });
+    let mut cfg =
+        CoordinatorConfig::new(common::tuning(Implementation::EllRowInner, Some(3.1)));
     cfg.threads = 2;
     cfg.shards = configured_shards();
     let c = Coordinator::new(cfg);
