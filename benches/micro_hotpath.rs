@@ -56,6 +56,9 @@ fn bench_transforms(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
     let t_bcsr = time_median(1, r, || {
         std::hint::black_box(transform::crs_to_bcsr(a, 2, 2).ok());
     });
+    let t_sell = time_median(1, r, || {
+        std::hint::black_box(transform::crs_to_sell(a).ok());
+    });
     json.push(Json::Obj(vec![
         ("matrix".into(), Json::Str(name.into())),
         ("kind".into(), Json::Str("transform".into())),
@@ -64,6 +67,7 @@ fn bench_transforms(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
         ("coo_col".into(), Json::Num(t_coo_col)),
         ("ell".into(), Json::Num(t_ell)),
         ("bcsr".into(), Json::Num(t_bcsr)),
+        ("sell".into(), Json::Num(t_sell)),
     ]));
     vec![
         format!("{:.3}", t_coo_row * 1e3),
@@ -71,6 +75,7 @@ fn bench_transforms(a: &Csr, name: &str, json: &mut Vec<Json>) -> Vec<String> {
         format!("{:.3}", t_coo_col * 1e3),
         format!("{:.3}", t_ell * 1e3),
         format!("{:.3}", t_bcsr * 1e3),
+        format!("{:.3}", t_sell * 1e3),
     ]
 }
 
@@ -108,6 +113,73 @@ fn bench_kernels(
         ]));
     }
     cells
+}
+
+/// Achieved flops/byte per kernel: flops = 2·nnz, bytes = resident
+/// format bytes + one read of `x` + one write of `y`. The padding a
+/// format carries dilutes its arithmetic intensity, so the SELL-over-ELL
+/// uplift here is exactly the padding the σ-window sort removed — the
+/// quantity the D_mat–R model prices. Run on a band suite (near-uniform
+/// rows, ELL's best case) and a random suite (spread row lengths, where
+/// ELL pads heavily), with the measured per-call seconds alongside.
+fn bench_flops_per_byte(pool: &Arc<ParPool>, json: &mut Vec<Json>) {
+    let r = reps();
+    let suites: [(&str, [&str; 2]); 2] =
+        [("band", ["chem_master1", "xenon1"]), ("random", ["memplus", "sme3Da"])];
+    println!("\nachieved flops/byte (2*nnz / (format bytes + x + y)), pool size 1:");
+    let mut t = Table::new(vec![
+        "suite", "matrix", "ELL-In f/B", "SELL f/B", "uplift", "ELL-In ms", "SELL ms",
+    ]);
+    for (suite, names) in suites {
+        for name in names {
+            let spec = spec_by_name(name).unwrap();
+            let a = Arc::new(generate(&spec, common::seed(), scale()));
+            let flops = 2.0 * a.nnz() as f64;
+            let vec_bytes =
+                ((a.n_cols() + a.n_rows()) * std::mem::size_of::<f64>()) as f64;
+            let x: Vec<f64> = (0..a.n_cols()).map(|i| 1.0 + (i % 9) as f64 * 0.1).collect();
+            let mut y = vec![0.0; a.n_rows()];
+            let mut fpb = [f64::NAN; 2];
+            let mut ms = [f64::NAN; 2];
+            let imps = [Implementation::EllRowInner, Implementation::SellRowInner];
+            for (k, imp) in imps.into_iter().enumerate() {
+                let bytes = match imp {
+                    Implementation::SellRowInner => {
+                        transform::crs_to_sell(&a).map(|m| m.memory_bytes())
+                    }
+                    _ => transform::crs_to_ell(&a).map(|m| m.memory_bytes()),
+                };
+                let Ok(bytes) = bytes else { continue };
+                let mut plan = SpmvPlan::build(&a, imp, None, pool.clone()).unwrap();
+                plan.execute(&x, &mut y).unwrap();
+                let secs = time_median(1, r, || {
+                    plan.execute(&x, &mut y).unwrap();
+                });
+                std::hint::black_box(&y);
+                fpb[k] = flops / (bytes as f64 + vec_bytes);
+                ms[k] = secs * 1e3;
+                json.push(Json::Obj(vec![
+                    ("kind".into(), Json::Str("flops_per_byte".into())),
+                    ("suite".into(), Json::Str(suite.into())),
+                    ("matrix".into(), Json::Str(name.into())),
+                    ("imp".into(), Json::Str(imp.name().into())),
+                    ("flops_per_byte".into(), Json::Num(fpb[k])),
+                    ("format_bytes".into(), Json::Num(bytes as f64)),
+                    ("seconds".into(), Json::Num(secs)),
+                ]));
+            }
+            t.row(vec![
+                suite.to_string(),
+                name.to_string(),
+                format!("{:.4}", fpb[0]),
+                format!("{:.4}", fpb[1]),
+                format!("{:.2}x", fpb[1] / fpb[0]),
+                format!("{:.3}", ms[0]),
+                format!("{:.3}", ms[1]),
+            ]);
+        }
+    }
+    print!("{}", t.render());
 }
 
 /// The tentpole's headline number: per-call dispatch cost of the
@@ -165,7 +237,8 @@ fn main() {
     let mut json = Vec::new();
 
     println!("\ntransformations (ms):");
-    let mut tt = Table::new(vec!["matrix", "n", "nnz", "COO-Row", "CCS", "COO-Col", "ELL", "BCSR"]);
+    let mut tt =
+        Table::new(vec!["matrix", "n", "nnz", "COO-Row", "CCS", "COO-Col", "ELL", "BCSR", "SELL"]);
     for name in PICKS {
         let spec = spec_by_name(name).unwrap();
         let a = generate(&spec, common::seed(), scale());
@@ -179,7 +252,7 @@ fn main() {
     let pool1 = Arc::new(ParPool::new(1));
     let mut kt = Table::new(vec![
         "matrix", "CRS", "CRS-Par", "COO-Col", "COO-Row", "ELL-In", "ELL-Out", "BCSR", "JDS",
-        "HYB",
+        "HYB", "SELL",
     ]);
     for name in PICKS {
         let spec = spec_by_name(name).unwrap();
@@ -190,6 +263,7 @@ fn main() {
     }
     print!("{}", kt.render());
 
+    bench_flops_per_byte(&pool1, &mut json);
     bench_pool_vs_scoped(&mut json);
     common::write_json("micro_hotpath", Json::Arr(json));
 }

@@ -43,6 +43,8 @@ pub mod switches {
     pub const JDS: u32 = 51;
     /// HYB ELL+COO (extension).
     pub const HYB: u32 = 61;
+    /// SELL-C-σ chunk-parallel (extension).
+    pub const SELL_ROW_INNER: u32 = 71;
 }
 
 /// Map a switch number to an implementation (`None` for AUTO).
@@ -59,6 +61,7 @@ pub fn switch_to_impl(switch: u32) -> Result<Option<Implementation>> {
         BCSR => Some(Implementation::BcsrSeq),
         JDS => Some(Implementation::JdsSeq),
         HYB => Some(Implementation::HybSeq),
+        SELL_ROW_INNER => Some(Implementation::SellRowInner),
         other => anyhow::bail!("unknown OpenATI_DURMV switch {other}"),
     })
 }
@@ -181,7 +184,7 @@ mod tests {
         let x: Vec<Value> = (0..30).map(|i| (i as f64).sin()).collect();
         let mut want = vec![0.0; 30];
         a.spmv(&x, &mut want);
-        for sw in [11u32, 12, 21, 22, 31, 32, 41, 51, 61, 0] {
+        for sw in [11u32, 12, 21, 22, 31, 32, 41, 51, 61, 71, 0] {
             let mut h = Durmv::new(a.clone(), tuning(Some(3.0)), MemoryPolicy::unlimited(), 2);
             let mut y = vec![0.0; 30];
             h.durmv(sw, &x, &mut y).unwrap();

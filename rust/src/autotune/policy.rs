@@ -61,6 +61,14 @@ impl MemoryPolicy {
                 let body_bw = ((m.mu * 1.5).ceil() as usize).min(m.bandwidth).max(1);
                 m.n * body_bw * (vb + ib) + m.nnz / 10 * (vb + 2 * ib)
             }
+            // SELL-C-σ: the σ-window sort removes most of ELL's padding —
+            // keep 15% of the waste as the estimate (same retention factor
+            // as the cost models) plus the perm/row_len side arrays.
+            FormatKind::Sell => {
+                let waste = m.n.saturating_mul(m.bandwidth).saturating_sub(m.nnz);
+                let slots = m.nnz + (waste as f64 * 0.15).ceil() as usize;
+                slots * (vb + ib) + m.n * 2 * ib
+            }
         }
     }
 

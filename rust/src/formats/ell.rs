@@ -74,9 +74,12 @@ impl Ell {
 
     /// Padding ratio: stored slots / logical non-zeros (1.0 = perfect band).
     /// This is the memory- and compute-waste factor the `D_mat` statistic
-    /// predicts (paper §4.5).
+    /// predicts (paper §4.5). Degenerate matrices (`n_rows == 0` or zero
+    /// stored entries — the second implies the first's 0/0 case) are
+    /// defined as exactly 1.0 so no NaN ratio can propagate into the
+    /// D_mat–R model or the learned-table buckets.
     pub fn fill_ratio(&self) -> f64 {
-        if self.logical_nnz == 0 {
+        if self.n_rows == 0 || self.logical_nnz == 0 {
             1.0
         } else {
             (self.n_rows * self.bandwidth) as f64 / self.logical_nnz as f64

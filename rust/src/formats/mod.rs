@@ -16,7 +16,9 @@
 //!   151x vector-machine speedup comes from.
 //!
 //! [`Bcsr`] (register-blocked CSR) is implemented as the paper's named
-//! future-work extension, and [`Dense`] exists as a correctness oracle.
+//! future-work extension, [`SellCSigma`] (SELL-C-σ: sliced ELL with
+//! σ-window row sorting) is the SIMD-lane growth of ELL, and [`Dense`]
+//! exists as a correctness oracle.
 
 mod bcsr;
 mod coo;
@@ -26,6 +28,7 @@ mod csc;
 mod csr;
 mod dense;
 mod ell;
+mod sell;
 
 pub use bcsr::Bcsr;
 pub use coo::{Coo, CooOrder};
@@ -35,6 +38,7 @@ pub use dense::Dense;
 pub use hyb::Hyb;
 pub use jds::Jds;
 pub use ell::Ell;
+pub use sell::{SellCSigma, MAX_C};
 
 use crate::{Index, Value};
 
@@ -59,11 +63,14 @@ pub enum FormatKind {
     /// Hybrid ELL + COO tail (extension: caps the ELL bandwidth, spills
     /// pathological rows).
     Hyb,
+    /// SELL-C-σ — sliced ELL: σ-window row sorting, per-chunk padding,
+    /// lane-width-C chunked storage (extension: the SIMD-explicit format).
+    Sell,
 }
 
 impl FormatKind {
     /// All format kinds, in a stable report order.
-    pub const ALL: [FormatKind; 8] = [
+    pub const ALL: [FormatKind; 9] = [
         FormatKind::Csr,
         FormatKind::Csc,
         FormatKind::CooRow,
@@ -72,6 +79,7 @@ impl FormatKind {
         FormatKind::Bcsr,
         FormatKind::Jds,
         FormatKind::Hyb,
+        FormatKind::Sell,
     ];
 
     /// Short, stable display name used by reports and the CLI.
@@ -85,6 +93,7 @@ impl FormatKind {
             FormatKind::Bcsr => "BCSR",
             FormatKind::Jds => "JDS",
             FormatKind::Hyb => "HYB",
+            FormatKind::Sell => "SELL",
         }
     }
 
@@ -99,6 +108,7 @@ impl FormatKind {
             "bcsr" => Some(FormatKind::Bcsr),
             "jds" => Some(FormatKind::Jds),
             "hyb" => Some(FormatKind::Hyb),
+            "sell" | "sell-c-s" | "sellcsigma" => Some(FormatKind::Sell),
             _ => None,
         }
     }

@@ -1,0 +1,386 @@
+//! SELL-C-σ storage — sliced ELL with σ-window row sorting (Kreutzer et
+//! al., the SIMD-friendly successor to ELLPACK; PAPERS.md).
+//!
+//! Rows are reordered by descending length inside windows of `σ`
+//! consecutive rows, then grouped into chunks of `C` rows. Each chunk is
+//! padded only to *its own* widest row and stored band-major within the
+//! chunk: band `k` of chunk `q` is the contiguous slice
+//! `values[chunk_off[q] + k*rows .. +rows]` (`rows` = chunk height, `C`
+//! except possibly the tail chunk). The inner SpMV loop is therefore a
+//! unit-stride lane-width-`C` sweep — the explicit vector-lane layout the
+//! `machine/vector.rs` cost model prices, realised on the host.
+//!
+//! Two properties the rest of the crate relies on:
+//!
+//! * **Bitwise row sums.** Each row's entries are stored in CSR
+//!   left-to-right order along the band axis and each output row is
+//!   accumulated by exactly one lane, so per-row results are
+//!   bitwise-identical to sequential CRS. Padding slots are *never*
+//!   accumulated (the kernels stop at [`SellCSigma::row_len`], not the
+//!   chunk width), so `-0.0`/`inf`/`NaN` in `x` cannot leak a padded
+//!   `0.0 * x[0]` into a sum.
+//! * **Row permutation at the output merge.** [`SellCSigma::perm`] maps
+//!   sorted slot → original row; kernels write `y[perm[slot]]`, so the
+//!   served vector is in original row order and the format qualifies for
+//!   `Implementation::split_stable` row-block splitting.
+
+use super::{FormatKind, SparseMatrix};
+use crate::{Index, Result, Value};
+
+/// Largest admissible chunk height `C`. Kernels keep one accumulator per
+/// lane in a fixed stack array, so `C` is capped (any realistic vector
+/// width is far below this; the env knob clamps to it).
+pub const MAX_C: usize = 256;
+
+/// SELL-C-σ sparse matrix: chunked, per-chunk padded, σ-sorted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SellCSigma {
+    n_rows: usize,
+    n_cols: usize,
+    /// Chunk height `C` — the kernel lane width (1 ≤ C ≤ [`MAX_C`]).
+    pub c: usize,
+    /// Sort window `σ`: rows are length-sorted only inside windows of
+    /// this many consecutive rows (σ = 1 ⇒ no reordering, σ ≥ n ⇒ global
+    /// sort).
+    pub sigma: usize,
+    /// Per-chunk padded width (the chunk's longest row).
+    pub chunk_width: Vec<usize>,
+    /// Per-chunk start offset into `values`/`col_idx`; chunk `q` spans
+    /// `chunk_off[q] .. chunk_off[q] + chunk_width[q] * rows(q)`.
+    pub chunk_off: Vec<usize>,
+    /// Sorted slot → original row (`perm[q*C + i]` is the matrix row lane
+    /// `i` of chunk `q` computes).
+    pub perm: Vec<Index>,
+    /// Per-sorted-slot logical row length; kernels accumulate exactly
+    /// this many bands per lane, never the padding.
+    pub row_len: Vec<Index>,
+    /// `VAL`, chunk-band-major: (chunk `q`, band `k`, lane `i`) at
+    /// `chunk_off[q] + k*rows(q) + i`. Padding slots hold `0.0`.
+    pub values: Vec<Value>,
+    /// `ICOL`, same addressing; padding slots point at column 0.
+    pub col_idx: Vec<Index>,
+    /// Stored non-zeros excluding padding.
+    logical_nnz: usize,
+}
+
+impl SellCSigma {
+    /// Build from raw parts, validating every structural invariant (the
+    /// transform builders construct these consistently; this constructor
+    /// is the single gate).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        c: usize,
+        sigma: usize,
+        chunk_width: Vec<usize>,
+        chunk_off: Vec<usize>,
+        perm: Vec<Index>,
+        row_len: Vec<Index>,
+        values: Vec<Value>,
+        col_idx: Vec<Index>,
+    ) -> Result<Self> {
+        anyhow::ensure!((1..=MAX_C).contains(&c), "chunk height C={c} outside 1..={MAX_C}");
+        anyhow::ensure!(sigma >= 1, "sort window sigma must be >= 1");
+        let n_chunks = n_rows.div_ceil(c);
+        anyhow::ensure!(
+            chunk_width.len() == n_chunks && chunk_off.len() == n_chunks,
+            "chunk arrays must have ceil(n/C) = {n_chunks} entries"
+        );
+        anyhow::ensure!(
+            perm.len() == n_rows && row_len.len() == n_rows,
+            "perm/row_len must have one entry per row"
+        );
+        let mut seen = vec![false; n_rows];
+        for &p in &perm {
+            let p = p as usize;
+            anyhow::ensure!(p < n_rows && !seen[p], "perm is not a permutation of 0..{n_rows}");
+            seen[p] = true;
+        }
+        let mut expect_off = 0usize;
+        let mut logical_nnz = 0usize;
+        for q in 0..n_chunks {
+            anyhow::ensure!(chunk_off[q] == expect_off, "chunk_off[{q}] != running span");
+            let rows = c.min(n_rows - q * c);
+            for i in 0..rows {
+                let len = row_len[q * c + i] as usize;
+                anyhow::ensure!(
+                    len <= chunk_width[q],
+                    "row_len {len} exceeds chunk_width[{q}] = {}",
+                    chunk_width[q]
+                );
+                logical_nnz += len;
+            }
+            expect_off += chunk_width[q] * rows;
+        }
+        anyhow::ensure!(
+            values.len() == expect_off && col_idx.len() == expect_off,
+            "storage length {} != padded span {expect_off}",
+            values.len()
+        );
+        for &col in &col_idx {
+            anyhow::ensure!(
+                (col as usize) < n_cols.max(1),
+                "column {col} out of bounds {n_cols}"
+            );
+        }
+        Ok(Self {
+            n_rows,
+            n_cols,
+            c,
+            sigma,
+            chunk_width,
+            chunk_off,
+            perm,
+            row_len,
+            values,
+            col_idx,
+            logical_nnz,
+        })
+    }
+
+    /// Number of chunks (`⌈n/C⌉`).
+    #[inline]
+    pub fn n_chunks(&self) -> usize {
+        self.chunk_width.len()
+    }
+
+    /// Height of chunk `q` (`C`, except a shorter tail chunk).
+    #[inline]
+    pub fn chunk_rows(&self, q: usize) -> usize {
+        self.c.min(self.n_rows - q * self.c)
+    }
+
+    /// Total padded slots actually stored (Σ width·rows over chunks).
+    #[inline]
+    pub fn padded_slots(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Padding ratio: padded slots / logical non-zeros. Defined as 1.0
+    /// for degenerate matrices (`n_rows == 0` or zero stored entries) so
+    /// no NaN can reach the D_mat–R model or the learned-table buckets.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.n_rows == 0 || self.logical_nnz == 0 {
+            1.0
+        } else {
+            self.padded_slots() as f64 / self.logical_nnz as f64
+        }
+    }
+
+    /// Number of padding (explicit zero) slots.
+    #[inline]
+    pub fn padding(&self) -> usize {
+        self.padded_slots() - self.logical_nnz
+    }
+}
+
+impl SparseMatrix for SellCSigma {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.logical_nnz
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<Value>()
+            + self.col_idx.len() * std::mem::size_of::<Index>()
+            + self.perm.len() * std::mem::size_of::<Index>()
+            + self.row_len.len() * std::mem::size_of::<Index>()
+            + (self.chunk_width.len() + self.chunk_off.len()) * std::mem::size_of::<usize>()
+    }
+
+    /// Sequential chunked SpMV: per chunk, lane accumulators sweep full
+    /// bands (`k < min_len`, every lane active — the unit-stride vector
+    /// loop) then the ragged tail with a per-lane length guard, and the
+    /// result merges through the permutation. Per-row accumulation is
+    /// left-to-right in CSR order, so the output is bitwise-identical to
+    /// [`Csr::spmv`](super::Csr).
+    fn spmv(&self, x: &[Value], y: &mut [Value]) {
+        assert_eq!(x.len(), self.n_cols, "x length");
+        assert_eq!(y.len(), self.n_rows, "y length");
+        let mut acc = [0.0 as Value; MAX_C];
+        for q in 0..self.n_chunks() {
+            let rows = self.chunk_rows(q);
+            let base = q * self.c;
+            let off = self.chunk_off[q];
+            let width = self.chunk_width[q];
+            let lens = &self.row_len[base..base + rows];
+            let min_len = lens.iter().copied().min().unwrap_or(0) as usize;
+            acc[..rows].fill(0.0);
+            for k in 0..min_len {
+                let p = off + k * rows;
+                let vals = &self.values[p..p + rows];
+                let cols = &self.col_idx[p..p + rows];
+                for i in 0..rows {
+                    acc[i] += vals[i] * x[cols[i] as usize];
+                }
+            }
+            for k in min_len..width {
+                let p = off + k * rows;
+                for i in 0..rows {
+                    if (k as Index) < lens[i] {
+                        acc[i] += self.values[p + i] * x[self.col_idx[p + i] as usize];
+                    }
+                }
+            }
+            for i in 0..rows {
+                y[self.perm[base + i] as usize] = acc[i];
+            }
+        }
+    }
+
+    fn kind(&self) -> FormatKind {
+        FormatKind::Sell
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csr;
+    use crate::transform::crs_to_sell_with;
+
+    fn sample_csr() -> Csr {
+        Csr::from_triplets(
+            5,
+            5,
+            &[
+                (0, 0, 1.0),
+                (0, 2, 2.0),
+                (0, 4, 3.0),
+                (1, 1, 4.0),
+                (2, 0, 5.0),
+                (2, 3, 6.0),
+                (4, 4, 7.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn chunk_layout_and_counts() {
+        let a = sample_csr();
+        let s = crs_to_sell_with(&a, 2, 2).unwrap();
+        assert_eq!(s.c, 2);
+        assert_eq!(s.n_chunks(), 3);
+        assert_eq!(s.chunk_rows(2), 1, "tail chunk is short");
+        assert_eq!(s.nnz(), a.nnz());
+        // Window 0 = rows {0,1} sorted desc by length -> slot order [0, 1].
+        assert_eq!(&s.perm[..2], &[0, 1]);
+        // Chunk 0 width is row 0's length.
+        assert_eq!(s.chunk_width[0], 3);
+    }
+
+    #[test]
+    fn spmv_bitwise_matches_csr() {
+        let a = sample_csr();
+        let x = [1.5, -2.0, 0.25, 3.0, -0.5];
+        let mut want = vec![0.0; 5];
+        a.spmv(&x, &mut want);
+        for (c, sigma) in [(1, 1), (2, 2), (2, 4), (4, 5), (32, 5)] {
+            let s = crs_to_sell_with(&a, c, sigma).unwrap();
+            let mut got = vec![0.0; 5];
+            s.spmv(&x, &mut got);
+            assert_eq!(got, want, "C={c} sigma={sigma}");
+        }
+    }
+
+    #[test]
+    fn fill_ratio_guards_degenerate_inputs() {
+        // Empty matrix and all-zero-row matrices report exactly 1.0 (no
+        // NaN into the D_mat-R model).
+        let empty = crs_to_sell_with(&Csr::from_triplets(0, 0, &[]).unwrap(), 4, 4).unwrap();
+        assert_eq!(empty.fill_ratio(), 1.0);
+        assert_eq!(empty.padded_slots(), 0);
+        let hollow = crs_to_sell_with(&Csr::from_triplets(7, 7, &[]).unwrap(), 4, 4).unwrap();
+        assert_eq!(hollow.fill_ratio(), 1.0);
+        assert!(hollow.fill_ratio().is_finite());
+    }
+
+    #[test]
+    fn sigma_window_reduces_padding() {
+        // Alternating long/short rows: with sigma=1 (no sort) every
+        // 2-chunk pairs a long row with a short one; sigma=4 groups the
+        // long rows together, shrinking the padded span.
+        let mut t = Vec::new();
+        for i in 0..8usize {
+            t.push((i, 0, 1.0));
+            if i % 2 == 0 {
+                for j in 1..4usize {
+                    t.push((i, j, 1.0));
+                }
+            }
+        }
+        let a = Csr::from_triplets(8, 8, &t).unwrap();
+        let unsorted = crs_to_sell_with(&a, 2, 1).unwrap();
+        let sorted = crs_to_sell_with(&a, 2, 4).unwrap();
+        assert!(sorted.padded_slots() < unsorted.padded_slots());
+        assert_eq!(sorted.nnz(), unsorted.nnz());
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        // C out of range.
+        assert!(SellCSigma::new(0, 0, 0, 1, vec![], vec![], vec![], vec![], vec![], vec![])
+            .is_err());
+        assert!(SellCSigma::new(
+            0,
+            0,
+            MAX_C + 1,
+            1,
+            vec![],
+            vec![],
+            vec![],
+            vec![],
+            vec![],
+            vec![]
+        )
+        .is_err());
+        // Not a permutation.
+        assert!(SellCSigma::new(
+            2,
+            2,
+            2,
+            1,
+            vec![1],
+            vec![0],
+            vec![0, 0],
+            vec![1, 1],
+            vec![1.0, 1.0],
+            vec![0, 0]
+        )
+        .is_err());
+        // row_len exceeding chunk width.
+        assert!(SellCSigma::new(
+            2,
+            2,
+            2,
+            1,
+            vec![1],
+            vec![0],
+            vec![0, 1],
+            vec![2, 1],
+            vec![1.0, 1.0],
+            vec![0, 0]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn memory_accounts_every_array() {
+        let s = crs_to_sell_with(&sample_csr(), 2, 2).unwrap();
+        let expect = s.values.len() * 8
+            + s.col_idx.len() * 4
+            + s.perm.len() * 4
+            + s.row_len.len() * 4
+            + (s.chunk_width.len() + s.chunk_off.len()) * std::mem::size_of::<usize>();
+        assert_eq!(s.memory_bytes(), expect);
+    }
+}

@@ -24,6 +24,7 @@
 //! into socket-routing.
 
 pub mod scalar;
+pub mod simd;
 pub mod topology;
 pub mod vector;
 
@@ -300,6 +301,15 @@ pub(crate) fn transform_bytes(m: &MatrixShape, target: FormatKind) -> f64 {
         FormatKind::Hyb => {
             let body_slots = n * (m.mu * 1.5).ceil().min(m.bandwidth as f64);
             1.5 * read_crs + 1.5 * body_slots * (vb + ib) + 0.1 * nnz * (vb + 2.0 * ib)
+        }
+        // SELL-C-σ: σ-window length sort (row-length pass) + scatter into
+        // per-chunk-padded slots. The sort shrinks padding towards zero,
+        // so the slot estimate keeps only a fraction of ELL's waste (the
+        // memory policy uses the same retention factor), plus the
+        // perm/row_len side arrays.
+        FormatKind::Sell => {
+            let slots = nnz * (1.0 + 0.15 * (m.fill_ratio - 1.0).max(0.0));
+            1.5 * read_crs + 1.5 * slots * (vb + ib) + n * 2.0 * ib
         }
     }
 }

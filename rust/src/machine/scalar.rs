@@ -193,6 +193,16 @@ impl CostModel for ScalarMachine {
                 let bytes = nnz * 12.0 + n * 28.0;
                 self.roofline(cycles, bytes, 1)
             }
+            Implementation::SellRowInner => {
+                // Extension: ELL's branch-free band sweep, but the σ-sort
+                // removes ~85% of the padding (slots shrink towards nnz);
+                // the price is a permuted y store plus per-chunk tail
+                // bookkeeping, a few extra cycles per row.
+                let sell_slots = nnz * (1.0 + 0.15 * (m.fill_ratio - 1.0).max(0.0));
+                let cycles = (sell_slots * (self.p.ell_elem + gp) + n * 4.0) / self.par(t);
+                let bytes = sell_slots * 12.0 + n * 24.0;
+                self.roofline(cycles, bytes, t) + fork
+            }
             Implementation::HybSeq => {
                 // Extension: ELL body at ~1.5μ bandwidth + COO tail.
                 let body_slots = n * (m.mu * 1.5).ceil().min(m.bandwidth as f64).max(1.0);
@@ -223,6 +233,9 @@ impl CostModel for ScalarMachine {
             FormatKind::Bcsr => (self.p.mem_bw_1t * 0.35, m.nnz as f64 * 6.0),
             FormatKind::Jds => (self.p.mem_bw_1t * 0.5, m.nnz as f64 * 3.0),
             FormatKind::Hyb => (self.p.mem_bw_1t * 0.5, m.nnz as f64 * 2.5),
+            // SELL-C-σ: σ-window sort (cheap, window-local) + scatter into
+            // chunk-padded slots — close to JDS's sort-and-gather profile.
+            FormatKind::Sell => (self.p.mem_bw_1t * 0.55, m.nnz as f64 * 2.5),
         };
         bytes / eff_bw + extra_cycles / self.p.clock_hz
     }

@@ -1,0 +1,72 @@
+//! Host SIMD capability detection for the SELL-C-σ kernel layer.
+//!
+//! SELL-C-σ's chunk height C is a *storage* parameter: picking C equal to
+//! (a small multiple of) the hardware vector width keeps every full band
+//! a whole number of vector registers. This module answers "what is that
+//! width here?" so `docs/TUNING.md`'s C guidance and the benches can
+//! report it, and exposes whether the crate was built with the `simd`
+//! cargo feature (which swaps the SELL band loop for explicitly unrolled
+//! lane blocks; see `spmv::sell_row_inner_on`).
+//!
+//! Everything here is stable Rust: detection uses
+//! `is_x86_feature_detected!` where available and falls back to scalar
+//! (1 lane) elsewhere. No nightly `std::simd` is required — on targets
+//! without detection the unrolled loops still compile and simply rely on
+//! autovectorization.
+
+/// Whether the `simd` cargo feature (explicitly unrolled SELL band
+/// loops) is compiled in.
+pub fn simd_enabled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// Best-effort f64 lanes per vector register on the host CPU: 8 under
+/// AVX-512, 4 under AVX2, 2 under SSE2, 1 when nothing is detectable.
+/// Chunk heights that are a multiple of this (the
+/// `crate::transform::DEFAULT_SELL_C` default of 8 covers all of them)
+/// keep SELL's full bands register-aligned.
+pub fn simd_lanes() -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            8
+        } else if std::arch::is_x86_feature_detected!("avx2") {
+            4
+        } else if std::arch::is_x86_feature_detected!("sse2") {
+            2
+        } else {
+            1
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is baseline on aarch64: 128-bit registers, 2 × f64.
+        2
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_is_a_sane_power_of_two() {
+        let l = simd_lanes();
+        assert!(l.is_power_of_two(), "{l}");
+        assert!(l <= 8, "{l}");
+    }
+
+    #[test]
+    fn default_sell_c_is_lane_aligned() {
+        assert_eq!(crate::transform::DEFAULT_SELL_C % simd_lanes(), 0);
+    }
+
+    #[test]
+    fn feature_flag_is_consistent() {
+        assert_eq!(simd_enabled(), cfg!(feature = "simd"));
+    }
+}

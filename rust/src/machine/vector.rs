@@ -177,6 +177,20 @@ impl CostModel for VectorMachine {
                     + n_diags * self.strips(m.n) * self.p.vec_startup / 2.0
                     + n * (self.p.gather + self.p.stream)
             }
+            Implementation::SellRowInner => {
+                // Extension: like Fig. 3 but the σ-sort shrinks the padded
+                // slot count towards nnz (85% of ELL's waste removed — the
+                // transform_bytes estimate), chunk bands sweep at
+                // gather-FMA speed with one strip-startup per 256 slots
+                // (C is chosen ≤ the vector length), and the finished
+                // rows scatter back through the permutation conflict-free
+                // (gather-speed, like JDS's final permutation).
+                let slots = nnz * (1.0 + 0.15 * (m.fill_ratio - 1.0).max(0.0));
+                let sweep = slots * (self.p.gather + self.p.stream)
+                    + self.strips(slots.ceil() as usize) * self.p.vec_startup;
+                let perm = n * (self.p.gather + self.p.stream);
+                (sweep + perm) / self.par(t) + if t > 1 { self.p.fork } else { 0.0 }
+            }
             Implementation::HybSeq => {
                 // Extension: ELL body at ~1.5μ bandwidth + COO spill tail
                 // through the list-vector scatter (~10% of nnz worst case).
@@ -212,6 +226,8 @@ impl CostModel for VectorMachine {
             FormatKind::Bcsr => 4.0,
             FormatKind::Jds => 3.0,
             FormatKind::Hyb => 3.0,
+            // SELL-C-σ: length pass + σ-window sort + scatter + pad pass.
+            FormatKind::Sell => 4.0,
         };
         (bytes / self.p.mem_bw) + passes * self.strips(m.n) * self.p.vec_startup / self.p.clock_hz
     }

@@ -12,10 +12,12 @@
 
 use super::pool::{self, ParPool};
 use super::Workspace;
-use crate::formats::{Bcsr, Coo, CooOrder, Csc, Csr, Ell, FormatKind, Hyb, Jds, SparseMatrix};
+use crate::formats::{
+    Bcsr, Coo, CooOrder, Csc, Csr, Ell, FormatKind, Hyb, Jds, SellCSigma, SparseMatrix,
+};
 use crate::spmv::partition::{split_by_nnz, split_even};
 use crate::transform;
-use crate::{Result, Value};
+use crate::{Index, Result, Value};
 use std::ops::Range;
 use std::sync::Arc;
 
@@ -40,11 +42,14 @@ pub enum Implementation {
     JdsSeq,
     /// HYB body+tail (extension; sequential).
     HybSeq,
+    /// SELL-C-σ chunk-parallel kernel (extension): lane-width-C chunks,
+    /// σ-window sorted rows, output merged through the row permutation.
+    SellRowInner,
 }
 
 impl Implementation {
     /// Every implementation, in the order the paper's figures report them.
-    pub const ALL: [Implementation; 9] = [
+    pub const ALL: [Implementation; 10] = [
         Implementation::CsrSeq,
         Implementation::CsrRowPar,
         Implementation::CooColOuter,
@@ -54,6 +59,7 @@ impl Implementation {
         Implementation::BcsrSeq,
         Implementation::JdsSeq,
         Implementation::HybSeq,
+        Implementation::SellRowInner,
     ];
 
     /// The candidates the paper's AT method chooses between at run time
@@ -77,6 +83,7 @@ impl Implementation {
             Implementation::BcsrSeq => "BCSR",
             Implementation::JdsSeq => "JDS",
             Implementation::HybSeq => "HYB",
+            Implementation::SellRowInner => "SELL-Row Inner",
         }
     }
 
@@ -99,6 +106,7 @@ impl Implementation {
             "bcsr" | "bcsrseq" => Implementation::BcsrSeq,
             "jds" | "jdsseq" => Implementation::JdsSeq,
             "hyb" | "hybseq" => Implementation::HybSeq,
+            "sellrowinner" | "sellinner" | "sellcsigma" | "sell" => Implementation::SellRowInner,
             _ => return None,
         })
     }
@@ -113,6 +121,7 @@ impl Implementation {
             Implementation::BcsrSeq => FormatKind::Bcsr,
             Implementation::JdsSeq => FormatKind::Jds,
             Implementation::HybSeq => FormatKind::Hyb,
+            Implementation::SellRowInner => FormatKind::Sell,
         }
     }
 
@@ -129,7 +138,9 @@ impl Implementation {
     /// supports); the COO column-major kernels reorder entries *across*
     /// rows of the whole matrix and are not split-stable, and the
     /// sequential extension formats (BCSR/JDS/HYB) resequence rows or
-    /// entries globally too.
+    /// entries globally too. SELL-C-σ *permutes* rows but accumulates
+    /// each one in unchanged CSR entry order and scatters it back through
+    /// the permutation, so a row split stays bitwise-identical.
     pub fn split_stable(self) -> bool {
         matches!(
             self,
@@ -137,6 +148,7 @@ impl Implementation {
                 | Implementation::CsrRowPar
                 | Implementation::EllRowInner
                 | Implementation::EllRowOuter
+                | Implementation::SellRowInner
         )
     }
 }
@@ -168,6 +180,8 @@ pub enum AnyMatrix {
     Jds(Jds),
     /// HYB.
     Hyb(Hyb),
+    /// SELL-C-σ.
+    Sell(SellCSigma),
 }
 
 impl AnyMatrix {
@@ -185,6 +199,7 @@ impl AnyMatrix {
             FormatKind::Bcsr => AnyMatrix::Bcsr(transform::crs_to_bcsr(a, 2, 2)?),
             FormatKind::Jds => AnyMatrix::Jds(transform::crs_to_jds(a)),
             FormatKind::Hyb => AnyMatrix::Hyb(transform::crs_to_hyb(a)?),
+            FormatKind::Sell => AnyMatrix::Sell(transform::crs_to_sell_bounded(a, max_bytes)?),
         })
     }
 
@@ -239,6 +254,9 @@ impl AnyMatrix {
             FormatKind::Bcsr => AnyMatrix::Bcsr(transform::crs_to_bcsr(a, 2, 2)?),
             FormatKind::Jds => AnyMatrix::Jds(transform::crs_to_jds(a)),
             FormatKind::Hyb => AnyMatrix::Hyb(transform::crs_to_hyb(a)?),
+            FormatKind::Sell => {
+                AnyMatrix::Sell(transform::par::crs_to_sell_bounded_on(a, max_bytes, pool)?)
+            }
         })
     }
 
@@ -258,6 +276,7 @@ impl AnyMatrix {
             AnyMatrix::Csc(m) => (&m.values, Some(&m.row_idx)),
             AnyMatrix::Coo(m) => (&m.values, Some(&m.col_idx)),
             AnyMatrix::Ell(m) => (&m.values, Some(&m.col_idx)),
+            AnyMatrix::Sell(m) => (&m.values, Some(&m.col_idx)),
             AnyMatrix::Bcsr(_) | AnyMatrix::Jds(_) | AnyMatrix::Hyb(_) => (&[], None),
         };
         let ranges = split_even(vals.len(), pool.size());
@@ -286,6 +305,7 @@ impl AnyMatrix {
             AnyMatrix::Bcsr(m) => m,
             AnyMatrix::Jds(m) => m,
             AnyMatrix::Hyb(m) => m,
+            AnyMatrix::Sell(m) => m,
         }
     }
 
@@ -302,9 +322,12 @@ impl AnyMatrix {
 
 /// Compute the work partition `imp` wants over `m` at `n_chunks`-way
 /// parallelism: nnz-balanced row ranges for row-parallel CRS, even entry
-/// ranges for the COO outer kernels, even row ranges for ELL-inner and
-/// band ranges (capped at the bandwidth) for ELL-outer. Sequential
-/// implementations get an empty partition. A [`super::plan::SpmvPlan`]
+/// ranges for the COO outer kernels, even row ranges for ELL-inner, band
+/// ranges (capped at the bandwidth) for ELL-outer and even **chunk**
+/// ranges for SELL (a chunk owns a contiguous storage span and C output
+/// rows, so chunk granularity is both false-sharing-free and
+/// load-balanced after the σ sort). Sequential implementations get an
+/// empty partition. A [`super::plan::SpmvPlan`]
 /// computes this once and replays it every call.
 pub fn partition_for(imp: Implementation, m: &AnyMatrix, n_chunks: usize) -> Vec<Range<usize>> {
     match (imp, m) {
@@ -314,6 +337,7 @@ pub fn partition_for(imp: Implementation, m: &AnyMatrix, n_chunks: usize) -> Vec
         }
         (Implementation::EllRowInner, AnyMatrix::Ell(e)) => split_even(e.n_rows(), n_chunks),
         (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => split_even(e.bandwidth, n_chunks),
+        (Implementation::SellRowInner, AnyMatrix::Sell(s)) => split_even(s.n_chunks(), n_chunks),
         _ => Vec::new(),
     }
 }
@@ -349,6 +373,9 @@ pub fn run_on(
         (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => {
             super::ell_row_outer_on(e, x, y, pool, ranges, ws)
         }
+        (Implementation::SellRowInner, AnyMatrix::Sell(s)) => {
+            super::sell_row_inner_on(s, x, y, pool, ranges)
+        }
         (Implementation::BcsrSeq, AnyMatrix::Bcsr(b)) => b.spmv(x, y),
         (Implementation::JdsSeq, AnyMatrix::Jds(j)) => {
             let yp = ws.yy(j.n_rows(), 1);
@@ -369,7 +396,8 @@ pub fn run_on(
 /// entire tile through the blocked SpMM kernels
 /// ([`super::csr_seq_many`], [`super::csr_row_par_many_on`],
 /// [`super::coo_col_outer_many_on`], [`super::coo_row_outer_many_on`],
-/// [`super::ell_row_inner_many_on`], [`super::ell_row_outer_many_on`]).
+/// [`super::ell_row_inner_many_on`], [`super::ell_row_outer_many_on`],
+/// [`super::sell_row_inner_many_on`]).
 /// The sequential extension formats (BCSR/JDS/HYB) have no blocked kernel
 /// and degrade to one [`run_on`] per right-hand side.
 ///
@@ -413,6 +441,9 @@ pub fn run_many_on(
         }
         (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => {
             super::ell_row_outer_many_on(e, xs, ys, pool, ranges, ws)
+        }
+        (Implementation::SellRowInner, AnyMatrix::Sell(s)) => {
+            super::sell_row_inner_many_on(s, xs, ys, pool, ranges)
         }
         // No blocked kernel: stream the matrix once per right-hand side.
         _ => {

@@ -11,6 +11,7 @@
 //! | Fig. 3 | [`ell_row_inner`] | parallel `N`-loop inside the band loop, no reduction |
 //! | Fig. 4 | [`ell_row_outer`] | band range split per chunk, private `YY`, tree reduction |
 //! | switch 11 | [`csr_seq`] / [`csr_row_par`] | OpenATLib CRS baseline (+ row-parallel variant) |
+//! | extension | [`sell_row_inner`] | SELL-C-σ chunk ranges, lane-width-C bands, no reduction |
 //!
 //! Two layers sit underneath and above these kernels:
 //!
@@ -52,8 +53,8 @@ pub use kernels::{AnyMatrix, Implementation};
 pub use plan::{Planner, SpmvPlan};
 pub use pool::ParPool;
 
-use crate::formats::{Coo, CooOrder, Csr, Ell, SparseMatrix};
-use crate::Value;
+use crate::formats::{Coo, CooOrder, Csr, Ell, SellCSigma, SparseMatrix, MAX_C};
+use crate::{Index, Value};
 use partition::{split_by_nnz, split_even};
 use pool::SendPtr;
 use std::ops::Range;
@@ -309,6 +310,117 @@ pub fn ell_row_outer_on(
 pub fn ell_row_outer(e: &Ell, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
     let ranges = split_even(e.bandwidth, n_threads); // capped at NE chunks
     ell_row_outer_on(e, x, y, &pool::global(), &ranges, ws);
+}
+
+/// Accumulate one **full** SELL band (`rows` active lanes, every lane
+/// populated) into the per-lane accumulators: `acc[i] += vals[i] *
+/// x[cols[i]]`. The band is a contiguous unit-stride slice, which is what
+/// makes this loop the format's vector payoff.
+///
+/// With the `simd` cargo feature the lane loop is unrolled into explicit
+/// 4-wide blocks — the shape the compiler turns into packed
+/// mul-add/gather sequences on stable Rust (no nightly `std::simd`
+/// needed). Per-lane sums are independent and each lane still sees its
+/// bands in ascending-`k` order, so both paths are bitwise-identical.
+#[inline]
+fn sell_band_accumulate(acc: &mut [Value], vals: &[Value], cols: &[Index], x: &[Value]) {
+    debug_assert_eq!(acc.len(), vals.len());
+    debug_assert_eq!(acc.len(), cols.len());
+    #[cfg(feature = "simd")]
+    {
+        let rows = acc.len();
+        let mut i = 0usize;
+        while i + 4 <= rows {
+            acc[i] += vals[i] * x[cols[i] as usize];
+            acc[i + 1] += vals[i + 1] * x[cols[i + 1] as usize];
+            acc[i + 2] += vals[i + 2] * x[cols[i + 2] as usize];
+            acc[i + 3] += vals[i + 3] * x[cols[i + 3] as usize];
+            i += 4;
+        }
+        while i < rows {
+            acc[i] += vals[i] * x[cols[i] as usize];
+            i += 1;
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    for i in 0..acc.len() {
+        acc[i] += vals[i] * x[cols[i] as usize];
+    }
+}
+
+/// Compute chunk `q` of a SELL-C-σ operator into the stack accumulators
+/// `acc[..rows]`: full bands first (`k < min_len`, every lane active — the
+/// unit-stride [`sell_band_accumulate`] fast path), then the ragged tail
+/// with a per-lane length guard. Padding slots are **never** accumulated
+/// (the guard stops at the stored logical row length), so each sorted
+/// row's sum is exactly its CSR left-to-right sum — bitwise, even when
+/// `x` holds `-0.0`/`inf`/`NaN` that a `0.0 * x[pad]` term would perturb.
+/// Returns the number of active lanes.
+#[inline]
+fn sell_chunk_into(s: &SellCSigma, x: &[Value], q: usize, acc: &mut [Value; MAX_C]) -> usize {
+    let rows = s.chunk_rows(q);
+    let base = q * s.c;
+    let off = s.chunk_off[q];
+    let width = s.chunk_width[q];
+    let lens = &s.row_len[base..base + rows];
+    let min_len = lens.iter().copied().min().unwrap_or(0) as usize;
+    acc[..rows].fill(0.0);
+    for k in 0..min_len {
+        let p = off + k * rows;
+        sell_band_accumulate(&mut acc[..rows], &s.values[p..p + rows], &s.col_idx[p..p + rows], x);
+    }
+    for k in min_len..width {
+        let p = off + k * rows;
+        let vals = &s.values[p..p + rows];
+        let cols = &s.col_idx[p..p + rows];
+        for i in 0..rows {
+            if (k as Index) < lens[i] {
+                acc[i] += vals[i] * x[cols[i] as usize];
+            }
+        }
+    }
+    rows
+}
+
+/// SELL-C-σ chunk-parallel SpMV (extension) over precomputed **chunk**
+/// ranges: each worker owns a contiguous run of C-row chunks, keeps the
+/// C partial sums in stack registers and scatters the finished chunk
+/// through the row permutation. Like Fig. 3 there is no reduction — the
+/// permutation is a bijection, so every output row has exactly one
+/// writer — but unlike ELL the bands are only C lanes tall and padded to
+/// the *chunk* width, so the σ-window sort keeps the wasted lanes near
+/// zero on irregular row-length distributions.
+pub fn sell_row_inner_on(
+    s: &SellCSigma,
+    x: &[Value],
+    y: &mut [Value],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+) {
+    assert_eq!(x.len(), s.n_cols(), "x length");
+    assert_eq!(y.len(), s.n_rows(), "y length");
+    if ranges.len() <= 1 {
+        return s.spmv(x, y);
+    }
+    let yp = SendPtr(y.as_mut_ptr());
+    pool.run_chunks(ranges, |_tid, qs| {
+        let mut acc = [0.0 as Value; MAX_C];
+        for q in qs {
+            let rows = sell_chunk_into(s, x, q, &mut acc);
+            let base = q * s.c;
+            for i in 0..rows {
+                // perm is a bijection and each sorted slot belongs to
+                // exactly one chunk: y[perm[...]] has exactly one writer.
+                unsafe { *yp.get().add(s.perm[base + i] as usize) = acc[i] };
+            }
+        }
+    });
+}
+
+/// SELL-C-σ compatibility wrapper (global pool, on-the-fly partition).
+pub fn sell_row_inner(s: &SellCSigma, x: &[Value], y: &mut [Value], n_threads: usize) {
+    let ranges = split_even(s.n_chunks(), n_threads);
+    sell_row_inner_on(s, x, y, &pool::global(), &ranges);
 }
 
 // ---- Blocked multi-RHS (SpMM) kernels ----
@@ -587,12 +699,47 @@ pub fn ell_row_outer_many_on(
     reduce_yy_tree_many(pool, yy, ys, n, b, k);
 }
 
+/// SELL-C-σ, blocked: each worker walks its chunk range once per
+/// right-hand side. A chunk (C lanes × chunk width) is small enough to
+/// stay cache-resident across the tile, so DRAM sees roughly one matrix
+/// stream per tile even though the walk is per-RHS; keeping the per-RHS
+/// walk identical to [`sell_row_inner_on`] preserves the bitwise
+/// contract of [`kernels::run_many_on`] for free.
+pub fn sell_row_inner_many_on(
+    s: &SellCSigma,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    ranges: &[Range<usize>],
+) {
+    assert_tile(xs, ys, s.n_cols(), s.n_rows());
+    if ranges.len() <= 1 {
+        for (y, x) in ys.iter_mut().zip(xs) {
+            s.spmv(x, y);
+        }
+        return;
+    }
+    let yps: Vec<SendPtr<Value>> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
+    pool.run_chunks(ranges, |_tid, qs| {
+        let mut acc = [0.0 as Value; MAX_C];
+        for q in qs {
+            let base = q * s.c;
+            for (yp, x) in yps.iter().zip(xs) {
+                let rows = sell_chunk_into(s, x, q, &mut acc);
+                for i in 0..rows {
+                    unsafe { *yp.get().add(s.perm[base + i] as usize) = acc[i] };
+                }
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::matrixgen::random_csr;
     use crate::rng::Rng;
-    use crate::transform::{crs_to_coo_col, crs_to_coo_row, crs_to_ell};
+    use crate::transform::{crs_to_coo_col, crs_to_coo_row, crs_to_ell, crs_to_sell_with};
 
     fn assert_close(a: &[Value], b: &[Value]) {
         assert_eq!(a.len(), b.len());
@@ -637,6 +784,13 @@ mod tests {
                 assert_close(&y, &want);
                 ell_row_outer(&ell, &x, &mut y, t, &mut ws);
                 assert_close(&y, &want);
+                for (c, sigma) in [(1, 1), (4, 8), (32, a.n_rows().max(1))] {
+                    let sell = crs_to_sell_with(&a, c, sigma).unwrap();
+                    sell_row_inner(&sell, &x, &mut y, t);
+                    // SELL never touches padding and keeps per-row CSR
+                    // order, so it is *bitwise* equal to the baseline.
+                    assert_eq!(y, want, "sell C={c} sigma={sigma} t={t}");
+                }
             }
         }
     }
@@ -665,6 +819,10 @@ mod tests {
         let coo_r = crs_to_coo_row(&a);
         coo_row_outer_on(&coo_r, &x, &mut y, &pool, &split_even(coo_r.nnz(), 5), &mut ws);
         assert_close(&y, &want);
+
+        let sell = crs_to_sell_with(&a, 8, 32).unwrap();
+        sell_row_inner_on(&sell, &x, &mut y, &pool, &split_even(sell.n_chunks(), 5));
+        assert_eq!(y, want, "sell_row_inner_on is bitwise");
     }
 
     #[test]
@@ -795,6 +953,16 @@ mod tests {
                 got,
                 run_single(&mut |x, y| coo_col_outer_on(&coo_c, x, y, &pool, &r_coo, &mut ws)),
                 "coo_col_outer_many_on"
+            );
+
+            let sell = crs_to_sell_with(&a, 4, 8).unwrap();
+            let r_sell = split_even(sell.n_chunks(), 3);
+            let got =
+                run_many(&mut |xs, ys| sell_row_inner_many_on(&sell, xs, ys, &pool, &r_sell));
+            assert_eq!(
+                got,
+                run_single(&mut |x, y| sell_row_inner_on(&sell, x, y, &pool, &r_sell)),
+                "sell_row_inner_many_on"
             );
         }
     }

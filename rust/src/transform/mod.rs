@@ -20,9 +20,9 @@ pub mod par;
 
 mod roundtrip;
 
-pub use roundtrip::{coo_to_crs, csc_to_crs, ell_to_crs};
+pub use roundtrip::{coo_to_crs, csc_to_crs, ell_to_crs, sell_to_crs};
 
-use crate::formats::{Coo, CooOrder, Csc, Csr, Ell, SparseMatrix};
+use crate::formats::{Coo, CooOrder, Csc, Csr, Ell, SellCSigma, SparseMatrix, MAX_C};
 use crate::{Index, Result, Value};
 
 /// CRS → COO-Row: copy `VAL`/`ICOL`, expand the row pointers into `IROW`.
@@ -147,6 +147,140 @@ pub fn crs_to_ell(a: &Csr) -> Result<Ell> {
     crs_to_ell_bounded(a, None)
 }
 
+/// Default SELL chunk height `C` when `SPMV_AT_SELL_C` is unset: two
+/// AVX-512 / four AVX2 double lanes — wide enough to feed any current
+/// host vector unit, short enough that the ragged tail stays small.
+pub const DEFAULT_SELL_C: usize = 8;
+
+/// SELL chunk height: `SPMV_AT_SELL_C` (clamped to `1..=MAX_C`), else
+/// [`DEFAULT_SELL_C`]. The single truth function for the env knob.
+pub fn configured_sell_c() -> usize {
+    std::env::var("SPMV_AT_SELL_C")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|c| c.clamp(1, MAX_C))
+        .unwrap_or(DEFAULT_SELL_C)
+}
+
+/// SELL sort window: `SPMV_AT_SELL_SIGMA` (≥ 1), else `4·C` — large
+/// enough to group similar-length rows across a few chunks, small enough
+/// that the permutation stays cache-local. The single truth function for
+/// the env knob.
+pub fn configured_sell_sigma(c: usize) -> usize {
+    std::env::var("SPMV_AT_SELL_SIGMA")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&s| s >= 1)
+        .unwrap_or(4 * c.max(1))
+}
+
+/// The σ-sorted SELL-C-σ layout (permutation, per-chunk widths/offsets)
+/// plus the byte-budget check, shared by the sequential and parallel
+/// builders so both enforce the same policy (mirrors [`ell_checked_slots`]).
+pub(crate) struct SellLayout {
+    pub c: usize,
+    pub sigma: usize,
+    pub perm: Vec<Index>,
+    pub row_len: Vec<Index>,
+    pub chunk_width: Vec<usize>,
+    pub chunk_off: Vec<usize>,
+    /// Total padded slots (Σ width·rows).
+    pub slots: usize,
+}
+
+pub(crate) fn sell_layout(
+    a: &Csr,
+    c: usize,
+    sigma: usize,
+    max_bytes: Option<usize>,
+) -> Result<SellLayout> {
+    anyhow::ensure!((1..=MAX_C).contains(&c), "SELL chunk height C={c} outside 1..={MAX_C}");
+    anyhow::ensure!(sigma >= 1, "SELL sort window sigma must be >= 1");
+    let n = a.n_rows();
+    // σ-window descending length sort; stable, so equal-length rows keep
+    // their original order (deterministic layout).
+    let mut perm: Vec<Index> = (0..n as Index).collect();
+    for w in perm.chunks_mut(sigma) {
+        w.sort_by_key(|&r| std::cmp::Reverse(a.row_len(r as usize)));
+    }
+    let row_len: Vec<Index> = perm.iter().map(|&r| a.row_len(r as usize) as Index).collect();
+    let n_chunks = n.div_ceil(c);
+    let mut chunk_width = vec![0usize; n_chunks];
+    let mut chunk_off = vec![0usize; n_chunks];
+    let mut slots = 0usize;
+    for q in 0..n_chunks {
+        let rows = c.min(n - q * c);
+        let width =
+            row_len[q * c..q * c + rows].iter().map(|&l| l as usize).max().unwrap_or(0);
+        chunk_width[q] = width;
+        chunk_off[q] = slots;
+        slots = width
+            .checked_mul(rows)
+            .and_then(|s| slots.checked_add(s))
+            .ok_or_else(|| anyhow::anyhow!("SELL size overflow"))?;
+    }
+    let bytes = slots * (std::mem::size_of::<Value>() + std::mem::size_of::<Index>())
+        + n * 2 * std::mem::size_of::<Index>();
+    if let Some(cap) = max_bytes {
+        anyhow::ensure!(
+            bytes <= cap,
+            "SELL storage {bytes} B exceeds memory budget {cap} B (n={n}, C={c}, sigma={sigma})"
+        );
+    }
+    Ok(SellLayout { c, sigma, perm, row_len, chunk_width, chunk_off, slots })
+}
+
+/// CRS → SELL-C-σ with explicit parameters (no byte budget). The
+/// parameterised entry point property tests use so they never touch
+/// process environment.
+pub fn crs_to_sell_with(a: &Csr, c: usize, sigma: usize) -> Result<SellCSigma> {
+    crs_to_sell_impl(a, c, sigma, None)
+}
+
+/// CRS → SELL-C-σ with `C`/`σ` from `SPMV_AT_SELL_C`/`SPMV_AT_SELL_SIGMA`
+/// (see [`configured_sell_c`]/[`configured_sell_sigma`]), enforcing the
+/// optional byte budget like the ELL builder.
+pub fn crs_to_sell_bounded(a: &Csr, max_bytes: Option<usize>) -> Result<SellCSigma> {
+    let c = configured_sell_c();
+    crs_to_sell_impl(a, c, configured_sell_sigma(c), max_bytes)
+}
+
+/// CRS → SELL-C-σ without a memory budget (env-configured `C`/`σ`).
+pub fn crs_to_sell(a: &Csr) -> Result<SellCSigma> {
+    crs_to_sell_bounded(a, None)
+}
+
+fn crs_to_sell_impl(a: &Csr, c: usize, sigma: usize, max_bytes: Option<usize>) -> Result<SellCSigma> {
+    let l = sell_layout(a, c, sigma, max_bytes)?;
+    let n = a.n_rows();
+    let mut values = vec![0.0 as Value; l.slots];
+    let mut col_idx = vec![0 as Index; l.slots];
+    for q in 0..l.chunk_width.len() {
+        let rows = c.min(n - q * c);
+        let off = l.chunk_off[q];
+        for i in 0..rows {
+            let r = l.perm[q * c + i] as usize;
+            for (k, (col, v)) in a.row(r).enumerate() {
+                // Chunk-band-major: lane-contiguous within each band.
+                values[off + k * rows + i] = v;
+                col_idx[off + k * rows + i] = col;
+            }
+        }
+    }
+    SellCSigma::new(
+        n,
+        a.n_cols(),
+        l.c,
+        l.sigma,
+        l.chunk_width,
+        l.chunk_off,
+        l.perm,
+        l.row_len,
+        values,
+        col_idx,
+    )
+}
+
 /// CRS → BCSR with `br × bc` blocks (paper §5 future work).
 pub fn crs_to_bcsr(a: &Csr, br: usize, bc: usize) -> Result<crate::formats::Bcsr> {
     crate::formats::Bcsr::from_csr(a, br, bc)
@@ -180,6 +314,7 @@ pub fn transform_to(
         Bcsr => Box::new(crs_to_bcsr(a, 2, 2)?),
         Jds => Box::new(crs_to_jds(a)),
         Hyb => Box::new(crs_to_hyb(a)?),
+        Sell => Box::new(crs_to_sell_bounded(a, max_bytes)?),
     })
 }
 
@@ -263,6 +398,22 @@ mod tests {
         // nz = 100, slots = 10_000 -> 120 KB; budget of 1 KB must fail.
         assert!(crs_to_ell_bounded(&a, Some(1024)).is_err());
         assert!(crs_to_ell_bounded(&a, None).is_ok());
+    }
+
+    #[test]
+    fn sell_bounded_rejects_oversized() {
+        // The same pathological shape the ELL budget test uses; SELL's
+        // per-chunk padding shrinks the span but a 100-entry row still
+        // blows a 1 KB budget.
+        let mut t: Vec<(usize, usize, Value)> = (0..100).map(|j| (0, j, 1.0)).collect();
+        t.extend((1..100).map(|i| (i, i, 1.0)));
+        let a = Csr::from_triplets(100, 100, &t).unwrap();
+        assert!(sell_layout(&a, 8, 32, Some(1024)).is_err());
+        assert!(crs_to_sell_bounded(&a, None).is_ok());
+        // SELL pads each chunk only to its own widest row, so the padded
+        // span must be strictly below ELL's n*nz for this shape.
+        let s = crs_to_sell_with(&a, 8, 32).unwrap();
+        assert!(s.padded_slots() < ell_checked_slots(&a, None).unwrap());
     }
 
     #[test]

@@ -18,10 +18,89 @@
 //! them (the NUMA layer's core mechanism; see
 //! [`crate::machine::topology`]).
 
-use crate::formats::{Coo, CooOrder, Csc, Csr, Ell, SparseMatrix};
+use crate::formats::{Coo, CooOrder, Csc, Csr, Ell, SellCSigma, SparseMatrix};
 use crate::spmv::partition::split_even;
 use crate::spmv::pool::{self, ParPool, SendPtr};
 use crate::{Index, Result, Value};
+
+/// Parallel CRS → SELL-C-σ on `pool` with a storage bound and the env
+/// `C`/`σ` knobs (the same [`super::sell_layout`] policy the sequential
+/// builder enforces). The σ-sorted layout (permutation, widths, offsets)
+/// is computed serially — an O(n) pass plus window sorts — then the
+/// padded scatter fans out over *chunk* ranges via `run_init`: each range
+/// owns the disjoint storage span `chunk_off[lo]..chunk_off[hi]`, so the
+/// freshly written pages are first-touched on the pinned pool's socket.
+pub fn crs_to_sell_bounded_on(
+    a: &Csr,
+    max_bytes: Option<usize>,
+    pool: &ParPool,
+) -> Result<SellCSigma> {
+    let c = super::configured_sell_c();
+    crs_to_sell_chunked(a, c, super::configured_sell_sigma(c), max_bytes, pool, pool.size())
+}
+
+/// Parallel CRS → SELL-C-σ with explicit parameters (no byte budget).
+pub fn crs_to_sell_with_on(a: &Csr, c: usize, sigma: usize, pool: &ParPool) -> Result<SellCSigma> {
+    crs_to_sell_chunked(a, c, sigma, None, pool, pool.size())
+}
+
+fn crs_to_sell_chunked(
+    a: &Csr,
+    c: usize,
+    sigma: usize,
+    max_bytes: Option<usize>,
+    pool: &ParPool,
+    n_splits: usize,
+) -> Result<SellCSigma> {
+    let l = super::sell_layout(a, c, sigma, max_bytes)?;
+    let n = a.n_rows();
+    let n_chunks = l.chunk_width.len();
+    let mut values = vec![0.0 as Value; l.slots];
+    let mut col_idx = vec![0 as Index; l.slots];
+    let ranges = split_even(n_chunks, n_splits);
+    let vp = SendPtr(values.as_mut_ptr());
+    let cp = SendPtr(col_idx.as_mut_ptr());
+    let lr = &l;
+    pool.run_init(&ranges, |_tid, r| {
+        for q in r {
+            let rows = c.min(n - q * c);
+            let off = lr.chunk_off[q];
+            let width = lr.chunk_width[q];
+            for i in 0..rows {
+                let row = lr.perm[q * c + i] as usize;
+                let mut k = 0usize;
+                for (col, v) in a.row(row) {
+                    unsafe {
+                        *vp.get().add(off + k * rows + i) = v;
+                        *cp.get().add(off + k * rows + i) = col;
+                    }
+                    k += 1;
+                }
+                // Write the padding slots too so every page of the chunk
+                // span is first-touched on this pool.
+                while k < width {
+                    unsafe {
+                        *vp.get().add(off + k * rows + i) = 0.0;
+                        *cp.get().add(off + k * rows + i) = 0;
+                    }
+                    k += 1;
+                }
+            }
+        }
+    });
+    SellCSigma::new(
+        n,
+        a.n_cols(),
+        l.c,
+        l.sigma,
+        l.chunk_width,
+        l.chunk_off,
+        l.perm,
+        l.row_len,
+        values,
+        col_idx,
+    )
+}
 
 /// Parallel CRS → ELL on `pool` with a storage bound (the same
 /// [`super::ell_checked_slots`] policy the sequential builder enforces):
@@ -229,6 +308,7 @@ pub fn transform_to_on(
         Bcsr => Box::new(crate::transform::crs_to_bcsr(a, 2, 2)?),
         Jds => Box::new(crate::transform::crs_to_jds(a)),
         Hyb => Box::new(crate::transform::crs_to_hyb(a)?),
+        Sell => Box::new(crs_to_sell_bounded_on(a, max_bytes, pool)?),
     })
 }
 
@@ -296,6 +376,22 @@ mod tests {
             assert_eq!(crs_to_coo_row(&a), crs_to_coo_row_on(&a, &pool));
             assert_eq!(crs_to_ccs(&a), crs_to_ccs_on(&a, &pool));
             assert_eq!(crs_to_coo_col(&a), crs_to_coo_col_on(&a, &pool));
+        }
+    }
+
+    #[test]
+    fn par_sell_matches_sequential() {
+        use crate::transform::crs_to_sell_with;
+        for a in cases() {
+            let n = a.n_rows().max(1);
+            for (c, sigma) in [(1, 1), (4, 4), (4, 16), (32, n)] {
+                for t in [1usize, 2, 3, 8] {
+                    let pool = ParPool::new(t);
+                    let seq = crs_to_sell_with(&a, c, sigma).unwrap();
+                    let par = crs_to_sell_with_on(&a, c, sigma, &pool).unwrap();
+                    assert_eq!(seq, par, "C={c} sigma={sigma} t={t}");
+                }
+            }
         }
     }
 

@@ -5,7 +5,7 @@
 //! coordinator can evict a transformed copy and rebuild CRS if the memory
 //! policy demands it.
 
-use crate::formats::{Coo, Csc, Csr, Ell, SparseMatrix};
+use crate::formats::{Coo, Csc, Csr, Ell, SellCSigma, SparseMatrix};
 use crate::Index;
 
 /// COO (either order) → CRS.
@@ -85,6 +85,28 @@ pub fn ell_to_crs(e: &Ell) -> Csr {
     Csr::from_triplets(n, e.n_cols(), &triplets).expect("ELL entries are in bounds")
 }
 
+/// SELL-C-σ → CRS. Unlike [`ell_to_crs`], no padding convention is
+/// needed: the format stores each sorted slot's logical row length, so
+/// the walk visits exactly the stored entries (through the row
+/// permutation) and the round-trip is exact — stored zeros at column 0
+/// included.
+pub fn sell_to_crs(s: &SellCSigma) -> Csr {
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(s.nnz());
+    for q in 0..s.n_chunks() {
+        let rows = s.chunk_rows(q);
+        let base = q * s.c;
+        let off = s.chunk_off[q];
+        for i in 0..rows {
+            let r = s.perm[base + i] as usize;
+            for k in 0..s.row_len[base + i] as usize {
+                let p = off + k * rows + i;
+                triplets.push((r, s.col_idx[p] as usize, s.values[p]));
+            }
+        }
+    }
+    Csr::from_triplets(s.n_rows(), s.n_cols(), &triplets).expect("SELL entries are in bounds")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +164,45 @@ mod tests {
     fn order_marker_used() {
         // Exercise the pub use to keep the import meaningful.
         let _ = CooOrder::RowMajor;
+    }
+
+    /// The ISSUE-6 property matrix: CSR→SELL-C-σ→CSR is exact across
+    /// C ∈ {1, 4, 32} × σ ∈ {1, C, 4C, n} over shapes including empty
+    /// rows and a single giant row.
+    #[test]
+    fn sell_roundtrip_property_matrix() {
+        use crate::transform::crs_to_sell_with;
+        let mut giant: Vec<(usize, usize, f64)> = (0..40).map(|j| (3, j, (j + 1) as f64)).collect();
+        giant.extend([(0, 0, 1.0), (17, 5, -2.0)]);
+        let shapes: Vec<(&str, Csr)> = vec![
+            ("random", random_matrix(11)),
+            // Empty rows throughout (row 1 of 3 populated), plus all-empty.
+            ("sparse-rows", Csr::from_triplets(9, 9, &[(1, 1, 2.0), (7, 0, 3.0)]).unwrap()),
+            ("all-empty", Csr::from_triplets(6, 6, &[]).unwrap()),
+            ("giant-row", Csr::from_triplets(18, 40, &giant).unwrap()),
+        ];
+        for (tag, a) in &shapes {
+            let n = a.n_rows().max(1);
+            for c in [1usize, 4, 32] {
+                for sigma in [1usize, c, 4 * c, n] {
+                    let s = crs_to_sell_with(a, c, sigma).unwrap();
+                    let back = sell_to_crs(&s);
+                    assert_eq!(a, &back, "{tag}: C={c} sigma={sigma}");
+                    assert_eq!(s.nnz(), a.nnz(), "{tag}: C={c} sigma={sigma}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sell_roundtrip_keeps_explicit_zero_at_column_zero() {
+        use crate::transform::crs_to_sell_with;
+        // The case the ELL padding convention cannot represent: a stored
+        // exact zero AT column 0. SELL's per-row lengths keep it.
+        let a = Csr::from_triplets(2, 3, &[(0, 0, 0.0), (0, 1, 5.0), (1, 0, 1.0)]).unwrap();
+        let s = crs_to_sell_with(&a, 2, 2).unwrap();
+        let back = sell_to_crs(&s);
+        assert_eq!(a, back);
+        assert!(back.to_triplets().contains(&(0, 0, 0.0)));
     }
 }

@@ -13,10 +13,12 @@
 //! * the `spmv-at-tuning` v1/v2 formats round-trip and cross-load the
 //!   way the forward-compat contract promises.
 //!
-//! The tuning candidate everywhere is ELL-Row *inner*: its per-row
-//! accumulation order matches sequential CRS exactly (row-partitioned,
-//! band-ordered, no cross-chunk reduction), so "bitwise vs `csr_seq`"
-//! holds for every serving choice the controller can make.
+//! The tuning candidates exercised are ELL-Row *inner* and SELL-Row
+//! inner: both keep each row's accumulation order equal to sequential
+//! CRS exactly (row-partitioned, band-ordered, no cross-chunk
+//! reduction; SELL additionally never touches padding and scatters
+//! through its row permutation), so "bitwise vs `csr_seq`" holds for
+//! every serving choice the controller can make.
 
 mod common;
 
@@ -32,8 +34,13 @@ fn tuning(d_star: Option<f64>) -> TuningData {
     common::tuning(Implementation::EllRowInner, d_star)
 }
 
-fn cfg(d_star: Option<f64>, threads: usize, adaptive: bool) -> CoordinatorConfig {
-    let mut cfg = CoordinatorConfig::new(tuning(d_star));
+fn cfg_for(
+    imp: Implementation,
+    d_star: Option<f64>,
+    threads: usize,
+    adaptive: bool,
+) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(common::tuning(imp, d_star));
     cfg.threads = threads;
     cfg.adaptive.enabled = adaptive;
     // Deterministic tests: no wall-clock-driven exploration by default.
@@ -41,48 +48,59 @@ fn cfg(d_star: Option<f64>, threads: usize, adaptive: bool) -> CoordinatorConfig
     cfg
 }
 
+fn cfg(d_star: Option<f64>, threads: usize, adaptive: bool) -> CoordinatorConfig {
+    cfg_for(Implementation::EllRowInner, d_star, threads, adaptive)
+}
+
+fn k_windows() -> u64 {
+    let cfg = spmv_at::autotune::adaptive::AdaptiveConfig::default();
+    cfg.window * cfg.flip_windows as u64
+}
+
 #[test]
 fn exploration_never_changes_results_bitwise() {
-    for threads in [1usize, 2, 7] {
-        let a = band(160, 3);
-        let xs: Vec<Vec<Value>> = (0..6)
-            .map(|k| (0..160).map(|i| ((i * 3 + k) as f64 * 0.29).sin() - 0.4).collect())
-            .collect();
+    for arm in [Implementation::EllRowInner, Implementation::SellRowInner] {
+        for threads in [1usize, 2, 7] {
+            let a = band(160, 3);
+            let xs: Vec<Vec<Value>> = (0..6)
+                .map(|k| (0..160).map(|i| ((i * 3 + k) as f64 * 0.29).sin() - 0.4).collect())
+                .collect();
 
-        // Plain decide-once pipeline.
-        let mut plain = Coordinator::new(cfg(Some(3.1), threads, false));
-        plain.register("m", a.clone()).unwrap();
+            // Plain decide-once pipeline.
+            let mut plain = Coordinator::new(cfg_for(arm, Some(3.1), threads, false));
+            plain.register("m", a.clone()).unwrap();
 
-        // Adaptive with exploration forced on every call, flips disabled so
-        // only the shadow machinery differs from the plain run.
-        let mut c = cfg(Some(3.1), threads, true);
-        c.adaptive.epsilon = 1.0;
-        c.adaptive.explore_warmup = 0;
-        c.adaptive.flip_windows = u32::MAX;
-        let mut explored = Coordinator::new(c);
-        explored.register("m", a.clone()).unwrap();
+            // Adaptive with exploration forced on every call, flips disabled so
+            // only the shadow machinery differs from the plain run.
+            let mut c = cfg_for(arm, Some(3.1), threads, true);
+            c.adaptive.epsilon = 1.0;
+            c.adaptive.explore_warmup = 0;
+            c.adaptive.flip_windows = u32::MAX;
+            let mut explored = Coordinator::new(c);
+            explored.register("m", a.clone()).unwrap();
 
-        for x in &xs {
-            let want = reference(&a, x);
-            let yp = plain.spmv("m", x).unwrap();
-            let ye = explored.spmv("m", x).unwrap();
-            assert_eq!(yp, ye, "exploration must be invisible ({threads} threads)");
-            assert_eq!(ye, want, "bitwise vs csr_seq ({threads} threads)");
+            for x in &xs {
+                let want = reference(&a, x);
+                let yp = plain.spmv("m", x).unwrap();
+                let ye = explored.spmv("m", x).unwrap();
+                assert_eq!(yp, ye, "exploration must be invisible ({arm}, {threads} threads)");
+                assert_eq!(ye, want, "bitwise vs csr_seq ({arm}, {threads} threads)");
+            }
+            // Batched serving explores too (the whole batch is shadowed
+            // through the rival's tiled SpMM, keeping per-call means
+            // comparable across arms).
+            let yb = explored.spmv_batch("m", &xs).unwrap();
+            for (x, y) in xs.iter().zip(&yb) {
+                assert_eq!(*y, reference(&a, x), "batch bitwise vs csr_seq ({arm})");
+            }
+            let s = &explored.stats()[0];
+            assert!(s.explored > 0, "shadow calls must have happened");
+            assert_eq!(s.replans, 0, "flips were disabled");
+            assert!(s.samples_imp > 0 || s.samples_crs > 0, "telemetry must fill");
+            // The plain run never explores and never builds telemetry.
+            let sp = &plain.stats()[0];
+            assert_eq!((sp.explored, sp.samples_crs, sp.samples_imp), (0, 0, 0));
         }
-        // Batched serving explores too (the whole batch is shadowed
-        // through the rival's tiled SpMM, keeping per-call means
-        // comparable across arms).
-        let yb = explored.spmv_batch("m", &xs).unwrap();
-        for (x, y) in xs.iter().zip(&yb) {
-            assert_eq!(*y, reference(&a, x), "batch bitwise vs csr_seq");
-        }
-        let s = &explored.stats()[0];
-        assert!(s.explored > 0, "shadow calls must have happened");
-        assert_eq!(s.replans, 0, "flips were disabled");
-        assert!(s.samples_imp > 0 || s.samples_crs > 0, "telemetry must fill");
-        // The plain run never explores and never builds telemetry.
-        let sp = &plain.stats()[0];
-        assert_eq!((sp.explored, sp.samples_crs, sp.samples_imp), (0, 0, 0));
     }
 }
 
@@ -158,26 +176,85 @@ fn wrong_transform_decision_is_replanned_back_to_crs() {
 
 #[test]
 fn hysteresis_prevents_flip_flap_on_alternating_timings() {
-    let a = band(64, 7);
-    let mut conf = cfg(None, 1, true);
-    conf.adaptive.window = 4;
-    conf.adaptive.flip_windows = 2;
-    conf.adaptive.ewma_alpha = 1.0; // telemetry = last injected sample
-    let mut c = Coordinator::new(conf);
-    c.register("m", a.clone()).unwrap();
-    let x = vec![1.0; 64];
-    // 20 windows of alternating synthetic rival timings: far faster on
-    // even windows, far slower on odd ones. Consecutive-window voting
-    // must never reach 2, so no flip ever fires.
-    for w in 0..20u64 {
-        let rival = if w % 2 == 0 { 1e-12 } else { 1e3 };
-        c.inject_sample("m", Implementation::EllRowInner, rival, 1).unwrap();
-        for _ in 0..4 {
-            c.spmv("m", &x).unwrap();
+    for arm in [Implementation::EllRowInner, Implementation::SellRowInner] {
+        let a = band(64, 7);
+        let mut conf = cfg_for(arm, None, 1, true);
+        conf.adaptive.window = 4;
+        conf.adaptive.flip_windows = 2;
+        conf.adaptive.ewma_alpha = 1.0; // telemetry = last injected sample
+        let mut c = Coordinator::new(conf);
+        c.register("m", a.clone()).unwrap();
+        let x = vec![1.0; 64];
+        // 20 windows of alternating synthetic rival timings: far faster on
+        // even windows, far slower on odd ones. Consecutive-window voting
+        // must never reach 2, so no flip ever fires.
+        for w in 0..20u64 {
+            let rival = if w % 2 == 0 { 1e-12 } else { 1e3 };
+            c.inject_sample("m", arm, rival, 1).unwrap();
+            for _ in 0..4 {
+                c.spmv("m", &x).unwrap();
+            }
         }
+        assert_eq!(c.serving_format("m"), Some(FormatKind::Csr));
+        assert_eq!(c.stats()[0].replans, 0, "alternating evidence must not flip ({arm})");
+    }
+}
+
+/// ISSUE-6: the explorer shadow-measures SELL as the rival arm and flips
+/// *to* it within K windows when the measurements favour it — same
+/// contract as the ELL flip test above, exercised through the new
+/// format/kernel/plan path end to end, bitwise across the flip.
+#[test]
+fn wrong_keep_crs_decision_is_replanned_to_sell_within_k_windows() {
+    let a = band(128, 5);
+    let mut c = Coordinator::new(cfg_for(Implementation::SellRowInner, None, 2, true));
+    c.register("m", a.clone()).unwrap();
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Csr));
+
+    c.inject_sample("m", Implementation::SellRowInner, 1e-12, 16).unwrap();
+    let x: Vec<Value> = (0..128).map(|i| (i as f64 * 0.41).cos()).collect();
+    let want = reference(&a, &x);
+    for call in 0..k_windows() {
+        let y = c.spmv("m", &x).unwrap();
+        assert_eq!(y, want, "bitwise vs csr_seq at call {call}, across the SELL flip");
+    }
+    assert_eq!(
+        c.serving_format("m"),
+        Some(FormatKind::Sell),
+        "the wrong keep-CRS decision must be corrected to SELL within K windows"
+    );
+    let s = &c.stats()[0];
+    assert_eq!(s.replans, 1, "the flip is observable in the counters");
+    assert_eq!(s.serving, Implementation::SellRowInner);
+    assert!(c.learned().correction(s.d_mat).is_some());
+    assert_eq!(c.spmv("m", &x).unwrap(), want, "bitwise-stable after the flip");
+}
+
+/// ISSUE-6: and the reverse direction — a decide-once transform *to*
+/// SELL is flipped back to CRS when the measured rival (the CRS baseline
+/// plan) wins, with the SELL plan parked, not dropped.
+#[test]
+fn wrong_sell_transform_decision_is_replanned_back_to_crs() {
+    let a = band(96, 6);
+    let mut c = Coordinator::new(cfg_for(Implementation::SellRowInner, Some(3.1), 2, true));
+    c.register("m", a.clone()).unwrap();
+    let x = vec![1.0; 96];
+    let want = reference(&a, &x);
+    assert_eq!(c.spmv("m", &x).unwrap(), want);
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Sell), "transformed on first call");
+
+    c.inject_sample("m", Implementation::CsrRowPar, 1e-12, 16).unwrap();
+    for _ in 0..k_windows() {
+        assert_eq!(c.spmv("m", &x).unwrap(), want, "bitwise across the flip back");
     }
     assert_eq!(c.serving_format("m"), Some(FormatKind::Csr));
-    assert_eq!(c.stats()[0].replans, 0, "alternating evidence must not flip");
+    let s = &c.stats()[0];
+    assert_eq!(s.replans, 1);
+    assert!(s.extra_bytes > 0, "parked SELL shadow plan keeps its bytes");
+    for _ in 0..8 {
+        c.spmv("m", &x).unwrap();
+    }
+    assert_eq!(c.serving_format("m"), Some(FormatKind::Csr), "no immediate re-transform");
 }
 
 #[test]

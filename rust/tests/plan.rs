@@ -45,6 +45,43 @@ fn plan_execute_matches_csr_seq_for_every_implementation_and_thread_count() {
     }
 }
 
+/// ISSUE-6 satellite: SELL-C-σ execution is **bitwise** equal to
+/// `csr_seq` — through a built plan (env-default C/σ) and through the
+/// raw kernel across the full C × σ property matrix (explicit-parameter
+/// builder, no env mutation) — at pool widths {1, 2, 7}. SELL stores
+/// each row's entries in CSR order, never accumulates padding, and
+/// scatters through the permutation, so not even the last ulp may move.
+#[test]
+fn sell_plans_are_bitwise_identical_to_csr_seq_across_threads() {
+    use spmv_at::spmv::partition::split_even;
+    use spmv_at::spmv::sell_row_inner_on;
+    use spmv_at::transform::crs_to_sell_with;
+    for threads in [1usize, 2, 7] {
+        let pool = Arc::new(ParPool::new(threads));
+        for a in cases() {
+            let x: Vec<f64> =
+                (0..a.n_cols()).map(|i| ((i * 7 + 3) as f64 * 0.83).sin()).collect();
+            let mut want = vec![0.0; a.n_rows()];
+            spmv_at::spmv::csr_seq(&a, &x, &mut want);
+            let mut plan =
+                SpmvPlan::build(&a, Implementation::SellRowInner, None, pool.clone()).unwrap();
+            let mut y = vec![0.0; a.n_rows()];
+            plan.execute(&x, &mut y).unwrap();
+            assert_eq!(y, want, "plan t={threads} n={}", a.n_rows());
+            let n = a.n_rows().max(1);
+            for c in [1usize, 4, 32] {
+                for sigma in [1usize, c, 4 * c, n] {
+                    let s = crs_to_sell_with(&a, c, sigma).unwrap();
+                    let ranges = split_even(s.n_chunks(), threads);
+                    let mut y = vec![0.0; a.n_rows()];
+                    sell_row_inner_on(&s, &x, &mut y, &pool, &ranges);
+                    assert_eq!(y, want, "kernel t={threads} C={c} sigma={sigma}");
+                }
+            }
+        }
+    }
+}
+
 /// One shared pool, ≥3 consecutive plans of different shapes and
 /// implementations: later plans must not observe stale `YY` or partition
 /// state from earlier ones, and earlier plans must stay correct after
