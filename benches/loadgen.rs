@@ -1,0 +1,223 @@
+//! loadgen — closed- and open-loop load generator for the network
+//! serving front end.
+//!
+//! Drives a real in-process [`NetServer`] (TCP on an ephemeral port)
+//! with concurrent protocol clients and records what a serving operator
+//! cares about: p50/p95/p99 request latency, sustained throughput, and
+//! the measured coalescing factor (requests per coalescer dispatch) —
+//! the number that says how much matrix-streaming the ingress coalescer
+//! saved. Closed loop: every client keeps one request in flight, so
+//! concurrency = client count. Open loop: a pacer emits request ticks at
+//! a target rate and latency is measured from the scheduled tick, so
+//! queueing delay under overload is visible instead of being absorbed
+//! into a slower offered rate.
+//!
+//! JSON keys consumed by CI: `p50_us`/`p95_us`/`p99_us` and
+//! `coalescing_factor` under both loops (see `.github/workflows/ci.yml`,
+//! bench-smoke).
+
+mod common;
+
+use spmv_at::coordinator::{CoordinatorConfig, Server};
+use spmv_at::matrixgen::banded_circulant;
+use spmv_at::metrics::Json;
+use spmv_at::net::proto::WireNetStats;
+use spmv_at::net::{ListenAddr, NetClient, NetConfig, NetServer};
+use spmv_at::rng::Rng;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_us.len() - 1) as f64).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// Requests-per-dispatch over a counter window.
+fn factor(before: &WireNetStats, after: &WireNetStats) -> f64 {
+    let batches = after.batches.saturating_sub(before.batches);
+    if batches == 0 {
+        return 1.0;
+    }
+    after.requests.saturating_sub(before.requests) as f64 / batches as f64
+}
+
+fn latency_obj(mut lats_us: Vec<f64>, wall: Duration, fac: f64) -> Vec<(String, Json)> {
+    lats_us.sort_by(|a, b| a.total_cmp(b));
+    vec![
+        ("requests".into(), Json::Num(lats_us.len() as f64)),
+        ("p50_us".into(), Json::Num(percentile(&lats_us, 50.0))),
+        ("p95_us".into(), Json::Num(percentile(&lats_us, 95.0))),
+        ("p99_us".into(), Json::Num(percentile(&lats_us, 99.0))),
+        (
+            "throughput_rps".into(),
+            Json::Num(lats_us.len() as f64 / wall.as_secs_f64().max(1e-9)),
+        ),
+        ("coalescing_factor".into(), Json::Num(fac)),
+    ]
+}
+
+fn main() {
+    common::banner("loadgen", "network serving front end: latency percentiles + coalescing");
+    let quick = common::quick();
+
+    let n = if quick { 1024 } else { 16384 };
+    let clients = if quick { 4 } else { 16 };
+    let reqs_per_client = if quick { 25 } else { 400 };
+    let open_rate = if quick { 400.0 } else { 2000.0 };
+    let open_secs = if quick { 0.5 } else { 5.0 };
+    let open_workers = if quick { 4 } else { 16 };
+
+    let tuning = spmv_at::autotune::online::TuningData {
+        backend: "sim:ES2".into(),
+        imp: spmv_at::spmv::Implementation::EllRowOuter,
+        threads: 1,
+        c: 1.0,
+        d_star: Some(3.1),
+    };
+    let mut ccfg = CoordinatorConfig::new(tuning);
+    // Serving passes only: exploration would add shadow matrix streams
+    // and pollute the coalescing accounting.
+    ccfg.adaptive.enabled = false;
+    let (server, client) = Server::spawn_sharded(ccfg, 64);
+    let net = NetServer::start(
+        server,
+        client,
+        &ListenAddr::Tcp("127.0.0.1:0".into()),
+        NetConfig { queue_depth: 512, coalesce_wait: Duration::ZERO },
+    )
+    .expect("bind an ephemeral port");
+    let addr = net.local_addr().clone();
+
+    let mut rng = Rng::new(common::seed());
+    let a = banded_circulant(&mut rng, n, &[-2, -1, 0, 1, 2]);
+    let mut control = NetClient::connect(&addr).expect("connect control client");
+    control.register("m", &a).expect("register bench matrix");
+    let x: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64 * 0.125).collect();
+
+    // ---- Closed loop: `clients` connections, one request in flight each.
+    println!("closed loop: {clients} client(s) x {reqs_per_client} request(s), n={n}");
+    let before = control.net_stats().unwrap();
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = addr.clone();
+            let x = x.clone();
+            std::thread::spawn(move || {
+                let mut c = NetClient::connect(&addr).expect("connect load client");
+                let mut lats = Vec::with_capacity(reqs_per_client);
+                for _ in 0..reqs_per_client {
+                    let t = Instant::now();
+                    c.spmv("m", x.clone()).expect("closed-loop request");
+                    lats.push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                lats
+            })
+        })
+        .collect();
+    let mut closed_lats = Vec::new();
+    for h in handles {
+        closed_lats.extend(h.join().expect("closed-loop client"));
+    }
+    let closed_wall = t0.elapsed();
+    let after = control.net_stats().unwrap();
+    let closed_factor = factor(&before, &after);
+    let closed = latency_obj(closed_lats, closed_wall, closed_factor);
+    println!(
+        "  p50={:.0}us p95={:.0}us p99={:.0}us factor={closed_factor:.2} wall={:.2}s",
+        closed.iter().find(|(k, _)| k == "p50_us").map_or(0.0, |(_, v)| num(v)),
+        closed.iter().find(|(k, _)| k == "p95_us").map_or(0.0, |(_, v)| num(v)),
+        closed.iter().find(|(k, _)| k == "p99_us").map_or(0.0, |(_, v)| num(v)),
+        closed_wall.as_secs_f64()
+    );
+
+    // ---- Open loop: paced ticks at a target rate; latency from the
+    // scheduled tick, so queueing under overload is charged to requests.
+    let total_open = (open_rate * open_secs) as usize;
+    println!("open loop: {open_rate:.0} rps target for {open_secs}s ({open_workers} worker(s))");
+    let before = control.net_stats().unwrap();
+    let (tick_tx, tick_rx) = mpsc::channel::<Instant>();
+    let tick_rx = Arc::new(Mutex::new(tick_rx));
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..open_workers)
+        .map(|_| {
+            let addr = addr.clone();
+            let x = x.clone();
+            let tick_rx = Arc::clone(&tick_rx);
+            std::thread::spawn(move || {
+                let mut c = NetClient::connect(&addr).expect("connect open-loop client");
+                let mut lats = Vec::new();
+                loop {
+                    let tick = match tick_rx.lock().expect("tick queue").recv() {
+                        Ok(t) => t,
+                        Err(_) => break,
+                    };
+                    c.spmv("m", x.clone()).expect("open-loop request");
+                    lats.push(tick.elapsed().as_secs_f64() * 1e6);
+                }
+                lats
+            })
+        })
+        .collect();
+    let interval = Duration::from_secs_f64(1.0 / open_rate);
+    let start = Instant::now();
+    for i in 0..total_open {
+        let target = start + interval * i as u32;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        if tick_tx.send(target).is_err() {
+            break;
+        }
+    }
+    drop(tick_tx);
+    let mut open_lats = Vec::new();
+    for h in workers {
+        open_lats.extend(h.join().expect("open-loop worker"));
+    }
+    let open_wall = t0.elapsed();
+    let after = control.net_stats().unwrap();
+    let open_factor = factor(&before, &after);
+    let open = latency_obj(open_lats, open_wall, open_factor);
+    println!(
+        "  p50={:.0}us p99={:.0}us factor={open_factor:.2} achieved={:.0} rps",
+        open.iter().find(|(k, _)| k == "p50_us").map_or(0.0, |(_, v)| num(v)),
+        open.iter().find(|(k, _)| k == "p99_us").map_or(0.0, |(_, v)| num(v)),
+        open.iter().find(|(k, _)| k == "throughput_rps").map_or(0.0, |(_, v)| num(v)),
+    );
+
+    let stats = control.net_stats().unwrap();
+    common::write_json(
+        "loadgen",
+        Json::Obj(vec![
+            ("n".into(), Json::Num(n as f64)),
+            ("closed".into(), Json::Obj(closed)),
+            (
+                "open".into(),
+                Json::Obj(
+                    [("target_rps".into(), Json::Num(open_rate))]
+                        .into_iter()
+                        .chain(open)
+                        .collect(),
+                ),
+            ),
+            ("sessions_total".into(), Json::Num(stats.sessions_total as f64)),
+            ("coalesced_batches".into(), Json::Num(stats.coalesced_batches as f64)),
+            ("max_batch".into(), Json::Num(stats.max_batch as f64)),
+            ("admission_rejects".into(), Json::Num(stats.admission_rejects as f64)),
+        ]),
+    );
+
+    drop(control);
+    net.shutdown();
+}
+
+fn num(j: &Json) -> f64 {
+    match j {
+        Json::Num(v) => *v,
+        _ => 0.0,
+    }
+}

@@ -262,6 +262,13 @@ pub struct EntryStats {
     pub split_parts: usize,
     /// Calls served through the split plan.
     pub split_calls: u64,
+    /// Times the matrix data was streamed by this entry's plans, summed
+    /// over baseline + transformed + cached split. With the adaptive
+    /// loop off this is exactly the serving pass count (exploration can
+    /// add shadow streams): a coalesced batch of `k` requests grows it
+    /// by ⌈k/tile⌉ instead of `k` — the counter the network ingress
+    /// tests read to prove coalescing paid.
+    pub matrix_passes: u64,
 }
 
 impl MatrixEntry {
@@ -303,6 +310,12 @@ impl MatrixEntry {
             samples_imp,
             split_parts: self.split.as_ref().map_or(0, SplitPlan::parts),
             split_calls: self.split_calls,
+            matrix_passes: self.baseline.matrix_passes()
+                + match &self.state {
+                    AtState::Baseline => 0,
+                    AtState::Transformed { plan, .. } => plan.matrix_passes(),
+                }
+                + self.split.as_ref().map_or(0, SplitPlan::matrix_passes),
         }
     }
 }

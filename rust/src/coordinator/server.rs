@@ -8,26 +8,29 @@
 //! channel (rendezvous style), so concurrent clients interleave safely
 //! and back-pressure falls out of the bounded queue.
 //!
-//! [`Server::spawn`] runs a single loop over one coordinator (the
-//! pre-sharding behaviour). [`Server::spawn_sharded`] spawns one loop —
-//! and one single-shard [`Coordinator`] with its own
-//! [`crate::spmv::ParPool`] — per configured shard, and the [`Client`]
-//! routes every keyed request with the same [`shards::route_key`] hash
-//! the pools use, so batched SpMM against matrices on different shards
+//! [`Server::spawn`] runs a single loop over one coordinator.
+//! [`Server::spawn_sharded`] spawns one loop per configured shard, every
+//! loop sharing ONE set of socket-pinned [`crate::spmv::ParPool`]s
+//! through its own [`Coordinator`] over the full multi-shard planner.
+//! The [`Client`] routes every keyed request with the same
+//! [`shards::route_key`] hash the coordinators use internally, so loop
+//! `i`'s matrices plan on pool `i` (placement is per-socket exactly as
+//! before) while batched SpMM against matrices on different shards
 //! executes concurrently instead of serialising on one pool's job slot.
-//! `Stats` broadcasts and merges — split-served entries report their
-//! `split_parts`/`split_calls` like any other row, and `shutdown` /
-//! `shutdown_all` hand back the coordinators with their cached
-//! [`super::SplitPlan`]s intact.
+//! Because every loop sees all the shards, automatic cross-shard
+//! splitting ([`super::SplitThreshold`]) engages behind the sharded
+//! client too — there is exactly one serving shape; `Server::spawn` is
+//! just its one-loop special case. `Stats` broadcasts and merges —
+//! split-served entries report their `split_parts`/`split_calls` like
+//! any other row, and `shutdown` / `shutdown_all` hand back the
+//! coordinators with their cached [`super::SplitPlan`]s intact.
 //!
-//! Note the split-routing topology trade-off: each `spawn_sharded` loop
-//! owns a *single-shard* coordinator, so automatic cross-shard splitting
-//! ([`super::SplitThreshold`]) never engages there — every matrix stays
-//! whole on its socket. A single-loop [`Server::spawn`] over a
-//! multi-shard [`Coordinator`] (the XLA-path shape, and what the CLI
-//! uses when `--split-rows`/`SPMV_AT_SPLIT_ROWS` names an explicit
-//! threshold) is the serving shape where oversized matrices split and
-//! run their blocks concurrently across sockets.
+//! [`spawn_dispatch`] is the one dispatch primitive every service thread
+//! in the crate goes through (these loops, and the XLA artifact service
+//! in [`crate::runtime`]): it constructs the service state *inside* the
+//! thread via an `init` closure — required for non-`Send` state like the
+//! XLA runtime — reports the init result synchronously, then drains the
+//! bounded queue until the step function signals shutdown.
 
 use super::shards::{self, PlanShards, ShardedPlanner};
 use super::{Coordinator, CoordinatorConfig, EntryStats};
@@ -36,6 +39,68 @@ use crate::solver::{SolveStats, SolverOptions};
 use crate::{Result, Value};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+
+/// Spawn one service thread over a bounded queue — the crate's single
+/// dispatch primitive, shared by the request loops here and by
+/// [`crate::runtime::XlaService`].
+///
+/// The service state is constructed *inside* the thread by `init` (so
+/// non-`Send` state — the XLA runtime holds `Rc` internals — never
+/// crosses a thread boundary), and the init result is reported back
+/// synchronously: a failing `init` makes this function return its error
+/// with the thread already joined. After init, the thread drains the
+/// queue, handing each message to `step` until it returns `false` (the
+/// service's shutdown message) or every sender is dropped. `finish`
+/// consumes the state in-thread and produces the join value (the
+/// request loops hand their [`Coordinator`] back this way; services with
+/// non-`Send` state return `()`).
+pub fn spawn_dispatch<M, S, R>(
+    name: &str,
+    depth: usize,
+    init: impl FnOnce() -> Result<S> + Send + 'static,
+    mut step: impl FnMut(&mut S, M) -> bool + Send + 'static,
+    finish: impl FnOnce(S) -> R + Send + 'static,
+) -> Result<(mpsc::SyncSender<M>, JoinHandle<Option<R>>)>
+where
+    M: Send + 'static,
+    S: 'static,
+    R: Send + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<M>(depth.max(1));
+    let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+    let handle = std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || {
+            let mut state = match init() {
+                Ok(s) => {
+                    let _ = init_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return None;
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                if !step(&mut state, msg) {
+                    break;
+                }
+            }
+            Some(finish(state))
+        })
+        .expect("spawn service thread");
+    match init_rx.recv() {
+        Ok(Ok(())) => Ok((tx, handle)),
+        Ok(Err(e)) => {
+            let _ = handle.join();
+            Err(e)
+        }
+        Err(_) => {
+            let _ = handle.join();
+            Err(anyhow::anyhow!("service thread died during initialization"))
+        }
+    }
+}
 
 /// Solver selection for [`Request::Solve`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -229,7 +294,7 @@ impl Client {
 /// [`Coordinator`].
 pub struct Server {
     txs: Vec<mpsc::SyncSender<Request>>,
-    handles: Vec<JoinHandle<Coordinator>>,
+    handles: Vec<JoinHandle<Option<Coordinator>>>,
 }
 
 /// An adapter letting the solvers run against a coordinator-registered
@@ -269,33 +334,38 @@ impl Server {
         Self::spawn_loops(vec![coord], depth)
     }
 
-    /// Spawn one request loop per configured shard: `cfg.shards`
-    /// coordinators (clamped to the thread budget — see
-    /// [`shards::shard_thread_counts`]), each owning one independent pool
-    /// pinned to socket `i mod sockets` of the detected
-    /// [`crate::machine::Topology`], with every keyed request routed by
-    /// [`shards::route_key`]. Requests for matrices on different shards
-    /// execute concurrently, and each shard's plans — including adaptive
-    /// re-plans — first-touch their arrays on that shard's socket. The
-    /// request-loop thread itself pins to the same socket, so the `Vec`s
-    /// a request materialises (inputs, outputs) are local too.
+    /// Spawn one request loop per configured shard: the socket-pinned
+    /// pools (one per shard, clamped to the thread budget — see
+    /// [`shards::shard_thread_counts`], pool `i` pinned to socket
+    /// `i mod sockets` of the detected [`crate::machine::Topology`]) are
+    /// built **once** and shared by every loop, each loop owning a
+    /// [`Coordinator`] over the full multi-shard planner. The client's
+    /// [`shards::route_key`] hash and the coordinator's internal
+    /// `shard_of` agree (same hash, same shard count), so loop `i`'s
+    /// matrices plan — and adaptively re-plan — on pool `i`, first-
+    /// touching their arrays on that socket, while oversized matrices
+    /// past the [`super::SplitThreshold`] split across ALL the shared
+    /// pools from whichever loop serves them. Requests for matrices on
+    /// different shards execute concurrently. The request-loop thread
+    /// itself pins to its home shard's socket, so the `Vec`s a request
+    /// materialises (inputs, outputs) are local too.
     pub fn spawn_sharded(cfg: CoordinatorConfig, depth: usize) -> (Self, Client) {
         let topo = crate::machine::Topology::detect();
         let counts = shards::shard_thread_counts(cfg.threads, cfg.shards);
         shards::warn_if_clamped(cfg.threads, cfg.shards, counts.len());
-        let coords: Vec<Coordinator> = counts
+        let pools: Vec<Arc<crate::spmv::pool::ParPool>> = counts
             .into_iter()
             .enumerate()
             .map(|(i, threads)| {
-                // Each loop owns a single-shard coordinator over its own
-                // socket-pinned pool; the client's hash does the
-                // cross-shard routing.
-                let pool =
-                    Arc::new(crate::spmv::pool::ParPool::new_pinned(threads, topo.shard_cpus(i)));
+                Arc::new(crate::spmv::pool::ParPool::new_pinned(threads, topo.shard_cpus(i)))
+            })
+            .collect();
+        let coords: Vec<Coordinator> = (0..pools.len())
+            .map(|_| {
                 let planner = ShardedPlanner::new(
                     cfg.tuning.clone(),
                     cfg.policy,
-                    PlanShards::from_pools(vec![pool]),
+                    PlanShards::from_pools(pools.clone()),
                 );
                 Coordinator::with_planner(cfg.clone(), planner)
             })
@@ -304,60 +374,70 @@ impl Server {
     }
 
     fn spawn_loops(coords: Vec<Coordinator>, depth: usize) -> (Self, Client) {
-        let mut txs = Vec::with_capacity(coords.len());
-        let mut handles = Vec::with_capacity(coords.len());
-        for coord in coords {
-            let (tx, rx) = mpsc::sync_channel::<Request>(depth.max(1));
-            handles.push(std::thread::spawn(move || Self::serve_loop(coord, &rx)));
+        let n_loops = coords.len();
+        let mut txs = Vec::with_capacity(n_loops);
+        let mut handles = Vec::with_capacity(n_loops);
+        for (i, coord) in coords.into_iter().enumerate() {
+            // Join the home shard's socket so request-side allocations
+            // (the response vectors every SpMV materialises) first-touch
+            // locally — meaningful only when loop count == shard count,
+            // i.e. the client's hash sends shard i's keys to loop i. A
+            // single loop over a multi-shard planner serves every socket
+            // from one thread; pinning it to shard 0's socket would
+            // mislocate all the others.
+            let affinity: Option<Vec<usize>> = if coord.planner().len() == n_loops {
+                coord.planner().shards().pool(i).affinity().map(<[usize]>::to_vec)
+            } else {
+                None
+            };
+            let (tx, handle) = spawn_dispatch(
+                &format!("spmv-serve-{i}"),
+                depth,
+                move || {
+                    if let Some(cpus) = &affinity {
+                        crate::machine::topology::pin_current_thread(cpus);
+                    }
+                    Ok(coord)
+                },
+                |coord, req| Self::dispatch(coord, req),
+                |coord| coord,
+            )
+            .expect("serve-loop init is infallible");
             txs.push(tx);
+            handles.push(handle);
         }
         let client = Client { txs: txs.clone() };
         (Self { txs, handles }, client)
     }
 
-    fn serve_loop(mut coord: Coordinator, rx: &mpsc::Receiver<Request>) -> Coordinator {
-        // Join the shard's socket so request-side allocations (the
-        // response vectors every SpMV materialises) first-touch locally —
-        // but only when this loop serves exactly one shard (the
-        // `spawn_sharded` per-loop case). A single-loop server over a
-        // multi-shard coordinator (the XLA path) serves every socket from
-        // one thread; pinning it to shard 0's socket would mislocate all
-        // the others.
-        let affinity: Option<Vec<usize>> = if coord.planner().len() == 1 {
-            coord.planner().shards().pool(0).affinity().map(<[usize]>::to_vec)
-        } else {
-            None
-        };
-        if let Some(cpus) = &affinity {
-            crate::machine::topology::pin_current_thread(cpus);
-        }
-        while let Ok(req) = rx.recv() {
-            match req {
-                Request::Register { name, csr, resp } => {
-                    let _ = resp.send(coord.register(&name, csr));
-                }
-                Request::Spmv { name, x, resp } => {
-                    let _ = resp.send(coord.spmv(&name, &x));
-                }
-                Request::Solve { name, b, solver, opts, resp } => {
-                    let _ = resp.send(Self::do_solve(&mut coord, &name, &b, solver, &opts));
-                }
-                Request::SpmvBatch { name, xs, resp } => {
-                    let _ = resp.send(coord.spmv_batch(&name, &xs));
-                }
-                Request::Replan { name, resp } => {
-                    let _ = resp.send(coord.replan(&name));
-                }
-                Request::Stats { resp } => {
-                    let _ = resp.send(coord.stats());
-                }
-                Request::Evict { name, resp } => {
-                    let _ = resp.send(coord.evict(&name));
-                }
-                Request::Shutdown => break,
+    /// Handle one request against the loop's coordinator; `false` stops
+    /// the loop ([`Request::Shutdown`]).
+    fn dispatch(coord: &mut Coordinator, req: Request) -> bool {
+        match req {
+            Request::Register { name, csr, resp } => {
+                let _ = resp.send(coord.register(&name, csr));
             }
+            Request::Spmv { name, x, resp } => {
+                let _ = resp.send(coord.spmv(&name, &x));
+            }
+            Request::Solve { name, b, solver, opts, resp } => {
+                let _ = resp.send(Self::do_solve(coord, &name, &b, solver, &opts));
+            }
+            Request::SpmvBatch { name, xs, resp } => {
+                let _ = resp.send(coord.spmv_batch(&name, &xs));
+            }
+            Request::Replan { name, resp } => {
+                let _ = resp.send(coord.replan(&name));
+            }
+            Request::Stats { resp } => {
+                let _ = resp.send(coord.stats());
+            }
+            Request::Evict { name, resp } => {
+                let _ = resp.send(coord.evict(&name));
+            }
+            Request::Shutdown => return false,
         }
-        coord
+        true
     }
 
     fn do_solve(
@@ -405,7 +485,7 @@ impl Server {
         }
         self.handles
             .drain(..)
-            .map(|h| h.join().expect("server thread panicked"))
+            .map(|h| h.join().expect("server thread panicked").expect("serve loop initialised"))
             .collect()
     }
 }
@@ -588,6 +668,54 @@ mod tests {
     }
 
     #[test]
+    fn sharded_loops_auto_split_oversized_entries() {
+        // The unified serving loop: every `spawn_sharded` loop shares
+        // the full N-shard planner, so `SplitThreshold` engages behind
+        // the sharded client too — the PR-5 trade-off (splits only in
+        // the single-loop shape) is gone.
+        use crate::formats::SparseMatrix as _;
+        let tuning = TuningData {
+            backend: "sim:ES2".into(),
+            imp: Implementation::EllRowInner,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        };
+        let mut cfg = CoordinatorConfig::new(tuning);
+        cfg.threads = 2;
+        cfg.shards = 2;
+        cfg.adaptive.enabled = false;
+        cfg.split = crate::coordinator::SplitThreshold::Rows(32);
+        let (srv, client) = Server::spawn_sharded(cfg, 16);
+        assert_eq!(client.shards(), 2);
+        let mut rng = Rng::new(11);
+        let a = crate::matrixgen::random_csr(&mut rng, 64, 64, 0.1);
+        client.register("big", a.clone()).unwrap();
+        let xs: Vec<Vec<Value>> = (0..4)
+            .map(|j| (0..64).map(|i| ((i + j) as f64 * 0.2).sin()).collect())
+            .collect();
+        let ys = client.spmv_batch("big", xs.clone()).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 64];
+            a.spmv(x, &mut want);
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-9);
+            }
+        }
+        // A small matrix keeps serving unsplit alongside it, wherever
+        // its key routes.
+        client.register("small", crate::formats::Csr::identity(8)).unwrap();
+        assert_eq!(client.spmv("small", vec![3.0; 8]).unwrap(), vec![3.0; 8]);
+        let rows = client.stats().unwrap();
+        let big = rows.iter().find(|r| r.name == "big").unwrap();
+        assert_eq!(big.split_parts, 2, "splits engage behind the sharded client");
+        assert_eq!(big.split_calls, 1);
+        let small = rows.iter().find(|r| r.name == "small").unwrap();
+        assert_eq!((small.split_parts, small.split_calls), (0, 0));
+        srv.shutdown_all();
+    }
+
+    #[test]
     fn single_loop_server_serves_split_entries_and_reports_them() {
         use crate::formats::SparseMatrix as _;
         let tuning = TuningData {
@@ -601,8 +729,9 @@ mod tests {
         cfg.threads = 2;
         cfg.shards = 2;
         cfg.split = crate::coordinator::SplitThreshold::Rows(32);
-        // One loop over a multi-shard coordinator: the serving shape
-        // where automatic cross-shard splitting engages.
+        // One loop over a multi-shard coordinator (the degenerate
+        // `Server::spawn` case of the unified serving shape): splitting
+        // engages here exactly as it does behind the sharded client.
         let (srv, client) = Server::spawn(Coordinator::new(cfg), 16);
         let mut rng = Rng::new(9);
         let a = crate::matrixgen::random_csr(&mut rng, 64, 64, 0.1);

@@ -3,9 +3,12 @@
 //! A reproduction of *"An Auto-tuning Method for Run-time Data Transformation
 //! for Sparse Matrix-Vector Multiplication"* (Katagiri & Sato).
 //!
-//! The library is organised in four layers:
+//! The library is organised in four layers (plus a network front end):
 //!
 //! ```text
+//!   network      net — framed wire protocol (unix/tcp), per-connection
+//!                sessions, bounded ingress queues with Busy backpressure,
+//!                cross-request batch coalescing → Client
 //!   serving      coordinator ── registry of MatrixEntry{ decision, plans }
 //!                coordinator::shards — socket-pinned pools (one/socket),
 //!                key-routed matrices, cross-socket SplitPlan SpMM,
@@ -59,6 +62,13 @@
 //!   pools ([`coordinator::shards`], `SPMV_AT_SHARDS`) with one server
 //!   loop per shard so batches against different matrices run
 //!   concurrently.
+//! * **The network front end** — [`net`]: a compact length-prefixed
+//!   binary protocol ([`net::proto`], `docs/PROTOCOL.md`) served over
+//!   Unix sockets or TCP (`spmv-at serve --listen …`), with per-shard
+//!   bounded ingress queues (explicit `Busy` backpressure) and a
+//!   coalescer ([`net::ingress`]) that folds concurrent single-vector
+//!   requests against the same matrix into one tiled batch call —
+//!   bitwise-identical results, ⌈k/tile⌉ matrix passes instead of `k`.
 //!
 //! Thread-count truth lives in one place:
 //! [`spmv::pool::configured_threads`] (the `SPMV_AT_THREADS` environment
@@ -97,6 +107,7 @@ pub mod io;
 pub mod machine;
 pub mod matrixgen;
 pub mod metrics;
+pub mod net;
 pub mod rng;
 pub mod runtime;
 pub mod solver;

@@ -9,7 +9,10 @@
 //! * `decide` — run the online phase for one matrix against a tuning table.
 //! * `spmv` — run SpMV through an `OpenATI_DURMV`-style switch.
 //! * `solve` — solve a generated system through the AT-routed coordinator.
-//! * `serve` — line-oriented REPL over the coordinator server.
+//! * `serve` — line-oriented REPL over the coordinator server; with
+//!   `--listen` also a network front end (Unix socket or TCP) speaking
+//!   the framed binary protocol of `docs/PROTOCOL.md`, with
+//!   cross-request batch coalescing.
 //! * `topology` — print the detected socket/core layout and the shard
 //!   plan derived from it (NUMA observability).
 //!
@@ -91,18 +94,15 @@ impl Args {
     }
 }
 
-/// Apply `--split-rows` (overriding `SPMV_AT_SPLIT_ROWS`) to the config;
-/// returns whether an explicit row threshold is active — the opt-in that
-/// switches solve/serve to a single request loop over one multi-shard
-/// coordinator, the serving shape where a cross-shard split can engage
-/// (each `spawn_sharded` loop is single-shard, so splits never fire
-/// there).
-fn apply_split_flag(args: &Args, cfg: &mut CoordinatorConfig) -> Result<bool> {
+/// Apply `--split-rows` (overriding `SPMV_AT_SPLIT_ROWS`) to the config.
+/// Since every serving loop sees all the shards, the threshold engages
+/// in whatever serving shape runs it — no shape opt-in involved.
+fn apply_split_flag(args: &Args, cfg: &mut CoordinatorConfig) -> Result<()> {
     if let Some(v) = args.get("split-rows") {
         cfg.split = SplitThreshold::parse(v)
             .ok_or_else(|| anyhow!("--split-rows: expected 0, a positive integer, or 'auto'"))?;
     }
-    Ok(matches!(cfg.split, SplitThreshold::Rows(_)))
+    Ok(())
 }
 
 fn make_backend(name: &str) -> Result<Box<dyn Backend>> {
@@ -288,19 +288,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
     if let Some(on) = args.parse_bool("adaptive")? {
         cfg.adaptive.enabled = on;
     }
-    // SPMV_AT_SPLIT_ROWS unless --split-rows overrides; an explicit row
-    // threshold opts into the single-loop multi-shard serving shape so
-    // an oversized system can split across sockets.
-    let explicit_split = apply_split_flag(args, &mut cfg)?;
-    let effective_shards =
-        spmv_at::coordinator::shards::shard_thread_counts(cfg.threads, cfg.shards).len();
-    let (_srv, client) = if explicit_split && effective_shards > 1 {
-        let split = cfg.split;
-        println!("# split-rows {split}: one loop over {effective_shards} shard(s)");
-        Server::spawn(Coordinator::new(cfg), 32)
-    } else {
-        Server::spawn_sharded(cfg, 32)
-    };
+    // SPMV_AT_SPLIT_ROWS unless --split-rows overrides.
+    apply_split_flag(args, &mut cfg)?;
+    let (_srv, client) = Server::spawn_sharded(cfg, 32);
     client.register(&name, a)?;
     let b = vec![1.0; n];
     let opts = SolverOptions {
@@ -371,9 +361,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(on) = args.parse_bool("adaptive")? {
         cfg.adaptive.enabled = on;
     }
-    // SPMV_AT_SPLIT_ROWS unless --split-rows overrides (see
-    // `apply_split_flag` for the serving-shape consequence).
-    let explicit_split = apply_split_flag(args, &mut cfg)?;
+    // SPMV_AT_SPLIT_ROWS unless --split-rows overrides.
+    apply_split_flag(args, &mut cfg)?;
     // Attach XLA runtime if artifacts exist (XLA serving is single-loop:
     // the artifact handle is not shared across shard coordinators).
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -395,40 +384,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Err(e) => println!("# XLA runtime unavailable: {e}"),
         }
         Server::spawn(coord, 64)
-    } else if explicit_split && effective > 1 {
-        // Explicit split threshold: one request loop over one multi-shard
-        // coordinator, so an oversized matrix can split across sockets
-        // and run its blocks concurrently.
-        let split = cfg.split;
-        let topo = spmv_at::machine::Topology::detect();
-        println!(
-            "# serving 1 loop over {} shard(s) / {} socket(s), {} thread(s), adaptive={}, \
-             split-rows {split}",
-            effective,
-            topo.n_sockets(),
-            cfg.threads,
-            if adaptive_on { "on" } else { "off" }
-        );
-        Server::spawn(Coordinator::new(cfg), 64)
     } else {
         let topo = spmv_at::machine::Topology::detect();
         println!(
-            "# serving {} shard(s) over {} socket(s), {} thread(s), adaptive={}",
+            "# serving {} shard(s) over {} socket(s), {} thread(s), adaptive={}, split-rows {}",
             effective,
             topo.n_sockets(),
             cfg.threads,
-            if adaptive_on { "on" } else { "off" }
+            if adaptive_on { "on" } else { "off" },
+            cfg.split
         );
         Server::spawn_sharded(cfg, 64)
     };
-    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | spmm <name> <batch> | stats | replan <name> | evict <name> | quit");
+    // --listen (or SPMV_AT_LISTEN): put the network front end in front of
+    // the serving loops. The REPL keeps running alongside it; on stdin
+    // EOF a listening server keeps serving until killed.
+    let listen_spec = args
+        .get("listen")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SPMV_AT_LISTEN").ok());
+    enum Serving {
+        Local(Server),
+        Net(spmv_at::net::NetServer),
+    }
+    let serving = match &listen_spec {
+        None => Serving::Local(srv),
+        Some(spec) => {
+            let addr = spmv_at::net::parse_listen(spec)?;
+            let net = spmv_at::net::NetServer::start(
+                srv,
+                client.clone(),
+                &addr,
+                spmv_at::net::NetConfig::default(),
+            )?;
+            println!(
+                "# listening on {} (protocol v{}, docs/PROTOCOL.md)",
+                net.local_addr(),
+                spmv_at::net::proto::VERSION
+            );
+            Serving::Net(net)
+        }
+    };
+    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | spmm <name> <batch> | stats | netstats | replan <name> | evict <name> | quit");
     let stdin = std::io::stdin();
+    let mut explicit_quit = false;
     for line in stdin.lock().lines() {
         let line = line?;
         let parts: Vec<&str> = line.split_whitespace().collect();
         match parts.as_slice() {
             [] => {}
-            ["quit"] | ["exit"] => break,
+            ["quit"] | ["exit"] => {
+                explicit_quit = true;
+                break;
+            }
             ["register", name, spec_name, rest @ ..] => {
                 let scale: f64 = rest.first().unwrap_or(&"0.05").parse().unwrap_or(0.05);
                 match spec_by_name(spec_name) {
@@ -477,14 +485,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             ["stats"] => {
                 for s in client.stats()? {
-                    // The serving shard: the client's route when sharded
-                    // loops serve (each loop is internally single-shard),
-                    // the entry's own shard otherwise.
-                    let shard = if client.shards() > 1 {
-                        spmv_at::coordinator::shards::route_key(&s.name, client.shards()) as usize
-                    } else {
-                        s.shard
-                    };
                     // Split-served entries show their block count and how
                     // many calls the split served.
                     let split = if s.split_parts > 0 {
@@ -492,16 +492,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     } else {
                         String::new()
                     };
+                    // Every loop sees all the shards, so the entry's own
+                    // shard field is the serving route in every shape.
                     println!(
-                        "{}: n={} nnz={} D={:.3} shard={} serving={} calls={} amortized={} \
-                         samples=crs:{}/imp:{} explored={} replans={}{split}",
+                        "{}: n={} nnz={} D={:.3} shard={} serving={} calls={} passes={} \
+                         amortized={} samples=crs:{}/imp:{} explored={} replans={}{split}",
                         s.name,
                         s.n,
                         s.nnz,
                         s.d_mat,
-                        shard,
+                        s.shard,
                         s.serving,
                         s.calls,
+                        s.matrix_passes,
                         s.amortized,
                         s.samples_crs,
                         s.samples_imp,
@@ -510,6 +513,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     );
                 }
             }
+            ["netstats"] => match &serving {
+                Serving::Local(_) => println!("! no network front end (start with --listen)"),
+                Serving::Net(net) => {
+                    let s = net.counters().snapshot();
+                    println!(
+                        "sessions={}/{} batches={} requests={} coalesced={}/{} rejects={} \
+                         max_batch={} factor={:.2}",
+                        s.sessions_open,
+                        s.sessions_total,
+                        s.batches,
+                        s.requests,
+                        s.coalesced_batches,
+                        s.coalesced_requests,
+                        s.admission_rejects,
+                        s.max_batch,
+                        net.counters().coalescing_factor()
+                    );
+                }
+            },
             ["replan", name] => match client.replan(name) {
                 Ok(s) => println!("ok serving={} replans={}", s.serving, s.replans),
                 Err(e) => println!("! {e}"),
@@ -520,11 +542,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
             other => println!("! unknown command {other:?}"),
         }
     }
+    let coords = match serving {
+        Serving::Local(srv) => srv.shutdown_all(),
+        Serving::Net(net) => {
+            if !explicit_quit {
+                // stdin closed without a quit: a listening server is a
+                // daemon, so keep serving until the process is killed.
+                println!("# stdin closed; serving on {} until killed", net.local_addr());
+                loop {
+                    std::thread::park();
+                }
+            }
+            net.shutdown()
+        }
+    };
     if let Some(p) = &learned_path {
         // Merge what every shard coordinator learned beyond the shared
         // preloaded snapshot and persist it as v2 (a plain merge would
         // count the preload once per shard).
-        let coords = srv.shutdown_all();
         let Some(first) = coords.first() else { return Ok(()) };
         let base = preload_snapshot
             .unwrap_or_else(|| LearnedTuning::new(first.learned().base.clone()));
@@ -598,12 +633,14 @@ fn usage() -> ! {
          \x20 --split-rows <n> route matrices with >= n rows through a cached\n\
          \x20                  cross-shard SplitPlan whose row blocks execute\n\
          \x20                  concurrently, one per socket (0 = never, 'auto' = the\n\
-         \x20                  nnz-per-socket heuristic; an explicit n also switches\n\
-         \x20                  solve/serve to one request loop over a multi-shard\n\
-         \x20                  coordinator so the split can span sockets; overrides\n\
-         \x20                  SPMV_AT_SPLIT_ROWS)\n\
+         \x20                  nnz-per-socket heuristic; overrides SPMV_AT_SPLIT_ROWS)\n\
+         \x20 --listen <spec>  (serve) also serve the framed binary protocol over\n\
+         \x20                  unix:<path>, tcp:<host>:<port>, or <host>:<port>,\n\
+         \x20                  coalescing concurrent single-vector requests into\n\
+         \x20                  batches (overrides SPMV_AT_LISTEN; docs/PROTOCOL.md)\n\
          environment: SPMV_AT_THREADS, SPMV_AT_SHARDS, SPMV_AT_BATCH_TILE,\n\
-         \x20 SPMV_AT_ADAPTIVE, SPMV_AT_SPLIT_ROWS,\n\
+         \x20 SPMV_AT_ADAPTIVE, SPMV_AT_SPLIT_ROWS, SPMV_AT_LISTEN,\n\
+         \x20 SPMV_AT_NET_QUEUE, SPMV_AT_COALESCE_WAIT_US,\n\
          \x20 SPMV_AT_TOPOLOGY=<sockets>:<cores> (see docs/TUNING.md)\n\
          examples:\n\
          \x20 spmv-at suite --scale 0.05\n\
@@ -612,6 +649,7 @@ fn usage() -> ! {
          \x20 spmv-at spmv --matrix chem_master1 --switch 0 --iters 100 --batch 16\n\
          \x20 spmv-at solve --matrix xenon1 --solver cg --adaptive 1\n\
          \x20 spmv-at serve --shards 4 --adaptive 1 --learned learned.tsv\n\
+         \x20 spmv-at serve --listen tcp:0.0.0.0:7077\n\
          \x20 spmv-at topology"
     );
     std::process::exit(2)

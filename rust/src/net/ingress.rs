@@ -1,0 +1,313 @@
+//! Ingress queues and the cross-request batch coalescer.
+//!
+//! Network sessions do not call the serving loops directly for
+//! single-vector SpMV. They submit to a bounded per-shard ingress queue;
+//! a coalescer thread per shard drains whatever has accumulated, groups
+//! the pending requests by matrix key (arrival order preserved), and
+//! issues one [`Client::spmv_batch`] per group — so `k` concurrent
+//! requests against the same matrix become one tiled SpMM that streams
+//! the matrix ⌈k/tile⌉ times instead of `k`. The batched result is
+//! scattered back to the per-request response channels; because the
+//! batch path and the single path run the same kernels over the same
+//! plan, the scattered vectors are bitwise identical to serving each
+//! request alone.
+//!
+//! Batching needs no timer to happen: while the shard executes one
+//! batch, new arrivals accumulate in the queue and the next drain picks
+//! them all up. [`NetConfig::coalesce_wait`](super::NetConfig) can add a
+//! deliberate post-first-arrival wait for latency-tolerant, throughput-
+//! hungry deployments (default 0).
+//!
+//! Backpressure is explicit and non-blocking: `submit` uses `try_send`,
+//! and a full queue is an admission reject — the session answers the
+//! client with `Busy` instead of parking the socket reader on a queue
+//! that may stay full.
+
+use crate::coordinator::shards::route_key;
+use crate::coordinator::Client;
+use crate::{Result, Value};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// `SPMV_AT_NET_QUEUE` — ingress queue depth per shard (default 256,
+/// floor 1). Requests beyond this bound are refused with `Busy`.
+pub fn configured_queue_depth() -> usize {
+    std::env::var("SPMV_AT_NET_QUEUE")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(256)
+        .max(1)
+}
+
+/// `SPMV_AT_COALESCE_WAIT_US` — microseconds the coalescer waits after
+/// the first arrival before draining, to let more requests land in the
+/// same batch (default 0: drain immediately; batching still happens
+/// whenever the shard is busy, because arrivals queue behind the
+/// in-flight batch).
+pub fn configured_coalesce_wait() -> Duration {
+    Duration::from_micros(
+        std::env::var("SPMV_AT_COALESCE_WAIT_US")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(0),
+    )
+}
+
+/// Shared serving-front counters (sessions, batches, admission rejects).
+/// All loads/stores are relaxed: these are monotonic telemetry, not
+/// synchronization.
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    /// Sessions currently open.
+    pub sessions_open: AtomicU64,
+    /// Sessions accepted over the listener's lifetime.
+    pub sessions_total: AtomicU64,
+    /// Coalescer dispatches (one per matrix-key group, singletons included).
+    pub batches: AtomicU64,
+    /// Requests served through the coalescer.
+    pub requests: AtomicU64,
+    /// Dispatches that coalesced ≥ 2 requests into one batch call.
+    pub coalesced_batches: AtomicU64,
+    /// Requests served inside those coalesced dispatches.
+    pub coalesced_requests: AtomicU64,
+    /// Requests refused with `Busy` because the ingress queue was full.
+    pub admission_rejects: AtomicU64,
+    /// Largest single dispatch so far.
+    pub max_batch: AtomicU64,
+}
+
+impl NetCounters {
+    /// Mean requests per coalescer dispatch — the measured coalescing
+    /// factor. 1.0 means no cross-request batching happened; `k` means
+    /// the matrix-streaming cost of serving was cut by about `k` (up to
+    /// tile granularity).
+    pub fn coalescing_factor(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 1.0;
+        }
+        self.requests.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    /// Snapshot for the wire (`NetStats` reply).
+    pub fn snapshot(&self) -> super::proto::WireNetStats {
+        super::proto::WireNetStats {
+            sessions_open: self.sessions_open.load(Ordering::Relaxed),
+            sessions_total: self.sessions_total.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            coalesced_requests: self.coalesced_requests.load(Ordering::Relaxed),
+            admission_rejects: self.admission_rejects.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One queued single-vector request waiting to be coalesced.
+struct Pending {
+    key: String,
+    x: Vec<Value>,
+    resp: mpsc::Sender<Result<Vec<Value>>>,
+}
+
+/// Cheap, cloneable submission front over the per-shard ingress queues.
+/// Sessions hold one each; requests are routed by the same
+/// [`route_key`] hash the serving client uses, so a shard's coalescer
+/// only ever batches work that shard serves.
+#[derive(Clone)]
+pub struct Ingress {
+    txs: Vec<mpsc::SyncSender<Pending>>,
+    counters: Arc<NetCounters>,
+}
+
+impl Ingress {
+    /// Queue a single-vector request. Returns the channel the result
+    /// will arrive on, or `None` if the shard's queue is full (an
+    /// admission reject — reply `Busy`, do not block).
+    pub fn submit(&self, key: &str, x: Vec<Value>) -> Option<mpsc::Receiver<Result<Vec<Value>>>> {
+        let (resp, rx) = mpsc::channel();
+        let shard = route_key(key, self.txs.len()) as usize;
+        match self.txs[shard].try_send(Pending { key: key.to_string(), x, resp }) {
+            Ok(()) => Some(rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.counters.admission_rejects.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(mpsc::TrySendError::Disconnected(p)) => {
+                // Coalescer gone (server shutting down): fail the request
+                // through its own channel rather than lying with `Busy`.
+                let _ = p.resp.send(Err(anyhow::anyhow!("server stopped")));
+                Some(rx)
+            }
+        }
+    }
+
+    /// The shared counters (for sessions to bump and report).
+    pub fn counters(&self) -> &Arc<NetCounters> {
+        &self.counters
+    }
+}
+
+/// Owner of the coalescer threads; joining it is bounded even while
+/// detached sessions still hold [`Ingress`] clones, because the drain
+/// loop re-checks the stop flag every 50 ms.
+pub struct CoalescerSet {
+    stop: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl CoalescerSet {
+    /// Signal and join all coalescer threads.
+    pub fn join(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn one coalescer thread per serving shard, each owning the
+/// receiving end of that shard's bounded ingress queue.
+pub fn spawn_coalescers(
+    client: &Client,
+    queue_depth: usize,
+    coalesce_wait: Duration,
+    counters: Arc<NetCounters>,
+) -> (Ingress, CoalescerSet) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut txs = Vec::new();
+    let mut handles = Vec::new();
+    for shard in 0..client.shards() {
+        let (tx, rx) = mpsc::sync_channel::<Pending>(queue_depth.max(1));
+        txs.push(tx);
+        let client = client.clone();
+        let counters = Arc::clone(&counters);
+        let stop = Arc::clone(&stop);
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("spmv-coalesce-{shard}"))
+                .spawn(move || loop {
+                    match rx.recv_timeout(Duration::from_millis(50)) {
+                        Ok(first) => {
+                            if !coalesce_wait.is_zero() {
+                                std::thread::sleep(coalesce_wait);
+                            }
+                            let mut batch = vec![first];
+                            while let Ok(p) = rx.try_recv() {
+                                batch.push(p);
+                            }
+                            dispatch(&client, batch, &counters);
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                })
+                .expect("spawn coalescer thread"),
+        );
+    }
+    (Ingress { txs, counters }, CoalescerSet { stop, handles })
+}
+
+/// Group one drain by matrix key (arrival order preserved) and serve
+/// each group with a single batch call, scattering results to waiters.
+fn dispatch(client: &Client, batch: Vec<Pending>, counters: &NetCounters) {
+    let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
+    for p in batch {
+        match groups.iter_mut().find(|(k, _)| *k == p.key) {
+            Some((_, g)) => g.push(p),
+            None => {
+                let key = p.key.clone();
+                groups.push((key, vec![p]));
+            }
+        }
+    }
+    for (key, group) in groups {
+        let k = group.len() as u64;
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters.requests.fetch_add(k, Ordering::Relaxed);
+        if k >= 2 {
+            counters.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+            counters.coalesced_requests.fetch_add(k, Ordering::Relaxed);
+        }
+        counters.max_batch.fetch_max(k, Ordering::Relaxed);
+        let (xs, resps): (Vec<_>, Vec<_>) = group.into_iter().map(|p| (p.x, p.resp)).unzip();
+        match client.spmv_batch(&key, xs) {
+            Ok(ys) => {
+                for (y, resp) in ys.into_iter().zip(resps) {
+                    let _ = resp.send(Ok(y));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for resp in resps {
+                    let _ = resp.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, CoordinatorConfig, Server};
+    use crate::formats::Csr;
+
+    fn serving_client() -> (Server, Client) {
+        let tuning = crate::autotune::online::TuningData {
+            backend: "sim:ES2".into(),
+            imp: crate::spmv::Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        };
+        let mut cfg = CoordinatorConfig::new(tuning);
+        cfg.threads = 2;
+        cfg.adaptive.enabled = false;
+        Server::spawn(Coordinator::new(cfg), 32)
+    }
+
+    #[test]
+    fn coalesced_results_match_direct_serving() {
+        let (server, client) = serving_client();
+        client.register("i", Csr::identity(6)).unwrap();
+        let counters = Arc::new(NetCounters::default());
+        let (ingress, set) =
+            spawn_coalescers(&client, 16, Duration::from_millis(0), Arc::clone(&counters));
+
+        let x: Vec<Value> = (0..6).map(|i| i as Value + 0.5).collect();
+        let rx = ingress.submit("i", x.clone()).expect("queue not full");
+        let y = rx.recv().unwrap().unwrap();
+        assert_eq!(y, client.spmv("i", x).unwrap());
+        assert_eq!(counters.requests.load(Ordering::Relaxed), 1);
+        assert!(counters.coalescing_factor() >= 1.0);
+
+        set.join();
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_matrix_fails_each_waiter_not_the_coalescer() {
+        let (server, client) = serving_client();
+        let counters = Arc::new(NetCounters::default());
+        let (ingress, set) =
+            spawn_coalescers(&client, 16, Duration::from_millis(0), Arc::clone(&counters));
+
+        let rx = ingress.submit("nope", vec![1.0]).expect("queue not full");
+        assert!(rx.recv().unwrap().is_err());
+
+        // The coalescer survives a failed dispatch and serves the next one.
+        client.register("i", Csr::identity(3)).unwrap();
+        let rx = ingress.submit("i", vec![1.0, 2.0, 3.0]).expect("queue not full");
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![1.0, 2.0, 3.0]);
+
+        set.join();
+        server.shutdown();
+    }
+}

@@ -1,0 +1,519 @@
+//! Network serving front end: Unix-socket and TCP transports over the
+//! sharded serving loops, with cross-request batch coalescing.
+//!
+//! The layering, outside-in:
+//!
+//! ```text
+//!   TcpListener / UnixListener        accept loop ([`NetServer`])
+//!        │  one thread per connection
+//!        ▼
+//!   session ([`session::run_session`])   framed protocol state machine
+//!        │  Spmv → bounded ingress queue; everything else → Client
+//!        ▼
+//!   coalescer ([`ingress`])           one thread per shard: drain,
+//!        │                            group by matrix key, batch
+//!        ▼
+//!   Client → serving loops            the same sharded loops the
+//!                                     in-process API uses
+//! ```
+//!
+//! The front end adds no serving semantics: every request lands on the
+//! same [`Client`] the in-process embedding uses, so results are
+//! bitwise identical to local serving. What it adds is *admission* —
+//! bounded queues with explicit `Busy` backpressure — and *coalescing*:
+//! concurrent single-vector requests against the same matrix are folded
+//! into one tiled batch call, cutting matrix-streaming passes from `k`
+//! to ⌈k/tile⌉ (see [`ingress`]).
+//!
+//! The wire format lives in [`proto`]; `docs/PROTOCOL.md` is its
+//! byte-level reference.
+
+pub mod ingress;
+pub mod proto;
+pub mod session;
+
+use crate::coordinator::{Client, Coordinator, Server};
+use crate::formats::{Csr, SparseMatrix};
+use crate::{Result, Value};
+use self::ingress::{CoalescerSet, Ingress, NetCounters};
+use self::proto::{Message, WireNetStats, WireStatsRow};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Where to listen (or connect): TCP `host:port` or a Unix socket path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ListenAddr {
+    /// TCP, `host:port` form.
+    Tcp(String),
+    /// Unix domain socket path.
+    Unix(PathBuf),
+}
+
+impl std::fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ListenAddr::Tcp(a) => write!(f, "tcp:{a}"),
+            ListenAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// Parse a listen spec: `unix:/path/to.sock`, `tcp:host:port`, or bare
+/// `host:port` (treated as TCP).
+///
+/// ```
+/// use spmv_at::net::{parse_listen, ListenAddr};
+/// assert_eq!(
+///     parse_listen("unix:/tmp/spmv.sock").unwrap(),
+///     ListenAddr::Unix("/tmp/spmv.sock".into())
+/// );
+/// assert_eq!(
+///     parse_listen("tcp:0.0.0.0:7077").unwrap(),
+///     ListenAddr::Tcp("0.0.0.0:7077".into())
+/// );
+/// assert_eq!(
+///     parse_listen("127.0.0.1:7077").unwrap(),
+///     ListenAddr::Tcp("127.0.0.1:7077".into())
+/// );
+/// assert!(parse_listen("").is_err());
+/// ```
+pub fn parse_listen(spec: &str) -> Result<ListenAddr> {
+    if let Some(path) = spec.strip_prefix("unix:") {
+        anyhow::ensure!(!path.is_empty(), "empty unix socket path in {spec:?}");
+        return Ok(ListenAddr::Unix(PathBuf::from(path)));
+    }
+    let addr = spec.strip_prefix("tcp:").unwrap_or(spec);
+    anyhow::ensure!(
+        addr.contains(':') && !addr.starts_with(':') && !addr.ends_with(':'),
+        "listen spec {spec:?} is not unix:<path>, tcp:<host>:<port>, or <host>:<port>"
+    );
+    Ok(ListenAddr::Tcp(addr.to_string()))
+}
+
+/// Front-end tuning knobs. `Default` reads the environment
+/// ([`ingress::configured_queue_depth`],
+/// [`ingress::configured_coalesce_wait`]); tests construct explicit
+/// values instead of mutating the environment.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Per-shard ingress queue bound; a full queue answers `Busy`.
+    pub queue_depth: usize,
+    /// Post-first-arrival wait before the coalescer drains its queue.
+    pub coalesce_wait: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            queue_depth: ingress::configured_queue_depth(),
+            coalesce_wait: ingress::configured_coalesce_wait(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+/// A connected stream over either transport.
+enum Conn {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// The running network front end: listener + accept loop + coalescers,
+/// wrapped around a [`Server`] and its [`Client`].
+pub struct NetServer {
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    coalescers: Option<CoalescerSet>,
+    ingress: Option<Ingress>,
+    counters: Arc<NetCounters>,
+    local: ListenAddr,
+    unix_path: Option<PathBuf>,
+    server: Option<Server>,
+}
+
+impl NetServer {
+    /// Bind the listener and start serving connections. Binding failures
+    /// surface here synchronously; after `Ok`, [`Self::local_addr`]
+    /// carries the resolved address (useful with TCP port 0).
+    pub fn start(server: Server, client: Client, addr: &ListenAddr, cfg: NetConfig) -> Result<Self> {
+        let counters = Arc::new(NetCounters::default());
+        let (ing, coalescers) = ingress::spawn_coalescers(
+            &client,
+            cfg.queue_depth,
+            cfg.coalesce_wait,
+            Arc::clone(&counters),
+        );
+        let (listener, local, unix_path) = match addr {
+            ListenAddr::Tcp(a) => {
+                let l = TcpListener::bind(a)
+                    .map_err(|e| anyhow::anyhow!("cannot listen on tcp:{a}: {e}"))?;
+                let local = ListenAddr::Tcp(l.local_addr()?.to_string());
+                l.set_nonblocking(true)?;
+                (Listener::Tcp(l), local, None)
+            }
+            ListenAddr::Unix(p) => {
+                // A leftover socket file from an unclean shutdown refuses
+                // rebinding; reclaim it only if nothing answers on it.
+                if p.exists() && UnixStream::connect(p).is_err() {
+                    let _ = std::fs::remove_file(p);
+                }
+                let l = UnixListener::bind(p)
+                    .map_err(|e| anyhow::anyhow!("cannot listen on unix:{}: {e}", p.display()))?;
+                l.set_nonblocking(true)?;
+                (Listener::Unix(l), ListenAddr::Unix(p.clone()), Some(p.clone()))
+            }
+        };
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let counters = Arc::clone(&counters);
+            let ing = ing.clone();
+            std::thread::Builder::new()
+                .name("spmv-accept".into())
+                .spawn(move || accept_loop(listener, stop, client, ing, counters))
+                .expect("spawn accept thread")
+        };
+
+        Ok(Self {
+            stop,
+            accept: Some(accept),
+            coalescers: Some(coalescers),
+            ingress: Some(ing),
+            counters,
+            local,
+            unix_path,
+            server: Some(server),
+        })
+    }
+
+    /// The resolved listen address (with the OS-assigned port for TCP
+    /// binds to port 0).
+    pub fn local_addr(&self) -> &ListenAddr {
+        &self.local
+    }
+
+    /// The serving-front counters (shared with sessions and coalescers).
+    pub fn counters(&self) -> &Arc<NetCounters> {
+        &self.counters
+    }
+
+    /// Stop accepting, join the coalescers, and shut the serving loops
+    /// down, returning their coordinators (joins are bounded even while
+    /// detached session threads linger — see [`ingress::CoalescerSet`]).
+    pub fn shutdown(mut self) -> Vec<Coordinator> {
+        self.stop_front();
+        self.server.take().expect("server present until shutdown").shutdown_all()
+    }
+
+    fn stop_front(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        drop(self.ingress.take());
+        if let Some(c) = self.coalescers.take() {
+            c.join();
+        }
+        if let Some(p) = self.unix_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_front();
+        if let Some(server) = self.server.take() {
+            let _ = server.shutdown_all();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: Listener,
+    stop: Arc<AtomicBool>,
+    client: Client,
+    ing: Ingress,
+    counters: Arc<NetCounters>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        let conn = match &listener {
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    let _ = s.set_nonblocking(false);
+                    let _ = s.set_nodelay(true);
+                    Some(Conn::Tcp(s))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(_) => None,
+            },
+            Listener::Unix(l) => match l.accept() {
+                Ok((s, _)) => {
+                    let _ = s.set_nonblocking(false);
+                    Some(Conn::Unix(s))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(_) => None,
+            },
+        };
+        match conn {
+            Some(conn) => {
+                counters.sessions_total.fetch_add(1, Ordering::Relaxed);
+                counters.sessions_open.fetch_add(1, Ordering::Relaxed);
+                let client = client.clone();
+                let ing = ing.clone();
+                let counters = Arc::clone(&counters);
+                // Detached on purpose: a session lives exactly as long as
+                // its connection, and an abrupt disconnect must never take
+                // anything down with it.
+                let _ = std::thread::Builder::new().name("spmv-session".into()).spawn(move || {
+                    let _ = session::run_session(conn, client, ing);
+                    counters.sessions_open.fetch_sub(1, Ordering::Relaxed);
+                });
+            }
+            None => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// A blocking protocol client over either transport. One request in
+/// flight at a time; the request-id echo is verified on every reply.
+pub struct NetClient {
+    conn: Conn,
+    next_id: u32,
+}
+
+impl NetClient {
+    /// Connect and complete the version handshake.
+    pub fn connect(addr: &ListenAddr) -> Result<Self> {
+        let conn = match addr {
+            ListenAddr::Tcp(a) => {
+                let s = TcpStream::connect(a)?;
+                s.set_nodelay(true)?;
+                Conn::Tcp(s)
+            }
+            ListenAddr::Unix(p) => Conn::Unix(UnixStream::connect(p)?),
+        };
+        let mut c = Self { conn, next_id: 0 };
+        match c.call(&Message::Hello { version: proto::VERSION })? {
+            Message::HelloAck { .. } => Ok(c),
+            Message::Error { code, message } => {
+                anyhow::bail!("handshake rejected (error {code}): {message}")
+            }
+            other => anyhow::bail!("unexpected handshake reply: {other:?}"),
+        }
+    }
+
+    fn call(&mut self, msg: &Message) -> Result<Message> {
+        self.next_id = self.next_id.wrapping_add(1);
+        let id = self.next_id;
+        proto::write_frame(&mut self.conn, &proto::encode(id, msg))?;
+        let payload = proto::read_frame(&mut self.conn)?
+            .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?;
+        let (got, reply) = proto::decode(&payload)?;
+        anyhow::ensure!(got == id, "response id {got} does not match request id {id}");
+        Ok(reply)
+    }
+
+    /// Register a matrix under `name`.
+    pub fn register(&mut self, name: &str, csr: &Csr) -> Result<WireStatsRow> {
+        let msg = Message::Register {
+            name: name.into(),
+            n_rows: csr.n_rows() as u64,
+            n_cols: csr.n_cols() as u64,
+            row_ptr: csr.row_ptr.iter().map(|&v| v as u64).collect(),
+            col_idx: csr.col_idx.clone(),
+            values: csr.values.clone(),
+        };
+        match self.call(&msg)? {
+            Message::Registered { row } => Ok(row),
+            other => Err(reply_err(other)),
+        }
+    }
+
+    /// `y = A·x` (single vector — the server may coalesce it with
+    /// concurrent requests from other connections).
+    pub fn spmv(&mut self, name: &str, x: Vec<Value>) -> Result<Vec<Value>> {
+        match self.call(&Message::Spmv { name: name.into(), x })? {
+            Message::Vector { y } => Ok(y),
+            other => Err(reply_err(other)),
+        }
+    }
+
+    /// Batched `Y = A·X`, pre-grouped by the caller.
+    pub fn spmv_batch(&mut self, name: &str, xs: Vec<Vec<Value>>) -> Result<Vec<Vec<Value>>> {
+        match self.call(&Message::SpmvBatch { name: name.into(), xs })? {
+            Message::Vectors { ys } => Ok(ys),
+            other => Err(reply_err(other)),
+        }
+    }
+
+    /// All stats rows, merged across shards.
+    pub fn stats(&mut self) -> Result<Vec<WireStatsRow>> {
+        match self.call(&Message::Stats)? {
+            Message::StatsRows { rows } => Ok(rows),
+            other => Err(reply_err(other)),
+        }
+    }
+
+    /// Force a re-decision for `name`.
+    pub fn replan(&mut self, name: &str) -> Result<WireStatsRow> {
+        match self.call(&Message::Replan { name: name.into() })? {
+            Message::Registered { row } => Ok(row),
+            other => Err(reply_err(other)),
+        }
+    }
+
+    /// Evict `name`; `Ok(true)` if it existed.
+    pub fn evict(&mut self, name: &str) -> Result<bool> {
+        match self.call(&Message::Evict { name: name.into() })? {
+            Message::Evicted { existed } => Ok(existed),
+            other => Err(reply_err(other)),
+        }
+    }
+
+    /// The server's ingress/coalescer counter snapshot.
+    pub fn net_stats(&mut self) -> Result<WireNetStats> {
+        match self.call(&Message::NetStats)? {
+            Message::NetStatsReply { stats } => Ok(stats),
+            other => Err(reply_err(other)),
+        }
+    }
+}
+
+fn reply_err(msg: Message) -> anyhow::Error {
+    match msg {
+        Message::Busy => anyhow::anyhow!("server busy: ingress queue full, retry later"),
+        Message::Error { code, message } => anyhow::anyhow!("server error {code}: {message}"),
+        other => anyhow::anyhow!("unexpected reply: {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+
+    fn test_cfg() -> CoordinatorConfig {
+        let tuning = crate::autotune::online::TuningData {
+            backend: "sim:ES2".into(),
+            imp: crate::spmv::Implementation::EllRowOuter,
+            threads: 1,
+            c: 1.0,
+            d_star: Some(3.1),
+        };
+        let mut cfg = CoordinatorConfig::new(tuning);
+        cfg.threads = 2;
+        cfg.adaptive.enabled = false;
+        cfg
+    }
+
+    fn start_tcp(cfg: NetConfig) -> NetServer {
+        let (server, client) = Server::spawn_sharded(test_cfg(), 32);
+        NetServer::start(server, client, &ListenAddr::Tcp("127.0.0.1:0".into()), cfg)
+            .expect("bind an ephemeral port")
+    }
+
+    #[test]
+    fn parse_listen_accepts_all_three_forms() {
+        assert_eq!(parse_listen("unix:/tmp/x.sock").unwrap(), ListenAddr::Unix("/tmp/x.sock".into()));
+        assert_eq!(parse_listen("tcp:127.0.0.1:9").unwrap(), ListenAddr::Tcp("127.0.0.1:9".into()));
+        assert_eq!(parse_listen("127.0.0.1:9").unwrap(), ListenAddr::Tcp("127.0.0.1:9".into()));
+        assert!(parse_listen("").is_err());
+        assert!(parse_listen("unix:").is_err());
+        assert!(parse_listen("justahost").is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip_register_spmv_stats_evict() {
+        let net = start_tcp(NetConfig { queue_depth: 64, coalesce_wait: Duration::ZERO });
+        let addr = net.local_addr().clone();
+        let mut c = NetClient::connect(&addr).unwrap();
+
+        let csr = Csr::identity(5);
+        let row = c.register("id", &csr).unwrap();
+        assert_eq!(row.n, 5);
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(c.spmv("id", x.clone()).unwrap(), x);
+        assert_eq!(c.spmv_batch("id", vec![x.clone(), x.clone()]).unwrap(), vec![x.clone(), x]);
+        assert_eq!(c.stats().unwrap().len(), 1);
+        let ns = c.net_stats().unwrap();
+        assert_eq!(ns.requests, 1);
+        assert!(ns.sessions_total >= 1);
+        assert!(c.evict("id").unwrap());
+        assert!(!c.evict("id").unwrap());
+        drop(c);
+        net.shutdown();
+    }
+
+    #[test]
+    fn unix_socket_roundtrip_and_socket_file_cleanup() {
+        let path = std::env::temp_dir().join(format!("spmv-at-test-{}.sock", std::process::id()));
+        let (server, client) = Server::spawn_sharded(test_cfg(), 32);
+        let net = NetServer::start(
+            server,
+            client,
+            &ListenAddr::Unix(path.clone()),
+            NetConfig { queue_depth: 64, coalesce_wait: Duration::ZERO },
+        )
+        .unwrap();
+        let mut c = NetClient::connect(&ListenAddr::Unix(path.clone())).unwrap();
+        c.register("id", &Csr::identity(3)).unwrap();
+        assert_eq!(c.spmv("id", vec![1.0, 2.0, 3.0]).unwrap(), vec![1.0, 2.0, 3.0]);
+        drop(c);
+        net.shutdown();
+        assert!(!path.exists(), "shutdown removes the socket file");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_with_the_right_code() {
+        let net = start_tcp(NetConfig { queue_depth: 4, coalesce_wait: Duration::ZERO });
+        let ListenAddr::Tcp(addr) = net.local_addr().clone() else { unreachable!() };
+        let mut s = TcpStream::connect(&addr).unwrap();
+        proto::write_frame(&mut s, &proto::encode(1, &Message::Hello { version: 999 })).unwrap();
+        let payload = proto::read_frame(&mut s).unwrap().unwrap();
+        let (_, reply) = proto::decode(&payload).unwrap();
+        match reply {
+            Message::Error { code, .. } => assert_eq!(code, proto::ERR_UNSUPPORTED_VERSION),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // The server then closes: next read is clean EOF.
+        assert!(proto::read_frame(&mut s).unwrap().is_none());
+        net.shutdown();
+    }
+}

@@ -1,0 +1,789 @@
+//! Wire protocol: length-prefixed compact binary frames with a versioned
+//! handshake.
+//!
+//! Every frame on the wire is `[payload length: u32 LE][payload]`; the
+//! payload is `[opcode: u8][request id: u32 LE][body]`. All integers are
+//! little-endian, floats are IEEE-754 binary64 little-endian, strings are
+//! `u16` byte length + UTF-8 bytes, vectors are a `u32` element count
+//! followed by the elements. The request id is opaque to the server and
+//! echoed verbatim on the response, so a pipelining client can match
+//! replies to requests. `docs/PROTOCOL.md` is the worked-example,
+//! byte-level reference for everything in this module; the doctests here
+//! pin the same bytes so the document cannot drift from the code.
+//!
+//! A connection starts with [`Message::Hello`] (magic `"SPAT"` + the
+//! protocol version) and is good for requests only after the server's
+//! [`Message::HelloAck`]. Backpressure is explicit: a server whose
+//! ingress queue is full answers [`Message::Busy`] instead of queueing,
+//! and errors travel as [`Message::Error`] with a stable numeric code
+//! plus a human-readable message.
+//!
+//! # Frame round-trip
+//!
+//! ```
+//! use spmv_at::net::proto::{self, Message};
+//! use std::io::Cursor;
+//!
+//! let payload = proto::encode(1, &Message::Hello { version: proto::VERSION });
+//! let mut wire = Vec::new();
+//! proto::write_frame(&mut wire, &payload).unwrap();
+//! // 4-byte LE length prefix, then the payload bytes.
+//! assert_eq!(wire[..4], (payload.len() as u32).to_le_bytes());
+//! assert_eq!(&wire[4..], &payload[..]);
+//!
+//! let mut r = Cursor::new(wire);
+//! let got = proto::read_frame(&mut r).unwrap().expect("one frame");
+//! let (id, msg) = proto::decode(&got).unwrap();
+//! assert_eq!(id, 1);
+//! assert_eq!(msg, Message::Hello { version: proto::VERSION });
+//! // Clean EOF at a frame boundary reads as None, not an error.
+//! assert!(proto::read_frame(&mut r).unwrap().is_none());
+//! ```
+
+use crate::Result;
+use std::io::{Read, Write};
+
+/// Handshake magic, the first four bytes of every [`Message::Hello`] body.
+pub const MAGIC: [u8; 4] = *b"SPAT";
+
+/// Protocol version this build speaks (negotiated in the handshake).
+pub const VERSION: u16 = 1;
+
+/// Hard cap on a frame's payload length; a larger length prefix is
+/// rejected before any allocation (a malformed or hostile prefix must
+/// not OOM the server).
+pub const MAX_FRAME: usize = 1 << 26; // 64 MiB
+
+/// Error code: the client's protocol version is not supported.
+pub const ERR_UNSUPPORTED_VERSION: u16 = 1;
+/// Error code: the opcode byte is not one this server knows.
+pub const ERR_UNKNOWN_OPCODE: u16 = 2;
+/// Error code: the frame body could not be decoded.
+pub const ERR_MALFORMED: u16 = 3;
+/// Error code: the request was understood but serving it failed (the
+/// message carries the server-side error text).
+pub const ERR_SERVER: u16 = 4;
+
+/// Opcode: client hello (handshake).
+pub const OP_HELLO: u8 = 0x01;
+/// Opcode: register a matrix (CSR arrays).
+pub const OP_REGISTER: u8 = 0x10;
+/// Opcode: single-vector SpMV (the coalescable request).
+pub const OP_SPMV: u8 = 0x11;
+/// Opcode: batched SpMM (pre-batched by the client).
+pub const OP_SPMV_BATCH: u8 = 0x12;
+/// Opcode: fetch all stats rows.
+pub const OP_STATS: u8 = 0x13;
+/// Opcode: force a re-decision for one matrix.
+pub const OP_REPLAN: u8 = 0x14;
+/// Opcode: evict a matrix.
+pub const OP_EVICT: u8 = 0x15;
+/// Opcode: fetch the ingress/coalescer counters.
+pub const OP_NET_STATS: u8 = 0x16;
+/// Opcode: server is over admission capacity for this request (reply).
+pub const OP_BUSY: u8 = 0x7E;
+/// Opcode: error reply.
+pub const OP_ERROR: u8 = 0x7F;
+/// Opcode: handshake accepted (reply).
+pub const OP_HELLO_ACK: u8 = 0x81;
+/// Opcode: stats-row reply (to `Register` and `Replan`).
+pub const OP_REGISTERED: u8 = 0x82;
+/// Opcode: single-vector result (reply to `Spmv`).
+pub const OP_VECTOR: u8 = 0x83;
+/// Opcode: batched result (reply to `SpmvBatch`).
+pub const OP_VECTORS: u8 = 0x84;
+/// Opcode: all stats rows (reply to `Stats`).
+pub const OP_STATS_ROWS: u8 = 0x85;
+/// Opcode: eviction result (reply to `Evict`).
+pub const OP_EVICTED: u8 = 0x86;
+/// Opcode: ingress/coalescer counters (reply to `NetStats`).
+pub const OP_NET_STATS_REPLY: u8 = 0x87;
+
+/// Whether `op` is an opcode this build knows how to decode.
+pub fn known_opcode(op: u8) -> bool {
+    matches!(
+        op,
+        OP_HELLO
+            | OP_REGISTER
+            | OP_SPMV
+            | OP_SPMV_BATCH
+            | OP_STATS
+            | OP_REPLAN
+            | OP_EVICT
+            | OP_NET_STATS
+            | OP_BUSY
+            | OP_ERROR
+            | OP_HELLO_ACK
+            | OP_REGISTERED
+            | OP_VECTOR
+            | OP_VECTORS
+            | OP_STATS_ROWS
+            | OP_EVICTED
+            | OP_NET_STATS_REPLY
+    )
+}
+
+/// One stats row as serialised on the wire — the subset of
+/// [`crate::coordinator::EntryStats`] a remote operator needs, with the
+/// serving implementation rendered as text so the wire format does not
+/// depend on the enum's layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireStatsRow {
+    /// Registry key.
+    pub name: String,
+    /// Matrix rows.
+    pub n: u64,
+    /// Matrix non-zeros.
+    pub nnz: u64,
+    /// `D_mat` (row-length variation coefficient).
+    pub d_mat: f64,
+    /// Serving shard.
+    pub shard: u32,
+    /// Serving implementation, rendered as text.
+    pub serving: String,
+    /// Total calls served.
+    pub calls: u64,
+    /// Calls served by the transformed plan.
+    pub transformed_calls: u64,
+    /// Serving-plan flips applied.
+    pub replans: u64,
+    /// Row blocks of the cached split plan (0 = unsplit).
+    pub split_parts: u32,
+    /// Calls served through the split plan.
+    pub split_calls: u64,
+    /// Matrix streaming passes (see `EntryStats::matrix_passes`).
+    pub matrix_passes: u64,
+    /// Extra bytes held beyond the CRS original.
+    pub extra_bytes: u64,
+    /// Whether the transformation cost has amortised.
+    pub amortized: bool,
+}
+
+/// Ingress/coalescer counter snapshot as serialised on the wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireNetStats {
+    /// Sessions currently open.
+    pub sessions_open: u64,
+    /// Sessions accepted over the listener's lifetime.
+    pub sessions_total: u64,
+    /// Coalescer dispatches (every batch, including singletons).
+    pub batches: u64,
+    /// Requests served through the coalescer.
+    pub requests: u64,
+    /// Dispatches that coalesced ≥ 2 requests.
+    pub coalesced_batches: u64,
+    /// Requests served inside those coalesced dispatches.
+    pub coalesced_requests: u64,
+    /// Requests refused with `Busy` because the ingress queue was full.
+    pub admission_rejects: u64,
+    /// Largest single coalesced dispatch.
+    pub max_batch: u64,
+}
+
+/// A decoded protocol message (request or response).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Handshake: magic + version. Must be the first frame on a
+    /// connection.
+    Hello {
+        /// Protocol version the client speaks.
+        version: u16,
+    },
+    /// Handshake accepted; the server speaks `version`.
+    HelloAck {
+        /// Protocol version the server serves.
+        version: u16,
+    },
+    /// Register a matrix under a name (validated CSR arrays).
+    Register {
+        /// Registry key.
+        name: String,
+        /// Number of matrix rows.
+        n_rows: u64,
+        /// Number of matrix columns.
+        n_cols: u64,
+        /// CSR row offsets (`n_rows + 1` entries).
+        row_ptr: Vec<u64>,
+        /// CSR column indices (one per stored entry).
+        col_idx: Vec<u32>,
+        /// CSR values (one per stored entry).
+        values: Vec<f64>,
+    },
+    /// `y = A·x` — the request the ingress coalescer batches.
+    Spmv {
+        /// Registry key.
+        name: String,
+        /// Input vector.
+        x: Vec<f64>,
+    },
+    /// Batched `Y = A·X`, already grouped by the client.
+    SpmvBatch {
+        /// Registry key.
+        name: String,
+        /// Input vectors.
+        xs: Vec<Vec<f64>>,
+    },
+    /// Fetch all stats rows.
+    Stats,
+    /// Force a re-decision for one matrix.
+    Replan {
+        /// Registry key.
+        name: String,
+    },
+    /// Evict a matrix.
+    Evict {
+        /// Registry key.
+        name: String,
+    },
+    /// Fetch the ingress/coalescer counters.
+    NetStats,
+    /// Stats-row reply (to `Register` and `Replan`).
+    Registered {
+        /// The entry's stats row after the operation.
+        row: WireStatsRow,
+    },
+    /// Reply to `Spmv`.
+    Vector {
+        /// The result vector.
+        y: Vec<f64>,
+    },
+    /// Reply to `SpmvBatch`.
+    Vectors {
+        /// One result vector per input.
+        ys: Vec<Vec<f64>>,
+    },
+    /// Reply to `Stats`.
+    StatsRows {
+        /// All rows, merged across shards.
+        rows: Vec<WireStatsRow>,
+    },
+    /// Reply to `Evict`.
+    Evicted {
+        /// Whether the matrix existed.
+        existed: bool,
+    },
+    /// Reply to `NetStats`.
+    NetStatsReply {
+        /// The counter snapshot.
+        stats: WireNetStats,
+    },
+    /// The ingress queue for this request's shard is full; retry later.
+    /// Explicit backpressure — the server never blocks the socket reader
+    /// on a full queue.
+    Busy,
+    /// The request failed; `code` is one of the `ERR_*` constants.
+    Error {
+        /// Stable numeric error code.
+        code: u16,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize, "string too long for the wire");
+    put_u16(buf, s.len() as u16);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_vec_f64(buf: &mut Vec<u8>, v: &[f64]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_f64(buf, x);
+    }
+}
+
+fn put_vec_u64(buf: &mut Vec<u8>, v: &[u64]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u64(buf, x);
+    }
+}
+
+fn put_vec_u32(buf: &mut Vec<u8>, v: &[u32]) {
+    put_u32(buf, v.len() as u32);
+    for &x in v {
+        put_u32(buf, x);
+    }
+}
+
+fn put_row(buf: &mut Vec<u8>, row: &WireStatsRow) {
+    put_str(buf, &row.name);
+    put_u64(buf, row.n);
+    put_u64(buf, row.nnz);
+    put_f64(buf, row.d_mat);
+    put_u32(buf, row.shard);
+    put_str(buf, &row.serving);
+    put_u64(buf, row.calls);
+    put_u64(buf, row.transformed_calls);
+    put_u64(buf, row.replans);
+    put_u32(buf, row.split_parts);
+    put_u64(buf, row.split_calls);
+    put_u64(buf, row.matrix_passes);
+    put_u64(buf, row.extra_bytes);
+    buf.push(row.amortized as u8);
+}
+
+/// Serialise a message into a frame payload (`opcode + request id +
+/// body`, no length prefix — [`write_frame`] adds that).
+///
+/// ```
+/// use spmv_at::net::proto::{self, Message};
+/// // Spmv "m" with x = [1.0], request id 7:
+/// let payload = proto::encode(7, &Message::Spmv { name: "m".into(), x: vec![1.0] });
+/// assert_eq!(
+///     payload,
+///     [
+///         0x11, // opcode OP_SPMV
+///         7, 0, 0, 0, // request id (u32 LE)
+///         1, 0, // name byte length (u16 LE)
+///         b'm', // name bytes (UTF-8)
+///         1, 0, 0, 0, // vector element count (u32 LE)
+///         0, 0, 0, 0, 0, 0, 0xF0, 0x3F, // 1.0 (f64 LE)
+///     ]
+/// );
+/// let (id, msg) = proto::decode(&payload).unwrap();
+/// assert_eq!(id, 7);
+/// assert_eq!(msg, Message::Spmv { name: "m".into(), x: vec![1.0] });
+/// ```
+pub fn encode(id: u32, msg: &Message) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.push(opcode(msg));
+    put_u32(&mut buf, id);
+    match msg {
+        Message::Hello { version } => {
+            buf.extend_from_slice(&MAGIC);
+            put_u16(&mut buf, *version);
+        }
+        Message::HelloAck { version } => put_u16(&mut buf, *version),
+        Message::Register { name, n_rows, n_cols, row_ptr, col_idx, values } => {
+            put_str(&mut buf, name);
+            put_u64(&mut buf, *n_rows);
+            put_u64(&mut buf, *n_cols);
+            put_vec_u64(&mut buf, row_ptr);
+            put_vec_u32(&mut buf, col_idx);
+            put_vec_f64(&mut buf, values);
+        }
+        Message::Spmv { name, x } => {
+            put_str(&mut buf, name);
+            put_vec_f64(&mut buf, x);
+        }
+        Message::SpmvBatch { name, xs } => {
+            put_str(&mut buf, name);
+            put_u32(&mut buf, xs.len() as u32);
+            for x in xs {
+                put_vec_f64(&mut buf, x);
+            }
+        }
+        Message::Stats | Message::NetStats | Message::Busy => {}
+        Message::Replan { name } | Message::Evict { name } => put_str(&mut buf, name),
+        Message::Registered { row } => put_row(&mut buf, row),
+        Message::Vector { y } => put_vec_f64(&mut buf, y),
+        Message::Vectors { ys } => {
+            put_u32(&mut buf, ys.len() as u32);
+            for y in ys {
+                put_vec_f64(&mut buf, y);
+            }
+        }
+        Message::StatsRows { rows } => {
+            put_u32(&mut buf, rows.len() as u32);
+            for row in rows {
+                put_row(&mut buf, row);
+            }
+        }
+        Message::Evicted { existed } => buf.push(*existed as u8),
+        Message::NetStatsReply { stats } => {
+            put_u64(&mut buf, stats.sessions_open);
+            put_u64(&mut buf, stats.sessions_total);
+            put_u64(&mut buf, stats.batches);
+            put_u64(&mut buf, stats.requests);
+            put_u64(&mut buf, stats.coalesced_batches);
+            put_u64(&mut buf, stats.coalesced_requests);
+            put_u64(&mut buf, stats.admission_rejects);
+            put_u64(&mut buf, stats.max_batch);
+        }
+        Message::Error { code, message } => {
+            put_u16(&mut buf, *code);
+            put_str(&mut buf, message);
+        }
+    }
+    buf
+}
+
+fn opcode(msg: &Message) -> u8 {
+    match msg {
+        Message::Hello { .. } => OP_HELLO,
+        Message::HelloAck { .. } => OP_HELLO_ACK,
+        Message::Register { .. } => OP_REGISTER,
+        Message::Spmv { .. } => OP_SPMV,
+        Message::SpmvBatch { .. } => OP_SPMV_BATCH,
+        Message::Stats => OP_STATS,
+        Message::Replan { .. } => OP_REPLAN,
+        Message::Evict { .. } => OP_EVICT,
+        Message::NetStats => OP_NET_STATS,
+        Message::Registered { .. } => OP_REGISTERED,
+        Message::Vector { .. } => OP_VECTOR,
+        Message::Vectors { .. } => OP_VECTORS,
+        Message::StatsRows { .. } => OP_STATS_ROWS,
+        Message::Evicted { .. } => OP_EVICTED,
+        Message::NetStatsReply { .. } => OP_NET_STATS_REPLY,
+        Message::Busy => OP_BUSY,
+        Message::Error { .. } => OP_ERROR,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow::anyhow!("truncated payload: need {n} more bytes"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|_| anyhow::anyhow!("string is not UTF-8"))?
+            .to_string())
+    }
+
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n.min(self.buf.len() / 8 + 1));
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+
+    fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n.min(self.buf.len() / 8 + 1));
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n.min(self.buf.len() / 4 + 1));
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn row(&mut self) -> Result<WireStatsRow> {
+        Ok(WireStatsRow {
+            name: self.string()?,
+            n: self.u64()?,
+            nnz: self.u64()?,
+            d_mat: self.f64()?,
+            shard: self.u32()?,
+            serving: self.string()?,
+            calls: self.u64()?,
+            transformed_calls: self.u64()?,
+            replans: self.u64()?,
+            split_parts: self.u32()?,
+            split_calls: self.u64()?,
+            matrix_passes: self.u64()?,
+            extra_bytes: self.u64()?,
+            amortized: self.u8()? != 0,
+        })
+    }
+
+    fn finish(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "{} trailing bytes after the message body",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+/// Decode a frame payload into `(request id, message)`. Fails on unknown
+/// opcodes, truncated bodies, bad magic, non-UTF-8 strings, and trailing
+/// bytes — a decode error means the frame was malformed, not that the
+/// stream framing is lost (the length prefix already delimited it).
+pub fn decode(payload: &[u8]) -> Result<(u32, Message)> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let op = r.u8()?;
+    let id = r.u32()?;
+    let msg = match op {
+        OP_HELLO => {
+            let magic = r.take(4)?;
+            anyhow::ensure!(magic == MAGIC, "bad handshake magic {magic:02x?}");
+            Message::Hello { version: r.u16()? }
+        }
+        OP_HELLO_ACK => Message::HelloAck { version: r.u16()? },
+        OP_REGISTER => Message::Register {
+            name: r.string()?,
+            n_rows: r.u64()?,
+            n_cols: r.u64()?,
+            row_ptr: r.vec_u64()?,
+            col_idx: r.vec_u32()?,
+            values: r.vec_f64()?,
+        },
+        OP_SPMV => Message::Spmv { name: r.string()?, x: r.vec_f64()? },
+        OP_SPMV_BATCH => {
+            let name = r.string()?;
+            let k = r.u32()? as usize;
+            let mut xs = Vec::with_capacity(k.min(payload.len() / 4 + 1));
+            for _ in 0..k {
+                xs.push(r.vec_f64()?);
+            }
+            Message::SpmvBatch { name, xs }
+        }
+        OP_STATS => Message::Stats,
+        OP_REPLAN => Message::Replan { name: r.string()? },
+        OP_EVICT => Message::Evict { name: r.string()? },
+        OP_NET_STATS => Message::NetStats,
+        OP_REGISTERED => Message::Registered { row: r.row()? },
+        OP_VECTOR => Message::Vector { y: r.vec_f64()? },
+        OP_VECTORS => {
+            let k = r.u32()? as usize;
+            let mut ys = Vec::with_capacity(k.min(payload.len() / 4 + 1));
+            for _ in 0..k {
+                ys.push(r.vec_f64()?);
+            }
+            Message::Vectors { ys }
+        }
+        OP_STATS_ROWS => {
+            let k = r.u32()? as usize;
+            let mut rows = Vec::with_capacity(k.min(payload.len() / 8 + 1));
+            for _ in 0..k {
+                rows.push(r.row()?);
+            }
+            Message::StatsRows { rows }
+        }
+        OP_EVICTED => Message::Evicted { existed: r.u8()? != 0 },
+        OP_NET_STATS_REPLY => Message::NetStatsReply {
+            stats: WireNetStats {
+                sessions_open: r.u64()?,
+                sessions_total: r.u64()?,
+                batches: r.u64()?,
+                requests: r.u64()?,
+                coalesced_batches: r.u64()?,
+                coalesced_requests: r.u64()?,
+                admission_rejects: r.u64()?,
+                max_batch: r.u64()?,
+            },
+        },
+        OP_BUSY => Message::Busy,
+        OP_ERROR => Message::Error { code: r.u16()?, message: r.string()? },
+        other => anyhow::bail!("unknown opcode 0x{other:02x}"),
+    };
+    r.finish()?;
+    Ok((id, msg))
+}
+
+// ---------------------------------------------------------------------------
+// Framing
+
+/// Write one frame: `u32` LE payload length, then the payload.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    anyhow::ensure!(payload.len() <= MAX_FRAME, "frame payload {} too large", payload.len());
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload. `Ok(None)` is a clean EOF at a frame
+/// boundary (the peer closed between frames); truncation *inside* a
+/// frame, or a length prefix past [`MAX_FRAME`], is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut prefix = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut prefix[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => anyhow::bail!("connection closed inside a frame header"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds the {MAX_FRAME}-byte cap");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("connection closed inside a frame body: {e}"))?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let payload = encode(42, &msg);
+        let (id, got) = decode(&payload).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(got, msg);
+    }
+
+    fn row() -> WireStatsRow {
+        WireStatsRow {
+            name: "m".into(),
+            n: 64,
+            nnz: 400,
+            d_mat: 0.25,
+            shard: 1,
+            serving: "ell_row_inner".into(),
+            calls: 17,
+            transformed_calls: 16,
+            replans: 2,
+            split_parts: 0,
+            split_calls: 0,
+            matrix_passes: 5,
+            extra_bytes: 4096,
+            amortized: true,
+        }
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip(Message::Hello { version: VERSION });
+        roundtrip(Message::HelloAck { version: VERSION });
+        roundtrip(Message::Register {
+            name: "a".into(),
+            n_rows: 2,
+            n_cols: 2,
+            row_ptr: vec![0, 1, 2],
+            col_idx: vec![0, 1],
+            values: vec![1.5, -2.5],
+        });
+        roundtrip(Message::Spmv { name: "a".into(), x: vec![1.0, 2.0] });
+        roundtrip(Message::SpmvBatch {
+            name: "a".into(),
+            xs: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+        });
+        roundtrip(Message::Stats);
+        roundtrip(Message::Replan { name: "a".into() });
+        roundtrip(Message::Evict { name: "a".into() });
+        roundtrip(Message::NetStats);
+        roundtrip(Message::Registered { row: row() });
+        roundtrip(Message::Vector { y: vec![0.5; 3] });
+        roundtrip(Message::Vectors { ys: vec![vec![0.5; 3], vec![]] });
+        roundtrip(Message::StatsRows { rows: vec![row(), row()] });
+        roundtrip(Message::Evicted { existed: false });
+        roundtrip(Message::NetStatsReply {
+            stats: WireNetStats {
+                sessions_open: 1,
+                sessions_total: 9,
+                batches: 4,
+                requests: 12,
+                coalesced_batches: 2,
+                coalesced_requests: 10,
+                admission_rejects: 3,
+                max_batch: 8,
+            },
+        });
+        roundtrip(Message::Busy);
+        roundtrip(Message::Error { code: ERR_SERVER, message: "boom".into() });
+    }
+
+    #[test]
+    fn malformed_payloads_are_rejected_not_panicked() {
+        // Empty payload.
+        assert!(decode(&[]).is_err());
+        // Unknown opcode.
+        assert!(decode(&[0x55, 0, 0, 0, 0]).is_err());
+        // Bad magic.
+        let mut bad = encode(1, &Message::Hello { version: VERSION });
+        bad[5] = b'X';
+        assert!(decode(&bad).is_err());
+        // Truncated body: chop every prefix of a real message.
+        let full = encode(7, &Message::Spmv { name: "mat".into(), x: vec![1.0, 2.0] });
+        for cut in 0..full.len() {
+            assert!(decode(&full[..cut]).is_err(), "prefix of {cut} bytes must not decode");
+        }
+        // Trailing garbage.
+        let mut long = full.clone();
+        long.push(0);
+        assert!(decode(&long).is_err());
+        // A vector length promising more elements than the payload holds.
+        let mut lying = encode(7, &Message::Vector { y: vec![1.0] });
+        let body_at = lying.len() - 12; // u32 count before one f64
+        lying[body_at..body_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&lying).is_err());
+    }
+
+    #[test]
+    fn frame_reader_distinguishes_clean_eof_from_truncation() {
+        use std::io::Cursor;
+        let payload = encode(3, &Message::Stats);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &payload).unwrap();
+
+        // Whole frame, then clean EOF.
+        let mut c = Cursor::new(wire.clone());
+        assert_eq!(read_frame(&mut c).unwrap(), Some(payload.clone()));
+        assert_eq!(read_frame(&mut c).unwrap(), None);
+
+        // Truncated header and truncated body are errors, not EOF.
+        let mut c = Cursor::new(wire[..2].to_vec());
+        assert!(read_frame(&mut c).is_err());
+        let mut c = Cursor::new(wire[..wire.len() - 1].to_vec());
+        assert!(read_frame(&mut c).is_err());
+
+        // An oversized length prefix is rejected before allocation.
+        let mut c = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(read_frame(&mut c).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Per-connection session: a hello-first state machine over framed
+//! protocol messages.
+//!
+//! Each accepted connection gets one session thread running
+//! [`run_session`] over any `Read + Write` stream (TCP, Unix socket, or
+//! an in-memory pipe in tests). The state machine is strict about the
+//! handshake — the first frame must be a version-matching `Hello`,
+//! anything else closes the connection — and lenient after it: a frame
+//! that *decodes* badly gets an `Error` reply and the session keeps
+//! serving, because the length prefix already delimited the bad frame
+//! and stream framing is intact. Only transport-level damage (EOF inside
+//! a frame, an oversized length prefix) ends the session.
+//!
+//! Single-vector `Spmv` requests go through the ingress coalescer; every
+//! other request calls the serving [`Client`] directly. A full ingress
+//! queue is answered with `Busy` — the reader thread never blocks on
+//! admission.
+
+use super::ingress::Ingress;
+use super::proto::{self, Message, WireStatsRow};
+use crate::coordinator::{Client, EntryStats};
+use crate::formats::Csr;
+use crate::Result;
+use std::io::{Read, Write};
+
+/// Serve one connection until the peer disconnects or the transport
+/// fails. Returns `Ok` for clean closes (including a rejected
+/// handshake); `Err` only for transport-level failures.
+pub fn run_session<S: Read + Write>(mut stream: S, client: Client, ingress: Ingress) -> Result<()> {
+    // Handshake: the first frame must be a version-matching Hello.
+    let payload = match proto::read_frame(&mut stream)? {
+        Some(p) => p,
+        None => return Ok(()),
+    };
+    match proto::decode(&payload) {
+        Ok((id, Message::Hello { version })) if version == proto::VERSION => {
+            send(&mut stream, id, &Message::HelloAck { version: proto::VERSION })?;
+        }
+        Ok((id, Message::Hello { version })) => {
+            send(
+                &mut stream,
+                id,
+                &Message::Error {
+                    code: proto::ERR_UNSUPPORTED_VERSION,
+                    message: format!(
+                        "client speaks protocol version {version}, this server speaks {}",
+                        proto::VERSION
+                    ),
+                },
+            )?;
+            return Ok(());
+        }
+        Ok((id, _)) => {
+            send(
+                &mut stream,
+                id,
+                &Message::Error {
+                    code: proto::ERR_MALFORMED,
+                    message: "the first frame on a connection must be Hello".into(),
+                },
+            )?;
+            return Ok(());
+        }
+        Err(e) => {
+            send(&mut stream, 0, &decode_error(&payload, &e))?;
+            return Ok(());
+        }
+    }
+
+    // Request loop: decode errors reply and continue; transport errors end.
+    while let Some(payload) = proto::read_frame(&mut stream)? {
+        match proto::decode(&payload) {
+            Ok((id, msg)) => {
+                let reply = handle(&client, &ingress, msg);
+                send(&mut stream, id, &reply)?;
+            }
+            Err(e) => {
+                // Best-effort request-id echo so a pipelining client can
+                // still match the error to its request.
+                let id = payload
+                    .get(1..5)
+                    .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                    .unwrap_or(0);
+                send(&mut stream, id, &decode_error(&payload, &e))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Map a decode failure to the right error code: unknown opcode if the
+/// opcode byte itself is unrecognised, malformed otherwise.
+fn decode_error(payload: &[u8], e: &anyhow::Error) -> Message {
+    let code = match payload.first() {
+        Some(&op) if !proto::known_opcode(op) => proto::ERR_UNKNOWN_OPCODE,
+        _ => proto::ERR_MALFORMED,
+    };
+    Message::Error { code, message: e.to_string() }
+}
+
+fn send<S: Write>(stream: &mut S, id: u32, msg: &Message) -> Result<()> {
+    proto::write_frame(stream, &proto::encode(id, msg))
+}
+
+fn server_error(e: anyhow::Error) -> Message {
+    Message::Error { code: proto::ERR_SERVER, message: e.to_string() }
+}
+
+/// Render a registry stats row for the wire.
+pub fn wire_row(s: &EntryStats) -> WireStatsRow {
+    WireStatsRow {
+        name: s.name.clone(),
+        n: s.n as u64,
+        nnz: s.nnz as u64,
+        d_mat: s.d_mat,
+        shard: s.shard as u32,
+        serving: s.serving.to_string(),
+        calls: s.calls,
+        transformed_calls: s.transformed_calls,
+        replans: s.replans,
+        split_parts: s.split_parts as u32,
+        split_calls: s.split_calls,
+        matrix_passes: s.matrix_passes,
+        extra_bytes: s.extra_bytes as u64,
+        amortized: s.amortized,
+    }
+}
+
+/// Serve one decoded request. Always produces a reply message — server-
+/// side failures become `Error` replies, never session terminations.
+fn handle(client: &Client, ingress: &Ingress, msg: Message) -> Message {
+    match msg {
+        Message::Register { name, n_rows, n_cols, row_ptr, col_idx, values } => {
+            let built = Csr::new(
+                n_rows as usize,
+                n_cols as usize,
+                row_ptr.into_iter().map(|v| v as usize).collect(),
+                col_idx,
+                values,
+            );
+            match built.and_then(|csr| client.register(&name, csr)) {
+                Ok(stats) => Message::Registered { row: wire_row(&stats) },
+                Err(e) => server_error(e),
+            }
+        }
+        Message::Spmv { name, x } => match ingress.submit(&name, x) {
+            None => Message::Busy,
+            Some(rx) => match rx.recv() {
+                Ok(Ok(y)) => Message::Vector { y },
+                Ok(Err(e)) => server_error(e),
+                Err(_) => server_error(anyhow::anyhow!("server dropped response")),
+            },
+        },
+        Message::SpmvBatch { name, xs } => match client.spmv_batch(&name, xs) {
+            Ok(ys) => Message::Vectors { ys },
+            Err(e) => server_error(e),
+        },
+        Message::Stats => match client.stats() {
+            Ok(rows) => Message::StatsRows { rows: rows.iter().map(wire_row).collect() },
+            Err(e) => server_error(e),
+        },
+        Message::Replan { name } => match client.replan(&name) {
+            Ok(stats) => Message::Registered { row: wire_row(&stats) },
+            Err(e) => server_error(e),
+        },
+        Message::Evict { name } => match client.evict(&name) {
+            Ok(existed) => Message::Evicted { existed },
+            Err(e) => server_error(e),
+        },
+        Message::NetStats => Message::NetStatsReply { stats: ingress.counters().snapshot() },
+        Message::Hello { .. } => Message::Error {
+            code: proto::ERR_MALFORMED,
+            message: "handshake already complete".into(),
+        },
+        // A client sending response opcodes is confused but harmless.
+        Message::HelloAck { .. }
+        | Message::Registered { .. }
+        | Message::Vector { .. }
+        | Message::Vectors { .. }
+        | Message::StatsRows { .. }
+        | Message::Evicted { .. }
+        | Message::NetStatsReply { .. }
+        | Message::Busy
+        | Message::Error { .. } => Message::Error {
+            code: proto::ERR_MALFORMED,
+            message: "response opcode sent as a request".into(),
+        },
+    }
+}

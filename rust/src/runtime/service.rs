@@ -5,8 +5,16 @@
 //! must never cross threads. The coordinator therefore talks to
 //! [`XlaHandle`] — a cheap, cloneable, `Send + Sync` front — while the
 //! actual `XlaRuntime` lives inside the service thread for its whole life.
+//!
+//! The thread itself runs through
+//! [`crate::coordinator::server::spawn_dispatch`] — the same dispatch
+//! primitive behind the request loops — whose in-thread `init` closure is
+//! exactly the hook a non-`Send` runtime needs: the `XlaRuntime` is
+//! constructed inside the service thread, the init result is reported
+//! back synchronously, and the state never crosses a thread boundary.
 
 use super::XlaRuntime;
+use crate::coordinator::server::spawn_dispatch;
 use crate::{Result, Value};
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -85,50 +93,40 @@ impl XlaHandle {
 /// The service thread owner. Dropping it shuts the thread down.
 pub struct XlaService {
     tx: mpsc::SyncSender<Msg>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handle: Option<std::thread::JoinHandle<Option<()>>>,
 }
 
 impl XlaService {
     /// Spawn the service over an artifact directory. Fails (synchronously)
     /// if the manifest cannot be loaded or the PJRT client cannot start.
     pub fn spawn(artifact_dir: PathBuf) -> Result<(Self, XlaHandle)> {
-        let (tx, rx) = mpsc::sync_channel::<Msg>(32);
-        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::spawn(move || {
-            let rt = match XlaRuntime::new(&artifact_dir) {
-                Ok(rt) => {
-                    let _ = init_tx.send(Ok(()));
-                    rt
+        let (tx, handle) = spawn_dispatch(
+            "spmv-xla",
+            32,
+            move || XlaRuntime::new(&artifact_dir),
+            |rt, msg| match msg {
+                Msg::EllSpmv { n_rows, bandwidth, values, col_idx_i32, x, resp } => {
+                    let mut y = vec![0.0; n_rows];
+                    let r = rt
+                        .ell_spmv(n_rows, bandwidth, &values, &col_idx_i32, &x, &mut y)
+                        .map(|()| y);
+                    let _ = resp.send(r);
+                    true
                 }
-                Err(e) => {
-                    let _ = init_tx.send(Err(e));
-                    return;
+                Msg::HasBucket { rows, bandwidth, resp } => {
+                    let _ =
+                        resp.send(rt.manifest().bucket_for("ell_spmv", rows, bandwidth).is_some());
+                    true
                 }
-            };
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::EllSpmv { n_rows, bandwidth, values, col_idx_i32, x, resp } => {
-                        let mut y = vec![0.0; n_rows];
-                        let r = rt
-                            .ell_spmv(n_rows, bandwidth, &values, &col_idx_i32, &x, &mut y)
-                            .map(|()| y);
-                        let _ = resp.send(r);
-                    }
-                    Msg::HasBucket { rows, bandwidth, resp } => {
-                        let _ = resp.send(
-                            rt.manifest().bucket_for("ell_spmv", rows, bandwidth).is_some(),
-                        );
-                    }
-                    Msg::Platform { resp } => {
-                        let _ = resp.send(rt.platform());
-                    }
-                    Msg::Shutdown => break,
+                Msg::Platform { resp } => {
+                    let _ = resp.send(rt.platform());
+                    true
                 }
-            }
-        });
-        init_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("xla service thread died during init"))??;
+                Msg::Shutdown => false,
+            },
+            // The runtime is non-`Send`: it is dropped inside its thread.
+            |_rt| (),
+        )?;
         let client = XlaHandle { tx: tx.clone() };
         Ok((Self { tx, handle: Some(handle) }, client))
     }

@@ -1,0 +1,187 @@
+//! End-to-end tests for the network serving front end: coalescing is
+//! bitwise-invisible and observably cheaper, broken clients cannot take
+//! the server down, and a full ingress queue answers `Busy`.
+
+mod common;
+
+use spmv_at::coordinator::{CoordinatorConfig, Server};
+use spmv_at::net::proto::{self, Message};
+use spmv_at::net::{ListenAddr, NetClient, NetConfig, NetServer};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// A TCP front end on an ephemeral port over a fresh sharded server. The
+/// adaptive loop is off so `matrix_passes` counts serving streams only
+/// (exploration would add shadow streams and blur the pass arithmetic).
+fn start(cfg: NetConfig) -> NetServer {
+    let mut ccfg = CoordinatorConfig::new(common::tuning(
+        spmv_at::spmv::Implementation::EllRowOuter,
+        Some(3.1),
+    ));
+    ccfg.threads = 2;
+    ccfg.adaptive.enabled = false;
+    let (server, client) = Server::spawn_sharded(ccfg, 64);
+    NetServer::start(server, client, &ListenAddr::Tcp("127.0.0.1:0".into()), cfg)
+        .expect("bind an ephemeral port")
+}
+
+fn passes_of(c: &mut NetClient, name: &str) -> u64 {
+    c.stats()
+        .unwrap()
+        .into_iter()
+        .find(|r| r.name == name)
+        .expect("registered matrix has a stats row")
+        .matrix_passes
+}
+
+/// The acceptance scenario: `k` concurrent single-vector requests are
+/// served bitwise-identically to `k` sequential ones, while the matrix
+/// is streamed ⌈k/tile⌉-ish times instead of `k`.
+#[test]
+fn concurrent_requests_coalesce_bitwise_identically_and_stream_less() {
+    const K: usize = 8;
+    // A generous coalescing window so all K barrier-released requests
+    // land in one drain with near-certainty.
+    let net = start(NetConfig { queue_depth: 64, coalesce_wait: Duration::from_millis(200) });
+    let addr = net.local_addr().clone();
+
+    let a = common::band(96, 7);
+    let mut c = NetClient::connect(&addr).unwrap();
+    c.register("m", &a).unwrap();
+    let xs = common::xs_batch(96, K);
+
+    // Sequential phase: each request waits for its reply, so every drain
+    // holds exactly one request — K singleton batches, K matrix passes.
+    let before_seq = passes_of(&mut c, "m");
+    let seq: Vec<Vec<f64>> = xs.iter().map(|x| c.spmv("m", x.clone()).unwrap()).collect();
+    let seq_passes = passes_of(&mut c, "m") - before_seq;
+    assert_eq!(seq_passes, K as u64, "sequential requests stream the matrix once each");
+    for (x, y) in xs.iter().zip(&seq) {
+        assert_eq!(y, &common::reference(&a, x), "served result matches the CRS reference");
+    }
+
+    // Concurrent phase: K connections handshake first, then release
+    // their requests together.
+    let before_conc = passes_of(&mut c, "m");
+    let barrier = Arc::new(Barrier::new(K));
+    let handles: Vec<_> = xs
+        .iter()
+        .map(|x| {
+            let addr = addr.clone();
+            let x = x.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = NetClient::connect(&addr).unwrap();
+                barrier.wait();
+                c.spmv("m", x).unwrap()
+            })
+        })
+        .collect();
+    let conc: Vec<Vec<f64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let conc_passes = passes_of(&mut c, "m") - before_conc;
+
+    assert_eq!(conc, seq, "coalesced serving is bitwise identical to sequential serving");
+    assert!(
+        conc_passes < seq_passes,
+        "coalescing must cut matrix passes: {conc_passes} concurrent vs {seq_passes} sequential"
+    );
+    let ns = c.net_stats().unwrap();
+    assert!(ns.coalesced_batches >= 1, "at least one drain coalesced: {ns:?}");
+    assert!(ns.coalesced_requests >= 2, "coalesced drains held ≥ 2 requests: {ns:?}");
+    assert!(ns.max_batch >= 2, "a multi-request batch was dispatched: {ns:?}");
+
+    net.shutdown();
+}
+
+#[test]
+fn malformed_frames_and_abrupt_disconnects_leave_the_server_serving() {
+    let net = start(NetConfig { queue_depth: 16, coalesce_wait: Duration::ZERO });
+    let addr = net.local_addr().clone();
+    let ListenAddr::Tcp(tcp) = addr.clone() else { unreachable!() };
+
+    let mut c = NetClient::connect(&addr).unwrap();
+    c.register("id", &spmv_at::formats::Csr::identity(4)).unwrap();
+
+    // A raw connection that handshakes, then misbehaves.
+    let mut raw = TcpStream::connect(&tcp).unwrap();
+    proto::write_frame(&mut raw, &proto::encode(1, &Message::Hello { version: proto::VERSION }))
+        .unwrap();
+    let (_, ack) = proto::decode(&proto::read_frame(&mut raw).unwrap().unwrap()).unwrap();
+    assert_eq!(ack, Message::HelloAck { version: proto::VERSION });
+
+    // Unknown opcode: Error reply with the right code, session survives.
+    proto::write_frame(&mut raw, &[0x55, 9, 0, 0, 0]).unwrap();
+    let (id, reply) = proto::decode(&proto::read_frame(&mut raw).unwrap().unwrap()).unwrap();
+    assert_eq!(id, 9, "the request id is echoed even on undecodable frames");
+    assert!(matches!(reply, Message::Error { code, .. } if code == proto::ERR_UNKNOWN_OPCODE));
+
+    // Truncated body of a known opcode: malformed, session still survives.
+    proto::write_frame(&mut raw, &[proto::OP_SPMV, 2, 0, 0, 0, 200]).unwrap();
+    let (_, reply) = proto::decode(&proto::read_frame(&mut raw).unwrap().unwrap()).unwrap();
+    assert!(matches!(reply, Message::Error { code, .. } if code == proto::ERR_MALFORMED));
+
+    // The same session still serves real requests after both errors.
+    proto::write_frame(&mut raw, &proto::encode(3, &Message::Stats)).unwrap();
+    let (_, reply) = proto::decode(&proto::read_frame(&mut raw).unwrap().unwrap()).unwrap();
+    assert!(matches!(reply, Message::StatsRows { .. }));
+
+    // Abrupt mid-frame disconnect: write half a frame and vanish.
+    let mut half = TcpStream::connect(&tcp).unwrap();
+    proto::write_frame(&mut half, &proto::encode(1, &Message::Hello { version: proto::VERSION }))
+        .unwrap();
+    let _ = proto::read_frame(&mut half).unwrap().unwrap();
+    half.write_all(&[200, 0, 0, 0, 1, 2, 3]).unwrap(); // promises 200 bytes, sends 3
+    drop(half);
+
+    // A pre-handshake request instead of Hello: rejected, connection closed.
+    let mut rude = TcpStream::connect(&tcp).unwrap();
+    proto::write_frame(&mut rude, &proto::encode(1, &Message::Stats)).unwrap();
+    let (_, reply) = proto::decode(&proto::read_frame(&mut rude).unwrap().unwrap()).unwrap();
+    assert!(matches!(reply, Message::Error { code, .. } if code == proto::ERR_MALFORMED));
+    assert!(proto::read_frame(&mut rude).unwrap().is_none(), "server closes after a bad handshake");
+
+    // After all of that, fresh connections serve normally.
+    let mut c2 = NetClient::connect(&addr).unwrap();
+    assert_eq!(c2.spmv("id", vec![1.0, 2.0, 3.0, 4.0]).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+
+    net.shutdown();
+}
+
+#[test]
+fn full_ingress_queue_answers_busy_and_recovers() {
+    // Depth-1 queue and a long drain wait: the first request is consumed
+    // by the sleeping coalescer, the second fills the queue slot, the
+    // third must be refused.
+    let net = start(NetConfig { queue_depth: 1, coalesce_wait: Duration::from_millis(500) });
+    let addr = net.local_addr().clone();
+
+    let mut c = NetClient::connect(&addr).unwrap();
+    c.register("id", &spmv_at::formats::Csr::identity(3)).unwrap();
+    let x = vec![1.0, 2.0, 3.0];
+
+    let spawn_spmv = |x: Vec<f64>| {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = NetClient::connect(&addr).unwrap();
+            c.spmv("id", x)
+        })
+    };
+    let t1 = spawn_spmv(x.clone());
+    std::thread::sleep(Duration::from_millis(150)); // coalescer takes it, starts its wait
+    let t2 = spawn_spmv(x.clone());
+    std::thread::sleep(Duration::from_millis(100)); // t2 occupies the single queue slot
+
+    let err = c.spmv("id", x.clone()).expect_err("third concurrent request is refused");
+    assert!(err.to_string().contains("busy"), "busy reply surfaces as such: {err}");
+
+    // The two admitted requests complete correctly...
+    assert_eq!(t1.join().unwrap().unwrap(), x);
+    assert_eq!(t2.join().unwrap().unwrap(), x);
+    // ...the reject was counted, and the same connection serves again.
+    assert!(c.net_stats().unwrap().admission_rejects >= 1);
+    assert_eq!(c.spmv("id", x.clone()).unwrap(), x);
+
+    net.shutdown();
+}
