@@ -1,0 +1,169 @@
+//! Preconditioner bench (ISSUE 8 satellite): Jacobi-PCG vs SymGS-PCG
+//! iterations and time-to-solution, the level-schedule statistics behind
+//! the serial-vs-parallel SpTRSV decision, and the measured per-apply
+//! cost of both triangle-solve modes.
+//!
+//! Two SPD systems frame the decision space: a banded circulant (short
+//! level chains of wide levels — SpTRSV's parallel-friendly case) and a
+//! badly-scaled random SPD (the solver suite's conditioning stress,
+//! where SymGS's coupling pays off over the diagonal alone).
+//!
+//! Env knobs: SPMV_AT_SCALE/SPMV_AT_SEED as usual; SPMV_AT_THREADS sets
+//! the SpTRSV pool width (default 4 here).
+
+#[path = "common.rs"]
+mod common;
+
+use spmv_at::autotune::adaptive::AdaptiveConfig;
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::matrixgen::{banded_circulant, make_spd, random_csr};
+use spmv_at::metrics::{time_median, Json, Table};
+use spmv_at::precond::{sptrsv, Jacobi, LevelSchedule, SymGs, TrsvPar};
+use spmv_at::precond::{Preconditioner, TrsvMode};
+use spmv_at::rng::Rng;
+use spmv_at::solver::{pcg_with, SolverOptions};
+use spmv_at::spmv::ParPool;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn threads() -> usize {
+    std::env::var("SPMV_AT_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4)
+}
+
+fn n_for(base: usize) -> usize {
+    // common::scale() is a fraction of the paper-scale suites; solver
+    // benches stay host-sized, so apply it against a fixed base.
+    ((base as f64) * (common::scale() / 0.2)).max(60.0) as usize
+}
+
+/// Banded SPD system: wide, regular levels.
+fn band_spd(n: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    make_spd(&banded_circulant(&mut rng, n, &[-2, -1, 0, 1, 2]))
+}
+
+/// Badly-scaled random SPD system: the solver tests' conditioning case.
+fn badscale_spd(n: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let base = make_spd(&random_csr(&mut rng, n, n, 0.05));
+    let mut t = base.to_triplets();
+    for i in 0..n {
+        t.push((i, i, 10f64.powi((i % 4) as i32 * 2)));
+    }
+    Csr::from_triplets(n, n, &t).unwrap()
+}
+
+fn rhs(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 1.0 + ((i * 7) % 13) as f64 * 0.0625).collect()
+}
+
+/// One PCG run; returns (iterations, converged, wall seconds).
+fn run_pcg(a: &Csr, m: &mut dyn Preconditioner, b: &[f64]) -> (usize, bool, f64) {
+    let opts = SolverOptions { tol: 1e-10, max_iters: 5000 };
+    let mut a = a.clone();
+    let mut x = vec![0.0; b.len()];
+    let t0 = Instant::now();
+    let stats = pcg_with(&mut a, m, b, &mut x, &opts).expect("pcg");
+    (stats.iterations, stats.converged, t0.elapsed().as_secs_f64())
+}
+
+/// Median per-apply seconds of serial and level-scheduled SpTRSV
+/// (forward + diagonal scale + backward — one full SymGS sweep each).
+fn sptrsv_pair(a: &Csr, pool: &Arc<ParPool>, reps: usize) -> (f64, f64) {
+    let cfg = AdaptiveConfig { enabled: false, ..AdaptiveConfig::default() };
+    let b = rhs(a.n_rows());
+    let mut z = vec![0.0; a.n_rows()];
+    let mut serial = SymGs::build(a, pool.clone(), TrsvPar::Never, &cfg).expect("symgs");
+    let t_serial = time_median(1, reps, || serial.apply(&b, &mut z));
+    let mut par = SymGs::build(a, pool.clone(), TrsvPar::Always, &cfg).expect("symgs");
+    let t_par = time_median(1, reps, || par.apply(&b, &mut z));
+    assert_eq!(serial.mode(), TrsvMode::Serial);
+    assert_eq!(par.mode(), TrsvMode::LevelPar);
+    (t_serial, t_par)
+}
+
+fn main() {
+    common::banner("solver_precond", "Jacobi-PCG vs SymGS-PCG + SpTRSV mode economics");
+    let reps = common::reps(9);
+    let t = threads();
+    let pool = Arc::new(ParPool::new(t));
+    let cfg = AdaptiveConfig { enabled: false, ..AdaptiveConfig::default() };
+
+    let systems: Vec<(&str, Csr)> = vec![
+        ("band", band_spd(n_for(2000), common::seed())),
+        ("badscale", badscale_spd(n_for(800), common::seed() + 10)),
+    ];
+
+    let mut json = Vec::new();
+    let mut table = Table::new(vec![
+        "system", "n", "nnz", "jacobi iters", "symgs iters", "jacobi s", "symgs s", "levels",
+        "avg width", "serial us", "levelpar us", "auto mode",
+    ]);
+
+    for (name, a) in &systems {
+        let n = a.n_rows();
+        let b = rhs(n);
+
+        let mut jac = Jacobi::build(a).expect("jacobi");
+        let (j_iters, j_conv, j_secs) = run_pcg(a, &mut jac, &b);
+
+        let mut sym = SymGs::build(a, pool.clone(), TrsvPar::Auto, &cfg).expect("symgs");
+        let mode = sym.mode();
+        let lo = *sym.lower_stats();
+        let up = *sym.upper_stats();
+        let analysis = sym.analysis_seconds();
+        let (s_iters, s_conv, s_secs) = run_pcg(a, &mut sym, &b);
+
+        let (t_serial, t_par) = sptrsv_pair(a, &pool, reps);
+
+        // The level analysis is also a standalone cost worth tracking.
+        let tri = a.split_triangular().expect("split");
+        let t_analysis = time_median(0, reps, || {
+            std::hint::black_box(LevelSchedule::build_lower(&tri.lower, t));
+        });
+
+        table.row(vec![
+            name.to_string(),
+            n.to_string(),
+            a.nnz().to_string(),
+            format!("{j_iters}{}", if j_conv { "" } else { "!" }),
+            format!("{s_iters}{}", if s_conv { "" } else { "!" }),
+            format!("{j_secs:.4}"),
+            format!("{s_secs:.4}"),
+            lo.levels.to_string(),
+            format!("{:.1}", lo.avg_width),
+            format!("{:.2}", t_serial * 1e6),
+            format!("{:.2}", t_par * 1e6),
+            mode.name().to_string(),
+        ]);
+        json.push(Json::Obj(vec![
+            ("system".into(), Json::Str((*name).into())),
+            ("n".into(), Json::Num(n as f64)),
+            ("nnz".into(), Json::Num(a.nnz() as f64)),
+            ("threads".into(), Json::Num(t as f64)),
+            ("jacobi_iters".into(), Json::Num(j_iters as f64)),
+            ("jacobi_converged".into(), Json::Bool(j_conv)),
+            ("jacobi_seconds".into(), Json::Num(j_secs)),
+            ("symgs_iters".into(), Json::Num(s_iters as f64)),
+            ("symgs_converged".into(), Json::Bool(s_conv)),
+            ("symgs_seconds".into(), Json::Num(s_secs)),
+            ("levels_lower".into(), Json::Num(lo.levels as f64)),
+            ("avg_width_lower".into(), Json::Num(lo.avg_width)),
+            ("max_width_lower".into(), Json::Num(lo.max_width as f64)),
+            ("levels_upper".into(), Json::Num(up.levels as f64)),
+            ("avg_width_upper".into(), Json::Num(up.avg_width)),
+            ("max_width_upper".into(), Json::Num(up.max_width as f64)),
+            ("analysis_seconds".into(), Json::Num(analysis)),
+            ("level_build_seconds".into(), Json::Num(t_analysis)),
+            ("sptrsv_serial_us".into(), Json::Num(t_serial * 1e6)),
+            ("sptrsv_parallel_us".into(), Json::Num(t_par * 1e6)),
+            ("auto_mode".into(), Json::Str(mode.name().into())),
+        ]));
+    }
+
+    print!("{}", table.render());
+    common::write_json("solver_precond", Json::Arr(json));
+}

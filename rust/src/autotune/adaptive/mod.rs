@@ -76,7 +76,7 @@ pub mod telemetry;
 pub use controller::HysteresisController;
 pub use explore::ExplorePolicy;
 pub use learned::{bucket_of, BucketStat, LearnedTuning};
-pub use telemetry::{EwmaStats, Telemetry};
+pub use telemetry::{ArmTelemetry, EwmaStats, Telemetry};
 
 use crate::autotune::online::TuningData;
 use crate::spmv::SpmvPlan;

@@ -78,21 +78,33 @@ impl EwmaStats {
     }
 }
 
-/// Per-implementation timing stats for one registered matrix.
+/// Per-arm timing stats for one registered matrix, keyed by any
+/// copyable arm identifier.
+///
+/// The SpMV loop keys arms by [`Implementation`] (the [`Telemetry`]
+/// alias); the preconditioner subsystem reuses the identical machinery
+/// keyed by its serial-vs-level-scheduled triangular-solve mode
+/// ([`crate::precond::TrsvMode`]). Keeping one generic implementation
+/// means both decisions share the same EWMA semantics, degenerate-sample
+/// guards, and confidence gates the hysteresis controller assumes.
 #[derive(Clone, Debug)]
-pub struct Telemetry {
+pub struct ArmTelemetry<K: Copy + PartialEq> {
     alpha: f64,
-    arms: Vec<(Implementation, EwmaStats)>,
+    arms: Vec<(K, EwmaStats)>,
 }
 
-impl Telemetry {
+/// Per-implementation timing stats for one registered matrix (the SpMV
+/// instantiation of [`ArmTelemetry`]).
+pub type Telemetry = ArmTelemetry<Implementation>;
+
+impl<K: Copy + PartialEq> ArmTelemetry<K> {
     /// Empty telemetry; every arm decays with `alpha`.
     pub fn new(alpha: f64) -> Self {
         Self { alpha, arms: Vec::new() }
     }
 
     /// Record `k` calls of `imp` at `seconds_per_call` each.
-    pub fn record(&mut self, imp: Implementation, seconds_per_call: f64, k: u64) {
+    pub fn record(&mut self, imp: K, seconds_per_call: f64, k: u64) {
         if k == 0 || !seconds_per_call.is_finite() || seconds_per_call < 0.0 {
             return;
         }
@@ -106,23 +118,23 @@ impl Telemetry {
     }
 
     /// Stats for `imp`, if any sample has arrived.
-    pub fn stats(&self, imp: Implementation) -> Option<&EwmaStats> {
+    pub fn stats(&self, imp: K) -> Option<&EwmaStats> {
         self.arms.iter().find(|(i, _)| *i == imp).map(|(_, s)| s)
     }
 
     /// EW mean seconds per call of `imp` (`None` when unmeasured).
-    pub fn mean(&self, imp: Implementation) -> Option<f64> {
+    pub fn mean(&self, imp: K) -> Option<f64> {
         self.stats(imp).and_then(|s| s.mean())
     }
 
     /// Samples absorbed for `imp`.
-    pub fn samples(&self, imp: Implementation) -> u64 {
+    pub fn samples(&self, imp: K) -> u64 {
         self.stats(imp).map_or(0, |s| s.count())
     }
 
     /// The measured cost ratio `t_a / t_b` when both arms are measured
     /// (the live analogue of the offline `R_ell = t_crs / t_imp`).
-    pub fn ratio(&self, a: Implementation, b: Implementation) -> Option<f64> {
+    pub fn ratio(&self, a: K, b: K) -> Option<f64> {
         match (self.mean(a), self.mean(b)) {
             (Some(ta), Some(tb)) if tb > 0.0 => Some(ta / tb),
             _ => None,

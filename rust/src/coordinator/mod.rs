@@ -97,6 +97,14 @@ pub struct CoordinatorConfig {
     /// A pre-learned table (v2 corrections) to start from; `None` seeds a
     /// correction-free table from `tuning`.
     pub learned: Option<LearnedTuning>,
+    /// Which preconditioner `solve` requests build (and cache) for a
+    /// served entry (`SPMV_AT_PRECOND` / `--precond`; default Jacobi —
+    /// the historical `pcg` behaviour).
+    pub precond: crate::precond::PrecondKind,
+    /// Serial-vs-level-scheduled SpTRSV policy for SymGS triangular
+    /// sweeps (`SPMV_AT_TRSV_PAR`, default: the level-width auto
+    /// threshold).
+    pub trsv_par: crate::precond::TrsvPar,
 }
 
 impl CoordinatorConfig {
@@ -108,9 +116,13 @@ impl CoordinatorConfig {
     /// detected socket count — override with `SPMV_AT_TOPOLOGY`), the
     /// split-routing threshold from
     /// [`shards::SplitThreshold::from_env`] (`SPMV_AT_SPLIT_ROWS`,
-    /// default: the nnz × shard-count heuristic), and the adaptive
+    /// default: the nnz × shard-count heuristic), the adaptive
     /// switch from [`crate::autotune::adaptive::configured_adaptive`]
-    /// (`SPMV_AT_ADAPTIVE`, default off).
+    /// (`SPMV_AT_ADAPTIVE`, default off), the preconditioner kind from
+    /// [`crate::precond::configured_precond`] (`SPMV_AT_PRECOND`,
+    /// default Jacobi) and the SpTRSV policy from
+    /// [`crate::precond::TrsvPar::from_env`] (`SPMV_AT_TRSV_PAR`,
+    /// default auto).
     pub fn new(tuning: TuningData) -> Self {
         Self {
             tuning,
@@ -121,6 +133,8 @@ impl CoordinatorConfig {
             split: shards::SplitThreshold::from_env(),
             adaptive: AdaptiveConfig::from_env(),
             learned: None,
+            precond: crate::precond::configured_precond(),
+            trsv_par: crate::precond::TrsvPar::from_env(),
         }
     }
 }
@@ -694,6 +708,48 @@ impl Coordinator {
             Self::adaptive_step(&self.planner, &mut self.learned, entry, &xs[0], Some(xs), k, dt);
         }
         Ok(ys)
+    }
+
+    /// Take the entry's cached preconditioner for a solve, building it
+    /// on first use from the configured kind (`cfg.precond`), the
+    /// entry's CRS original, and the entry's shard pool (SymGS level
+    /// sweeps run where the matrix's SpMV plans run). Taking (rather
+    /// than borrowing) lets the solve drive SpMV through the
+    /// coordinator (`&mut self`) while the preconditioner is applied —
+    /// pair with [`Self::put_preconditioner`].
+    pub fn take_preconditioner(
+        &mut self,
+        name: &str,
+    ) -> Result<Box<dyn crate::precond::Preconditioner>> {
+        let kind = self.cfg.precond;
+        let trsv = self.cfg.trsv_par;
+        let adaptive = self.cfg.adaptive.clone();
+        let entry = self
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}'"))?;
+        let pool = self.planner.planner(entry.shard).pool().clone();
+        if let Some(p) = entry.precond.take() {
+            return Ok(p);
+        }
+        let built = kind.build(&entry.csr, &pool, trsv, &adaptive)?;
+        entry.precond_setup_seconds = built.setup_seconds();
+        Ok(built)
+    }
+
+    /// Return a taken preconditioner to its entry's cache, crediting the
+    /// applications the solve performed through it. A quietly dropped
+    /// box (entry evicted mid-solve) is fine — the next solve rebuilds.
+    pub fn put_preconditioner(
+        &mut self,
+        name: &str,
+        p: Box<dyn crate::precond::Preconditioner>,
+        calls: u64,
+    ) {
+        if let Some(entry) = self.entries.get_mut(name) {
+            entry.precond_calls += calls;
+            entry.precond = Some(p);
+        }
     }
 
     /// Per-matrix stats rows, sorted by name.

@@ -82,6 +82,18 @@ pub struct MatrixEntry {
     /// every call. Reset by flips and forced replans (the decision the
     /// split would serve has changed, so it gets one fresh chance).
     pub split_vetoed: bool,
+    /// Cached preconditioner serving this entry's `solve` requests
+    /// (`None` until the first preconditioned solve). Built once —
+    /// triangles, level schedules, inverted diagonal — and reused by
+    /// every later solve, exactly as the `SpmvPlan` caches the
+    /// transformed matrix.
+    pub precond: Option<Box<dyn crate::precond::Preconditioner>>,
+    /// Preconditioner applications served through the cached instance.
+    pub precond_calls: u64,
+    /// Wall seconds the cached preconditioner's one-time setup cost
+    /// (0.0 until one is built) — kept here so stats survive the
+    /// take/put-back dance around a solve.
+    pub precond_setup_seconds: f64,
 }
 
 impl MatrixEntry {
@@ -112,6 +124,9 @@ impl MatrixEntry {
             split: None,
             split_calls: 0,
             split_vetoed: false,
+            precond: None,
+            precond_calls: 0,
+            precond_setup_seconds: 0.0,
         }
     }
 
@@ -269,6 +284,16 @@ pub struct EntryStats {
     /// by ⌈k/tile⌉ instead of `k` — the counter the network ingress
     /// tests read to prove coalescing paid.
     pub matrix_passes: u64,
+    /// Name of the cached preconditioner (`None` until a preconditioned
+    /// solve built one).
+    pub precond: Option<&'static str>,
+    /// Preconditioner applications served through the cached instance
+    /// (with `calls`, the full amortisation denominator for solver
+    /// traffic).
+    pub precond_calls: u64,
+    /// One-time setup seconds of the cached preconditioner (0.0 when
+    /// none) — the cost the caching amortises across solves.
+    pub precond_setup_seconds: f64,
 }
 
 impl MatrixEntry {
@@ -316,6 +341,9 @@ impl MatrixEntry {
                     AtState::Transformed { plan, .. } => plan.matrix_passes(),
                 }
                 + self.split.as_ref().map_or(0, SplitPlan::matrix_passes),
+            precond: self.precond.as_ref().map(|p| p.name()),
+            precond_calls: self.precond_calls,
+            precond_setup_seconds: self.precond_setup_seconds,
         }
     }
 }

@@ -455,14 +455,38 @@ impl Server {
             .csr
             .n_rows();
         anyhow::ensure!(b.len() == n, "b length {} != n {}", b.len(), n);
-        let mut op = CoordOp { coord, name: name.to_string(), n };
         let mut x = vec![0.0; n];
         let stats = match solver {
-            SolverKind::Cg => crate::solver::cg(&mut op, b, &mut x, opts)?,
-            SolverKind::BiCgStab => crate::solver::bicgstab(&mut op, b, &mut x, opts)?,
-            SolverKind::Gmres => crate::solver::gmres(&mut op, b, &mut x, 30, opts)?,
-            SolverKind::Jacobi => crate::solver::jacobi(&mut op, b, &mut x, 1.0, opts)?,
-            SolverKind::Pcg => crate::solver::pcg(&mut op, b, &mut x, opts)?,
+            SolverKind::Cg => {
+                let mut op = CoordOp { coord, name: name.to_string(), n };
+                crate::solver::cg(&mut op, b, &mut x, opts)?
+            }
+            SolverKind::BiCgStab => {
+                let mut op = CoordOp { coord, name: name.to_string(), n };
+                crate::solver::bicgstab(&mut op, b, &mut x, opts)?
+            }
+            SolverKind::Gmres => {
+                let mut op = CoordOp { coord, name: name.to_string(), n };
+                crate::solver::gmres(&mut op, b, &mut x, 30, opts)?
+            }
+            SolverKind::Jacobi => {
+                let mut op = CoordOp { coord, name: name.to_string(), n };
+                crate::solver::jacobi(&mut op, b, &mut x, 1.0, opts)?
+            }
+            SolverKind::Pcg => {
+                // Take the cached preconditioner out of the entry (built
+                // on first use from `--precond`/`SPMV_AT_PRECOND`), so
+                // the solve can drive SpMV through `&mut Coordinator`
+                // while applying it; put it back with the call credit
+                // whether the solve converged or errored.
+                let mut m = coord.take_preconditioner(name)?;
+                let mut op = CoordOp { coord: &mut *coord, name: name.to_string(), n };
+                let solved = crate::solver::pcg_with(&mut op, m.as_mut(), b, &mut x, opts);
+                drop(op);
+                let calls = solved.as_ref().map_or(0, |s| s.precond_calls as u64);
+                coord.put_preconditioner(name, m, calls);
+                solved?
+            }
         };
         Ok((x, stats))
     }
@@ -564,6 +588,38 @@ mod tests {
         // The coordinator served every solver SpMV.
         let rows = client.stats().unwrap();
         assert_eq!(rows[0].calls as usize, stats.spmv_calls);
+    }
+
+    #[test]
+    fn pcg_solve_caches_the_preconditioner_across_solves() {
+        let (srv, client) = server();
+        let mut rng = Rng::new(7);
+        let a = make_spd(&crate::matrixgen::random_csr(&mut rng, 50, 50, 0.1));
+        let x_true: Vec<Value> = (0..50).map(|i| ((i + 1) as f64 * 0.11).cos()).collect();
+        let mut b = vec![0.0; 50];
+        use crate::formats::SparseMatrix as _;
+        a.spmv(&x_true, &mut b);
+        client.register("sys", a).unwrap();
+        let (_, s1) = client
+            .solve("sys", b.clone(), SolverKind::Pcg, SolverOptions::default())
+            .unwrap();
+        assert!(s1.converged);
+        assert!(s1.precond_calls > 0);
+        let (_, s2) = client
+            .solve("sys", b, SolverKind::Pcg, SolverOptions::default())
+            .unwrap();
+        let rows = client.stats().unwrap();
+        // Both solves' applications were credited to the cached instance.
+        assert_eq!(rows[0].precond_calls as usize, s1.precond_calls + s2.precond_calls);
+        // The kind follows the env truth (`SPMV_AT_PRECOND`, default
+        // Jacobi) — CI's symgs leg runs this very test under symgs.
+        assert_eq!(
+            rows[0].precond,
+            Some(crate::precond::configured_precond().name())
+        );
+        let coord = srv.shutdown();
+        let entry = &coord.entries["sys"];
+        assert!(entry.precond.is_some(), "preconditioner stays cached");
     }
 
     #[test]

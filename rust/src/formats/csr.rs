@@ -206,6 +206,50 @@ impl Csr {
         }
     }
 
+    /// Split a square matrix into its strictly-lower triangle `L`, its
+    /// diagonal `D`, and its strictly-upper triangle `U` — the
+    /// decomposition every triangular-solve / Gauss-Seidel kernel in
+    /// [`crate::precond`] consumes. One O(nnz) pass; per-row entry order
+    /// is preserved in both triangles, so for a canonical (column-sorted)
+    /// CSR the split is exactly reversible: [`Triangular::recompose`]
+    /// rebuilds the original matrix entry for entry, including
+    /// explicitly-stored zero diagonal entries (tracked separately from
+    /// absent ones) and empty rows.
+    pub fn split_triangular(&self) -> Result<Triangular> {
+        anyhow::ensure!(
+            self.n_rows == self.n_cols,
+            "split_triangular needs a square matrix, got {}x{}",
+            self.n_rows,
+            self.n_cols
+        );
+        let n = self.n_rows;
+        let mut lo = TriBuilder::new(n);
+        let mut up = TriBuilder::new(n);
+        let mut diag = vec![0.0; n];
+        let mut diag_stored = vec![false; n];
+        for i in 0..n {
+            for (c, v) in self.row(i) {
+                let j = c as usize;
+                match j.cmp(&i) {
+                    std::cmp::Ordering::Less => lo.push(c, v),
+                    std::cmp::Ordering::Greater => up.push(c, v),
+                    std::cmp::Ordering::Equal => {
+                        diag[i] = v;
+                        diag_stored[i] = true;
+                    }
+                }
+            }
+            lo.end_row();
+            up.end_row();
+        }
+        Ok(Triangular {
+            lower: lo.finish(n),
+            diag,
+            diag_stored,
+            upper: up.finish(n),
+        })
+    }
+
     /// Check structural invariants (used by property tests / debug assertions).
     pub fn validate(&self) -> Result<()> {
         let _ = Self::new(
@@ -261,6 +305,118 @@ impl SparseMatrix for Csr {
     }
 }
 
+/// Incremental CSR assembly for [`Csr::split_triangular`]: entries are
+/// appended in the source matrix's own order, so no re-sort can disturb
+/// per-row entry order.
+struct TriBuilder {
+    row_ptr: Vec<usize>,
+    col_idx: Vec<Index>,
+    values: Vec<Value>,
+}
+
+impl TriBuilder {
+    fn new(n: usize) -> Self {
+        Self {
+            row_ptr: {
+                let mut v = Vec::with_capacity(n + 1);
+                v.push(0);
+                v
+            },
+            col_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, c: Index, v: Value) {
+        self.col_idx.push(c);
+        self.values.push(v);
+    }
+
+    fn end_row(&mut self) {
+        self.row_ptr.push(self.col_idx.len());
+    }
+
+    fn finish(self, n: usize) -> Csr {
+        // Invariants hold by construction (in-bounds cols, monotone ptr).
+        Csr {
+            n_rows: n,
+            n_cols: n,
+            row_ptr: self.row_ptr,
+            col_idx: self.col_idx,
+            values: self.values,
+        }
+    }
+}
+
+/// The `A = L + D + U` decomposition of a square CSR matrix
+/// ([`Csr::split_triangular`]): strictly-lower and strictly-upper
+/// triangles as their own CSR matrices plus the dense diagonal.
+///
+/// `diag[i]` is 0.0 both for an absent diagonal entry and for an
+/// explicitly-stored zero; `diag_stored` disambiguates, which is what
+/// makes [`Triangular::recompose`] exact (same nnz, same entries) rather
+/// than merely numerically equal.
+///
+/// The triangles are *strict*: solvers that want a unit diagonal
+/// (`(I + L)·x = b`) pass `diag: None` to the [`crate::precond::sptrsv`]
+/// kernels, and solvers that want `(D + L)·x = b` pass `Some(&diag)` —
+/// the unit-diagonal "view" is a kernel argument, not a copy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Triangular {
+    /// Strictly-lower triangle (entries with `col < row`).
+    pub lower: Csr,
+    /// Diagonal values, dense (0.0 where no entry is stored).
+    pub diag: Vec<Value>,
+    /// Whether row `i` stores an explicit diagonal entry (distinguishes
+    /// a stored zero from an absent entry, for exact recomposition).
+    pub diag_stored: Vec<bool>,
+    /// Strictly-upper triangle (entries with `col > row`).
+    pub upper: Csr,
+}
+
+impl Triangular {
+    /// Matrix order.
+    pub fn n(&self) -> usize {
+        self.diag.len()
+    }
+
+    /// Stored diagonal entries (≤ n).
+    pub fn diag_nnz(&self) -> usize {
+        self.diag_stored.iter().filter(|&&s| s).count()
+    }
+
+    /// Whether every diagonal value is non-zero — the invertibility
+    /// precondition for `(D + L)` / `(D + U)` triangular solves.
+    pub fn diag_nonzero(&self) -> bool {
+        self.diag.iter().all(|&v| v != 0.0)
+    }
+
+    /// Rebuild the original matrix. Exact for canonical (column-sorted)
+    /// input — each row concatenates its lower entries, its stored
+    /// diagonal entry (if any), then its upper entries, which is
+    /// precisely the order a sorted row was split in.
+    pub fn recompose(&self) -> Csr {
+        let n = self.n();
+        let nnz = self.lower.nnz() + self.upper.nnz() + self.diag_nnz();
+        let mut b = TriBuilder::new(n);
+        b.col_idx.reserve(nnz);
+        b.values.reserve(nnz);
+        for i in 0..n {
+            for (c, v) in self.lower.row(i) {
+                b.push(c, v);
+            }
+            if self.diag_stored[i] {
+                b.push(i as Index, self.diag[i]);
+            }
+            for (c, v) in self.upper.row(i) {
+                b.push(c, v);
+            }
+            b.end_row();
+        }
+        b.finish(n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +455,51 @@ mod tests {
         let mut y = vec![0.0; 3];
         a.spmv(&[1.0, 2.0, 3.0], &mut y);
         assert_eq!(y, vec![7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn split_triangular_partitions_the_sample() {
+        let a = sample();
+        let t = a.split_triangular().unwrap();
+        // Strict triangles: only (2,0) below, only (0,2) above.
+        assert_eq!(t.lower.nnz(), 1);
+        assert_eq!(t.lower.row(2).collect::<Vec<_>>(), vec![(0, 4.0)]);
+        assert_eq!(t.upper.nnz(), 1);
+        assert_eq!(t.upper.row(0).collect::<Vec<_>>(), vec![(2, 2.0)]);
+        assert_eq!(t.diag, vec![1.0, 3.0, 5.0]);
+        assert_eq!(t.diag_stored, vec![true, true, true]);
+        assert!(t.diag_nonzero());
+        t.lower.validate().unwrap();
+        t.upper.validate().unwrap();
+    }
+
+    #[test]
+    fn split_recompose_is_exact() {
+        let a = sample();
+        assert_eq!(a.split_triangular().unwrap().recompose(), a);
+    }
+
+    #[test]
+    fn split_tracks_stored_zero_diagonal_and_empty_rows() {
+        // Row 0: explicit zero diagonal. Row 1: empty. Row 2: no
+        // diagonal entry at all. from_triplets keeps explicit zeros.
+        let a = Csr::from_triplets(3, 3, &[(0, 0, 0.0), (2, 0, 7.0)]).unwrap();
+        let t = a.split_triangular().unwrap();
+        assert_eq!(t.diag, vec![0.0, 0.0, 0.0]);
+        assert_eq!(t.diag_stored, vec![true, false, false]);
+        assert_eq!(t.diag_nnz(), 1);
+        assert!(!t.diag_nonzero());
+        // Exact recomposition distinguishes the stored zero from the
+        // absent entries: same nnz, same structure, same values.
+        let back = t.recompose();
+        assert_eq!(back, a);
+        assert_eq!(back.nnz(), 2);
+    }
+
+    #[test]
+    fn split_rejects_rectangular() {
+        let a = Csr::from_triplets(2, 3, &[(0, 0, 1.0)]).unwrap();
+        assert!(a.split_triangular().is_err());
     }
 
     #[test]

@@ -33,7 +33,7 @@ mod sell;
 pub use bcsr::Bcsr;
 pub use coo::{Coo, CooOrder};
 pub use csc::Csc;
-pub use csr::Csr;
+pub use csr::{Csr, Triangular};
 pub use dense::Dense;
 pub use hyb::Hyb;
 pub use jds::Jds;

@@ -27,12 +27,16 @@
 //!                            the crate's only thread-spawning site
 //!   substrates   formats · transform · spmv kernels · matrixgen · io
 //!                machine cost models + topology/affinity · solvers
+//!                precond — level-scheduled SpTRSV/SymGS kernels
 //! ```
 //!
 //! * **Substrates** — sparse formats ([`formats`]), run-time transformations
 //!   ([`transform`]), parallel SpMV implementations ([`spmv`]), synthetic
 //!   matrix generators ([`matrixgen`]), Matrix Market I/O ([`io`]), machine
-//!   cost models ([`machine`]) and iterative solvers ([`solver`]).
+//!   cost models ([`machine`]), iterative solvers ([`solver`]) and
+//!   preconditioner kernels ([`precond`]: level-scheduled sparse
+//!   triangular solves and symmetric Gauss-Seidel, with their own
+//!   serial-vs-parallel autotuned decision).
 //! * **The execution engine** — a persistent worker pool
 //!   ([`spmv::pool::ParPool`]: parked workers, no per-call spawning) and
 //!   reusable plans ([`spmv::plan`]): a [`spmv::SpmvPlan`] owns the chosen
@@ -108,6 +112,7 @@ pub mod machine;
 pub mod matrixgen;
 pub mod metrics;
 pub mod net;
+pub mod precond;
 pub mod rng;
 pub mod runtime;
 pub mod solver;

@@ -105,6 +105,16 @@ fn apply_split_flag(args: &Args, cfg: &mut CoordinatorConfig) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--precond` (overriding `SPMV_AT_PRECOND`) to the config — the
+/// preconditioner `solve` requests build and cache per served entry.
+fn apply_precond_flag(args: &Args, cfg: &mut CoordinatorConfig) -> Result<()> {
+    if let Some(v) = args.get("precond") {
+        cfg.precond = spmv_at::precond::PrecondKind::parse(v)
+            .ok_or_else(|| anyhow!("--precond: expected none, jacobi, or symgs"))?;
+    }
+    Ok(())
+}
+
 fn make_backend(name: &str) -> Result<Box<dyn Backend>> {
     Ok(match name {
         "es2" => Box::new(SimulatedBackend::new(VectorMachine::default())),
@@ -290,6 +300,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
     }
     // SPMV_AT_SPLIT_ROWS unless --split-rows overrides.
     apply_split_flag(args, &mut cfg)?;
+    // SPMV_AT_PRECOND (default jacobi) unless --precond overrides.
+    apply_precond_flag(args, &mut cfg)?;
     let (_srv, client) = Server::spawn_sharded(cfg, 32);
     client.register(&name, a)?;
     let b = vec![1.0; n];
@@ -301,11 +313,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let (x, stats) = client.solve(&name, b, solver, opts)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "matrix={name} solver={solver:?} iters={} converged={} residual={:.3e} spmv_calls={} wall={:.4}s |x|={:.6e}",
+        "matrix={name} solver={solver:?} iters={} converged={} residual={:.3e} spmv_calls={} precond_calls={} precond_setup={:.6}s wall={:.4}s |x|={:.6e}",
         stats.iterations,
         stats.converged,
         stats.residual,
         stats.spmv_calls,
+        stats.precond_calls,
+        stats.precond_setup_seconds,
         dt,
         x.iter().map(|v| v * v).sum::<f64>().sqrt()
     );
@@ -315,9 +329,18 @@ fn cmd_solve(args: &Args) -> Result<()> {
         } else {
             String::new()
         };
+        let precond = match row.precond {
+            Some(p) => {
+                format!(
+                    " precond={p}/calls:{}/setup:{:.6}s",
+                    row.precond_calls, row.precond_setup_seconds
+                )
+            }
+            None => String::new(),
+        };
         println!(
             "  serving={} calls={} transformed_calls={} t_trans={:.6}s amortized={} \
-             explored={} replans={}{split}",
+             explored={} replans={}{precond}{split}",
             row.serving,
             row.calls,
             row.transformed_calls,
@@ -363,6 +386,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // SPMV_AT_SPLIT_ROWS unless --split-rows overrides.
     apply_split_flag(args, &mut cfg)?;
+    // SPMV_AT_PRECOND (default jacobi) unless --precond overrides.
+    apply_precond_flag(args, &mut cfg)?;
     // Attach XLA runtime if artifacts exist (XLA serving is single-loop:
     // the artifact handle is not shared across shard coordinators).
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -492,11 +517,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     } else {
                         String::new()
                     };
+                    // Solver traffic shows its cached preconditioner and
+                    // how much work it amortised.
+                    let precond = match s.precond {
+                        Some(p) => format!(
+                            " precond={p}/calls:{}/setup:{:.6}s",
+                            s.precond_calls, s.precond_setup_seconds
+                        ),
+                        None => String::new(),
+                    };
                     // Every loop sees all the shards, so the entry's own
                     // shard field is the serving route in every shape.
                     println!(
                         "{}: n={} nnz={} D={:.3} shard={} serving={} calls={} passes={} \
-                         amortized={} samples=crs:{}/imp:{} explored={} replans={}{split}",
+                         amortized={} samples=crs:{}/imp:{} explored={} replans={}{precond}{split}",
                         s.name,
                         s.n,
                         s.nnz,
@@ -634,6 +668,9 @@ fn usage() -> ! {
          \x20                  cross-shard SplitPlan whose row blocks execute\n\
          \x20                  concurrently, one per socket (0 = never, 'auto' = the\n\
          \x20                  nnz-per-socket heuristic; overrides SPMV_AT_SPLIT_ROWS)\n\
+         \x20 --precond <kind> preconditioner for pcg solves: none, jacobi, or symgs\n\
+         \x20                  (level-scheduled symmetric Gauss-Seidel); built once\n\
+         \x20                  and cached per served entry (overrides SPMV_AT_PRECOND)\n\
          \x20 --listen <spec>  (serve) also serve the framed binary protocol over\n\
          \x20                  unix:<path>, tcp:<host>:<port>, or <host>:<port>,\n\
          \x20                  coalescing concurrent single-vector requests into\n\
@@ -641,6 +678,7 @@ fn usage() -> ! {
          environment: SPMV_AT_THREADS, SPMV_AT_SHARDS, SPMV_AT_BATCH_TILE,\n\
          \x20 SPMV_AT_ADAPTIVE, SPMV_AT_SPLIT_ROWS, SPMV_AT_LISTEN,\n\
          \x20 SPMV_AT_NET_QUEUE, SPMV_AT_COALESCE_WAIT_US,\n\
+         \x20 SPMV_AT_PRECOND=none|jacobi|symgs, SPMV_AT_TRSV_PAR=auto|never|always|<width>,\n\
          \x20 SPMV_AT_TOPOLOGY=<sockets>:<cores> (see docs/TUNING.md)\n\
          examples:\n\
          \x20 spmv-at suite --scale 0.05\n\
@@ -648,6 +686,7 @@ fn usage() -> ! {
          \x20 spmv-at decide --tuning tuning-es2.tsv --matrix memplus\n\
          \x20 spmv-at spmv --matrix chem_master1 --switch 0 --iters 100 --batch 16\n\
          \x20 spmv-at solve --matrix xenon1 --solver cg --adaptive 1\n\
+         \x20 spmv-at solve --matrix torso1 --solver pcg --precond symgs\n\
          \x20 spmv-at serve --shards 4 --adaptive 1 --learned learned.tsv\n\
          \x20 spmv-at serve --listen tcp:0.0.0.0:7077\n\
          \x20 spmv-at topology"

@@ -1,0 +1,269 @@
+//! Level-set analysis for sparse triangular solves.
+//!
+//! Substitution on a triangular matrix is sequential row-to-row only
+//! where rows actually depend on each other. Grouping rows into
+//! *levels* — row `i` sits one level above the deepest row it reads —
+//! yields a schedule where every row inside a level is independent, so
+//! a level can execute as one parallel dispatch and the per-level
+//! barrier provides the cross-level happens-before.
+//!
+//! The analysis is itself a run-time data transformation in the paper's
+//! sense: it costs one O(nnz) pass up front ([`LevelSchedule::analysis_seconds`])
+//! and pays back per solve only when levels are wide enough to feed the
+//! pool. The level-population statistics ([`LevelStats`] — level count,
+//! average/maximum width) are the subsystem's analogue of the `D_mat`
+//! density statistic: the serial-vs-parallel decision
+//! ([`super::sptrsv::TrsvPar`]) thresholds on average width per thread
+//! exactly as the SpMV decision thresholds on `D_mat`, and the schedule
+//! is cached per matrix alongside the transformed plan so repeated
+//! solves amortise it.
+//!
+//! Within a level, row lengths are as skewed as the matrix itself, so
+//! chunks balance *nonzeros* rather than rows: each level builds a
+//! work prefix over its row list and feeds it to the same
+//! [`crate::spmv::partition::split_by_nnz`] splitter the SpMV row
+//! partitions use.
+
+use crate::formats::{Csr, SparseMatrix};
+use crate::matrixgen::rowlen;
+use std::ops::Range;
+use std::time::Instant;
+
+/// Level-population statistics — the triangular-solve analogue of the
+/// `D_mat` statistic: the decision input for serial vs level-scheduled
+/// execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LevelStats {
+    /// Number of levels (the critical-path length of the dependency DAG).
+    pub levels: usize,
+    /// Total rows scheduled (= matrix order).
+    pub rows: usize,
+    /// Average rows per level — the parallelism actually on offer.
+    pub avg_width: f64,
+    /// Largest level population.
+    pub max_width: usize,
+}
+
+/// A cached dependency-DAG schedule for one strict triangle: rows
+/// grouped by level, with nnz-balanced chunk ranges per level sized for
+/// a given pool width.
+///
+/// Built once per (matrix, pool) by [`LevelSchedule::build_lower`] /
+/// [`LevelSchedule::build_upper`] and cached like a transformed plan;
+/// the SpTRSV kernels in [`super::sptrsv`] replay it on every solve.
+#[derive(Clone, Debug)]
+pub struct LevelSchedule {
+    /// All rows, grouped by level; within a level, ascending row index
+    /// (the grouping is what buys parallelism — per-row arithmetic
+    /// order is untouched, which is why level-scheduled execution is
+    /// bitwise-identical to serial substitution).
+    rows: Vec<usize>,
+    /// Level `l` occupies `rows[level_ptr[l]..level_ptr[l + 1]]`.
+    level_ptr: Vec<usize>,
+    /// Per level: nnz-balanced ranges into `rows`, at most `threads`
+    /// of them.
+    chunks: Vec<Vec<Range<usize>>>,
+    stats: LevelStats,
+    analysis_seconds: f64,
+}
+
+impl LevelSchedule {
+    /// Schedule a strictly-lower triangle for forward substitution.
+    /// Row `i` depends on exactly its stored columns (all `< i`), so a
+    /// single ascending pass computes every level in O(nnz).
+    pub fn build_lower(lower: &Csr, threads: usize) -> Self {
+        let t0 = Instant::now();
+        let n = lower.n_rows();
+        let mut level = vec![0usize; n];
+        let mut n_levels = 0usize;
+        for i in 0..n {
+            let mut l = 0usize;
+            for (c, _) in lower.row(i) {
+                l = l.max(level[c as usize] + 1);
+            }
+            level[i] = l;
+            n_levels = n_levels.max(l + 1);
+        }
+        Self::assemble(lower, &level, n_levels, threads, t0)
+    }
+
+    /// Schedule a strictly-upper triangle for backward substitution.
+    /// Row `i` depends on its stored columns (all `> i`), so the pass
+    /// runs descending; levels still number 0.. in execution order.
+    pub fn build_upper(upper: &Csr, threads: usize) -> Self {
+        let t0 = Instant::now();
+        let n = upper.n_rows();
+        let mut level = vec![0usize; n];
+        let mut n_levels = 0usize;
+        for i in (0..n).rev() {
+            let mut l = 0usize;
+            for (c, _) in upper.row(i) {
+                l = l.max(level[c as usize] + 1);
+            }
+            level[i] = l;
+            n_levels = n_levels.max(l + 1);
+        }
+        Self::assemble(upper, &level, n_levels, threads, t0)
+    }
+
+    /// Bucket rows by level (counting sort keeps ascending row order
+    /// inside each level), then cut each level into nnz-balanced chunks.
+    fn assemble(
+        tri: &Csr,
+        level: &[usize],
+        n_levels: usize,
+        threads: usize,
+        t0: Instant,
+    ) -> Self {
+        let n = level.len();
+        let mut counts = vec![0usize; n_levels];
+        for &l in level {
+            counts[l] += 1;
+        }
+        let mut level_ptr = Vec::with_capacity(n_levels + 1);
+        level_ptr.push(0usize);
+        for &c in &counts {
+            level_ptr.push(level_ptr.last().unwrap() + c);
+        }
+        let mut cursor = level_ptr[..n_levels].to_vec();
+        let mut rows = vec![0usize; n];
+        for (i, &l) in level.iter().enumerate() {
+            rows[cursor[l]] = i;
+            cursor[l] += 1;
+        }
+
+        let threads = threads.max(1);
+        let mut chunks = Vec::with_capacity(n_levels);
+        for l in 0..n_levels {
+            let span = level_ptr[l]..level_ptr[l + 1];
+            // Work prefix over this level's row list: row length + 1 so
+            // empty rows still cost their dispatch/store.
+            let mut prefix = Vec::with_capacity(span.len() + 1);
+            prefix.push(0usize);
+            for &i in &rows[span.clone()] {
+                let len = tri.row_ptr[i + 1] - tri.row_ptr[i];
+                prefix.push(prefix.last().unwrap() + len + 1);
+            }
+            let local = crate::spmv::partition::split_by_nnz(&prefix, threads);
+            chunks.push(
+                local
+                    .into_iter()
+                    .map(|r| span.start + r.start..span.start + r.end)
+                    .collect(),
+            );
+        }
+
+        let stats = {
+            let widths: Vec<usize> = counts;
+            let s = rowlen::stats(&widths);
+            LevelStats {
+                levels: n_levels,
+                rows: n,
+                avg_width: s.mean,
+                max_width: s.max,
+            }
+        };
+        Self {
+            rows,
+            level_ptr,
+            chunks,
+            stats,
+            analysis_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Number of levels (0 for an empty matrix).
+    pub fn n_levels(&self) -> usize {
+        self.level_ptr.len().saturating_sub(1)
+    }
+
+    /// Level-population statistics — the decision input.
+    pub fn stats(&self) -> &LevelStats {
+        &self.stats
+    }
+
+    /// Wall seconds the analysis pass cost (the transformation cost the
+    /// amortisation accounting charges against the schedule).
+    pub fn analysis_seconds(&self) -> f64 {
+        self.analysis_seconds
+    }
+
+    /// The scheduled row order (grouped by level).
+    pub fn rows(&self) -> &[usize] {
+        &self.rows
+    }
+
+    /// The nnz-balanced chunk ranges (into [`Self::rows`]) for level `l`.
+    pub fn chunks(&self, l: usize) -> &[Range<usize>] {
+        &self.chunks[l]
+    }
+
+    /// Rows of level `l`, in ascending row order.
+    pub fn level_rows(&self, l: usize) -> &[usize] {
+        &self.rows[self.level_ptr[l]..self.level_ptr[l + 1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csr;
+
+    fn lower_chain() -> Csr {
+        // Bidiagonal chain: row i depends on row i-1 → n levels of 1.
+        Csr::from_triplets(4, 4, &[(1, 0, 1.0), (2, 1, 1.0), (3, 2, 1.0)]).unwrap()
+    }
+
+    #[test]
+    fn chain_is_fully_sequential() {
+        let s = LevelSchedule::build_lower(&lower_chain(), 4);
+        assert_eq!(s.n_levels(), 4);
+        assert_eq!(s.stats().max_width, 1);
+        for l in 0..4 {
+            assert_eq!(s.level_rows(l), &[l]);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_is_one_level() {
+        // No off-diagonal entries → every row independent → one level.
+        let empty = Csr::from_triplets(5, 5, &[]).unwrap();
+        let s = LevelSchedule::build_lower(&empty, 2);
+        assert_eq!(s.n_levels(), 1);
+        assert_eq!(s.stats().avg_width, 5.0);
+        assert_eq!(s.level_rows(0), &[0, 1, 2, 3, 4]);
+        // Chunks cover the level exactly, in order.
+        let covered: usize = s.chunks(0).iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 5);
+    }
+
+    #[test]
+    fn upper_levels_mirror_lower() {
+        // Strictly-upper chain: row i depends on i+1 → execution starts
+        // at the last row; level 0 must be the bottom row.
+        let u = Csr::from_triplets(3, 3, &[(0, 1, 1.0), (1, 2, 1.0)]).unwrap();
+        let s = LevelSchedule::build_upper(&u, 2);
+        assert_eq!(s.n_levels(), 3);
+        assert_eq!(s.level_rows(0), &[2]);
+        assert_eq!(s.level_rows(1), &[1]);
+        assert_eq!(s.level_rows(2), &[0]);
+    }
+
+    #[test]
+    fn forked_dag_levels() {
+        // Rows 1 and 2 both depend only on row 0; row 3 on both.
+        let l = Csr::from_triplets(
+            4,
+            4,
+            &[(1, 0, 1.0), (2, 0, 1.0), (3, 1, 1.0), (3, 2, 1.0)],
+        )
+        .unwrap();
+        let s = LevelSchedule::build_lower(&l, 2);
+        assert_eq!(s.n_levels(), 3);
+        assert_eq!(s.level_rows(0), &[0]);
+        assert_eq!(s.level_rows(1), &[1, 2]);
+        assert_eq!(s.level_rows(2), &[3]);
+        assert_eq!(s.stats().max_width, 2);
+        assert!(s.analysis_seconds() >= 0.0);
+    }
+}

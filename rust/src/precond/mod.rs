@@ -1,0 +1,263 @@
+//! Preconditioner kernels: level-scheduled sparse triangular solves
+//! (SpTRSV), symmetric Gauss-Seidel (SymGS), and the trait the solver
+//! layer applies them through.
+//!
+//! The subsystem extends the paper's central question — *does a
+//! run-time data transformation pay for itself?* — to the triangular
+//! workload behind preconditioned solvers. Here the "transformation" is
+//! level-set analysis ([`levels::LevelSchedule`]): an O(nnz) pass that
+//! groups rows of a triangle into dependency levels so each level can
+//! run in parallel. Its cost, its cached reuse, and the
+//! serial-vs-parallel decision it feeds ([`sptrsv::TrsvPar`], measured
+//! and correctable at run time via the adaptive telemetry/hysteresis
+//! machinery) mirror the SpMV pipeline's transform/decide/serve loop
+//! one-for-one:
+//!
+//! ```text
+//!   SpMV loop                      SpTRSV / SymGS loop
+//!   ─────────                      ───────────────────
+//!   CRS → ELL/SELL transform       Csr::split_triangular + level sets
+//!   D_mat density statistic        LevelStats avg/max level width
+//!   D* threshold (offline table)   SPMV_AT_TRSV_PAR width threshold
+//!   cached SpmvPlan                cached Triangular + LevelSchedule
+//!   Telemetry per Implementation   ArmTelemetry<TrsvMode>
+//!   hysteresis re-plan             hysteresis mode flip (bitwise-safe)
+//! ```
+//!
+//! [`Preconditioner`] is the application-facing seam:
+//! [`crate::solver::pcg_with`] takes any implementation, the
+//! coordinator caches one per served entry next to its `SpmvPlan`, and
+//! the CLI selects one via `--precond` / `SPMV_AT_PRECOND`
+//! ([`configured_precond`]). [`Jacobi`] reproduces what `pcg` always
+//! did (diagonal scaling) with the setup hoisted out of the solve loop;
+//! [`SymGs`] is the HPCG-smoother shape built on the SpTRSV kernels.
+
+pub mod levels;
+pub mod sptrsv;
+mod symgs;
+
+pub use levels::{LevelSchedule, LevelStats};
+pub use sptrsv::{TrsvMode, TrsvPar};
+pub use symgs::SymGs;
+
+use crate::formats::{Csr, SparseMatrix};
+use crate::spmv::ParPool;
+use crate::{Result, Value};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// An operator `z ← M⁻¹ r` applied once per solver iteration.
+///
+/// Implementations own whatever setup artifacts they need (inverted
+/// diagonal, triangles, level schedules) so repeated solves on a cached
+/// entry never redo setup — the bug this trait fixes: `pcg` used to
+/// rescan the full matrix for its diagonal on *every* solve call.
+/// `apply` is infallible by contract: all validation (squareness,
+/// non-zero diagonal) happens at build time.
+pub trait Preconditioner: Send {
+    /// Stable lowercase name (`stats` rows, solve reports, bench JSON).
+    fn name(&self) -> &'static str;
+
+    /// Wall seconds the one-time setup cost (0 for [`Identity`]).
+    /// Reported per solve in
+    /// [`crate::solver::SolveStats::precond_setup_seconds`] whether the
+    /// setup was paid in that call or amortised from cache.
+    fn setup_seconds(&self) -> f64;
+
+    /// Apply `z ← M⁻¹ r`. `r` and `z` have the operator's dimension.
+    fn apply(&mut self, r: &[Value], z: &mut [Value]);
+}
+
+/// The do-nothing preconditioner: `z ← r` (PCG degenerates to CG).
+pub struct Identity;
+
+impl Preconditioner for Identity {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn setup_seconds(&self) -> f64 {
+        0.0
+    }
+
+    fn apply(&mut self, r: &[Value], z: &mut [Value]) {
+        z.copy_from_slice(r);
+    }
+}
+
+/// Diagonal (Jacobi) scaling: `z ← D⁻¹ r`, with `1/dᵢ` precomputed once
+/// at build — the preconditioner `pcg` has always used, minus the
+/// per-solve full-matrix diagonal scan.
+pub struct Jacobi {
+    minv: Vec<Value>,
+    setup_seconds: f64,
+}
+
+impl Jacobi {
+    /// Extract and invert the diagonal of `a`. Fails on rectangular
+    /// matrices or any zero diagonal entry (same contract `pcg`
+    /// enforced inline).
+    pub fn build(a: &Csr) -> Result<Self> {
+        let t0 = Instant::now();
+        anyhow::ensure!(
+            a.n_rows() == a.n_cols(),
+            "jacobi preconditioner needs a square matrix, got {}x{}",
+            a.n_rows(),
+            a.n_cols()
+        );
+        let n = a.n_rows();
+        let mut minv = vec![0.0; n];
+        for i in 0..n {
+            let mut d = 0.0;
+            for (c, v) in a.row(i) {
+                if c as usize == i {
+                    d = v;
+                }
+            }
+            anyhow::ensure!(d != 0.0, "jacobi preconditioner needs a non-zero diagonal (row {i})");
+            minv[i] = 1.0 / d;
+        }
+        Ok(Self { minv, setup_seconds: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Build from an already-extracted diagonal (the
+    /// [`crate::solver::SpmvOp::diagonal`] path — lets [`crate::solver::pcg`]
+    /// instantiate Jacobi for operators that are not plain `Csr`).
+    pub fn from_diagonal(d: Vec<Value>) -> Result<Self> {
+        let t0 = Instant::now();
+        anyhow::ensure!(
+            d.iter().all(|&v| v != 0.0),
+            "Jacobi preconditioner needs a zero-free diagonal"
+        );
+        let minv = d.into_iter().map(|v| 1.0 / v).collect();
+        Ok(Self { minv, setup_seconds: t0.elapsed().as_secs_f64() })
+    }
+}
+
+impl Preconditioner for Jacobi {
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+
+    fn setup_seconds(&self) -> f64 {
+        self.setup_seconds
+    }
+
+    fn apply(&mut self, r: &[Value], z: &mut [Value]) {
+        for ((zi, &ri), &mi) in z.iter_mut().zip(r).zip(&self.minv) {
+            *zi = ri * mi;
+        }
+    }
+}
+
+/// Which preconditioner the CLI / env / coordinator selects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecondKind {
+    /// [`Identity`] — no preconditioning.
+    None,
+    /// [`Jacobi`] — diagonal scaling (the historical `pcg` behaviour,
+    /// and the default).
+    Jacobi,
+    /// [`SymGs`] — symmetric Gauss-Seidel on level-scheduled SpTRSV.
+    SymGs,
+}
+
+impl PrecondKind {
+    /// Stable lowercase name (flag values, stats rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            PrecondKind::None => "none",
+            PrecondKind::Jacobi => "jacobi",
+            PrecondKind::SymGs => "symgs",
+        }
+    }
+
+    /// Parse a kind string (`none`/`identity`, `jacobi`/`diag`,
+    /// `symgs`/`gs`). Empty/whitespace means unset (`None`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "identity" | "off" => Some(PrecondKind::None),
+            "jacobi" | "diag" | "diagonal" => Some(PrecondKind::Jacobi),
+            "symgs" | "gs" | "gauss-seidel" => Some(PrecondKind::SymGs),
+            _ => None,
+        }
+    }
+
+    /// Build the preconditioner for `a`, running level-scheduled
+    /// kernels (SymGS) on `pool` under the given policies.
+    pub fn build(
+        self,
+        a: &Csr,
+        pool: &Arc<ParPool>,
+        trsv: TrsvPar,
+        adaptive: &crate::autotune::adaptive::AdaptiveConfig,
+    ) -> Result<Box<dyn Preconditioner>> {
+        Ok(match self {
+            PrecondKind::None => Box::new(Identity),
+            PrecondKind::Jacobi => Box::new(Jacobi::build(a)?),
+            PrecondKind::SymGs => Box::new(SymGs::build(a, pool.clone(), trsv, adaptive)?),
+        })
+    }
+}
+
+impl std::fmt::Display for PrecondKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Truth function for `SPMV_AT_PRECOND`: unset, empty, or unparseable
+/// means [`PrecondKind::Jacobi`] — the preconditioner `pcg` has always
+/// applied, so existing deployments see byte-identical behaviour.
+pub fn configured_precond() -> PrecondKind {
+    match std::env::var("SPMV_AT_PRECOND") {
+        Ok(v) => PrecondKind::parse(&v).unwrap_or(PrecondKind::Jacobi),
+        Err(_) => PrecondKind::Jacobi,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_copies() {
+        let mut m = Identity;
+        let mut z = [0.0; 3];
+        m.apply(&[1.0, -2.0, 3.5], &mut z);
+        assert_eq!(z, [1.0, -2.0, 3.5]);
+        assert_eq!(m.name(), "none");
+        assert_eq!(m.setup_seconds(), 0.0);
+    }
+
+    #[test]
+    fn jacobi_scales_by_inverse_diagonal() {
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 2.0), (0, 1, 7.0), (1, 1, 4.0)]).unwrap();
+        let mut m = Jacobi::build(&a).unwrap();
+        let mut z = [0.0; 2];
+        m.apply(&[2.0, 2.0], &mut z);
+        assert_eq!(z, [1.0, 0.5]);
+        assert!(m.setup_seconds() >= 0.0);
+    }
+
+    #[test]
+    fn jacobi_rejects_zero_or_missing_diagonal() {
+        let zero = Csr::from_triplets(2, 2, &[(0, 0, 0.0), (1, 1, 1.0)]).unwrap();
+        assert!(Jacobi::build(&zero).is_err());
+        let missing = Csr::from_triplets(2, 2, &[(0, 0, 1.0)]).unwrap();
+        assert!(Jacobi::build(&missing).is_err());
+        let rect = Csr::from_triplets(2, 3, &[(0, 0, 1.0)]).unwrap();
+        assert!(Jacobi::build(&rect).is_err());
+    }
+
+    #[test]
+    fn kind_parse_and_names() {
+        assert_eq!(PrecondKind::parse("none"), Some(PrecondKind::None));
+        assert_eq!(PrecondKind::parse(" JACOBI "), Some(PrecondKind::Jacobi));
+        assert_eq!(PrecondKind::parse("symgs"), Some(PrecondKind::SymGs));
+        assert_eq!(PrecondKind::parse("gs"), Some(PrecondKind::SymGs));
+        assert_eq!(PrecondKind::parse(""), None);
+        assert_eq!(PrecondKind::parse("bogus"), None);
+        assert_eq!(PrecondKind::SymGs.to_string(), "symgs");
+    }
+}

@@ -1,0 +1,311 @@
+//! Symmetric Gauss-Seidel preconditioner with an autotuned
+//! triangle-solve decision.
+//!
+//! One SymGS application approximates `M⁻¹r` for
+//! `M = (D + L)·D⁻¹·(D + U)`: a forward sparse triangular solve on
+//! `(D + L)`, a D-scaling of the intermediate, and a backward solve on
+//! `(D + U)` — the HPCG smoother shape. Setup splits the matrix once
+//! ([`Csr::split_triangular`]), validates the diagonal, and builds the
+//! two level schedules; all of it is cached alongside the entry's
+//! `SpmvPlan`, so repeated solves pay only the two substitutions.
+//!
+//! **The autotuned decision.** Each triangular solve can run serially
+//! or replay the cached level schedule on the pool
+//! ([`TrsvMode`]); the static choice comes from the level-width
+//! threshold ([`TrsvPar`], env `SPMV_AT_TRSV_PAR`). Because the two
+//! variants are bitwise-identical, the adaptive loop can *serve* the
+//! rival arm directly — no shadow execution, no result risk: every
+//! `rival_every`-th apply runs the other mode, its wall time feeds the
+//! same EWMA telemetry the SpMV arms use
+//! ([`ArmTelemetry<TrsvMode>`](ArmTelemetry)), and the hysteresis
+//! controller flips the static mode when measurements contradict the
+//! width heuristic — exactly the SpMV re-planning loop, keyed by
+//! triangle-solve mode instead of kernel implementation.
+
+use super::levels::{LevelSchedule, LevelStats};
+use super::sptrsv::{
+    solve_lower_levels, solve_lower_seq, solve_upper_levels, solve_upper_seq, TrsvMode, TrsvPar,
+};
+use super::Preconditioner;
+use crate::autotune::adaptive::{AdaptiveConfig, ArmTelemetry, HysteresisController};
+use crate::formats::{Csr, Triangular};
+use crate::spmv::ParPool;
+use crate::{Result, Value};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Serve-the-rival cadence: with adaptive mode on, every Nth apply runs
+/// the non-serving SpTRSV mode (safe because both modes are
+/// bitwise-identical) so its telemetry stays fresh without shadow work.
+const RIVAL_EVERY: u64 = 16;
+
+/// Symmetric Gauss-Seidel preconditioner (`M = (D+L)·D⁻¹·(D+U)`) with
+/// cached triangles, cached level schedules, and a measurement-driven
+/// serial-vs-parallel triangle-solve arm.
+pub struct SymGs {
+    tri: Triangular,
+    lower_sched: LevelSchedule,
+    upper_sched: LevelSchedule,
+    pool: Arc<ParPool>,
+    /// Currently-serving SpTRSV mode (starts at the policy's static
+    /// choice; the controller may flip it).
+    mode: TrsvMode,
+    adaptive: bool,
+    telemetry: ArmTelemetry<TrsvMode>,
+    controller: HysteresisController,
+    applies: u64,
+    setup_seconds: f64,
+    /// Intermediate `y`/`w` buffer, reused across applies so the hot
+    /// path stays allocation-free.
+    scratch: Vec<Value>,
+}
+
+impl SymGs {
+    /// Split, validate, and level-schedule `a`; decide the initial
+    /// SpTRSV mode from `policy` and the schedules' width statistics.
+    ///
+    /// `adaptive` wires the mode into the runtime loop: telemetry is
+    /// always recorded, but rival serving and mode flips only happen
+    /// when `adaptive.enabled` (matching the SpMV loop's contract that
+    /// the flag off means decide-once).
+    pub fn build(
+        a: &Csr,
+        pool: Arc<ParPool>,
+        policy: TrsvPar,
+        adaptive: &AdaptiveConfig,
+    ) -> Result<Self> {
+        let t0 = Instant::now();
+        let tri = a.split_triangular()?;
+        anyhow::ensure!(
+            tri.diag_nonzero(),
+            "SymGS needs a non-zero diagonal in every row"
+        );
+        let threads = pool.size();
+        let lower_sched = LevelSchedule::build_lower(&tri.lower, threads);
+        let upper_sched = LevelSchedule::build_upper(&tri.upper, threads);
+        // One decision for both sweeps: the narrower triangle bounds the
+        // benefit, so threshold on the smaller average width.
+        let narrower = if lower_sched.stats().avg_width <= upper_sched.stats().avg_width {
+            *lower_sched.stats()
+        } else {
+            *upper_sched.stats()
+        };
+        let mode = policy.choose(&narrower, threads);
+        let controller = HysteresisController::new(
+            adaptive.deadband,
+            adaptive.window,
+            adaptive.flip_windows,
+            adaptive.min_rival_samples,
+        );
+        let n = tri.n();
+        Ok(Self {
+            tri,
+            lower_sched,
+            upper_sched,
+            pool,
+            mode,
+            adaptive: adaptive.enabled,
+            telemetry: ArmTelemetry::new(adaptive.ewma_alpha),
+            controller,
+            applies: 0,
+            setup_seconds: t0.elapsed().as_secs_f64(),
+            scratch: vec![0.0; n],
+        })
+    }
+
+    /// The SpTRSV mode the next apply will serve with (rival applies
+    /// excepted).
+    pub fn mode(&self) -> TrsvMode {
+        self.mode
+    }
+
+    /// Level statistics of the forward (lower) schedule.
+    pub fn lower_stats(&self) -> &LevelStats {
+        self.lower_sched.stats()
+    }
+
+    /// Level statistics of the backward (upper) schedule.
+    pub fn upper_stats(&self) -> &LevelStats {
+        self.upper_sched.stats()
+    }
+
+    /// Wall seconds of level-set analysis (both schedules) — the
+    /// transformation-cost half of the amortisation ledger.
+    pub fn analysis_seconds(&self) -> f64 {
+        self.lower_sched.analysis_seconds() + self.upper_sched.analysis_seconds()
+    }
+
+    /// EW mean seconds per apply of `mode`, when measured.
+    pub fn mean_apply_seconds(&self, mode: TrsvMode) -> Option<f64> {
+        self.telemetry.mean(mode)
+    }
+
+    /// Applications served so far.
+    pub fn applies(&self) -> u64 {
+        self.applies
+    }
+
+    /// Mode flips the controller has made.
+    pub fn flips(&self) -> u64 {
+        self.controller.flips()
+    }
+
+    fn rival(mode: TrsvMode) -> TrsvMode {
+        match mode {
+            TrsvMode::Serial => TrsvMode::LevelPar,
+            TrsvMode::LevelPar => TrsvMode::Serial,
+        }
+    }
+
+    /// One SymGS sweep in `run` mode, writing `z ← M⁻¹ r` via `scratch`.
+    fn sweep(&self, run: TrsvMode, r: &[Value], scratch: &mut [Value], z: &mut [Value]) {
+        let d = Some(self.tri.diag.as_slice());
+        match run {
+            TrsvMode::Serial => {
+                solve_lower_seq(&self.tri.lower, d, r, scratch);
+                for (w, &di) in scratch.iter_mut().zip(&self.tri.diag) {
+                    *w *= di;
+                }
+                solve_upper_seq(&self.tri.upper, d, scratch, z);
+            }
+            TrsvMode::LevelPar => {
+                solve_lower_levels(&self.tri.lower, d, &self.lower_sched, &self.pool, r, scratch);
+                for (w, &di) in scratch.iter_mut().zip(&self.tri.diag) {
+                    *w *= di;
+                }
+                solve_upper_levels(&self.tri.upper, d, &self.upper_sched, &self.pool, scratch, z);
+            }
+        }
+    }
+}
+
+impl Preconditioner for SymGs {
+    fn name(&self) -> &'static str {
+        "symgs"
+    }
+
+    fn setup_seconds(&self) -> f64 {
+        self.setup_seconds
+    }
+
+    fn apply(&mut self, r: &[Value], z: &mut [Value]) {
+        self.applies += 1;
+        // Serve the rival on a deterministic cadence (bitwise-safe).
+        let run = if self.adaptive && self.applies % RIVAL_EVERY == 0 {
+            Self::rival(self.mode)
+        } else {
+            self.mode
+        };
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let t0 = Instant::now();
+        self.sweep(run, r, &mut scratch, z);
+        let dt = t0.elapsed().as_secs_f64();
+        self.scratch = scratch;
+        self.telemetry.record(run, dt, 1);
+
+        if self.adaptive {
+            let rival = Self::rival(self.mode);
+            let rival_obs = self
+                .telemetry
+                .stats(rival)
+                .map(|s| (s.mean().unwrap_or(f64::INFINITY), s.count()));
+            let flip =
+                self.controller
+                    .note_serve(1, self.telemetry.mean(self.mode), rival_obs);
+            if flip {
+                self.mode = rival;
+                self.controller.reset();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrixgen::{make_spd, random_csr};
+    use crate::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        make_spd(&random_csr(&mut rng, n, n, 0.05))
+    }
+
+    #[test]
+    fn symgs_apply_matches_direct_triangular_arithmetic() {
+        // 2×2: A = [[4, 1], [1, 3]] → L = [[0,0],[1,0]], D = (4,3),
+        // U = [[0,1],[0,0]]. M z = r via the three-step recipe by hand.
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 4.0), (0, 1, 1.0), (1, 0, 1.0), (1, 1, 3.0)])
+            .unwrap();
+        let pool = Arc::new(ParPool::new(1));
+        let mut m =
+            SymGs::build(&a, pool, TrsvPar::Never, &AdaptiveConfig::default()).unwrap();
+        let r = [8.0, 10.0];
+        let mut z = [0.0; 2];
+        m.apply(&r, &mut z);
+        // Forward: y0 = 8/4 = 2; y1 = (10 − 1·2)/3 = 8/3.
+        // Scale:   w = (8, 8).
+        // Backward: z1 = 8/3; z0 = (8 − 1·(8/3))/4 = 4/3.
+        assert!((z[0] - 4.0 / 3.0).abs() < 1e-15);
+        assert!((z[1] - 8.0 / 3.0).abs() < 1e-15);
+        assert_eq!(m.applies(), 1);
+        assert_eq!(m.name(), "symgs");
+        assert!(m.setup_seconds() >= 0.0);
+    }
+
+    #[test]
+    fn serial_and_levelpar_modes_are_bitwise_identical() {
+        let a = spd(120, 9);
+        let pool = Arc::new(ParPool::new(3));
+        let cfg = AdaptiveConfig::default();
+        let mut serial = SymGs::build(&a, pool.clone(), TrsvPar::Never, &cfg).unwrap();
+        let mut par = SymGs::build(&a, pool, TrsvPar::Always, &cfg).unwrap();
+        assert_eq!(serial.mode(), TrsvMode::Serial);
+        assert_eq!(par.mode(), TrsvMode::LevelPar);
+        let r: Vec<f64> = (0..120).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut z_s = vec![0.0; 120];
+        let mut z_p = vec![0.0; 120];
+        serial.apply(&r, &mut z_s);
+        par.apply(&r, &mut z_p);
+        assert_eq!(z_s, z_p, "level-scheduled SymGS must be bitwise-identical");
+    }
+
+    #[test]
+    fn symgs_rejects_zero_diagonal() {
+        let a = Csr::from_triplets(2, 2, &[(0, 1, 1.0), (1, 0, 1.0)]).unwrap();
+        let pool = Arc::new(ParPool::new(1));
+        assert!(SymGs::build(&a, pool, TrsvPar::Auto, &AdaptiveConfig::default()).is_err());
+    }
+
+    #[test]
+    fn adaptive_arm_measures_both_modes_and_can_flip() {
+        let a = spd(200, 11);
+        let pool = Arc::new(ParPool::new(2));
+        let cfg = AdaptiveConfig {
+            enabled: true,
+            // Tight loop so both arms accumulate samples fast.
+            window: 4,
+            flip_windows: 1,
+            min_rival_samples: 1,
+            ..AdaptiveConfig::default()
+        };
+        // Force the static choice to LevelPar on a random matrix whose
+        // levels are narrow — the measured serial arm should win
+        // eventually, and at minimum both arms must be sampled.
+        let mut m = SymGs::build(&a, pool, TrsvPar::Always, &cfg).unwrap();
+        let r: Vec<f64> = (0..200).map(|i| 1.0 + (i % 7) as f64).collect();
+        let mut z = vec![0.0; 200];
+        let mut reference: Option<Vec<f64>> = None;
+        for _ in 0..(RIVAL_EVERY * 4) {
+            m.apply(&r, &mut z);
+            // Every apply — serving or rival — produces the same bits.
+            match &reference {
+                Some(want) => assert_eq!(&z, want),
+                None => reference = Some(z.clone()),
+            }
+        }
+        assert!(m.mean_apply_seconds(TrsvMode::Serial).is_some());
+        assert!(m.mean_apply_seconds(TrsvMode::LevelPar).is_some());
+        assert!(m.applies() == RIVAL_EVERY * 4);
+    }
+}

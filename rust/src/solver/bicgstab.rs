@@ -35,7 +35,13 @@ pub fn bicgstab<Op: SpmvOp + ?Sized>(
     for k in 0..opts.max_iters {
         let res = norm2(&r);
         if res / bnorm <= opts.tol {
-            return Ok(SolveStats { iterations: k, residual: res, converged: true, spmv_calls });
+            return Ok(SolveStats {
+                iterations: k,
+                residual: res,
+                converged: true,
+                spmv_calls,
+                ..Default::default()
+            });
         }
         let rho = dot(&r0, &r);
         anyhow::ensure!(rho.abs() > 1e-300, "BiCGStab breakdown: rho = {rho}");
@@ -64,6 +70,7 @@ pub fn bicgstab<Op: SpmvOp + ?Sized>(
                 residual: snorm,
                 converged: true,
                 spmv_calls,
+                ..Default::default()
             });
         }
         a.apply(&s, &mut t)?;
@@ -84,6 +91,7 @@ pub fn bicgstab<Op: SpmvOp + ?Sized>(
         residual: res,
         converged: res / bnorm <= opts.tol,
         spmv_calls,
+        ..Default::default()
     })
 }
 

@@ -35,6 +35,7 @@ pub fn cg<Op: SpmvOp + ?Sized>(
                 residual: rr.sqrt(),
                 converged: true,
                 spmv_calls,
+                ..Default::default()
             });
         }
         a.apply(&p, &mut ap)?;
@@ -57,6 +58,7 @@ pub fn cg<Op: SpmvOp + ?Sized>(
         residual: rr.sqrt(),
         converged: rr.sqrt() / bnorm <= opts.tol,
         spmv_calls,
+        ..Default::default()
     })
 }
 

@@ -35,6 +35,7 @@ pub fn gmres<Op: SpmvOp + ?Sized>(
                 residual: beta,
                 converged: true,
                 spmv_calls,
+                ..Default::default()
             });
         }
         if total_iters >= opts.max_iters {
@@ -43,6 +44,7 @@ pub fn gmres<Op: SpmvOp + ?Sized>(
                 residual: beta,
                 converged: false,
                 spmv_calls,
+                ..Default::default()
             });
         }
 
@@ -105,6 +107,7 @@ pub fn gmres<Op: SpmvOp + ?Sized>(
                 residual: beta,
                 converged: beta / bnorm <= opts.tol,
                 spmv_calls,
+                ..Default::default()
             });
         }
         let mut y = vec![0.0; k];

@@ -40,6 +40,7 @@ pub fn jacobi<Op: SpmvOp + ?Sized>(
                 residual: rnorm2.sqrt(),
                 converged: true,
                 spmv_calls,
+                ..Default::default()
             });
         }
     }
@@ -52,6 +53,7 @@ pub fn jacobi<Op: SpmvOp + ?Sized>(
         residual: res,
         converged: res / bnorm <= opts.tol,
         spmv_calls,
+        ..Default::default()
     })
 }
 

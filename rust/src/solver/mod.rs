@@ -20,7 +20,7 @@ pub use bicgstab::bicgstab;
 pub use cg::cg;
 pub use gmres::gmres;
 pub use jacobi::jacobi;
-pub use pcg::pcg;
+pub use pcg::{pcg, pcg_with};
 
 use crate::formats::{Csr, SparseMatrix};
 use crate::Result;
@@ -111,7 +111,7 @@ impl SpmvOp for crate::autotune::atlib::Durmv {
 }
 
 /// Convergence report shared by the solvers.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SolveStats {
     /// Iterations executed.
     pub iterations: usize,
@@ -121,6 +121,13 @@ pub struct SolveStats {
     pub converged: bool,
     /// SpMV applications performed (the amortisation denominator).
     pub spmv_calls: usize,
+    /// Preconditioner applications performed (0 for unpreconditioned
+    /// solvers) — with `spmv_calls`, the full amortisation denominator.
+    pub precond_calls: usize,
+    /// One-time preconditioner setup cost in wall seconds, whether paid
+    /// during this solve or amortised from a coordinator cache (0 for
+    /// unpreconditioned solvers).
+    pub precond_setup_seconds: f64,
 }
 
 /// Solver stopping controls.

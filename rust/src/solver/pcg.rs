@@ -1,29 +1,66 @@
-//! Jacobi-preconditioned Conjugate Gradient — the solver shape OpenATLib's
+//! Preconditioned Conjugate Gradient — the solver shape OpenATLib's
 //! users actually run (diagonal scaling is the default preconditioner for
 //! the FEM/device matrices of Table 1). Completes the §2.2 amortisation
 //! story: preconditioning reduces iteration counts, which *tightens* the
 //! budget the transformation must amortise within.
+//!
+//! [`pcg_with`] is the general form: it applies any
+//! [`Preconditioner`] — [`Identity`](crate::precond::Identity),
+//! [`Jacobi`], or the level-scheduled
+//! [`SymGs`](crate::precond::SymGs) — and counts preconditioner work
+//! (`precond_calls`, `precond_setup_seconds`) alongside `spmv_calls` so
+//! the amortisation denominator covers the whole iteration, not just
+//! the SpMV half. [`pcg`] is the historical Jacobi instantiation: same
+//! signature, same semantics, same failure on zero diagonals — but the
+//! diagonal extraction and inversion now happen once, behind the trait,
+//! instead of being rescanned on every solve call.
 
 use super::{axpy, dot, norm2, SolveStats, SolverOptions, SpmvOp};
+use crate::precond::{Jacobi, Preconditioner};
 use crate::{Result, Value};
 
-/// Solve `A·x = b` with CG preconditioned by `M = diag(A)`.
+/// Solve `A·x = b` with CG preconditioned by `M = diag(A)` (the
+/// [`Jacobi`] instantiation of [`pcg_with`]).
 pub fn pcg<Op: SpmvOp + ?Sized>(
     a: &mut Op,
     b: &[Value],
     x: &mut [Value],
     opts: &SolverOptions,
 ) -> Result<SolveStats> {
+    let mut m = Jacobi::from_diagonal(a.diagonal()?)?;
+    pcg_with(a, &mut m, b, x, opts)
+}
+
+/// Solve `A·x = b` with CG preconditioned by `m`.
+///
+/// `m` is applied once to the initial residual and once per iteration;
+/// each application is counted in [`SolveStats::precond_calls`], and
+/// `m`'s one-time setup cost is reported in
+/// [`SolveStats::precond_setup_seconds`] (whether it was paid by this
+/// call or amortised from a coordinator cache).
+pub fn pcg_with<Op: SpmvOp + ?Sized>(
+    a: &mut Op,
+    m: &mut dyn Preconditioner,
+    b: &[Value],
+    x: &mut [Value],
+    opts: &SolverOptions,
+) -> Result<SolveStats> {
     let n = a.n();
     anyhow::ensure!(b.len() == n && x.len() == n, "dimension mismatch");
-    let d = a.diagonal()?;
-    anyhow::ensure!(
-        d.iter().all(|&v| v != 0.0),
-        "Jacobi preconditioner needs a zero-free diagonal"
-    );
-    let minv: Vec<Value> = d.iter().map(|&v| 1.0 / v).collect();
     let bnorm = norm2(b).max(f64::MIN_POSITIVE);
     let mut spmv_calls = 0usize;
+    let mut precond_calls = 0usize;
+    let setup_seconds = m.setup_seconds();
+    let stats_of = move |iterations, residual: f64, converged, spmv_calls, precond_calls| {
+        SolveStats {
+            iterations,
+            residual,
+            converged,
+            spmv_calls,
+            precond_calls,
+            precond_setup_seconds: setup_seconds,
+        }
+    };
 
     let mut r = vec![0.0; n];
     a.apply(x, &mut r)?;
@@ -31,7 +68,9 @@ pub fn pcg<Op: SpmvOp + ?Sized>(
     for i in 0..n {
         r[i] = b[i] - r[i];
     }
-    let mut z: Vec<Value> = r.iter().zip(&minv).map(|(ri, mi)| ri * mi).collect();
+    let mut z = vec![0.0; n];
+    m.apply(&r, &mut z);
+    precond_calls += 1;
     let mut p = z.clone();
     let mut ap = vec![0.0; n];
     let mut rz = dot(&r, &z);
@@ -39,7 +78,7 @@ pub fn pcg<Op: SpmvOp + ?Sized>(
     for k in 0..opts.max_iters {
         let res = norm2(&r);
         if res / bnorm <= opts.tol {
-            return Ok(SolveStats { iterations: k, residual: res, converged: true, spmv_calls });
+            return Ok(stats_of(k, res, true, spmv_calls, precond_calls));
         }
         a.apply(&p, &mut ap)?;
         spmv_calls += 1;
@@ -48,9 +87,8 @@ pub fn pcg<Op: SpmvOp + ?Sized>(
         let alpha = rz / pap;
         axpy(alpha, &p, x);
         axpy(-alpha, &ap, &mut r);
-        for i in 0..n {
-            z[i] = r[i] * minv[i];
-        }
+        m.apply(&r, &mut z);
+        precond_calls += 1;
         let rz_new = dot(&r, &z);
         let beta = rz_new / rz;
         for i in 0..n {
@@ -59,12 +97,8 @@ pub fn pcg<Op: SpmvOp + ?Sized>(
         rz = rz_new;
     }
     let res = norm2(&r);
-    Ok(SolveStats {
-        iterations: opts.max_iters,
-        residual: res,
-        converged: res / bnorm <= opts.tol,
-        spmv_calls,
-    })
+    let converged = res / bnorm <= opts.tol;
+    Ok(stats_of(opts.max_iters, res, converged, spmv_calls, precond_calls))
 }
 
 #[cfg(test)]
@@ -75,6 +109,7 @@ mod tests {
     use crate::formats::Csr;
     use crate::formats::SparseMatrix as _;
     use crate::matrixgen::make_spd;
+    use crate::precond::Identity;
     use crate::rng::Rng;
 
     #[test]
@@ -84,6 +119,10 @@ mod tests {
         let stats = pcg(&mut a, &b, &mut x, &SolverOptions::default()).unwrap();
         assert!(stats.converged, "residual {}", stats.residual);
         assert_solution(&x, &x_true, 1e-6);
+        // One initial apply plus one per iteration, and the Jacobi setup
+        // cost is surfaced.
+        assert_eq!(stats.precond_calls, stats.iterations + 1);
+        assert!(stats.precond_setup_seconds >= 0.0);
     }
 
     #[test]
@@ -119,6 +158,22 @@ mod tests {
             pre.iterations,
             plain.iterations
         );
+    }
+
+    #[test]
+    fn pcg_with_identity_matches_plain_cg_iterations() {
+        let (mut a, b, x_true) = spd_system(54, 90);
+        let mut a2 = a.clone();
+        let mut x_cg = vec![0.0; 90];
+        let plain = cg(&mut a2, &b, &mut x_cg, &SolverOptions::default()).unwrap();
+        let mut x = vec![0.0; 90];
+        let ident = pcg_with(&mut a, &mut Identity, &b, &mut x, &SolverOptions::default())
+            .unwrap();
+        assert!(ident.converged);
+        assert_solution(&x, &x_true, 1e-6);
+        // Identity preconditioning is CG: same Krylov space, same count.
+        assert_eq!(ident.iterations, plain.iterations);
+        assert_eq!(ident.precond_setup_seconds, 0.0);
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Property tests for the preconditioner subsystem (ISSUE 8):
+//! level-scheduled SpTRSV bitwise identity across thread counts and
+//! matrix suites, exact `split_triangular` recomposition, and the
+//! SymGS-vs-Jacobi PCG iteration-count ordering the HPCG workload
+//! shape depends on.
+
+mod common;
+
+use spmv_at::autotune::adaptive::AdaptiveConfig;
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::matrixgen::{assemble_from_row_lens, make_spd, rowlen, Placement};
+use spmv_at::precond::{
+    sptrsv, Jacobi, LevelSchedule, Preconditioner, SymGs, TrsvPar,
+};
+use spmv_at::rng::Rng;
+use spmv_at::solver::{pcg_with, SolverOptions};
+use spmv_at::spmv::ParPool;
+use spmv_at::Value;
+use std::sync::Arc;
+
+/// The three suites the bitwise sweep runs: banded (regular levels),
+/// uniform random (irregular DAG), and power-law row lengths (wildly
+/// uneven intra-level work — the nnz-balanced partitions' stress case).
+/// `make_spd` guarantees the non-zero diagonal the `(D+L)`/`(D+U)`
+/// solves divide by.
+fn suites() -> Vec<(&'static str, Csr)> {
+    let band = make_spd(&common::band(160, 31));
+    let rand = make_spd(&common::rand_csr(140, 140, 0.06, 32));
+    let power = {
+        let mut rng = Rng::new(33);
+        let lens = rowlen::synthesize(&mut rng, 150, 1800, 20.0, 150);
+        make_spd(&assemble_from_row_lens(&mut rng, 150, &lens, Placement::Uniform))
+    };
+    vec![("band", band), ("random", rand), ("powerlaw", power)]
+}
+
+fn rhs(n: usize) -> Vec<Value> {
+    // Exact binary fractions so bitwise comparisons are meaningful.
+    (0..n).map(|i| 1.0 + ((i * 7) % 13) as f64 * 0.0625).collect()
+}
+
+#[test]
+fn level_scheduled_sptrsv_is_bitwise_identical_across_threads_and_suites() {
+    for (tag, a) in suites() {
+        let n = a.n_rows();
+        let tri = a.split_triangular().unwrap();
+        let d = Some(tri.diag.as_slice());
+        let b = rhs(n);
+
+        let mut want_lo = vec![0.0; n];
+        sptrsv::solve_lower_seq(&tri.lower, d, &b, &mut want_lo);
+        let mut want_up = vec![0.0; n];
+        sptrsv::solve_upper_seq(&tri.upper, d, &b, &mut want_up);
+        // Unit-diagonal views run the same sweep without the divide.
+        let mut want_unit = vec![0.0; n];
+        sptrsv::solve_lower_seq(&tri.lower, None, &b, &mut want_unit);
+
+        for threads in [1usize, 2, 7] {
+            let pool = ParPool::new(threads);
+            let lo = LevelSchedule::build_lower(&tri.lower, threads);
+            let up = LevelSchedule::build_upper(&tri.upper, threads);
+            // The schedule covers every row exactly once.
+            let mut seen = vec![false; n];
+            for &i in lo.rows() {
+                assert!(!seen[i], "{tag}: row {i} scheduled twice");
+                seen[i] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{tag}: row missing from schedule");
+
+            let mut got = vec![0.0; n];
+            sptrsv::solve_lower_levels(&tri.lower, d, &lo, &pool, &b, &mut got);
+            assert_eq!(got, want_lo, "{tag}/{threads}t: forward SpTRSV not bitwise");
+
+            got.fill(0.0);
+            sptrsv::solve_upper_levels(&tri.upper, d, &up, &pool, &b, &mut got);
+            assert_eq!(got, want_up, "{tag}/{threads}t: backward SpTRSV not bitwise");
+
+            got.fill(0.0);
+            sptrsv::solve_lower_levels(&tri.lower, None, &lo, &pool, &b, &mut got);
+            assert_eq!(got, want_unit, "{tag}/{threads}t: unit-diag SpTRSV not bitwise");
+        }
+    }
+}
+
+#[test]
+fn symgs_is_bitwise_identical_across_threads_and_suites() {
+    let cfg = AdaptiveConfig::default();
+    for (tag, a) in suites() {
+        let n = a.n_rows();
+        let b = rhs(n);
+        let mut want = vec![0.0; n];
+        let serial_pool = Arc::new(ParPool::new(1));
+        let mut serial = SymGs::build(&a, serial_pool, TrsvPar::Never, &cfg).unwrap();
+        serial.apply(&b, &mut want);
+        for threads in [1usize, 2, 7] {
+            let pool = Arc::new(ParPool::new(threads));
+            let mut par = SymGs::build(&a, pool, TrsvPar::Always, &cfg).unwrap();
+            let mut got = vec![0.0; n];
+            par.apply(&b, &mut got);
+            assert_eq!(got, want, "{tag}/{threads}t: SymGS not bitwise");
+        }
+    }
+}
+
+#[test]
+fn split_triangular_recomposes_exactly_on_the_suites() {
+    for (tag, a) in suites() {
+        let tri = a.split_triangular().unwrap();
+        assert_eq!(tri.recompose(), a, "{tag}: recomposition not exact");
+        // Strictness: no diagonal entries inside the triangles.
+        for i in 0..a.n_rows() {
+            assert!(tri.lower.row(i).all(|(c, _)| (c as usize) < i), "{tag}");
+            assert!(tri.upper.row(i).all(|(c, _)| (c as usize) > i), "{tag}");
+        }
+    }
+}
+
+#[test]
+fn split_triangular_handles_zero_diagonals_and_empty_rows() {
+    // Row 0: stored zero diagonal. Row 1: entirely empty. Row 2: only
+    // off-diagonal entries (absent diagonal). Row 3: full row.
+    let a = Csr::from_triplets(
+        4,
+        4,
+        &[
+            (0, 0, 0.0),
+            (0, 2, 2.0),
+            (2, 0, 3.0),
+            (2, 3, 4.0),
+            (3, 0, 5.0),
+            (3, 3, 6.0),
+        ],
+    )
+    .unwrap();
+    let tri = a.split_triangular().unwrap();
+    assert_eq!(tri.diag_stored, vec![true, false, false, true]);
+    assert_eq!(tri.diag, vec![0.0, 0.0, 0.0, 6.0]);
+    assert!(!tri.diag_nonzero());
+    let back = tri.recompose();
+    assert_eq!(back, a, "stored-zero diagonal and empty rows must survive");
+    assert_eq!(back.nnz(), a.nnz());
+    // An all-empty square matrix round-trips too.
+    let empty = Csr::from_triplets(6, 6, &[]).unwrap();
+    assert_eq!(empty.split_triangular().unwrap().recompose(), empty);
+}
+
+/// The badly-scaled SPD suite from the solver tests: an SPD base plus a
+/// wildly varying extra diagonal (condition number driven by 10^0..10^6
+/// scale spread).
+fn badly_scaled(seed: u64, n: usize) -> (Csr, Vec<Value>, Vec<Value>) {
+    let mut rng = Rng::new(seed);
+    let base = make_spd(&spmv_at::matrixgen::random_csr(&mut rng, n, n, 0.05));
+    let mut t = base.to_triplets();
+    for i in 0..n {
+        let s = 10f64.powi((i % 4) as i32 * 2);
+        t.push((i, i, s));
+    }
+    let a = Csr::from_triplets(n, n, &t).unwrap();
+    let x_true: Vec<Value> = (0..n).map(|i| ((i + 1) as f64 * 0.07).sin()).collect();
+    let mut b = vec![0.0; n];
+    a.spmv(&x_true, &mut b);
+    (a, b, x_true)
+}
+
+#[test]
+fn symgs_pcg_beats_jacobi_pcg_on_the_badly_scaled_suite() {
+    let opts = SolverOptions { tol: 1e-10, max_iters: 3000 };
+    let cfg = AdaptiveConfig::default();
+    for seed in [52u64, 61, 77] {
+        let (a, b, x_true) = badly_scaled(seed, 150);
+        let n = a.n_rows();
+
+        let mut a_j = a.clone();
+        let mut jac = Jacobi::build(&a_j).unwrap();
+        let mut x_j = vec![0.0; n];
+        let jstats = pcg_with(&mut a_j, &mut jac, &b, &mut x_j, &opts).unwrap();
+        assert!(jstats.converged, "seed {seed}: Jacobi-PCG failed to converge");
+
+        let mut a_s = a.clone();
+        let pool = Arc::new(ParPool::new(2));
+        let mut sym = SymGs::build(&a, pool, TrsvPar::Auto, &cfg).unwrap();
+        let mut x_s = vec![0.0; n];
+        let sstats = pcg_with(&mut a_s, &mut sym, &b, &mut x_s, &opts).unwrap();
+        assert!(sstats.converged, "seed {seed}: SymGS-PCG failed to converge");
+
+        common::assert_close("jacobi-pcg solution", &x_j, &x_true);
+        common::assert_close("symgs-pcg solution", &x_s, &x_true);
+        assert!(
+            sstats.iterations < jstats.iterations,
+            "seed {seed}: SymGS-PCG ({}) must beat Jacobi-PCG ({}) iterations",
+            sstats.iterations,
+            jstats.iterations
+        );
+        // Both counted their preconditioner work.
+        assert_eq!(jstats.precond_calls, jstats.iterations + 1);
+        assert_eq!(sstats.precond_calls, sstats.iterations + 1);
+        assert!(sstats.precond_setup_seconds > 0.0);
+    }
+}
+
+#[test]
+fn level_stats_feed_the_width_threshold_decision() {
+    // The banded suite has wide levels; the width policy must pick
+    // LevelPar on a wide pool and Serial on a 1-thread pool.
+    let a = make_spd(&common::band(400, 41));
+    let tri = a.split_triangular().unwrap();
+    let sched = LevelSchedule::build_lower(&tri.lower, 4);
+    let stats = sched.stats();
+    assert_eq!(stats.rows, 400);
+    assert!(stats.levels >= 1);
+    assert!(stats.avg_width >= 1.0);
+    assert!(stats.max_width >= stats.avg_width as usize);
+    assert!(sched.analysis_seconds() >= 0.0);
+    let wide_decision = TrsvPar::MinWidthPerThread(1.0).choose(stats, 2);
+    let serial_decision = TrsvPar::Auto.choose(stats, 1);
+    assert_eq!(serial_decision, spmv_at::precond::TrsvMode::Serial);
+    // Banded circulant lower triangles level like a short chain of wide
+    // levels, so a tiny width factor on few threads goes parallel.
+    if stats.avg_width >= 2.0 {
+        assert_eq!(wide_decision, spmv_at::precond::TrsvMode::LevelPar);
+    }
+}
