@@ -13,9 +13,10 @@
 mod common;
 
 use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::matrixgen::rowlen::stats_of_row_ptr;
 use spmv_at::matrixgen::{generate, spec_by_name};
 use spmv_at::metrics::{time_median, Json, Table};
-use spmv_at::spmv::partition::split_even;
+use spmv_at::spmv::partition::{split_even, PartitionStrategy};
 use spmv_at::spmv::pool::{configured_threads, ParPool};
 use spmv_at::spmv::{Implementation, SpmvPlan};
 use spmv_at::transform;
@@ -182,6 +183,59 @@ fn bench_flops_per_byte(pool: &Arc<ParPool>, json: &mut Vec<Json>) {
     print!("{}", t.render());
 }
 
+/// Merge-path CRS vs conventional row-parallel CRS on a real pool — the
+/// number the adaptive `CsrRowPar ↔ CsrMergePar` flip arbitrates. Run on
+/// the tail-heavy picks (merge-path's target shape) plus one near-band
+/// contrast case where row-aligned splits are already balanced, with the
+/// row-length skew (max/mean) alongside so the table reads directly
+/// against the planner's 8x pick threshold.
+fn bench_merge_vs_rowpar(json: &mut Vec<Json>) {
+    let r = reps();
+    let threads = configured_threads().clamp(2, 8);
+    let pool = Arc::new(ParPool::new(threads));
+    println!("\nmerge-path vs row-parallel CRS ({threads} threads, ms):");
+    let mut t = Table::new(vec!["matrix", "skew", "CRS-Par", "CRS-Merge", "merge speedup"]);
+    for name in ["chem_master1", "memplus", "sme3Da"] {
+        let spec = spec_by_name(name).unwrap();
+        let a = Arc::new(generate(&spec, common::seed(), scale()));
+        let st = stats_of_row_ptr(&a.row_ptr);
+        let skew = st.max as f64 / st.mean.max(1e-12);
+        let x: Vec<f64> = (0..a.n_cols()).map(|i| 1.0 + (i % 9) as f64 * 0.1).collect();
+        let mut y = vec![0.0; a.n_rows()];
+        let mut secs = [f64::NAN; 2];
+        let cases = [
+            (Implementation::CsrRowPar, Some(PartitionStrategy::ByNnz)),
+            (Implementation::CsrMergePar, None),
+        ];
+        for (k, (imp, strategy)) in cases.into_iter().enumerate() {
+            let mut plan =
+                SpmvPlan::build_with(&a, imp, None, pool.clone(), strategy).unwrap();
+            plan.execute(&x, &mut y).unwrap();
+            secs[k] = time_median(1, r, || {
+                plan.execute(&x, &mut y).unwrap();
+            });
+            std::hint::black_box(&y);
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{skew:.1}x"),
+            format!("{:.3}", secs[0] * 1e3),
+            format!("{:.3}", secs[1] * 1e3),
+            format!("{:.2}x", secs[0] / secs[1].max(1e-12)),
+        ]);
+        json.push(Json::Obj(vec![
+            ("kind".into(), Json::Str("merge_vs_rowpar".into())),
+            ("matrix".into(), Json::Str(name.into())),
+            ("threads".into(), Json::Num(threads as f64)),
+            ("skew".into(), Json::Num(skew)),
+            ("rowpar_seconds".into(), Json::Num(secs[0])),
+            ("merge_seconds".into(), Json::Num(secs[1])),
+            ("speedup".into(), Json::Num(secs[0] / secs[1].max(1e-12))),
+        ]));
+    }
+    print!("{}", t.render());
+}
+
 /// The tentpole's headline number: per-call dispatch cost of the
 /// persistent pool vs. a fresh `std::thread::scope` fork/join, on a
 /// trivially cheap body (sum a range of `x`) so dispatch dominates at
@@ -252,7 +306,7 @@ fn main() {
     let pool1 = Arc::new(ParPool::new(1));
     let mut kt = Table::new(vec![
         "matrix", "CRS", "CRS-Par", "COO-Col", "COO-Row", "ELL-In", "ELL-Out", "BCSR", "JDS",
-        "HYB", "SELL",
+        "HYB", "SELL", "CRS-Merge",
     ]);
     for name in PICKS {
         let spec = spec_by_name(name).unwrap();
@@ -264,6 +318,7 @@ fn main() {
     print!("{}", kt.render());
 
     bench_flops_per_byte(&pool1, &mut json);
+    bench_merge_vs_rowpar(&mut json);
     bench_pool_vs_scoped(&mut json);
     common::write_json("micro_hotpath", Json::Arr(json));
 }

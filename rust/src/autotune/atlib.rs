@@ -29,6 +29,8 @@ pub mod switches {
     pub const CRS: u32 = 11;
     /// Row-parallel CRS.
     pub const CRS_PAR: u32 = 12;
+    /// Merge-path CRS (nonzero-balanced 2-D partition, chunks may cut rows).
+    pub const CRS_MERGE: u32 = 13;
     /// COO-Column outer (Fig. 1).
     pub const COO_COL_OUTER: u32 = 21;
     /// COO-Row outer (Fig. 2).
@@ -54,6 +56,7 @@ pub fn switch_to_impl(switch: u32) -> Result<Option<Implementation>> {
         AUTO => None,
         CRS => Some(Implementation::CsrSeq),
         CRS_PAR => Some(Implementation::CsrRowPar),
+        CRS_MERGE => Some(Implementation::CsrMergePar),
         COO_COL_OUTER => Some(Implementation::CooColOuter),
         COO_ROW_OUTER => Some(Implementation::CooRowOuter),
         ELL_ROW_INNER => Some(Implementation::EllRowInner),
@@ -184,7 +187,7 @@ mod tests {
         let x: Vec<Value> = (0..30).map(|i| (i as f64).sin()).collect();
         let mut want = vec![0.0; 30];
         a.spmv(&x, &mut want);
-        for sw in [11u32, 12, 21, 22, 31, 32, 41, 51, 61, 71, 0] {
+        for sw in [11u32, 12, 13, 21, 22, 31, 32, 41, 51, 61, 71, 0] {
             let mut h = Durmv::new(a.clone(), tuning(Some(3.0)), MemoryPolicy::unlimited(), 2);
             let mut y = vec![0.0; 30];
             h.durmv(sw, &x, &mut y).unwrap();

@@ -196,8 +196,30 @@ impl Coordinator {
         );
         let csr = Arc::new(csr);
         let mut decision = self.decide_for(&csr);
-        // Memory policy veto (the OpenATLib policy hook).
-        let candidate = self.cfg.tuning.imp;
+        let shard = self.planner.shard_of(name);
+        // The baseline CRS kernel follows the partition-strategy pick:
+        // merge-path CRS when the row-length skew (or SPMV_AT_PARTITION)
+        // calls for it, row-parallel CRS otherwise.
+        let base_imp = self.planner.planner(shard).baseline_impl(&csr);
+        // The adaptive rival arm: normally the tuning table's transform
+        // target. When the *skew heuristic* put merge-path CRS in the
+        // baseline slot and the online phase keeps CRS anyway, the
+        // interesting rival is the conventional row partitioning — so
+        // the controller can flip CsrMergePar ↔ CsrRowPar from live
+        // telemetry rather than trusting the heuristic forever. An
+        // SPMV_AT_PARTITION override is the user's explicit pick, not a
+        // heuristic to second-guess: the rival stays the tuning table's.
+        let candidate = if base_imp == Implementation::CsrMergePar
+            && !decision.transform
+            && crate::spmv::partition::configured_partition().is_none()
+        {
+            Implementation::CsrRowPar
+        } else {
+            self.cfg.tuning.imp
+        };
+        // Memory policy veto (the OpenATLib policy hook). Both CRS
+        // partitioning arms are zero-copy views, so only a transform
+        // target can be vetoed here.
         let candidate_admitted = {
             let shape = MatrixShape::of(&csr);
             self.cfg.policy.admits(&shape, candidate.required_format())
@@ -206,8 +228,7 @@ impl Coordinator {
             decision.transform = false;
             decision.chosen = Implementation::CsrSeq;
         }
-        let shard = self.planner.shard_of(name);
-        let baseline = self.planner.planner(shard).plan_for(&csr, Implementation::CsrRowPar)?;
+        let baseline = self.planner.planner(shard).plan_for(&csr, base_imp)?;
         let mut entry =
             MatrixEntry::new(name.to_string(), csr, decision, baseline, candidate, shard);
         if self.cfg.adaptive.enabled {
@@ -352,7 +373,10 @@ impl Coordinator {
         let imp = if entry.decision.transform && entry.decision.chosen.split_stable() {
             entry.decision.chosen
         } else {
-            Implementation::CsrRowPar
+            // Fall back to the entry's baseline CRS kernel (row-parallel
+            // or merge-path, per the register-time partition pick) — both
+            // are split-stable.
+            entry.baseline.implementation()
         };
         match planner.plan_split(&entry.csr, imp, planner.len()) {
             Ok(split) => {
@@ -983,6 +1007,47 @@ mod tests {
         assert_eq!(c.serving_format("band"), Some(FormatKind::Ell));
         assert_eq!(s.replans, 2);
         assert_eq!(c.spmv("band", &x).unwrap(), first);
+    }
+
+    #[test]
+    fn skewed_matrix_serves_merge_baseline_and_flips_to_rowpar() {
+        // The skew pick routes a giant-row matrix to the merge-path CRS
+        // baseline; with the format decision keeping CRS, the adaptive
+        // rival arm is the conventional row partitioning, and injected
+        // telemetry favouring it flips the serving plan — bitwise
+        // invisibly, since both arms match csr_seq exactly.
+        if std::env::var_os("SPMV_AT_PARTITION").is_some() {
+            return; // the pick is forced; the skew heuristic is not in play
+        }
+        let mut t: Vec<(usize, usize, Value)> = (0..100).map(|r| (r, r, 2.0)).collect();
+        for col in 0..100 {
+            t.push((50, col, 1.0 + (col % 7) as Value * 0.0625));
+        }
+        let a = Csr::from_triplets(100, 100, &t).unwrap();
+        let mut cfg = CoordinatorConfig::new(tuning(None)); // keep CRS
+        cfg.threads = 2;
+        cfg.adaptive.enabled = true;
+        cfg.adaptive.epsilon = 0.0;
+        let mut c = Coordinator::new(cfg);
+        c.register("skew", a.clone()).unwrap();
+        let e = &c.entries["skew"];
+        assert_eq!(e.baseline.implementation(), Implementation::CsrMergePar);
+        assert_eq!(e.candidate, Implementation::CsrRowPar);
+        assert_eq!(c.stats()[0].partition, "merge");
+
+        c.inject_sample("skew", Implementation::CsrRowPar, 1e-12, 16).unwrap();
+        let x: Vec<Value> = (0..100).map(|i| 1.0 + (i % 9) as Value * 0.125).collect();
+        let mut want = vec![0.0; 100];
+        a.spmv(&x, &mut want);
+        let ad = crate::autotune::adaptive::AdaptiveConfig::default();
+        for _ in 0..ad.window * ad.flip_windows as u64 {
+            assert_eq!(c.spmv("skew", &x).unwrap(), want, "bitwise across the flip");
+        }
+        let s = &c.stats()[0];
+        assert_eq!(s.replans, 1, "the controller promoted the row-parallel rival");
+        assert_eq!(s.serving, Implementation::CsrRowPar);
+        assert_eq!(c.serving_format("skew"), Some(FormatKind::Csr), "still zero-copy CRS");
+        assert_eq!(c.spmv("skew", &x).unwrap(), want, "bitwise-stable after the flip");
     }
 
     #[test]

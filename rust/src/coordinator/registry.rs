@@ -253,6 +253,10 @@ pub struct EntryStats {
     pub shard: usize,
     /// The implementation currently serving.
     pub serving: Implementation,
+    /// The serving plan's intra-pool partition strategy (`"even"`,
+    /// `"nnz"`, `"merge"`; `"-"` for unpartitioned or split-served
+    /// entries — a cross-shard split partitions per block).
+    pub partition: &'static str,
     /// Total calls.
     pub calls: u64,
     /// Transformed calls.
@@ -323,6 +327,11 @@ impl MatrixEntry {
                 (Some(split), _) => split.implementation(),
                 (None, AtState::Baseline) => Implementation::CsrSeq,
                 (None, AtState::Transformed { plan, .. }) => plan.implementation(),
+            },
+            partition: match (&self.split, &self.state) {
+                (Some(_), _) => "-",
+                (None, AtState::Baseline) => self.baseline.partition_strategy(),
+                (None, AtState::Transformed { plan, .. }) => plan.partition_strategy(),
             },
             calls: self.calls,
             transformed_calls: self.transformed_calls,
@@ -419,6 +428,11 @@ mod tests {
             }
             _ => panic!("baseline must be CRS"),
         }
+        // A partitioned CRS baseline reports its strategy in the stats row.
+        assert!(
+            ["even", "nnz", "merge"].contains(&e.stats().partition),
+            "row-parallel baseline must report a real partition strategy"
+        );
     }
 
     #[test]
@@ -563,6 +577,7 @@ mod tests {
         e.record_call(false, 1e-3);
         let s = e.stats();
         assert_eq!(s.serving, Implementation::CsrSeq);
+        assert_eq!(s.partition, "-", "a sequential baseline plan is unpartitioned");
         assert_eq!(s.calls, 1);
         e.state = ell_plan(4, 1e-3);
         assert_eq!(e.stats().serving, Implementation::EllRowOuter);

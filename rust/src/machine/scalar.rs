@@ -161,6 +161,15 @@ impl CostModel for ScalarMachine {
                 let bytes = nnz * 12.0 + n * 24.0;
                 self.roofline(cycles, bytes, t) + fork
             }
+            Implementation::CsrMergePar => {
+                // Row-parallel CRS work, perfectly nnz-balanced by the
+                // merge split, plus the serial per-chunk carry fixup
+                // (O(t) adds) — negligible next to the fork cost.
+                let cycles = (nnz * (self.p.crs_elem + gp) + n * self.p.row_overhead) / self.par(t)
+                    + 2.0 * t as f64 * self.p.reduce_elem;
+                let bytes = nnz * 12.0 + n * 24.0;
+                self.roofline(cycles, bytes, t) + fork
+            }
             Implementation::EllRowInner => {
                 let cycles = slots * (self.p.ell_elem + gp) / self.par(t);
                 let bytes = slots * 12.0 + n * 16.0;

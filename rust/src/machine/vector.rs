@@ -124,6 +124,11 @@ impl CostModel for VectorMachine {
         let cycles = match imp {
             Implementation::CsrSeq => self.crs_cycles(m, 1),
             Implementation::CsrRowPar => self.crs_cycles(m, t),
+            Implementation::CsrMergePar => {
+                // Same balanced CRS stream, plus the serial carry fixup:
+                // two slots per chunk folded after the parallel sweep.
+                self.crs_cycles(m, t) + 2.0 * t as f64 * self.p.scalar_elem
+            }
             Implementation::EllRowInner => {
                 // Fig. 3: rows split across threads; each band is a
                 // unit-stride gather-FMA sweep of length n/t.

@@ -115,6 +115,26 @@ fn apply_precond_flag(args: &Args, cfg: &mut CoordinatorConfig) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--partition` (overriding `SPMV_AT_PARTITION`): the intra-pool
+/// work-partition strategy CRS plans split their rows (or, for
+/// merge-path, their row+nnz merge list) with — `even`, `nnz`, `merge`,
+/// or `auto` (the row-length-skew pick). Routed through the environment
+/// variable that plan assembly reads, so every serving shape — Durmv
+/// handles, coordinators, shard planners — honours it.
+fn apply_partition_flag(args: &Args) -> Result<()> {
+    if let Some(v) = args.get("partition") {
+        let canon = match v.to_ascii_lowercase().as_str() {
+            "auto" => "auto",
+            other => spmv_at::spmv::partition::PartitionStrategy::parse(other)
+                .ok_or_else(|| anyhow!("--partition: expected even, nnz, merge, or auto"))?
+                .name(),
+        };
+        // Single-threaded at flag-parse time, so setenv cannot race a getenv.
+        std::env::set_var("SPMV_AT_PARTITION", canon);
+    }
+    Ok(())
+}
+
 fn make_backend(name: &str) -> Result<Box<dyn Backend>> {
     Ok(match name {
         "es2" => Box::new(SimulatedBackend::new(VectorMachine::default())),
@@ -236,6 +256,8 @@ fn cmd_spmv(args: &Args) -> Result<()> {
     let scale = args.parse_f64("scale", 0.05)?;
     let (name, a) = load_matrix(args, args.parse_usize("seed", 42)? as u64, scale)?;
     let switch: u32 = args.get_or("switch", "0").parse()?;
+    // SPMV_AT_PARTITION (default: skew pick) unless --partition overrides.
+    apply_partition_flag(args)?;
     let iters = args.parse_usize("iters", 10)?;
     // Batch width: >1 serves each iteration as one tiled SpMM.
     let batch = args.parse_usize("batch", 1)?.max(1);
@@ -302,6 +324,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
     apply_split_flag(args, &mut cfg)?;
     // SPMV_AT_PRECOND (default jacobi) unless --precond overrides.
     apply_precond_flag(args, &mut cfg)?;
+    // SPMV_AT_PARTITION (default: skew pick) unless --partition overrides.
+    apply_partition_flag(args)?;
     let (_srv, client) = Server::spawn_sharded(cfg, 32);
     client.register(&name, a)?;
     let b = vec![1.0; n];
@@ -339,9 +363,10 @@ fn cmd_solve(args: &Args) -> Result<()> {
             None => String::new(),
         };
         println!(
-            "  serving={} calls={} transformed_calls={} t_trans={:.6}s amortized={} \
-             explored={} replans={}{precond}{split}",
+            "  serving={} partition={} calls={} transformed_calls={} t_trans={:.6}s \
+             amortized={} explored={} replans={}{precond}{split}",
             row.serving,
+            row.partition,
             row.calls,
             row.transformed_calls,
             row.t_trans,
@@ -388,6 +413,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     apply_split_flag(args, &mut cfg)?;
     // SPMV_AT_PRECOND (default jacobi) unless --precond overrides.
     apply_precond_flag(args, &mut cfg)?;
+    // SPMV_AT_PARTITION (default: skew pick) unless --partition overrides.
+    apply_partition_flag(args)?;
     // Attach XLA runtime if artifacts exist (XLA serving is single-loop:
     // the artifact handle is not shared across shard coordinators).
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -529,14 +556,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     // Every loop sees all the shards, so the entry's own
                     // shard field is the serving route in every shape.
                     println!(
-                        "{}: n={} nnz={} D={:.3} shard={} serving={} calls={} passes={} \
-                         amortized={} samples=crs:{}/imp:{} explored={} replans={}{precond}{split}",
+                        "{}: n={} nnz={} D={:.3} shard={} serving={} partition={} calls={} \
+                         passes={} amortized={} samples=crs:{}/imp:{} explored={} \
+                         replans={}{precond}{split}",
                         s.name,
                         s.n,
                         s.nnz,
                         s.d_mat,
                         s.shard,
                         s.serving,
+                        s.partition,
                         s.calls,
                         s.matrix_passes,
                         s.amortized,
@@ -671,12 +700,16 @@ fn usage() -> ! {
          \x20 --precond <kind> preconditioner for pcg solves: none, jacobi, or symgs\n\
          \x20                  (level-scheduled symmetric Gauss-Seidel); built once\n\
          \x20                  and cached per served entry (overrides SPMV_AT_PRECOND)\n\
+         \x20 --partition <s>  intra-pool CRS work partition: even, nnz, merge, or\n\
+         \x20                  auto (pick merge-path on row-length skew); also applies\n\
+         \x20                  to spmv (overrides SPMV_AT_PARTITION)\n\
          \x20 --listen <spec>  (serve) also serve the framed binary protocol over\n\
          \x20                  unix:<path>, tcp:<host>:<port>, or <host>:<port>,\n\
          \x20                  coalescing concurrent single-vector requests into\n\
          \x20                  batches (overrides SPMV_AT_LISTEN; docs/PROTOCOL.md)\n\
          environment: SPMV_AT_THREADS, SPMV_AT_SHARDS, SPMV_AT_BATCH_TILE,\n\
          \x20 SPMV_AT_ADAPTIVE, SPMV_AT_SPLIT_ROWS, SPMV_AT_LISTEN,\n\
+         \x20 SPMV_AT_PARTITION=even|nnz|merge|auto,\n\
          \x20 SPMV_AT_NET_QUEUE, SPMV_AT_COALESCE_WAIT_US,\n\
          \x20 SPMV_AT_PRECOND=none|jacobi|symgs, SPMV_AT_TRSV_PAR=auto|never|always|<width>,\n\
          \x20 SPMV_AT_TOPOLOGY=<sockets>:<cores> (see docs/TUNING.md)\n\

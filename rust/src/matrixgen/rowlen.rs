@@ -37,6 +37,24 @@ pub fn stats(lens: &[usize]) -> LenStats {
     LenStats { mean, std: var.sqrt(), max: lens.iter().copied().max().unwrap_or(0), sum }
 }
 
+/// [`LenStats`] straight from a CSR row-pointer array, without
+/// materialising the length vector — the planner's partition-strategy
+/// pick reads the `max`/`mean` skew from here on every plan build.
+pub fn stats_of_row_ptr(row_ptr: &[usize]) -> LenStats {
+    let n = row_ptr.len().saturating_sub(1);
+    let nf = n.max(1) as f64;
+    let sum = if n == 0 { 0 } else { row_ptr[n] };
+    let mean = sum as f64 / nf;
+    let mut var = 0.0;
+    let mut max = 0usize;
+    for i in 0..n {
+        let l = row_ptr[i + 1] - row_ptr[i];
+        var += (l as f64 - mean).powi(2);
+        max = max.max(l);
+    }
+    LenStats { mean, std: (var / nf).sqrt(), max, sum }
+}
+
 /// Synthesize `n` row lengths with total exactly `nnz` and standard
 /// deviation approximately `sigma`. `max_cols` caps individual lengths.
 pub fn synthesize(rng: &mut Rng, n: usize, nnz: usize, sigma: f64, max_cols: usize) -> Vec<usize> {
@@ -244,5 +262,19 @@ mod tests {
         assert_eq!(s.std, 0.0);
         assert_eq!(s.max, 4);
         assert_eq!(s.sum, 16);
+    }
+
+    #[test]
+    fn stats_of_row_ptr_matches_stats_of_lens() {
+        let lens = [3usize, 0, 7, 1, 0, 12];
+        let mut row_ptr = vec![0usize];
+        for &l in &lens {
+            row_ptr.push(row_ptr.last().unwrap() + l);
+        }
+        assert_eq!(stats_of_row_ptr(&row_ptr), stats(&lens));
+        // Degenerate row_ptr shapes.
+        assert_eq!(stats_of_row_ptr(&[0]).sum, 0);
+        assert_eq!(stats_of_row_ptr(&[0]).max, 0);
+        assert_eq!(stats_of_row_ptr(&[0, 0, 0]), stats(&[0, 0]));
     }
 }

@@ -15,10 +15,11 @@ use super::Workspace;
 use crate::formats::{
     Bcsr, Coo, CooOrder, Csc, Csr, Ell, FormatKind, Hyb, Jds, SellCSigma, SparseMatrix,
 };
-use crate::spmv::partition::{split_by_nnz, split_even};
+use crate::spmv::partition::{
+    merge_path_split, merge_row_aligned, split_by_nnz, split_even, Partition, PartitionStrategy,
+};
 use crate::transform;
 use crate::{Index, Result, Value};
-use std::ops::Range;
 use std::sync::Arc;
 
 /// A named SpMV implementation (paper §3 + baseline + extension).
@@ -45,11 +46,16 @@ pub enum Implementation {
     /// SELL-C-σ chunk-parallel kernel (extension): lane-width-C chunks,
     /// σ-window sorted rows, output merged through the row permutation.
     SellRowInner,
+    /// Merge-path parallel CRS (extension): 2-D merge chunks that may cut
+    /// rows, carry slots + deterministic serial fixup. Runs on CRS data
+    /// directly (no transform), so it is a zero-setup-cost rival to
+    /// [`Implementation::CsrRowPar`] on skewed row-length distributions.
+    CsrMergePar,
 }
 
 impl Implementation {
     /// Every implementation, in the order the paper's figures report them.
-    pub const ALL: [Implementation; 10] = [
+    pub const ALL: [Implementation; 11] = [
         Implementation::CsrSeq,
         Implementation::CsrRowPar,
         Implementation::CooColOuter,
@@ -60,6 +66,7 @@ impl Implementation {
         Implementation::JdsSeq,
         Implementation::HybSeq,
         Implementation::SellRowInner,
+        Implementation::CsrMergePar,
     ];
 
     /// The candidates the paper's AT method chooses between at run time
@@ -84,6 +91,7 @@ impl Implementation {
             Implementation::JdsSeq => "JDS",
             Implementation::HybSeq => "HYB",
             Implementation::SellRowInner => "SELL-Row Inner",
+            Implementation::CsrMergePar => "CRS-Merge",
         }
     }
 
@@ -107,6 +115,9 @@ impl Implementation {
             "jds" | "jdsseq" => Implementation::JdsSeq,
             "hyb" | "hybseq" => Implementation::HybSeq,
             "sellrowinner" | "sellinner" | "sellcsigma" | "sell" => Implementation::SellRowInner,
+            "crsmerge" | "csrmerge" | "merge" | "crsmergepar" | "csrmergepar" => {
+                Implementation::CsrMergePar
+            }
             _ => return None,
         })
     }
@@ -114,7 +125,9 @@ impl Implementation {
     /// The storage format this implementation runs on.
     pub fn required_format(self) -> FormatKind {
         match self {
-            Implementation::CsrSeq | Implementation::CsrRowPar => FormatKind::Csr,
+            Implementation::CsrSeq | Implementation::CsrRowPar | Implementation::CsrMergePar => {
+                FormatKind::Csr
+            }
             Implementation::CooColOuter => FormatKind::CooCol,
             Implementation::CooRowOuter => FormatKind::CooRow,
             Implementation::EllRowInner | Implementation::EllRowOuter => FormatKind::Ell,
@@ -140,12 +153,18 @@ impl Implementation {
     /// sequential extension formats (BCSR/JDS/HYB) resequence rows or
     /// entries globally too. SELL-C-σ *permutes* rows but accumulates
     /// each one in unchanged CSR entry order and scatters it back through
-    /// the permutation, so a row split stays bitwise-identical.
+    /// the permutation, so a row split stays bitwise-identical. CRS-Merge
+    /// cuts rows into chunk segments, but every row is still finalised by
+    /// exactly one deterministic serial fixup that folds its segments in
+    /// CSR element order, and each row block carries its own precomputed
+    /// merge coordinates — re-running a split plan is reproducible and
+    /// row-owned, which is what the coordinator's split machinery needs.
     pub fn split_stable(self) -> bool {
         matches!(
             self,
             Implementation::CsrSeq
                 | Implementation::CsrRowPar
+                | Implementation::CsrMergePar
                 | Implementation::EllRowInner
                 | Implementation::EllRowOuter
                 | Implementation::SellRowInner
@@ -320,30 +339,57 @@ impl AnyMatrix {
     }
 }
 
-/// Compute the work partition `imp` wants over `m` at `n_chunks`-way
-/// parallelism: nnz-balanced row ranges for row-parallel CRS, even entry
-/// ranges for the COO outer kernels, even row ranges for ELL-inner, band
-/// ranges (capped at the bandwidth) for ELL-outer and even **chunk**
-/// ranges for SELL (a chunk owns a contiguous storage span and C output
-/// rows, so chunk granularity is both false-sharing-free and
-/// load-balanced after the σ sort). Sequential implementations get an
-/// empty partition. A [`super::plan::SpmvPlan`]
-/// computes this once and replays it every call.
-pub fn partition_for(imp: Implementation, m: &AnyMatrix, n_chunks: usize) -> Vec<Range<usize>> {
+/// Compute the work [`Partition`] `imp` wants over `m` at `n_chunks`-way
+/// parallelism. Row-parallel CRS honours the picked [`PartitionStrategy`]
+/// (nnz-balanced rows by default, even rows, or the row-aligned
+/// projection of the merge boundaries); `CRS-Merge` always computes full
+/// 2-D merge coordinates. The remaining kernels keep their natural unit
+/// split regardless of strategy — even entry ranges for the COO outer
+/// kernels, even row ranges for ELL-inner, band ranges (capped at the
+/// bandwidth) for ELL-outer and even **chunk** ranges for SELL (a chunk
+/// owns a contiguous storage span and C output rows, so chunk granularity
+/// is both false-sharing-free and load-balanced after the σ sort).
+/// Sequential implementations get an empty partition. A
+/// [`super::plan::SpmvPlan`] computes this once and replays it every
+/// call; `strategy = None` means "kernel default" (`ByNnz` for
+/// row-parallel CRS).
+pub fn partition_for(
+    imp: Implementation,
+    m: &AnyMatrix,
+    n_chunks: usize,
+    strategy: Option<PartitionStrategy>,
+) -> Partition {
     match (imp, m) {
-        (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => split_by_nnz(&a.row_ptr, n_chunks),
-        (Implementation::CooColOuter | Implementation::CooRowOuter, AnyMatrix::Coo(c)) => {
-            split_even(c.nnz(), n_chunks)
+        (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => {
+            let s = strategy.unwrap_or(PartitionStrategy::ByNnz);
+            let ranges = match s {
+                PartitionStrategy::Even => split_even(a.n_rows(), n_chunks),
+                PartitionStrategy::ByNnz => split_by_nnz(&a.row_ptr, n_chunks),
+                PartitionStrategy::MergePath => merge_row_aligned(&a.row_ptr, n_chunks),
+            };
+            Partition::aligned(s, ranges)
         }
-        (Implementation::EllRowInner, AnyMatrix::Ell(e)) => split_even(e.n_rows(), n_chunks),
-        (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => split_even(e.bandwidth, n_chunks),
-        (Implementation::SellRowInner, AnyMatrix::Sell(s)) => split_even(s.n_chunks(), n_chunks),
-        _ => Vec::new(),
+        (Implementation::CsrMergePar, AnyMatrix::Csr(a)) => {
+            Partition::merged(merge_path_split(&a.row_ptr, n_chunks))
+        }
+        (Implementation::CooColOuter | Implementation::CooRowOuter, AnyMatrix::Coo(c)) => {
+            Partition::aligned(PartitionStrategy::Even, split_even(c.nnz(), n_chunks))
+        }
+        (Implementation::EllRowInner, AnyMatrix::Ell(e)) => {
+            Partition::aligned(PartitionStrategy::Even, split_even(e.n_rows(), n_chunks))
+        }
+        (Implementation::EllRowOuter, AnyMatrix::Ell(e)) => {
+            Partition::aligned(PartitionStrategy::Even, split_even(e.bandwidth, n_chunks))
+        }
+        (Implementation::SellRowInner, AnyMatrix::Sell(s)) => {
+            Partition::aligned(PartitionStrategy::Even, split_even(s.n_chunks(), n_chunks))
+        }
+        _ => Partition::none(),
     }
 }
 
 /// Execute implementation `imp` on `m` over `pool` with the precomputed
-/// partition `ranges` (see [`partition_for`]).
+/// partition `part` (see [`partition_for`]).
 ///
 /// # Errors
 /// Returns an error if `m`'s format does not match `imp`'s requirement.
@@ -353,14 +399,20 @@ pub fn run_on(
     x: &[Value],
     y: &mut [Value],
     pool: &ParPool,
-    ranges: &[Range<usize>],
+    part: &Partition,
     ws: &mut Workspace,
 ) -> Result<()> {
+    let ranges = part.ranges.as_slice();
     match (imp, m) {
         (Implementation::CsrSeq, AnyMatrix::Csr(a)) => super::csr_seq(a, x, y),
         (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => {
             super::csr_row_par_on(a, x, y, pool, ranges)
         }
+        (Implementation::CsrMergePar, AnyMatrix::Csr(a)) => match &part.merge {
+            Some(mp) => super::csr_merge_par_on(a, x, y, pool, mp, ranges, ws),
+            // No merge coordinates (degenerate partition): serial path.
+            None => super::csr_seq(a, x, y),
+        },
         (Implementation::CooColOuter, AnyMatrix::Coo(c)) if c.order() == CooOrder::ColMajor => {
             super::coo_col_outer_on(c, x, y, pool, ranges, ws)
         }
@@ -413,7 +465,7 @@ pub fn run_many_on(
     xs: &[&[Value]],
     ys: &mut [&mut [Value]],
     pool: &ParPool,
-    ranges: &[Range<usize>],
+    part: &Partition,
     ws: &mut Workspace,
 ) -> Result<()> {
     anyhow::ensure!(
@@ -425,11 +477,20 @@ pub fn run_many_on(
     if xs.is_empty() {
         return Ok(());
     }
+    let ranges = part.ranges.as_slice();
     match (imp, m) {
         (Implementation::CsrSeq, AnyMatrix::Csr(a)) => super::csr_seq_many(a, xs, ys),
         (Implementation::CsrRowPar, AnyMatrix::Csr(a)) => {
             super::csr_row_par_many_on(a, xs, ys, pool, ranges)
         }
+        (Implementation::CsrMergePar, AnyMatrix::Csr(a)) => match &part.merge {
+            Some(mp) => super::csr_merge_par_many_on(a, xs, ys, pool, mp, ranges, ws),
+            None => {
+                for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                    super::csr_seq(a, x, y);
+                }
+            }
+        },
         (Implementation::CooColOuter, AnyMatrix::Coo(c)) if c.order() == CooOrder::ColMajor => {
             super::coo_col_outer_many_on(c, xs, ys, pool, ranges, ws)
         }
@@ -448,7 +509,7 @@ pub fn run_many_on(
         // No blocked kernel: stream the matrix once per right-hand side.
         _ => {
             for (x, y) in xs.iter().zip(ys.iter_mut()) {
-                run_on(imp, m, x, y, pool, ranges, ws)?;
+                run_on(imp, m, x, y, pool, part, ws)?;
             }
         }
     }
@@ -469,8 +530,8 @@ pub fn run(
     n_threads: usize,
     ws: &mut Workspace,
 ) -> Result<()> {
-    let ranges = partition_for(imp, m, n_threads);
-    run_on(imp, m, x, y, &pool::global(), &ranges, ws)
+    let part = partition_for(imp, m, n_threads, None);
+    run_on(imp, m, x, y, &pool::global(), &part, ws)
 }
 
 #[cfg(test)]
@@ -529,9 +590,9 @@ mod tests {
         for imp in Implementation::ALL {
             let m = AnyMatrix::prepare_on(&a, imp, None, &pool).unwrap();
             assert_eq!(m.kind(), imp.required_format(), "{imp}");
-            let ranges = partition_for(imp, &m, pool.size());
+            let part = partition_for(imp, &m, pool.size(), None);
             let mut y = vec![0.0; 50];
-            run_on(imp, &m, &x, &mut y, &pool, &ranges, &mut ws).unwrap();
+            run_on(imp, &m, &x, &mut y, &pool, &part, &mut ws).unwrap();
             for (g, w) in y.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-9, "{imp}: {g} vs {w}");
             }
@@ -551,8 +612,44 @@ mod tests {
         let mut ys = [y2.as_mut_slice()];
         let pool = ParPool::new(1);
         let imp = Implementation::EllRowInner;
-        let r = run_many_on(imp, &m, &xs, &mut ys, &pool, &[], &mut ws);
+        let r = run_many_on(imp, &m, &xs, &mut ys, &pool, &Partition::none(), &mut ws);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn partition_for_honours_the_strategy() {
+        let mut rng = Rng::new(7);
+        let a = random_csr(&mut rng, 60, 60, 0.08);
+        let m = AnyMatrix::Csr(Arc::new(a.clone()));
+        for s in PartitionStrategy::ALL {
+            let part = partition_for(Implementation::CsrRowPar, &m, 4, Some(s));
+            assert_eq!(part.strategy, Some(s));
+            assert!(part.merge.is_none(), "row-par stays row-aligned under {s}");
+            let rows: usize = part.ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(rows, 60, "strategy {s} must cover all rows");
+        }
+        // CRS-Merge always carries full merge coordinates.
+        let part = partition_for(Implementation::CsrMergePar, &m, 4, None);
+        assert_eq!(part.strategy, Some(PartitionStrategy::MergePath));
+        let mp = part.merge.as_ref().expect("merge coordinates");
+        assert_eq!(part.ranges.len(), mp.n_chunks());
+        // Non-CRS kernels ignore the strategy (natural unit split).
+        let e = AnyMatrix::prepare(&a, Implementation::EllRowInner, None).unwrap();
+        let part = partition_for(
+            Implementation::EllRowInner,
+            &e,
+            4,
+            Some(PartitionStrategy::MergePath),
+        );
+        assert_eq!(part.strategy, Some(PartitionStrategy::Even));
+    }
+
+    #[test]
+    fn merge_arm_needs_no_transform_and_is_split_stable() {
+        assert!(!Implementation::CsrMergePar.needs_transform());
+        assert!(Implementation::CsrMergePar.split_stable());
+        assert_eq!(Implementation::parse("merge"), Some(Implementation::CsrMergePar));
+        assert_eq!(Implementation::parse("CRS-Merge"), Some(Implementation::CsrMergePar));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! | Fig. 4 | [`ell_row_outer`] | band range split per chunk, private `YY`, tree reduction |
 //! | switch 11 | [`csr_seq`] / [`csr_row_par`] | OpenATLib CRS baseline (+ row-parallel variant) |
 //! | extension | [`sell_row_inner`] | SELL-C-σ chunk ranges, lane-width-C bands, no reduction |
+//! | extension | [`csr_merge_par`] | merge-path 2-D chunks (may cut rows), carry slots + serial row-order fixup |
 //!
 //! Two layers sit underneath and above these kernels:
 //!
@@ -55,7 +56,7 @@ pub use pool::ParPool;
 
 use crate::formats::{Coo, CooOrder, Csr, Ell, SellCSigma, SparseMatrix, MAX_C};
 use crate::{Index, Value};
-use partition::{split_by_nnz, split_even};
+use partition::{merge_path_split, split_by_nnz, split_even, MergePartition};
 use pool::SendPtr;
 use std::ops::Range;
 
@@ -128,6 +129,136 @@ pub fn csr_row_par_on(
 pub fn csr_row_par(a: &Csr, x: &[Value], y: &mut [Value], n_threads: usize) {
     let ranges = split_by_nnz(&a.row_ptr, n_threads);
     csr_row_par_on(a, x, y, &pool::global(), &ranges);
+}
+
+/// Merge-path parallel CRS SpMV over a precomputed [`MergePartition`]:
+/// every chunk owns ⌈(n+nnz)/k⌉ merge items — row boundaries *plus*
+/// non-zeros — so a single giant row is cut across workers instead of
+/// serialising one of them.
+///
+/// Rows a chunk both starts and finishes are written to `y` directly
+/// (each such row has exactly one writer). The partial segments at a
+/// chunk's edges — a leading segment that *completes* a row an earlier
+/// chunk began, and a trailing segment that *starts* the next row — go
+/// into two per-chunk carry slots in the workspace; [`merge_fixup`] then
+/// sums them serially in ascending chunk order, which **is** row order
+/// and stored-element order. Each row's result is therefore the sum of
+/// its left-associated segment sums combined left-to-right: the same
+/// global element order as [`csr_seq`], re-associated only at the
+/// ≤ k−1 chunk boundaries that actually cut a row. On inputs whose
+/// partial products and sums are exactly representable (the oracle
+/// harness's binary-fraction fixtures) the result is bit-for-bit equal
+/// to `csr_seq`; re-running a plan always reproduces the identical
+/// result (fixed coordinates, fixed fixup order).
+///
+/// `ranges` are the unit chunk-id ranges of
+/// [`partition::Partition::merged`] — the pool claims chunk indices, not
+/// rows.
+pub fn csr_merge_par_on(
+    a: &Csr,
+    x: &[Value],
+    y: &mut [Value],
+    pool: &ParPool,
+    mp: &MergePartition,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
+    assert_eq!(x.len(), a.n_cols(), "x length");
+    assert_eq!(y.len(), a.n_rows(), "y length");
+    let kc = mp.n_chunks();
+    if kc <= 1 || ranges.len() <= 1 {
+        return csr_seq(a, x, y);
+    }
+    debug_assert_eq!(ranges.len(), kc, "one unit range per merge chunk");
+    // Two carry slots per chunk (head, tail), zeroed by the workspace.
+    let carry = ws.yy(2 * kc, 1);
+    let yp = SendPtr(y.as_mut_ptr());
+    let cp = SendPtr(carry.as_mut_ptr());
+    pool.run_chunks(ranges, |_tid, ts| {
+        for t in ts {
+            let (r0, v0) = mp.bounds[t];
+            let (r1, v1) = mp.bounds[t + 1];
+            let mut v = v0;
+            for r in r0..r1 {
+                let end = a.row_ptr[r + 1];
+                let mut acc = 0.0;
+                for e in v..end {
+                    acc += a.values[e] * x[a.col_idx[e] as usize];
+                }
+                if r == r0 && v0 > a.row_ptr[r0] {
+                    // Head segment: completes a row an earlier chunk began.
+                    unsafe { *cp.get().add(2 * t) = acc };
+                } else {
+                    // Fully-owned row (empty rows write 0); one writer.
+                    unsafe { *yp.get().add(r) = acc };
+                }
+                v = end;
+            }
+            if v1 > v {
+                // Trailing partial segment of row r1 (the whole chunk,
+                // when r0 == r1 and the chunk sits inside one row).
+                let mut acc = 0.0;
+                for e in v..v1 {
+                    acc += a.values[e] * x[a.col_idx[e] as usize];
+                }
+                unsafe { *cp.get().add(2 * t + 1) = acc };
+            }
+        }
+    });
+    merge_fixup(&a.row_ptr, mp, carry, 1, 0, y);
+}
+
+/// Merge-path compatibility wrapper (global pool, on-the-fly partition).
+pub fn csr_merge_par(a: &Csr, x: &[Value], y: &mut [Value], n_threads: usize, ws: &mut Workspace) {
+    let mp = merge_path_split(&a.row_ptr, n_threads);
+    let ranges: Vec<Range<usize>> = (0..mp.n_chunks()).map(|t| t..t + 1).collect();
+    csr_merge_par_on(a, x, y, &pool::global(), &mp, &ranges, ws);
+}
+
+/// The deterministic caller-side fixup of the merge-path kernels: walk
+/// the chunks in ascending order (= row order = element order) and fold
+/// each chunk's carried partial segments into `y`. A chunk's **head**
+/// slot finalises the row left open by the previous chunks; its **tail**
+/// slot opens (or extends, for chunks entirely inside one row) the
+/// partial sum of its last row. Serial and identical on every run.
+///
+/// `b`/`j` address the carry layout of the multi-RHS kernel
+/// (slot `2·(t·b + j)` + head/tail offset); the single-RHS kernel passes
+/// `b = 1, j = 0`.
+fn merge_fixup(
+    row_ptr: &[usize],
+    mp: &MergePartition,
+    carry: &[Value],
+    b: usize,
+    j: usize,
+    y: &mut [Value],
+) {
+    let mut open: Option<(usize, Value)> = None;
+    for t in 0..mp.n_chunks() {
+        let (r0, v0) = mp.bounds[t];
+        let (r1, v1) = mp.bounds[t + 1];
+        if r0 < r1 && v0 > row_ptr[r0] {
+            // Head: the last segment of row r0 — close it out.
+            let s = carry[2 * (t * b + j)];
+            y[r0] = match open.take() {
+                Some((or, os)) if or == r0 => os + s,
+                _ => s,
+            };
+        }
+        let tail_from = if r1 > r0 { row_ptr[r1] } else { v0 };
+        if v1 > tail_from {
+            // Tail: a partial segment of row r1 stays open for later
+            // chunks (middle chunks of a very long row extend it here).
+            let s = carry[2 * (t * b + j) + 1];
+            open = Some(match open.take() {
+                Some((or, os)) if or == r1 => (r1, os + s),
+                _ => (r1, s),
+            });
+        }
+    }
+    if let Some((or, os)) = open {
+        y[or] = os;
+    }
 }
 
 /// Shared body of Figs. 1 and 2 over precomputed entry-stream ranges:
@@ -500,6 +631,84 @@ pub fn csr_row_par_many_on(
     });
 }
 
+/// Merge-path parallel CRS SpMM over a precomputed [`MergePartition`]:
+/// one pass over each chunk's merge span serves the whole tile, fanning
+/// every stored element out to all right-hand sides (the multi-RHS form
+/// of [`csr_merge_par_on`]). Carry slots widen to `2·k·tile` — head and
+/// tail per (chunk, RHS) — and the serial [`merge_fixup`] runs once per
+/// right-hand side, so each output's accumulation order matches the
+/// single-RHS kernel bitwise.
+pub fn csr_merge_par_many_on(
+    a: &Csr,
+    xs: &[&[Value]],
+    ys: &mut [&mut [Value]],
+    pool: &ParPool,
+    mp: &MergePartition,
+    ranges: &[Range<usize>],
+    ws: &mut Workspace,
+) {
+    assert_tile(xs, ys, a.n_cols(), a.n_rows());
+    let kc = mp.n_chunks();
+    if kc <= 1 || ranges.len() <= 1 {
+        // Same serial path as the single-RHS kernel, per right-hand side.
+        for (y, x) in ys.iter_mut().zip(xs) {
+            csr_seq(a, x, y);
+        }
+        return;
+    }
+    let b = xs.len();
+    if b == 0 {
+        return;
+    }
+    debug_assert_eq!(ranges.len(), kc, "one unit range per merge chunk");
+    let carry = ws.yy(2 * kc * b, 1);
+    let yps: Vec<SendPtr<Value>> = ys.iter_mut().map(|y| SendPtr(y.as_mut_ptr())).collect();
+    let cp = SendPtr(carry.as_mut_ptr());
+    pool.run_chunks(ranges, |_tid, ts| {
+        for t in ts {
+            let (r0, v0) = mp.bounds[t];
+            let (r1, v1) = mp.bounds[t + 1];
+            let mut v = v0;
+            for r in r0..r1 {
+                let end = a.row_ptr[r + 1];
+                if r == r0 && v0 > a.row_ptr[r0] {
+                    // Head segments accumulate into the pre-zeroed
+                    // carry slots 2·(t·b + j); one writer each.
+                    for e in v..end {
+                        let val = a.values[e];
+                        let c = a.col_idx[e] as usize;
+                        for (j, x) in xs.iter().enumerate() {
+                            unsafe { *cp.get().add(2 * (t * b + j)) += val * x[c] };
+                        }
+                    }
+                } else {
+                    for yp in &yps {
+                        unsafe { *yp.get().add(r) = 0.0 };
+                    }
+                    for e in v..end {
+                        let val = a.values[e];
+                        let c = a.col_idx[e] as usize;
+                        for (yp, x) in yps.iter().zip(xs) {
+                            unsafe { *yp.get().add(r) += val * x[c] };
+                        }
+                    }
+                }
+                v = end;
+            }
+            for e in v..v1 {
+                let val = a.values[e];
+                let c = a.col_idx[e] as usize;
+                for (j, x) in xs.iter().enumerate() {
+                    unsafe { *cp.get().add(2 * (t * b + j) + 1) += val * x[c] };
+                }
+            }
+        }
+    });
+    for (j, y) in ys.iter_mut().enumerate() {
+        merge_fixup(&a.row_ptr, mp, carry, b, j, y);
+    }
+}
+
 /// Shared multi-RHS body of Figs. 1 and 2: each chunk streams its entry
 /// range once, accumulating into a private `n × tile` block of `YY`, then
 /// the pairwise tree reduction runs per right-hand side.
@@ -776,6 +985,8 @@ mod tests {
                 let mut y = vec![0.0; a.n_rows()];
                 csr_row_par(&a, &x, &mut y, t);
                 assert_close(&y, &want);
+                csr_merge_par(&a, &x, &mut y, t, &mut ws);
+                assert_close(&y, &want);
                 coo_col_outer(&coo_c, &x, &mut y, t, &mut ws);
                 assert_close(&y, &want);
                 coo_row_outer(&coo_r, &x, &mut y, t, &mut ws);
@@ -808,6 +1019,11 @@ mod tests {
 
         let mut y = vec![0.0; a.n_rows()];
         csr_row_par_on(&a, &x, &mut y, &pool, &split_by_nnz(&a.row_ptr, 5));
+        assert_close(&y, &want);
+
+        let mp = merge_path_split(&a.row_ptr, 5);
+        let unit: Vec<Range<usize>> = (0..mp.n_chunks()).map(|t| t..t + 1).collect();
+        csr_merge_par_on(&a, &x, &mut y, &pool, &mp, &unit, &mut ws);
         assert_close(&y, &want);
 
         let ell = crs_to_ell(&a).unwrap();
@@ -917,6 +1133,19 @@ mod tests {
                 "csr_row_par_many_on"
             );
 
+            let mp = merge_path_split(&a.row_ptr, 3);
+            let r_merge: Vec<Range<usize>> = (0..mp.n_chunks()).map(|t| t..t + 1).collect();
+            let got = run_many(&mut |xs, ys| {
+                csr_merge_par_many_on(&a, xs, ys, &pool, &mp, &r_merge, &mut ws)
+            });
+            assert_eq!(
+                got,
+                run_single(&mut |x, y| csr_merge_par_on(
+                    &a, x, y, &pool, &mp, &r_merge, &mut ws
+                )),
+                "csr_merge_par_many_on"
+            );
+
             let r_ell_in = split_even(ell.n_rows(), 3);
             let got =
                 run_many(&mut |xs, ys| ell_row_inner_many_on(&ell, xs, ys, &pool, &r_ell_in));
@@ -964,6 +1193,39 @@ mod tests {
                 run_single(&mut |x, y| sell_row_inner_on(&sell, x, y, &pool, &r_sell)),
                 "sell_row_inner_many_on"
             );
+        }
+    }
+
+    #[test]
+    fn merge_kernel_bitwise_on_exact_giant_row_fixture() {
+        // One row holds 16 of 22 nnz; every value and x entry is an exact
+        // binary fraction, so partial sums are exactly representable and
+        // the merge kernel's chunk-boundary re-association is invisible:
+        // the result must be bit-for-bit equal to csr_seq on every thread
+        // count, and identical across reruns of the same partition.
+        let (n, nc) = (8usize, 16usize);
+        let mut trips: Vec<(usize, usize, Value)> = Vec::new();
+        for c in 0..nc {
+            trips.push((3, c, 0.25 + c as Value * 0.125));
+        }
+        for (r, c) in [(0usize, 1usize), (1, 0), (5, 5), (6, 2), (6, 7), (7, 0)] {
+            trips.push((r, c, 0.5 + (r + c) as Value * 0.0625));
+        }
+        let a = Csr::from_triplets(n, nc, &trips).unwrap();
+        let x: Vec<Value> = (0..nc).map(|i| 1.0 + i as Value * 0.125).collect();
+        let mut want = vec![0.0; n];
+        csr_seq(&a, &x, &mut want);
+        let mut ws = Workspace::new();
+        for t in [1usize, 2, 3, 5, 9] {
+            let mp = merge_path_split(&a.row_ptr, t);
+            let unit: Vec<Range<usize>> = (0..mp.n_chunks()).map(|q| q..q + 1).collect();
+            let pool = ParPool::new(t);
+            let mut y = vec![0.0; n];
+            csr_merge_par_on(&a, &x, &mut y, &pool, &mp, &unit, &mut ws);
+            assert_eq!(y, want, "t={t}");
+            let mut y2 = vec![0.0; n];
+            csr_merge_par_on(&a, &x, &mut y2, &pool, &mp, &unit, &mut ws);
+            assert_eq!(y2, y, "rerun stability t={t}");
         }
     }
 

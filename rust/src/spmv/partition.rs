@@ -1,15 +1,115 @@
 //! Work partitioning — the paper's `ISTART(K)`/`IEND(K)` arrays.
 //!
 //! The OpenMP codes in Figs. 1–4 pre-split their iteration space into one
-//! contiguous chunk per thread. Two policies are provided:
+//! contiguous chunk per thread. Three policies are provided, named by
+//! [`PartitionStrategy`] and picked by the planner (or forced with
+//! `SPMV_AT_PARTITION`):
 //!
 //! * [`split_even`] — equal iteration counts (what a static OpenMP schedule
 //!   over the entry stream gives);
 //! * [`split_by_nnz`] — row ranges balanced by non-zero count, which is the
 //!   right policy for row-wise kernels on skewed matrices (memplus-like
-//!   dense rows would otherwise serialise one thread).
+//!   dense rows would otherwise serialise one thread);
+//! * [`merge_path_split`] — 2-D merge coordinates over (row boundaries,
+//!   non-zeros), so a chunk may start and end *mid-row*. No chunk ever owns
+//!   more than ⌈(n + nnz)/k⌉ merge items, which bounds its non-zero count
+//!   even when one giant row holds most of the matrix — the regime where
+//!   row-aligned splitting degenerates to one serialised worker (Bergmans
+//!   et al., arxiv 2502.19284; Merrill & Garland's merge-based SpMV).
 
 use std::ops::Range;
+
+/// How a kernel's iteration space is split across pool workers.
+///
+/// `Even` and `ByNnz` produce row-aligned ranges; `MergePath` produces
+/// [`MergePartition`] coordinates that may cut rows (honoured in full by
+/// the `CRS-Merge` kernel; row-aligned kernels under `MergePath` use the
+/// merge boundaries rounded to row starts).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Equal unit counts per chunk.
+    Even,
+    /// Row chunks balanced by non-zero count (row-aligned).
+    ByNnz,
+    /// 2-D merge coordinates over (row_ptr, nnz); chunks may split rows.
+    MergePath,
+}
+
+impl PartitionStrategy {
+    /// Every strategy, in planner preference order.
+    pub const ALL: [PartitionStrategy; 3] =
+        [PartitionStrategy::ByNnz, PartitionStrategy::MergePath, PartitionStrategy::Even];
+
+    /// Canonical name (accepted back by [`PartitionStrategy::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionStrategy::Even => "even",
+            PartitionStrategy::ByNnz => "nnz",
+            PartitionStrategy::MergePath => "merge",
+        }
+    }
+
+    /// Parse a strategy name (case-insensitive; `None` for unknown).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "even" => Some(PartitionStrategy::Even),
+            "nnz" | "bynnz" | "by-nnz" => Some(PartitionStrategy::ByNnz),
+            "merge" | "mergepath" | "merge-path" => Some(PartitionStrategy::MergePath),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Truth for the partition-strategy override: the `SPMV_AT_PARTITION`
+/// environment variable. Unset, empty, or `auto` means "planner's pick"
+/// ([`pick_strategy`]); unknown values also fall through to the planner
+/// (same quiet-fallback contract as `SPMV_AT_TOPOLOGY`).
+pub fn configured_partition() -> Option<PartitionStrategy> {
+    match std::env::var("SPMV_AT_PARTITION") {
+        Ok(v) if !v.trim().is_empty() && v.trim().to_ascii_lowercase() != "auto" => {
+            PartitionStrategy::parse(&v)
+        }
+        _ => None,
+    }
+}
+
+/// Skew ratio `max_row / mean_row` at which the planner prefers
+/// merge-path partitioning: one row this far above the mean serialises a
+/// worker under any row-aligned split of `k ≤ skew` chunks.
+pub const MERGE_SKEW_THRESHOLD: f64 = 8.0;
+
+/// The planner's strategy pick for a CSR row partition: the
+/// `SPMV_AT_PARTITION` override when set, otherwise merge-path iff the
+/// row-length skew `max_row / mean_row` reaches
+/// [`MERGE_SKEW_THRESHOLD`], else nnz-balanced row chunks.
+pub fn pick_strategy(row_ptr: &[usize]) -> PartitionStrategy {
+    if let Some(s) = configured_partition() {
+        return s;
+    }
+    pick_strategy_auto(row_ptr)
+}
+
+/// The environment-independent half of [`pick_strategy`]: the pure skew
+/// heuristic (callers that already resolved an override use this), read
+/// off the same [`crate::matrixgen::rowlen::LenStats`] the generator and
+/// the offline model already compute.
+pub fn pick_strategy_auto(row_ptr: &[usize]) -> PartitionStrategy {
+    let s = crate::matrixgen::rowlen::stats_of_row_ptr(row_ptr);
+    if s.sum == 0 {
+        return PartitionStrategy::ByNnz;
+    }
+    if s.max as f64 >= MERGE_SKEW_THRESHOLD * s.mean {
+        PartitionStrategy::MergePath
+    } else {
+        PartitionStrategy::ByNnz
+    }
+}
 
 /// Split `0..n` into at most `k` contiguous ranges of near-equal length.
 /// Returns fewer than `k` ranges when `n < k`; never returns empty ranges
@@ -36,6 +136,14 @@ pub fn split_even(n: usize, k: usize) -> Vec<Range<usize>> {
 /// Split rows `0..row_ptr.len()-1` into at most `k` contiguous ranges with
 /// near-equal non-zero counts, using the CSR row pointers as the prefix-sum
 /// of work. Greedy boundary placement at the ideal quantiles.
+///
+/// Boundary canonicalisation: when the prefix array has a run of equal
+/// values (empty rows), the boundary is the **last** index of the run — a
+/// chunk end never precedes a run of empty rows, so the empty rows ride
+/// with the chunk that did the work before them. `binary_search` alone
+/// leaves the position within a duplicate run unspecified, which made the
+/// partition (and everything cached from it) depend on the search's
+/// internal probe order.
 pub fn split_by_nnz(row_ptr: &[usize], k: usize) -> Vec<Range<usize>> {
     let n = row_ptr.len().saturating_sub(1);
     let k = k.max(1);
@@ -60,6 +168,11 @@ pub fn split_by_nnz(row_ptr: &[usize], k: usize) -> Vec<Range<usize>> {
             Err(p) => start + 1 + p,
         };
         end = end.clamp(start + 1, n);
+        // Canonicalise to the last index of an equal-prefix run: the
+        // trailing empty rows belong to this chunk, not the next.
+        while end < n && row_ptr[end + 1] == row_ptr[end] {
+            end += 1;
+        }
         if i == k - 1 {
             end = n;
         }
@@ -88,6 +201,167 @@ pub fn imbalance(row_ptr: &[usize], ranges: &[Range<usize>]) -> f64 {
         .fold(1.0, f64::max)
 }
 
+/// A merge-path partition: `k+1` (row, nnz) coordinates on the 2-D merge
+/// of the row-boundary list `row_ptr[1..=n]` with the element list
+/// `0..nnz`. Chunk `t` spans `bounds[t] .. bounds[t+1]`; it owns the row
+/// boundaries `rows(t)` (writing those rows' results, empty rows
+/// included) and the elements `elems(t)` — which may begin after its
+/// first row's start and end before its last row's end, the partial
+/// segments the `CRS-Merge` kernel routes through carry slots.
+///
+/// Invariant per coordinate: `row_ptr[r] ≤ v ≤ row_ptr[r+1]` (a valid
+/// state of the merge), with `bounds[0] = (0, 0)` and
+/// `bounds[k] = (n, nnz)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergePartition {
+    /// The `k+1` (row, element) chunk boundaries.
+    pub bounds: Vec<(usize, usize)>,
+}
+
+impl MergePartition {
+    /// Number of chunks.
+    pub fn n_chunks(&self) -> usize {
+        self.bounds.len().saturating_sub(1)
+    }
+
+    /// Row boundaries chunk `t` consumes (it writes these rows).
+    pub fn rows(&self, t: usize) -> Range<usize> {
+        self.bounds[t].0..self.bounds[t + 1].0
+    }
+
+    /// Elements chunk `t` consumes.
+    pub fn elems(&self, t: usize) -> Range<usize> {
+        self.bounds[t].1..self.bounds[t + 1].1
+    }
+
+    /// Non-zeros chunk `t` owns (its share of the multiply work).
+    pub fn nnz_weight(&self, t: usize) -> usize {
+        self.bounds[t + 1].1 - self.bounds[t].1
+    }
+
+    /// The heaviest chunk's non-zero count.
+    pub fn max_nnz_weight(&self) -> usize {
+        (0..self.n_chunks()).map(|t| self.nnz_weight(t)).max().unwrap_or(0)
+    }
+
+    /// Heap bytes held (the cached coordinates).
+    pub fn memory_bytes(&self) -> usize {
+        self.bounds.len() * std::mem::size_of::<(usize, usize)>()
+    }
+}
+
+/// Compute the merge-path partition of a CSR row structure into at most
+/// `k` chunks. Diagonal `d_t = ⌊t·(n+nnz)/k⌋` is resolved to the unique
+/// valid merge state `(r, v)` with `r + v = d_t` by binary search on the
+/// row boundaries; consecutive diagonals differ, so no chunk is empty of
+/// merge items (`k` is clamped to `n + nnz`). `n = 0` yields zero
+/// chunks.
+pub fn merge_path_split(row_ptr: &[usize], k: usize) -> MergePartition {
+    let n = row_ptr.len().saturating_sub(1);
+    if n == 0 {
+        return MergePartition { bounds: vec![(0, 0)] };
+    }
+    let nnz = row_ptr[n];
+    let total = n + nnz;
+    let k = k.max(1).min(total);
+    let mut bounds = Vec::with_capacity(k + 1);
+    bounds.push((0usize, 0usize));
+    for t in 1..k {
+        let d = (t as u128 * total as u128 / k as u128) as usize;
+        bounds.push(merge_search(row_ptr, n, nnz, d));
+    }
+    bounds.push((n, nnz));
+    MergePartition { bounds }
+}
+
+/// Find the merge state `(r, v)` with `r + v = d` on the merge of the
+/// row-boundary list `A[i] = row_ptr[i+1]` with the element list
+/// `B[j] = j`: the smallest `r` such that `A[r] > B[d-1-r]`, i.e. the
+/// boundary count consumed when boundary values ≤ the facing element
+/// index go first (empty-row boundaries drain eagerly).
+fn merge_search(row_ptr: &[usize], n: usize, nnz: usize, d: usize) -> (usize, usize) {
+    let mut lo = d.saturating_sub(nnz);
+    let mut hi = d.min(n);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if row_ptr[mid + 1] <= d - mid - 1 {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo, d - lo)
+}
+
+/// Row-aligned projection of a merge-path partition: the chunk
+/// boundaries' row components, deduplicated into non-empty row ranges.
+/// This is what row-aligned kernels run when the picked strategy is
+/// [`PartitionStrategy::MergePath`] — balanced by rows *plus* nnz, but
+/// never cutting a row.
+pub fn merge_row_aligned(row_ptr: &[usize], k: usize) -> Vec<Range<usize>> {
+    let mp = merge_path_split(row_ptr, k);
+    let n = row_ptr.len().saturating_sub(1);
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for t in 0..mp.n_chunks() {
+        let end = mp.bounds[t + 1].0;
+        if end > start {
+            out.push(start..end);
+            start = end;
+        }
+    }
+    if start < n {
+        out.push(start..n);
+    }
+    out
+}
+
+/// A computed work partition: the strategy that produced it, the chunk
+/// ranges the pool claims, and — for merge-path partitions — the 2-D
+/// merge coordinates. For row-aligned partitions `ranges` are row
+/// ranges and `merge` is `None`; for a [`MergePartition`] the ranges are
+/// unit chunk-index ranges (`t..t+1`) so the pool's dynamic claiming
+/// works unchanged, and the coordinates live in `merge`.
+#[derive(Clone, Debug, Default)]
+pub struct Partition {
+    /// Strategy that produced this partition (reported in stats).
+    pub strategy: Option<PartitionStrategy>,
+    /// Chunk ranges for the pool (rows, entries, bands, or chunk ids —
+    /// per the kernel's unit).
+    pub ranges: Vec<Range<usize>>,
+    /// Merge coordinates when `strategy` is `MergePath` and the kernel
+    /// honours mid-row chunks.
+    pub merge: Option<MergePartition>,
+}
+
+impl Partition {
+    /// An unpartitioned (sequential) plan.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// A row-/unit-aligned partition.
+    pub fn aligned(strategy: PartitionStrategy, ranges: Vec<Range<usize>>) -> Self {
+        Partition { strategy: Some(strategy), ranges, merge: None }
+    }
+
+    /// A merge-path partition: unit chunk-id ranges plus the coordinates.
+    pub fn merged(mp: MergePartition) -> Self {
+        let ranges = (0..mp.n_chunks()).map(|t| t..t + 1).collect();
+        Partition { strategy: Some(PartitionStrategy::MergePath), ranges, merge: Some(mp) }
+    }
+
+    /// Number of chunks the pool will claim.
+    pub fn n_chunks(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Stats label: the strategy name, `-` when unpartitioned.
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.map_or("-", PartitionStrategy::name)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,6 +374,26 @@ mod tests {
             pos = r.end;
         }
         assert_eq!(pos, n, "does not cover 0..{n}");
+    }
+
+    /// Structural invariants of a merge partition: monotone valid merge
+    /// states from (0,0) to (n,nnz), no chunk empty of merge items.
+    fn assert_valid_merge(row_ptr: &[usize], mp: &MergePartition) {
+        let n = row_ptr.len().saturating_sub(1);
+        let nnz = if n == 0 { 0 } else { row_ptr[n] };
+        assert_eq!(mp.bounds.first(), Some(&(0, 0)));
+        assert_eq!(mp.bounds.last(), Some(&(n, nnz)));
+        for w in mp.bounds.windows(2) {
+            let ((r0, v0), (r1, v1)) = (w[0], w[1]);
+            assert!(r1 >= r0 && v1 >= v0, "non-monotone: {w:?}");
+            assert!(r1 + v1 > r0 + v0, "empty chunk: {w:?}");
+        }
+        for &(r, v) in &mp.bounds {
+            assert!(r <= n && v <= nnz);
+            if r < n {
+                assert!(row_ptr[r] <= v && v <= row_ptr[r + 1], "invalid state ({r},{v})");
+            }
+        }
     }
 
     #[test]
@@ -145,9 +439,177 @@ mod tests {
     }
 
     #[test]
+    fn split_by_nnz_boundary_is_last_of_duplicate_run() {
+        // Rows: 4 nnz, then a run of 3 empty rows, then 4 nnz. The ideal
+        // first-of-two boundary (target 4) hits the duplicate run
+        // [4,4,4,4]; the canonical boundary is its LAST index, so the
+        // empty rows ride with chunk 0.
+        let row_ptr = vec![0, 4, 4, 4, 4, 8];
+        let r = split_by_nnz(&row_ptr, 2);
+        assert_covers(&r, 5);
+        assert_eq!(r, vec![0..4, 4..5], "chunk end must not precede the empty-row run");
+
+        // Same with the work before the run spread over two rows and a
+        // trailing empty run, at k=3.
+        let row_ptr = vec![0, 2, 4, 4, 4, 6, 6, 6];
+        let r = split_by_nnz(&row_ptr, 3);
+        assert_covers(&r, 7);
+        for w in r.windows(2) {
+            let boundary = w[0].end;
+            assert!(
+                row_ptr[boundary + 1] > row_ptr[boundary],
+                "boundary {boundary} precedes an empty-row run: {r:?}"
+            );
+        }
+    }
+
+    #[test]
     fn imbalance_of_even_partition() {
         let row_ptr: Vec<usize> = (0..=8).map(|i| i * 2).collect();
         let r = split_even(8, 4);
         assert!((imbalance(&row_ptr, &r) - 1.0).abs() < 1e-12);
+    }
+
+    // ---- merge-path coordinate search ----
+
+    #[test]
+    fn merge_spans_sum_to_totals() {
+        let cases: Vec<Vec<usize>> = vec![
+            vec![0, 97, 98, 99, 100],            // one giant row
+            vec![0, 0, 0, 5],                    // leading empty rows
+            vec![0, 5, 5, 5],                    // trailing empty rows
+            vec![0, 0, 0, 0],                    // all empty
+            (0..=64).map(|i| i * 3).collect(),   // uniform
+            vec![0, 1, 1, 2, 50, 50, 51, 60],    // mixed skew + empties
+        ];
+        for row_ptr in &cases {
+            let n = row_ptr.len() - 1;
+            for k in [1usize, 2, 3, 4, 7, 16, 1000] {
+                let mp = merge_path_split(row_ptr, k);
+                assert_valid_merge(row_ptr, &mp);
+                let rows: usize = (0..mp.n_chunks()).map(|t| mp.rows(t).len()).sum();
+                let elems: usize = (0..mp.n_chunks()).map(|t| mp.elems(t).len()).sum();
+                assert_eq!(rows, n, "rows, k={k}, {row_ptr:?}");
+                assert_eq!(elems, row_ptr[n], "elems, k={k}, {row_ptr:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_balances_single_giant_row() {
+        // split_by_nnz degenerates to one chunk here; merge-path gives
+        // nnz weights that differ by ≤ 1.
+        let row_ptr = vec![0, 100];
+        assert_eq!(split_by_nnz(&row_ptr, 4).len(), 1);
+        let mp = merge_path_split(&row_ptr, 4);
+        assert_eq!(mp.n_chunks(), 4);
+        let weights: Vec<usize> = (0..4).map(|t| mp.nnz_weight(t)).collect();
+        let (mn, mx) = (weights.iter().min().unwrap(), weights.iter().max().unwrap());
+        assert!(mx - mn <= 1, "weights {weights:?}");
+        assert_eq!(weights.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn merge_balances_giant_row_among_small_rows() {
+        // 50 one-nnz rows around one 150-nnz row: every chunk's weight
+        // stays within ⌈(n+nnz)/k⌉ even though one row is 75% of nnz.
+        let mut row_ptr = vec![0usize];
+        for i in 0..51 {
+            let len = if i == 25 { 150 } else { 1 };
+            row_ptr.push(row_ptr.last().unwrap() + len);
+        }
+        let (n, nnz) = (51, 200);
+        for k in [2usize, 4, 7] {
+            let mp = merge_path_split(&row_ptr, k);
+            assert_valid_merge(&row_ptr, &mp);
+            let cap = (n + nnz + k - 1) / k;
+            assert!(
+                mp.max_nnz_weight() <= cap,
+                "k={k}: max weight {} > cap {cap}",
+                mp.max_nnz_weight()
+            );
+        }
+    }
+
+    #[test]
+    fn merge_edge_cases() {
+        // k > n + nnz clamps: no empty chunks.
+        let row_ptr = vec![0, 1, 2];
+        let mp = merge_path_split(&row_ptr, 100);
+        assert_valid_merge(&row_ptr, &mp);
+        assert!(mp.n_chunks() <= 4);
+        // n_rows = 0.
+        let mp = merge_path_split(&[0], 4);
+        assert_eq!(mp.n_chunks(), 0);
+        // k = 1 is the trivial whole-matrix chunk.
+        let row_ptr = vec![0, 3, 6];
+        let mp = merge_path_split(&row_ptr, 1);
+        assert_eq!(mp.bounds, vec![(0, 0), (2, 6)]);
+    }
+
+    #[test]
+    fn merge_row_aligned_covers_rows() {
+        let row_ptr = vec![0, 1, 1, 2, 50, 50, 51, 60];
+        for k in [1usize, 2, 3, 8] {
+            let r = merge_row_aligned(&row_ptr, k);
+            assert_covers(&r, 7);
+        }
+        assert!(merge_row_aligned(&[0], 4).is_empty());
+    }
+
+    // ---- strategy naming / picking ----
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in PartitionStrategy::ALL {
+            assert_eq!(PartitionStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(PartitionStrategy::parse("MERGE-PATH"), Some(PartitionStrategy::MergePath));
+        assert_eq!(PartitionStrategy::parse("by-nnz"), Some(PartitionStrategy::ByNnz));
+        assert_eq!(PartitionStrategy::parse("bogus"), None);
+        assert_eq!(PartitionStrategy::parse("auto"), None);
+    }
+
+    #[test]
+    fn skew_heuristic_picks_merge_only_on_skew() {
+        // Uniform rows: ByNnz.
+        let uniform: Vec<usize> = (0..=50).map(|i| i * 4).collect();
+        assert_eq!(pick_strategy_auto(&uniform), PartitionStrategy::ByNnz);
+        // One row at 97/100 nnz over 4 rows: max/mean = 97/25 < 8 → still
+        // ByNnz at tiny n…
+        assert_eq!(pick_strategy_auto(&[0, 97, 98, 99, 100]), PartitionStrategy::ByNnz);
+        // …but a memplus-style giant row across many short rows crosses
+        // the threshold.
+        let mut skewed = vec![0usize];
+        for i in 0..100 {
+            let len = if i == 50 { 200 } else { 2 };
+            skewed.push(skewed.last().unwrap() + len);
+        }
+        assert_eq!(pick_strategy_auto(&skewed), PartitionStrategy::MergePath);
+        // Degenerate inputs default to ByNnz.
+        assert_eq!(pick_strategy_auto(&[0]), PartitionStrategy::ByNnz);
+        assert_eq!(pick_strategy_auto(&[0, 0, 0]), PartitionStrategy::ByNnz);
+    }
+
+    #[test]
+    fn env_override_defaults_off() {
+        if std::env::var("SPMV_AT_PARTITION").is_err() {
+            assert_eq!(configured_partition(), None);
+        }
+    }
+
+    #[test]
+    fn partition_struct_shapes() {
+        let p = Partition::none();
+        assert_eq!(p.n_chunks(), 0);
+        assert_eq!(p.strategy_name(), "-");
+        let p = Partition::aligned(PartitionStrategy::ByNnz, vec![0..2, 2..4]);
+        assert_eq!(p.n_chunks(), 2);
+        assert_eq!(p.strategy_name(), "nnz");
+        assert!(p.merge.is_none());
+        let p = Partition::merged(merge_path_split(&[0, 100], 4));
+        assert_eq!(p.n_chunks(), 4);
+        assert_eq!(p.ranges, vec![0..1, 1..2, 2..3, 3..4]);
+        assert_eq!(p.strategy_name(), "merge");
     }
 }

@@ -44,6 +44,7 @@
 //! [`ParPool::init_count`] delta.
 
 use super::kernels::{self, AnyMatrix};
+use super::partition::{self, Partition, PartitionStrategy};
 use super::pool::{self, ParPool};
 use super::{Implementation, Workspace};
 use crate::autotune::online::{decide, TuningData};
@@ -51,7 +52,6 @@ use crate::autotune::MemoryPolicy;
 use crate::formats::{Csr, Ell, FormatKind, SparseMatrix};
 use crate::machine::MatrixShape;
 use crate::{Result, Value};
-use std::ops::Range;
 use std::sync::Arc;
 
 /// The batch-tile width for blocked SpMM: the `SPMV_AT_BATCH_TILE`
@@ -104,7 +104,7 @@ fn rows_per_rhs_for(imp: Implementation, n_rows: usize, n_chunks: usize) -> usiz
 pub struct SpmvPlan {
     imp: Implementation,
     matrix: AnyMatrix,
-    ranges: Vec<Range<usize>>,
+    part: Partition,
     ws: Workspace,
     pool: Arc<ParPool>,
     n_rows: usize,
@@ -126,9 +126,23 @@ impl SpmvPlan {
         max_bytes: Option<usize>,
         pool: Arc<ParPool>,
     ) -> Result<Self> {
+        Self::build_with(csr, imp, max_bytes, pool, None)
+    }
+
+    /// Like [`SpmvPlan::build`], with an explicit [`PartitionStrategy`]
+    /// instead of the planner's env-override + skew pick. The oracle
+    /// harness sweeps strategies through this without mutating the
+    /// process environment.
+    pub fn build_with(
+        csr: &Arc<Csr>,
+        imp: Implementation,
+        max_bytes: Option<usize>,
+        pool: Arc<ParPool>,
+        strategy: Option<PartitionStrategy>,
+    ) -> Result<Self> {
         let t0 = std::time::Instant::now();
         let matrix = AnyMatrix::prepare_on(csr, imp, max_bytes, &pool)?;
-        Ok(Self::assemble(csr, imp, matrix, t0, pool))
+        Ok(Self::assemble(csr, imp, matrix, t0, pool, strategy))
     }
 
     /// Like [`SpmvPlan::build`] for a borrowed CRS nobody shares: the CRS
@@ -143,7 +157,7 @@ impl SpmvPlan {
     ) -> Result<Self> {
         let t0 = std::time::Instant::now();
         let matrix = AnyMatrix::prepare_ref_on(csr, imp, max_bytes, &pool)?;
-        Ok(Self::assemble(csr, imp, matrix, t0, pool))
+        Ok(Self::assemble(csr, imp, matrix, t0, pool, None))
     }
 
     fn assemble(
@@ -152,6 +166,7 @@ impl SpmvPlan {
         matrix: AnyMatrix,
         t0: std::time::Instant,
         pool: Arc<ParPool>,
+        strategy: Option<PartitionStrategy>,
     ) -> Self {
         let transform_seconds = if imp.needs_transform() {
             t0.elapsed().as_secs_f64()
@@ -163,12 +178,19 @@ impl SpmvPlan {
         // a `ParPool::init_count` delta, and on a NUMA shard the arrays
         // end up faulted on the socket that will stream them.
         matrix.first_touch_on(&pool);
-        let ranges = kernels::partition_for(imp, &matrix, pool.size());
-        let rows_per_rhs = rows_per_rhs_for(imp, csr.n_rows(), ranges.len());
+        // Partition-strategy decision point: an explicit caller request
+        // wins, then the `SPMV_AT_PARTITION` override, then the row-skew
+        // pick off the matrixgen row-length stats. Cached in the plan —
+        // merge coordinates included — and replayed every call.
+        let strategy = strategy
+            .or_else(partition::configured_partition)
+            .unwrap_or_else(|| partition::pick_strategy_auto(&csr.row_ptr));
+        let part = kernels::partition_for(imp, &matrix, pool.size(), Some(strategy));
+        let rows_per_rhs = rows_per_rhs_for(imp, csr.n_rows(), part.n_chunks());
         Self {
             imp,
             matrix,
-            ranges,
+            part,
             ws: Workspace::new(),
             pool,
             n_rows: csr.n_rows(),
@@ -199,7 +221,7 @@ impl SpmvPlan {
         );
         self.calls += 1;
         self.matrix_passes += 1;
-        kernels::run_on(self.imp, &self.matrix, x, y, &self.pool, &self.ranges, &mut self.ws)
+        kernels::run_on(self.imp, &self.matrix, x, y, &self.pool, &self.part, &mut self.ws)
     }
 
     /// Batched `Y = A·X` as a **tiled SpMM**: the batch is cut into column
@@ -245,7 +267,7 @@ impl SpmvPlan {
                 &xrefs,
                 &mut yrefs,
                 &self.pool,
-                &self.ranges,
+                &self.part,
                 &mut self.ws,
             )?;
             self.matrix_passes += 1;
@@ -276,6 +298,17 @@ impl SpmvPlan {
     /// The implementation this plan executes.
     pub fn implementation(&self) -> Implementation {
         self.imp
+    }
+
+    /// The cached work partition (strategy + chunk ranges + merge
+    /// coordinates, when any).
+    pub fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    /// Stats label of the partition strategy (`-` when unpartitioned).
+    pub fn partition_strategy(&self) -> &'static str {
+        self.part.strategy_name()
     }
 
     /// The stored format tag.
@@ -353,10 +386,10 @@ impl SpmvPlan {
             (self.n_rows, self.n_cols),
             "swap_executable requires plans over the same operator"
         );
-        let SpmvPlan { imp, matrix, ranges, ws, pool, transform_seconds, batch_tile, .. } = new;
+        let SpmvPlan { imp, matrix, part, ws, pool, transform_seconds, batch_tile, .. } = new;
         self.imp = imp;
         self.matrix = matrix;
-        self.ranges = ranges;
+        self.part = part;
         self.pool = pool;
         self.transform_seconds = transform_seconds;
         self.batch_tile = batch_tile;
@@ -371,7 +404,8 @@ impl std::fmt::Debug for SpmvPlan {
         f.debug_struct("SpmvPlan")
             .field("imp", &self.imp)
             .field("kind", &self.kind())
-            .field("chunks", &self.ranges.len())
+            .field("partition", &self.part.strategy_name())
+            .field("chunks", &self.part.n_chunks())
             .field("pool", &self.pool.size())
             .field("calls", &self.calls)
             .finish()
@@ -424,6 +458,19 @@ impl Planner {
             d.chosen
         } else {
             Implementation::CsrSeq
+        }
+    }
+
+    /// The parallel-CRS baseline implementation for `csr`: `CRS-Merge`
+    /// when the partition pick (env override or row-skew heuristic) says
+    /// merge-path — a single giant row would serialise one worker of any
+    /// row-aligned split — and plain row-parallel CRS otherwise. The
+    /// coordinator's zero-transform serving plan builds through this, so
+    /// skewed matrices get merge-path balance without any format change.
+    pub fn baseline_impl(&self, csr: &Csr) -> Implementation {
+        match partition::pick_strategy(&csr.row_ptr) {
+            PartitionStrategy::MergePath => Implementation::CsrMergePar,
+            _ => Implementation::CsrRowPar,
         }
     }
 
@@ -560,6 +607,59 @@ mod tests {
                 "tile {tile}: one dispatch per pass"
             );
         }
+    }
+
+    #[test]
+    fn build_with_pins_the_partition_strategy() {
+        let mut rng = Rng::new(46);
+        let a = Arc::new(random_csr(&mut rng, 48, 48, 0.1));
+        let pool = Arc::new(ParPool::new(3));
+        let x: Vec<Value> = (0..48).map(|i| (i as f64 * 0.13).sin()).collect();
+        let mut want = vec![0.0; 48];
+        a.spmv(&x, &mut want);
+        for s in PartitionStrategy::ALL {
+            let mut plan =
+                SpmvPlan::build_with(&a, Implementation::CsrRowPar, None, pool.clone(), Some(s))
+                    .unwrap();
+            assert_eq!(plan.partition_strategy(), s.name());
+            let mut y = vec![0.0; 48];
+            plan.execute(&x, &mut y).unwrap();
+            for (g, w) in y.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12, "{s}");
+            }
+        }
+        // CRS-Merge plans cache the merge coordinates.
+        let plan =
+            SpmvPlan::build(&a, Implementation::CsrMergePar, None, pool.clone()).unwrap();
+        assert_eq!(plan.partition_strategy(), "merge");
+        assert!(plan.partition().merge.is_some());
+        // Default builds still resolve to the skew pick (nnz here).
+        let plan = SpmvPlan::build(&a, Implementation::CsrRowPar, None, pool).unwrap();
+        if std::env::var("SPMV_AT_PARTITION").is_err() {
+            assert!(plan.partition_strategy() == "nnz" || plan.partition_strategy() == "merge");
+        }
+    }
+
+    #[test]
+    fn baseline_impl_follows_the_skew_pick() {
+        if std::env::var("SPMV_AT_PARTITION").is_ok() {
+            return; // pick is env-forced; the auto heuristic is not observable
+        }
+        let planner = Planner::new(
+            tuning(None, Implementation::CsrSeq),
+            MemoryPolicy::unlimited(),
+            Arc::new(ParPool::new(2)),
+        );
+        let mut rng = Rng::new(47);
+        let uniform = banded_circulant(&mut rng, 64, &[-1, 0, 1]);
+        assert_eq!(planner.baseline_impl(&uniform), Implementation::CsrRowPar);
+        // memplus-style skew: one giant row among short rows.
+        let mut trips: Vec<(usize, usize, Value)> = (0..100).map(|c| (50, c, 1.0)).collect();
+        for r in 0..100 {
+            trips.push((r, r, 1.0));
+        }
+        let skewed = Csr::from_triplets(100, 100, &trips).unwrap();
+        assert_eq!(planner.baseline_impl(&skewed), Implementation::CsrMergePar);
     }
 
     #[test]

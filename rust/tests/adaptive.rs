@@ -152,8 +152,12 @@ fn wrong_transform_decision_is_replanned_back_to_crs() {
     assert_eq!(c.spmv("m", &x).unwrap(), want);
     assert_eq!(c.serving_format("m"), Some(FormatKind::Ell), "transformed on first call");
 
-    // Rival arm (the CRS baseline plan) measured much faster.
+    // Rival arm (the CRS baseline plan) measured much faster. The
+    // baseline kernel follows the partition pick (row-parallel here;
+    // merge-path under SPMV_AT_PARTITION=merge or heavy skew), so feed
+    // both CRS arms — only the one serving as baseline is consulted.
     c.inject_sample("m", Implementation::CsrRowPar, 1e-12, 16).unwrap();
+    c.inject_sample("m", Implementation::CsrMergePar, 1e-12, 16).unwrap();
     let k_windows = {
         let cfg = spmv_at::autotune::adaptive::AdaptiveConfig::default();
         cfg.window * cfg.flip_windows as u64
@@ -243,7 +247,10 @@ fn wrong_sell_transform_decision_is_replanned_back_to_crs() {
     assert_eq!(c.spmv("m", &x).unwrap(), want);
     assert_eq!(c.serving_format("m"), Some(FormatKind::Sell), "transformed on first call");
 
+    // Both CRS arms, as above: the baseline kernel follows the
+    // partition pick, and only the baseline's telemetry key is read.
     c.inject_sample("m", Implementation::CsrRowPar, 1e-12, 16).unwrap();
+    c.inject_sample("m", Implementation::CsrMergePar, 1e-12, 16).unwrap();
     for _ in 0..k_windows() {
         assert_eq!(c.spmv("m", &x).unwrap(), want, "bitwise across the flip back");
     }

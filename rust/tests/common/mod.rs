@@ -58,6 +58,42 @@ pub fn xs_batch(n_cols: usize, k: usize) -> Vec<Vec<Value>> {
         .collect()
 }
 
+/// Sweep every [`Implementation`] × thread count {1, 2, 7} × partition
+/// strategy (the planner's own pick plus each explicit
+/// [`PartitionStrategy`][spmv_at::spmv::partition::PartitionStrategy]),
+/// building one plan per combination through
+/// [`SpmvPlan::build_with`][spmv_at::spmv::SpmvPlan::build_with] — no
+/// environment mutation, so parallel test binaries never race a getenv —
+/// and handing each to `f` with a diagnostic tag. The differential
+/// oracle drives every kernel in the crate through this single sweep.
+pub fn for_all_impls<F>(csr: &Arc<Csr>, mut f: F)
+where
+    F: FnMut(&str, &mut spmv_at::spmv::SpmvPlan),
+{
+    use spmv_at::spmv::partition::PartitionStrategy;
+    use spmv_at::spmv::pool::ParPool;
+    use spmv_at::spmv::SpmvPlan;
+    for threads in [1usize, 2, 7] {
+        let pool = Arc::new(ParPool::new(threads));
+        for imp in Implementation::ALL {
+            let mut strategies: Vec<Option<PartitionStrategy>> = vec![None];
+            strategies.extend(PartitionStrategy::ALL.map(Some));
+            for strategy in strategies {
+                let tag = format!(
+                    "{imp} threads={threads} partition={}",
+                    strategy.map_or("auto", PartitionStrategy::name)
+                );
+                let mut plan =
+                    match SpmvPlan::build_with(csr, imp, None, pool.clone(), strategy) {
+                        Ok(p) => p,
+                        Err(e) => panic!("{tag}: plan build failed: {e}"),
+                    };
+                f(&tag, &mut plan);
+            }
+        }
+    }
+}
+
 /// The sequential CRS reference `y = A·x`.
 pub fn reference(a: &Csr, x: &[Value]) -> Vec<Value> {
     let mut y = vec![0.0; a.n_rows()];

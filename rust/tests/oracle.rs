@@ -1,0 +1,209 @@
+//! The differential oracle: every `Implementation`, at every thread
+//! count and under every partition strategy, against the sequential CRS
+//! reference on an adversarial matrix suite.
+//!
+//! Inputs and stored values are exact binary fractions, so "equal"
+//! means *bitwise* equal wherever the kernel contract promises CRS
+//! accumulation order (the CRS family, ELL-Row inner, SELL — the same
+//! set the adaptive tests rely on), and every kernel must be bitwise
+//! *self*-stable: re-executing a plan, and serving a batch through the
+//! tiled SpMM instead of looped single calls, may never change a bit.
+//!
+//! The suite is chosen to break partitioners, not kernels:
+//!
+//! * a giant row holding more than half of all non-zeros (no row-aligned
+//!   split can balance it — the merge-path motivation);
+//! * power-law row lengths (heavy head, long tail);
+//! * leading and trailing empty-row runs (boundary drain order);
+//! * an all-empty matrix and a single-column matrix (degenerate merge
+//!   lists);
+//! * explicit stored zeros (padding-confusable entries).
+
+mod common;
+
+use common::{assert_close, for_all_impls, reference, xs_batch};
+use spmv_at::formats::{Csr, SparseMatrix};
+use spmv_at::spmv::partition::{merge_path_split, split_by_nnz};
+use spmv_at::spmv::Implementation;
+use spmv_at::Value;
+use std::sync::Arc;
+
+/// Exact binary fraction, never zero.
+fn frac(k: usize) -> Value {
+    1.0 + (k % 13) as Value * 0.0625
+}
+
+/// One row owns >50% of the non-zeros: 24×40 with row 7 fully dense
+/// (40 entries) over 23 single-entry rows.
+fn giant_row() -> Csr {
+    let mut t: Vec<(usize, usize, Value)> = Vec::new();
+    for r in 0..24 {
+        if r == 7 {
+            for c in 0..40 {
+                t.push((r, c, frac(3 * c + 1)));
+            }
+        } else {
+            t.push((r, (r * 5) % 40, frac(r)));
+        }
+    }
+    Csr::from_triplets(24, 40, &t).unwrap()
+}
+
+/// Power-law row lengths: row `r` gets `60 / (r + 1)` entries.
+fn power_law() -> Csr {
+    let mut t: Vec<(usize, usize, Value)> = Vec::new();
+    for r in 0..60 {
+        for c in 0..(60 / (r + 1)).max(1) {
+            t.push((r, c, frac(r * 7 + c)));
+        }
+    }
+    Csr::from_triplets(60, 60, &t).unwrap()
+}
+
+/// Rows 0..13 completely empty, data only below them.
+fn leading_empties() -> Csr {
+    let mut t: Vec<(usize, usize, Value)> = Vec::new();
+    for r in 13..40 {
+        t.push((r, r % 20, frac(r)));
+        t.push((r, (r + 9) % 20, frac(r + 5)));
+    }
+    Csr::from_triplets(40, 20, &t).unwrap()
+}
+
+/// Data only in rows 0..25; rows 25..40 empty (the run the *last* merge
+/// chunk must own).
+fn trailing_empties() -> Csr {
+    let mut t: Vec<(usize, usize, Value)> = Vec::new();
+    for r in 0..25 {
+        t.push((r, (r * 3) % 20, frac(r)));
+    }
+    Csr::from_triplets(40, 20, &t).unwrap()
+}
+
+/// No entries at all.
+fn all_empty() -> Csr {
+    Csr::from_triplets(17, 9, &[]).unwrap()
+}
+
+/// One column; alternating filled and empty rows.
+fn single_column() -> Csr {
+    let t: Vec<(usize, usize, Value)> =
+        (0..30).step_by(2).map(|r| (r, 0, frac(r))).collect();
+    Csr::from_triplets(30, 1, &t).unwrap()
+}
+
+/// Explicit stored zeros interleaved with real entries (`from_triplets`
+/// keeps them — a kernel that confuses stored zeros with padding would
+/// still compute the right values, so the shape also skews row lengths
+/// to catch partition miscounts).
+fn stored_zeros() -> Csr {
+    let mut t: Vec<(usize, usize, Value)> = Vec::new();
+    for r in 0..16 {
+        t.push((r, r, frac(r)));
+        t.push((r, (r + 1) % 16, 0.0));
+        if r % 3 == 0 {
+            for c in 0..8 {
+                t.push((r, (r + 2 + c) % 16, if c % 2 == 0 { 0.0 } else { frac(c) }));
+            }
+        }
+    }
+    Csr::from_triplets(16, 16, &t).unwrap()
+}
+
+fn adversarial_suite() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("giant-row", giant_row()),
+        ("power-law", power_law()),
+        ("leading-empties", leading_empties()),
+        ("trailing-empties", trailing_empties()),
+        ("all-empty", all_empty()),
+        ("single-column", single_column()),
+        ("stored-zeros", stored_zeros()),
+    ]
+}
+
+/// The kernels whose per-row accumulation order equals sequential CRS —
+/// where the oracle demands bitwise identity, not closeness (the same
+/// contract `rust/tests/adaptive.rs` serves flips under).
+fn bitwise_vs_seq(imp: Implementation) -> bool {
+    matches!(
+        imp,
+        Implementation::CsrSeq
+            | Implementation::CsrRowPar
+            | Implementation::CsrMergePar
+            | Implementation::EllRowInner
+            | Implementation::SellRowInner
+    )
+}
+
+#[test]
+fn every_kernel_matches_csr_seq_on_adversarial_shapes() {
+    for (name, a) in adversarial_suite() {
+        let a = Arc::new(a);
+        let x = xs_batch(a.n_cols(), 1).remove(0);
+        let want = reference(&a, &x);
+        for_all_impls(&a, |tag, plan| {
+            let mut y = vec![0.0; a.n_rows()];
+            plan.execute(&x, &mut y).unwrap();
+            if bitwise_vs_seq(plan.implementation()) {
+                assert_eq!(y, want, "{name} {tag}: bitwise vs csr_seq");
+            } else {
+                assert_close(&format!("{name} {tag}"), &y, &want);
+            }
+            // Rerun stability: the same plan must reproduce itself
+            // bitwise — partitions, carries and fixups are deterministic.
+            let mut y2 = vec![0.0; a.n_rows()];
+            plan.execute(&x, &mut y2).unwrap();
+            assert_eq!(y, y2, "{name} {tag}: rerun must be bitwise-stable");
+        });
+    }
+}
+
+#[test]
+fn batched_execution_matches_looped_bitwise_on_adversarial_shapes() {
+    for (name, a) in adversarial_suite() {
+        let a = Arc::new(a);
+        let xs = xs_batch(a.n_cols(), 4);
+        for_all_impls(&a, |tag, plan| {
+            let looped: Vec<Vec<Value>> = xs
+                .iter()
+                .map(|x| {
+                    let mut y = vec![0.0; a.n_rows()];
+                    plan.execute(x, &mut y).unwrap();
+                    y
+                })
+                .collect();
+            let mut ys = vec![vec![0.0; a.n_rows()]; xs.len()];
+            plan.execute_many(&xs, &mut ys).unwrap();
+            assert_eq!(ys, looped, "{name} {tag}: tiled SpMM must match looped calls");
+        });
+    }
+}
+
+/// The acceptance criterion behind the whole PR: on the giant-row
+/// fixture, merge-path chunks stay within 2× the mean non-zero weight,
+/// while the best row-aligned nnz split cannot — the giant row lands
+/// whole in one chunk and dwarfs the mean.
+#[test]
+fn merge_path_balances_the_giant_row_where_row_aligned_splits_cannot() {
+    let a = giant_row();
+    let k = 7;
+    let mp = merge_path_split(&a.row_ptr, k);
+    assert_eq!(mp.n_chunks(), k);
+    let mean = a.nnz() as f64 / k as f64;
+    assert!(
+        (mp.max_nnz_weight() as f64) <= 2.0 * mean,
+        "merge-path max nnz weight {} must stay within 2x the mean {mean:.2}",
+        mp.max_nnz_weight()
+    );
+    let ranges = split_by_nnz(&a.row_ptr, k);
+    let max_row_aligned = ranges
+        .iter()
+        .map(|r| a.row_ptr[r.end] - a.row_ptr[r.start])
+        .max()
+        .unwrap();
+    assert!(
+        (max_row_aligned as f64) > 2.0 * mean,
+        "a row-aligned split cannot cut the giant row ({max_row_aligned} vs mean {mean:.2})"
+    );
+}
