@@ -12,8 +12,15 @@
 //! queueing delay under overload is visible instead of being absorbed
 //! into a slower offered rate.
 //!
+//! A third, shed phase drives a dedicated front end with a deliberate
+//! coalesce window and expired request deadlines, measuring the
+//! drain-time shedding path. The bench also asserts the admission hot
+//! path's zero-allocation property: key interns stay bounded by
+//! sessions, never by requests.
+//!
 //! JSON keys consumed by CI: `p50_us`/`p95_us`/`p99_us` and
-//! `coalescing_factor` under both loops (see `.github/workflows/ci.yml`,
+//! `coalescing_factor` under both loops, plus `deadline_sheds`,
+//! `shed_rate`, and `key_interns` (see `.github/workflows/ci.yml`,
 //! bench-smoke).
 
 mod common;
@@ -21,11 +28,25 @@ mod common;
 use spmv_at::coordinator::{CoordinatorConfig, Server};
 use spmv_at::matrixgen::banded_circulant;
 use spmv_at::metrics::Json;
-use spmv_at::net::proto::WireNetStats;
+use spmv_at::net::proto::{self, WireNetStats};
 use spmv_at::net::{ListenAddr, NetClient, NetConfig, NetServer};
 use spmv_at::rng::Rng;
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// An explicit front-end config — the bench never reads the environment
+/// knobs, so its numbers mean the same thing on every machine.
+fn net_cfg(coalesce_wait: Duration) -> NetConfig {
+    NetConfig {
+        queue_depth: 512,
+        coalesce_wait,
+        auth_token: None,
+        quota_requests: 0,
+        quota_bytes: 0,
+        decision_log: None,
+    }
+}
 
 fn percentile(sorted_us: &[f64], p: f64) -> f64 {
     if sorted_us.is_empty() {
@@ -77,7 +98,7 @@ fn main() {
         c: 1.0,
         d_star: Some(3.1),
     };
-    let mut ccfg = CoordinatorConfig::new(tuning);
+    let mut ccfg = CoordinatorConfig::new(tuning.clone());
     // Serving passes only: exploration would add shadow matrix streams
     // and pollute the coalescing accounting.
     ccfg.adaptive.enabled = false;
@@ -86,7 +107,7 @@ fn main() {
         server,
         client,
         &ListenAddr::Tcp("127.0.0.1:0".into()),
-        NetConfig { queue_depth: 512, coalesce_wait: Duration::ZERO },
+        net_cfg(Duration::ZERO),
     )
     .expect("bind an ephemeral port");
     let addr = net.local_addr().clone();
@@ -190,6 +211,67 @@ fn main() {
     );
 
     let stats = control.net_stats().unwrap();
+
+    // ---- Zero-allocation admission check: each session interns a matrix
+    // key at most once; every request after that clones the Arc. If a
+    // per-request String allocation crept back into `Ingress::submit`,
+    // interns would track requests instead of sessions.
+    let interns = net.counters().key_interns.load(Ordering::Relaxed);
+    println!(
+        "key interns: {interns} (sessions={}, coalesced requests={})",
+        stats.sessions_total, stats.requests
+    );
+    assert!(
+        interns <= stats.sessions_total,
+        "per-request key allocation crept back in: {interns} interns across {} sessions",
+        stats.sessions_total
+    );
+    assert!(
+        interns < stats.requests,
+        "key interns ({interns}) must stay far below requests ({})",
+        stats.requests
+    );
+
+    // ---- Shed phase: a dedicated front end with a 5 ms coalesce window
+    // (so the latency loops above stay unaffected). Requests alternate
+    // between a 1 µs budget — long expired when the drain happens, shed
+    // deterministically — and an ample budget that serves normally.
+    let shed_n = if quick { 8 } else { 64 };
+    println!("shed phase: {shed_n} expired-deadline + {shed_n} live request(s), 5ms window");
+    let mut shed_ccfg = CoordinatorConfig::new(tuning);
+    shed_ccfg.adaptive.enabled = false;
+    let (shed_server, shed_client) = Server::spawn_sharded(shed_ccfg, 64);
+    let shed_net = NetServer::start(
+        shed_server,
+        shed_client,
+        &ListenAddr::Tcp("127.0.0.1:0".into()),
+        net_cfg(Duration::from_millis(5)),
+    )
+    .expect("bind shed front end");
+    // Deadlines need a v2 session regardless of any SPMV_AT_NET_PROTO
+    // override in the environment.
+    let mut sc = NetClient::connect_with(shed_net.local_addr(), proto::VERSION, None)
+        .expect("connect shed client");
+    sc.register("m", &a).expect("register shed matrix");
+    let mut shed_hit = 0u64;
+    for i in 0..shed_n * 2 {
+        if i % 2 == 0 {
+            if sc.spmv_deadline("m", x.clone(), 1).is_err() {
+                shed_hit += 1;
+            }
+        } else {
+            sc.spmv_deadline("m", x.clone(), 60_000_000).expect("ample budget serves");
+        }
+    }
+    let shed_stats = sc.net_stats().unwrap();
+    let shed_rate = shed_hit as f64 / (shed_n * 2) as f64;
+    println!(
+        "  sheds={} served={} shed_rate={shed_rate:.3}",
+        shed_stats.deadline_sheds, shed_stats.requests
+    );
+    assert!(shed_stats.deadline_sheds >= 1, "the expired deadlines never shed: {shed_stats:?}");
+    assert_eq!(shed_stats.deadline_sheds, shed_hit, "every shed surfaced as a client error");
+
     common::write_json(
         "loadgen",
         Json::Obj(vec![
@@ -208,9 +290,14 @@ fn main() {
             ("coalesced_batches".into(), Json::Num(stats.coalesced_batches as f64)),
             ("max_batch".into(), Json::Num(stats.max_batch as f64)),
             ("admission_rejects".into(), Json::Num(stats.admission_rejects as f64)),
+            ("key_interns".into(), Json::Num(interns as f64)),
+            ("deadline_sheds".into(), Json::Num(shed_stats.deadline_sheds as f64)),
+            ("shed_rate".into(), Json::Num(shed_rate)),
         ]),
     );
 
+    drop(sc);
+    shed_net.shutdown();
     drop(control);
     net.shutdown();
 }

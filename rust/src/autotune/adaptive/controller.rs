@@ -20,6 +20,24 @@
 //! swap and calls [`HysteresisController::note_serve`] after every served
 //! call or batch.
 
+/// The telemetry snapshot that justified the most recent flip — captured
+/// at the instant [`HysteresisController::note_serve`] fires, before the
+/// caller mutates the entry, so the decision log records the evidence the
+/// controller actually voted on rather than post-swap state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlipEvidence {
+    /// EW mean of the serving arm at the flip, seconds per call.
+    pub serving_mean: f64,
+    /// EW mean of the rival arm at the flip, seconds per call.
+    pub rival_mean: f64,
+    /// Telemetry samples behind the rival mean.
+    pub rival_samples: u64,
+    /// Windows evaluated up to and including the flipping one.
+    pub windows: u64,
+    /// Consecutive contradicting windows that fired the flip.
+    pub votes: u32,
+}
+
 /// One registered matrix's flip guard.
 #[derive(Clone, Debug)]
 pub struct HysteresisController {
@@ -31,6 +49,7 @@ pub struct HysteresisController {
     votes: u32,
     windows: u64,
     flips: u64,
+    last_evidence: Option<FlipEvidence>,
 }
 
 impl HysteresisController {
@@ -48,6 +67,7 @@ impl HysteresisController {
             votes: 0,
             windows: 0,
             flips: 0,
+            last_evidence: None,
         }
     }
 
@@ -71,18 +91,27 @@ impl HysteresisController {
         }
         self.fill %= self.window;
         self.windows += 1;
-        let contradiction = match (serving_mean, rival) {
-            (Some(s), Some((r, n))) if n >= self.min_rival_samples && s > 0.0 => {
-                r < s * (1.0 - self.deadband)
-            }
-            _ => false,
+        let evidence = match (serving_mean, rival) {
+            (Some(s), Some((r, n))) if n >= self.min_rival_samples && s > 0.0 => Some((s, r, n)),
+            _ => None,
         };
+        let contradiction =
+            matches!(evidence, Some((s, r, _)) if r < s * (1.0 - self.deadband));
         if !contradiction {
             self.votes = 0;
             return false;
         }
         self.votes += 1;
         if self.votes >= self.flip_windows {
+            if let Some((s, r, n)) = evidence {
+                self.last_evidence = Some(FlipEvidence {
+                    serving_mean: s,
+                    rival_mean: r,
+                    rival_samples: n,
+                    windows: self.windows,
+                    votes: self.votes,
+                });
+            }
             self.votes = 0;
             self.flips += 1;
             return true;
@@ -110,6 +139,13 @@ impl HysteresisController {
     /// Flips fired so far.
     pub fn flips(&self) -> u64 {
         self.flips
+    }
+
+    /// The evidence snapshot behind the most recent flip (`None` before
+    /// any flip fired). Read by the decision log immediately after
+    /// [`HysteresisController::note_serve`] returns `true`.
+    pub fn flip_evidence(&self) -> Option<FlipEvidence> {
+        self.last_evidence
     }
 
     /// Serve calls per evaluation window.
@@ -189,6 +225,23 @@ mod tests {
         let mut c = HysteresisController::new(0.1, 4, 3, 1);
         assert!(!c.note_serve(400, Some(1e-3), Some((1e-5, 10))));
         assert_eq!(c.votes(), 1, "one vote per dispatch, however large");
+    }
+
+    #[test]
+    fn flip_evidence_snapshots_the_firing_window() {
+        let mut c = HysteresisController::new(0.15, 4, 2, 3);
+        assert_eq!(c.flip_evidence(), None, "no flip yet");
+        assert!(!c.note_serve(4, Some(1e-3), Some((1e-4, 7))));
+        assert!(c.note_serve(4, Some(2e-3), Some((1.5e-4, 9))));
+        let ev = c.flip_evidence().expect("flip fired");
+        assert_eq!(ev.serving_mean, 2e-3, "evidence is from the firing window");
+        assert_eq!(ev.rival_mean, 1.5e-4);
+        assert_eq!(ev.rival_samples, 9);
+        assert_eq!(ev.windows, 2);
+        assert_eq!(ev.votes, 2);
+        // The snapshot survives the post-flip vote reset.
+        c.reset();
+        assert_eq!(c.flip_evidence(), Some(ev));
     }
 
     #[test]

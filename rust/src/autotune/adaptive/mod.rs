@@ -73,7 +73,7 @@ pub mod explore;
 pub mod learned;
 pub mod telemetry;
 
-pub use controller::HysteresisController;
+pub use controller::{FlipEvidence, HysteresisController};
 pub use explore::ExplorePolicy;
 pub use learned::{bucket_of, BucketStat, LearnedTuning};
 pub use telemetry::{ArmTelemetry, EwmaStats, Telemetry};

@@ -1,0 +1,390 @@
+//! Append-only, replayable log of serving decisions (JSONL).
+//!
+//! Every decision that changes — or deliberately keeps — how a
+//! registered matrix is served emits one [`DecisionRecord`]: the
+//! register-time online decision, the deferred transform build, adaptive
+//! flips, forced replans, split builds, and split vetoes. Each record
+//! carries two things:
+//!
+//! * the **resulting serving state** (kernel, partition, split parts,
+//!   split veto), rendered by the same convention as the stats row
+//!   ([`crate::coordinator::MatrixEntry::reported_serving`]), and
+//! * the **telemetry that justified the decision** — `D_mat`, `D*`, the
+//!   serving/rival arm means and sample counts, and the controller's
+//!   vote/window state at the moment it fired.
+//!
+//! Because every record carries the *post-state*, the log is replayable
+//! by a trivial fold: the last record per matrix **is** the final
+//! serving decision ([`replay`]), with no need to re-run any planner
+//! logic. That makes the log an audit trail ("why did this matrix flip
+//! at 03:14?") and a reproducibility artifact (the acceptance test
+//! replays it against the live registry) at once.
+//!
+//! The log is a cheap cloneable handle over one shared sink: an
+//! in-memory ring of the most recent rendered lines (always on, bounded)
+//! plus an optional append-only JSONL file (`--decision-log <path>`).
+//! Rendering uses [`crate::metrics::Json`], one compact object per line.
+
+use crate::metrics::Json;
+use crate::Result;
+use std::collections::{HashMap, VecDeque};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// How many rendered lines the in-memory ring retains (the file, when
+/// configured, keeps everything).
+const RING_CAPACITY: usize = 1024;
+
+/// What kind of serving decision a record describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecisionEvent {
+    /// The register-time online decision (§2.2 `D_mat` vs `D*`).
+    Register,
+    /// The deferred transformation was built and took over serving.
+    Transform,
+    /// The hysteresis controller (or a forced replan) flipped the
+    /// serving plan between the baseline and the candidate.
+    Flip,
+    /// A forced replan re-ran the online phase.
+    Replan,
+    /// A cross-shard split plan was built and took over serving.
+    Split,
+    /// A split build failed; the entry is pinned to unsplit serving.
+    SplitVeto,
+}
+
+impl DecisionEvent {
+    /// The event's stable wire/JSONL name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DecisionEvent::Register => "register",
+            DecisionEvent::Transform => "transform",
+            DecisionEvent::Flip => "flip",
+            DecisionEvent::Replan => "replan",
+            DecisionEvent::Split => "split",
+            DecisionEvent::SplitVeto => "split_veto",
+        }
+    }
+}
+
+/// One serving decision: the event, the resulting state, and the
+/// telemetry that justified it.
+#[derive(Clone, Debug)]
+pub struct DecisionRecord {
+    /// What happened.
+    pub event: DecisionEvent,
+    /// Registry key of the matrix.
+    pub matrix: String,
+    /// Serving implementation after the event, rendered by the stats-row
+    /// convention (unsplit baseline serving reports the paper's CRS
+    /// switch).
+    pub kernel: String,
+    /// Intra-pool partition strategy after the event (`"-"` for
+    /// unpartitioned or split-served entries).
+    pub partition: &'static str,
+    /// Row blocks of the cached split plan after the event (0 = unsplit).
+    pub split_parts: u64,
+    /// Whether split serving is vetoed after the event.
+    pub split_vetoed: bool,
+    /// Whether the decision transforms (serves a non-CRS plan).
+    pub transform: bool,
+    /// The matrix's `D_mat` (row-length variation coefficient).
+    pub d_mat: f64,
+    /// The `D*` threshold compared against (NaN renders as null).
+    pub d_star: f64,
+    /// Measured per-call mean of the serving arm, seconds (None until
+    /// telemetry exists).
+    pub serving_mean: Option<f64>,
+    /// Measured per-call mean of the rival arm, seconds.
+    pub rival_mean: Option<f64>,
+    /// Telemetry samples behind `rival_mean`.
+    pub rival_samples: u64,
+    /// Controller contradiction votes at the moment of the event.
+    pub votes: u64,
+    /// Controller windows evaluated at the moment of the event.
+    pub windows: u64,
+    /// Free-text justification (e.g. the threshold comparison, or a
+    /// build-failure message).
+    pub detail: String,
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::Num(x),
+        None => Json::Null,
+    }
+}
+
+impl DecisionRecord {
+    /// Render as one compact JSONL line (no trailing newline).
+    fn render(&self, seq: u64) -> String {
+        Json::Obj(vec![
+            ("seq".into(), Json::Num(seq as f64)),
+            ("event".into(), Json::Str(self.event.name().into())),
+            ("matrix".into(), Json::Str(self.matrix.clone())),
+            ("kernel".into(), Json::Str(self.kernel.clone())),
+            ("partition".into(), Json::Str(self.partition.into())),
+            ("split_parts".into(), Json::Num(self.split_parts as f64)),
+            ("split_vetoed".into(), Json::Bool(self.split_vetoed)),
+            ("transform".into(), Json::Bool(self.transform)),
+            ("d_mat".into(), Json::Num(self.d_mat)),
+            ("d_star".into(), Json::Num(self.d_star)),
+            ("serving_mean".into(), opt_num(self.serving_mean)),
+            ("rival_mean".into(), opt_num(self.rival_mean)),
+            ("rival_samples".into(), Json::Num(self.rival_samples as f64)),
+            ("votes".into(), Json::Num(self.votes as f64)),
+            ("windows".into(), Json::Num(self.windows as f64)),
+            ("detail".into(), Json::Str(self.detail.clone())),
+        ])
+        .render()
+    }
+}
+
+struct Inner {
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    path: Option<PathBuf>,
+    ring: VecDeque<String>,
+    seq: u64,
+}
+
+/// Cheap cloneable handle over one shared decision-log sink. Cloning
+/// shares the sink (the sharded server clones its config per shard; all
+/// shards append to the same log).
+#[derive(Clone)]
+pub struct DecisionLog {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl std::fmt::Debug for DecisionLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("DecisionLog")
+            .field("path", &inner.path)
+            .field("records", &inner.seq)
+            .finish()
+    }
+}
+
+impl DecisionLog {
+    /// Ring-only log: the most recent [`RING_CAPACITY`] rendered lines
+    /// are retained for the `DecisionLog` wire request; nothing is
+    /// written to disk.
+    pub fn in_memory() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner { file: None, path: None, ring: VecDeque::new(), seq: 0 })),
+        }
+    }
+
+    /// Ring + append-only JSONL file at `path` (created if missing,
+    /// appended to if present — the log is append-only across restarts).
+    pub fn to_path(path: &Path) -> Result<Self> {
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self {
+            inner: Arc::new(Mutex::new(Inner {
+                file: Some(std::io::BufWriter::new(file)),
+                path: Some(path.to_path_buf()),
+                ring: VecDeque::new(),
+                seq: 0,
+            })),
+        })
+    }
+
+    /// Append one record: rendered once, pushed into the ring, and —
+    /// when a file is configured — written and flushed as one JSONL
+    /// line. File write errors are swallowed (the log is telemetry;
+    /// serving must not fail on a full disk), but the ring always keeps
+    /// the line.
+    pub fn record(&self, rec: &DecisionRecord) {
+        let mut inner = self.inner.lock().unwrap();
+        let line = rec.render(inner.seq);
+        inner.seq += 1;
+        if inner.ring.len() == RING_CAPACITY {
+            inner.ring.pop_front();
+        }
+        inner.ring.push_back(line.clone());
+        if let Some(f) = inner.file.as_mut() {
+            let _ = writeln!(f, "{line}");
+            let _ = f.flush();
+        }
+    }
+
+    /// The most recent `n` rendered lines, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner.ring.iter().rev().take(n).rev().cloned().collect()
+    }
+
+    /// Total records appended over this handle's lifetime.
+    pub fn len(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Whether no record has been appended yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The configured file path, if any.
+    pub fn path(&self) -> Option<PathBuf> {
+        self.inner.lock().unwrap().path.clone()
+    }
+}
+
+/// The serving decision a replayed log arrives at for one matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplayedDecision {
+    /// Serving implementation (stats-row convention), rendered as text.
+    pub kernel: String,
+    /// Intra-pool partition strategy.
+    pub partition: String,
+    /// Split row blocks (0 = unsplit).
+    pub split_parts: u64,
+    /// Whether split serving is vetoed.
+    pub split_vetoed: bool,
+}
+
+/// Extract `"key":"string"` from one rendered line. Only used on lines
+/// this module rendered itself, so the minimal scan (no escape handling
+/// beyond what registry keys can contain) is sound.
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let end = line[start..].find('"')?;
+    Some(line[start..start + end].to_string())
+}
+
+/// Extract `"key":<number>` from one rendered line.
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find([',', '}'])?;
+    rest[..end].parse().ok()
+}
+
+/// Extract `"key":true|false` from one rendered line.
+fn bool_field(line: &str, key: &str) -> Option<bool> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    Some(line[start..].starts_with("true"))
+}
+
+/// Replay rendered JSONL lines into the final serving decision per
+/// matrix: because every record carries its post-state, the fold is
+/// "last record per matrix wins". Lines that are not decision records
+/// (blank, or hand-edited) are skipped.
+pub fn replay<'a>(lines: impl IntoIterator<Item = &'a str>) -> HashMap<String, ReplayedDecision> {
+    let mut out = HashMap::new();
+    for line in lines {
+        let Some(matrix) = str_field(line, "matrix") else { continue };
+        let Some(kernel) = str_field(line, "kernel") else { continue };
+        let Some(partition) = str_field(line, "partition") else { continue };
+        let decision = ReplayedDecision {
+            kernel,
+            partition,
+            split_parts: num_field(line, "split_parts").unwrap_or(0.0) as u64,
+            split_vetoed: bool_field(line, "split_vetoed").unwrap_or(false),
+        };
+        out.insert(matrix, decision);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(event: DecisionEvent, matrix: &str, kernel: &str) -> DecisionRecord {
+        DecisionRecord {
+            event,
+            matrix: matrix.into(),
+            kernel: kernel.into(),
+            partition: "even",
+            split_parts: 0,
+            split_vetoed: false,
+            transform: kernel != "csr_seq",
+            d_mat: 0.25,
+            d_star: 3.1,
+            serving_mean: Some(1.5e-6),
+            rival_mean: None,
+            rival_samples: 0,
+            votes: 0,
+            windows: 0,
+            detail: "D_mat 0.250 < D* 3.100".into(),
+        }
+    }
+
+    #[test]
+    fn records_render_and_replay_to_the_last_state_per_matrix() {
+        let log = DecisionLog::in_memory();
+        log.record(&rec(DecisionEvent::Register, "a", "csr_seq"));
+        log.record(&rec(DecisionEvent::Register, "b", "csr_seq"));
+        log.record(&rec(DecisionEvent::Transform, "a", "ell_row_outer"));
+        assert_eq!(log.len(), 3);
+        let lines = log.tail(100);
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"event\":\"register\""));
+        assert!(lines[2].contains("\"kernel\":\"ell_row_outer\""));
+
+        let replayed = replay(lines.iter().map(String::as_str));
+        assert_eq!(replayed["a"].kernel, "ell_row_outer");
+        assert_eq!(replayed["b"].kernel, "csr_seq");
+        assert_eq!(replayed["a"].partition, "even");
+        assert!(!replayed["a"].split_vetoed);
+        assert_eq!(replayed["a"].split_parts, 0);
+    }
+
+    #[test]
+    fn tail_is_bounded_and_ordered() {
+        let log = DecisionLog::in_memory();
+        for i in 0..(RING_CAPACITY + 10) {
+            log.record(&rec(DecisionEvent::Flip, &format!("m{i}"), "csr_seq"));
+        }
+        let lines = log.tail(5);
+        assert_eq!(lines.len(), 5);
+        // Oldest-first within the tail; the newest record is last.
+        assert!(lines[4].contains(&format!("\"matrix\":\"m{}\"", RING_CAPACITY + 9)));
+        assert_eq!(log.len(), (RING_CAPACITY + 10) as u64);
+        assert_eq!(log.tail(usize::MAX).len(), RING_CAPACITY, "ring is bounded");
+    }
+
+    #[test]
+    fn file_sink_appends_jsonl_that_replays_identically() {
+        let path = std::env::temp_dir()
+            .join(format!("spmv-at-decision-log-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let log = DecisionLog::to_path(&path).unwrap();
+            log.record(&rec(DecisionEvent::Register, "a", "csr_seq"));
+            log.record(&rec(DecisionEvent::Flip, "a", "ell_row_inner"));
+            assert_eq!(log.path().as_deref(), Some(path.as_path()));
+        }
+        // Reopening appends rather than truncating.
+        {
+            let log = DecisionLog::to_path(&path).unwrap();
+            log.record(&rec(DecisionEvent::Replan, "a", "csr_seq"));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        let replayed = replay(text.lines());
+        assert_eq!(replayed["a"].kernel, "csr_seq", "the last record wins");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_skips_foreign_lines_and_handles_nulls() {
+        let mut r = rec(DecisionEvent::Register, "x", "csr_seq");
+        r.serving_mean = None;
+        r.d_star = f64::NAN; // renders as null
+        let log = DecisionLog::in_memory();
+        log.record(&r);
+        let mut lines = log.tail(10);
+        lines.insert(0, "not json".to_string());
+        lines.push(String::new());
+        let replayed = replay(lines.iter().map(String::as_str));
+        assert_eq!(replayed.len(), 1);
+        assert_eq!(replayed["x"].kernel, "csr_seq");
+        assert!(log.tail(10)[0].contains("\"d_star\":null"));
+    }
+}

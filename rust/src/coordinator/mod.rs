@@ -42,10 +42,12 @@
 //! Python never appears here: the tuning table is a text file, the XLA
 //! artifacts are pre-compiled HLO.
 
+pub mod decision_log;
 pub mod registry;
 pub mod server;
 pub mod shards;
 
+pub use decision_log::{DecisionEvent, DecisionLog, DecisionRecord};
 pub use registry::{AtState, EntryStats, MatrixEntry};
 pub use server::{Client, Request, Server, SolverKind};
 pub use shards::{PlanShards, ShardedPlanner, SplitPlan, SplitThreshold};
@@ -105,6 +107,11 @@ pub struct CoordinatorConfig {
     /// sweeps (`SPMV_AT_TRSV_PAR`, default: the level-width auto
     /// threshold).
     pub trsv_par: crate::precond::TrsvPar,
+    /// Append-only, replayable serving-decision log
+    /// ([`decision_log::DecisionLog`], `--decision-log`). `None` disables
+    /// recording; the handle is `Arc`-backed, so the sharded server's
+    /// per-shard config clones all append to one log.
+    pub decision_log: Option<DecisionLog>,
 }
 
 impl CoordinatorConfig {
@@ -135,6 +142,7 @@ impl CoordinatorConfig {
             learned: None,
             precond: crate::precond::configured_precond(),
             trsv_par: crate::precond::TrsvPar::from_env(),
+            decision_log: None,
         }
     }
 }
@@ -237,9 +245,90 @@ impl Coordinator {
             ad.rival_dead = !candidate_admitted;
             entry.adaptive = Some(ad);
         }
+        Self::log_decision(
+            self.cfg.decision_log.as_ref(),
+            &entry,
+            DecisionEvent::Register,
+            format!(
+                "D_mat {:.4} vs D* {:.4}: transform={} chosen={} (candidate {}, admitted={})",
+                entry.decision.d_mat,
+                entry.decision.d_star,
+                entry.decision.transform,
+                entry.decision.chosen,
+                candidate,
+                candidate_admitted,
+            ),
+        );
         let stats = entry.stats();
         self.entries.insert(name.to_string(), entry);
         Ok(stats)
+    }
+
+    /// Append one record to the decision log (no-op without one): the
+    /// entry's **post-event** serving state by the stats-row convention —
+    /// so replaying the log reproduces [`MatrixEntry::stats`] exactly —
+    /// plus the telemetry that justified the event. Flip events carry the
+    /// controller's [`crate::autotune::adaptive::FlipEvidence`] snapshot
+    /// (the means the vote actually fired on); every other event carries
+    /// the live telemetry at the moment it was recorded.
+    fn log_decision(
+        log: Option<&DecisionLog>,
+        entry: &MatrixEntry,
+        event: DecisionEvent,
+        detail: String,
+    ) {
+        let Some(log) = log else { return };
+        let flip_ev = if event == DecisionEvent::Flip {
+            entry.adaptive.as_ref().and_then(|ad| ad.controller.flip_evidence())
+        } else {
+            None
+        };
+        let (serving_mean, rival_mean, rival_samples, votes, windows) =
+            match (entry.adaptive.as_ref(), flip_ev) {
+                (_, Some(ev)) => (
+                    Some(ev.serving_mean),
+                    Some(ev.rival_mean),
+                    ev.rival_samples,
+                    u64::from(ev.votes),
+                    ev.windows,
+                ),
+                (Some(ad), None) => {
+                    let serving_imp = match &entry.state {
+                        AtState::Baseline => entry.baseline.implementation(),
+                        AtState::Transformed { plan, .. } => plan.implementation(),
+                    };
+                    let rival_imp = if matches!(entry.state, AtState::Baseline) {
+                        entry.candidate
+                    } else {
+                        entry.baseline.implementation()
+                    };
+                    (
+                        ad.telemetry.mean(serving_imp),
+                        ad.telemetry.mean(rival_imp),
+                        ad.telemetry.samples(rival_imp),
+                        u64::from(ad.controller.votes()),
+                        ad.controller.windows(),
+                    )
+                }
+                (None, None) => (None, None, 0, 0, 0),
+            };
+        log.record(&DecisionRecord {
+            event,
+            matrix: entry.name.clone(),
+            kernel: entry.reported_serving().name().to_string(),
+            partition: entry.reported_partition(),
+            split_parts: entry.split.as_ref().map_or(0, SplitPlan::parts) as u64,
+            split_vetoed: entry.split_vetoed,
+            transform: entry.decision.transform,
+            d_mat: entry.decision.d_mat,
+            d_star: entry.decision.d_star,
+            serving_mean,
+            rival_mean,
+            rival_samples,
+            votes,
+            windows,
+            detail,
+        });
     }
 
     /// The online decision for a matrix: the factory table's §2.2
@@ -297,7 +386,12 @@ impl Coordinator {
         // routing stays out of the way there.
         let xla_preferred = self.cfg.ell_exec == EllExec::XlaPreferred && self.xla.is_some();
         if !xla_preferred {
-            Self::trigger_split(self.cfg.split, &self.planner, entry);
+            Self::trigger_split(
+                self.cfg.split,
+                &self.planner,
+                entry,
+                self.cfg.decision_log.as_ref(),
+            );
             if let Some(split) = entry.split.as_mut() {
                 let t0 = std::time::Instant::now();
                 split.execute(x, &mut y)?;
@@ -311,7 +405,7 @@ impl Coordinator {
                 return Ok(y);
             }
         }
-        Self::trigger_transform(&self.planner, entry);
+        Self::trigger_transform(&self.planner, entry, self.cfg.decision_log.as_ref());
 
         let t0 = std::time::Instant::now();
         let transformed = match &mut entry.state {
@@ -343,7 +437,16 @@ impl Coordinator {
         let dt = t0.elapsed().as_secs_f64();
         entry.record_call(transformed, dt);
         if self.cfg.adaptive.enabled {
-            Self::adaptive_step(&self.planner, &mut self.learned, entry, x, None, 1, dt);
+            Self::adaptive_step(
+                &self.planner,
+                &mut self.learned,
+                entry,
+                x,
+                None,
+                1,
+                dt,
+                self.cfg.decision_log.as_ref(),
+            );
         }
         Ok(y)
     }
@@ -363,6 +466,7 @@ impl Coordinator {
         threshold: shards::SplitThreshold,
         planner: &ShardedPlanner,
         entry: &mut MatrixEntry,
+        log: Option<&DecisionLog>,
     ) {
         if entry.split.is_some()
             || entry.split_vetoed
@@ -386,9 +490,24 @@ impl Coordinator {
                 if matches!(entry.state, AtState::Transformed { .. }) {
                     entry.state = AtState::Baseline;
                 }
+                let parts = split.parts();
                 entry.split = Some(split);
+                Self::log_decision(
+                    log,
+                    entry,
+                    DecisionEvent::Split,
+                    format!("cross-shard split built: {parts} blocks serving {imp}"),
+                );
             }
-            Err(_) => entry.split_vetoed = true,
+            Err(e) => {
+                entry.split_vetoed = true;
+                Self::log_decision(
+                    log,
+                    entry,
+                    DecisionEvent::SplitVeto,
+                    format!("split build for {imp} failed ({e}); pinned to unsplit serving"),
+                );
+            }
         }
     }
 
@@ -396,16 +515,33 @@ impl Coordinator {
     /// yet done, building the plan on the entry's shard. On failure
     /// (e.g. an ELL overflow the predictor missed) the entry is pinned to
     /// CRS.
-    fn trigger_transform(planner: &ShardedPlanner, entry: &mut MatrixEntry) {
+    fn trigger_transform(
+        planner: &ShardedPlanner,
+        entry: &mut MatrixEntry,
+        log: Option<&DecisionLog>,
+    ) {
         if entry.decision.transform && matches!(entry.state, AtState::Baseline) {
-            match planner.planner(entry.shard).plan_for(&entry.csr, entry.decision.chosen) {
+            let target = entry.decision.chosen;
+            match planner.planner(entry.shard).plan_for(&entry.csr, target) {
                 Ok(plan) => {
                     let t_trans = plan.transform_seconds();
                     entry.state = AtState::Transformed { plan, t_trans };
+                    Self::log_decision(
+                        log,
+                        entry,
+                        DecisionEvent::Transform,
+                        format!("deferred transform built: {target} in {t_trans:.3e}s"),
+                    );
                 }
-                Err(_) => {
+                Err(e) => {
                     entry.decision.transform = false;
                     entry.decision.chosen = Implementation::CsrSeq;
+                    Self::log_decision(
+                        log,
+                        entry,
+                        DecisionEvent::Transform,
+                        format!("transform to {target} failed ({e}); pinned to CRS"),
+                    );
                 }
             }
         }
@@ -428,6 +564,7 @@ impl Coordinator {
         batch: Option<&[Vec<Value>]>,
         k: u64,
         serve_seconds: f64,
+        log: Option<&DecisionLog>,
     ) {
         let Some(ad) = entry.adaptive.as_mut() else { return };
         ad.explore.note_serve(serve_seconds);
@@ -498,8 +635,23 @@ impl Coordinator {
             ad.telemetry.mean(rival_imp).map(|m| (m, ad.telemetry.samples(rival_imp)));
         if ad.controller.note_serve(k, serving_mean, rival) {
             // Flip failures (transform blow-up) mark the rival dead inside
-            // apply_flip; the serving path is unaffected either way.
-            let _ = Self::apply_flip(planner, learned, entry);
+            // apply_flip; the serving path is unaffected either way. Both
+            // outcomes are logged — a rejected flip is a decision too, and
+            // its record's (unchanged) post-state keeps the replay exact.
+            match Self::apply_flip(planner, learned, entry) {
+                Ok(()) => Self::log_decision(
+                    log,
+                    entry,
+                    DecisionEvent::Flip,
+                    "hysteresis controller fired; serving plan swapped".to_string(),
+                ),
+                Err(e) => Self::log_decision(
+                    log,
+                    entry,
+                    DecisionEvent::Flip,
+                    format!("hysteresis controller fired but the flip was rejected: {e}"),
+                ),
+            }
         }
     }
 
@@ -596,11 +748,25 @@ impl Coordinator {
                 entry.decision.chosen = Implementation::CsrSeq;
             }
             entry.split = None;
-            Self::trigger_split(self.cfg.split, &self.planner, entry);
+            Self::trigger_split(
+                self.cfg.split,
+                &self.planner,
+                entry,
+                self.cfg.decision_log.as_ref(),
+            );
             entry.replans += 1;
             if let Some(ad) = entry.adaptive.as_mut() {
                 ad.controller.reset();
             }
+            Self::log_decision(
+                self.cfg.decision_log.as_ref(),
+                entry,
+                DecisionEvent::Replan,
+                format!(
+                    "forced replan rebuilt the split: transform={} chosen={}",
+                    entry.decision.transform, entry.decision.chosen
+                ),
+            );
             return Ok(entry.stats());
         }
         // A forced replan re-decides, so a previously failed split build
@@ -623,6 +789,15 @@ impl Coordinator {
         if let Some(ad) = entry.adaptive.as_mut() {
             ad.controller.reset();
         }
+        Self::log_decision(
+            self.cfg.decision_log.as_ref(),
+            entry,
+            DecisionEvent::Replan,
+            format!(
+                "forced replan: transform={} chosen={}",
+                entry.decision.transform, entry.decision.chosen
+            ),
+        );
         Ok(entry.stats())
     }
 
@@ -697,7 +872,7 @@ impl Coordinator {
                 entry.csr.n_cols()
             );
         }
-        Self::trigger_split(self.cfg.split, &self.planner, entry);
+        Self::trigger_split(self.cfg.split, &self.planner, entry, self.cfg.decision_log.as_ref());
         let mut ys = vec![vec![0.0; entry.csr.n_rows()]; xs.len()];
         if let Some(split) = entry.split.as_mut() {
             let t0 = std::time::Instant::now();
@@ -710,7 +885,7 @@ impl Coordinator {
             // Split-served entries skip the adaptive step (see `spmv`).
             return Ok(ys);
         }
-        Self::trigger_transform(&self.planner, entry);
+        Self::trigger_transform(&self.planner, entry, self.cfg.decision_log.as_ref());
         let t0 = std::time::Instant::now();
         let transformed = match &mut entry.state {
             AtState::Baseline => {
@@ -729,7 +904,16 @@ impl Coordinator {
             // window; exploration shadows the same batch through the
             // rival's tiled SpMM.
             let k = xs.len() as u64;
-            Self::adaptive_step(&self.planner, &mut self.learned, entry, &xs[0], Some(xs), k, dt);
+            Self::adaptive_step(
+                &self.planner,
+                &mut self.learned,
+                entry,
+                &xs[0],
+                Some(xs),
+                k,
+                dt,
+                self.cfg.decision_log.as_ref(),
+            );
         }
         Ok(ys)
     }
@@ -1007,6 +1191,34 @@ mod tests {
         assert_eq!(c.serving_format("band"), Some(FormatKind::Ell));
         assert_eq!(s.replans, 2);
         assert_eq!(c.spmv("band", &x).unwrap(), first);
+    }
+
+    #[test]
+    fn decision_log_replays_to_the_live_serving_state() {
+        let mut cfg = CoordinatorConfig::new(tuning(Some(3.1)));
+        cfg.threads = 2;
+        let log = DecisionLog::in_memory();
+        cfg.decision_log = Some(log.clone());
+        let mut c = Coordinator::new(cfg);
+        let mut rng = Rng::new(21);
+        c.register("band", banded_circulant(&mut rng, 96, &[-1, 0, 1])).unwrap();
+        c.register("id", Csr::identity(16)).unwrap();
+        c.spmv("band", &vec![1.0; 96]).unwrap(); // fires the deferred transform
+        c.spmv("id", &vec![1.0; 16]).unwrap();
+        c.replan("id").unwrap();
+        let lines = log.tail(usize::MAX);
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"register\"")));
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"transform\"")));
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"replan\"")));
+        // Folding the log reproduces the stats row for every matrix.
+        let replayed = decision_log::replay(lines.iter().map(String::as_str));
+        for s in c.stats() {
+            let r = &replayed[&s.name];
+            assert_eq!(r.kernel, s.serving.name(), "kernel for '{}'", s.name);
+            assert_eq!(r.partition, s.partition, "partition for '{}'", s.name);
+            assert_eq!(r.split_parts as usize, s.split_parts, "split for '{}'", s.name);
+            assert!(!r.split_vetoed);
+        }
     }
 
     #[test]

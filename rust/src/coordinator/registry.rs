@@ -301,6 +301,33 @@ pub struct EntryStats {
 }
 
 impl MatrixEntry {
+    /// The serving implementation by the stats-row convention.
+    ///
+    /// Deliberately NOT `serving_imp()`: the unsplit baseline state
+    /// reports as the paper's CRS switch (`CsrSeq`) whichever CRS kernel
+    /// the baseline plan runs, while the telemetry keys by the kernel
+    /// that actually executed. Both [`MatrixEntry::stats`] and the
+    /// decision log render this convention, so replaying the log
+    /// reproduces the stats row exactly.
+    pub fn reported_serving(&self) -> Implementation {
+        match (&self.split, &self.state) {
+            (Some(split), _) => split.implementation(),
+            (None, AtState::Baseline) => Implementation::CsrSeq,
+            (None, AtState::Transformed { plan, .. }) => plan.implementation(),
+        }
+    }
+
+    /// The intra-pool partition strategy by the stats-row convention
+    /// (`"-"` for split-served entries, whose row blocks partition the
+    /// work instead).
+    pub fn reported_partition(&self) -> &'static str {
+        match (&self.split, &self.state) {
+            (Some(_), _) => "-",
+            (None, AtState::Baseline) => self.baseline.partition_strategy(),
+            (None, AtState::Transformed { plan, .. }) => plan.partition_strategy(),
+        }
+    }
+
     /// Produce the report row. The baseline state reports as the paper's
     /// CRS switch regardless of which CRS kernel the baseline plan runs.
     pub fn stats(&self) -> EntryStats {
@@ -319,20 +346,8 @@ impl MatrixEntry {
             nnz: self.csr.nnz(),
             d_mat: self.decision.d_mat,
             shard: self.shard,
-            // Deliberately NOT `serving_imp()`: the unsplit baseline
-            // state reports as the paper's CRS switch (`CsrSeq`)
-            // whichever CRS kernel the baseline plan runs, while the
-            // telemetry keys by the kernel that actually executed.
-            serving: match (&self.split, &self.state) {
-                (Some(split), _) => split.implementation(),
-                (None, AtState::Baseline) => Implementation::CsrSeq,
-                (None, AtState::Transformed { plan, .. }) => plan.implementation(),
-            },
-            partition: match (&self.split, &self.state) {
-                (Some(_), _) => "-",
-                (None, AtState::Baseline) => self.baseline.partition_strategy(),
-                (None, AtState::Transformed { plan, .. }) => plan.partition_strategy(),
-            },
+            serving: self.reported_serving(),
+            partition: self.reported_partition(),
             calls: self.calls,
             transformed_calls: self.transformed_calls,
             t_trans: self.t_trans(),

@@ -415,6 +415,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     apply_precond_flag(args, &mut cfg)?;
     // SPMV_AT_PARTITION (default: skew pick) unless --partition overrides.
     apply_partition_flag(args)?;
+    // --decision-log <path>: append every serving decision (register,
+    // transform, flip, replan, split, split veto) as JSONL. The
+    // in-memory ring — and with it the DecisionLog wire request — is
+    // always on; the flag only adds the append-only file.
+    let decision_log = match args.get("decision-log") {
+        Some(p) => spmv_at::coordinator::DecisionLog::to_path(Path::new(p))?,
+        None => spmv_at::coordinator::DecisionLog::in_memory(),
+    };
+    cfg.decision_log = Some(decision_log.clone());
+    if let Some(p) = decision_log.path() {
+        println!("# decision log appending to {}", p.display());
+    }
     // Attach XLA runtime if artifacts exist (XLA serving is single-loop:
     // the artifact handle is not shared across shard coordinators).
     let art = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -463,21 +475,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => Serving::Local(srv),
         Some(spec) => {
             let addr = spmv_at::net::parse_listen(spec)?;
-            let net = spmv_at::net::NetServer::start(
-                srv,
-                client.clone(),
-                &addr,
-                spmv_at::net::NetConfig::default(),
-            )?;
+            let net_cfg = spmv_at::net::NetConfig {
+                decision_log: Some(decision_log.clone()),
+                ..spmv_at::net::NetConfig::default()
+            };
+            let net = spmv_at::net::NetServer::start(srv, client.clone(), &addr, net_cfg)?;
             println!(
-                "# listening on {} (protocol v{}, docs/PROTOCOL.md)",
+                "# listening on {} (protocol v{}..v{}, docs/PROTOCOL.md)",
                 net.local_addr(),
+                spmv_at::net::proto::MIN_VERSION,
                 spmv_at::net::proto::VERSION
             );
             Serving::Net(net)
         }
     };
-    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | spmm <name> <batch> | stats | netstats | replan <name> | evict <name> | quit");
+    println!("# commands: register <name> <table1-name> [scale] | spmv <name> | spmm <name> <batch> | stats | netstats | decisions [n] | replan <name> | evict <name> | quit");
     let stdin = std::io::stdin();
     let mut explicit_quit = false;
     for line in stdin.lock().lines() {
@@ -582,7 +594,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     let s = net.counters().snapshot();
                     println!(
                         "sessions={}/{} batches={} requests={} coalesced={}/{} rejects={} \
-                         max_batch={} factor={:.2}",
+                         sheds={} max_batch={} factor={:.2}",
                         s.sessions_open,
                         s.sessions_total,
                         s.batches,
@@ -590,11 +602,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         s.coalesced_batches,
                         s.coalesced_requests,
                         s.admission_rejects,
+                        s.deadline_sheds,
                         s.max_batch,
                         net.counters().coalescing_factor()
                     );
                 }
             },
+            ["decisions", rest @ ..] => {
+                let n: usize = rest.first().and_then(|v| v.parse().ok()).unwrap_or(20);
+                let lines = decision_log.tail(n);
+                if lines.is_empty() {
+                    println!("# no serving decisions recorded yet");
+                }
+                for l in lines {
+                    println!("{l}");
+                }
+            }
             ["replan", name] => match client.replan(name) {
                 Ok(s) => println!("ok serving={} replans={}", s.serving, s.replans),
                 Err(e) => println!("! {e}"),
@@ -707,10 +730,15 @@ fn usage() -> ! {
          \x20                  unix:<path>, tcp:<host>:<port>, or <host>:<port>,\n\
          \x20                  coalescing concurrent single-vector requests into\n\
          \x20                  batches (overrides SPMV_AT_LISTEN; docs/PROTOCOL.md)\n\
+         \x20 --decision-log <path> (serve) append every serving decision\n\
+         \x20                  (register, transform, flip, replan, split, veto) as\n\
+         \x20                  replayable JSONL; the DecisionLog wire request serves\n\
+         \x20                  the in-memory tail either way\n\
          environment: SPMV_AT_THREADS, SPMV_AT_SHARDS, SPMV_AT_BATCH_TILE,\n\
          \x20 SPMV_AT_ADAPTIVE, SPMV_AT_SPLIT_ROWS, SPMV_AT_LISTEN,\n\
          \x20 SPMV_AT_PARTITION=even|nnz|merge|auto,\n\
-         \x20 SPMV_AT_NET_QUEUE, SPMV_AT_COALESCE_WAIT_US,\n\
+         \x20 SPMV_AT_NET_QUEUE, SPMV_AT_COALESCE_WAIT_US, SPMV_AT_NET_AUTH,\n\
+         \x20 SPMV_AT_NET_QUOTA_REQS, SPMV_AT_NET_QUOTA_BYTES, SPMV_AT_NET_PROTO,\n\
          \x20 SPMV_AT_PRECOND=none|jacobi|symgs, SPMV_AT_TRSV_PAR=auto|never|always|<width>,\n\
          \x20 SPMV_AT_TOPOLOGY=<sockets>:<cores> (see docs/TUNING.md)\n\
          examples:\n\

@@ -16,19 +16,26 @@
 //! batch, new arrivals accumulate in the queue and the next drain picks
 //! them all up. [`NetConfig::coalesce_wait`](super::NetConfig) can add a
 //! deliberate post-first-arrival wait for latency-tolerant, throughput-
-//! hungry deployments (default 0).
+//! hungry deployments (default 0). The wait is interruptible: it is a
+//! `recv_timeout` loop on the ingress channel, so arrivals mid-wait join
+//! the batch immediately and dropping the [`Ingress`] (shutdown) cuts
+//! the wait short instead of stalling a full wait per shard.
 //!
 //! Backpressure is explicit and non-blocking: `submit` uses `try_send`,
 //! and a full queue is an admission reject — the session answers the
 //! client with `Busy` instead of parking the socket reader on a queue
-//! that may stay full.
+//! that may stay full. Deadlines are enforced at drain time: a request
+//! whose deadline has already expired when the coalescer assembles the
+//! batch is shed ([`ServeOutcome::Shed`], counted in
+//! [`NetCounters::deadline_sheds`]) rather than burning a batch slot on
+//! a result the client has stopped waiting for.
 
 use crate::coordinator::shards::route_key;
 use crate::coordinator::Client;
 use crate::{Result, Value};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// `SPMV_AT_NET_QUEUE` — ingress queue depth per shard (default 256,
 /// floor 1). Requests beyond this bound are refused with `Busy`.
@@ -54,9 +61,9 @@ pub fn configured_coalesce_wait() -> Duration {
     )
 }
 
-/// Shared serving-front counters (sessions, batches, admission rejects).
-/// All loads/stores are relaxed: these are monotonic telemetry, not
-/// synchronization.
+/// Shared serving-front counters (sessions, batches, admission rejects,
+/// deadline sheds). All loads/stores are relaxed: these are monotonic
+/// telemetry, not synchronization.
 #[derive(Debug, Default)]
 pub struct NetCounters {
     /// Sessions currently open.
@@ -75,6 +82,14 @@ pub struct NetCounters {
     pub admission_rejects: AtomicU64,
     /// Largest single dispatch so far.
     pub max_batch: AtomicU64,
+    /// Requests shed at drain time because their deadline had expired.
+    pub deadline_sheds: AtomicU64,
+    /// Fresh per-session key interns (not on the wire). Sessions intern
+    /// each matrix name into an `Arc<str>` once; the coalescer hot path
+    /// then clones the `Arc` instead of allocating a `String` per
+    /// request, and the loadgen bench asserts this stays O(sessions ×
+    /// keys), not O(requests).
+    pub key_interns: AtomicU64,
 }
 
 impl NetCounters {
@@ -101,15 +116,30 @@ impl NetCounters {
             coalesced_requests: self.coalesced_requests.load(Ordering::Relaxed),
             admission_rejects: self.admission_rejects.load(Ordering::Relaxed),
             max_batch: self.max_batch.load(Ordering::Relaxed),
+            deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
         }
     }
 }
 
-/// One queued single-vector request waiting to be coalesced.
+/// What happened to one queued request.
+#[derive(Debug)]
+pub enum ServeOutcome {
+    /// The batch ran; this is the request's slice of the result (or the
+    /// serving error).
+    Done(Result<Vec<Value>>),
+    /// The request's deadline expired before the coalescer drained it;
+    /// no kernel ran for it. The session answers
+    /// [`super::proto::ERR_DEADLINE_EXCEEDED`].
+    Shed,
+}
+
+/// One queued single-vector request waiting to be coalesced. The key is
+/// a session-interned `Arc<str>` so admission never allocates.
 struct Pending {
-    key: String,
+    key: Arc<str>,
     x: Vec<Value>,
-    resp: mpsc::Sender<Result<Vec<Value>>>,
+    resp: mpsc::Sender<ServeOutcome>,
+    deadline: Option<Instant>,
 }
 
 /// Cheap, cloneable submission front over the per-shard ingress queues.
@@ -123,13 +153,21 @@ pub struct Ingress {
 }
 
 impl Ingress {
-    /// Queue a single-vector request. Returns the channel the result
-    /// will arrive on, or `None` if the shard's queue is full (an
-    /// admission reject — reply `Busy`, do not block).
-    pub fn submit(&self, key: &str, x: Vec<Value>) -> Option<mpsc::Receiver<Result<Vec<Value>>>> {
+    /// Queue a single-vector request. `deadline` is the instant after
+    /// which the coalescer sheds instead of serving it (`None` = no
+    /// deadline). Returns the channel the outcome will arrive on, or
+    /// `None` if the shard's queue is full (an admission reject — reply
+    /// `Busy`, do not block). The key is cloned by `Arc`, never
+    /// reallocated, on this hot path.
+    pub fn submit(
+        &self,
+        key: &Arc<str>,
+        x: Vec<Value>,
+        deadline: Option<Instant>,
+    ) -> Option<mpsc::Receiver<ServeOutcome>> {
         let (resp, rx) = mpsc::channel();
         let shard = route_key(key, self.txs.len()) as usize;
-        match self.txs[shard].try_send(Pending { key: key.to_string(), x, resp }) {
+        match self.txs[shard].try_send(Pending { key: Arc::clone(key), x, resp, deadline }) {
             Ok(()) => Some(rx),
             Err(mpsc::TrySendError::Full(_)) => {
                 self.counters.admission_rejects.fetch_add(1, Ordering::Relaxed);
@@ -138,7 +176,7 @@ impl Ingress {
             Err(mpsc::TrySendError::Disconnected(p)) => {
                 // Coalescer gone (server shutting down): fail the request
                 // through its own channel rather than lying with `Busy`.
-                let _ = p.resp.send(Err(anyhow::anyhow!("server stopped")));
+                let _ = p.resp.send(ServeOutcome::Done(Err(anyhow::anyhow!("server stopped"))));
                 Some(rx)
             }
         }
@@ -152,7 +190,8 @@ impl Ingress {
 
 /// Owner of the coalescer threads; joining it is bounded even while
 /// detached sessions still hold [`Ingress`] clones, because the drain
-/// loop re-checks the stop flag every 50 ms.
+/// loop re-checks the stop flag every 50 ms and the coalesce wait itself
+/// is interruptible.
 pub struct CoalescerSet {
     stop: Arc<AtomicBool>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -191,10 +230,26 @@ pub fn spawn_coalescers(
                 .spawn(move || loop {
                     match rx.recv_timeout(Duration::from_millis(50)) {
                         Ok(first) => {
-                            if !coalesce_wait.is_zero() {
-                                std::thread::sleep(coalesce_wait);
-                            }
                             let mut batch = vec![first];
+                            if !coalesce_wait.is_zero() {
+                                // Interruptible wait: arrivals join the
+                                // batch as they land, and a dropped
+                                // ingress (shutdown) ends the wait at
+                                // once — a plain `thread::sleep` here
+                                // would do neither.
+                                let wait_until = Instant::now() + coalesce_wait;
+                                loop {
+                                    let left =
+                                        wait_until.saturating_duration_since(Instant::now());
+                                    if left.is_zero() || stop.load(Ordering::Relaxed) {
+                                        break;
+                                    }
+                                    match rx.recv_timeout(left) {
+                                        Ok(p) => batch.push(p),
+                                        Err(_) => break, // timeout or disconnected
+                                    }
+                                }
+                            }
                             while let Ok(p) = rx.try_recv() {
                                 batch.push(p);
                             }
@@ -214,15 +269,25 @@ pub fn spawn_coalescers(
     (Ingress { txs, counters }, CoalescerSet { stop, handles })
 }
 
-/// Group one drain by matrix key (arrival order preserved) and serve
-/// each group with a single batch call, scattering results to waiters.
+/// Shed expired requests, group the rest of one drain by matrix key
+/// (arrival order preserved), and serve each group with a single batch
+/// call, scattering results to waiters. The deadline check happens here,
+/// at drain time: a shed request consumes no batch slot and no kernel
+/// time, and a drain whose every request expired issues no batch call at
+/// all.
 fn dispatch(client: &Client, batch: Vec<Pending>, counters: &NetCounters) {
-    let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
+    let now = Instant::now();
+    let mut groups: Vec<(Arc<str>, Vec<Pending>)> = Vec::new();
     for p in batch {
-        match groups.iter_mut().find(|(k, _)| *k == p.key) {
+        if p.deadline.is_some_and(|d| now >= d) {
+            counters.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+            let _ = p.resp.send(ServeOutcome::Shed);
+            continue;
+        }
+        match groups.iter_mut().find(|(k, _)| **k == *p.key) {
             Some((_, g)) => g.push(p),
             None => {
-                let key = p.key.clone();
+                let key = Arc::clone(&p.key);
                 groups.push((key, vec![p]));
             }
         }
@@ -240,13 +305,13 @@ fn dispatch(client: &Client, batch: Vec<Pending>, counters: &NetCounters) {
         match client.spmv_batch(&key, xs) {
             Ok(ys) => {
                 for (y, resp) in ys.into_iter().zip(resps) {
-                    let _ = resp.send(Ok(y));
+                    let _ = resp.send(ServeOutcome::Done(Ok(y)));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
                 for resp in resps {
-                    let _ = resp.send(Err(anyhow::anyhow!("{msg}")));
+                    let _ = resp.send(ServeOutcome::Done(Err(anyhow::anyhow!("{msg}"))));
                 }
             }
         }
@@ -273,6 +338,13 @@ mod tests {
         Server::spawn(Coordinator::new(cfg), 32)
     }
 
+    fn done(out: ServeOutcome) -> Result<Vec<Value>> {
+        match out {
+            ServeOutcome::Done(r) => r,
+            ServeOutcome::Shed => panic!("unexpected shed"),
+        }
+    }
+
     #[test]
     fn coalesced_results_match_direct_serving() {
         let (server, client) = serving_client();
@@ -282,8 +354,9 @@ mod tests {
             spawn_coalescers(&client, 16, Duration::from_millis(0), Arc::clone(&counters));
 
         let x: Vec<Value> = (0..6).map(|i| i as Value + 0.5).collect();
-        let rx = ingress.submit("i", x.clone()).expect("queue not full");
-        let y = rx.recv().unwrap().unwrap();
+        let key: Arc<str> = Arc::from("i");
+        let rx = ingress.submit(&key, x.clone(), None).expect("queue not full");
+        let y = done(rx.recv().unwrap()).unwrap();
         assert_eq!(y, client.spmv("i", x).unwrap());
         assert_eq!(counters.requests.load(Ordering::Relaxed), 1);
         assert!(counters.coalescing_factor() >= 1.0);
@@ -299,15 +372,70 @@ mod tests {
         let (ingress, set) =
             spawn_coalescers(&client, 16, Duration::from_millis(0), Arc::clone(&counters));
 
-        let rx = ingress.submit("nope", vec![1.0]).expect("queue not full");
-        assert!(rx.recv().unwrap().is_err());
+        let nope: Arc<str> = Arc::from("nope");
+        let rx = ingress.submit(&nope, vec![1.0], None).expect("queue not full");
+        assert!(done(rx.recv().unwrap()).is_err());
 
         // The coalescer survives a failed dispatch and serves the next one.
         client.register("i", Csr::identity(3)).unwrap();
-        let rx = ingress.submit("i", vec![1.0, 2.0, 3.0]).expect("queue not full");
-        assert_eq!(rx.recv().unwrap().unwrap(), vec![1.0, 2.0, 3.0]);
+        let key: Arc<str> = Arc::from("i");
+        let rx = ingress.submit(&key, vec![1.0, 2.0, 3.0], None).expect("queue not full");
+        assert_eq!(done(rx.recv().unwrap()).unwrap(), vec![1.0, 2.0, 3.0]);
 
         set.join();
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadlines_are_shed_at_drain_time_without_serving() {
+        let (server, client) = serving_client();
+        client.register("i", Csr::identity(3)).unwrap();
+        let counters = Arc::new(NetCounters::default());
+        // A 50 ms coalesce wait guarantees the drain happens well after
+        // an already-expired deadline, deterministically.
+        let (ingress, set) =
+            spawn_coalescers(&client, 16, Duration::from_millis(50), Arc::clone(&counters));
+
+        let key: Arc<str> = Arc::from("i");
+        let expired = Some(Instant::now() - Duration::from_millis(1));
+        let rx = ingress.submit(&key, vec![1.0, 2.0, 3.0], expired).expect("queue not full");
+        assert!(matches!(rx.recv().unwrap(), ServeOutcome::Shed));
+        assert_eq!(counters.deadline_sheds.load(Ordering::Relaxed), 1);
+        // The shed request burned no batch slot: nothing was served.
+        assert_eq!(counters.batches.load(Ordering::Relaxed), 0);
+        assert_eq!(counters.requests.load(Ordering::Relaxed), 0);
+
+        // A live request on the same channel still serves.
+        let rx = ingress.submit(&key, vec![1.0, 2.0, 3.0], None).expect("queue not full");
+        assert_eq!(done(rx.recv().unwrap()).unwrap(), vec![1.0, 2.0, 3.0]);
+
+        set.join();
+        server.shutdown();
+    }
+
+    #[test]
+    fn dropping_the_ingress_interrupts_the_coalesce_wait() {
+        let (server, client) = serving_client();
+        client.register("i", Csr::identity(2)).unwrap();
+        let counters = Arc::new(NetCounters::default());
+        // A wait long enough that a non-interruptible sleep would be
+        // caught by the elapsed-time assertion below.
+        let (ingress, set) =
+            spawn_coalescers(&client, 16, Duration::from_secs(5), Arc::clone(&counters));
+
+        let key: Arc<str> = Arc::from("i");
+        let rx = ingress.submit(&key, vec![1.0, 2.0], None).expect("queue not full");
+        let t0 = Instant::now();
+        drop(ingress); // all senders gone → the wait's recv_timeout disconnects
+        set.join();
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "shutdown stalled on the coalesce wait: {:?}",
+            t0.elapsed()
+        );
+        // The pending request was still dispatched on the way out.
+        assert_eq!(done(rx.recv().unwrap()).unwrap(), vec![1.0, 2.0]);
+
         server.shutdown();
     }
 }

@@ -20,7 +20,9 @@
 //! The front end adds no serving semantics: every request lands on the
 //! same [`Client`] the in-process embedding uses, so results are
 //! bitwise identical to local serving. What it adds is *admission* —
-//! bounded queues with explicit `Busy` backpressure — and *coalescing*:
+//! bounded queues with explicit `Busy` backpressure, optional
+//! per-session auth and request/byte quotas ([`session::SessionPolicy`]),
+//! and drain-time deadline shedding ([`ingress`]) — and *coalescing*:
 //! concurrent single-vector requests against the same matrix are folded
 //! into one tiled batch call, cutting matrix-streaming passes from `k`
 //! to ⌈k/tile⌉ (see [`ingress`]).
@@ -32,11 +34,12 @@ pub mod ingress;
 pub mod proto;
 pub mod session;
 
-use crate::coordinator::{Client, Coordinator, Server};
+use crate::coordinator::{Client, Coordinator, DecisionLog, Server};
 use crate::formats::{Csr, SparseMatrix};
 use crate::{Result, Value};
 use self::ingress::{CoalescerSet, Ingress, NetCounters};
 use self::proto::{Message, WireNetStats, WireStatsRow};
+use self::session::SessionPolicy;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -97,7 +100,10 @@ pub fn parse_listen(spec: &str) -> Result<ListenAddr> {
 
 /// Front-end tuning knobs. `Default` reads the environment
 /// ([`ingress::configured_queue_depth`],
-/// [`ingress::configured_coalesce_wait`]); tests construct explicit
+/// [`ingress::configured_coalesce_wait`],
+/// [`session::configured_auth_token`],
+/// [`session::configured_quota_requests`],
+/// [`session::configured_quota_bytes`]); tests construct explicit
 /// values instead of mutating the environment.
 #[derive(Clone, Debug)]
 pub struct NetConfig {
@@ -105,6 +111,20 @@ pub struct NetConfig {
     pub queue_depth: usize,
     /// Post-first-arrival wait before the coalescer drains its queue.
     pub coalesce_wait: Duration,
+    /// Auth token every v2 `Hello` must present (`SPMV_AT_NET_AUTH`);
+    /// `None` = open server. When set, v1 clients are refused (their
+    /// `Hello` cannot carry a token).
+    pub auth_token: Option<String>,
+    /// Per-session request budget (`SPMV_AT_NET_QUOTA_REQS`, 0 =
+    /// unlimited); a session over budget gets `Busy` on every request.
+    pub quota_requests: u64,
+    /// Per-session request-payload byte budget
+    /// (`SPMV_AT_NET_QUOTA_BYTES`, 0 = unlimited).
+    pub quota_bytes: u64,
+    /// Serving-decision log served to `DecisionLog` wire requests;
+    /// `None` answers with an empty tail. Pass the same handle to
+    /// [`crate::coordinator::CoordinatorConfig`] so records flow in.
+    pub decision_log: Option<DecisionLog>,
 }
 
 impl Default for NetConfig {
@@ -112,6 +132,10 @@ impl Default for NetConfig {
         Self {
             queue_depth: ingress::configured_queue_depth(),
             coalesce_wait: ingress::configured_coalesce_wait(),
+            auth_token: session::configured_auth_token(),
+            quota_requests: session::configured_quota_requests(),
+            quota_bytes: session::configured_quota_bytes(),
+            decision_log: None,
         }
     }
 }
@@ -171,6 +195,12 @@ impl NetServer {
     /// carries the resolved address (useful with TCP port 0).
     pub fn start(server: Server, client: Client, addr: &ListenAddr, cfg: NetConfig) -> Result<Self> {
         let counters = Arc::new(NetCounters::default());
+        let policy = SessionPolicy {
+            auth_token: cfg.auth_token.clone(),
+            quota_requests: cfg.quota_requests,
+            quota_bytes: cfg.quota_bytes,
+            decision_log: cfg.decision_log.clone(),
+        };
         let (ing, coalescers) = ingress::spawn_coalescers(
             &client,
             cfg.queue_depth,
@@ -205,7 +235,7 @@ impl NetServer {
             let ing = ing.clone();
             std::thread::Builder::new()
                 .name("spmv-accept".into())
-                .spawn(move || accept_loop(listener, stop, client, ing, counters))
+                .spawn(move || accept_loop(listener, stop, client, ing, counters, policy))
                 .expect("spawn accept thread")
         };
 
@@ -270,6 +300,7 @@ fn accept_loop(
     client: Client,
     ing: Ingress,
     counters: Arc<NetCounters>,
+    policy: SessionPolicy,
 ) {
     while !stop.load(Ordering::Relaxed) {
         let conn = match &listener {
@@ -298,11 +329,12 @@ fn accept_loop(
                 let client = client.clone();
                 let ing = ing.clone();
                 let counters = Arc::clone(&counters);
+                let policy = policy.clone();
                 // Detached on purpose: a session lives exactly as long as
                 // its connection, and an abrupt disconnect must never take
                 // anything down with it.
                 let _ = std::thread::Builder::new().name("spmv-session".into()).spawn(move || {
-                    let _ = session::run_session(conn, client, ing);
+                    let _ = session::run_session(conn, client, ing, policy);
                     counters.sessions_open.fetch_sub(1, Ordering::Relaxed);
                 });
             }
@@ -313,14 +345,36 @@ fn accept_loop(
 
 /// A blocking protocol client over either transport. One request in
 /// flight at a time; the request-id echo is verified on every reply.
+/// Every frame after the handshake is encoded and decoded at the
+/// negotiated session version, so the same client type drives a v2
+/// server in v1-compat mode byte-for-byte per the v1 spec.
 pub struct NetClient {
     conn: Conn,
     next_id: u32,
+    version: u16,
+    window: (u16, u16),
 }
 
 impl NetClient {
-    /// Connect and complete the version handshake.
+    /// Connect and complete the version handshake at the protocol
+    /// version `SPMV_AT_NET_PROTO` names (unset or empty: the current
+    /// [`proto::VERSION`]), presenting the `SPMV_AT_NET_AUTH` token when
+    /// set.
     pub fn connect(addr: &ListenAddr) -> Result<Self> {
+        let version = match std::env::var("SPMV_AT_NET_PROTO") {
+            Ok(v) if !v.trim().is_empty() => v
+                .trim()
+                .parse::<u16>()
+                .map_err(|_| anyhow::anyhow!("SPMV_AT_NET_PROTO={v:?} is not a version number"))?,
+            _ => proto::VERSION,
+        };
+        Self::connect_with(addr, version, session::configured_auth_token())
+    }
+
+    /// Connect and handshake at an explicit protocol `version`,
+    /// presenting `auth` (ignored below v2 — a v1 `Hello` cannot carry a
+    /// token).
+    pub fn connect_with(addr: &ListenAddr, version: u16, auth: Option<String>) -> Result<Self> {
         let conn = match addr {
             ListenAddr::Tcp(a) => {
                 let s = TcpStream::connect(a)?;
@@ -329,9 +383,20 @@ impl NetClient {
             }
             ListenAddr::Unix(p) => Conn::Unix(UnixStream::connect(p)?),
         };
-        let mut c = Self { conn, next_id: 0 };
-        match c.call(&Message::Hello { version: proto::VERSION })? {
-            Message::HelloAck { .. } => Ok(c),
+        let mut c = Self { conn, next_id: 0, version, window: (version, version) };
+        let hello = Message::Hello { version, auth: auth.unwrap_or_default() };
+        // Hello/HelloAck are self-describing (laid out per their embedded
+        // version field), so the pre-negotiation exchange works at any
+        // requested version.
+        match c.call(&hello)? {
+            Message::HelloAck { version: v, min, max } => {
+                anyhow::ensure!(
+                    v == version,
+                    "server acknowledged version {v}, client asked for {version}"
+                );
+                c.window = (min, max);
+                Ok(c)
+            }
             Message::Error { code, message } => {
                 anyhow::bail!("handshake rejected (error {code}): {message}")
             }
@@ -339,13 +404,25 @@ impl NetClient {
         }
     }
 
+    /// The negotiated session version.
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// The server's advertised `[min, max]` version window (the
+    /// requested version mirrored back when serving a v1 handshake,
+    /// which cannot carry the window).
+    pub fn server_window(&self) -> (u16, u16) {
+        self.window
+    }
+
     fn call(&mut self, msg: &Message) -> Result<Message> {
         self.next_id = self.next_id.wrapping_add(1);
         let id = self.next_id;
-        proto::write_frame(&mut self.conn, &proto::encode(id, msg))?;
+        proto::write_frame(&mut self.conn, &proto::encode_versioned(id, msg, self.version))?;
         let payload = proto::read_frame(&mut self.conn)?
             .ok_or_else(|| anyhow::anyhow!("server closed the connection"))?;
-        let (got, reply) = proto::decode(&payload)?;
+        let (got, reply) = proto::decode_versioned(&payload, self.version)?;
         anyhow::ensure!(got == id, "response id {got} does not match request id {id}");
         Ok(reply)
     }
@@ -367,9 +444,31 @@ impl NetClient {
     }
 
     /// `y = A·x` (single vector — the server may coalesce it with
-    /// concurrent requests from other connections).
+    /// concurrent requests from other connections). No deadline.
     pub fn spmv(&mut self, name: &str, x: Vec<Value>) -> Result<Vec<Value>> {
-        match self.call(&Message::Spmv { name: name.into(), x })? {
+        match self.call(&Message::Spmv { name: name.into(), x, deadline_us: 0 })? {
+            Message::Vector { y } => Ok(y),
+            other => Err(reply_err(other)),
+        }
+    }
+
+    /// `y = A·x` with a relative deadline in microseconds from server
+    /// receipt: if the request is still queued in the coalescer when the
+    /// budget expires, the server sheds it with
+    /// [`proto::ERR_DEADLINE_EXCEEDED`] instead of serving stale work.
+    /// Needs a v2 session (`deadline_us` does not exist on the v1 wire).
+    pub fn spmv_deadline(
+        &mut self,
+        name: &str,
+        x: Vec<Value>,
+        deadline_us: u64,
+    ) -> Result<Vec<Value>> {
+        anyhow::ensure!(
+            self.version >= 2,
+            "deadlines need protocol v2; this session negotiated v{}",
+            self.version
+        );
+        match self.call(&Message::Spmv { name: name.into(), x, deadline_us })? {
             Message::Vector { y } => Ok(y),
             other => Err(reply_err(other)),
         }
@@ -414,11 +513,30 @@ impl NetClient {
             other => Err(reply_err(other)),
         }
     }
+
+    /// The tail of the server's serving-decision log (most recent JSONL
+    /// records, oldest first; empty when the server runs without a
+    /// log). Needs a v2 session — the opcode does not exist on the v1
+    /// wire.
+    pub fn decision_log(&mut self) -> Result<Vec<String>> {
+        anyhow::ensure!(
+            self.version >= 2,
+            "the decision log needs protocol v2; this session negotiated v{}",
+            self.version
+        );
+        match self.call(&Message::DecisionLog)? {
+            Message::DecisionLogReply { lines } => Ok(lines),
+            other => Err(reply_err(other)),
+        }
+    }
 }
 
 fn reply_err(msg: Message) -> anyhow::Error {
     match msg {
-        Message::Busy => anyhow::anyhow!("server busy: ingress queue full, retry later"),
+        Message::Busy => anyhow::anyhow!("server busy: queue full or session quota spent"),
+        Message::Error { code, message } if code == proto::ERR_DEADLINE_EXCEEDED => {
+            anyhow::anyhow!("deadline exceeded: {message}")
+        }
         Message::Error { code, message } => anyhow::anyhow!("server error {code}: {message}"),
         other => anyhow::anyhow!("unexpected reply: {other:?}"),
     }
@@ -443,6 +561,17 @@ mod tests {
         cfg
     }
 
+    fn net_cfg(queue_depth: usize) -> NetConfig {
+        NetConfig {
+            queue_depth,
+            coalesce_wait: Duration::ZERO,
+            auth_token: None,
+            quota_requests: 0,
+            quota_bytes: 0,
+            decision_log: None,
+        }
+    }
+
     fn start_tcp(cfg: NetConfig) -> NetServer {
         let (server, client) = Server::spawn_sharded(test_cfg(), 32);
         NetServer::start(server, client, &ListenAddr::Tcp("127.0.0.1:0".into()), cfg)
@@ -461,8 +590,11 @@ mod tests {
 
     #[test]
     fn tcp_roundtrip_register_spmv_stats_evict() {
-        let net = start_tcp(NetConfig { queue_depth: 64, coalesce_wait: Duration::ZERO });
+        let net = start_tcp(net_cfg(64));
         let addr = net.local_addr().clone();
+        // connect() honours SPMV_AT_NET_PROTO (the CI v1-compat leg sets
+        // it), so this roundtrip exercises whichever version the
+        // environment picked; the serving results are identical.
         let mut c = NetClient::connect(&addr).unwrap();
 
         let csr = Csr::identity(5);
@@ -485,13 +617,8 @@ mod tests {
     fn unix_socket_roundtrip_and_socket_file_cleanup() {
         let path = std::env::temp_dir().join(format!("spmv-at-test-{}.sock", std::process::id()));
         let (server, client) = Server::spawn_sharded(test_cfg(), 32);
-        let net = NetServer::start(
-            server,
-            client,
-            &ListenAddr::Unix(path.clone()),
-            NetConfig { queue_depth: 64, coalesce_wait: Duration::ZERO },
-        )
-        .unwrap();
+        let net = NetServer::start(server, client, &ListenAddr::Unix(path.clone()), net_cfg(64))
+            .unwrap();
         let mut c = NetClient::connect(&ListenAddr::Unix(path.clone())).unwrap();
         c.register("id", &Csr::identity(3)).unwrap();
         assert_eq!(c.spmv("id", vec![1.0, 2.0, 3.0]).unwrap(), vec![1.0, 2.0, 3.0]);
@@ -502,10 +629,11 @@ mod tests {
 
     #[test]
     fn version_mismatch_is_rejected_with_the_right_code() {
-        let net = start_tcp(NetConfig { queue_depth: 4, coalesce_wait: Duration::ZERO });
+        let net = start_tcp(net_cfg(4));
         let ListenAddr::Tcp(addr) = net.local_addr().clone() else { unreachable!() };
         let mut s = TcpStream::connect(&addr).unwrap();
-        proto::write_frame(&mut s, &proto::encode(1, &Message::Hello { version: 999 })).unwrap();
+        let hello = Message::Hello { version: 999, auth: String::new() };
+        proto::write_frame(&mut s, &proto::encode(1, &hello)).unwrap();
         let payload = proto::read_frame(&mut s).unwrap().unwrap();
         let (_, reply) = proto::decode(&payload).unwrap();
         match reply {
@@ -514,6 +642,34 @@ mod tests {
         }
         // The server then closes: next read is clean EOF.
         assert!(proto::read_frame(&mut s).unwrap().is_none());
+        net.shutdown();
+    }
+
+    #[test]
+    fn explicit_version_negotiation_reports_the_window() {
+        let net = start_tcp(net_cfg(16));
+        let addr = net.local_addr().clone();
+        let mut v2 = NetClient::connect_with(&addr, proto::VERSION, None).unwrap();
+        assert_eq!(v2.version(), proto::VERSION);
+        assert_eq!(v2.server_window(), (proto::MIN_VERSION, proto::VERSION));
+        let mut v1 = NetClient::connect_with(&addr, 1, None).unwrap();
+        assert_eq!(v1.version(), 1);
+        // A v1 HelloAck cannot carry the window; the requested version is
+        // mirrored back.
+        assert_eq!(v1.server_window(), (1, 1));
+        // Both sessions serve, against the same registry.
+        v2.register("id", &Csr::identity(3)).unwrap();
+        assert_eq!(v1.spmv("id", vec![1.0, 2.0, 3.0]).unwrap(), vec![1.0, 2.0, 3.0]);
+        // v2-only calls refuse cleanly on the v1 session.
+        assert!(v1.spmv_deadline("id", vec![0.0; 3], 1_000_000).is_err());
+        assert!(v1.decision_log().is_err());
+        // …and work on the v2 session (ample deadline, no log configured).
+        assert_eq!(
+            v2.spmv_deadline("id", vec![1.0, 1.0, 1.0], 60_000_000).unwrap(),
+            vec![1.0, 1.0, 1.0]
+        );
+        assert_eq!(v2.decision_log().unwrap(), Vec::<String>::new());
+        drop((v1, v2));
         net.shutdown();
     }
 }

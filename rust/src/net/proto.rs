@@ -12,11 +12,26 @@
 //! pin the same bytes so the document cannot drift from the code.
 //!
 //! A connection starts with [`Message::Hello`] (magic `"SPAT"` + the
-//! protocol version) and is good for requests only after the server's
-//! [`Message::HelloAck`]. Backpressure is explicit: a server whose
-//! ingress queue is full answers [`Message::Busy`] instead of queueing,
-//! and errors travel as [`Message::Error`] with a stable numeric code
-//! plus a human-readable message.
+//! protocol version, plus an optional auth token from v2 on) and is good
+//! for requests only after the server's [`Message::HelloAck`].
+//! Backpressure is explicit: a server whose ingress queue is full — or
+//! whose per-session quota is spent — answers [`Message::Busy`] instead
+//! of queueing, and errors travel as [`Message::Error`] with a stable
+//! numeric code plus a human-readable message.
+//!
+//! # Versioning
+//!
+//! The server accepts any client version in `[MIN_VERSION, VERSION]` and
+//! serves the session at the client's version (the minimum of the two
+//! sides' maxima). The two handshake messages are *self-describing*:
+//! their bodies carry their own version field first, and the remainder of
+//! the body is laid out per that embedded version — so a handshake frame
+//! decodes without knowing the session version in advance. Every other
+//! message is *session-versioned*: [`encode_versioned`]/
+//! [`decode_versioned`] lay its body out per the negotiated version
+//! (v1 `Spmv` has no deadline field, v1 `NetStatsReply` has no
+//! `deadline_sheds`, and the decision-log opcodes do not exist in v1).
+//! [`encode`]/[`decode`] are the current-version shorthands.
 //!
 //! # Frame round-trip
 //!
@@ -24,7 +39,8 @@
 //! use spmv_at::net::proto::{self, Message};
 //! use std::io::Cursor;
 //!
-//! let payload = proto::encode(1, &Message::Hello { version: proto::VERSION });
+//! let hello = Message::Hello { version: proto::VERSION, auth: String::new() };
+//! let payload = proto::encode(1, &hello);
 //! let mut wire = Vec::new();
 //! proto::write_frame(&mut wire, &payload).unwrap();
 //! // 4-byte LE length prefix, then the payload bytes.
@@ -35,7 +51,7 @@
 //! let got = proto::read_frame(&mut r).unwrap().expect("one frame");
 //! let (id, msg) = proto::decode(&got).unwrap();
 //! assert_eq!(id, 1);
-//! assert_eq!(msg, Message::Hello { version: proto::VERSION });
+//! assert_eq!(msg, hello);
 //! // Clean EOF at a frame boundary reads as None, not an error.
 //! assert!(proto::read_frame(&mut r).unwrap().is_none());
 //! ```
@@ -46,23 +62,36 @@ use std::io::{Read, Write};
 /// Handshake magic, the first four bytes of every [`Message::Hello`] body.
 pub const MAGIC: [u8; 4] = *b"SPAT";
 
-/// Protocol version this build speaks (negotiated in the handshake).
-pub const VERSION: u16 = 1;
+/// Highest protocol version this build speaks (the handshake negotiates
+/// down to the client's version inside the window).
+pub const VERSION: u16 = 2;
+
+/// Oldest protocol version this build still serves (v1-compat mode: no
+/// deadline field, no auth token, no decision-log opcodes).
+pub const MIN_VERSION: u16 = 1;
 
 /// Hard cap on a frame's payload length; a larger length prefix is
 /// rejected before any allocation (a malformed or hostile prefix must
 /// not OOM the server).
 pub const MAX_FRAME: usize = 1 << 26; // 64 MiB
 
-/// Error code: the client's protocol version is not supported.
+/// Error code: the client's protocol version is outside the server's
+/// `[MIN_VERSION, VERSION]` window.
 pub const ERR_UNSUPPORTED_VERSION: u16 = 1;
-/// Error code: the opcode byte is not one this server knows.
+/// Error code: the opcode byte is not one this session's version knows.
 pub const ERR_UNKNOWN_OPCODE: u16 = 2;
 /// Error code: the frame body could not be decoded.
 pub const ERR_MALFORMED: u16 = 3;
 /// Error code: the request was understood but serving it failed (the
 /// message carries the server-side error text).
 pub const ERR_SERVER: u16 = 4;
+/// Error code: the request's deadline expired before the coalescer
+/// drained it; the batch slot was shed, not served (v2+).
+pub const ERR_DEADLINE_EXCEEDED: u16 = 5;
+/// Error code: the server requires an auth token and the handshake did
+/// not present a matching one (v2+; v1 cannot carry a token, so a
+/// token-requiring server refuses v1 clients with this code too).
+pub const ERR_UNAUTHORIZED: u16 = 6;
 
 /// Opcode: client hello (handshake).
 pub const OP_HELLO: u8 = 0x01;
@@ -80,6 +109,8 @@ pub const OP_REPLAN: u8 = 0x14;
 pub const OP_EVICT: u8 = 0x15;
 /// Opcode: fetch the ingress/coalescer counters.
 pub const OP_NET_STATS: u8 = 0x16;
+/// Opcode: fetch the tail of the serving decision log (v2+).
+pub const OP_DECISION_LOG: u8 = 0x17;
 /// Opcode: server is over admission capacity for this request (reply).
 pub const OP_BUSY: u8 = 0x7E;
 /// Opcode: error reply.
@@ -98,9 +129,12 @@ pub const OP_STATS_ROWS: u8 = 0x85;
 pub const OP_EVICTED: u8 = 0x86;
 /// Opcode: ingress/coalescer counters (reply to `NetStats`).
 pub const OP_NET_STATS_REPLY: u8 = 0x87;
+/// Opcode: decision-log tail (reply to `DecisionLog`, v2+).
+pub const OP_DECISION_LOG_REPLY: u8 = 0x88;
 
-/// Whether `op` is an opcode this build knows how to decode.
-pub fn known_opcode(op: u8) -> bool {
+/// Whether `op` is an opcode the given protocol version knows how to
+/// decode. The decision-log pair exists only from v2 on.
+pub fn known_opcode(op: u8, version: u16) -> bool {
     matches!(
         op,
         OP_HELLO
@@ -120,7 +154,7 @@ pub fn known_opcode(op: u8) -> bool {
             | OP_STATS_ROWS
             | OP_EVICTED
             | OP_NET_STATS_REPLY
-    )
+    ) || (version >= 2 && matches!(op, OP_DECISION_LOG | OP_DECISION_LOG_REPLY))
 }
 
 /// One stats row as serialised on the wire — the subset of
@@ -160,6 +194,8 @@ pub struct WireStatsRow {
 }
 
 /// Ingress/coalescer counter snapshot as serialised on the wire.
+/// `deadline_sheds` is v2-only on the wire; a v1 session receives the
+/// first eight counters exactly as the v1 spec laid them out.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WireNetStats {
     /// Sessions currently open.
@@ -178,21 +214,36 @@ pub struct WireNetStats {
     pub admission_rejects: u64,
     /// Largest single coalesced dispatch.
     pub max_batch: u64,
+    /// Requests shed at drain time because their deadline had expired
+    /// (v2+ on the wire; always decodes as 0 on a v1 session).
+    pub deadline_sheds: u64,
 }
 
 /// A decoded protocol message (request or response).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
-    /// Handshake: magic + version. Must be the first frame on a
-    /// connection.
+    /// Handshake: magic + version (+ auth token from v2 on). Must be the
+    /// first frame on a connection. Self-describing: the body is laid
+    /// out per its own `version` field, not the session version.
     Hello {
         /// Protocol version the client speaks.
         version: u16,
+        /// Auth token; empty = none presented. v1 bodies cannot carry
+        /// one, so a v1 `Hello` always decodes with an empty token.
+        auth: String,
     },
-    /// Handshake accepted; the server speaks `version`.
+    /// Handshake accepted; the session speaks `version`. From v2 on the
+    /// server also advertises its full `[min, max]` version window.
+    /// Self-describing like [`Message::Hello`].
     HelloAck {
-        /// Protocol version the server serves.
+        /// Negotiated session version.
         version: u16,
+        /// Oldest version the server serves (v2+ body; mirrored as
+        /// `version` when decoding a v1 body).
+        min: u16,
+        /// Newest version the server serves (v2+ body; mirrored as
+        /// `version` when decoding a v1 body).
+        max: u16,
     },
     /// Register a matrix under a name (validated CSR arrays).
     Register {
@@ -215,6 +266,12 @@ pub enum Message {
         name: String,
         /// Input vector.
         x: Vec<f64>,
+        /// Relative deadline in microseconds from server receipt; 0 = no
+        /// deadline. The coalescer sheds the request with
+        /// [`ERR_DEADLINE_EXCEEDED`] if it is still queued when the
+        /// budget runs out. v2-only field (a v1 body omits it and
+        /// decodes as 0).
+        deadline_us: u64,
     },
     /// Batched `Y = A·X`, already grouped by the client.
     SpmvBatch {
@@ -237,6 +294,8 @@ pub enum Message {
     },
     /// Fetch the ingress/coalescer counters.
     NetStats,
+    /// Fetch the tail of the serving decision log (v2+).
+    DecisionLog,
     /// Stats-row reply (to `Register` and `Replan`).
     Registered {
         /// The entry's stats row after the operation.
@@ -267,9 +326,16 @@ pub enum Message {
         /// The counter snapshot.
         stats: WireNetStats,
     },
-    /// The ingress queue for this request's shard is full; retry later.
-    /// Explicit backpressure — the server never blocks the socket reader
-    /// on a full queue.
+    /// Reply to `DecisionLog` (v2+): the most recent JSONL records, one
+    /// string per line, oldest first.
+    DecisionLogReply {
+        /// Rendered JSONL decision records.
+        lines: Vec<String>,
+    },
+    /// The ingress queue for this request's shard is full — or the
+    /// session's request/byte quota is spent; retry later (or
+    /// reconnect, for quotas). Explicit backpressure — the server never
+    /// blocks the socket reader on a full queue.
     Busy,
     /// The request failed; `code` is one of the `ERR_*` constants.
     Error {
@@ -343,13 +409,14 @@ fn put_row(buf: &mut Vec<u8>, row: &WireStatsRow) {
     buf.push(row.amortized as u8);
 }
 
-/// Serialise a message into a frame payload (`opcode + request id +
-/// body`, no length prefix — [`write_frame`] adds that).
+/// Serialise a message into a frame payload at the current protocol
+/// version ([`VERSION`]). Shorthand for [`encode_versioned`].
 ///
 /// ```
 /// use spmv_at::net::proto::{self, Message};
-/// // Spmv "m" with x = [1.0], request id 7:
-/// let payload = proto::encode(7, &Message::Spmv { name: "m".into(), x: vec![1.0] });
+/// // Spmv "m" with x = [1.0], no deadline, request id 7 (v2 layout):
+/// let msg = Message::Spmv { name: "m".into(), x: vec![1.0], deadline_us: 0 };
+/// let payload = proto::encode(7, &msg);
 /// assert_eq!(
 ///     payload,
 ///     [
@@ -359,22 +426,44 @@ fn put_row(buf: &mut Vec<u8>, row: &WireStatsRow) {
 ///         b'm', // name bytes (UTF-8)
 ///         1, 0, 0, 0, // vector element count (u32 LE)
 ///         0, 0, 0, 0, 0, 0, 0xF0, 0x3F, // 1.0 (f64 LE)
+///         0, 0, 0, 0, 0, 0, 0, 0, // deadline_us = 0 (u64 LE, v2+)
 ///     ]
 /// );
-/// let (id, msg) = proto::decode(&payload).unwrap();
+/// let (id, msg2) = proto::decode(&payload).unwrap();
 /// assert_eq!(id, 7);
-/// assert_eq!(msg, Message::Spmv { name: "m".into(), x: vec![1.0] });
+/// assert_eq!(msg2, msg);
+/// // The same message in a v1 session omits the deadline field — the
+/// // payload is byte-for-byte the v1 spec.
+/// let v1 = proto::encode_versioned(7, &msg, 1);
+/// assert_eq!(v1, payload[..payload.len() - 8]);
 /// ```
 pub fn encode(id: u32, msg: &Message) -> Vec<u8> {
+    encode_versioned(id, msg, VERSION)
+}
+
+/// Serialise a message into a frame payload (`opcode + request id +
+/// body`, no length prefix — [`write_frame`] adds that) laid out per
+/// `version`. The handshake messages ignore `version` and lay themselves
+/// out per their own embedded version field (see the module docs).
+pub fn encode_versioned(id: u32, msg: &Message, version: u16) -> Vec<u8> {
     let mut buf = Vec::new();
     buf.push(opcode(msg));
     put_u32(&mut buf, id);
     match msg {
-        Message::Hello { version } => {
+        Message::Hello { version: v, auth } => {
             buf.extend_from_slice(&MAGIC);
-            put_u16(&mut buf, *version);
+            put_u16(&mut buf, *v);
+            if *v >= 2 {
+                put_str(&mut buf, auth);
+            }
         }
-        Message::HelloAck { version } => put_u16(&mut buf, *version),
+        Message::HelloAck { version: v, min, max } => {
+            put_u16(&mut buf, *v);
+            if *v >= 2 {
+                put_u16(&mut buf, *min);
+                put_u16(&mut buf, *max);
+            }
+        }
         Message::Register { name, n_rows, n_cols, row_ptr, col_idx, values } => {
             put_str(&mut buf, name);
             put_u64(&mut buf, *n_rows);
@@ -383,9 +472,12 @@ pub fn encode(id: u32, msg: &Message) -> Vec<u8> {
             put_vec_u32(&mut buf, col_idx);
             put_vec_f64(&mut buf, values);
         }
-        Message::Spmv { name, x } => {
+        Message::Spmv { name, x, deadline_us } => {
             put_str(&mut buf, name);
             put_vec_f64(&mut buf, x);
+            if version >= 2 {
+                put_u64(&mut buf, *deadline_us);
+            }
         }
         Message::SpmvBatch { name, xs } => {
             put_str(&mut buf, name);
@@ -394,7 +486,7 @@ pub fn encode(id: u32, msg: &Message) -> Vec<u8> {
                 put_vec_f64(&mut buf, x);
             }
         }
-        Message::Stats | Message::NetStats | Message::Busy => {}
+        Message::Stats | Message::NetStats | Message::DecisionLog | Message::Busy => {}
         Message::Replan { name } | Message::Evict { name } => put_str(&mut buf, name),
         Message::Registered { row } => put_row(&mut buf, row),
         Message::Vector { y } => put_vec_f64(&mut buf, y),
@@ -420,6 +512,15 @@ pub fn encode(id: u32, msg: &Message) -> Vec<u8> {
             put_u64(&mut buf, stats.coalesced_requests);
             put_u64(&mut buf, stats.admission_rejects);
             put_u64(&mut buf, stats.max_batch);
+            if version >= 2 {
+                put_u64(&mut buf, stats.deadline_sheds);
+            }
+        }
+        Message::DecisionLogReply { lines } => {
+            put_u32(&mut buf, lines.len() as u32);
+            for line in lines {
+                put_str(&mut buf, line);
+            }
         }
         Message::Error { code, message } => {
             put_u16(&mut buf, *code);
@@ -440,12 +541,14 @@ fn opcode(msg: &Message) -> u8 {
         Message::Replan { .. } => OP_REPLAN,
         Message::Evict { .. } => OP_EVICT,
         Message::NetStats => OP_NET_STATS,
+        Message::DecisionLog => OP_DECISION_LOG,
         Message::Registered { .. } => OP_REGISTERED,
         Message::Vector { .. } => OP_VECTOR,
         Message::Vectors { .. } => OP_VECTORS,
         Message::StatsRows { .. } => OP_STATS_ROWS,
         Message::Evicted { .. } => OP_EVICTED,
         Message::NetStatsReply { .. } => OP_NET_STATS_REPLY,
+        Message::DecisionLogReply { .. } => OP_DECISION_LOG_REPLY,
         Message::Busy => OP_BUSY,
         Message::Error { .. } => OP_ERROR,
     }
@@ -555,11 +658,19 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Decode a frame payload into `(request id, message)`. Fails on unknown
-/// opcodes, truncated bodies, bad magic, non-UTF-8 strings, and trailing
-/// bytes — a decode error means the frame was malformed, not that the
-/// stream framing is lost (the length prefix already delimited it).
+/// Decode a frame payload at the current protocol version ([`VERSION`]).
+/// Shorthand for [`decode_versioned`].
 pub fn decode(payload: &[u8]) -> Result<(u32, Message)> {
+    decode_versioned(payload, VERSION)
+}
+
+/// Decode a frame payload into `(request id, message)` laid out per
+/// `version`. Fails on opcodes unknown to that version, truncated
+/// bodies, bad magic, non-UTF-8 strings, and trailing bytes — a decode
+/// error means the frame was malformed, not that the stream framing is
+/// lost (the length prefix already delimited it). The handshake messages
+/// ignore `version` and decode per their own embedded version field.
+pub fn decode_versioned(payload: &[u8], version: u16) -> Result<(u32, Message)> {
     let mut r = Reader { buf: payload, pos: 0 };
     let op = r.u8()?;
     let id = r.u32()?;
@@ -567,9 +678,15 @@ pub fn decode(payload: &[u8]) -> Result<(u32, Message)> {
         OP_HELLO => {
             let magic = r.take(4)?;
             anyhow::ensure!(magic == MAGIC, "bad handshake magic {magic:02x?}");
-            Message::Hello { version: r.u16()? }
+            let v = r.u16()?;
+            let auth = if v >= 2 { r.string()? } else { String::new() };
+            Message::Hello { version: v, auth }
         }
-        OP_HELLO_ACK => Message::HelloAck { version: r.u16()? },
+        OP_HELLO_ACK => {
+            let v = r.u16()?;
+            let (min, max) = if v >= 2 { (r.u16()?, r.u16()?) } else { (v, v) };
+            Message::HelloAck { version: v, min, max }
+        }
         OP_REGISTER => Message::Register {
             name: r.string()?,
             n_rows: r.u64()?,
@@ -578,7 +695,12 @@ pub fn decode(payload: &[u8]) -> Result<(u32, Message)> {
             col_idx: r.vec_u32()?,
             values: r.vec_f64()?,
         },
-        OP_SPMV => Message::Spmv { name: r.string()?, x: r.vec_f64()? },
+        OP_SPMV => {
+            let name = r.string()?;
+            let x = r.vec_f64()?;
+            let deadline_us = if version >= 2 { r.u64()? } else { 0 };
+            Message::Spmv { name, x, deadline_us }
+        }
         OP_SPMV_BATCH => {
             let name = r.string()?;
             let k = r.u32()? as usize;
@@ -592,6 +714,7 @@ pub fn decode(payload: &[u8]) -> Result<(u32, Message)> {
         OP_REPLAN => Message::Replan { name: r.string()? },
         OP_EVICT => Message::Evict { name: r.string()? },
         OP_NET_STATS => Message::NetStats,
+        OP_DECISION_LOG if version >= 2 => Message::DecisionLog,
         OP_REGISTERED => Message::Registered { row: r.row()? },
         OP_VECTOR => Message::Vector { y: r.vec_f64()? },
         OP_VECTORS => {
@@ -621,11 +744,20 @@ pub fn decode(payload: &[u8]) -> Result<(u32, Message)> {
                 coalesced_requests: r.u64()?,
                 admission_rejects: r.u64()?,
                 max_batch: r.u64()?,
+                deadline_sheds: if version >= 2 { r.u64()? } else { 0 },
             },
         },
+        OP_DECISION_LOG_REPLY if version >= 2 => {
+            let k = r.u32()? as usize;
+            let mut lines = Vec::with_capacity(k.min(payload.len() / 2 + 1));
+            for _ in 0..k {
+                lines.push(r.string()?);
+            }
+            Message::DecisionLogReply { lines }
+        }
         OP_BUSY => Message::Busy,
         OP_ERROR => Message::Error { code: r.u16()?, message: r.string()? },
-        other => anyhow::bail!("unknown opcode 0x{other:02x}"),
+        other => anyhow::bail!("unknown opcode 0x{other:02x} for protocol version {version}"),
     };
     r.finish()?;
     Ok((id, msg))
@@ -645,7 +777,10 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
 
 /// Read one frame's payload. `Ok(None)` is a clean EOF at a frame
 /// boundary (the peer closed between frames); truncation *inside* a
-/// frame, or a length prefix past [`MAX_FRAME`], is an error.
+/// frame, or a length prefix past [`MAX_FRAME`], is an error. After an
+/// error the stream is unframed — any unread payload bytes are still on
+/// the wire — so callers must hard-close the connection rather than try
+/// to resync (see `net::session`).
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
     let mut prefix = [0u8; 4];
     let mut got = 0;
@@ -677,6 +812,13 @@ mod tests {
         assert_eq!(got, msg);
     }
 
+    fn roundtrip_v1(msg: Message) {
+        let payload = encode_versioned(42, &msg, 1);
+        let (id, got) = decode_versioned(&payload, 1).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(got, msg);
+    }
+
     fn row() -> WireStatsRow {
         WireStatsRow {
             name: "m".into(),
@@ -698,8 +840,8 @@ mod tests {
 
     #[test]
     fn every_message_roundtrips() {
-        roundtrip(Message::Hello { version: VERSION });
-        roundtrip(Message::HelloAck { version: VERSION });
+        roundtrip(Message::Hello { version: VERSION, auth: "tok".into() });
+        roundtrip(Message::HelloAck { version: VERSION, min: MIN_VERSION, max: VERSION });
         roundtrip(Message::Register {
             name: "a".into(),
             n_rows: 2,
@@ -708,7 +850,7 @@ mod tests {
             col_idx: vec![0, 1],
             values: vec![1.5, -2.5],
         });
-        roundtrip(Message::Spmv { name: "a".into(), x: vec![1.0, 2.0] });
+        roundtrip(Message::Spmv { name: "a".into(), x: vec![1.0, 2.0], deadline_us: 1500 });
         roundtrip(Message::SpmvBatch {
             name: "a".into(),
             xs: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
@@ -717,6 +859,7 @@ mod tests {
         roundtrip(Message::Replan { name: "a".into() });
         roundtrip(Message::Evict { name: "a".into() });
         roundtrip(Message::NetStats);
+        roundtrip(Message::DecisionLog);
         roundtrip(Message::Registered { row: row() });
         roundtrip(Message::Vector { y: vec![0.5; 3] });
         roundtrip(Message::Vectors { ys: vec![vec![0.5; 3], vec![]] });
@@ -732,10 +875,76 @@ mod tests {
                 coalesced_requests: 10,
                 admission_rejects: 3,
                 max_batch: 8,
+                deadline_sheds: 6,
             },
+        });
+        roundtrip(Message::DecisionLogReply {
+            lines: vec!["{\"event\":\"register\"}".into(), "{\"event\":\"flip\"}".into()],
         });
         roundtrip(Message::Busy);
         roundtrip(Message::Error { code: ERR_SERVER, message: "boom".into() });
+    }
+
+    #[test]
+    fn v1_layout_roundtrips_and_omits_v2_fields() {
+        // v1 sessions still speak every v1 message, in the v1 layout.
+        roundtrip_v1(Message::Hello { version: 1, auth: String::new() });
+        roundtrip_v1(Message::HelloAck { version: 1, min: 1, max: 1 });
+        roundtrip_v1(Message::Spmv { name: "a".into(), x: vec![1.0], deadline_us: 0 });
+        roundtrip_v1(Message::NetStatsReply { stats: WireNetStats::default() });
+        roundtrip_v1(Message::Busy);
+
+        // The v1 Spmv body is exactly the v2 body minus the trailing
+        // deadline u64; a nonzero deadline simply does not travel.
+        let msg = Message::Spmv { name: "a".into(), x: vec![1.0], deadline_us: 77 };
+        let v1 = encode_versioned(9, &msg, 1);
+        let v2 = encode_versioned(9, &msg, 2);
+        assert_eq!(v1[..], v2[..v2.len() - 8]);
+        assert_eq!(&v2[v2.len() - 8..], &77u64.to_le_bytes());
+        let (_, got) = decode_versioned(&v1, 1).unwrap();
+        assert_eq!(got, Message::Spmv { name: "a".into(), x: vec![1.0], deadline_us: 0 });
+
+        // A v1 NetStatsReply body is the eight v1 counters, 69 bytes of
+        // payload total; deadline_sheds decodes as 0.
+        let stats = WireNetStats { deadline_sheds: 5, requests: 2, ..Default::default() };
+        let v1 = encode_versioned(3, &Message::NetStatsReply { stats }, 1);
+        assert_eq!(v1.len(), 5 + 8 * 8);
+        let (_, got) = decode_versioned(&v1, 1).unwrap();
+        let Message::NetStatsReply { stats: got } = got else { panic!("wrong variant") };
+        assert_eq!(got.deadline_sheds, 0);
+        assert_eq!(got.requests, 2);
+
+        // The decision-log opcodes do not exist in v1.
+        let pv = encode_versioned(1, &Message::DecisionLog, 2);
+        assert!(decode_versioned(&pv, 1).is_err());
+        let pv = encode_versioned(1, &Message::DecisionLogReply { lines: vec![] }, 2);
+        assert!(decode_versioned(&pv, 1).is_err());
+        assert!(known_opcode(OP_DECISION_LOG, 2));
+        assert!(!known_opcode(OP_DECISION_LOG, 1));
+    }
+
+    #[test]
+    fn handshake_frames_are_self_describing() {
+        // A v1 Hello/HelloAck body decodes identically at either session
+        // version — the embedded version field governs the layout, so
+        // the server can read the first frame before it knows the
+        // client's version.
+        let h1 = encode_versioned(1, &Message::Hello { version: 1, auth: String::new() }, 1);
+        assert_eq!(decode_versioned(&h1, 1).unwrap(), decode_versioned(&h1, 2).unwrap());
+        // v1 Hello body: magic + u16 version, nothing else.
+        assert_eq!(h1.len(), 5 + 4 + 2);
+
+        let a1 = encode_versioned(1, &Message::HelloAck { version: 1, min: 1, max: 1 }, 2);
+        assert_eq!(a1.len(), 5 + 2, "a v1 HelloAck body is exactly the u16 version");
+        assert_eq!(decode_versioned(&a1, 1).unwrap(), decode_versioned(&a1, 2).unwrap());
+
+        let h2 = encode_versioned(1, &Message::Hello { version: 2, auth: "tok".into() }, 1);
+        let (_, got) = decode_versioned(&h2, 1).unwrap();
+        assert_eq!(got, Message::Hello { version: 2, auth: "tok".into() });
+
+        let a2 = encode_versioned(1, &Message::HelloAck { version: 2, min: 1, max: 2 }, 1);
+        let (_, got) = decode_versioned(&a2, 2).unwrap();
+        assert_eq!(got, Message::HelloAck { version: 2, min: 1, max: 2 });
     }
 
     #[test]
@@ -745,11 +954,12 @@ mod tests {
         // Unknown opcode.
         assert!(decode(&[0x55, 0, 0, 0, 0]).is_err());
         // Bad magic.
-        let mut bad = encode(1, &Message::Hello { version: VERSION });
+        let mut bad = encode(1, &Message::Hello { version: VERSION, auth: String::new() });
         bad[5] = b'X';
         assert!(decode(&bad).is_err());
         // Truncated body: chop every prefix of a real message.
-        let full = encode(7, &Message::Spmv { name: "mat".into(), x: vec![1.0, 2.0] });
+        let full =
+            encode(7, &Message::Spmv { name: "mat".into(), x: vec![1.0, 2.0], deadline_us: 9 });
         for cut in 0..full.len() {
             assert!(decode(&full[..cut]).is_err(), "prefix of {cut} bytes must not decode");
         }
@@ -762,6 +972,49 @@ mod tests {
         let body_at = lying.len() - 12; // u32 count before one f64
         lying[body_at..body_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode(&lying).is_err());
+    }
+
+    #[test]
+    fn random_byte_soup_never_panics_the_codec() {
+        // Deterministic fuzz: feed pseudo-random payloads and streams to
+        // the decoder and the frame reader at both protocol versions.
+        // The property under test is error-not-panic (and, for the frame
+        // reader, no unbounded allocation) — not any particular error.
+        let mut rng = crate::rng::Rng::new(0xC0DEC_5EED);
+        for _ in 0..4000 {
+            let len = rng.next_below(96) as usize;
+            let mut buf = vec![0u8; len];
+            for b in buf.iter_mut() {
+                *b = (rng.next_u64() & 0xFF) as u8;
+            }
+            let _ = decode_versioned(&buf, 1);
+            let _ = decode_versioned(&buf, 2);
+            let mut c = std::io::Cursor::new(&buf);
+            // Interpreting the soup as a frame stream must terminate
+            // with EOF or an error, never a panic.
+            while let Ok(Some(_)) = read_frame(&mut c) {}
+        }
+
+        // Bit-flip fuzz: every single-bit corruption of a valid frame
+        // must decode to the original, another message, or an error —
+        // never a panic.
+        let valid = encode(
+            5,
+            &Message::Register {
+                name: "fz".into(),
+                n_rows: 2,
+                n_cols: 2,
+                row_ptr: vec![0, 1, 2],
+                col_idx: vec![0, 1],
+                values: vec![1.0, 2.0],
+            },
+        );
+        for bit in 0..valid.len() * 8 {
+            let mut mutated = valid.clone();
+            mutated[bit / 8] ^= 1 << (bit % 8);
+            let _ = decode_versioned(&mutated, 1);
+            let _ = decode_versioned(&mutated, 2);
+        }
     }
 
     #[test]

@@ -4,51 +4,159 @@
 //! Each accepted connection gets one session thread running
 //! [`run_session`] over any `Read + Write` stream (TCP, Unix socket, or
 //! an in-memory pipe in tests). The state machine is strict about the
-//! handshake — the first frame must be a version-matching `Hello`,
-//! anything else closes the connection — and lenient after it: a frame
-//! that *decodes* badly gets an `Error` reply and the session keeps
-//! serving, because the length prefix already delimited the bad frame
-//! and stream framing is intact. Only transport-level damage (EOF inside
-//! a frame, an oversized length prefix) ends the session.
+//! handshake — the first frame must be a `Hello` whose version falls in
+//! the server's `[MIN_VERSION, VERSION]` window (and, when the server
+//! requires one, whose auth token matches), anything else closes the
+//! connection — and lenient after it: a frame that *decodes* badly gets
+//! an `Error` reply and the session keeps serving, because the length
+//! prefix already delimited the bad frame and stream framing is intact.
+//! Only transport-level damage (EOF inside a frame, an oversized length
+//! prefix) ends the session — after such damage the remaining bytes on
+//! the wire are unframed, so no reply could be delivered intelligibly
+//! and any attempt to resync would parse garbage; the connection is
+//! hard-closed without a reply.
+//!
+//! The session serves at the *client's* version: a v1 client gets v1
+//! frame layouts byte-for-byte (no deadline field, no `deadline_sheds`
+//! counter, no decision-log opcodes), a v2 client gets the full
+//! protocol. Matrix names are interned once per session into `Arc<str>`
+//! keys so the coalescer admission path never allocates per request.
 //!
 //! Single-vector `Spmv` requests go through the ingress coalescer; every
 //! other request calls the serving [`Client`] directly. A full ingress
-//! queue is answered with `Busy` — the reader thread never blocks on
-//! admission.
+//! queue — or a spent per-session request/byte quota — is answered with
+//! `Busy`; the reader thread never blocks on admission.
 
-use super::ingress::Ingress;
+use super::ingress::{Ingress, ServeOutcome};
 use super::proto::{self, Message, WireStatsRow};
+use crate::coordinator::decision_log::DecisionLog;
 use crate::coordinator::{Client, EntryStats};
 use crate::formats::Csr;
 use crate::Result;
+use std::collections::HashMap;
 use std::io::{Read, Write};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How many decision-log records a `DecisionLog` wire request returns at
+/// most (the tail of the log).
+pub const DECISION_LOG_WIRE_LIMIT: usize = 256;
+
+/// `SPMV_AT_NET_QUOTA_REQS` — requests one session may issue before
+/// every further request is refused with `Busy` (default 0 = unlimited).
+pub fn configured_quota_requests() -> u64 {
+    std::env::var("SPMV_AT_NET_QUOTA_REQS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// `SPMV_AT_NET_QUOTA_BYTES` — request-payload bytes one session may
+/// send before every further request is refused with `Busy` (default 0
+/// = unlimited).
+pub fn configured_quota_bytes() -> u64 {
+    std::env::var("SPMV_AT_NET_QUOTA_BYTES").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// `SPMV_AT_NET_AUTH` — when set and non-empty, the auth token every v2
+/// `Hello` must present; v1 clients (which cannot carry a token) are
+/// refused outright (default unset = open server).
+pub fn configured_auth_token() -> Option<String> {
+    std::env::var("SPMV_AT_NET_AUTH").ok().filter(|t| !t.is_empty())
+}
+
+/// Per-session serving policy, built from
+/// [`NetConfig`](super::NetConfig) by the accept loop and cloned into
+/// each session thread.
+#[derive(Clone, Default)]
+pub struct SessionPolicy {
+    /// Required auth token (None = open server).
+    pub auth_token: Option<String>,
+    /// Per-session request budget (0 = unlimited).
+    pub quota_requests: u64,
+    /// Per-session request-payload byte budget (0 = unlimited).
+    pub quota_bytes: u64,
+    /// Decision log served to `DecisionLog` wire requests (None = the
+    /// request answers with an empty tail).
+    pub decision_log: Option<DecisionLog>,
+}
+
+/// Mutable per-session state: the negotiated version, the key intern
+/// table, and the quota spend.
+struct SessionState {
+    version: u16,
+    interned: HashMap<String, Arc<str>>,
+    spent_requests: u64,
+    spent_bytes: u64,
+}
 
 /// Serve one connection until the peer disconnects or the transport
 /// fails. Returns `Ok` for clean closes (including a rejected
 /// handshake); `Err` only for transport-level failures.
-pub fn run_session<S: Read + Write>(mut stream: S, client: Client, ingress: Ingress) -> Result<()> {
-    // Handshake: the first frame must be a version-matching Hello.
+pub fn run_session<S: Read + Write>(
+    mut stream: S,
+    client: Client,
+    ingress: Ingress,
+    policy: SessionPolicy,
+) -> Result<()> {
+    // Handshake: the first frame must be a Hello inside the version
+    // window. Hello is self-describing (its body carries its own version
+    // field), so decoding at the current version handles every client.
     let payload = match proto::read_frame(&mut stream)? {
         Some(p) => p,
         None => return Ok(()),
     };
-    match proto::decode(&payload) {
-        Ok((id, Message::Hello { version })) if version == proto::VERSION => {
-            send(&mut stream, id, &Message::HelloAck { version: proto::VERSION })?;
-        }
-        Ok((id, Message::Hello { version })) => {
+    let version = match proto::decode(&payload) {
+        Ok((id, Message::Hello { version, auth })) => {
+            if !(proto::MIN_VERSION..=proto::VERSION).contains(&version) {
+                send(
+                    &mut stream,
+                    id,
+                    &Message::Error {
+                        code: proto::ERR_UNSUPPORTED_VERSION,
+                        message: format!(
+                            "client speaks protocol version {version}, this server serves {}..={}",
+                            proto::MIN_VERSION,
+                            proto::VERSION
+                        ),
+                    },
+                    // Error bodies are layout-identical in every version.
+                    proto::VERSION,
+                )?;
+                return Ok(());
+            }
+            if let Some(required) = &policy.auth_token {
+                if version < 2 || auth != *required {
+                    send(
+                        &mut stream,
+                        id,
+                        &Message::Error {
+                            code: proto::ERR_UNAUTHORIZED,
+                            message: if version < 2 {
+                                "this server requires an auth token; protocol v1 cannot carry one"
+                                    .into()
+                            } else {
+                                "auth token missing or not recognised".into()
+                            },
+                        },
+                        version,
+                    )?;
+                    return Ok(());
+                }
+            }
+            // Negotiation: serve at the client's version (the minimum of
+            // the two sides' maxima) and advertise the full window. The
+            // ack is self-describing, so a v1 client receives exactly
+            // the 2-byte v1 body.
             send(
                 &mut stream,
                 id,
-                &Message::Error {
-                    code: proto::ERR_UNSUPPORTED_VERSION,
-                    message: format!(
-                        "client speaks protocol version {version}, this server speaks {}",
-                        proto::VERSION
-                    ),
+                &Message::HelloAck {
+                    version,
+                    min: proto::MIN_VERSION,
+                    max: proto::VERSION,
                 },
+                version,
             )?;
-            return Ok(());
+            version
         }
         Ok((id, _)) => {
             send(
@@ -58,21 +166,47 @@ pub fn run_session<S: Read + Write>(mut stream: S, client: Client, ingress: Ingr
                     code: proto::ERR_MALFORMED,
                     message: "the first frame on a connection must be Hello".into(),
                 },
+                proto::VERSION,
             )?;
             return Ok(());
         }
         Err(e) => {
-            send(&mut stream, 0, &decode_error(&payload, &e))?;
+            send(&mut stream, 0, &decode_error(&payload, &e, proto::VERSION), proto::VERSION)?;
             return Ok(());
         }
-    }
+    };
 
-    // Request loop: decode errors reply and continue; transport errors end.
-    while let Some(payload) = proto::read_frame(&mut stream)? {
-        match proto::decode(&payload) {
+    let mut state = SessionState {
+        version,
+        interned: HashMap::new(),
+        spent_requests: 0,
+        spent_bytes: 0,
+    };
+
+    // Request loop: decode errors reply and continue; transport errors
+    // (including an oversized length prefix, which leaves unframed bytes
+    // on the wire) hard-close without a reply — see the module docs.
+    loop {
+        let payload = match proto::read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => break,
+            Err(e) => return Err(e),
+        };
+        // Quota spend is charged per frame, decodable or not, before any
+        // serving work: identity is the session, budgets are session-
+        // scoped, and a reconnect starts fresh.
+        state.spent_requests += 1;
+        state.spent_bytes += payload.len() as u64;
+        let over_quota = (policy.quota_requests > 0 && state.spent_requests > policy.quota_requests)
+            || (policy.quota_bytes > 0 && state.spent_bytes > policy.quota_bytes);
+        match proto::decode_versioned(&payload, state.version) {
             Ok((id, msg)) => {
-                let reply = handle(&client, &ingress, msg);
-                send(&mut stream, id, &reply)?;
+                let reply = if over_quota {
+                    Message::Busy
+                } else {
+                    handle(&client, &ingress, &policy, &mut state, msg)
+                };
+                send(&mut stream, id, &reply, state.version)?;
             }
             Err(e) => {
                 // Best-effort request-id echo so a pipelining client can
@@ -81,7 +215,12 @@ pub fn run_session<S: Read + Write>(mut stream: S, client: Client, ingress: Ingr
                     .get(1..5)
                     .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
                     .unwrap_or(0);
-                send(&mut stream, id, &decode_error(&payload, &e))?;
+                let reply = if over_quota {
+                    Message::Busy
+                } else {
+                    decode_error(&payload, &e, state.version)
+                };
+                send(&mut stream, id, &reply, state.version)?;
             }
         }
     }
@@ -89,17 +228,18 @@ pub fn run_session<S: Read + Write>(mut stream: S, client: Client, ingress: Ingr
 }
 
 /// Map a decode failure to the right error code: unknown opcode if the
-/// opcode byte itself is unrecognised, malformed otherwise.
-fn decode_error(payload: &[u8], e: &anyhow::Error) -> Message {
+/// opcode byte itself is unrecognised at this session's version,
+/// malformed otherwise.
+fn decode_error(payload: &[u8], e: &anyhow::Error, version: u16) -> Message {
     let code = match payload.first() {
-        Some(&op) if !proto::known_opcode(op) => proto::ERR_UNKNOWN_OPCODE,
+        Some(&op) if !proto::known_opcode(op, version) => proto::ERR_UNKNOWN_OPCODE,
         _ => proto::ERR_MALFORMED,
     };
     Message::Error { code, message: e.to_string() }
 }
 
-fn send<S: Write>(stream: &mut S, id: u32, msg: &Message) -> Result<()> {
-    proto::write_frame(stream, &proto::encode(id, msg))
+fn send<S: Write>(stream: &mut S, id: u32, msg: &Message, version: u16) -> Result<()> {
+    proto::write_frame(stream, &proto::encode_versioned(id, msg, version))
 }
 
 fn server_error(e: anyhow::Error) -> Message {
@@ -128,7 +268,13 @@ pub fn wire_row(s: &EntryStats) -> WireStatsRow {
 
 /// Serve one decoded request. Always produces a reply message — server-
 /// side failures become `Error` replies, never session terminations.
-fn handle(client: &Client, ingress: &Ingress, msg: Message) -> Message {
+fn handle(
+    client: &Client,
+    ingress: &Ingress,
+    policy: &SessionPolicy,
+    state: &mut SessionState,
+    msg: Message,
+) -> Message {
     match msg {
         Message::Register { name, n_rows, n_cols, row_ptr, col_idx, values } => {
             let built = Csr::new(
@@ -143,14 +289,37 @@ fn handle(client: &Client, ingress: &Ingress, msg: Message) -> Message {
                 Err(e) => server_error(e),
             }
         }
-        Message::Spmv { name, x } => match ingress.submit(&name, x) {
-            None => Message::Busy,
-            Some(rx) => match rx.recv() {
-                Ok(Ok(y)) => Message::Vector { y },
-                Ok(Err(e)) => server_error(e),
-                Err(_) => server_error(anyhow::anyhow!("server dropped response")),
-            },
-        },
+        Message::Spmv { name, x, deadline_us } => {
+            // Intern once per session; afterwards admission clones the
+            // Arc instead of allocating a String per request.
+            let key = match state.interned.get(&name) {
+                Some(k) => Arc::clone(k),
+                None => {
+                    let k: Arc<str> = Arc::from(name.as_str());
+                    ingress.counters().key_interns.fetch_add(1, Ordering::Relaxed);
+                    state.interned.insert(name, Arc::clone(&k));
+                    k
+                }
+            };
+            // The deadline is a relative budget from receipt; stamp it
+            // here so queueing and coalescing time count against it.
+            let deadline =
+                (deadline_us > 0).then(|| Instant::now() + Duration::from_micros(deadline_us));
+            match ingress.submit(&key, x, deadline) {
+                None => Message::Busy,
+                Some(rx) => match rx.recv() {
+                    Ok(ServeOutcome::Done(Ok(y))) => Message::Vector { y },
+                    Ok(ServeOutcome::Done(Err(e))) => server_error(e),
+                    Ok(ServeOutcome::Shed) => Message::Error {
+                        code: proto::ERR_DEADLINE_EXCEEDED,
+                        message: format!(
+                            "deadline of {deadline_us}µs expired before the batch drained"
+                        ),
+                    },
+                    Err(_) => server_error(anyhow::anyhow!("server dropped response")),
+                },
+            }
+        }
         Message::SpmvBatch { name, xs } => match client.spmv_batch(&name, xs) {
             Ok(ys) => Message::Vectors { ys },
             Err(e) => server_error(e),
@@ -168,6 +337,13 @@ fn handle(client: &Client, ingress: &Ingress, msg: Message) -> Message {
             Err(e) => server_error(e),
         },
         Message::NetStats => Message::NetStatsReply { stats: ingress.counters().snapshot() },
+        Message::DecisionLog => Message::DecisionLogReply {
+            lines: policy
+                .decision_log
+                .as_ref()
+                .map(|log| log.tail(DECISION_LOG_WIRE_LIMIT))
+                .unwrap_or_default(),
+        },
         Message::Hello { .. } => Message::Error {
             code: proto::ERR_MALFORMED,
             message: "handshake already complete".into(),
@@ -180,6 +356,7 @@ fn handle(client: &Client, ingress: &Ingress, msg: Message) -> Message {
         | Message::StatsRows { .. }
         | Message::Evicted { .. }
         | Message::NetStatsReply { .. }
+        | Message::DecisionLogReply { .. }
         | Message::Busy
         | Message::Error { .. } => Message::Error {
             code: proto::ERR_MALFORMED,

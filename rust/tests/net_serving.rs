@@ -1,10 +1,13 @@
 //! End-to-end tests for the network serving front end: coalescing is
 //! bitwise-invisible and observably cheaper, broken clients cannot take
-//! the server down, and a full ingress queue answers `Busy`.
+//! the server down, a full ingress queue (or a spent session quota)
+//! answers `Busy`, deadlines shed instead of serving stale work, v1
+//! clients are served byte-for-byte per the v1 spec, and the decision
+//! log fetched over the wire replays to the registry's final state.
 
 mod common;
 
-use spmv_at::coordinator::{CoordinatorConfig, Server};
+use spmv_at::coordinator::{decision_log, CoordinatorConfig, DecisionLog, Server};
 use spmv_at::net::proto::{self, Message};
 use spmv_at::net::{ListenAddr, NetClient, NetConfig, NetServer};
 use std::io::Write;
@@ -12,19 +15,37 @@ use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
-/// A TCP front end on an ephemeral port over a fresh sharded server. The
+/// An explicit front-end config — tests never read the environment.
+fn net_cfg(queue_depth: usize, coalesce_wait: Duration) -> NetConfig {
+    NetConfig {
+        queue_depth,
+        coalesce_wait,
+        auth_token: None,
+        quota_requests: 0,
+        quota_bytes: 0,
+        decision_log: None,
+    }
+}
+
+/// A TCP front end on an ephemeral port over a fresh sharded server,
+/// optionally wired to a decision log on the coordinator side. The
 /// adaptive loop is off so `matrix_passes` counts serving streams only
 /// (exploration would add shadow streams and blur the pass arithmetic).
-fn start(cfg: NetConfig) -> NetServer {
+fn start_with(cfg: NetConfig, log: Option<DecisionLog>) -> NetServer {
     let mut ccfg = CoordinatorConfig::new(common::tuning(
         spmv_at::spmv::Implementation::EllRowOuter,
         Some(3.1),
     ));
     ccfg.threads = 2;
     ccfg.adaptive.enabled = false;
+    ccfg.decision_log = log;
     let (server, client) = Server::spawn_sharded(ccfg, 64);
     NetServer::start(server, client, &ListenAddr::Tcp("127.0.0.1:0".into()), cfg)
         .expect("bind an ephemeral port")
+}
+
+fn start(cfg: NetConfig) -> NetServer {
+    start_with(cfg, None)
 }
 
 fn passes_of(c: &mut NetClient, name: &str) -> u64 {
@@ -44,7 +65,7 @@ fn concurrent_requests_coalesce_bitwise_identically_and_stream_less() {
     const K: usize = 8;
     // A generous coalescing window so all K barrier-released requests
     // land in one drain with near-certainty.
-    let net = start(NetConfig { queue_depth: 64, coalesce_wait: Duration::from_millis(200) });
+    let net = start(net_cfg(64, Duration::from_millis(200)));
     let addr = net.local_addr().clone();
 
     let a = common::band(96, 7);
@@ -97,7 +118,7 @@ fn concurrent_requests_coalesce_bitwise_identically_and_stream_less() {
 
 #[test]
 fn malformed_frames_and_abrupt_disconnects_leave_the_server_serving() {
-    let net = start(NetConfig { queue_depth: 16, coalesce_wait: Duration::ZERO });
+    let net = start(net_cfg(16, Duration::ZERO));
     let addr = net.local_addr().clone();
     let ListenAddr::Tcp(tcp) = addr.clone() else { unreachable!() };
 
@@ -106,10 +127,17 @@ fn malformed_frames_and_abrupt_disconnects_leave_the_server_serving() {
 
     // A raw connection that handshakes, then misbehaves.
     let mut raw = TcpStream::connect(&tcp).unwrap();
-    proto::write_frame(&mut raw, &proto::encode(1, &Message::Hello { version: proto::VERSION }))
-        .unwrap();
+    let hello = Message::Hello { version: proto::VERSION, auth: String::new() };
+    proto::write_frame(&mut raw, &proto::encode(1, &hello)).unwrap();
     let (_, ack) = proto::decode(&proto::read_frame(&mut raw).unwrap().unwrap()).unwrap();
-    assert_eq!(ack, Message::HelloAck { version: proto::VERSION });
+    assert_eq!(
+        ack,
+        Message::HelloAck {
+            version: proto::VERSION,
+            min: proto::MIN_VERSION,
+            max: proto::VERSION
+        }
+    );
 
     // Unknown opcode: Error reply with the right code, session survives.
     proto::write_frame(&mut raw, &[0x55, 9, 0, 0, 0]).unwrap();
@@ -129,8 +157,7 @@ fn malformed_frames_and_abrupt_disconnects_leave_the_server_serving() {
 
     // Abrupt mid-frame disconnect: write half a frame and vanish.
     let mut half = TcpStream::connect(&tcp).unwrap();
-    proto::write_frame(&mut half, &proto::encode(1, &Message::Hello { version: proto::VERSION }))
-        .unwrap();
+    proto::write_frame(&mut half, &proto::encode(1, &hello)).unwrap();
     let _ = proto::read_frame(&mut half).unwrap().unwrap();
     half.write_all(&[200, 0, 0, 0, 1, 2, 3]).unwrap(); // promises 200 bytes, sends 3
     drop(half);
@@ -150,11 +177,45 @@ fn malformed_frames_and_abrupt_disconnects_leave_the_server_serving() {
 }
 
 #[test]
+fn oversized_length_prefix_hard_closes_only_that_session() {
+    let net = start(net_cfg(16, Duration::ZERO));
+    let addr = net.local_addr().clone();
+    let ListenAddr::Tcp(tcp) = addr.clone() else { unreachable!() };
+
+    let mut c = NetClient::connect(&addr).unwrap();
+    c.register("id", &spmv_at::formats::Csr::identity(4)).unwrap();
+
+    // A handshaken session that promises a 100 MiB frame — past
+    // MAX_FRAME. Unlike a merely malformed body (delimited by its length
+    // prefix, answered with an Error), an oversized prefix leaves the
+    // stream unframed: any reply would interleave with unread request
+    // bytes. The server must hard-close without replying.
+    let mut big = TcpStream::connect(&tcp).unwrap();
+    let hello = Message::Hello { version: proto::VERSION, auth: String::new() };
+    proto::write_frame(&mut big, &proto::encode(1, &hello)).unwrap();
+    let _ = proto::read_frame(&mut big).unwrap().unwrap();
+    big.write_all(&(100u32 * 1024 * 1024).to_le_bytes()).unwrap();
+    assert!(
+        proto::read_frame(&mut big).unwrap().is_none(),
+        "hard close with no reply: the stream after an oversized prefix is unframed"
+    );
+
+    // Other sessions are untouched: the established client still serves,
+    // and so does a fresh one.
+    let x = vec![1.0, 2.0, 3.0, 4.0];
+    assert_eq!(c.spmv("id", x.clone()).unwrap(), x);
+    let mut c2 = NetClient::connect(&addr).unwrap();
+    assert_eq!(c2.spmv("id", x.clone()).unwrap(), x);
+
+    net.shutdown();
+}
+
+#[test]
 fn full_ingress_queue_answers_busy_and_recovers() {
     // Depth-1 queue and a long drain wait: the first request is consumed
     // by the sleeping coalescer, the second fills the queue slot, the
     // third must be refused.
-    let net = start(NetConfig { queue_depth: 1, coalesce_wait: Duration::from_millis(500) });
+    let net = start(net_cfg(1, Duration::from_millis(500)));
     let addr = net.local_addr().clone();
 
     let mut c = NetClient::connect(&addr).unwrap();
@@ -184,4 +245,232 @@ fn full_ingress_queue_answers_busy_and_recovers() {
     assert_eq!(c.spmv("id", x.clone()).unwrap(), x);
 
     net.shutdown();
+}
+
+#[test]
+fn expired_deadlines_are_shed_without_executing_the_batch() {
+    // A 60 ms coalesce window: a 1 µs deadline is long expired by the
+    // time the coalescer drains, deterministically.
+    let net = start(net_cfg(16, Duration::from_millis(60)));
+    let addr = net.local_addr().clone();
+    let mut c = NetClient::connect_with(&addr, proto::VERSION, None).unwrap();
+    c.register("id", &spmv_at::formats::Csr::identity(3)).unwrap();
+    let x = vec![1.0, 2.0, 3.0];
+
+    let before = passes_of(&mut c, "id");
+    let err = c.spmv_deadline("id", x.clone(), 1).expect_err("expired deadline must shed");
+    assert!(err.to_string().contains("deadline exceeded"), "{err}");
+    let ns = c.net_stats().unwrap();
+    assert_eq!(ns.deadline_sheds, 1, "the shed was counted: {ns:?}");
+    assert_eq!(ns.requests, 0, "the shed request was never served: {ns:?}");
+    assert_eq!(ns.batches, 0, "the coalescer executed no batch for it: {ns:?}");
+    assert_eq!(passes_of(&mut c, "id"), before, "the matrix was never streamed");
+
+    // The same session still serves live requests, and an ample deadline
+    // passes the drain-time check.
+    assert_eq!(c.spmv("id", x.clone()).unwrap(), x);
+    assert_eq!(c.spmv_deadline("id", x.clone(), 60_000_000).unwrap(), x);
+    let ns = c.net_stats().unwrap();
+    assert_eq!((ns.requests, ns.deadline_sheds), (2, 1), "{ns:?}");
+
+    net.shutdown();
+}
+
+#[test]
+fn session_quotas_answer_busy_and_reset_on_reconnect() {
+    // Request quota: three requests per session, then Busy for everything.
+    let net = start(NetConfig { quota_requests: 3, ..net_cfg(16, Duration::ZERO) });
+    let addr = net.local_addr().clone();
+    let x = vec![1.0, 2.0, 3.0];
+
+    let mut c = NetClient::connect(&addr).unwrap();
+    c.register("id", &spmv_at::formats::Csr::identity(3)).unwrap(); // 1
+    assert_eq!(c.spmv("id", x.clone()).unwrap(), x); // 2
+    assert_eq!(c.spmv("id", x.clone()).unwrap(), x); // 3
+    let err = c.spmv("id", x.clone()).expect_err("budget spent");
+    assert!(err.to_string().contains("busy"), "{err}");
+    // Once spent, every request on the session is refused — not just SpMV.
+    assert!(c.stats().is_err(), "a spent session refuses everything");
+
+    // The budget is session identity: a reconnect starts fresh.
+    let mut c2 = NetClient::connect(&addr).unwrap();
+    assert_eq!(c2.spmv("id", x.clone()).unwrap(), x);
+    net.shutdown();
+
+    // Byte quota: some serving prefix fits in the budget, then Busy.
+    let net = start(NetConfig { quota_bytes: 100, ..net_cfg(16, Duration::ZERO) });
+    let addr = net.local_addr().clone();
+    let mut reg = NetClient::connect(&addr).unwrap();
+    reg.register("id", &spmv_at::formats::Csr::identity(3)).unwrap();
+    let mut q = NetClient::connect(&addr).unwrap();
+    let mut served = 0;
+    let err = loop {
+        match q.spmv("id", x.clone()) {
+            Ok(y) => {
+                assert_eq!(y, x);
+                served += 1;
+                assert!(served < 10, "the byte budget never bit");
+            }
+            Err(e) => break e,
+        }
+    };
+    assert!(err.to_string().contains("busy"), "{err}");
+    assert!(served >= 1, "at least one request fit the byte budget");
+    // The register session spent its own budget separately; a fresh
+    // session serves again.
+    let mut q2 = NetClient::connect(&addr).unwrap();
+    assert_eq!(q2.spmv("id", x.clone()).unwrap(), x);
+    net.shutdown();
+}
+
+#[test]
+fn auth_tokens_gate_sessions_and_refuse_v1() {
+    let net =
+        start(NetConfig { auth_token: Some("sesame".into()), ..net_cfg(16, Duration::ZERO) });
+    let addr = net.local_addr().clone();
+
+    // The right token serves normally.
+    let mut ok = NetClient::connect_with(&addr, proto::VERSION, Some("sesame".into())).unwrap();
+    ok.register("id", &spmv_at::formats::Csr::identity(2)).unwrap();
+    assert_eq!(ok.spmv("id", vec![5.0, 6.0]).unwrap(), vec![5.0, 6.0]);
+
+    // Wrong or missing tokens are refused with the unauthorized code.
+    let err = NetClient::connect_with(&addr, proto::VERSION, Some("open".into()))
+        .expect_err("wrong token refused")
+        .to_string();
+    assert!(err.contains(&format!("error {}", proto::ERR_UNAUTHORIZED)), "{err}");
+    assert!(NetClient::connect_with(&addr, proto::VERSION, None).is_err());
+
+    // A v1 Hello cannot carry a token, so a token-requiring server
+    // refuses v1 clients outright.
+    let err = NetClient::connect_with(&addr, 1, Some("sesame".into()))
+        .expect_err("v1 refused on an auth-requiring server")
+        .to_string();
+    assert!(err.contains("v1"), "{err}");
+
+    // The refusals did not poison the listener.
+    assert_eq!(ok.spmv("id", vec![1.0, 2.0]).unwrap(), vec![1.0, 2.0]);
+    net.shutdown();
+}
+
+/// The v1-compat acceptance scenario, with every byte written and
+/// checked by hand against the v1 spec: handshake, Spmv, NetStats, quit.
+#[test]
+fn a_v1_client_is_served_byte_for_byte_per_the_v1_spec() {
+    let net = start(net_cfg(16, Duration::ZERO));
+    let addr = net.local_addr().clone();
+    let ListenAddr::Tcp(tcp) = addr.clone() else { unreachable!() };
+
+    // Register through a v2 session; the v1 client serves against it.
+    let mut reg = NetClient::connect_with(&addr, proto::VERSION, None).unwrap();
+    reg.register("id", &spmv_at::formats::Csr::identity(3)).unwrap();
+
+    let mut raw = TcpStream::connect(&tcp).unwrap();
+    // v1 Hello: opcode, id 1, magic "SPAT", version 1 — no auth field.
+    let mut hello = vec![proto::OP_HELLO, 1, 0, 0, 0];
+    hello.extend_from_slice(&proto::MAGIC);
+    hello.extend_from_slice(&[1, 0]);
+    proto::write_frame(&mut raw, &hello).unwrap();
+    // v1 HelloAck: exactly opcode + id + u16 version, no window bytes.
+    let ack = proto::read_frame(&mut raw).unwrap().unwrap();
+    assert_eq!(ack, [proto::OP_HELLO_ACK, 1, 0, 0, 0, 1, 0]);
+
+    // v1 Spmv "id", x = [1, 2, 3]: no deadline bytes in the body.
+    let mut spmv = vec![proto::OP_SPMV, 2, 0, 0, 0, 2, 0, b'i', b'd', 3, 0, 0, 0];
+    for v in [1.0f64, 2.0, 3.0] {
+        spmv.extend_from_slice(&v.to_le_bytes());
+    }
+    proto::write_frame(&mut raw, &spmv).unwrap();
+    // v1 Vector reply: opcode, echoed id, count, three f64 — nothing else.
+    let reply = proto::read_frame(&mut raw).unwrap().unwrap();
+    let mut want = vec![proto::OP_VECTOR, 2, 0, 0, 0, 3, 0, 0, 0];
+    for v in [1.0f64, 2.0, 3.0] {
+        want.extend_from_slice(&v.to_le_bytes());
+    }
+    assert_eq!(reply, want, "the identity serve echoes x, in the v1 layout");
+
+    // v1 NetStats reply: exactly the eight v1 counters (69 payload
+    // bytes) — no deadline_sheds on the v1 wire.
+    proto::write_frame(&mut raw, &[proto::OP_NET_STATS, 3, 0, 0, 0]).unwrap();
+    let reply = proto::read_frame(&mut raw).unwrap().unwrap();
+    assert_eq!(reply.len(), 5 + 8 * 8, "v1 NetStatsReply payload size");
+    assert_eq!(reply[..5], [proto::OP_NET_STATS_REPLY, 3, 0, 0, 0]);
+
+    // Quit is a clean close; the server keeps serving other sessions.
+    drop(raw);
+    let x = vec![1.0, 2.0, 3.0];
+    assert_eq!(reg.spmv("id", x.clone()).unwrap(), x);
+    net.shutdown();
+}
+
+#[test]
+fn the_whole_client_api_works_over_an_explicit_v1_session() {
+    let net = start(net_cfg(16, Duration::ZERO));
+    let addr = net.local_addr().clone();
+    let mut c = NetClient::connect_with(&addr, 1, None).unwrap();
+    assert_eq!(c.version(), 1);
+
+    let a = common::band(32, 11);
+    let row = c.register("m", &a).unwrap();
+    assert_eq!(row.n, 32);
+    let xs = common::xs_batch(32, 3);
+    for x in &xs {
+        assert_eq!(c.spmv("m", x.clone()).unwrap(), common::reference(&a, x));
+    }
+    assert_eq!(c.spmv_batch("m", xs.clone()).unwrap().len(), 3);
+    assert_eq!(c.stats().unwrap().len(), 1);
+    let ns = c.net_stats().unwrap();
+    assert_eq!(ns.deadline_sheds, 0, "always 0 as decoded from the v1 wire");
+    c.replan("m").unwrap();
+    assert!(c.evict("m").unwrap());
+    net.shutdown();
+}
+
+/// The decision-log acceptance scenario: register, serve, and replan
+/// over the wire; fetch the log over the wire; replaying it must
+/// reproduce the final serving decision (kernel + partition + split
+/// state) of every matrix in the registry.
+#[test]
+fn the_decision_log_replays_to_the_final_serving_decision_for_every_matrix() {
+    let log = DecisionLog::in_memory();
+    let net = start_with(
+        NetConfig { decision_log: Some(log.clone()), ..net_cfg(32, Duration::ZERO) },
+        Some(log),
+    );
+    let addr = net.local_addr().clone();
+    let mut c = NetClient::connect_with(&addr, proto::VERSION, None).unwrap();
+
+    // A transformable band, a degenerate identity, and a forced replan.
+    let band = common::band(96, 7);
+    c.register("band", &band).unwrap();
+    c.register("id", &spmv_at::formats::Csr::identity(16)).unwrap();
+    for x in common::xs_batch(96, 3) {
+        assert_eq!(c.spmv("band", x.clone()).unwrap(), common::reference(&band, &x));
+    }
+    c.spmv("id", vec![1.0; 16]).unwrap();
+    c.replan("id").unwrap();
+
+    // The log travels the wire...
+    let lines = c.decision_log().unwrap();
+    assert!(lines.iter().any(|l| l.contains("\"event\":\"register\"")), "{lines:?}");
+    assert!(lines.iter().any(|l| l.contains("\"event\":\"transform\"")), "{lines:?}");
+    assert!(lines.iter().any(|l| l.contains("\"event\":\"replan\"")), "{lines:?}");
+
+    // ...and replays, by the last-record-per-matrix fold, to exactly the
+    // serving state the registry ended in.
+    let replayed = decision_log::replay(lines.iter().map(String::as_str));
+    drop(c);
+    let coords = net.shutdown();
+    let mut rows = 0;
+    for coord in &coords {
+        for s in coord.stats() {
+            let r = replayed.get(&s.name).expect("every matrix has a final decision");
+            assert_eq!(r.kernel, s.serving.name(), "{}: replayed kernel", s.name);
+            assert_eq!(r.partition, s.partition, "{}: replayed partition", s.name);
+            assert_eq!(r.split_parts as usize, s.split_parts, "{}: replayed split state", s.name);
+            assert!(!r.split_vetoed, "{}: no split veto happened", s.name);
+            rows += 1;
+        }
+    }
+    assert_eq!(rows, 2, "both matrices ended in the registry");
 }
